@@ -1,0 +1,68 @@
+//! The end-to-end driver (DESIGN.md §5, "§III headline"): run the complete
+//! MARVEL flow on the real trained LeNet-5* artifact — the workload the
+//! paper's bare-metal deployment story is built around — and on every other
+//! exported model.
+//!
+//! For each model this:
+//!   1. loads the AOT-exported spec + weights (`artifacts/models/`),
+//!   2. compiles it for all five processor variants (v0..v4),
+//!   3. runs the golden inputs on the cycle-accurate simulator,
+//!   4. verifies outputs against the exporter's reference logits and —
+//!      with `--pjrt` — against the AOT HLO artifact executed via the PJRT
+//!      CPU client (all three layers of the stack composing),
+//!   5. reports cycles / speedup / energy (eq. 1) / memory.
+//!
+//! Run: `make artifacts && cargo run --release --example marvel_flow [-- --pjrt]`
+
+use std::path::Path;
+
+use marvel::coordinator::{run_flow, FlowOptions};
+use marvel::util::tables::{fmt_si, Table};
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = Path::new("artifacts");
+    let use_pjrt = std::env::args().any(|a| a == "--pjrt");
+    let models =
+        marvel::coordinator::experiments::available_models(artifacts);
+    anyhow::ensure!(
+        !models.is_empty(),
+        "no artifacts found — run `make artifacts` first"
+    );
+
+    let opts = FlowOptions { n_inputs: 2, use_pjrt, ..FlowOptions::default() };
+    let mut headline = Table::new(&[
+        "model", "v0 cycles", "v4 cycles", "speedup", "v0 mJ", "v4 mJ",
+        "energy x", "verified",
+    ])
+    .with_title("MARVEL end-to-end flow — headline results (cf. paper abstract)");
+
+    for name in &models {
+        let f = run_flow(artifacts, name, &opts)?;
+        let v0 = f.metrics.first().unwrap();
+        let v4 = f.metrics.last().unwrap();
+        headline.row(vec![
+            f.model.clone(),
+            fmt_si(v0.cycles),
+            fmt_si(v4.cycles),
+            format!("{:.2}x", v4.speedup),
+            format!("{:.3}", v0.energy.energy_mj),
+            format!("{:.3}", v4.energy.energy_mj),
+            format!(
+                "{:.2}x",
+                v0.energy.energy_mj / v4.energy.energy_mj.max(1e-12)
+            ),
+            match (f.verified_golden, f.verified_pjrt) {
+                (true, Some(true)) => "golden+pjrt".into(),
+                (true, None) => "golden".into(),
+                _ => "FAILED".into(),
+            },
+        ]);
+        anyhow::ensure!(f.verified_golden, "{name}: golden verification failed");
+        if let Some(false) = f.verified_pjrt {
+            anyhow::bail!("{name}: PJRT verification failed");
+        }
+    }
+    println!("{}", headline.render());
+    println!("(area overhead of v4: see `marvel hw` / Table 8 — 38.17% LUTs, 2.28% power)");
+    Ok(())
+}

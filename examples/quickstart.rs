@@ -1,0 +1,50 @@
+//! Quickstart: the MARVEL public API in ~40 lines.
+//!
+//! Builds a small in-process CNN spec (no artifacts needed), compiles it for
+//! the baseline v0 and the fully-extended v4 core, runs both on the
+//! cycle-accurate simulator, and checks them against the native reference
+//! executor.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use marvel::compiler::{compile, execute_compiled};
+use marvel::hw::energy_mj;
+use marvel::models::synth::{lenet_shaped, Builder};
+use marvel::refexec;
+use marvel::sim::{NopHook, V0, V4};
+use marvel::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A model spec — normally loaded from the AOT artifacts
+    //    (`marvel::models::load`); here a LeNet-5*-shaped synthetic one.
+    let spec = lenet_shaped(42);
+    let mut rng = Rng::new(7);
+    let input = Builder::random_input(&spec, &mut rng);
+
+    // 2. The ground truth from the native reference executor.
+    let want = refexec::run(&spec, &input)?;
+
+    // 3. Compile + simulate on baseline and extended cores.
+    for variant in [V0, V4] {
+        let compiled = compile(&spec, variant)?;
+        let (logits, stats) =
+            execute_compiled(&compiled, &spec, &input, 1 << 32, &mut NopHook)?;
+        assert_eq!(logits, want, "ISS output must match the reference");
+        let e = energy_mj(&variant, stats.cycles);
+        println!(
+            "{}: {:>9} instrs {:>9} cycles  {:>7.3} ms  {:>7.3} mJ  \
+             (fused: {} mac, {} add2i, {} fusedmac; {} zol loops)",
+            variant.name,
+            stats.instrs,
+            stats.cycles,
+            e.time_ms,
+            e.energy_mj,
+            compiled.rewrite_stats.mac,
+            compiled.rewrite_stats.add2i,
+            compiled.rewrite_stats.fusedmac,
+            compiled.flatten_stats.zol_loops,
+        );
+    }
+    println!("quickstart OK — logits {want:?}");
+    Ok(())
+}

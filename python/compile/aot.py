@@ -1,0 +1,121 @@
+"""AOT driver: build + train + quantize + export + lower everything.
+
+This is the compile path of the three-layer architecture.  ``make
+artifacts`` runs it exactly once; after that the rust binary is
+self-contained.  Outputs under --out-dir (default ../artifacts):
+
+    models/<name>.json,.bin   specs + weights (rust compiler input)
+    data/<name>_{x,y}.bin     golden inputs + ref-model logits
+    hlo/<name>.hlo.txt        L2 pallas model lowered to HLO *text*
+    train/lenet_train_log.json  LeNet-5* training loss curve
+    manifest.json             index of everything above
+
+HLO text — not ``.serialize()`` — is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids that xla_extension 0.5.1
+(the version the rust `xla` crate binds) rejects; the text parser reassigns
+ids (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import datagen, export, model, quantize, specs, train
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # print_large_constants: the baked weights MUST survive the text
+    # round-trip (the default elides them as "{...}" and the rust-side
+    # parser silently zero-fills).
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_model(spec: dict, weights: dict) -> str:
+    """Lower the pallas-backed model fn to HLO text."""
+    import jax.numpy as jnp
+    fn = model.build_model_fn(spec, weights, backend="pallas")
+    x_spec = jax.ShapeDtypeStruct(tuple(spec["input_shape"]), jnp.int32)
+    return to_hlo_text(jax.jit(fn).lower(x_spec))
+
+
+def build_all(out_dir: str, profile: str, names: list[str],
+              train_steps: int, calib_n: int, golden_n: int,
+              skip_hlo: bool) -> dict:
+    manifest = {"profile": profile, "models": {}}
+    os.makedirs(os.path.join(out_dir, "hlo"), exist_ok=True)
+    os.makedirs(os.path.join(out_dir, "train"), exist_ok=True)
+
+    for name in names:
+        t0 = time.time()
+        if name == "lenet5":
+            params, log = train.train_lenet(steps=train_steps)
+            train.save_log(log, os.path.join(out_dir, "train",
+                                             "lenet_train_log.json"))
+            trained = train.quantize_trained(params)
+            spec, weights = specs.build(name, profile=profile,
+                                        trained=trained)
+        else:
+            spec, weights = specs.build(name, profile=profile)
+
+        xs_cal, _ = datagen.dataset_for(spec, calib_n, seed=100)
+        quantize.calibrate(spec, weights, xs_cal)
+
+        doc = export.export_model(spec, weights, out_dir)
+        xs, labels = datagen.dataset_for(spec, golden_n, seed=200)
+        ys = export.export_golden_io(spec, weights, xs, out_dir)
+
+        entry = {
+            "json": f"models/{name}.json",
+            "weights": f"models/{name}.bin",
+            "golden_x": f"data/{name}_x.bin",
+            "golden_y": f"data/{name}_y.bin",
+            "layers": len(spec["layers"]),
+            "params": int(sum(np.asarray(w).size for w in weights.values())),
+        }
+        if name == "lenet5":
+            # int-model accuracy on held-out digits (EXPERIMENTS.md)
+            xs_te, ys_te = datagen.digits(256, seed=43)
+            logits = model.run_batch_np(spec, weights, xs_te, backend="ref")
+            acc = float((logits.argmax(1) == ys_te).mean())
+            entry["int8_test_acc"] = acc
+        if not skip_hlo:
+            hlo = lower_model(spec, weights)
+            hp = os.path.join(out_dir, "hlo", f"{name}.hlo.txt")
+            with open(hp, "w") as f:
+                f.write(hlo)
+            entry["hlo"] = f"hlo/{name}.hlo.txt"
+            entry["hlo_bytes"] = len(hlo)
+        entry["build_seconds"] = round(time.time() - t0, 2)
+        manifest["models"][name] = entry
+        print(f"[aot] {name}: {entry}")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--profile", choices=["quick", "full"], default="quick")
+    ap.add_argument("--models", nargs="*", default=specs.MODEL_NAMES)
+    ap.add_argument("--train-steps", type=int, default=300)
+    ap.add_argument("--calib-n", type=int, default=4)
+    ap.add_argument("--golden-n", type=int, default=4)
+    ap.add_argument("--skip-hlo", action="store_true",
+                    help="skip HLO lowering (spec/golden export only)")
+    args = ap.parse_args()
+    build_all(args.out_dir, args.profile, args.models, args.train_steps,
+              args.calib_n, args.golden_n, args.skip_hlo)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,120 @@
+"""Synthetic datasets (substitutes for the paper's data — DESIGN.md §2).
+
+The paper fine-tunes on StanfordCars/COCO ("Car" vs "Not Car", 64×64×3) and
+uses MNIST-style digits for LeNet-5*.  Neither dataset is available offline,
+and cycle counts do not depend on pixel values — so we generate procedural
+lookalikes that exercise the identical code paths:
+
+* ``digits`` — 28×28 grayscale renderings of ten 7-segment-style glyphs with
+  random jitter, thickness and noise (a learnable 10-class problem: train.py
+  reaches high accuracy on it, giving the end-to-end flow a real trained
+  model).
+* ``cars`` — H×W×3 procedural scenes: class 1 ("car") draws a body rectangle,
+  cabin and two dark wheels on a gradient background; class 0 ("not car")
+  draws random blobs.
+
+All images are emitted as int8-range int32 CHW arrays (value-128 centering).
+"""
+
+import numpy as np
+
+# 7-segment encodings for digits 0-9: segments (a,b,c,d,e,f,g)
+_SEGS = {
+    0: "abcdef", 1: "bc", 2: "abged", 3: "abgcd", 4: "fgbc",
+    5: "afgcd", 6: "afgedc", 7: "abc", 8: "abcdefg", 9: "abfgcd",
+}
+
+
+def _draw_segment(img: np.ndarray, seg: str, x0: int, y0: int, w: int,
+                  h: int, t: int):
+    """Rasterize one 7-seg segment into img (modifies in place)."""
+    if seg == "a":
+        img[y0:y0 + t, x0:x0 + w] = 1.0
+    elif seg == "b":
+        img[y0:y0 + h // 2 + t // 2, x0 + w - t:x0 + w] = 1.0
+    elif seg == "c":
+        img[y0 + h // 2 - t // 2:y0 + h, x0 + w - t:x0 + w] = 1.0
+    elif seg == "d":
+        img[y0 + h - t:y0 + h, x0:x0 + w] = 1.0
+    elif seg == "e":
+        img[y0 + h // 2 - t // 2:y0 + h, x0:x0 + t] = 1.0
+    elif seg == "f":
+        img[y0:y0 + h // 2 + t // 2, x0:x0 + t] = 1.0
+    elif seg == "g":
+        mid = y0 + h // 2
+        img[mid - t // 2:mid - t // 2 + t, x0:x0 + w] = 1.0
+
+
+def digits(n: int, seed: int = 0) -> tuple[np.ndarray, np.ndarray]:
+    """n samples of (1, 28, 28) int32 digit images + labels (n,) int32."""
+    rng = np.random.default_rng(seed)
+    xs = np.zeros((n, 1, 28, 28), dtype=np.int32)
+    ys = rng.integers(0, 10, size=n).astype(np.int32)
+    for i in range(n):
+        img = np.zeros((28, 28), dtype=np.float64)
+        w = int(rng.integers(10, 15))
+        h = int(rng.integers(16, 22))
+        x0 = int(rng.integers(2, 28 - w - 1))
+        y0 = int(rng.integers(2, 28 - h - 1))
+        t = int(rng.integers(2, 4))
+        for seg in _SEGS[int(ys[i])]:
+            _draw_segment(img, seg, x0, y0, w, h, t)
+        img = img * rng.uniform(0.7, 1.0)
+        img += rng.normal(0, 0.06, size=img.shape)
+        img = np.clip(img, 0.0, 1.0)
+        xs[i, 0] = (img * 255.0 - 128.0).round().astype(np.int32)
+    return xs, ys
+
+
+def _disk(img: np.ndarray, cy: float, cx: float, r: float, val):
+    h, w = img.shape[:2]
+    yy, xx = np.mgrid[0:h, 0:w]
+    mask = (yy - cy) ** 2 + (xx - cx) ** 2 <= r * r
+    img[mask] = val
+
+
+def cars(n: int, hw: int = 64, seed: int = 1) -> tuple[np.ndarray, np.ndarray]:
+    """n samples of (3, hw, hw) int32 car/not-car images + labels (n,)."""
+    rng = np.random.default_rng(seed)
+    xs = np.zeros((n, 3, hw, hw), dtype=np.int32)
+    ys = rng.integers(0, 2, size=n).astype(np.int32)
+    for i in range(n):
+        img = np.zeros((hw, hw, 3), dtype=np.float64)
+        # gradient sky/road background
+        grad = np.linspace(0.65, 0.25, hw)[:, None]
+        img[..., 0] = grad * rng.uniform(0.8, 1.0)
+        img[..., 1] = grad * rng.uniform(0.8, 1.0)
+        img[..., 2] = grad * rng.uniform(0.9, 1.1)
+        if ys[i] == 1:
+            # car: body + cabin + two wheels
+            bw = int(rng.integers(hw // 2, hw - 8))
+            bh = int(rng.integers(hw // 6, hw // 3))
+            x0 = int(rng.integers(2, hw - bw - 2))
+            y0 = int(rng.integers(hw // 2, hw - bh - hw // 8))
+            color = rng.uniform(0.3, 1.0, size=3)
+            img[y0:y0 + bh, x0:x0 + bw] = color
+            cw = int(bw * 0.5)
+            ch = int(bh * 0.8)
+            img[y0 - ch:y0, x0 + bw // 4:x0 + bw // 4 + cw] = color * 0.9
+            r = max(2.0, bh * 0.45)
+            _disk(img, y0 + bh, x0 + bw * 0.22, r, 0.05)
+            _disk(img, y0 + bh, x0 + bw * 0.78, r, 0.05)
+        else:
+            # not-car: random blobs
+            for _ in range(int(rng.integers(2, 6))):
+                _disk(img, rng.uniform(0, hw), rng.uniform(0, hw),
+                      rng.uniform(3, hw / 4), rng.uniform(0, 1, size=3))
+        img += rng.normal(0, 0.02, size=img.shape)
+        img = np.clip(img, 0.0, 1.0)
+        xs[i] = np.transpose((img * 255.0 - 128.0).round(), (2, 0, 1))
+    return xs.astype(np.int32), ys
+
+
+def dataset_for(spec: dict, n: int, seed: int = 3):
+    """Calibration/eval inputs matching a spec's input shape."""
+    c, h, w = spec["input_shape"]
+    if c == 1:
+        xs, ys = digits(n, seed=seed)
+        assert xs.shape[2:] == (h, w)
+        return xs, ys
+    return cars(n, hw=h, seed=seed)

@@ -1,0 +1,70 @@
+"""Artifact exporter: spec JSON + weight blob + golden I/O binaries.
+
+Formats consumed by the rust side (rust/src/compiler/spec.rs,
+rust/src/coordinator):
+
+``models/<name>.json``  — the spec dict with a ``tensors`` table:
+    tensors: [{name, dtype: "i8"|"i32", shape, offset, size}], offsets into
+    ``models/<name>.bin``.  i8 tensors are stored one byte per element
+    (two's complement), i32 little-endian 4 bytes.
+``data/<name>_x.bin`` / ``data/<name>_y.bin`` — N golden inputs (int8 bytes,
+    CHW row-major) and the ref-model logits (int32 LE), with a small JSON
+    sidecar ``data/<name>_io.json`` describing counts/shapes.
+"""
+
+import json
+import os
+
+import numpy as np
+
+from . import model as model_mod
+
+
+def export_model(spec: dict, weights: dict, out_dir: str) -> dict:
+    """Write models/<name>.{json,bin}. Returns the JSON dict."""
+    os.makedirs(os.path.join(out_dir, "models"), exist_ok=True)
+    name = spec["name"]
+    dtypes = spec.get("tensor_dtypes", {})
+    tensors = []
+    blob = bytearray()
+    for tname in sorted(weights.keys(), key=lambda s: int(s[1:])):
+        arr = np.asarray(weights[tname], dtype=np.int32)
+        dtype = dtypes.get(tname, "i8")
+        offset = len(blob)
+        if dtype == "i8":
+            assert arr.min() >= -128 and arr.max() <= 127, \
+                f"{name}/{tname}: values out of int8 range"
+            blob += arr.astype(np.int8).tobytes()
+        else:
+            blob += arr.astype("<i4").tobytes()
+        tensors.append({
+            "name": tname, "dtype": dtype, "shape": list(arr.shape),
+            "offset": offset, "size": int(arr.size),
+        })
+    doc = {k: v for k, v in spec.items() if k != "tensor_dtypes"}
+    doc["tensors"] = tensors
+    doc["weights_file"] = f"{name}.bin"
+    with open(os.path.join(out_dir, "models", f"{name}.json"), "w") as f:
+        json.dump(doc, f, indent=1)
+    with open(os.path.join(out_dir, "models", f"{name}.bin"), "wb") as f:
+        f.write(bytes(blob))
+    return doc
+
+
+def export_golden_io(spec: dict, weights: dict, xs: np.ndarray,
+                     out_dir: str) -> np.ndarray:
+    """Run the ref model on xs, write golden inputs/outputs. Returns logits."""
+    os.makedirs(os.path.join(out_dir, "data"), exist_ok=True)
+    name = spec["name"]
+    ys = model_mod.run_batch_np(spec, weights, xs, backend="ref")
+    with open(os.path.join(out_dir, "data", f"{name}_x.bin"), "wb") as f:
+        f.write(xs.astype(np.int8).tobytes())
+    with open(os.path.join(out_dir, "data", f"{name}_y.bin"), "wb") as f:
+        f.write(ys.astype("<i4").tobytes())
+    with open(os.path.join(out_dir, "data", f"{name}_io.json"), "w") as f:
+        json.dump({
+            "n": int(xs.shape[0]),
+            "input_shape": list(xs.shape[1:]),
+            "output_len": int(ys.shape[1]),
+        }, f, indent=1)
+    return ys

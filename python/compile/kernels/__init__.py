@@ -1,0 +1,12 @@
+"""L1: Pallas kernels for MARVEL's quantized CNN operators + jnp oracles."""
+
+from .conv2d import conv2d, conv2d_f32
+from .dwconv2d import dwconv2d
+from .dense import dense, dense_f32
+from .pool import maxpool, avgpool_global, avgpool2d
+from .eltwise import add, requantize
+
+__all__ = [
+    "conv2d", "conv2d_f32", "dwconv2d", "dense", "dense_f32",
+    "maxpool", "avgpool_global", "avgpool2d", "add", "requantize",
+]

@@ -1,0 +1,129 @@
+"""L1 Pallas kernel: quantized 2-D convolution.
+
+The paper's compute hot-spot is the int8 conv inner loop (the very loop whose
+``mul+add`` / ``addi+addi`` / ``blt`` patterns MARVEL fuses on the RISC-V
+side).  Here the same operator is expressed as a Pallas kernel so it lowers
+into the AOT HLO artifact that the rust runtime executes as the golden model.
+
+TPU mapping of the paper's insight (DESIGN.md §Hardware-Adaptation): the grid
+tiles the output-channel axis; each program holds one OC slice of the weights
+and the whole padded input block in VMEM and performs the (ic, ky, kx)
+reduction as dense contractions that map onto the MXU — the scalar
+``mac``/``fusedmac`` chain of the RISC-V core becomes a systolic-array
+contraction, and loop control (``zol``) is absorbed by the Pallas grid.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO, which is exactly what the
+rust PJRT CPU client needs.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..quant import requant
+
+
+def _conv2d_kernel(x_ref, w_ref, b_ref, o_ref, *, stride, shift, relu,
+                   kh, kw, oh, ow):
+    """One grid step: one output channel over the full (OH, OW) plane.
+
+    x_ref: (IC, IHp, IWp) already zero-padded input block.
+    w_ref: (1, IC, KH, KW) weight block for this output channel.
+    b_ref: (1,) bias. o_ref: (1, OH, OW).
+    """
+    x = x_ref[...]
+    w = w_ref[...][0]
+    ic = x.shape[0]
+    acc = jnp.full((oh, ow), b_ref[0], dtype=jnp.int32)
+    # Static (ky, kx) unroll; each tap is a strided slice + channel
+    # contraction.  In interpret mode this is an einsum; on a real TPU the
+    # contraction feeds the MXU.
+    for ky in range(kh):
+        for kx in range(kw):
+            xs = jax.lax.slice(
+                x,
+                (0, ky, kx),
+                (ic, ky + (oh - 1) * stride + 1, kx + (ow - 1) * stride + 1),
+                (1, stride, stride),
+            )  # (IC, OH, OW)
+            acc = acc + jnp.einsum(
+                "i,ihw->hw", w[:, ky, kx], xs,
+                preferred_element_type=jnp.int32)
+    o_ref[0] = requant(acc, shift, relu)
+
+
+def conv2d(x, w, b, *, stride: int, pad: int, shift: int, relu: bool):
+    """Quantized conv2d via Pallas.
+
+    x: (IC, IH, IW) int32 (int8-range values), w: (OC, IC, KH, KW) int32,
+    b: (OC,) int32.  Returns (OC, OH, OW) int32.
+    """
+    ic, ih, iw = x.shape
+    oc, wic, kh, kw = w.shape
+    assert wic == ic, f"channel mismatch: x has {ic}, w has {wic}"
+    oh = (ih + 2 * pad - kh) // stride + 1
+    ow = (iw + 2 * pad - kw) // stride + 1
+    assert oh >= 1 and ow >= 1, "empty output"
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad)))
+    ihp, iwp = ih + 2 * pad, iw + 2 * pad
+
+    kernel = functools.partial(
+        _conv2d_kernel, stride=stride, shift=shift, relu=relu,
+        kh=kh, kw=kw, oh=oh, ow=ow)
+    return pl.pallas_call(
+        kernel,
+        grid=(oc,),
+        in_specs=[
+            pl.BlockSpec((ic, ihp, iwp), lambda o: (0, 0, 0)),
+            pl.BlockSpec((1, ic, kh, kw), lambda o: (o, 0, 0, 0)),
+            pl.BlockSpec((1,), lambda o: (o,)),
+        ],
+        out_specs=pl.BlockSpec((1, oh, ow), lambda o: (o, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((oc, oh, ow), jnp.int32),
+        interpret=True,
+    )(xp, w, b)
+
+
+def _conv2d_kernel_f32(x_ref, w_ref, b_ref, o_ref, *, stride, kh, kw, oh, ow):
+    """Float variant of the conv kernel (dtype-sweep testing)."""
+    x = x_ref[...]
+    w = w_ref[...][0]
+    ic = x.shape[0]
+    acc = jnp.full((oh, ow), b_ref[0], dtype=jnp.float32)
+    for ky in range(kh):
+        for kx in range(kw):
+            xs = jax.lax.slice(
+                x,
+                (0, ky, kx),
+                (ic, ky + (oh - 1) * stride + 1, kx + (ow - 1) * stride + 1),
+                (1, stride, stride),
+            )
+            acc = acc + jnp.einsum("i,ihw->hw", w[:, ky, kx], xs)
+    o_ref[0] = acc
+
+
+def conv2d_f32(x, w, b, *, stride: int, pad: int):
+    """Float conv2d via Pallas (no requant)."""
+    ic, ih, iw = x.shape
+    oc, _, kh, kw = w.shape
+    oh = (ih + 2 * pad - kh) // stride + 1
+    ow = (iw + 2 * pad - kw) // stride + 1
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad)))
+    ihp, iwp = ih + 2 * pad, iw + 2 * pad
+    kernel = functools.partial(
+        _conv2d_kernel_f32, stride=stride, kh=kh, kw=kw, oh=oh, ow=ow)
+    return pl.pallas_call(
+        kernel,
+        grid=(oc,),
+        in_specs=[
+            pl.BlockSpec((ic, ihp, iwp), lambda o: (0, 0, 0)),
+            pl.BlockSpec((1, ic, kh, kw), lambda o: (o, 0, 0, 0)),
+            pl.BlockSpec((1,), lambda o: (o,)),
+        ],
+        out_specs=pl.BlockSpec((1, oh, ow), lambda o: (o, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((oc, oh, ow), jnp.float32),
+        interpret=True,
+    )(xp, w, b)

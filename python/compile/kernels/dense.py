@@ -1,0 +1,48 @@
+"""L1 Pallas kernel: quantized fully-connected layer.
+
+Classifier heads (and VGG's big FC layers) reduce to a single int8
+matrix-vector product.  On the RISC-V side this is the purest mac/zol
+workload; on TPU the (O, I) × (I,) contraction is a single MXU pass, so the
+kernel keeps the whole weight block in VMEM and emits one dot.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..quant import requant
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref, *, shift, relu):
+    x = x_ref[...]
+    w = w_ref[...]
+    acc = jnp.matmul(w, x, preferred_element_type=jnp.int32) + b_ref[...]
+    o_ref[...] = requant(acc, shift, relu)
+
+
+def dense(x, w, b, *, shift: int, relu: bool):
+    """Quantized dense via Pallas. x: (I,), w: (O, I), b: (O,) -> (O,)."""
+    o, i = w.shape
+    assert x.shape == (i,), f"shape mismatch: x {x.shape} vs w {w.shape}"
+    kernel = functools.partial(_dense_kernel, shift=shift, relu=relu)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((o,), jnp.int32),
+        interpret=True,
+    )(x, w, b)
+
+
+def _dense_kernel_f32(x_ref, w_ref, b_ref, o_ref):
+    o_ref[...] = jnp.matmul(w_ref[...], x_ref[...]) + b_ref[...]
+
+
+def dense_f32(x, w, b):
+    """Float dense via Pallas (dtype-sweep testing)."""
+    o, i = w.shape
+    return pl.pallas_call(
+        _dense_kernel_f32,
+        out_shape=jax.ShapeDtypeStruct((o,), jnp.float32),
+        interpret=True,
+    )(x, w, b)

@@ -1,0 +1,65 @@
+"""L1 Pallas kernel: quantized depthwise 2-D convolution.
+
+The MobileNet model class spends most of its non-pointwise time here; the
+RISC-V profile of this operator is the same mac/add2i/fusedmac pattern mix
+with a shallower reduction (no input-channel loop), which is why the paper's
+extensions transfer across the CNN class.  Grid tiles the channel axis.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..quant import requant
+
+
+def _dwconv2d_kernel(x_ref, w_ref, b_ref, o_ref, *, stride, shift, relu,
+                     kh, kw, oh, ow):
+    """One grid step: one channel. x_ref: (1, IHp, IWp), w_ref: (1, KH, KW)."""
+    x = x_ref[...][0]
+    w = w_ref[...][0]
+    acc = jnp.full((oh, ow), b_ref[0], dtype=jnp.int32)
+    for ky in range(kh):
+        for kx in range(kw):
+            xs = jax.lax.slice(
+                x,
+                (ky, kx),
+                (ky + (oh - 1) * stride + 1, kx + (ow - 1) * stride + 1),
+                (stride, stride),
+            )  # (OH, OW)
+            acc = acc + w[ky, kx] * xs
+    o_ref[0] = requant(acc, shift, relu)
+
+
+def dwconv2d(x, w, b, *, stride: int, pad: int, shift: int, relu: bool):
+    """Quantized depthwise conv via Pallas.
+
+    x: (C, IH, IW) int32, w: (C, KH, KW) int32, b: (C,) int32.
+    Returns (C, OH, OW) int32.
+    """
+    c, ih, iw = x.shape
+    wc, kh, kw = w.shape
+    assert wc == c, f"channel mismatch: x has {c}, w has {wc}"
+    oh = (ih + 2 * pad - kh) // stride + 1
+    ow = (iw + 2 * pad - kw) // stride + 1
+    assert oh >= 1 and ow >= 1, "empty output"
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad)))
+    ihp, iwp = ih + 2 * pad, iw + 2 * pad
+
+    kernel = functools.partial(
+        _dwconv2d_kernel, stride=stride, shift=shift, relu=relu,
+        kh=kh, kw=kw, oh=oh, ow=ow)
+    return pl.pallas_call(
+        kernel,
+        grid=(c,),
+        in_specs=[
+            pl.BlockSpec((1, ihp, iwp), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, kh, kw), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, oh, ow), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, oh, ow), jnp.int32),
+        interpret=True,
+    )(xp, w, b)

@@ -1,0 +1,41 @@
+"""L1 Pallas kernels: elementwise residual add and standalone requantize."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..quant import INT8_MAX, INT8_MIN, requant
+
+
+def _add_kernel(a_ref, b_ref, o_ref, *, relu):
+    out = jnp.clip(a_ref[...] + b_ref[...], INT8_MIN, INT8_MAX)
+    if relu:
+        out = jnp.maximum(out, 0)
+    o_ref[...] = out
+
+
+def add(a, b, *, relu: bool):
+    """Saturating int8 residual add via Pallas. a, b: same shape."""
+    assert a.shape == b.shape, f"shape mismatch {a.shape} vs {b.shape}"
+    kernel = functools.partial(_add_kernel, relu=relu)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(a.shape, jnp.int32),
+        interpret=True,
+    )(a, b)
+
+
+def _requant_kernel(x_ref, o_ref, *, shift, relu):
+    o_ref[...] = requant(x_ref[...], shift, relu)
+
+
+def requantize(x, *, shift: int, relu: bool):
+    """Standalone shift-requantize via Pallas (int32 acc -> int8 range)."""
+    kernel = functools.partial(_requant_kernel, shift=shift, relu=relu)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.int32),
+        interpret=True,
+    )(x)

@@ -1,0 +1,108 @@
+"""L1 Pallas kernels: max pooling and global average pooling.
+
+Pooling is memory-bound on every target; the Pallas versions tile the channel
+axis so each program reduces one (H, W) plane resident in VMEM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..quant import requant
+
+
+def _maxpool_kernel(x_ref, o_ref, *, k, stride, oh, ow):
+    x = x_ref[...][0]
+    acc = jnp.full((oh, ow), -(2**31), dtype=jnp.int32)
+    for ky in range(k):
+        for kx in range(k):
+            xs = jax.lax.slice(
+                x,
+                (ky, kx),
+                (ky + (oh - 1) * stride + 1, kx + (ow - 1) * stride + 1),
+                (stride, stride),
+            )
+            acc = jnp.maximum(acc, xs)
+    o_ref[0] = acc
+
+
+def maxpool(x, *, k: int, stride: int):
+    """Max pooling via Pallas. x: (C, H, W) -> (C, OH, OW). VALID padding."""
+    c, ih, iw = x.shape
+    oh = (ih - k) // stride + 1
+    ow = (iw - k) // stride + 1
+    assert oh >= 1 and ow >= 1, "empty output"
+    kernel = functools.partial(_maxpool_kernel, k=k, stride=stride, oh=oh, ow=ow)
+    return pl.pallas_call(
+        kernel,
+        grid=(c,),
+        in_specs=[pl.BlockSpec((1, ih, iw), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((1, oh, ow), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, oh, ow), jnp.int32),
+        interpret=True,
+    )(x)
+
+
+def _avgpool2d_kernel(x_ref, o_ref, *, k, stride, shift, oh, ow):
+    x = x_ref[...][0]
+    acc = jnp.zeros((oh, ow), dtype=jnp.int32)
+    for ky in range(k):
+        for kx in range(k):
+            xs = jax.lax.slice(
+                x,
+                (ky, kx),
+                (ky + (oh - 1) * stride + 1, kx + (ow - 1) * stride + 1),
+                (stride, stride),
+            )
+            acc = acc + xs
+    o_ref[0] = requant(acc, shift, False)
+
+
+def avgpool2d(x, *, k: int, stride: int):
+    """Average pooling via Pallas (VALID). Divide by k*k as a round-shift.
+
+    k must be a power of two so the division is exact power-of-two requant
+    (DenseNet transitions use k=2).  x: (C, H, W) -> (C, OH, OW).
+    """
+    c, ih, iw = x.shape
+    shift = (k * k - 1).bit_length()
+    assert (1 << shift) == k * k, f"avgpool2d k={k}: k*k must be a power of two"
+    oh = (ih - k) // stride + 1
+    ow = (iw - k) // stride + 1
+    assert oh >= 1 and ow >= 1, "empty output"
+    kernel = functools.partial(
+        _avgpool2d_kernel, k=k, stride=stride, shift=shift, oh=oh, ow=ow)
+    return pl.pallas_call(
+        kernel,
+        grid=(c,),
+        in_specs=[pl.BlockSpec((1, ih, iw), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((1, oh, ow), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, oh, ow), jnp.int32),
+        interpret=True,
+    )(x)
+
+
+def _avgpool_global_kernel(x_ref, o_ref, *, shift):
+    acc = jnp.sum(x_ref[...][0].astype(jnp.int32))
+    o_ref[0, 0, 0] = requant(acc, shift, False)
+
+
+def avgpool_global(x, *, shift: int):
+    """Global average pooling via Pallas.
+
+    shift = log2(H*W); x: (C, H, W) -> (C, 1, 1).
+    """
+    c, ih, iw = x.shape
+    assert (1 << shift) == ih * iw, \
+        f"avgpool shift {shift} must equal log2({ih}*{iw})"
+    kernel = functools.partial(_avgpool_global_kernel, shift=shift)
+    return pl.pallas_call(
+        kernel,
+        grid=(c,),
+        in_specs=[pl.BlockSpec((1, ih, iw), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((1, 1, 1), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, 1, 1), jnp.int32),
+        interpret=True,
+    )(x)

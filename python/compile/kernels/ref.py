@@ -1,0 +1,128 @@
+"""Pure-jnp correctness oracles for every Pallas kernel.
+
+These are the ground-truth definitions of MARVEL's quantized operators.  They
+deliberately use an *independent* lowering path (``lax.conv_general_dilated``
+/ ``jnp.matmul`` / reduce_window) from the Pallas kernels, so agreement
+between the two is a meaningful correctness signal rather than shared-code
+tautology.
+
+All activation tensors are int32 arrays holding int8-range values (see
+``compile.quant``).  Layouts: activations CHW, conv weights (OC, IC, KH, KW),
+depthwise weights (C, KH, KW), dense weights (O, I).
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+from ..quant import requant, saturating_add
+
+
+def conv2d_ref(x, w, b, *, stride: int, pad: int, shift: int, relu: bool):
+    """Quantized 2-D convolution oracle.
+
+    x: (IC, IH, IW) int32, w: (OC, IC, KH, KW) int32, b: (OC,) int32.
+    Returns (OC, OH, OW) int32 in int8 range.
+    """
+    xb = x[None].astype(jnp.int32)  # NCHW with N=1
+    acc = lax.conv_general_dilated(
+        xb,
+        w.astype(jnp.int32),
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        preferred_element_type=jnp.int32,
+    )[0]
+    acc = acc + b[:, None, None]
+    return requant(acc, shift, relu)
+
+
+def dwconv2d_ref(x, w, b, *, stride: int, pad: int, shift: int, relu: bool):
+    """Quantized depthwise conv oracle.
+
+    x: (C, IH, IW), w: (C, KH, KW), b: (C,).
+    """
+    c = x.shape[0]
+    xb = x[None].astype(jnp.int32)
+    # feature_group_count=C with OIHW weights of shape (C, 1, KH, KW)
+    acc = lax.conv_general_dilated(
+        xb,
+        w[:, None].astype(jnp.int32),
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        feature_group_count=c,
+        preferred_element_type=jnp.int32,
+    )[0]
+    acc = acc + b[:, None, None]
+    return requant(acc, shift, relu)
+
+
+def dense_ref(x, w, b, *, shift: int, relu: bool):
+    """Quantized fully-connected oracle. x: (I,), w: (O, I), b: (O,)."""
+    acc = jnp.matmul(w.astype(jnp.int32), x.astype(jnp.int32),
+                     preferred_element_type=jnp.int32) + b
+    return requant(acc, shift, relu)
+
+
+def maxpool_ref(x, *, k: int, stride: int):
+    """Max pooling oracle (no requant — int8 in, int8 out). x: (C, H, W)."""
+    return lax.reduce_window(
+        x,
+        jnp.int32(-(2**31)),
+        lax.max,
+        window_dimensions=(1, k, k),
+        window_strides=(1, stride, stride),
+        padding="VALID",
+    )
+
+
+def avgpool2d_ref(x, *, k: int, stride: int):
+    """Average pooling oracle (VALID): window sum then round-shift by
+    log2(k*k).  x: (C, H, W)."""
+    shift = (k * k - 1).bit_length()
+    assert (1 << shift) == k * k
+    acc = lax.reduce_window(
+        x.astype(jnp.int32),
+        jnp.int32(0),
+        lax.add,
+        window_dimensions=(1, k, k),
+        window_strides=(1, stride, stride),
+        padding="VALID",
+    )
+    return requant(acc, shift, False)
+
+
+def avgpool_global_ref(x, *, shift: int):
+    """Global average pooling oracle: sum over H×W then round-shift.
+
+    ``shift`` must equal log2(H*W) (enforced by the exporter); the rounding
+    matches ``quant.round_shift`` so the RV32 code is a plain add+srai.
+    x: (C, H, W) -> (C, 1, 1).
+    """
+    acc = jnp.sum(x.astype(jnp.int32), axis=(1, 2), keepdims=True)
+    return requant(acc, shift, False)
+
+
+def add_ref(a, b, *, relu: bool):
+    """Residual elementwise saturating add oracle."""
+    out = saturating_add(a, b)
+    if relu:
+        out = jnp.maximum(out, 0)
+    return out
+
+
+def concat_ref(xs):
+    """Channel concatenation oracle. xs: list of (Ci, H, W)."""
+    return jnp.concatenate(xs, axis=0)
+
+
+def conv2d_ref_f32(x, w, b, *, stride: int, pad: int):
+    """Float conv reference (used by the float-dtype kernel sweeps)."""
+    acc = lax.conv_general_dilated(
+        x[None],
+        w,
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )[0]
+    return acc + b[:, None, None]

@@ -1,0 +1,102 @@
+"""L1 structural performance analysis: VMEM footprint + MXU utilization
+estimates for the Pallas kernels (DESIGN.md §8, EXPERIMENTS §Perf).
+
+interpret=True gives CPU-numpy timings that say nothing about TPU behaviour,
+so the Pallas optimization loop is *structural*: per conv layer, compute the
+VMEM bytes each grid step holds (its BlockSpec blocks) and the utilization
+of the MXU reduction axis (contraction length vs. the 128-lane systolic
+dimension).  The analyzer walks a model spec, checks every layer against the
+16 MB VMEM budget, and reports the achieved-utilization distribution.
+"""
+
+VMEM_BYTES = 16 * 1024 * 1024
+MXU_LANES = 128
+
+
+def conv_block_stats(in_shape, k, oc, dtype_bytes: int = 4) -> dict:
+    """VMEM/MXU stats for one conv2d grid step (one output-channel plane).
+
+    BlockSpecs (kernels/conv2d.py): x block (IC, IHp, IWp), w block
+    (1, IC, KH, KW), bias (1,), out block (1, OH, OW).
+    """
+    ic, ihp, iwp = in_shape
+    x_bytes = ic * ihp * iwp * dtype_bytes
+    w_bytes = ic * k * k * dtype_bytes
+    out_bytes = ihp * iwp * dtype_bytes  # upper bound (OH*OW <= IHp*IWp)
+    vmem = x_bytes + w_bytes + out_bytes
+    # the (ic, ky, kx) reduction feeds the MXU contraction axis
+    red = ic * k * k
+    # utilization of the 128-lane dimension after padding to a multiple
+    lanes = -(-red // MXU_LANES) * MXU_LANES
+    util = red / lanes
+    return {
+        "vmem_bytes": vmem,
+        "vmem_ok": vmem <= VMEM_BYTES,
+        "reduction": red,
+        "mxu_util": util,
+    }
+
+
+def analyze_spec(spec: dict) -> dict:
+    """Aggregate L1 stats across a model's conv/dw layers."""
+    per_layer = []
+    for li, layer in enumerate(spec["layers"]):
+        if layer["op"] == "conv2d":
+            ic, ih, iw = layer["in_shape"]
+            pad = layer["pad"]
+            k = _k_of(layer)
+            st = conv_block_stats(
+                (ic, ih + 2 * pad, iw + 2 * pad), k, layer["out_shape"][0])
+            st["layer"] = li
+            per_layer.append(st)
+    if not per_layer:
+        return {"layers": [], "peak_vmem": 0, "mean_mxu_util": 1.0,
+                "all_fit_vmem": True}
+    return {
+        "layers": per_layer,
+        "peak_vmem": max(s["vmem_bytes"] for s in per_layer),
+        "mean_mxu_util": (sum(s["mxu_util"] for s in per_layer)
+                          / len(per_layer)),
+        "all_fit_vmem": all(s["vmem_ok"] for s in per_layer),
+    }
+
+
+def _k_of(layer) -> int:
+    """Kernel size from recorded shapes: (IH + 2p - K)/s + 1 = OH."""
+    ih = layer["in_shape"][1]
+    oh = layer["out_shape"][1]
+    return ih + 2 * layer["pad"] - layer["stride"] * (oh - 1)
+
+
+def main():
+    import argparse
+    import json
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--artifacts", default="../artifacts")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    import os
+    results = {}
+    mdir = os.path.join(args.artifacts, "models")
+    for f in sorted(os.listdir(mdir)):
+        if not f.endswith(".json"):
+            continue
+        spec = json.load(open(os.path.join(mdir, f)))
+        r = analyze_spec(spec)
+        results[spec["name"]] = {
+            "peak_vmem_kb": round(r["peak_vmem"] / 1024, 1),
+            "mean_mxu_util": round(r["mean_mxu_util"], 3),
+            "all_fit_vmem": r["all_fit_vmem"],
+            "conv_layers": len(r["layers"]),
+        }
+        print(f"{spec['name']:14s} peak VMEM "
+              f"{results[spec['name']]['peak_vmem_kb']:>9.1f} kB  "
+              f"mean MXU util {results[spec['name']]['mean_mxu_util']:.3f}  "
+              f"fits: {r['all_fit_vmem']}")
+    if args.out:
+        with open(args.out, "w") as fh:
+            json.dump(results, fh, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""L2: the JAX model — a quantized-CNN interpreter over model specs.
+
+``run_spec`` executes a spec layer-by-layer, chaining the L1 Pallas kernels
+(``backend="pallas"``, the path that is AOT-lowered into the HLO artifact) or
+the independent jnp oracles (``backend="ref"``, used for calibration and as
+the cross-check).  Build-time only; the rust coordinator executes the lowered
+HLO via PJRT.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import kernels
+from .kernels import ref
+
+
+def _as_i32(x):
+    return jnp.asarray(x, dtype=jnp.int32)
+
+
+def run_spec(spec: dict, weights: dict, x, backend: str = "pallas"):
+    """Run one inference. x: int32 (C,H,W) in int8 range -> logits (classes,).
+
+    All conv/dw/dense layers must have calibrated (non-None) shifts.
+    """
+    k = kernels if backend == "pallas" else None
+    outs: list = []
+    x = _as_i32(x)
+
+    def inp(layer):
+        srcs = [x if i == -1 else outs[i] for i in layer["inputs"]]
+        return srcs
+
+    for li, layer in enumerate(spec["layers"]):
+        op = layer["op"]
+        srcs = inp(layer)
+        if op in ("conv2d", "dwconv2d", "dense") and layer["shift"] is None:
+            raise ValueError(
+                f"layer {li} ({op}) has uncalibrated shift; run "
+                "quantize.calibrate() first")
+        if op == "conv2d":
+            f = kernels.conv2d if backend == "pallas" else ref.conv2d_ref
+            out = f(srcs[0], _as_i32(weights[layer["w"]]),
+                    _as_i32(weights[layer["b"]]),
+                    stride=layer["stride"], pad=layer["pad"],
+                    shift=layer["shift"], relu=layer["relu"])
+        elif op == "dwconv2d":
+            f = kernels.dwconv2d if backend == "pallas" else ref.dwconv2d_ref
+            out = f(srcs[0], _as_i32(weights[layer["w"]]),
+                    _as_i32(weights[layer["b"]]),
+                    stride=layer["stride"], pad=layer["pad"],
+                    shift=layer["shift"], relu=layer["relu"])
+        elif op == "dense":
+            f = kernels.dense if backend == "pallas" else ref.dense_ref
+            out = f(srcs[0].reshape(-1), _as_i32(weights[layer["w"]]),
+                    _as_i32(weights[layer["b"]]),
+                    shift=layer["shift"], relu=layer["relu"])
+        elif op == "maxpool":
+            f = kernels.maxpool if backend == "pallas" else ref.maxpool_ref
+            out = f(srcs[0], k=layer["k"], stride=layer["stride"])
+        elif op == "avgpool2d":
+            f = kernels.avgpool2d if backend == "pallas" else ref.avgpool2d_ref
+            out = f(srcs[0], k=layer["k"], stride=layer["stride"])
+        elif op == "avgpool_global":
+            f = (kernels.avgpool_global if backend == "pallas"
+                 else ref.avgpool_global_ref)
+            out = f(srcs[0], shift=layer["shift"])
+        elif op == "add":
+            f = kernels.add if backend == "pallas" else ref.add_ref
+            out = f(srcs[0], srcs[1], relu=layer["relu"])
+        elif op == "concat":
+            # Pure data movement; jnp.concatenate on both backends.
+            out = ref.concat_ref(srcs)
+        else:
+            raise ValueError(f"unknown op {op!r}")
+        outs.append(out)
+    return outs[-1]
+
+
+def build_model_fn(spec: dict, weights: dict, backend: str = "pallas"):
+    """Return a jit-able ``fn(x) -> (logits,)`` with weights closed over.
+
+    The 1-tuple return matches the ``return_tuple=True`` AOT lowering
+    convention (rust side unwraps with ``to_tuple1``).
+    """
+    w = {k: jnp.asarray(v, dtype=jnp.int32) for k, v in weights.items()}
+
+    def fn(x):
+        return (run_spec(spec, w, x, backend=backend),)
+
+    return fn
+
+
+def run_batch_np(spec: dict, weights: dict, xs: np.ndarray,
+                 backend: str = "ref") -> np.ndarray:
+    """Run a batch of inputs (N, C, H, W) -> (N, classes) as numpy."""
+    fn = jax.jit(build_model_fn(spec, weights, backend=backend))
+    out = [np.asarray(fn(jnp.asarray(x, jnp.int32))[0]) for x in xs]
+    return np.stack(out)

@@ -1,0 +1,73 @@
+"""The single definition of MARVEL's quantized arithmetic (Python side).
+
+Quantized tensors are carried as ``int32`` arrays holding int8-range values
+([-128, 127]).  This is bit-exact to int8 semantics (all accumulations fit in
+int32 by a wide margin) while avoiding PJRT/Literal dtype friction on the
+rust side of the AOT bridge.
+
+The requantization scheme is symmetric power-of-two: an int32 accumulator is
+rounded (half-up, i.e. ``+ 2^(s-1)`` before an *arithmetic* right shift by
+``s``) and clamped to the int8 range.  On RV32 this is exactly
+
+    add  acc, acc, rnd      # rnd = 1 << (s-1), hoisted out of the loop
+    srai acc, acc, s
+    <clamp via blt/bge>
+
+so the golden model and the generated RISC-V code agree bit-for-bit.  The
+mirror implementation lives in ``rust/src/quant/mod.rs``; pytest checks this
+file's semantics, and the rust property tests check that module against the
+ISS — the AOT integration test ties the two together.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+INT8_MIN = -128
+INT8_MAX = 127
+
+
+def round_shift(acc, shift: int):
+    """Round-half-up arithmetic right shift of an int32 accumulator."""
+    if shift == 0:
+        return acc
+    if shift < 0:
+        raise ValueError(f"negative requant shift: {shift}")
+    return (acc + (1 << (shift - 1))) >> shift
+
+
+def requant(acc, shift: int, relu: bool):
+    """Requantize an int32 accumulator to int8 range (kept in int32).
+
+    Clamp order matches the generated RV32 code: shift, then clamp to
+    [0 if relu else -128, 127].
+    """
+    acc = round_shift(acc, shift)
+    lo = 0 if relu else INT8_MIN
+    return jnp.clip(acc, lo, INT8_MAX)
+
+
+def requant_np(acc: np.ndarray, shift: int, relu: bool) -> np.ndarray:
+    """NumPy twin of :func:`requant` (used by dataset/golden generation)."""
+    acc = acc.astype(np.int64)
+    if shift > 0:
+        acc = (acc + (1 << (shift - 1))) >> shift
+    lo = 0 if relu else INT8_MIN
+    return np.clip(acc, lo, INT8_MAX).astype(np.int32)
+
+
+def saturating_add(a, b):
+    """Elementwise int8 saturating add (residual connections)."""
+    return jnp.clip(a + b, INT8_MIN, INT8_MAX)
+
+
+def quantize_weights_np(w: np.ndarray) -> tuple[np.ndarray, float]:
+    """Symmetric per-tensor weight quantization float -> int8 (as int32).
+
+    Returns (q, scale) with ``w ≈ q * scale`` and q in [-127, 127].
+    """
+    amax = float(np.max(np.abs(w))) if w.size else 0.0
+    if amax == 0.0:
+        return np.zeros_like(w, dtype=np.int32), 1.0
+    scale = amax / 127.0
+    q = np.clip(np.round(w / scale), -127, 127).astype(np.int32)
+    return q, scale

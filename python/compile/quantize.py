@@ -1,0 +1,114 @@
+"""Post-training quantization: per-layer requant shift calibration.
+
+The paper applies TFLite int8 post-training quantization (§II.A.3).  Our
+scheme (DESIGN.md §2) is symmetric power-of-two: each conv/dw/dense layer
+requantizes its int32 accumulator with an arithmetic right shift.  This
+module picks the smallest shift per layer such that the calibration batch
+never saturates the int8 range (beyond the final clamp), processing layers
+in topological order so each layer calibrates against real upstream
+activations.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+from .quant import round_shift
+
+
+def _min_shift_for(amax: int) -> int:
+    """Smallest s with round_shift(amax, s) <= 127."""
+    s = 0
+    while round_shift(int(amax), s) > 127:
+        s += 1
+    return s
+
+
+def calibrate(spec: dict, weights: dict, xs: np.ndarray) -> dict:
+    """Fill in every None shift in ``spec`` (mutates and returns it).
+
+    xs: calibration batch (N, C, H, W) int in int8 range.
+    """
+    w32 = {k: jnp.asarray(v, jnp.int32) for k, v in weights.items()}
+    # Per-sample activation lists; calibrate layer-by-layer across the batch.
+    acts = [[jnp.asarray(x, jnp.int32) for x in xs]]  # acts[0] = inputs
+
+    def srcs(layer, si):
+        return [acts[0][si] if i == -1 else acts[i + 1][si]
+                for i in layer["inputs"]]
+
+    for li, layer in enumerate(spec["layers"]):
+        op = layer["op"]
+        outs = []
+        if op in ("conv2d", "dwconv2d", "dense"):
+            # Raw (un-requantized) accumulators across the batch -> amax ->
+            # smallest non-saturating shift; then requant with it to produce
+            # this layer's calibrated activations for downstream layers.
+            amax = 0
+            raw_outs = []
+            for si in range(len(xs)):
+                s0 = srcs(layer, si)
+                raw = _raw_acc(layer, op, s0, w32)
+                amax = max(amax, int(jnp.max(jnp.abs(raw))))
+                raw_outs.append(raw)
+            shift = _min_shift_for(amax)
+            layer["shift"] = shift
+            lo = 0 if layer["relu"] else -128
+            for raw in raw_outs:
+                out = jnp.clip(round_shift(raw, shift) if shift else raw,
+                               lo, 127)
+                outs.append(out)
+        elif op == "maxpool":
+            for si in range(len(xs)):
+                outs.append(ref.maxpool_ref(srcs(layer, si)[0],
+                                            k=layer["k"],
+                                            stride=layer["stride"]))
+        elif op == "avgpool2d":
+            for si in range(len(xs)):
+                outs.append(ref.avgpool2d_ref(srcs(layer, si)[0],
+                                              k=layer["k"],
+                                              stride=layer["stride"]))
+        elif op == "avgpool_global":
+            for si in range(len(xs)):
+                outs.append(ref.avgpool_global_ref(srcs(layer, si)[0],
+                                                   shift=layer["shift"]))
+        elif op == "add":
+            for si in range(len(xs)):
+                a, b = srcs(layer, si)
+                outs.append(ref.add_ref(a, b, relu=layer["relu"]))
+        elif op == "concat":
+            for si in range(len(xs)):
+                outs.append(ref.concat_ref(srcs(layer, si)))
+        else:
+            raise ValueError(f"unknown op {op!r}")
+        acts.append(outs)
+    return spec
+
+
+def _raw_acc(layer, op, s0, w32):
+    """Un-requantized int32 accumulator for a compute layer."""
+    from jax import lax
+    if op == "conv2d":
+        x, w, b = s0[0], w32[layer["w"]], w32[layer["b"]]
+        acc = lax.conv_general_dilated(
+            x[None].astype(jnp.int32), w.astype(jnp.int32),
+            window_strides=(layer["stride"], layer["stride"]),
+            padding=[(layer["pad"], layer["pad"])] * 2,
+            dimension_numbers=("NCHW", "OIHW", "NCHW"),
+            preferred_element_type=jnp.int32)[0]
+        return acc + b[:, None, None]
+    if op == "dwconv2d":
+        x, w, b = s0[0], w32[layer["w"]], w32[layer["b"]]
+        c = x.shape[0]
+        acc = lax.conv_general_dilated(
+            x[None].astype(jnp.int32), w[:, None].astype(jnp.int32),
+            window_strides=(layer["stride"], layer["stride"]),
+            padding=[(layer["pad"], layer["pad"])] * 2,
+            dimension_numbers=("NCHW", "OIHW", "NCHW"),
+            feature_group_count=c,
+            preferred_element_type=jnp.int32)[0]
+        return acc + b[:, None, None]
+    # dense
+    x, w, b = s0[0].reshape(-1), w32[layer["w"]], w32[layer["b"]]
+    return jnp.matmul(w.astype(jnp.int32), x.astype(jnp.int32),
+                      preferred_element_type=jnp.int32) + b

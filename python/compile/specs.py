@@ -1,0 +1,346 @@
+"""Model zoo: spec builders for the six CNNs the paper evaluates.
+
+A *spec* is the hardware-agnostic model description that flows through the
+whole system — the analogue of the paper's TVM Relay module.  It is a plain
+dict (JSON-serializable, see export.py) plus a dict of int32 numpy weight
+tensors.  The rust compiler (`rust/src/compiler/spec.rs`) consumes the same
+JSON.
+
+Layer dicts
+-----------
+Every layer has ``op``, ``inputs`` (list of producer layer indices; ``-1``
+is the model input) and ``out_shape``.  Per-op fields:
+
+=============  =================================================once=========
+conv2d         w, b, stride, pad, shift, relu, in_shape [IC,IH,IW]
+dwconv2d       w, b, stride, pad, shift, relu, in_shape [C,IH,IW]
+dense          w, b, shift, relu, in_len (input flattened CHW row-major)
+maxpool        k, stride, in_shape
+avgpool2d      k, stride, shift (= log2 k²), in_shape
+avgpool_global shift (= log2 H·W), in_shape
+add            relu  (two inputs, same shape, saturating int8 add)
+concat         (N inputs, channel axis)
+=============  ==============================================================
+
+``shift`` values for conv/dw/dense start as ``None`` placeholders and are
+filled by calibration (quantize.py).
+
+Scaling (DESIGN.md §6): the paper runs 64×64×3 inputs on full-width models;
+the quick profile shrinks widths/inputs so the ISS benches run in seconds
+while preserving layer types and loop structure.
+"""
+
+import numpy as np
+
+
+INT8 = "i8"
+INT32 = "i32"
+
+
+def _scale_ch(c: int, alpha: float, div: int = 4) -> int:
+    """Scale a channel count by alpha, keeping it a positive multiple of div."""
+    return max(div, int(c * alpha) // div * div)
+
+
+class SpecBuilder:
+    """Accumulates layers + weight tensors for one model."""
+
+    def __init__(self, name: str, input_shape, seed: int):
+        self.name = name
+        self.input_shape = list(input_shape)
+        self.layers = []
+        self.weights = {}  # name -> np int32 array (int8/int32-range values)
+        self.rng = np.random.default_rng(seed)
+        self._tid = 0
+
+    # -- shape tracking ----------------------------------------------------
+    def shape_of(self, idx: int):
+        if idx == -1:
+            return list(self.input_shape)
+        return list(self.layers[idx]["out_shape"])
+
+    def _tensor(self, arr: np.ndarray, dtype: str) -> str:
+        name = f"t{self._tid}"
+        self._tid += 1
+        self.weights[name] = arr.astype(np.int32)
+        self.weights[name + "/dtype"] = dtype  # sidecar, stripped at export
+        return name
+
+    def _rand_w(self, shape) -> np.ndarray:
+        """Random int8 weights with conv-ish distribution."""
+        w = self.rng.normal(0.0, 40.0, size=shape)
+        return np.clip(np.round(w), -127, 127).astype(np.int32)
+
+    def _rand_b(self, n: int) -> np.ndarray:
+        return self.rng.integers(-64, 64, size=(n,)).astype(np.int32)
+
+    # -- layer emitters ----------------------------------------------------
+    def conv2d(self, inp: int, oc: int, k: int, stride: int = 1, pad: int = 0,
+               relu: bool = True, w: np.ndarray | None = None,
+               b: np.ndarray | None = None) -> int:
+        ic, ih, iw = self.shape_of(inp)
+        oh = (ih + 2 * pad - k) // stride + 1
+        ow = (iw + 2 * pad - k) // stride + 1
+        assert oh >= 1 and ow >= 1, \
+            f"{self.name}: conv2d output empty ({ih}x{iw} k{k} s{stride} p{pad})"
+        w = self._rand_w((oc, ic, k, k)) if w is None else w.astype(np.int32)
+        b = self._rand_b(oc) if b is None else b.astype(np.int32)
+        self.layers.append({
+            "op": "conv2d", "inputs": [inp],
+            "w": self._tensor(w, INT8), "b": self._tensor(b, INT32),
+            "stride": stride, "pad": pad, "shift": None, "relu": relu,
+            "in_shape": [ic, ih, iw], "out_shape": [oc, oh, ow],
+        })
+        return len(self.layers) - 1
+
+    def dwconv2d(self, inp: int, k: int, stride: int = 1, pad: int = 1,
+                 relu: bool = True) -> int:
+        c, ih, iw = self.shape_of(inp)
+        oh = (ih + 2 * pad - k) // stride + 1
+        ow = (iw + 2 * pad - k) // stride + 1
+        assert oh >= 1 and ow >= 1, f"{self.name}: dwconv output empty"
+        self.layers.append({
+            "op": "dwconv2d", "inputs": [inp],
+            "w": self._tensor(self._rand_w((c, k, k)), INT8),
+            "b": self._tensor(self._rand_b(c), INT32),
+            "stride": stride, "pad": pad, "shift": None, "relu": relu,
+            "in_shape": [c, ih, iw], "out_shape": [c, oh, ow],
+        })
+        return len(self.layers) - 1
+
+    def dense(self, inp: int, out: int, relu: bool = False,
+              w: np.ndarray | None = None, b: np.ndarray | None = None) -> int:
+        in_len = int(np.prod(self.shape_of(inp)))
+        w = self._rand_w((out, in_len)) if w is None else w.astype(np.int32)
+        b = self._rand_b(out) if b is None else b.astype(np.int32)
+        self.layers.append({
+            "op": "dense", "inputs": [inp],
+            "w": self._tensor(w, INT8), "b": self._tensor(b, INT32),
+            "shift": None, "relu": relu,
+            "in_len": in_len, "out_shape": [out],
+        })
+        return len(self.layers) - 1
+
+    def maxpool(self, inp: int, k: int, stride: int) -> int:
+        c, ih, iw = self.shape_of(inp)
+        oh = (ih - k) // stride + 1
+        ow = (iw - k) // stride + 1
+        assert oh >= 1 and ow >= 1, f"{self.name}: maxpool output empty"
+        self.layers.append({
+            "op": "maxpool", "inputs": [inp], "k": k, "stride": stride,
+            "in_shape": [c, ih, iw], "out_shape": [c, oh, ow],
+        })
+        return len(self.layers) - 1
+
+    def avgpool2d(self, inp: int, k: int, stride: int) -> int:
+        c, ih, iw = self.shape_of(inp)
+        shift = (k * k - 1).bit_length()
+        assert (1 << shift) == k * k, "avgpool2d window must be power of two"
+        oh = (ih - k) // stride + 1
+        ow = (iw - k) // stride + 1
+        assert oh >= 1 and ow >= 1, f"{self.name}: avgpool output empty"
+        self.layers.append({
+            "op": "avgpool2d", "inputs": [inp], "k": k, "stride": stride,
+            "shift": shift,
+            "in_shape": [c, ih, iw], "out_shape": [c, oh, ow],
+        })
+        return len(self.layers) - 1
+
+    def avgpool_global(self, inp: int) -> int:
+        c, ih, iw = self.shape_of(inp)
+        shift = (ih * iw - 1).bit_length()
+        assert (1 << shift) == ih * iw, \
+            f"{self.name}: global avgpool window {ih}x{iw} not a power of two"
+        self.layers.append({
+            "op": "avgpool_global", "inputs": [inp], "shift": shift,
+            "in_shape": [c, ih, iw], "out_shape": [c, 1, 1],
+        })
+        return len(self.layers) - 1
+
+    def add(self, a: int, b: int, relu: bool = False) -> int:
+        sa, sb = self.shape_of(a), self.shape_of(b)
+        assert sa == sb, f"{self.name}: add shape mismatch {sa} vs {sb}"
+        self.layers.append({
+            "op": "add", "inputs": [a, b], "relu": relu, "out_shape": sa,
+        })
+        return len(self.layers) - 1
+
+    def concat(self, inps: list[int]) -> int:
+        shapes = [self.shape_of(i) for i in inps]
+        h, w = shapes[0][1], shapes[0][2]
+        assert all(s[1:] == [h, w] for s in shapes), \
+            f"{self.name}: concat spatial mismatch {shapes}"
+        c = sum(s[0] for s in shapes)
+        self.layers.append({
+            "op": "concat", "inputs": list(inps), "out_shape": [c, h, w],
+        })
+        return len(self.layers) - 1
+
+    def finish(self, num_classes: int, profile: str, seed: int) -> dict:
+        spec = {
+            "name": self.name,
+            "profile": profile,
+            "seed": seed,
+            "input_shape": self.input_shape,
+            "num_classes": num_classes,
+            "layers": self.layers,
+        }
+        weights = {k: v for k, v in self.weights.items()
+                   if not k.endswith("/dtype")}
+        dtypes = {k[:-len("/dtype")]: v for k, v in self.weights.items()
+                  if k.endswith("/dtype")}
+        spec["tensor_dtypes"] = dtypes
+        return spec, weights
+
+
+# ---------------------------------------------------------------------------
+# The six models (paper §II.A.1 / Table 9)
+# ---------------------------------------------------------------------------
+
+def lenet5(profile: str = "quick", seed: int = 7,
+           trained: dict | None = None):
+    """LeNet-5* exactly per Table 9 (both profiles are identical; the paper's
+    LeNet-5* is already tiny).  ``trained`` may carry *already-quantized*
+    int32 tensors from train.quantize_trained():
+    {"conv1_w","conv1_b","conv2_w","conv2_b","fc_w","fc_b"}.
+    """
+    b = SpecBuilder("lenet5", [1, 28, 28], seed)
+    t = trained or {}
+    c1 = b.conv2d(-1, 12, k=6, stride=2, pad=0, relu=True,
+                  w=t.get("conv1_w"), b=t.get("conv1_b"))
+    c2 = b.conv2d(c1, 32, k=6, stride=2, pad=0, relu=True,
+                  w=t.get("conv2_w"), b=t.get("conv2_b"))
+    b.dense(c2, 10, relu=False, w=t.get("fc_w"), b=t.get("fc_b"))
+    return b.finish(10, profile, seed)
+
+
+def mobilenet_v1(profile: str = "quick", seed: int = 11):
+    alpha, hw = (0.25, 32) if profile == "quick" else (1.0, 64)
+    b = SpecBuilder("mobilenet_v1", [3, hw, hw], seed)
+    c = _scale_ch(32, alpha)
+    x = b.conv2d(-1, c, k=3, stride=2, pad=1, relu=True)
+    blocks = [(64, 1), (128, 2), (128, 1), (256, 2), (256, 1), (512, 2),
+              (512, 1), (512, 1), (512, 1), (512, 1), (512, 1), (1024, 2),
+              (1024, 1)]
+    for oc, s in blocks:
+        x = b.dwconv2d(x, k=3, stride=s, pad=1, relu=True)
+        x = b.conv2d(x, _scale_ch(oc, alpha), k=1, stride=1, pad=0, relu=True)
+    x = b.avgpool_global(x)
+    b.dense(x, 2, relu=False)
+    return b.finish(2, profile, seed)
+
+
+def mobilenet_v2(profile: str = "quick", seed: int = 13):
+    alpha, hw = (0.25, 32) if profile == "quick" else (1.0, 64)
+    b = SpecBuilder("mobilenet_v2", [3, hw, hw], seed)
+    x = b.conv2d(-1, _scale_ch(32, alpha), k=3, stride=2, pad=1, relu=True)
+    # (expansion t, out channels, repeats, first stride)
+    cfg = [(1, 16, 1, 1), (6, 24, 2, 2), (6, 32, 3, 2), (6, 64, 4, 2),
+           (6, 96, 3, 1), (6, 160, 3, 2), (6, 320, 1, 1)]
+    for t, oc, n, s0 in cfg:
+        oc = _scale_ch(oc, alpha)
+        for i in range(n):
+            s = s0 if i == 0 else 1
+            cin = b.shape_of(x)[0]
+            inner = x
+            if t != 1:
+                inner = b.conv2d(inner, cin * t, k=1, stride=1, pad=0,
+                                 relu=True)
+            inner = b.dwconv2d(inner, k=3, stride=s, pad=1, relu=True)
+            inner = b.conv2d(inner, oc, k=1, stride=1, pad=0, relu=False)
+            if s == 1 and cin == oc:
+                x = b.add(x, inner, relu=False)
+            else:
+                x = inner
+    x = b.conv2d(x, _scale_ch(1280, alpha, div=8), k=1, stride=1, pad=0,
+                 relu=True)
+    x = b.avgpool_global(x)
+    b.dense(x, 2, relu=False)
+    return b.finish(2, profile, seed)
+
+
+def resnet50(profile: str = "quick", seed: int = 17):
+    width, hw = (0.25, 32) if profile == "quick" else (1.0, 64)
+    b = SpecBuilder("resnet50", [3, hw, hw], seed)
+    c64 = _scale_ch(64, width)
+    x = b.conv2d(-1, c64, k=7, stride=2, pad=3, relu=True)
+    x = b.maxpool(x, k=3, stride=2)
+    stages = [(64, 3, 1), (128, 4, 2), (256, 6, 2), (512, 3, 2)]
+    for cbase, n, s0 in stages:
+        c = _scale_ch(cbase, width)
+        for i in range(n):
+            s = s0 if i == 0 else 1
+            cin = b.shape_of(x)[0]
+            cout = c * 4
+            # bottleneck 1x1 -> 3x3 -> 1x1
+            y = b.conv2d(x, c, k=1, stride=1, pad=0, relu=True)
+            y = b.conv2d(y, c, k=3, stride=s, pad=1, relu=True)
+            y = b.conv2d(y, cout, k=1, stride=1, pad=0, relu=False)
+            if s != 1 or cin != cout:
+                sc = b.conv2d(x, cout, k=1, stride=s, pad=0, relu=False)
+            else:
+                sc = x
+            x = b.add(y, sc, relu=True)
+    x = b.avgpool_global(x)
+    b.dense(x, 2, relu=False)
+    return b.finish(2, profile, seed)
+
+
+def vgg16(profile: str = "quick", seed: int = 19):
+    width, hw = (0.125, 32) if profile == "quick" else (1.0, 64)
+    b = SpecBuilder("vgg16", [3, hw, hw], seed)
+    cfg = [64, 64, "M", 128, 128, "M", 256, 256, 256, "M",
+           512, 512, 512, "M", 512, 512, 512, "M"]
+    x = -1
+    for v in cfg:
+        if v == "M":
+            x = b.maxpool(x, k=2, stride=2)
+        else:
+            x = b.conv2d(x, _scale_ch(v, width), k=3, stride=1, pad=1,
+                         relu=True)
+    # Scaled classifier head (paper uses 4096-wide FCs on the full model).
+    fc1 = _scale_ch(4096, width, div=8) if profile == "full" else 64
+    x = b.dense(x, fc1, relu=True)
+    x = b.dense(x, fc1, relu=True)
+    b.dense(x, 2, relu=False)
+    return b.finish(2, profile, seed)
+
+
+def densenet121(profile: str = "quick", seed: int = 23):
+    growth, hw = (8, 64) if profile == "quick" else (32, 64)
+    b = SpecBuilder("densenet121", [3, hw, hw], seed)
+    c0 = 2 * growth
+    x = b.conv2d(-1, c0, k=7, stride=2, pad=3, relu=True)
+    x = b.maxpool(x, k=3, stride=2)
+    blocks = [6, 12, 24, 16]
+    for bi, n in enumerate(blocks):
+        for _ in range(n):
+            # bottleneck: 1x1 (4*growth) -> 3x3 (growth), concat
+            y = b.conv2d(x, 4 * growth, k=1, stride=1, pad=0, relu=True)
+            y = b.conv2d(y, growth, k=3, stride=1, pad=1, relu=True)
+            x = b.concat([x, y])
+        if bi != len(blocks) - 1:
+            # transition: 1x1 halve channels, 2x2 avg pool
+            c = b.shape_of(x)[0] // 2
+            x = b.conv2d(x, c, k=1, stride=1, pad=0, relu=True)
+            x = b.avgpool2d(x, k=2, stride=2)
+    x = b.avgpool_global(x)
+    b.dense(x, 2, relu=False)
+    return b.finish(2, profile, seed)
+
+
+ZOO = {
+    "lenet5": lenet5,
+    "mobilenet_v1": mobilenet_v1,
+    "mobilenet_v2": mobilenet_v2,
+    "resnet50": resnet50,
+    "vgg16": vgg16,
+    "densenet121": densenet121,
+}
+
+MODEL_NAMES = list(ZOO.keys())
+
+
+def build(name: str, profile: str = "quick", **kw):
+    """Build (spec, weights) for a zoo model."""
+    return ZOO[name](profile=profile, **kw)

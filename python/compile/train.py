@@ -1,0 +1,113 @@
+"""Transfer-learning substitute: train LeNet-5* in float JAX, then quantize.
+
+The paper's step II.A.2 fine-tunes pretrained Keras models; offline we train
+the (tiny) LeNet-5* from scratch on the synthetic digit dataset — a real
+gradient-descent run whose loss curve is logged to
+``artifacts/train/lenet_train_log.json`` and summarized in EXPERIMENTS.md.
+The trained float weights are then symmetrically quantized (weights to int8;
+biases to the accumulator scale) and handed to specs.lenet5(trained=...).
+
+Hand-rolled Adam — no optax dependency needed for a 19k-parameter model.
+"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datagen
+from .quant import quantize_weights_np
+
+
+def _init_params(rng: np.random.Generator) -> dict:
+    def he(shape, fan_in):
+        return rng.normal(0, np.sqrt(2.0 / fan_in), size=shape)
+    return {
+        "conv1_w": he((12, 1, 6, 6), 36),
+        "conv1_b": np.zeros(12),
+        "conv2_w": he((32, 12, 6, 6), 12 * 36),
+        "conv2_b": np.zeros(32),
+        "fc_w": he((10, 512), 512),
+        "fc_b": np.zeros(10),
+    }
+
+
+def _forward(p, x):
+    """Float LeNet-5* forward. x: (N, 1, 28, 28) in [-0.5, 0.5]."""
+    from jax import lax
+    y = lax.conv_general_dilated(x, p["conv1_w"], (2, 2), "VALID",
+                                 dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    y = jax.nn.relu(y + p["conv1_b"][None, :, None, None])
+    y = lax.conv_general_dilated(y, p["conv2_w"], (2, 2), "VALID",
+                                 dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    y = jax.nn.relu(y + p["conv2_b"][None, :, None, None])
+    y = y.reshape(y.shape[0], -1)
+    return y @ p["fc_w"].T + p["fc_b"]
+
+
+def _loss(p, x, y):
+    logits = _forward(p, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(logp[jnp.arange(x.shape[0]), y])
+
+
+def train_lenet(steps: int = 300, batch: int = 64, lr: float = 1e-3,
+                seed: int = 42, log_every: int = 10):
+    """Train and return (float_params, log_dict)."""
+    rng = np.random.default_rng(seed)
+    params = {k: jnp.asarray(v, jnp.float32)
+              for k, v in _init_params(rng).items()}
+    m = {k: jnp.zeros_like(v) for k, v in params.items()}
+    v = {k: jnp.zeros_like(v) for k, v in params.items()}
+    b1, b2, eps = 0.9, 0.999, 1e-8
+
+    grad_fn = jax.jit(jax.value_and_grad(_loss))
+    xs_all, ys_all = datagen.digits(8192, seed=seed)
+    xf = xs_all.astype(np.float32) / 255.0  # ~[-0.5, 0.5]
+    curve = []
+    for step in range(1, steps + 1):
+        idx = rng.integers(0, len(xf), size=batch)
+        loss, g = grad_fn(params, jnp.asarray(xf[idx]), jnp.asarray(ys_all[idx]))
+        for k in params:
+            m[k] = b1 * m[k] + (1 - b1) * g[k]
+            v[k] = b2 * v[k] + (1 - b2) * g[k] ** 2
+            mh = m[k] / (1 - b1 ** step)
+            vh = v[k] / (1 - b2 ** step)
+            params[k] = params[k] - lr * mh / (jnp.sqrt(vh) + eps)
+        if step % log_every == 0 or step == 1:
+            curve.append({"step": step, "loss": float(loss)})
+
+    # held-out accuracy
+    xs_te, ys_te = datagen.digits(512, seed=seed + 1)
+    logits = _forward(params, jnp.asarray(xs_te.astype(np.float32) / 255.0))
+    acc = float(jnp.mean(jnp.argmax(logits, -1) == jnp.asarray(ys_te)))
+    log = {"steps": steps, "batch": batch, "lr": lr, "seed": seed,
+           "loss_curve": curve, "float_test_acc": acc}
+    return {k: np.asarray(v) for k, v in params.items()}, log
+
+
+def quantize_trained(params: dict) -> dict:
+    """Float params -> int tensors for specs.lenet5(trained=...).
+
+    Weights: symmetric int8.  Biases: quantized at the accumulator scale
+    s_w · s_x of their layer so `acc = Σ q_w·q_x + q_b` stays proportional
+    to the float pre-activation.  Activations enter as x/255 in float but as
+    (x_int8) in the int model, i.e. s_x = 1/255 relative to the int domain.
+    """
+    out = {}
+    sx = 1.0 / 255.0
+    for conv, wk, bk in (("conv1", "conv1_w", "conv1_b"),
+                         ("conv2", "conv2_w", "conv2_b"),
+                         ("fc", "fc_w", "fc_b")):
+        qw, sw = quantize_weights_np(params[wk])
+        out[wk] = qw
+        qb = np.round(params[bk] / (sw * sx)).astype(np.int64)
+        out[bk] = np.clip(qb, -(2**30), 2**30).astype(np.int32)
+        sx = sx  # activation scale is re-normalized by calibration shifts
+    return out
+
+
+def save_log(log: dict, path: str):
+    with open(path, "w") as f:
+        json.dump(log, f, indent=1)

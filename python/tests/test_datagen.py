@@ -1,0 +1,52 @@
+"""Synthetic dataset generators: shapes, ranges, determinism, learnability
+signal (class means differ)."""
+
+import numpy as np
+
+from compile import datagen
+
+
+def test_digits_shapes_and_range():
+    xs, ys = datagen.digits(16, seed=3)
+    assert xs.shape == (16, 1, 28, 28)
+    assert ys.shape == (16,)
+    assert xs.min() >= -128 and xs.max() <= 127
+    assert set(ys.tolist()) <= set(range(10))
+
+
+def test_digits_deterministic():
+    a, la = datagen.digits(8, seed=5)
+    b, lb = datagen.digits(8, seed=5)
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(la, lb)
+    c, _ = datagen.digits(8, seed=6)
+    assert not np.array_equal(a, c)
+
+
+def test_digits_classes_distinguishable():
+    xs, ys = datagen.digits(400, seed=7)
+    m1 = xs[ys == 1].mean()
+    m8 = xs[ys == 8].mean()
+    # digit 8 lights all 7 segments, digit 1 only two: mean intensity differs
+    assert m8 > m1 + 5
+
+
+def test_cars_shapes_and_range():
+    xs, ys = datagen.cars(8, hw=32, seed=11)
+    assert xs.shape == (8, 3, 32, 32)
+    assert xs.min() >= -128 and xs.max() <= 127
+    assert set(ys.tolist()) <= {0, 1}
+
+
+def test_cars_hw_parameter():
+    xs, _ = datagen.cars(2, hw=64, seed=1)
+    assert xs.shape == (2, 3, 64, 64)
+
+
+def test_dataset_for_matches_spec():
+    from compile import specs
+    for name in ("lenet5", "vgg16", "densenet121"):
+        spec, _ = specs.build(name)
+        xs, ys = datagen.dataset_for(spec, 3, seed=2)
+        assert list(xs.shape[1:]) == spec["input_shape"]
+        assert len(ys) == 3

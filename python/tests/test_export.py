@@ -1,0 +1,74 @@
+"""Exporter round-trip: the JSON/bin the rust compiler reads must decode back
+to exactly the tensors we exported."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import datagen, export, quantize, specs
+
+
+@pytest.fixture(scope="module")
+def exported(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("arts"))
+    spec, w = specs.build("lenet5")
+    xs, _ = datagen.dataset_for(spec, 2, seed=1)
+    quantize.calibrate(spec, w, xs)
+    doc = export.export_model(spec, w, out)
+    ys = export.export_golden_io(spec, w, xs, out)
+    return out, spec, w, doc, xs, ys
+
+
+def _decode_tensor(blob: bytes, entry: dict) -> np.ndarray:
+    off, size = entry["offset"], entry["size"]
+    if entry["dtype"] == "i8":
+        raw = np.frombuffer(blob[off:off + size], dtype=np.int8)
+    else:
+        raw = np.frombuffer(blob[off:off + 4 * size], dtype="<i4")
+    return raw.astype(np.int32).reshape(entry["shape"])
+
+
+def test_weights_roundtrip(exported):
+    out, spec, w, doc, _, _ = exported
+    blob = open(os.path.join(out, "models", "lenet5.bin"), "rb").read()
+    assert len(doc["tensors"]) == len(w)
+    for entry in doc["tensors"]:
+        got = _decode_tensor(blob, entry)
+        np.testing.assert_array_equal(got, np.asarray(w[entry["name"]]),
+                                      err_msg=entry["name"])
+
+
+def test_json_loads_and_has_shifts(exported):
+    out, *_ = exported
+    doc = json.load(open(os.path.join(out, "models", "lenet5.json")))
+    assert doc["name"] == "lenet5"
+    for layer in doc["layers"]:
+        if layer["op"] in ("conv2d", "dwconv2d", "dense"):
+            assert isinstance(layer["shift"], int)
+
+
+def test_golden_io_roundtrip(exported):
+    out, spec, w, _, xs, ys = exported
+    meta = json.load(open(os.path.join(out, "data", "lenet5_io.json")))
+    assert meta["n"] == xs.shape[0]
+    x_raw = np.frombuffer(
+        open(os.path.join(out, "data", "lenet5_x.bin"), "rb").read(),
+        dtype=np.int8).reshape(xs.shape)
+    np.testing.assert_array_equal(x_raw.astype(np.int32), xs)
+    y_raw = np.frombuffer(
+        open(os.path.join(out, "data", "lenet5_y.bin"), "rb").read(),
+        dtype="<i4").reshape(ys.shape)
+    np.testing.assert_array_equal(y_raw, ys)
+
+
+def test_tensor_offsets_non_overlapping(exported):
+    _, _, _, doc, _, _ = exported
+    spans = []
+    for e in doc["tensors"]:
+        nbytes = e["size"] * (1 if e["dtype"] == "i8" else 4)
+        spans.append((e["offset"], e["offset"] + nbytes))
+    spans.sort()
+    for (a0, a1), (b0, _) in zip(spans, spans[1:]):
+        assert a1 <= b0

@@ -1,0 +1,174 @@
+"""L1 correctness: every Pallas kernel vs its independent jnp oracle.
+
+Hypothesis sweeps shapes, strides, padding, shifts and dtypes — this is the
+CORE correctness signal for the compute layer of the AOT artifact.
+Comparisons are exact (integer semantics) except the float sweep, which uses
+allclose.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+S = settings(max_examples=25, deadline=None)
+
+
+def _arr(rng, shape, lo=-128, hi=128):
+    return jnp.asarray(rng.integers(lo, hi, size=shape), jnp.int32)
+
+
+conv_params = st.tuples(
+    st.integers(1, 5),     # ic
+    st.integers(1, 6),     # oc
+    st.integers(1, 6),     # k
+    st.integers(1, 3),     # stride
+    st.integers(0, 2),     # pad
+    st.integers(4, 12),    # ih
+    st.integers(4, 12),    # iw
+    st.integers(0, 12),    # shift
+    st.booleans(),         # relu
+    st.integers(0, 2**32 - 1),
+)
+
+
+@given(conv_params)
+@S
+def test_conv2d_vs_ref(p):
+    ic, oc, k, stride, pad, ih, iw, shift, relu, seed = p
+    if ih + 2 * pad < k or iw + 2 * pad < k:
+        return
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (ic, ih, iw))
+    w = _arr(rng, (oc, ic, k, k), -127)
+    b = _arr(rng, (oc,), -1000, 1000)
+    got = kernels.conv2d(x, w, b, stride=stride, pad=pad, shift=shift,
+                         relu=relu)
+    want = ref.conv2d_ref(x, w, b, stride=stride, pad=pad, shift=shift,
+                          relu=relu)
+    assert got.shape == want.shape
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(conv_params)
+@S
+def test_dwconv2d_vs_ref(p):
+    c, _, k, stride, pad, ih, iw, shift, relu, seed = p
+    if ih + 2 * pad < k or iw + 2 * pad < k:
+        return
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (c, ih, iw))
+    w = _arr(rng, (c, k, k), -127)
+    b = _arr(rng, (c,), -1000, 1000)
+    got = kernels.dwconv2d(x, w, b, stride=stride, pad=pad, shift=shift,
+                           relu=relu)
+    want = ref.dwconv2d_ref(x, w, b, stride=stride, pad=pad, shift=shift,
+                            relu=relu)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(st.integers(1, 64), st.integers(1, 16), st.integers(0, 14),
+       st.booleans(), st.integers(0, 2**32 - 1))
+@S
+def test_dense_vs_ref(i, o, shift, relu, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (i,))
+    w = _arr(rng, (o, i), -127)
+    b = _arr(rng, (o,), -1000, 1000)
+    got = kernels.dense(x, w, b, shift=shift, relu=relu)
+    want = ref.dense_ref(x, w, b, shift=shift, relu=relu)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(st.integers(1, 6), st.integers(2, 4), st.integers(1, 3),
+       st.integers(4, 12), st.integers(0, 2**32 - 1))
+@S
+def test_maxpool_vs_ref(c, k, stride, hw, seed):
+    if hw < k:
+        return
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (c, hw, hw))
+    got = kernels.maxpool(x, k=k, stride=stride)
+    want = ref.maxpool_ref(x, k=k, stride=stride)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(st.integers(1, 6), st.integers(1, 3), st.integers(4, 12),
+       st.integers(0, 2**32 - 1))
+@S
+def test_avgpool2d_vs_ref(c, stride, hw, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (c, hw, hw))
+    got = kernels.avgpool2d(x, k=2, stride=stride)
+    want = ref.avgpool2d_ref(x, k=2, stride=stride)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(st.integers(1, 8), st.sampled_from([1, 2, 4, 8]),
+       st.integers(0, 2**32 - 1))
+@S
+def test_avgpool_global_vs_ref(c, hw, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (c, hw, hw))
+    shift = (hw * hw - 1).bit_length()
+    got = kernels.avgpool_global(x, shift=shift)
+    want = ref.avgpool_global_ref(x, shift=shift)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(st.integers(1, 6), st.integers(2, 10), st.booleans(),
+       st.integers(0, 2**32 - 1))
+@S
+def test_add_vs_ref(c, hw, relu, seed):
+    rng = np.random.default_rng(seed)
+    a = _arr(rng, (c, hw, hw))
+    b = _arr(rng, (c, hw, hw))
+    got = kernels.add(a, b, relu=relu)
+    want = ref.add_ref(a, b, relu=relu)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(st.integers(1, 8), st.integers(0, 12), st.booleans(),
+       st.integers(0, 2**32 - 1))
+@S
+def test_requantize_vs_quant(c, shift, relu, seed):
+    from compile.quant import requant
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(-(2**20), 2**20, size=(c, 3, 3)), jnp.int32)
+    got = kernels.requantize(x, shift=shift, relu=relu)
+    want = requant(x, shift, relu)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---- float dtype sweep -----------------------------------------------------
+
+@given(st.integers(1, 4), st.integers(1, 4), st.integers(1, 4),
+       st.integers(1, 2), st.integers(0, 1), st.integers(4, 9),
+       st.integers(0, 2**32 - 1))
+@S
+def test_conv2d_f32_vs_ref(ic, oc, k, stride, pad, hw, seed):
+    if hw + 2 * pad < k:
+        return
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(ic, hw, hw)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(oc, ic, k, k)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(oc,)), jnp.float32)
+    got = kernels.conv2d_f32(x, w, b, stride=stride, pad=pad)
+    want = ref.conv2d_ref_f32(x, w, b, stride=stride, pad=pad)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(1, 32), st.integers(1, 8), st.integers(0, 2**32 - 1))
+@S
+def test_dense_f32_vs_matmul(i, o, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(i,)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(o, i)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(o,)), jnp.float32)
+    got = kernels.dense_f32(x, w, b)
+    want = jnp.matmul(w, x) + b
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)

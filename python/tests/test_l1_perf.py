@@ -1,0 +1,40 @@
+"""L1 structural perf analyzer: VMEM budgets and MXU utilization estimates
+(DESIGN.md §8) over the real model zoo."""
+
+from compile import l1_perf, quantize, specs, datagen
+
+
+def _spec(name):
+    spec, w = specs.build(name)
+    xs, _ = datagen.dataset_for(spec, 2, seed=1)
+    quantize.calibrate(spec, w, xs)
+    return spec
+
+
+def test_kernel_size_recovery():
+    spec = _spec("lenet5")
+    conv1 = spec["layers"][0]
+    assert l1_perf._k_of(conv1) == 6  # Table 9: 6x6 kernels
+
+
+def test_conv_block_stats_math():
+    st = l1_perf.conv_block_stats((128, 16, 16), 3, 64)
+    # x: 128*16*16*4 + w: 128*9*4 + out bound: 16*16*4
+    assert st["vmem_bytes"] == 128 * 256 * 4 + 128 * 9 * 4 + 256 * 4
+    assert st["reduction"] == 128 * 9
+    # 1152 reduction -> padded to 1152 (9*128): perfect utilization
+    assert st["mxu_util"] == 1.0
+    assert st["vmem_ok"]
+
+
+def test_all_zoo_models_fit_vmem():
+    for name in specs.MODEL_NAMES:
+        r = l1_perf.analyze_spec(_spec(name))
+        assert r["all_fit_vmem"], name
+        assert 0.0 < r["mean_mxu_util"] <= 1.0
+
+
+def test_util_padded_lanes():
+    # reduction of 1 pads to 128 lanes: 1/128 utilization
+    st = l1_perf.conv_block_stats((1, 4, 4), 1, 1)
+    assert abs(st["mxu_util"] - 1 / 128) < 1e-9

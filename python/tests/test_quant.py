@@ -1,0 +1,69 @@
+"""Unit tests for the quantized-arithmetic contract (compile.quant).
+
+These pin down the exact semantics the rust side mirrors
+(rust/src/quant/mod.rs) — especially rounding of negative accumulators,
+which is where a naive C-style division would diverge from srai.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.quant import (INT8_MAX, INT8_MIN, requant, requant_np,
+                           round_shift, saturating_add, quantize_weights_np)
+
+
+def test_round_shift_zero_is_identity():
+    x = jnp.arange(-10, 10, dtype=jnp.int32)
+    assert (round_shift(x, 0) == x).all()
+
+
+def test_round_shift_half_up_positive():
+    # (5 + 2) >> 2 = 1 ; (6 + 2) >> 2 = 2  (ties round up)
+    assert int(round_shift(jnp.int32(5), 2)) == 1
+    assert int(round_shift(jnp.int32(6), 2)) == 2
+    assert int(round_shift(jnp.int32(7), 2)) == 2
+
+
+def test_round_shift_negative_is_arithmetic():
+    # srai semantics: (-5 + 2) >> 2 = -3 >> 2 = -1 (floor of -0.75)
+    assert int(round_shift(jnp.int32(-5), 2)) == -1
+    # (-6 + 2) >> 2 = -1 ; (-7 + 2) >> 2 = -2
+    assert int(round_shift(jnp.int32(-6), 2)) == -1
+    assert int(round_shift(jnp.int32(-7), 2)) == -2
+
+
+@given(st.integers(-10**7, 10**7), st.integers(0, 20))
+@settings(max_examples=200, deadline=None)
+def test_round_shift_matches_float_round_half_up(acc, s):
+    got = int(round_shift(jnp.int32(acc), s))
+    want = int(np.floor(acc / (1 << s) + 0.5)) if s else acc
+    assert got == want
+
+
+@given(st.integers(-10**7, 10**7), st.integers(0, 16), st.booleans())
+@settings(max_examples=200, deadline=None)
+def test_requant_np_matches_jnp(acc, s, relu):
+    a = int(requant(jnp.int32(acc), s, relu))
+    b = int(requant_np(np.array([acc]), s, relu)[0])
+    assert a == b
+
+
+@given(st.integers(INT8_MIN, INT8_MAX), st.integers(INT8_MIN, INT8_MAX))
+@settings(max_examples=100, deadline=None)
+def test_saturating_add_range(a, b):
+    out = int(saturating_add(jnp.int32(a), jnp.int32(b)))
+    assert INT8_MIN <= out <= INT8_MAX
+    assert out == max(INT8_MIN, min(INT8_MAX, a + b))
+
+
+def test_quantize_weights_symmetric():
+    w = np.array([-1.0, 0.5, 1.0])
+    q, s = quantize_weights_np(w)
+    assert q.tolist() == [-127, 64, 127]
+    assert abs(s - 1 / 127) < 1e-9
+
+
+def test_quantize_weights_zero_tensor():
+    q, s = quantize_weights_np(np.zeros((3, 3)))
+    assert (q == 0).all() and s == 1.0

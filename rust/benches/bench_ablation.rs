@@ -1,0 +1,18 @@
+//! Ablation bench: standalone contribution of each ISA extension (cores the
+//! paper never synthesized — mac-only, add2i-only, fusedmac-only, zol-only,
+//! pairs-without-quad) vs the cumulative v0→v4 ladder, answering the
+//! §II.C.3 "is fusedmac redundant?" question quantitatively.
+
+#[path = "common.rs"]
+mod common;
+
+use marvel::coordinator::experiments::{ablation, available_models};
+
+fn main() {
+    let Some(arts) = common::artifacts() else { return };
+    let models = available_models(&arts);
+    let secs = common::time_runs(0, 1, || {
+        println!("{}", ablation::render(&arts, &models).unwrap());
+    });
+    common::report("ablation/all-models", secs, None);
+}

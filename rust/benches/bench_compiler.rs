@@ -1,0 +1,34 @@
+//! §Perf bench: compiler throughput — spec → planned → rewritten → flattened
+//! → encoded machine code, per variant, on the largest available model.
+
+#[path = "common.rs"]
+mod common;
+
+use marvel::compiler::compile;
+use marvel::models::synth::residual_net;
+use marvel::sim::VARIANTS;
+
+fn main() {
+    let specs: Vec<(String, marvel::compiler::spec::ModelSpec)> =
+        match common::artifacts() {
+            Some(arts) => marvel::models::load_available(&arts)
+                .into_iter()
+                .collect(),
+            None => vec![("residual(synth)".into(), residual_net(3))],
+        };
+
+    for (name, spec) in &specs {
+        for v in VARIANTS {
+            let c = compile(spec, v).unwrap();
+            let n_instrs = c.instrs.len() as f64;
+            let secs = common::time_runs(1, 5, || {
+                let _ = compile(spec, v).unwrap();
+            });
+            common::report(
+                &format!("compile/{name}/{} ({} instrs)", v.name, c.instrs.len()),
+                secs,
+                Some((n_instrs, "instr")),
+            );
+        }
+    }
+}

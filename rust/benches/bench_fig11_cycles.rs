@@ -1,0 +1,22 @@
+//! Regenerates Fig 11 (cycle & instruction counts per model × variant, with
+//! golden verification) — the paper's core performance figure — and times
+//! the end-to-end flow per model.
+
+#[path = "common.rs"]
+mod common;
+
+use marvel::coordinator::experiments::{available_models, fig11_cycles};
+use marvel::coordinator::{run_flow, FlowOptions};
+
+fn main() {
+    let Some(arts) = common::artifacts() else { return };
+    let opts = FlowOptions::default();
+    let mut flows = Vec::new();
+    for m in available_models(&arts) {
+        let secs = common::time_runs(0, 1, || {
+            flows.push(run_flow(&arts, &m, &opts).unwrap());
+        });
+        common::report(&format!("fig11/flow/{m}"), secs, None);
+    }
+    println!("\n{}", fig11_cycles::render(&flows));
+}

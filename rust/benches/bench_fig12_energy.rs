@@ -1,0 +1,22 @@
+//! Regenerates Fig 12 (energy per inference, eq. 1) across the model zoo.
+
+#[path = "common.rs"]
+mod common;
+
+use marvel::coordinator::experiments::{available_models, fig12_energy};
+use marvel::coordinator::{run_flow, FlowOptions};
+
+fn main() {
+    let Some(arts) = common::artifacts() else { return };
+    let opts = FlowOptions::default();
+    let flows: Vec<_> = available_models(&arts)
+        .iter()
+        .map(|m| run_flow(&arts, m, &opts).unwrap())
+        .collect();
+    println!("{}", fig12_energy::render(&flows));
+    // the energy model itself is trivially cheap; time the render
+    let secs = common::time_runs(5, 50, || {
+        let _ = fig12_energy::render(&flows);
+    });
+    common::report("fig12/render", secs, None);
+}

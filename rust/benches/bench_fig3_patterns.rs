@@ -1,0 +1,17 @@
+//! Regenerates Fig 3 (pattern execution counts on v0 across the model zoo)
+//! and times the profiling pass.
+
+#[path = "common.rs"]
+mod common;
+
+use marvel::coordinator::experiments::{available_models, fig3_patterns};
+
+fn main() {
+    let Some(arts) = common::artifacts() else { return };
+    let models = available_models(&arts);
+    let secs = common::time_runs(0, 1, || {
+        let table = fig3_patterns::render(&arts, &models).unwrap();
+        println!("{table}");
+    });
+    common::report("fig3/profile-all-models", secs, None);
+}

@@ -1,0 +1,17 @@
+//! Regenerates Fig 4 (consecutive-addi immediate histogram + the add2i
+//! 5/10-bit coverage analysis) across the model zoo.
+
+#[path = "common.rs"]
+mod common;
+
+use marvel::coordinator::experiments::{available_models, fig4_addi_hist};
+
+fn main() {
+    let Some(arts) = common::artifacts() else { return };
+    let models = available_models(&arts);
+    let secs = common::time_runs(0, 1, || {
+        let out = fig4_addi_hist::render(&arts, &models, 10).unwrap();
+        println!("{out}");
+    });
+    common::report("fig4/histogram-all-models", secs, None);
+}

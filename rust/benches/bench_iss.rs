@@ -1,0 +1,58 @@
+//! §Perf L3 bench: raw simulator throughput (instructions/second) on the
+//! real LeNet-5* workload, v0 and v4, with and without the profiling hook.
+//! Target (DESIGN.md §10): ≥100 M instr/s in the NopHook configuration.
+
+#[path = "common.rs"]
+mod common;
+
+use marvel::compiler::{compile, execute_compiled, load_input, make_sim};
+use marvel::models::synth::{lenet_shaped, Builder};
+use marvel::profiler::ProfileHook;
+use marvel::sim::{NopHook, V0, V4};
+use marvel::util::rng::Rng;
+
+fn main() {
+    let (spec, input) = match common::artifacts() {
+        Some(arts) => {
+            let spec = marvel::models::load(&arts, "lenet5").unwrap();
+            let io = marvel::runtime::load_golden_io(&arts, "lenet5").unwrap();
+            (spec, io.inputs[0].clone())
+        }
+        None => {
+            let spec = lenet_shaped(1);
+            let mut rng = Rng::new(1);
+            let input = Builder::random_input(&spec, &mut rng);
+            (spec, input)
+        }
+    };
+
+    for variant in [V0, V4] {
+        let c = compile(&spec, variant).unwrap();
+        let (_, stats) =
+            execute_compiled(&c, &spec, &input, 1 << 36, &mut NopHook).unwrap();
+        // steady-state: reuse one sim, re-inject input, reset cpu
+        let mut sim = make_sim(&c).unwrap();
+        let secs = common::time_runs(2, 10, || {
+            sim.reset_cpu();
+            load_input(&mut sim, &c, &input).unwrap();
+            sim.run_fast(1 << 36).unwrap();
+        });
+        common::report(
+            &format!("iss/{}/nop-hook ({} instrs)", variant.name, stats.instrs),
+            secs,
+            Some((stats.instrs as f64, "instr")),
+        );
+
+        let secs = common::time_runs(1, 5, || {
+            sim.reset_cpu();
+            load_input(&mut sim, &c, &input).unwrap();
+            let mut hook = ProfileHook::new(c.words.len());
+            sim.run(1 << 36, &mut hook).unwrap();
+        });
+        common::report(
+            &format!("iss/{}/profile-hook", variant.name),
+            secs,
+            Some((stats.instrs as f64, "instr")),
+        );
+    }
+}

@@ -1,0 +1,22 @@
+//! Regenerates Table 10 (data/program memory per model × variant).
+
+#[path = "common.rs"]
+mod common;
+
+use marvel::coordinator::experiments::{available_models, table10_memory};
+use marvel::coordinator::{run_flow, FlowOptions};
+
+fn main() {
+    let Some(arts) = common::artifacts() else { return };
+    // memory numbers need compilation only; flow with 1 input keeps it cheap
+    let opts = FlowOptions { n_inputs: 1, ..FlowOptions::default() };
+    let flows: Vec<_> = available_models(&arts)
+        .iter()
+        .map(|m| run_flow(&arts, m, &opts).unwrap())
+        .collect();
+    println!("{}", table10_memory::render(&flows));
+    let secs = common::time_runs(0, 1, || {
+        let _ = table10_memory::render(&flows);
+    });
+    common::report("table10/render", secs, None);
+}

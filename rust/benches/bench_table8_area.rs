@@ -1,0 +1,16 @@
+//! Regenerates Table 8 (FPGA utilisation per variant) and Fig 10 (relative
+//! proportions) from the calibrated area/power model.
+
+#[path = "common.rs"]
+mod common;
+
+use marvel::coordinator::experiments::table8_area;
+
+fn main() {
+    println!("{}", table8_area::render());
+    println!("{}", table8_area::render_fig10());
+    let secs = common::time_runs(10, 100, || {
+        let _ = table8_area::render();
+    });
+    common::report("table8/render", secs, None);
+}

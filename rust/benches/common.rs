@@ -1,0 +1,58 @@
+//! Shared micro-benchmark harness for the `cargo bench` targets (criterion
+//! is unavailable offline).  Reports min/median/mean over N timed runs after
+//! warmup, plus a derived throughput line.
+
+use std::time::Instant;
+
+/// Time `f` `iters` times (after `warmup` runs); returns per-run seconds.
+pub fn time_runs<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut out = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        out.push(t0.elapsed().as_secs_f64());
+    }
+    out
+}
+
+/// Render a stats line: `name: median 12.3 ms (min 11.9, mean 12.5) [x units/s]`.
+pub fn report(name: &str, mut secs: Vec<f64>, work: Option<(f64, &str)>) {
+    secs.sort_by(f64::total_cmp);
+    let min = secs[0];
+    let median = secs[secs.len() / 2];
+    let mean: f64 = secs.iter().sum::<f64>() / secs.len() as f64;
+    let mut line = format!(
+        "{name}: median {} (min {}, mean {})",
+        fmt_t(median),
+        fmt_t(min),
+        fmt_t(mean)
+    );
+    if let Some((units, label)) = work {
+        line.push_str(&format!("  [{:.1} M{label}/s]", units / median / 1e6));
+    }
+    println!("{line}");
+}
+
+fn fmt_t(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.1} µs", s * 1e6)
+    }
+}
+
+/// Artifacts dir if the models are exported (benches degrade gracefully).
+pub fn artifacts() -> Option<std::path::PathBuf> {
+    let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if p.join("models").join("lenet5.json").exists() {
+        Some(p)
+    } else {
+        println!("NOTE: artifacts not built — run `make artifacts` for the full bench");
+        None
+    }
+}

@@ -1,0 +1,576 @@
+//! Structured assembly: the compiler's internal program form.
+//!
+//! Generated DNN code is a tree of *counted loops* over straight-line
+//! instructions (TVM-style: every trip count is a compile-time constant —
+//! exactly the property the paper's `zol` extension exploits, §II.C.4).
+//! [`Item`] captures that structure; [`flatten`] lowers it to a flat
+//! instruction vector per processor variant:
+//!
+//! * v0–v3: count-down loops (`li ctr, n; L: body; addi ctr,ctr,-1;
+//!   blt x0, ctr, L`), falling back to a `beq`+`jal` epilogue when the body
+//!   exceeds the ±4 KiB branch reach;
+//! * v4: *innermost* loops become zero-overhead hardware loops
+//!   (`dlpi`/`dlp`), eliminating both the `blt` and the counter update —
+//!   the paper's Fig 5 transformation.
+//!
+//! The clamp pseudo-items expand to a fixed-offset forward branch over a
+//! single `mv`, so no label machinery is needed anywhere: all other control
+//! flow is structured.
+
+use anyhow::{bail, Result};
+
+use crate::isa::{AluImmOp, AluOp, BranchOp, Instr, Reg};
+use crate::sim::Variant;
+
+/// Register convention of the generated code (documented in DESIGN.md §4):
+/// the MAC datapath registers are fixed by the ISA extension itself.
+pub const ACC: Reg = crate::isa::MAC_RD; // x20: accumulator
+pub const OPA: Reg = crate::isa::MAC_RS1; // x21: multiplicand (loaded value)
+pub const OPB: Reg = crate::isa::MAC_RS2; // x22: multiplier (loaded weight)
+pub const SCR: Reg = 23; // x23: mul scratch (dead after accumulate)
+
+/// Loop counters, assigned by nesting depth.  Loops lower to the count-up
+/// form TVM-generated C compiles to (`addi ctr,ctr,1; blt ctr,lim,L` —
+/// paper Fig 5), so each depth also holds its limit in [`LIMIT_POOL`].
+pub const COUNTER_POOL: [Reg; 6] = [5, 6, 7, 9, 28, 29];
+/// Loop limits, by nesting depth.
+pub const LIMIT_POOL: [Reg; 6] = [30, 31, 1, 2, 3, 4];
+/// Pointer registers (per-layer, allocated by codegen).
+pub const PTR_POOL: [Reg; 8] = [10, 11, 12, 13, 14, 15, 16, 17];
+/// Constant registers (per-layer, allocated by codegen).
+pub const CONST_POOL: [Reg; 7] = [24, 25, 26, 27, 18, 19, 8];
+
+/// Structured assembly item.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Item {
+    /// A concrete straight-line instruction.
+    Op(Instr),
+    /// Counted loop with a compile-time trip count (n executions of body).
+    Loop { n: u32, body: Vec<Item> },
+    /// `reg = max(reg, bound)` — `bge reg, bound, +8; mv reg, bound`.
+    ClampBelow { reg: Reg, bound: Reg },
+    /// `reg = min(reg, bound)` — `bge bound, reg, +8; mv reg, bound`.
+    ClampAbove { reg: Reg, bound: Reg },
+}
+
+/// How many flat instructions an item expands to (branch-form loops).
+fn flat_len(item: &Item, variant: &Variant, depth: usize) -> Result<usize> {
+    Ok(match item {
+        Item::Op(_) => 1,
+        Item::ClampBelow { .. } | Item::ClampAbove { .. } => 2,
+        Item::Loop { n, body } => {
+            let inner: usize = body
+                .iter()
+                .map(|i| flat_len(i, variant, depth + 1))
+                .sum::<Result<usize>>()?;
+            match loop_form(*n, body, inner, variant)? {
+                LoopForm::Skip => 0,
+                LoopForm::Once => inner,
+                LoopForm::Zol { setup } => setup + inner,
+                // li ctr,0 + li lim,n + body + addi + branch [+ jal]
+                LoopForm::Blt { li_len } => 1 + li_len + inner + 2,
+                LoopForm::BeqJal { li_len } => 1 + li_len + inner + 3,
+            }
+        }
+    })
+}
+
+enum LoopForm {
+    Skip,
+    Once,
+    /// dlpi (setup 1) or li+dlp (setup depends on count size)
+    Zol { setup: usize },
+    Blt { li_len: usize },
+    BeqJal { li_len: usize },
+}
+
+fn li_len(v: i32) -> usize {
+    if (-2048..=2047).contains(&v) {
+        1
+    } else if v & 0xfff == 0 {
+        1
+    } else {
+        2
+    }
+}
+
+fn is_innermost(body: &[Item]) -> bool {
+    body.iter().all(|i| !matches!(i, Item::Loop { .. }))
+}
+
+fn loop_form(
+    n: u32,
+    body: &[Item],
+    inner_len: usize,
+    variant: &Variant,
+) -> Result<LoopForm> {
+    if n == 0 {
+        return Ok(LoopForm::Skip);
+    }
+    if n == 1 {
+        return Ok(LoopForm::Once);
+    }
+    if variant.zol && is_innermost(body) && inner_len >= 1 && inner_len <= 4095 {
+        let setup = if n <= 31 { 1 } else { li_len(n as i32) + 1 };
+        return Ok(LoopForm::Zol { setup });
+    }
+    // branch-form: blt reach is body + the counter addi (offset -(4*(L+1)))
+    let l = li_len(n as i32);
+    if inner_len + 1 <= 1023 {
+        Ok(LoopForm::Blt { li_len: l })
+    } else if inner_len <= 200_000 {
+        Ok(LoopForm::BeqJal { li_len: l })
+    } else {
+        bail!("loop body too large to lower: {inner_len} instrs");
+    }
+}
+
+/// Emit `li rd, v` (1–2 instructions).
+pub fn emit_li(rd: Reg, v: i32, out: &mut Vec<Instr>) {
+    if (-2048..=2047).contains(&v) {
+        out.push(Instr::OpImm { op: AluImmOp::Addi, rd, rs1: 0, imm: v });
+    } else {
+        // hi/lo split with carry correction for negative lo
+        let lo = ((v << 20) >> 20) as i32; // sign-extended low 12
+        let hi = v.wrapping_sub(lo);
+        out.push(Instr::Lui { rd, imm: hi });
+        if lo != 0 {
+            out.push(Instr::OpImm { op: AluImmOp::Addi, rd, rs1: rd, imm: lo });
+        }
+    }
+}
+
+/// Statistics from flattening (zol adoption count feeds the reports).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FlattenStats {
+    pub zol_loops: u64,
+    pub blt_loops: u64,
+    pub jal_loops: u64,
+    pub inlined_once: u64,
+}
+
+/// Lower structured items to flat instructions for `variant`.
+pub fn flatten(
+    items: &[Item],
+    variant: &Variant,
+    out: &mut Vec<Instr>,
+    stats: &mut FlattenStats,
+) -> Result<()> {
+    flatten_at(items, variant, 0, out, stats)
+}
+
+fn flatten_at(
+    items: &[Item],
+    variant: &Variant,
+    depth: usize,
+    out: &mut Vec<Instr>,
+    stats: &mut FlattenStats,
+) -> Result<()> {
+    for item in items {
+        match item {
+            Item::Op(i) => out.push(*i),
+            Item::ClampBelow { reg, bound } => {
+                // bge reg, bound, +8 ; mv reg, bound
+                out.push(Instr::Branch {
+                    op: BranchOp::Bge,
+                    rs1: *reg,
+                    rs2: *bound,
+                    offset: 8,
+                });
+                out.push(Instr::Op {
+                    op: AluOp::Add,
+                    rd: *reg,
+                    rs1: *bound,
+                    rs2: 0,
+                });
+            }
+            Item::ClampAbove { reg, bound } => {
+                out.push(Instr::Branch {
+                    op: BranchOp::Bge,
+                    rs1: *bound,
+                    rs2: *reg,
+                    offset: 8,
+                });
+                out.push(Instr::Op {
+                    op: AluOp::Add,
+                    rd: *reg,
+                    rs1: *bound,
+                    rs2: 0,
+                });
+            }
+            Item::Loop { n, body } => {
+                let mut inner = Vec::new();
+                flatten_at(body, variant, depth + 1, &mut inner, stats)?;
+                match loop_form(*n, body, inner.len(), variant)? {
+                    LoopForm::Skip => {}
+                    LoopForm::Once => {
+                        stats.inlined_once += 1;
+                        out.extend(inner);
+                    }
+                    LoopForm::Zol { .. } => {
+                        stats.zol_loops += 1;
+                        let len = inner.len() as u16;
+                        if *n <= 31 {
+                            out.push(Instr::Dlpi { count: *n as u8, body_len: len });
+                        } else {
+                            if depth >= COUNTER_POOL.len() {
+                                bail!("loop nesting too deep: {depth}");
+                            }
+                            let ctr = COUNTER_POOL[depth];
+                            emit_li(ctr, *n as i32, out);
+                            out.push(Instr::Dlp { rs1: ctr, body_len: len });
+                        }
+                        out.extend(inner);
+                    }
+                    form @ (LoopForm::Blt { .. } | LoopForm::BeqJal { .. }) => {
+                        if depth >= COUNTER_POOL.len() {
+                            bail!("loop nesting too deep: {depth}");
+                        }
+                        // count-up form, as TVM-compiled C (paper Fig 5):
+                        //   li ctr, 0 ; li lim, n
+                        //   L: body ; addi ctr,ctr,1 ; blt ctr,lim,L
+                        let ctr = COUNTER_POOL[depth];
+                        let lim = LIMIT_POOL[depth];
+                        emit_li(ctr, 0, out);
+                        emit_li(lim, *n as i32, out);
+                        let top = out.len();
+                        out.extend(inner);
+                        out.push(Instr::OpImm {
+                            op: AluImmOp::Addi,
+                            rd: ctr,
+                            rs1: ctr,
+                            imm: 1,
+                        });
+                        match form {
+                            LoopForm::Blt { .. } => {
+                                stats.blt_loops += 1;
+                                let dist = (out.len() - top + 1) as i32;
+                                out.push(Instr::Branch {
+                                    op: BranchOp::Blt,
+                                    rs1: ctr,
+                                    rs2: lim,
+                                    offset: -4 * (dist - 1),
+                                });
+                            }
+                            LoopForm::BeqJal { .. } => {
+                                stats.jal_loops += 1;
+                                out.push(Instr::Branch {
+                                    op: BranchOp::Bge,
+                                    rs1: ctr,
+                                    rs2: lim,
+                                    offset: 8,
+                                });
+                                let dist = (out.len() - top) as i32;
+                                out.push(Instr::Jal { rd: 0, offset: -4 * dist });
+                            }
+                            _ => unreachable!(),
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Total flat length without emitting (used by planners/reports).
+pub fn measure(items: &[Item], variant: &Variant) -> Result<usize> {
+    items.iter().map(|i| flat_len(i, variant, 0)).sum()
+}
+
+// ---------------------------------------------------------------------------
+// Emission context used by the per-op code generators
+// ---------------------------------------------------------------------------
+
+/// Builder over `Vec<Item>` with loop scoping and per-layer register pools.
+pub struct Emit {
+    pub items: Vec<Item>,
+    next_ptr: usize,
+    next_const: usize,
+    consts: Vec<(i32, Reg)>,
+}
+
+impl Default for Emit {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Emit {
+    pub fn new() -> Self {
+        Emit { items: Vec::new(), next_ptr: 0, next_const: 0, consts: Vec::new() }
+    }
+
+    /// Allocate a pointer register (per-layer; panics on exhaustion — the
+    /// templates are written to fit the pool).
+    pub fn ptr_reg(&mut self) -> Reg {
+        assert!(
+            self.next_ptr < PTR_POOL.len(),
+            "pointer register pool exhausted"
+        );
+        let r = PTR_POOL[self.next_ptr];
+        self.next_ptr += 1;
+        r
+    }
+
+    /// Materialize a constant in a register (deduplicated per layer).
+    /// Must be called before entering the loops that use it.
+    pub fn const_reg(&mut self, v: i32) -> Reg {
+        if let Some(&(_, r)) = self.consts.iter().find(|(cv, _)| *cv == v) {
+            return r;
+        }
+        assert!(
+            self.next_const < CONST_POOL.len(),
+            "constant register pool exhausted"
+        );
+        let r = CONST_POOL[self.next_const];
+        self.next_const += 1;
+        self.li(r, v);
+        self.consts.push((v, r));
+        r
+    }
+
+    pub fn op(&mut self, i: Instr) {
+        self.items.push(Item::Op(i));
+    }
+
+    /// `li rd, v` (pseudo).
+    pub fn li(&mut self, rd: Reg, v: i32) {
+        let mut tmp = Vec::new();
+        emit_li(rd, v, &mut tmp);
+        for i in tmp {
+            self.op(i);
+        }
+    }
+
+    /// `mv rd, rs`.
+    pub fn mv(&mut self, rd: Reg, rs: Reg) {
+        self.op(Instr::Op { op: AluOp::Add, rd, rs1: rs, rs2: 0 });
+    }
+
+    /// `addi rd, rd, imm` — or register-add for out-of-range immediates
+    /// (the caller must have materialized the constant *outside* loops via
+    /// [`Emit::const_reg`] when it knows the bump is loop-resident; this
+    /// convenience handles the in-range case only).
+    pub fn bump(&mut self, rd: Reg, imm: i32) {
+        if imm == 0 {
+            return;
+        }
+        assert!(
+            (-2048..=2047).contains(&imm),
+            "bump immediate out of range: {imm} (materialize a const reg)"
+        );
+        self.op(Instr::OpImm { op: AluImmOp::Addi, rd, rs1: rd, imm });
+    }
+
+    /// `add rd, rd, creg` for a (typically large/negative) constant bump.
+    pub fn bump_by_reg(&mut self, rd: Reg, creg: Reg) {
+        self.op(Instr::Op { op: AluOp::Add, rd, rs1: rd, rs2: creg });
+    }
+
+    /// Counted loop with structured body.
+    pub fn loop_n(&mut self, n: u32, f: impl FnOnce(&mut Emit)) {
+        if n == 0 {
+            return;
+        }
+        let saved = std::mem::take(&mut self.items);
+        f(self);
+        let body = std::mem::replace(&mut self.items, saved);
+        self.items.push(Item::Loop { n, body });
+    }
+
+    pub fn clamp_below(&mut self, reg: Reg, bound: Reg) {
+        self.items.push(Item::ClampBelow { reg, bound });
+    }
+
+    pub fn clamp_above(&mut self, reg: Reg, bound: Reg) {
+        self.items.push(Item::ClampAbove { reg, bound });
+    }
+
+    /// lb rd, 0(rs)
+    pub fn lb(&mut self, rd: Reg, rs: Reg) {
+        self.op(Instr::Load { op: crate::isa::LoadOp::Lb, rd, rs1: rs, offset: 0 });
+    }
+
+    /// sb rs2, 0(rs1)
+    pub fn sb(&mut self, rs2: Reg, rs1: Reg) {
+        self.op(Instr::Store { op: crate::isa::StoreOp::Sb, rs2, rs1, offset: 0 });
+    }
+
+    /// lw rd, 0(rs)
+    pub fn lw(&mut self, rd: Reg, rs: Reg) {
+        self.op(Instr::Load { op: crate::isa::LoadOp::Lw, rd, rs1: rs, offset: 0 });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{Sim, V0, V4};
+
+    fn run(items: &[Item], variant: Variant) -> (Sim, crate::sim::RunStats) {
+        let mut out = Vec::new();
+        let mut st = FlattenStats::default();
+        flatten(items, &variant, &mut out, &mut st).unwrap();
+        out.push(Instr::Ecall);
+        let mut sim = Sim::from_instrs(variant, out, 1 << 16).unwrap();
+        let stats = sim.run_fast(10_000_000).unwrap();
+        (sim, stats)
+    }
+
+    fn addi(rd: Reg, rs1: Reg, imm: i32) -> Item {
+        Item::Op(Instr::OpImm { op: AluImmOp::Addi, rd, rs1, imm })
+    }
+
+    #[test]
+    fn nested_loops_execute_correct_trip_counts() {
+        // x1 counts total inner iterations: 3 * 4 = 12
+        let items = vec![Item::Loop {
+            n: 3,
+            body: vec![Item::Loop { n: 4, body: vec![addi(1, 1, 1)] }],
+        }];
+        let (sim, _) = run(&items, V0);
+        assert_eq!(sim.regs[1], 12);
+        let (sim, _) = run(&items, V4);
+        assert_eq!(sim.regs[1], 12);
+    }
+
+    #[test]
+    fn v4_innermost_uses_zol() {
+        let items = vec![Item::Loop {
+            n: 3,
+            body: vec![Item::Loop { n: 4, body: vec![addi(1, 1, 1)] }],
+        }];
+        let mut out = Vec::new();
+        let mut st = FlattenStats::default();
+        flatten(&items, &V4, &mut out, &mut st).unwrap();
+        assert_eq!(st.zol_loops, 1);
+        assert_eq!(st.blt_loops, 1);
+        assert!(out.iter().any(|i| matches!(i, Instr::Dlpi { .. })));
+        // v0 version must not contain custom instructions
+        let mut out0 = Vec::new();
+        let mut st0 = FlattenStats::default();
+        flatten(&items, &V0, &mut out0, &mut st0).unwrap();
+        assert!(out0.iter().all(|i| !i.is_custom()));
+        assert_eq!(st0.blt_loops, 2);
+    }
+
+    #[test]
+    fn v4_saves_cycles_vs_v0() {
+        let items = vec![Item::Loop { n: 100, body: vec![addi(1, 1, 1)] }];
+        let (_, s0) = run(&items, V0);
+        let (_, s4) = run(&items, V4);
+        assert!(s4.cycles < s0.cycles, "v4 {} !< v0 {}", s4.cycles, s0.cycles);
+        // v0: li + 100*(addi+addi+blt[2c taken,1 last]) ;
+        // v4: count 100 > 31 -> li + dlp + 100 addi (+ ecall)
+        assert_eq!(s4.cycles, 2 + 100 + 1);
+    }
+
+    #[test]
+    fn loop_count_one_inlined_and_zero_skipped() {
+        let items = vec![
+            Item::Loop { n: 1, body: vec![addi(1, 1, 5)] },
+            Item::Loop { n: 0, body: vec![addi(1, 1, 100)] },
+        ];
+        let (sim, _) = run(&items, V0);
+        assert_eq!(sim.regs[1], 5);
+    }
+
+    #[test]
+    fn clamps() {
+        // x1 = max(min(x1, 100), -5) for x1 = 300
+        let items = vec![
+            addi(1, 0, 300),
+            addi(2, 0, 100),
+            addi(3, 0, -5),
+            Item::ClampAbove { reg: 1, bound: 2 },
+            Item::ClampBelow { reg: 1, bound: 3 },
+        ];
+        let (sim, _) = run(&items, V0);
+        assert_eq!(sim.regs[1], 100);
+        let items = vec![
+            addi(1, 0, -300),
+            addi(2, 0, 100),
+            addi(3, 0, -5),
+            Item::ClampAbove { reg: 1, bound: 2 },
+            Item::ClampBelow { reg: 1, bound: 3 },
+        ];
+        let (sim, _) = run(&items, V0);
+        assert_eq!(sim.regs[1], -5);
+    }
+
+    #[test]
+    fn clamp_as_last_item_of_zol_body() {
+        // The clamp's forward branch target == ZE: loop-back must still fire.
+        let items = vec![Item::Loop {
+            n: 5,
+            body: vec![
+                addi(1, 1, 10),
+                addi(2, 0, 25),
+                Item::ClampAbove { reg: 1, bound: 2 },
+            ],
+        }];
+        let (sim, _) = run(&items, V4);
+        assert_eq!(sim.regs[1], 25);
+        let (sim0, _) = run(&items, V0);
+        assert_eq!(sim0.regs[1], 25);
+    }
+
+    #[test]
+    fn big_body_uses_jal_form() {
+        // body of 1500 instructions exceeds blt reach
+        let body: Vec<Item> = (0..1500).map(|_| addi(1, 1, 1)).collect();
+        let items = vec![Item::Loop { n: 3, body }];
+        let mut out = Vec::new();
+        let mut st = FlattenStats::default();
+        flatten(&items, &V0, &mut out, &mut st).unwrap();
+        assert_eq!(st.jal_loops, 1);
+        let mut sim = {
+            let mut prog = out.clone();
+            prog.push(Instr::Ecall);
+            Sim::from_instrs(V0, prog, 64).unwrap()
+        };
+        sim.run_fast(10_000_000).unwrap();
+        assert_eq!(sim.regs[1], 4500);
+    }
+
+    #[test]
+    fn li_expansion() {
+        let mut out = Vec::new();
+        emit_li(1, 5, &mut out);
+        assert_eq!(out.len(), 1);
+        emit_li(1, 0x12345, &mut out);
+        assert_eq!(out.len(), 3); // lui+addi
+        // verify semantics on the sim for tricky values
+        for v in [0, 1, -1, 2047, -2048, 2048, -2049, 0x7fff_ffff,
+                  i32::MIN, 0x1000, 0xfff, -4096] {
+            let mut prog = Vec::new();
+            emit_li(1, v, &mut prog);
+            prog.push(Instr::Ecall);
+            let mut sim = Sim::from_instrs(V0, prog, 64).unwrap();
+            sim.run_fast(10).unwrap();
+            assert_eq!(sim.regs[1], v, "li {v:#x}");
+        }
+    }
+
+    #[test]
+    fn measure_matches_flatten() {
+        let items = vec![
+            addi(1, 0, 3),
+            Item::Loop {
+                n: 7,
+                body: vec![
+                    addi(1, 1, 1),
+                    Item::ClampAbove { reg: 1, bound: 2 },
+                    Item::Loop { n: 40, body: vec![addi(2, 2, 1)] },
+                ],
+            },
+        ];
+        for v in [V0, V4] {
+            let mut out = Vec::new();
+            let mut st = FlattenStats::default();
+            flatten(&items, &v, &mut out, &mut st).unwrap();
+            assert_eq!(out.len(), measure(&items, &v).unwrap(), "{}", v.name);
+        }
+    }
+}

@@ -1,0 +1,207 @@
+//! Conv2d / depthwise-conv templates — the paper's hot spot.
+//!
+//! Loop nest (standard TVM scalar schedule, NCHW):
+//!
+//! ```text
+//! for oc { bias_v = bias[oc]; wrow = wp
+//!   for oy { for ox {
+//!     acc = bias_v; wp = wrow
+//!     for ic { for ky { for kx {          // kx innermost -> zol on v4
+//!       x21 = lb [xp]; x22 = lb [wp]
+//!       x23 = mul x21, x22; x20 += x23    // -> mac
+//!       xp += 1; wp += 1                  // -> add2i; all 4 -> fusedmac
+//!     } xp += WP-KW } xp += (HP-KH)*WP }
+//!     xp += S - IC*HP*WP                  // strength-reduced fixups
+//!     requant(acc); sb [op]; op += 1
+//!   } xp += S*WP - OW*S }
+//!   xp -= OH*S*WP; bp += 4
+//! }
+//! ```
+//!
+//! Depthwise drops the `ic` loop and advances the channel base per `c`.
+
+use anyhow::{ensure, Result};
+
+use super::{emit_pad_copy, Bump, Requant};
+use crate::compiler::asm::{Emit, ACC, OPA, OPB, SCR};
+use crate::compiler::plan::Plan;
+use crate::compiler::spec::{Layer, ModelSpec};
+use crate::isa::{AluOp, Instr};
+
+pub fn emit(
+    e: &mut Emit,
+    spec: &ModelSpec,
+    plan: &Plan,
+    li: usize,
+    layer: &Layer,
+) -> Result<()> {
+    match layer {
+        Layer::Conv2d {
+            input, w, b, stride, pad, shift, relu, in_shape, out_shape,
+        } => {
+            let wt = spec.tensor(w)?;
+            let (kh, kw) = (wt.shape[2], wt.shape[3]);
+            emit_conv(
+                e,
+                ConvGeo {
+                    x_addr: plan.src_addr(*input),
+                    scratch: plan.scratch_addr[li],
+                    w_addr: plan.weight(w)?,
+                    b_addr: plan.weight(b)?,
+                    o_addr: plan.layer_out_addr[li],
+                    in_shape: *in_shape,
+                    out_shape: *out_shape,
+                    kh,
+                    kw,
+                    stride: *stride,
+                    pad: *pad,
+                    shift: *shift,
+                    relu: *relu,
+                    depthwise: false,
+                },
+            )
+        }
+        Layer::DwConv2d {
+            input, w, b, stride, pad, shift, relu, in_shape, out_shape,
+        } => {
+            let wt = spec.tensor(w)?;
+            let (kh, kw) = (wt.shape[1], wt.shape[2]);
+            emit_conv(
+                e,
+                ConvGeo {
+                    x_addr: plan.src_addr(*input),
+                    scratch: plan.scratch_addr[li],
+                    w_addr: plan.weight(w)?,
+                    b_addr: plan.weight(b)?,
+                    o_addr: plan.layer_out_addr[li],
+                    in_shape: *in_shape,
+                    out_shape: *out_shape,
+                    kh,
+                    kw,
+                    stride: *stride,
+                    pad: *pad,
+                    shift: *shift,
+                    relu: *relu,
+                    depthwise: true,
+                },
+            )
+        }
+        _ => unreachable!("conv::emit on non-conv layer"),
+    }
+}
+
+struct ConvGeo {
+    x_addr: u32,
+    scratch: Option<u32>,
+    w_addr: u32,
+    b_addr: u32,
+    o_addr: u32,
+    in_shape: [usize; 3],
+    out_shape: [usize; 3],
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    shift: u32,
+    relu: bool,
+    depthwise: bool,
+}
+
+fn emit_conv(e: &mut Emit, g: ConvGeo) -> Result<()> {
+    let [ic, ih, iw] = g.in_shape;
+    let [oc, oh, ow] = g.out_shape;
+    let (s, kh, kw) = (g.stride as i64, g.kh as i64, g.kw as i64);
+
+    // padded geometry (scratch buffer) or raw
+    let (xb, hp, wp_len) = if g.pad > 0 {
+        let scratch = g.scratch.expect("planner must provide pad scratch");
+        emit_pad_copy(e, g.x_addr, scratch, ic, ih, iw, g.pad)?;
+        (scratch, (ih + 2 * g.pad) as i64, (iw + 2 * g.pad) as i64)
+    } else {
+        (g.x_addr, ih as i64, iw as i64)
+    };
+
+    ensure!(
+        (oh as i64 - 1) * s + kh <= hp && (ow as i64 - 1) * s + kw <= wp_len,
+        "conv geometry out of bounds"
+    );
+
+    // pointer registers
+    let xp = e.ptr_reg();
+    let wp = e.ptr_reg();
+    let op = e.ptr_reg();
+    let bp = e.ptr_reg();
+    let wrow = e.ptr_reg();
+    let bias_v = e.ptr_reg();
+
+    // requant + loop-tail fixup constants (materialized outside the loops)
+    let rq = Requant::new(e, g.shift, g.relu);
+    let icl = if g.depthwise { 1i64 } else { ic as i64 }; // reduction chans
+    let d_ky = Bump::new(e, wp_len - kw);
+    let d_ic = Bump::new(e, (hp - kh) * wp_len);
+    // after the reduction, rewind to this (oy,ox) anchor, then step +s.
+    // conv rewinds IC channels; depthwise stays inside the current channel.
+    let d_ox = Bump::new(e, s - icl * hp * wp_len);
+    let d_oy = Bump::new(e, s * wp_len - (ow as i64) * s);
+    // per-oc tail: conv rewinds to XB; depthwise advances to next channel.
+    let d_oc = if g.depthwise {
+        Bump::new(e, hp * wp_len - (oh as i64) * s * wp_len)
+    } else {
+        Bump::new(e, -((oh as i64) * s * wp_len))
+    };
+
+    e.li(xp, xb as i32);
+    e.li(wp, g.w_addr as i32);
+    e.li(bp, g.b_addr as i32);
+    e.li(op, g.o_addr as i32);
+
+    e.loop_n(oc as u32, |e| {
+        e.lw(bias_v, bp); // bias_v = bias[oc]
+        e.mv(wrow, wp); // weight row anchor for this output channel
+        e.loop_n(oh as u32, |e| {
+            e.loop_n(ow as u32, |e| {
+                e.mv(ACC, bias_v);
+                e.mv(wp, wrow);
+                let reduction = |e: &mut Emit| {
+                    e.loop_n(kh as u32, |e| {
+                        e.loop_n(kw as u32, |e| {
+                            e.lb(OPA, xp);
+                            e.lb(OPB, wp);
+                            e.op(Instr::Op {
+                                op: AluOp::Mul,
+                                rd: SCR,
+                                rs1: OPA,
+                                rs2: OPB,
+                            });
+                            e.op(Instr::Op {
+                                op: AluOp::Add,
+                                rd: ACC,
+                                rs1: ACC,
+                                rs2: SCR,
+                            });
+                            e.bump(xp, 1);
+                            e.bump(wp, 1);
+                        });
+                        d_ky.apply(e, xp);
+                    });
+                    d_ic.apply(e, xp);
+                };
+                if g.depthwise {
+                    reduction(e);
+                } else {
+                    e.loop_n(ic as u32, reduction);
+                }
+                d_ox.apply(e, xp);
+                rq.apply(e);
+                e.sb(ACC, op);
+                e.bump(op, 1);
+            });
+            d_oy.apply(e, xp);
+        });
+        d_oc.apply(e, xp);
+        // wp ends the oc body at wrow + row_len: the next iteration's
+        // `mv wrow, wp` picks it up as the new anchor.
+        e.bump(bp, 4);
+    });
+    Ok(())
+}

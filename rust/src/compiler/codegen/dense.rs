@@ -1,0 +1,59 @@
+//! Fully-connected template: the purest mac/zol workload (one long
+//! reduction per output neuron).
+
+use anyhow::Result;
+
+use super::{Bump, Requant};
+use crate::compiler::asm::{Emit, ACC, OPA, OPB, SCR};
+use crate::compiler::plan::Plan;
+use crate::compiler::spec::{Layer, ModelSpec};
+use crate::isa::{AluOp, Instr};
+
+pub fn emit(
+    e: &mut Emit,
+    spec: &ModelSpec,
+    plan: &Plan,
+    li: usize,
+    layer: &Layer,
+) -> Result<()> {
+    let Layer::Dense { input, w, b, shift, relu, in_len, out_len } = layer
+    else {
+        unreachable!("dense::emit on non-dense layer")
+    };
+    let _ = spec;
+    let x_addr = plan.src_addr(*input);
+    let w_addr = plan.weight(w)?;
+    let b_addr = plan.weight(b)?;
+    let o_addr = plan.layer_out_addr[li];
+
+    let xp = e.ptr_reg();
+    let wp = e.ptr_reg();
+    let op = e.ptr_reg();
+    let bp = e.ptr_reg();
+
+    let rq = Requant::new(e, *shift, *relu);
+    let d_o = Bump::new(e, -(*in_len as i64)); // rewind x per output neuron
+
+    e.li(xp, x_addr as i32);
+    e.li(wp, w_addr as i32);
+    e.li(bp, b_addr as i32);
+    e.li(op, o_addr as i32);
+
+    e.loop_n(*out_len as u32, |e| {
+        e.lw(ACC, bp); // acc = bias[o]
+        e.loop_n(*in_len as u32, |e| {
+            e.lb(OPA, xp);
+            e.lb(OPB, wp);
+            e.op(Instr::Op { op: AluOp::Mul, rd: SCR, rs1: OPA, rs2: OPB });
+            e.op(Instr::Op { op: AluOp::Add, rd: ACC, rs1: ACC, rs2: SCR });
+            e.bump(xp, 1);
+            e.bump(wp, 1);
+        });
+        d_o.apply(e, xp);
+        rq.apply(e);
+        e.sb(ACC, op);
+        e.bump(op, 1);
+        e.bump(bp, 4);
+    });
+    Ok(())
+}

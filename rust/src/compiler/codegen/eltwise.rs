@@ -1,0 +1,86 @@
+//! Elementwise templates: residual add (saturating int8) and channel concat
+//! (pure copies).  These are the glue ops of the ResNet / MobileNetV2 /
+//! DenseNet model classes.
+
+use anyhow::Result;
+
+use crate::compiler::asm::{Emit, ACC, OPA, OPB};
+use crate::compiler::plan::Plan;
+use crate::compiler::spec::Layer;
+use crate::isa::{AluOp, Instr};
+
+pub fn emit(e: &mut Emit, plan: &Plan, li: usize, layer: &Layer) -> Result<()> {
+    match layer {
+        Layer::Add { a, b, relu, shape } => {
+            let n: usize = shape.iter().product();
+            emit_add(
+                e,
+                plan.src_addr(*a),
+                plan.src_addr(*b),
+                plan.layer_out_addr[li],
+                n,
+                *relu,
+            )
+        }
+        Layer::Concat { inputs, in_shapes, .. } => {
+            let srcs: Vec<(u32, usize)> = inputs
+                .iter()
+                .zip(in_shapes)
+                .map(|(&i, s)| (plan.src_addr(i), s.iter().product()))
+                .collect();
+            emit_concat(e, &srcs, plan.layer_out_addr[li])
+        }
+        _ => unreachable!("eltwise::emit on non-eltwise layer"),
+    }
+}
+
+fn emit_add(
+    e: &mut Emit,
+    a_addr: u32,
+    b_addr: u32,
+    o_addr: u32,
+    n: usize,
+    relu: bool,
+) -> Result<()> {
+    let pa = e.ptr_reg();
+    let pb = e.ptr_reg();
+    let po = e.ptr_reg();
+    let lo = e.const_reg(-128);
+    let hi = e.const_reg(127);
+
+    e.li(pa, a_addr as i32);
+    e.li(pb, b_addr as i32);
+    e.li(po, o_addr as i32);
+    e.loop_n(n as u32, |e| {
+        e.lb(OPA, pa);
+        e.lb(OPB, pb);
+        e.op(Instr::Op { op: AluOp::Add, rd: ACC, rs1: OPA, rs2: OPB });
+        // saturate to int8, then the optional ReLU floor (x0 == 0)
+        e.clamp_below(ACC, lo);
+        e.clamp_above(ACC, hi);
+        if relu {
+            e.clamp_below(ACC, 0);
+        }
+        e.sb(ACC, po);
+        e.bump(pa, 1);
+        e.bump(pb, 1);
+        e.bump(po, 1);
+    });
+    Ok(())
+}
+
+fn emit_concat(e: &mut Emit, srcs: &[(u32, usize)], o_addr: u32) -> Result<()> {
+    let ps = e.ptr_reg();
+    let po = e.ptr_reg();
+    e.li(po, o_addr as i32);
+    for &(src, n) in srcs {
+        e.li(ps, src as i32);
+        e.loop_n(n as u32, |e| {
+            e.lb(OPA, ps);
+            e.sb(OPA, po);
+            e.bump(ps, 1);
+            e.bump(po, 1);
+        });
+    }
+    Ok(())
+}

@@ -1,0 +1,178 @@
+//! Code generation: one RV32 template per operator.
+//!
+//! The templates emit the same code *class* as TVM's generated C compiled
+//! for a scalar RV32IM core: perfectly nested counted loops, pointer-walking
+//! address arithmetic (`addi` bumps with strength-reduced loop-tail fixups),
+//! int8 loads (`lb`), int32 accumulation (`mul`+`add` on the fixed
+//! x21/x22 → x20 datapath), and shift-requantization.  That code shape is
+//! the whole point: it is what makes the paper's profile (Fig 3) show the
+//! mac / add2i / fusedmac / blt patterns, and what the rewrite passes then
+//! fuse per variant.
+//!
+//! Layer boundaries never share registers: every template allocates its
+//! pointers/constants fresh from the per-layer pools in [`asm::Emit`].
+
+pub mod conv;
+pub mod dense;
+pub mod eltwise;
+pub mod pool;
+
+use anyhow::{Context, Result};
+
+use super::asm::{Emit, ACC};
+use super::plan::Plan;
+use super::spec::{Layer, ModelSpec};
+use crate::isa::{AluImmOp, Instr, Reg};
+
+/// Emit the code for one layer.
+pub fn emit_layer(
+    e: &mut Emit,
+    spec: &ModelSpec,
+    plan: &Plan,
+    li: usize,
+    layer: &Layer,
+) -> Result<()> {
+    match layer {
+        Layer::Conv2d { .. } | Layer::DwConv2d { .. } => {
+            conv::emit(e, spec, plan, li, layer)
+        }
+        Layer::Dense { .. } => dense::emit(e, spec, plan, li, layer),
+        Layer::MaxPool { .. } | Layer::AvgPool2d { .. }
+        | Layer::AvgPoolGlobal { .. } => pool::emit(e, plan, li, layer),
+        Layer::Add { .. } | Layer::Concat { .. } => {
+            eltwise::emit(e, plan, li, layer)
+        }
+    }
+    .with_context(|| format!("codegen for layer {li} ({})", layer.op_name()))
+}
+
+/// Pointer bump by `delta`: `addi` when in range, otherwise an `add` with a
+/// pre-materialized constant register.  Constants MUST be materialized
+/// before the enclosing loops, so callers pass a closure that was already
+/// resolved — use [`Bump`] built at template setup time.
+#[derive(Clone, Copy, Debug)]
+pub enum Bump {
+    None,
+    Imm(i32),
+    Reg(Reg),
+}
+
+impl Bump {
+    /// Decide the bump form for `delta`, materializing a constant register
+    /// now (i.e. at template setup, outside all loops) when needed.
+    pub fn new(e: &mut Emit, delta: i64) -> Self {
+        if delta == 0 {
+            Bump::None
+        } else if (-2048..=2047).contains(&delta) {
+            Bump::Imm(delta as i32)
+        } else {
+            let r = e.const_reg(i32::try_from(delta).expect("bump overflow"));
+            Bump::Reg(r)
+        }
+    }
+
+    /// Apply to pointer register `rd` at the current emission point.
+    pub fn apply(&self, e: &mut Emit, rd: Reg) {
+        match self {
+            Bump::None => {}
+            Bump::Imm(v) => e.bump(rd, *v),
+            Bump::Reg(r) => e.bump_by_reg(rd, *r),
+        }
+    }
+}
+
+/// Requantization constants, materialized once per layer.
+pub struct Requant {
+    pub shift: u32,
+    /// `1 << (shift-1)` — an `addi` immediate when it fits, else a register.
+    rnd: Option<Bump>,
+    lo: Reg,
+    hi: Reg,
+}
+
+impl Requant {
+    /// Set up constants (call at template setup, outside loops).
+    pub fn new(e: &mut Emit, shift: u32, relu: bool) -> Self {
+        let rnd = (shift > 0).then(|| Bump::new(e, 1i64 << (shift - 1)));
+        // relu floor is 0 == x0: no constant register needed
+        let lo = if relu { 0 } else { e.const_reg(-128) };
+        let hi = e.const_reg(127);
+        Requant { shift, rnd, lo, hi }
+    }
+
+    /// Requantize the accumulator (x20) in place: round-shift + clamp.
+    pub fn apply(&self, e: &mut Emit) {
+        if let Some(rnd) = &self.rnd {
+            match rnd {
+                Bump::Imm(v) => e.op(Instr::OpImm {
+                    op: AluImmOp::Addi,
+                    rd: ACC,
+                    rs1: ACC,
+                    imm: *v,
+                }),
+                Bump::Reg(r) => e.op(Instr::Op {
+                    op: crate::isa::AluOp::Add,
+                    rd: ACC,
+                    rs1: ACC,
+                    rs2: *r,
+                }),
+                Bump::None => {}
+            }
+            e.op(Instr::OpImm {
+                op: AluImmOp::Srai,
+                rd: ACC,
+                rs1: ACC,
+                imm: self.shift as i32,
+            });
+        }
+        e.clamp_below(ACC, self.lo);
+        e.clamp_above(ACC, self.hi);
+    }
+}
+
+/// Pad-copy stage: memset a scratch buffer to zero, then copy the source
+/// activation into its interior (the TVM pad stage; used by conv/dw with
+/// pad > 0 so the hot loops stay branch-free).
+pub fn emit_pad_copy(
+    e: &mut Emit,
+    src: u32,
+    dst: u32,
+    c: usize,
+    h: usize,
+    w: usize,
+    pad: usize,
+) -> Result<()> {
+    use crate::compiler::asm::OPA;
+    let wp = w + 2 * pad;
+    let hp = h + 2 * pad;
+    let total = (c * hp * wp) as u32;
+
+    let pd = e.ptr_reg();
+    let ps = e.ptr_reg();
+
+    // memset(dst, 0, total)
+    e.li(pd, dst as i32);
+    e.loop_n(total, |e| {
+        e.sb(0, pd); // store x0
+        e.bump(pd, 1);
+    });
+
+    // copy rows into the interior
+    let skip_cols = Bump::new(e, (2 * pad) as i64);
+    let skip_rows = Bump::new(e, (2 * pad * wp) as i64);
+    e.li(ps, src as i32);
+    e.li(pd, (dst as usize + pad * wp + pad) as i32);
+    e.loop_n(c as u32, |e| {
+        e.loop_n(h as u32, |e| {
+            e.loop_n(w as u32, |e| {
+                e.lb(OPA, ps);
+                e.sb(OPA, pd);
+                e.bump(ps, 1);
+                e.bump(pd, 1);
+            });
+            skip_cols.apply(e, pd);
+        });
+        skip_rows.apply(e, pd);
+    });
+    Ok(())
+}

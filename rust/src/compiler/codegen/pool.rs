@@ -1,0 +1,153 @@
+//! Pooling templates: max, windowed average, global average.
+//!
+//! Same pointer-walking loop scheme as the conv template, minus weights.
+//! Max pooling accumulates with the branch-based `max` idiom (ClampBelow),
+//! average pooling sums and round-shifts by log2(window).
+
+use anyhow::Result;
+
+use super::{Bump, Requant};
+use crate::compiler::asm::{Emit, ACC, OPA};
+use crate::compiler::plan::Plan;
+use crate::compiler::spec::Layer;
+use crate::isa::{AluOp, Instr};
+
+pub fn emit(e: &mut Emit, plan: &Plan, li: usize, layer: &Layer) -> Result<()> {
+    match layer {
+        Layer::MaxPool { input, k, stride, in_shape, out_shape } => {
+            emit_window_pool(
+                e,
+                plan.src_addr(*input),
+                plan.layer_out_addr[li],
+                *in_shape,
+                *out_shape,
+                *k,
+                *stride,
+                PoolKind::Max,
+            )
+        }
+        Layer::AvgPool2d { input, k, stride, shift, in_shape, out_shape } => {
+            emit_window_pool(
+                e,
+                plan.src_addr(*input),
+                plan.layer_out_addr[li],
+                *in_shape,
+                *out_shape,
+                *k,
+                *stride,
+                PoolKind::Avg { shift: *shift },
+            )
+        }
+        Layer::AvgPoolGlobal { input, shift, in_shape, .. } => {
+            emit_global_pool(
+                e,
+                plan.src_addr(*input),
+                plan.layer_out_addr[li],
+                *in_shape,
+                *shift,
+            )
+        }
+        _ => unreachable!("pool::emit on non-pool layer"),
+    }
+}
+
+enum PoolKind {
+    Max,
+    Avg { shift: u32 },
+}
+
+#[allow(clippy::too_many_arguments)]
+fn emit_window_pool(
+    e: &mut Emit,
+    x_addr: u32,
+    o_addr: u32,
+    in_shape: [usize; 3],
+    out_shape: [usize; 3],
+    k: usize,
+    stride: usize,
+    kind: PoolKind,
+) -> Result<()> {
+    let [c, ih, iw] = in_shape;
+    let [_, oh, ow] = out_shape;
+    let (s, kl, ihl, iwl) = (stride as i64, k as i64, ih as i64, iw as i64);
+
+    let xp = e.ptr_reg();
+    let op = e.ptr_reg();
+
+    // max needs the int8 floor as init; avg needs requant consts
+    let (init_lo, rq) = match kind {
+        PoolKind::Max => (Some(e.const_reg(-128)), None),
+        PoolKind::Avg { shift } => (None, Some(Requant::new(e, shift, false))),
+    };
+    let d_ky = Bump::new(e, iwl - kl);
+    let d_ox = Bump::new(e, s - kl * iwl);
+    let d_oy = Bump::new(e, s * iwl - (ow as i64) * s);
+    let d_c = Bump::new(e, ihl * iwl - (oh as i64) * s * iwl);
+
+    e.li(xp, x_addr as i32);
+    e.li(op, o_addr as i32);
+
+    e.loop_n(c as u32, |e| {
+        e.loop_n(oh as u32, |e| {
+            e.loop_n(ow as u32, |e| {
+                match init_lo {
+                    Some(lo) => e.mv(ACC, lo), // acc = -128
+                    None => e.mv(ACC, 0),      // acc = 0
+                }
+                e.loop_n(k as u32, |e| {
+                    e.loop_n(k as u32, |e| {
+                        e.lb(OPA, xp);
+                        match kind {
+                            PoolKind::Max => e.clamp_below(ACC, OPA),
+                            PoolKind::Avg { .. } => e.op(Instr::Op {
+                                op: AluOp::Add,
+                                rd: ACC,
+                                rs1: ACC,
+                                rs2: OPA,
+                            }),
+                        }
+                        e.bump(xp, 1);
+                    });
+                    d_ky.apply(e, xp);
+                });
+                d_ox.apply(e, xp);
+                if let Some(rq) = &rq {
+                    rq.apply(e);
+                }
+                e.sb(ACC, op);
+                e.bump(op, 1);
+            });
+            d_oy.apply(e, xp);
+        });
+        d_c.apply(e, xp);
+    });
+    Ok(())
+}
+
+fn emit_global_pool(
+    e: &mut Emit,
+    x_addr: u32,
+    o_addr: u32,
+    in_shape: [usize; 3],
+    shift: u32,
+) -> Result<()> {
+    let [c, h, w] = in_shape;
+    let xp = e.ptr_reg();
+    let op = e.ptr_reg();
+    let rq = Requant::new(e, shift, false);
+
+    e.li(xp, x_addr as i32);
+    e.li(op, o_addr as i32);
+    e.loop_n(c as u32, |e| {
+        e.mv(ACC, 0);
+        e.loop_n((h * w) as u32, |e| {
+            e.lb(OPA, xp);
+            e.op(Instr::Op { op: AluOp::Add, rd: ACC, rs1: ACC, rs2: OPA });
+            e.bump(xp, 1);
+        });
+        rq.apply(e);
+        e.sb(ACC, op);
+        e.bump(op, 1);
+    });
+    Ok(())
+}

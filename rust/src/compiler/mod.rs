@@ -1,0 +1,225 @@
+//! The MARVEL compiler: model spec → planned memory → structured RV32
+//! assembly → variant-specific rewrites → flat machine code.
+//!
+//! This module stands in for the paper's TVM → Chess pipeline (§II.A/§II.D):
+//! it consumes the same model description the JAX side AOT-exports, emits
+//! TVM-class loop nests ([`codegen`]), applies the `chess_rewrite`-style
+//! fusion passes ([`rewrite`]) per processor variant, and lowers counted
+//! loops to `blt` or zero-overhead hardware loops ([`asm::flatten`]).
+
+pub mod asm;
+pub mod codegen;
+pub mod plan;
+pub mod rewrite;
+pub mod spec;
+
+use anyhow::{Context, Result};
+
+use crate::isa::encode::encode;
+use crate::isa::Instr;
+use crate::sim::{RetireHook, RunStats, Sim, SimError, Variant};
+use asm::FlattenStats;
+use rewrite::RewriteStats;
+use spec::ModelSpec;
+
+/// A fully compiled model for one processor variant.
+pub struct Compiled {
+    pub variant: Variant,
+    pub instrs: Vec<Instr>,
+    /// Encoded machine words (PM image).
+    pub words: Vec<u32>,
+    pub plan: plan::Plan,
+    /// Per-layer [start, end) instruction index ranges.
+    pub layer_ranges: Vec<(usize, usize)>,
+    pub rewrite_stats: RewriteStats,
+    pub flatten_stats: FlattenStats,
+}
+
+impl Compiled {
+    /// Program-memory footprint in bytes (Table 10 PM column).
+    pub fn pm_bytes(&self) -> u32 {
+        (self.words.len() * 4) as u32
+    }
+
+    /// Data-memory footprint in bytes (Table 10 DM column).
+    pub fn dm_bytes(&self) -> u32 {
+        self.plan.dm_size
+    }
+}
+
+/// Compile a model for a processor variant.
+pub fn compile(spec: &ModelSpec, variant: Variant) -> Result<Compiled> {
+    spec.validate()?;
+    let plan = plan::plan(spec)?;
+    let mut instrs: Vec<Instr> = Vec::new();
+    let mut layer_ranges = Vec::new();
+    let mut rewrite_stats = RewriteStats::default();
+    let mut flatten_stats = FlattenStats::default();
+
+    for (li, layer) in spec.layers.iter().enumerate() {
+        let mut e = asm::Emit::new();
+        codegen::emit_layer(&mut e, spec, &plan, li, layer)?;
+        let rs = rewrite::apply(&mut e.items, &variant);
+        rewrite_stats.fusedmac += rs.fusedmac;
+        rewrite_stats.mac += rs.mac;
+        rewrite_stats.add2i += rs.add2i;
+        let start = instrs.len();
+        asm::flatten(&e.items, &variant, &mut instrs, &mut flatten_stats)
+            .with_context(|| format!("flatten layer {li}"))?;
+        layer_ranges.push((start, instrs.len()));
+    }
+    instrs.push(Instr::Ecall);
+
+    let words = instrs.iter().map(encode).collect();
+    Ok(Compiled {
+        variant,
+        instrs,
+        words,
+        plan,
+        layer_ranges,
+        rewrite_stats,
+        flatten_stats,
+    })
+}
+
+/// Instantiate a simulator with the compiled program + weights loaded.
+pub fn make_sim(c: &Compiled) -> Result<Sim, SimError> {
+    let mut sim =
+        Sim::from_instrs(c.variant, c.instrs.clone(), c.plan.dm_size as usize)?;
+    sim.mem
+        .write_block(c.plan.weights_base, &c.plan.weights_image)
+        .map_err(|fault| SimError::Mem { pc: 0, fault })?;
+    Ok(sim)
+}
+
+/// Write an int8 input tensor into the sim's DM.
+pub fn load_input(sim: &mut Sim, c: &Compiled, input: &[i32]) -> Result<()> {
+    let bytes: Vec<u8> = input
+        .iter()
+        .map(|&v| {
+            anyhow::ensure!(
+                (-128..=127).contains(&v),
+                "input value {v} out of int8 range"
+            );
+            Ok(v as i8 as u8)
+        })
+        .collect::<Result<_>>()?;
+    sim.mem
+        .write_block(c.plan.input_addr, &bytes)
+        .map_err(|fault| anyhow::anyhow!("input write fault at {:#x}", fault.addr))?;
+    Ok(())
+}
+
+/// Read the final logits back from DM.
+pub fn read_output(sim: &Sim, c: &Compiled, n: usize) -> Result<Vec<i32>> {
+    sim.mem
+        .read_i8s(c.plan.output_addr, n)
+        .map_err(|fault| anyhow::anyhow!("output read fault at {:#x}", fault.addr))
+}
+
+/// Compile-and-run convenience: one inference through the ISS.
+pub fn execute(
+    spec: &ModelSpec,
+    variant: Variant,
+    input: &[i32],
+    max_instrs: u64,
+) -> Result<(Vec<i32>, RunStats)> {
+    let c = compile(spec, variant)?;
+    execute_compiled(&c, spec, input, max_instrs, &mut crate::sim::NopHook)
+}
+
+/// Run one inference on an already-compiled model with a retire hook.
+pub fn execute_compiled<H: RetireHook>(
+    c: &Compiled,
+    spec: &ModelSpec,
+    input: &[i32],
+    max_instrs: u64,
+    hook: &mut H,
+) -> Result<(Vec<i32>, RunStats)> {
+    let mut sim = make_sim(c).map_err(|e| anyhow::anyhow!("{e}"))?;
+    load_input(&mut sim, c, input)?;
+    let stats = sim
+        .run(max_instrs, hook)
+        .map_err(|e| anyhow::anyhow!("simulation failed: {e}"))?;
+    let out = read_output(&sim, c, spec.output_elems())?;
+    Ok((out, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::synth::{lenet_shaped, residual_net, tiny_conv_net, Builder};
+    use crate::refexec;
+    use crate::sim::{VARIANTS, V0, V4};
+    use crate::util::rng::Rng;
+
+    fn check_model(spec: &ModelSpec, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let input = Builder::random_input(spec, &mut rng);
+        let want = refexec::run(spec, &input).unwrap();
+        for v in VARIANTS {
+            let (got, _) = execute(spec, v, &input, 500_000_000)
+                .unwrap_or_else(|e| panic!("{} on {}: {e}", spec.name, v.name));
+            assert_eq!(got, want, "{} on {}", spec.name, v.name);
+        }
+    }
+
+    #[test]
+    fn tiny_net_all_variants_match_reference() {
+        check_model(&tiny_conv_net(3), 100);
+    }
+
+    #[test]
+    fn lenet_shaped_all_variants_match_reference() {
+        check_model(&lenet_shaped(5), 101);
+    }
+
+    #[test]
+    fn residual_net_all_variants_match_reference() {
+        check_model(&residual_net(7), 102);
+    }
+
+    #[test]
+    fn v4_is_faster_and_smaller() {
+        let spec = lenet_shaped(9);
+        let mut rng = Rng::new(1);
+        let input = Builder::random_input(&spec, &mut rng);
+        let c0 = compile(&spec, V0).unwrap();
+        let c4 = compile(&spec, V4).unwrap();
+        let (_, s0) =
+            execute_compiled(&c0, &spec, &input, 1 << 32, &mut crate::sim::NopHook)
+                .unwrap();
+        let (_, s4) =
+            execute_compiled(&c4, &spec, &input, 1 << 32, &mut crate::sim::NopHook)
+                .unwrap();
+        assert!(
+            s4.cycles * 3 < s0.cycles * 2,
+            "expected >1.5x speedup: v0={} v4={}",
+            s0.cycles,
+            s4.cycles
+        );
+        assert!(c4.pm_bytes() < c0.pm_bytes());
+        assert!(c4.rewrite_stats.fusedmac > 0);
+        assert!(c4.flatten_stats.zol_loops > 0);
+    }
+
+    #[test]
+    fn rewrites_fire_per_variant() {
+        let spec = tiny_conv_net(11);
+        let c0 = compile(&spec, V0).unwrap();
+        assert_eq!(c0.rewrite_stats, RewriteStats::default());
+        assert!(c0.instrs.iter().all(|i| !i.is_custom()));
+        let c4 = compile(&spec, V4).unwrap();
+        assert!(c4.rewrite_stats.fusedmac > 0);
+        assert!(c4.rewrite_stats.add2i > 0);
+        assert!(c4.instrs.iter().any(|i| i.is_custom()));
+    }
+
+    #[test]
+    fn deterministic_compilation() {
+        let spec = tiny_conv_net(13);
+        let a = compile(&spec, V4).unwrap();
+        let b = compile(&spec, V4).unwrap();
+        assert_eq!(a.words, b.words);
+    }
+}

@@ -1,0 +1,318 @@
+//! Data-memory planner: lays out input, weights, activations and padding
+//! scratch in the core's DM (Table 10's "Data Memory" column).
+//!
+//! Weights and the model input are pinned; activation buffers are allocated
+//! with liveness-based reuse (a buffer dies after its last consumer), which
+//! is what keeps e.g. DenseNet's concat chains from exploding the footprint.
+//! Conv/dw layers with `pad > 0` additionally get a scratch buffer holding
+//! the zero-padded input for the duration of that layer only (the generated
+//! code pad-copies into it, like TVM's pad stage).
+
+use std::collections::BTreeMap;
+
+use anyhow::{ensure, Context, Result};
+
+use super::spec::{Dtype, Layer, ModelSpec};
+
+/// Word alignment for every allocation (the BRAM interface is 32-bit).
+const ALIGN: u32 = 4;
+
+fn align(v: u32) -> u32 {
+    v.div_ceil(ALIGN) * ALIGN
+}
+
+/// The complete DM layout for one compiled model.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    /// Total data memory needed (bytes) — the Table 10 DM number.
+    pub dm_size: u32,
+    /// Model input tensor (int8 bytes, CHW).
+    pub input_addr: u32,
+    /// Final layer output.
+    pub output_addr: u32,
+    /// Per-weight-tensor base address.
+    pub weight_addr: BTreeMap<String, u32>,
+    /// Per-layer output buffer base address.
+    pub layer_out_addr: Vec<u32>,
+    /// Per-layer padded-input scratch (conv/dw with pad > 0).
+    pub scratch_addr: Vec<Option<u32>>,
+    /// Bytes of weights (for reports).
+    pub weights_bytes: u32,
+    /// Peak activation bytes (for reports).
+    pub act_bytes: u32,
+    /// The initial DM image (weights only; input is injected at run time).
+    pub weights_image: Vec<u8>,
+    /// Offset where the weights image starts.
+    pub weights_base: u32,
+}
+
+/// Simple first-fit free-list allocator over a growing arena.
+struct Arena {
+    /// (addr, len) free blocks, sorted by addr.
+    free: Vec<(u32, u32)>,
+    base: u32,
+    top: u32,
+}
+
+impl Arena {
+    fn new(base: u32) -> Self {
+        Arena { free: Vec::new(), base, top: base }
+    }
+
+    fn alloc(&mut self, size: u32) -> u32 {
+        let size = align(size.max(1));
+        // best-fit over the free list to curb fragmentation
+        let mut best: Option<usize> = None;
+        for (i, &(_, len)) in self.free.iter().enumerate() {
+            if len >= size && best.is_none_or(|b| self.free[b].1 > len) {
+                best = Some(i);
+            }
+        }
+        if let Some(i) = best {
+            let (addr, len) = self.free[i];
+            if len == size {
+                self.free.remove(i);
+            } else {
+                self.free[i] = (addr + size, len - size);
+            }
+            return addr;
+        }
+        let addr = self.top;
+        self.top += size;
+        addr
+    }
+
+    fn free(&mut self, addr: u32, size: u32) {
+        let size = align(size.max(1));
+        // insert sorted + coalesce neighbours
+        let pos = self.free.partition_point(|&(a, _)| a < addr);
+        self.free.insert(pos, (addr, size));
+        let mut i = pos.saturating_sub(1);
+        while i + 1 < self.free.len() {
+            let (a0, l0) = self.free[i];
+            let (a1, l1) = self.free[i + 1];
+            if a0 + l0 == a1 {
+                self.free[i] = (a0, l0 + l1);
+                self.free.remove(i + 1);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    fn peak(&self) -> u32 {
+        self.top - self.base
+    }
+}
+
+/// Padded input scratch size (bytes) for a conv/dw layer, if any.
+pub fn scratch_bytes(layer: &Layer) -> Option<u32> {
+    match layer {
+        Layer::Conv2d { pad, in_shape, .. }
+        | Layer::DwConv2d { pad, in_shape, .. }
+            if *pad > 0 =>
+        {
+            let [c, h, w] = *in_shape;
+            Some((c * (h + 2 * pad) * (w + 2 * pad)) as u32)
+        }
+        _ => None,
+    }
+}
+
+/// Build the memory plan for a model.
+pub fn plan(spec: &ModelSpec) -> Result<Plan> {
+    // --- pinned regions: input, then weights ---
+    let input_addr = 0u32;
+    let mut cursor = align(spec.input_elems() as u32);
+
+    let weights_base = cursor;
+    let mut weight_addr = BTreeMap::new();
+    let mut image: Vec<u8> = Vec::new();
+    for (name, t) in &spec.tensors {
+        // keep `image` aligned with the running cursor
+        while (cursor + image.len() as u32) % ALIGN != 0 {
+            image.push(0);
+        }
+        let addr = weights_base + image.len() as u32;
+        weight_addr.insert(name.clone(), addr);
+        match t.dtype {
+            Dtype::I8 => {
+                for &v in &t.data {
+                    ensure!(
+                        (-128..=127).contains(&v),
+                        "tensor {name}: {v} out of int8 range"
+                    );
+                    image.push(v as i8 as u8);
+                }
+            }
+            Dtype::I32 => {
+                for &v in &t.data {
+                    image.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+        }
+    }
+    cursor = align(weights_base + image.len() as u32);
+    let weights_bytes = cursor - weights_base;
+
+    // --- activation arena with liveness ---
+    // last consumer index per layer output (the final layer lives forever)
+    let n = spec.layers.len();
+    ensure!(n > 0, "model has no layers");
+    let mut last_use = vec![0usize; n];
+    for (li, layer) in spec.layers.iter().enumerate() {
+        for i in layer.inputs() {
+            if i >= 0 {
+                last_use[i as usize] = li;
+            }
+        }
+    }
+    last_use[n - 1] = usize::MAX;
+
+    let mut arena = Arena::new(cursor);
+    let mut layer_out_addr = vec![0u32; n];
+    let mut scratch_addr = vec![None; n];
+    // (addr, size, dies_at)
+    let mut live: Vec<(u32, u32, usize)> = Vec::new();
+
+    for (li, layer) in spec.layers.iter().enumerate() {
+        // scratch for this layer (lives only during the layer itself)
+        let scratch = scratch_bytes(layer).map(|sz| {
+            let a = arena.alloc(sz);
+            (a, sz)
+        });
+        scratch_addr[li] = scratch.map(|(a, _)| a);
+
+        // output buffer
+        let out_sz = layer.out_elems() as u32;
+        let addr = arena.alloc(out_sz);
+        layer_out_addr[li] = addr;
+        live.push((addr, out_sz, last_use[li]));
+
+        // release the scratch now that the layer "ran"
+        if let Some((a, sz)) = scratch {
+            arena.free(a, sz);
+        }
+        // release buffers whose last consumer was this layer
+        live.retain(|&(a, sz, dies)| {
+            if dies == li {
+                arena.free(a, sz);
+                false
+            } else {
+                true
+            }
+        });
+    }
+
+    let act_bytes = arena.peak();
+    let output_addr = layer_out_addr[n - 1];
+    let dm_size = align(arena.top).max(64);
+
+    Ok(Plan {
+        dm_size,
+        input_addr,
+        output_addr,
+        weight_addr,
+        layer_out_addr,
+        scratch_addr,
+        weights_bytes,
+        act_bytes,
+        weights_image: image,
+        weights_base,
+    })
+}
+
+impl Plan {
+    /// Address of a weight tensor.
+    pub fn weight(&self, name: &str) -> Result<u32> {
+        self.weight_addr
+            .get(name)
+            .copied()
+            .with_context(|| format!("unplanned tensor {name:?}"))
+    }
+
+    /// Address of a layer input (-1 = model input).
+    pub fn src_addr(&self, idx: i32) -> u32 {
+        if idx == -1 {
+            self.input_addr
+        } else {
+            self.layer_out_addr[idx as usize]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::synth::tiny_conv_net;
+
+    #[test]
+    fn arena_reuses_freed_blocks() {
+        let mut a = Arena::new(0);
+        let x = a.alloc(100);
+        let y = a.alloc(50);
+        a.free(x, 100);
+        let z = a.alloc(60); // fits in the freed 100-block
+        assert_eq!(z, x);
+        assert!(y > 0);
+    }
+
+    #[test]
+    fn arena_coalesces() {
+        let mut a = Arena::new(0);
+        let x = a.alloc(64);
+        let y = a.alloc(64);
+        let _z = a.alloc(64);
+        a.free(x, 64);
+        a.free(y, 64);
+        // coalesced 128 bytes at the front
+        assert_eq!(a.alloc(128), 0);
+    }
+
+    #[test]
+    fn plan_basics() {
+        let spec = tiny_conv_net(42);
+        let p = plan(&spec).unwrap();
+        assert_eq!(p.input_addr, 0);
+        assert!(p.weights_base >= spec.input_elems() as u32);
+        assert_eq!(p.layer_out_addr.len(), spec.layers.len());
+        assert!(p.dm_size >= p.weights_base + p.weights_bytes);
+        // all weight addrs aligned & inside the weights region
+        for (_, &a) in &p.weight_addr {
+            assert_eq!(a % 4, 0);
+            assert!(a >= p.weights_base && a < p.weights_base + p.weights_bytes);
+        }
+    }
+
+    #[test]
+    fn no_live_overlap() {
+        // Buffers that are simultaneously live must not overlap.
+        let spec = tiny_conv_net(7);
+        let p = plan(&spec).unwrap();
+        let n = spec.layers.len();
+        let mut last_use = vec![0usize; n];
+        for (li, layer) in spec.layers.iter().enumerate() {
+            for i in layer.inputs() {
+                if i >= 0 {
+                    last_use[i as usize] = li;
+                }
+            }
+        }
+        last_use[n - 1] = usize::MAX;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                // j's buffer is created at j; i's is live until last_use[i]
+                if last_use[i] >= j {
+                    let (a0, s0) = (p.layer_out_addr[i],
+                                    spec.layers[i].out_elems() as u32);
+                    let (a1, s1) = (p.layer_out_addr[j],
+                                    spec.layers[j].out_elems() as u32);
+                    assert!(
+                        a0 + s0 <= a1 || a1 + s1 <= a0,
+                        "layers {i} and {j} overlap: {a0}+{s0} vs {a1}+{s1}"
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,259 @@
+//! The Chess-compiler analogue: peephole rewrite passes that replace
+//! baseline instruction groups with the custom instructions (paper §II.D,
+//! Listing 4's `chess_rewrite` rules).
+//!
+//! Each pass walks every straight-line window of the structured assembly
+//! (recursing into loop bodies — patterns never straddle a loop boundary)
+//! and fuses:
+//!
+//! * [`fusedmac`]: `mul x23,x21,x22; add x20,x20,x23; addi rA,rA,i1;
+//!   addi rB,rB,i2` → `fusedmac rA,rB,i1,i2` (v3+),
+//! * [`mac`]: `mul x23,x21,x22; add x20,x20,x23` → `mac` (v1+),
+//! * [`add2i`]: `addi rA,rA,i1; addi rB,rB,i2` → `add2i rA,rB,i1,i2` (v2+),
+//!
+//! under the same constraints the hardware imposes: the fixed x20/x21/x22
+//! MAC registers, in-place `addi` (rd == rs1), distinct target registers,
+//! and the 5/10-bit immediate split of Fig 4 (commuting the two `addi`s —
+//! which are independent by the rA ≠ rB check — when only the swapped order
+//! fits).  Passes run in fusion-size order so the quad wins over the pairs.
+
+pub mod patterns;
+
+use crate::compiler::asm::Item;
+use crate::isa::Instr;
+use crate::sim::Variant;
+use patterns::{match_addi_pair, match_mul_acc};
+
+/// Fusion counts (static, i.e. rewrite sites — the dynamic counts come from
+/// the profiler).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RewriteStats {
+    pub fusedmac: u64,
+    pub mac: u64,
+    pub add2i: u64,
+}
+
+/// Apply all rewrite passes enabled by `variant` (in place).
+pub fn apply(items: &mut Vec<Item>, variant: &Variant) -> RewriteStats {
+    let mut stats = RewriteStats::default();
+    rewrite_vec(items, variant, &mut stats);
+    stats
+}
+
+fn rewrite_vec(items: &mut Vec<Item>, variant: &Variant, stats: &mut RewriteStats) {
+    // recurse into loop bodies first
+    for item in items.iter_mut() {
+        if let Item::Loop { body, .. } = item {
+            rewrite_vec(body, variant, stats);
+        }
+    }
+    if variant.fusedmac {
+        pass_fusedmac(items, stats);
+    }
+    if variant.mac {
+        pass_mac(items, stats);
+    }
+    if variant.add2i {
+        pass_add2i(items, stats);
+    }
+}
+
+fn op_at(items: &[Item], i: usize) -> Option<&Instr> {
+    match items.get(i) {
+        Some(Item::Op(instr)) => Some(instr),
+        _ => None,
+    }
+}
+
+/// v3: the 4-instruction conv inner-loop pattern.
+fn pass_fusedmac(items: &mut Vec<Item>, stats: &mut RewriteStats) {
+    let mut out: Vec<Item> = Vec::with_capacity(items.len());
+    let mut i = 0;
+    while i < items.len() {
+        if let (Some(a), Some(b), Some(c), Some(d)) = (
+            op_at(items, i),
+            op_at(items, i + 1),
+            op_at(items, i + 2),
+            op_at(items, i + 3),
+        ) {
+            if match_mul_acc(a, b) {
+                if let Some((rs1, rs2, i1, i2)) = match_addi_pair(c, d) {
+                    out.push(Item::Op(Instr::FusedMac { rs1, rs2, i1, i2 }));
+                    stats.fusedmac += 1;
+                    i += 4;
+                    continue;
+                }
+            }
+        }
+        out.push(items[i].clone());
+        i += 1;
+    }
+    *items = out;
+}
+
+/// v1: mul+add accumulate on the fixed registers.
+fn pass_mac(items: &mut Vec<Item>, stats: &mut RewriteStats) {
+    let mut out: Vec<Item> = Vec::with_capacity(items.len());
+    let mut i = 0;
+    while i < items.len() {
+        if let (Some(a), Some(b)) = (op_at(items, i), op_at(items, i + 1)) {
+            if match_mul_acc(a, b) {
+                out.push(Item::Op(Instr::Mac));
+                stats.mac += 1;
+                i += 2;
+                continue;
+            }
+        }
+        out.push(items[i].clone());
+        i += 1;
+    }
+    *items = out;
+}
+
+/// v2: two consecutive in-place addi to distinct registers.
+fn pass_add2i(items: &mut Vec<Item>, stats: &mut RewriteStats) {
+    let mut out: Vec<Item> = Vec::with_capacity(items.len());
+    let mut i = 0;
+    while i < items.len() {
+        if let (Some(a), Some(b)) = (op_at(items, i), op_at(items, i + 1)) {
+            if let Some((rs1, rs2, i1, i2)) = match_addi_pair(a, b) {
+                out.push(Item::Op(Instr::Add2i { rs1, rs2, i1, i2 }));
+                stats.add2i += 1;
+                i += 2;
+                continue;
+            }
+        }
+        out.push(items[i].clone());
+        i += 1;
+    }
+    *items = out;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::asm::{ACC, OPA, OPB, SCR};
+    use crate::isa::{AluImmOp, AluOp};
+    use crate::sim::{V1, V2, V3};
+
+    fn mul_scr() -> Item {
+        Item::Op(Instr::Op { op: AluOp::Mul, rd: SCR, rs1: OPA, rs2: OPB })
+    }
+    fn acc_add() -> Item {
+        Item::Op(Instr::Op { op: AluOp::Add, rd: ACC, rs1: ACC, rs2: SCR })
+    }
+    fn addi(rd: u8, rs1: u8, imm: i32) -> Item {
+        Item::Op(Instr::OpImm { op: AluImmOp::Addi, rd, rs1, imm })
+    }
+
+    #[test]
+    fn mac_pair_fused_on_v1() {
+        let mut items = vec![mul_scr(), acc_add()];
+        let st = apply(&mut items, &V1);
+        assert_eq!(st.mac, 1);
+        assert_eq!(items, vec![Item::Op(Instr::Mac)]);
+    }
+
+    #[test]
+    fn mac_requires_fixed_registers() {
+        // mul into a different scratch or accumulate into non-x20: no fuse
+        let mut items = vec![
+            Item::Op(Instr::Op { op: AluOp::Mul, rd: 12, rs1: OPA, rs2: OPB }),
+            acc_add(),
+        ];
+        assert_eq!(apply(&mut items, &V1).mac, 0);
+        let mut items = vec![
+            mul_scr(),
+            Item::Op(Instr::Op { op: AluOp::Add, rd: 11, rs1: 11, rs2: SCR }),
+        ];
+        assert_eq!(apply(&mut items, &V1).mac, 0);
+    }
+
+    #[test]
+    fn add2i_fuses_in_range_pairs() {
+        let mut items = vec![addi(10, 10, 1), addi(11, 11, 600)];
+        let st = apply(&mut items, &V2);
+        assert_eq!(st.add2i, 1);
+        assert_eq!(
+            items,
+            vec![Item::Op(Instr::Add2i { rs1: 10, rs2: 11, i1: 1, i2: 600 })]
+        );
+    }
+
+    #[test]
+    fn add2i_commutes_when_only_swap_fits() {
+        // first imm 600 (too big for i1), second 3: swapped order fits
+        let mut items = vec![addi(10, 10, 600), addi(11, 11, 3)];
+        let st = apply(&mut items, &V2);
+        assert_eq!(st.add2i, 1);
+        assert_eq!(
+            items,
+            vec![Item::Op(Instr::Add2i { rs1: 11, rs2: 10, i1: 3, i2: 600 })]
+        );
+    }
+
+    #[test]
+    fn add2i_rejects_bad_pairs() {
+        // same register: not independent
+        let mut items = vec![addi(10, 10, 1), addi(10, 10, 2)];
+        assert_eq!(apply(&mut items, &V2).add2i, 0);
+        // not in-place (rd != rs1, a move)
+        let mut items = vec![addi(10, 12, 1), addi(11, 11, 2)];
+        assert_eq!(apply(&mut items, &V2).add2i, 0);
+        // negative immediate (loop counter decrement)
+        let mut items = vec![addi(10, 10, -1), addi(11, 11, 2)];
+        assert_eq!(apply(&mut items, &V2).add2i, 0);
+        // both too large for the 5-bit slot
+        let mut items = vec![addi(10, 10, 600), addi(11, 11, 700)];
+        assert_eq!(apply(&mut items, &V2).add2i, 0);
+    }
+
+    #[test]
+    fn fusedmac_wins_over_parts_on_v3() {
+        let mut items = vec![mul_scr(), acc_add(), addi(10, 10, 1), addi(11, 11, 1)];
+        let st = apply(&mut items, &V3);
+        assert_eq!((st.fusedmac, st.mac, st.add2i), (1, 0, 0));
+        assert_eq!(
+            items,
+            vec![Item::Op(Instr::FusedMac { rs1: 10, rs2: 11, i1: 1, i2: 1 })]
+        );
+    }
+
+    #[test]
+    fn v2_gets_mac_plus_add2i_for_same_window() {
+        let mut items = vec![mul_scr(), acc_add(), addi(10, 10, 1), addi(11, 11, 1)];
+        let st = apply(&mut items, &V2);
+        assert_eq!((st.fusedmac, st.mac, st.add2i), (0, 1, 1));
+        assert_eq!(items.len(), 2);
+    }
+
+    #[test]
+    fn fusedmac_addi_on_mac_registers_rejected() {
+        // pointer bumps touching the MAC datapath registers can't fuse
+        let mut items = vec![mul_scr(), acc_add(), addi(ACC, ACC, 1), addi(11, 11, 1)];
+        let st = apply(&mut items, &V3);
+        assert_eq!(st.fusedmac, 0);
+        assert_eq!(st.mac, 1); // the pair still fuses
+    }
+
+    #[test]
+    fn rewrites_recurse_into_loops() {
+        let mut items = vec![Item::Loop {
+            n: 5,
+            body: vec![mul_scr(), acc_add(), addi(10, 10, 1), addi(11, 11, 1)],
+        }];
+        let st = apply(&mut items, &V3);
+        assert_eq!(st.fusedmac, 1);
+    }
+
+    #[test]
+    fn clamp_items_break_windows() {
+        let mut items = vec![
+            mul_scr(),
+            Item::ClampAbove { reg: ACC, bound: 24 },
+            acc_add(),
+        ];
+        let st = apply(&mut items, &V3);
+        assert_eq!(st.mac + st.fusedmac, 0);
+    }
+}

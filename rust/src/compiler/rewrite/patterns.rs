@@ -1,0 +1,115 @@
+//! Pattern matchers shared by the rewrite passes (compile time) and the
+//! profiler (run time, Fig 3) — one definition of "what counts as a
+//! mac / add2i / fusedmac opportunity" for both sides of the flow.
+
+use crate::compiler::asm::{ACC, OPA, OPB, SCR};
+use crate::isa::{AluImmOp, AluOp, Instr, Reg};
+
+/// `mul x23, x21, x22` followed by `add x20, x20, x23` — the mac pattern
+/// with the paper's fixed-register constraint.
+pub fn match_mul_acc(a: &Instr, b: &Instr) -> bool {
+    matches!(a, Instr::Op { op: AluOp::Mul, rd, rs1, rs2 }
+        if *rd == SCR && *rs1 == OPA && *rs2 == OPB)
+        && matches!(b, Instr::Op { op: AluOp::Add, rd, rs1, rs2 }
+        if *rd == ACC && *rs1 == ACC && *rs2 == SCR)
+}
+
+/// Any `mul` followed by an `add` accumulating its result (register-free
+/// variant used by the *profiler*, which counts opportunities before the
+/// register convention is imposed — the paper's `mul_add_count`).
+pub fn match_mul_add_loose(a: &Instr, b: &Instr) -> bool {
+    if let Instr::Op { op: AluOp::Mul, rd: mrd, .. } = a {
+        if let Instr::Op { op: AluOp::Add, rd, rs1, rs2 } = b {
+            return (rs1 == mrd || rs2 == mrd) && (rd == rs1 || rd == rs2);
+        }
+    }
+    false
+}
+
+/// Two consecutive in-place `addi`s to distinct registers whose immediates
+/// fit the 5/10-bit split (commuting if needed).  Returns the add2i operand
+/// assignment `(rs1, rs2, i1, i2)`.
+pub fn match_addi_pair(a: &Instr, b: &Instr) -> Option<(Reg, Reg, u8, u16)> {
+    let (ra, ia) = match_inplace_addi(a)?;
+    let (rb, ib) = match_inplace_addi(b)?;
+    if ra == rb {
+        return None; // not independent: cannot commute / dual-issue
+    }
+    // the MAC datapath registers are architecturally reserved in the fused
+    // formats (the hardware write ports are spoken for)
+    for r in [ra, rb] {
+        if [ACC, OPA, OPB, SCR].contains(&r) {
+            return None;
+        }
+    }
+    fits(ra, ia, rb, ib).or_else(|| fits(rb, ib, ra, ia))
+}
+
+fn fits(r1: Reg, i1: i32, r2: Reg, i2: i32) -> Option<(Reg, Reg, u8, u16)> {
+    if (0..=31).contains(&i1) && (0..=1023).contains(&i2) {
+        Some((r1, r2, i1 as u8, i2 as u16))
+    } else {
+        None
+    }
+}
+
+/// In-place addi (`addi r, r, imm`) → (reg, imm).
+pub fn match_inplace_addi(i: &Instr) -> Option<(Reg, i32)> {
+    match i {
+        Instr::OpImm { op: AluImmOp::Addi, rd, rs1, imm } if rd == rs1 && *rd != 0 => {
+            Some((*rd, *imm))
+        }
+        _ => None,
+    }
+}
+
+/// Loose consecutive-addi pair (profiler's `addi_addi_count` and the Fig 4
+/// immediate histogram): in-place, distinct registers, any immediates.
+pub fn match_addi_pair_loose(a: &Instr, b: &Instr) -> Option<(i32, i32)> {
+    let (ra, ia) = match_inplace_addi(a)?;
+    let (rb, ib) = match_inplace_addi(b)?;
+    if ra == rb {
+        None
+    } else {
+        Some((ia, ib))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn addi(rd: Reg, rs1: Reg, imm: i32) -> Instr {
+        Instr::OpImm { op: AluImmOp::Addi, rd, rs1, imm }
+    }
+
+    #[test]
+    fn loose_mul_add() {
+        let m = Instr::Op { op: AluOp::Mul, rd: 12, rs1: 5, rs2: 6 };
+        let a = Instr::Op { op: AluOp::Add, rd: 7, rs1: 7, rs2: 12 };
+        assert!(match_mul_add_loose(&m, &a));
+        // add not consuming the product
+        let a2 = Instr::Op { op: AluOp::Add, rd: 7, rs1: 7, rs2: 13 };
+        assert!(!match_mul_add_loose(&m, &a2));
+    }
+
+    #[test]
+    fn inplace_addi_only() {
+        assert_eq!(match_inplace_addi(&addi(5, 5, 9)), Some((5, 9)));
+        assert_eq!(match_inplace_addi(&addi(5, 6, 9)), None);
+        assert_eq!(match_inplace_addi(&addi(0, 0, 0)), None); // nop on x0
+    }
+
+    #[test]
+    fn pair_immediate_split() {
+        // canonical: small then large
+        let p = match_addi_pair(&addi(10, 10, 31), &addi(11, 11, 1023));
+        assert_eq!(p, Some((10, 11, 31, 1023)));
+        // boundary violations
+        assert_eq!(match_addi_pair(&addi(10, 10, 32), &addi(11, 11, 40)), None);
+        assert_eq!(
+            match_addi_pair(&addi(10, 10, 32), &addi(11, 11, 7)),
+            Some((11, 10, 7, 32))
+        );
+    }
+}

@@ -1,0 +1,462 @@
+//! Model spec loading — the rust half of the contract defined by
+//! `python/compile/specs.py` + `export.py`.
+//!
+//! A spec is the hardware-agnostic model description (the TVM-Relay analogue
+//! of the paper's flow).  The exporter writes `models/<name>.json` plus a
+//! raw weight blob `models/<name>.bin`; this module decodes both into
+//! [`ModelSpec`], which every downstream stage (planner, codegen, reference
+//! executor, golden comparison) consumes.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::util::json::{self, Value};
+
+/// A named weight tensor (values held as i32; int8 tensors store
+/// int8-range values).
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+    pub data: Vec<i32>,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    I8,
+    I32,
+}
+
+impl Tensor {
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+/// One layer of the model DAG. `inputs` index earlier layers; -1 is the
+/// model input.
+#[derive(Clone, Debug)]
+pub enum Layer {
+    Conv2d {
+        input: i32,
+        w: String,
+        b: String,
+        stride: usize,
+        pad: usize,
+        shift: u32,
+        relu: bool,
+        in_shape: [usize; 3],
+        out_shape: [usize; 3],
+    },
+    DwConv2d {
+        input: i32,
+        w: String,
+        b: String,
+        stride: usize,
+        pad: usize,
+        shift: u32,
+        relu: bool,
+        in_shape: [usize; 3],
+        out_shape: [usize; 3],
+    },
+    Dense {
+        input: i32,
+        w: String,
+        b: String,
+        shift: u32,
+        relu: bool,
+        in_len: usize,
+        out_len: usize,
+    },
+    MaxPool {
+        input: i32,
+        k: usize,
+        stride: usize,
+        in_shape: [usize; 3],
+        out_shape: [usize; 3],
+    },
+    AvgPool2d {
+        input: i32,
+        k: usize,
+        stride: usize,
+        shift: u32,
+        in_shape: [usize; 3],
+        out_shape: [usize; 3],
+    },
+    AvgPoolGlobal {
+        input: i32,
+        shift: u32,
+        in_shape: [usize; 3],
+        out_shape: [usize; 3],
+    },
+    Add {
+        a: i32,
+        b: i32,
+        relu: bool,
+        shape: Vec<usize>,
+    },
+    Concat {
+        inputs: Vec<i32>,
+        in_shapes: Vec<[usize; 3]>,
+        out_shape: [usize; 3],
+    },
+}
+
+impl Layer {
+    /// Producer layer indices feeding this layer.
+    pub fn inputs(&self) -> Vec<i32> {
+        match self {
+            Layer::Conv2d { input, .. }
+            | Layer::DwConv2d { input, .. }
+            | Layer::Dense { input, .. }
+            | Layer::MaxPool { input, .. }
+            | Layer::AvgPool2d { input, .. }
+            | Layer::AvgPoolGlobal { input, .. } => vec![*input],
+            Layer::Add { a, b, .. } => vec![*a, *b],
+            Layer::Concat { inputs, .. } => inputs.clone(),
+        }
+    }
+
+    /// Number of elements in this layer's output.
+    pub fn out_elems(&self) -> usize {
+        match self {
+            Layer::Conv2d { out_shape, .. }
+            | Layer::DwConv2d { out_shape, .. }
+            | Layer::MaxPool { out_shape, .. }
+            | Layer::AvgPool2d { out_shape, .. }
+            | Layer::AvgPoolGlobal { out_shape, .. }
+            | Layer::Concat { out_shape, .. } => out_shape.iter().product(),
+            Layer::Dense { out_len, .. } => *out_len,
+            Layer::Add { shape, .. } => shape.iter().product(),
+        }
+    }
+
+    pub fn op_name(&self) -> &'static str {
+        match self {
+            Layer::Conv2d { .. } => "conv2d",
+            Layer::DwConv2d { .. } => "dwconv2d",
+            Layer::Dense { .. } => "dense",
+            Layer::MaxPool { .. } => "maxpool",
+            Layer::AvgPool2d { .. } => "avgpool2d",
+            Layer::AvgPoolGlobal { .. } => "avgpool_global",
+            Layer::Add { .. } => "add",
+            Layer::Concat { .. } => "concat",
+        }
+    }
+}
+
+/// A fully-loaded model: graph + weights.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    pub profile: String,
+    pub input_shape: [usize; 3],
+    pub num_classes: usize,
+    pub layers: Vec<Layer>,
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl ModelSpec {
+    pub fn tensor(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .with_context(|| format!("missing tensor {name:?}"))
+    }
+
+    pub fn input_elems(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    pub fn output_elems(&self) -> usize {
+        self.layers
+            .last()
+            .map(|l| l.out_elems())
+            .unwrap_or(0)
+    }
+
+    /// Total multiply-accumulates of one inference.
+    pub fn total_macs(&self) -> u64 {
+        let mut total = 0u64;
+        for l in &self.layers {
+            total += match l {
+                Layer::Conv2d { w, out_shape, .. } => {
+                    let wt = &self.tensors[w];
+                    // w: (OC, IC, KH, KW); per output pixel: IC*KH*KW
+                    let per = wt.shape[1] * wt.shape[2] * wt.shape[3];
+                    (out_shape.iter().product::<usize>() * per) as u64
+                }
+                Layer::DwConv2d { w, out_shape, .. } => {
+                    let wt = &self.tensors[w];
+                    let per = wt.shape[1] * wt.shape[2];
+                    (out_shape.iter().product::<usize>() * per) as u64
+                }
+                Layer::Dense { in_len, out_len, .. } => {
+                    (*in_len * *out_len) as u64
+                }
+                _ => 0,
+            };
+        }
+        total
+    }
+
+    /// Validate the DAG: input indices in range, shapes chain, tensors exist.
+    pub fn validate(&self) -> Result<()> {
+        for (li, layer) in self.layers.iter().enumerate() {
+            for i in layer.inputs() {
+                ensure!(
+                    i >= -1 && (i as i64) < li as i64,
+                    "layer {li}: bad input index {i}"
+                );
+            }
+            match layer {
+                Layer::Conv2d { w, b, in_shape, out_shape, stride, pad, .. } => {
+                    let wt = self.tensor(w)?;
+                    ensure!(wt.shape.len() == 4, "conv w must be 4-d");
+                    ensure!(
+                        wt.shape[1] == in_shape[0],
+                        "layer {li}: conv ic mismatch"
+                    );
+                    ensure!(wt.shape[0] == out_shape[0], "conv oc mismatch");
+                    let (kh, kw) = (wt.shape[2], wt.shape[3]);
+                    let oh = (in_shape[1] + 2 * pad - kh) / stride + 1;
+                    let ow = (in_shape[2] + 2 * pad - kw) / stride + 1;
+                    ensure!(
+                        [out_shape[1], out_shape[2]] == [oh, ow],
+                        "layer {li}: conv output shape mismatch"
+                    );
+                    ensure!(self.tensor(b)?.len() == out_shape[0], "bias len");
+                }
+                Layer::DwConv2d { w, b, in_shape, out_shape, .. } => {
+                    let wt = self.tensor(w)?;
+                    ensure!(wt.shape.len() == 3, "dw w must be 3-d");
+                    ensure!(wt.shape[0] == in_shape[0], "dw c mismatch");
+                    ensure!(out_shape[0] == in_shape[0], "dw c mismatch");
+                    ensure!(self.tensor(b)?.len() == out_shape[0], "bias len");
+                }
+                Layer::Dense { w, b, in_len, out_len, .. } => {
+                    let wt = self.tensor(w)?;
+                    ensure!(
+                        wt.shape == vec![*out_len, *in_len],
+                        "layer {li}: dense w shape"
+                    );
+                    ensure!(self.tensor(b)?.len() == *out_len, "bias len");
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+}
+
+fn shape3(v: &Value, key: &str) -> Result<[usize; 3]> {
+    let s = v.usize_list(key)?;
+    ensure!(s.len() == 3, "{key} must have 3 dims, got {s:?}");
+    Ok([s[0], s[1], s[2]])
+}
+
+fn parse_layer(v: &Value, li: usize) -> Result<Layer> {
+    let op = v.get("op")?.as_str()?;
+    let inputs: Vec<i32> = v
+        .get("inputs")
+        .ok()
+        .map(|arr| -> Result<Vec<i32>> {
+            arr.as_arr()?.iter().map(|x| Ok(x.as_i64()? as i32)).collect()
+        })
+        .transpose()?
+        .unwrap_or_default();
+    let one_input = || -> Result<i32> {
+        ensure!(inputs.len() == 1, "layer {li} ({op}): expected 1 input");
+        Ok(inputs[0])
+    };
+    let shift = |v: &Value| -> Result<u32> {
+        Ok(v.get("shift")?.as_i64()? as u32)
+    };
+    Ok(match op {
+        "conv2d" => Layer::Conv2d {
+            input: one_input()?,
+            w: v.get("w")?.as_str()?.to_string(),
+            b: v.get("b")?.as_str()?.to_string(),
+            stride: v.get("stride")?.as_usize()?,
+            pad: v.get("pad")?.as_usize()?,
+            shift: shift(v)?,
+            relu: v.get("relu")?.as_bool()?,
+            in_shape: shape3(v, "in_shape")?,
+            out_shape: shape3(v, "out_shape")?,
+        },
+        "dwconv2d" => Layer::DwConv2d {
+            input: one_input()?,
+            w: v.get("w")?.as_str()?.to_string(),
+            b: v.get("b")?.as_str()?.to_string(),
+            stride: v.get("stride")?.as_usize()?,
+            pad: v.get("pad")?.as_usize()?,
+            shift: shift(v)?,
+            relu: v.get("relu")?.as_bool()?,
+            in_shape: shape3(v, "in_shape")?,
+            out_shape: shape3(v, "out_shape")?,
+        },
+        "dense" => Layer::Dense {
+            input: one_input()?,
+            w: v.get("w")?.as_str()?.to_string(),
+            b: v.get("b")?.as_str()?.to_string(),
+            shift: shift(v)?,
+            relu: v.get("relu")?.as_bool()?,
+            in_len: v.get("in_len")?.as_usize()?,
+            out_len: {
+                let s = v.usize_list("out_shape")?;
+                ensure!(s.len() == 1, "dense out_shape");
+                s[0]
+            },
+        },
+        "maxpool" => Layer::MaxPool {
+            input: one_input()?,
+            k: v.get("k")?.as_usize()?,
+            stride: v.get("stride")?.as_usize()?,
+            in_shape: shape3(v, "in_shape")?,
+            out_shape: shape3(v, "out_shape")?,
+        },
+        "avgpool2d" => Layer::AvgPool2d {
+            input: one_input()?,
+            k: v.get("k")?.as_usize()?,
+            stride: v.get("stride")?.as_usize()?,
+            shift: shift(v)?,
+            in_shape: shape3(v, "in_shape")?,
+            out_shape: shape3(v, "out_shape")?,
+        },
+        "avgpool_global" => Layer::AvgPoolGlobal {
+            input: one_input()?,
+            shift: shift(v)?,
+            in_shape: shape3(v, "in_shape")?,
+            out_shape: shape3(v, "out_shape")?,
+        },
+        "add" => {
+            ensure!(inputs.len() == 2, "add needs 2 inputs");
+            Layer::Add {
+                a: inputs[0],
+                b: inputs[1],
+                relu: v.get("relu")?.as_bool()?,
+                shape: v.usize_list("out_shape")?,
+            }
+        }
+        "concat" => {
+            ensure!(!inputs.is_empty(), "concat needs inputs");
+            Layer::Concat {
+                inputs: inputs.clone(),
+                in_shapes: Vec::new(), // filled by caller from producers
+                out_shape: shape3(v, "out_shape")?,
+            }
+        }
+        other => bail!("layer {li}: unknown op {other:?}"),
+    })
+}
+
+/// Decode the weight blob per the JSON `tensors` table.
+fn parse_tensors(doc: &Value, blob: &[u8]) -> Result<BTreeMap<String, Tensor>> {
+    let mut out = BTreeMap::new();
+    for entry in doc.get("tensors")?.as_arr()? {
+        let name = entry.get("name")?.as_str()?.to_string();
+        let shape = entry.usize_list("shape")?;
+        let size = entry.get("size")?.as_usize()?;
+        let offset = entry.get("offset")?.as_usize()?;
+        let dtype = match entry.get("dtype")?.as_str()? {
+            "i8" => Dtype::I8,
+            "i32" => Dtype::I32,
+            d => bail!("tensor {name}: unknown dtype {d:?}"),
+        };
+        ensure!(
+            shape.iter().product::<usize>() == size,
+            "tensor {name}: shape/size mismatch"
+        );
+        let data: Vec<i32> = match dtype {
+            Dtype::I8 => {
+                ensure!(offset + size <= blob.len(), "tensor {name}: blob oob");
+                blob[offset..offset + size]
+                    .iter()
+                    .map(|&b| b as i8 as i32)
+                    .collect()
+            }
+            Dtype::I32 => {
+                ensure!(
+                    offset + 4 * size <= blob.len(),
+                    "tensor {name}: blob oob"
+                );
+                blob[offset..offset + 4 * size]
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                    .collect()
+            }
+        };
+        out.insert(name.clone(), Tensor { name, shape, dtype, data });
+    }
+    Ok(out)
+}
+
+/// Parse a spec from JSON text + weight blob bytes.
+pub fn parse_spec(json_text: &str, blob: &[u8]) -> Result<ModelSpec> {
+    let doc = json::parse(json_text)?;
+    let input_shape = {
+        let s = doc.usize_list("input_shape")?;
+        ensure!(s.len() == 3, "input_shape must be CHW");
+        [s[0], s[1], s[2]]
+    };
+    let mut layers = Vec::new();
+    let raw_layers = doc.get("layers")?.as_arr()?;
+    for (li, lv) in raw_layers.iter().enumerate() {
+        let mut layer = parse_layer(lv, li)
+            .with_context(|| format!("layer {li}"))?;
+        // fill concat input shapes from producers
+        if let Layer::Concat { inputs, in_shapes, .. } = &mut layer {
+            for &i in inputs.iter() {
+                let s = if i == -1 {
+                    input_shape
+                } else {
+                    match &layers[i as usize] {
+                        Layer::Conv2d { out_shape, .. }
+                        | Layer::DwConv2d { out_shape, .. }
+                        | Layer::MaxPool { out_shape, .. }
+                        | Layer::AvgPool2d { out_shape, .. }
+                        | Layer::AvgPoolGlobal { out_shape, .. }
+                        | Layer::Concat { out_shape, .. } => *out_shape,
+                        Layer::Add { shape, .. } => {
+                            ensure!(shape.len() == 3, "add feeding concat");
+                            [shape[0], shape[1], shape[2]]
+                        }
+                        Layer::Dense { .. } => bail!("dense feeding concat"),
+                    }
+                };
+                in_shapes.push(s);
+            }
+        }
+        layers.push(layer);
+    }
+    let spec = ModelSpec {
+        name: doc.get("name")?.as_str()?.to_string(),
+        profile: doc
+            .get_opt("profile")
+            .map(|v| v.as_str().map(str::to_string))
+            .transpose()?
+            .unwrap_or_else(|| "quick".into()),
+        input_shape,
+        num_classes: doc.get("num_classes")?.as_usize()?,
+        layers,
+        tensors: parse_tensors(&doc, blob)?,
+    };
+    spec.validate()?;
+    Ok(spec)
+}
+
+/// Load `models/<name>.json` + `models/<name>.bin` from an artifacts dir.
+pub fn load_spec(artifacts: &Path, name: &str) -> Result<ModelSpec> {
+    let jp = artifacts.join("models").join(format!("{name}.json"));
+    let bp = artifacts.join("models").join(format!("{name}.bin"));
+    let text = std::fs::read_to_string(&jp)
+        .with_context(|| format!("reading {}", jp.display()))?;
+    let blob = std::fs::read(&bp)
+        .with_context(|| format!("reading {}", bp.display()))?;
+    parse_spec(&text, &blob)
+}

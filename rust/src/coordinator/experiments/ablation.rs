@@ -1,0 +1,125 @@
+//! Ablation study: standalone contribution of each ISA extension.
+//!
+//! The paper's Table 1 ladder (v0→v4) is *cumulative*, which leaves two
+//! design questions open that §II.C.3 argues informally:
+//!
+//! 1. what does each extension buy **alone** on the baseline core?
+//! 2. is `fusedmac` redundant given `mac`+`add2i` (it fuses the same
+//!    instructions), or does the 4-way fusion earn its opcode?
+//!
+//! The simulator's [`Variant`] is an arbitrary feature mask, so we can build
+//! cores the paper never synthesized and measure exactly that.  The area
+//! model prices each combination with the same calibrated FU costs.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::compiler;
+use crate::hw::area_of;
+use crate::models;
+use crate::runtime;
+use crate::sim::{NopHook, Variant, V0, V4};
+use crate::util::tables::{fmt_si, Table};
+
+/// The ablation cores: baseline, each extension alone, the pair-fusions
+/// without the quad, and the full v4.
+pub fn ablation_variants() -> Vec<Variant> {
+    vec![
+        V0,
+        Variant { name: "mac-only", mac: true, add2i: false, fusedmac: false, zol: false },
+        Variant { name: "add2i-only", mac: false, add2i: true, fusedmac: false, zol: false },
+        Variant { name: "fusedmac-only", mac: false, add2i: false, fusedmac: true, zol: false },
+        Variant { name: "zol-only", mac: false, add2i: false, fusedmac: false, zol: true },
+        Variant { name: "pairs(no quad)", mac: true, add2i: true, fusedmac: false, zol: true },
+        V4,
+    ]
+}
+
+/// One ablation row.
+pub struct AblationPoint {
+    pub variant: Variant,
+    pub cycles: u64,
+    pub speedup: f64,
+    pub lut_delta: i64,
+    /// Speedup per 1k extra LUTs — the efficiency of the area spent.
+    pub speedup_per_klut: f64,
+}
+
+/// Measure the ablation grid for one model.
+pub fn measure(artifacts: &Path, name: &str) -> Result<Vec<AblationPoint>> {
+    let spec = models::load(artifacts, name)?;
+    let io = runtime::load_golden_io(artifacts, name)?;
+    let input = &io.inputs[0];
+    let mut out = Vec::new();
+    let mut v0_cycles = 0u64;
+    for variant in ablation_variants() {
+        let c = compiler::compile(&spec, variant)?;
+        let (got, stats) =
+            compiler::execute_compiled(&c, &spec, input, 1 << 36, &mut NopHook)?;
+        anyhow::ensure!(
+            got == io.outputs[0],
+            "{name} on {}: output mismatch",
+            variant.name
+        );
+        if variant == V0 {
+            v0_cycles = stats.cycles;
+        }
+        let lut_delta = area_of(&variant).lut - area_of(&V0).lut;
+        let speedup = v0_cycles as f64 / stats.cycles as f64;
+        out.push(AblationPoint {
+            variant,
+            cycles: stats.cycles,
+            speedup,
+            lut_delta,
+            speedup_per_klut: if lut_delta > 0 {
+                (speedup - 1.0) / (lut_delta as f64 / 1000.0)
+            } else {
+                0.0
+            },
+        });
+    }
+    Ok(out)
+}
+
+/// Render the ablation table for the given models.
+pub fn render(artifacts: &Path, models: &[String]) -> Result<String> {
+    let mut out = String::new();
+    for name in models {
+        let points = measure(artifacts, name)?;
+        let mut t = Table::new(&[
+            "core", "cycles", "speedup", "ΔLUT", "speedup/kLUT",
+        ])
+        .with_title(&format!(
+            "Ablation — {name}: standalone value of each extension \
+             (outputs verified on every core)"
+        ));
+        for p in &points {
+            t.row(vec![
+                p.variant.name.to_string(),
+                fmt_si(p.cycles),
+                format!("{:.3}x", p.speedup),
+                format!("{:+}", p.lut_delta),
+                if p.lut_delta > 0 {
+                    format!("{:.3}", p.speedup_per_klut)
+                } else {
+                    "-".into()
+                },
+            ]);
+        }
+        out.push_str(&t.render());
+        // the §II.C.3 question, answered quantitatively
+        let quad = points.iter().find(|p| p.variant.name == "pairs(no quad)");
+        let v4 = points.last();
+        if let (Some(pairs), Some(v4)) = (quad, v4) {
+            out.push_str(&format!(
+                "fusedmac beyond mac+add2i on {name}: {:.1}% extra cycles saved \
+                 (pairs {:.3}x -> full {:.3}x)\n\n",
+                (1.0 - v4.cycles as f64 / pairs.cycles as f64) * 100.0,
+                pairs.speedup,
+                v4.speedup
+            ));
+        }
+    }
+    Ok(out)
+}

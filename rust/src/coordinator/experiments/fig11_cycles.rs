@@ -1,0 +1,31 @@
+//! Fig 11: cycle and instruction counts per model on all five variants
+//! (averaged over inferences, as the paper does for its two-inference runs).
+
+use crate::coordinator::flow::FlowResult;
+use crate::util::tables::{fmt_si, Table};
+
+/// Render Fig 11 from completed flow results.
+pub fn render(flows: &[FlowResult]) -> String {
+    let mut t = Table::new(&[
+        "model", "variant", "instructions", "cycles", "speedup", "verified",
+    ])
+    .with_title("Fig 11 — cycle & instruction count per inference across variants");
+    for f in flows {
+        for m in &f.metrics {
+            t.row(vec![
+                f.model.clone(),
+                m.variant.name.to_string(),
+                fmt_si(m.instrs),
+                fmt_si(m.cycles),
+                format!("{:.2}x", m.speedup),
+                match (f.verified_golden, f.verified_pjrt) {
+                    (true, Some(true)) => "golden+pjrt".into(),
+                    (true, None) => "golden".into(),
+                    (true, Some(false)) => "golden, PJRT MISMATCH".into(),
+                    (false, _) => "MISMATCH".into(),
+                },
+            ]);
+        }
+    }
+    t.render()
+}

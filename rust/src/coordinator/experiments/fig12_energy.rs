@@ -1,0 +1,32 @@
+//! Fig 12: energy per inference (eq. 1, E = P·C/f at 100 MHz) per model and
+//! variant.
+
+use crate::coordinator::flow::FlowResult;
+use crate::util::tables::Table;
+
+/// Render Fig 12 from completed flow results.
+pub fn render(flows: &[FlowResult]) -> String {
+    let mut t = Table::new(&[
+        "model",
+        "variant",
+        "power (mW)",
+        "time (ms)",
+        "energy/inference (mJ)",
+        "vs v0",
+    ])
+    .with_title("Fig 12 — energy per inference on RISC-V variants (E = P*C/f @ 100 MHz)");
+    for f in flows {
+        let e0 = f.metrics.first().map(|m| m.energy.energy_mj).unwrap_or(0.0);
+        for m in &f.metrics {
+            t.row(vec![
+                f.model.clone(),
+                m.variant.name.to_string(),
+                format!("{:.0}", m.energy.power_mw),
+                format!("{:.3}", m.energy.time_ms),
+                format!("{:.4}", m.energy.energy_mj),
+                format!("{:.2}x", e0 / m.energy.energy_mj.max(1e-12)),
+            ]);
+        }
+    }
+    t.render()
+}

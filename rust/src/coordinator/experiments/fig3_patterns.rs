@@ -1,0 +1,62 @@
+//! Fig 3: normalized execution counts of the profiled instruction patterns
+//! on the baseline core, per model (legend defined by Table 2).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::compiler;
+use crate::models;
+use crate::profiler::{PatternCounts, ProfileHook};
+use crate::runtime;
+use crate::sim::V0;
+use crate::util::tables::{fmt_si, Table};
+
+/// Profile one model on v0 with its first golden input.
+pub fn profile_model(artifacts: &Path, name: &str) -> Result<PatternCounts> {
+    let spec = models::load(artifacts, name)?;
+    let io = runtime::load_golden_io(artifacts, name)?;
+    let c = compiler::compile(&spec, V0)?;
+    let mut hook = ProfileHook::new(c.words.len());
+    compiler::execute_compiled(&c, &spec, &io.inputs[0], 1 << 36, &mut hook)?;
+    Ok(hook.finish())
+}
+
+/// Render the Fig 3 table for all available models.
+pub fn render(artifacts: &Path, models: &[String]) -> Result<String> {
+    let mut t = Table::new(&[
+        "model",
+        "total",
+        "add",
+        "mul",
+        "mul_add",
+        "addi",
+        "addi_addi",
+        "fusedmac",
+        "blt",
+    ])
+    .with_title(
+        "Fig 3 — frequently executed patterns on baseline v0 \
+         (count and share of retired instructions)",
+    );
+    let norm = |n: u64, tot: u64| format!("{} ({:.1}%)", fmt_si(n), pct(n, tot));
+    for name in models {
+        let c = profile_model(artifacts, name)?;
+        t.row(vec![
+            name.clone(),
+            fmt_si(c.total),
+            norm(c.count("add"), c.total),
+            norm(c.count("mul"), c.total),
+            norm(c.mul_add, c.total),
+            norm(c.count("addi"), c.total),
+            norm(c.addi_addi, c.total),
+            norm(c.fusedmac, c.total),
+            norm(c.count("blt"), c.total),
+        ]);
+    }
+    Ok(t.render())
+}
+
+fn pct(n: u64, tot: u64) -> f64 {
+    n as f64 / tot.max(1) as f64 * 100.0
+}

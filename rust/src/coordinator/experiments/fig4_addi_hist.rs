@@ -1,0 +1,46 @@
+//! Fig 4: histogram of consecutive-`addi` immediate pairs (pattern "X_Y")
+//! plus the §II.C.2 coverage numbers for the 5/10-bit add2i split.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::fig3_patterns::profile_model;
+use crate::profiler::{best_split, split_coverage};
+use crate::util::tables::{fmt_count, Table};
+
+/// Render the Fig 4 histogram (top pairs) + coverage analysis per model.
+pub fn render(artifacts: &Path, models: &[String], top_n: usize) -> Result<String> {
+    let mut out = String::new();
+    let mut cov = Table::new(&[
+        "model",
+        "addi pairs",
+        "5/10 coverage",
+        "best split",
+        "best coverage",
+    ])
+    .with_title("Fig 4 (analysis) — add2i immediate-width allocation");
+
+    for name in models {
+        let c = profile_model(artifacts, name)?;
+        let mut t = Table::new(&["pattern X_Y", "count"])
+            .with_title(&format!("Fig 4 — {name}: consecutive addi immediates"));
+        for ((i1, i2), n) in c.top_addi_pairs(top_n) {
+            t.row(vec![format!("{i1}_{i2}"), fmt_count(n)]);
+        }
+        out.push_str(&t.render());
+        out.push('\n');
+
+        let paper = split_coverage(&c.addi_imm_hist, 5, 10);
+        let (a, b, best) = best_split(&c.addi_imm_hist);
+        cov.row(vec![
+            name.clone(),
+            fmt_count(c.addi_addi),
+            format!("{:.2}%", paper * 100.0),
+            format!("{a}+{b} bits"),
+            format!("{:.2}%", best * 100.0),
+        ]);
+    }
+    out.push_str(&cov.render());
+    Ok(out)
+}

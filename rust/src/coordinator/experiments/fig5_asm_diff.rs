@@ -1,0 +1,98 @@
+//! Fig 5: side-by-side assembly of one convolution layer on v0 vs the fully
+//! extended v4, with per-instruction cycle counts from the simulator — the
+//! paper's evidence that the `blt` (and the counter `addi`) vanish under
+//! `zol` while the inner loop collapses to `fusedmac`.
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::compiler::{self, Compiled};
+use crate::isa::disasm::disasm;
+use crate::models;
+use crate::profiler::ProfileHook;
+use crate::runtime;
+use crate::sim::Variant;
+
+/// One listing line: pc, word, asm, cycles spent there, retires.
+pub struct AsmLine {
+    pub pc: u32,
+    pub word: u32,
+    pub asm: String,
+    pub cycles: u64,
+    pub retires: u64,
+}
+
+/// Compile `name` for `variant`, run one golden input with per-PC cycle
+/// attribution, and return the listing of layer `layer_idx`.
+pub fn layer_listing(
+    artifacts: &Path,
+    name: &str,
+    variant: Variant,
+    layer_idx: usize,
+) -> Result<(Vec<AsmLine>, u64)> {
+    let spec = models::load(artifacts, name)?;
+    ensure!(layer_idx < spec.layers.len(), "layer index out of range");
+    let io = runtime::load_golden_io(artifacts, name)?;
+    let c: Compiled = compiler::compile(&spec, variant)?;
+    let mut hook = ProfileHook::new(c.words.len());
+    compiler::execute_compiled(&c, &spec, &io.inputs[0], 1 << 36, &mut hook)?;
+
+    let (start, end) = c.layer_ranges[layer_idx];
+    let mut lines = Vec::new();
+    let mut layer_cycles = 0;
+    for i in start..end {
+        let cycles = hook.pc_cycles[i];
+        layer_cycles += cycles;
+        lines.push(AsmLine {
+            pc: (i * 4) as u32,
+            word: c.words[i],
+            asm: disasm(&c.instrs[i]),
+            cycles,
+            retires: hook.pc_retires[i],
+        });
+    }
+    Ok((lines, layer_cycles))
+}
+
+/// Index of the first conv2d layer (the Fig 5 subject).
+pub fn first_conv_layer(artifacts: &Path, name: &str) -> Result<usize> {
+    let spec = models::load(artifacts, name)?;
+    spec.layers
+        .iter()
+        .position(|l| matches!(l, crate::compiler::spec::Layer::Conv2d { .. }))
+        .context("model has no conv2d layer")
+}
+
+/// Render the two listings side by side (sequentially, like the paper's
+/// subfigures b/c).
+pub fn render(artifacts: &Path, name: &str, layer_idx: Option<usize>) -> Result<String> {
+    let li = match layer_idx {
+        Some(i) => i,
+        None => first_conv_layer(artifacts, name)?,
+    };
+    let mut out = String::new();
+    let mut totals = Vec::new();
+    for variant in [crate::sim::V0, crate::sim::V4] {
+        let (lines, cyc) = layer_listing(artifacts, name, variant, li)?;
+        totals.push(cyc);
+        out.push_str(&format!(
+            "Fig 5 — {name} layer {li} on {} ({} instructions, {} cycles in layer):\n",
+            variant.name,
+            lines.len(),
+            cyc
+        ));
+        for l in &lines {
+            out.push_str(&format!(
+                "  {:#07x}  {:08x}  {:<28} ; {:>12} cycles, {:>10} retires\n",
+                l.pc, l.word, l.asm, l.cycles, l.retires
+            ));
+        }
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "layer speedup v0/v4: {:.2}x  (blt eliminated by zol, inner loop fused)\n",
+        totals[0] as f64 / totals[1].max(1) as f64
+    ));
+    Ok(out)
+}

@@ -1,0 +1,44 @@
+//! Experiment regeneration: one module per table/figure of the paper's
+//! evaluation (DESIGN.md §5 maps them).
+//!
+//! Every generator returns rendered text (the tables the paper prints) so
+//! the CLI, the benches and EXPERIMENTS.md all share one source of truth.
+
+pub mod ablation;
+pub mod fig11_cycles;
+pub mod fig12_energy;
+pub mod fig3_patterns;
+pub mod fig4_addi_hist;
+pub mod fig5_asm_diff;
+pub mod table10_memory;
+pub mod table8_area;
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::flow::{run_flow, FlowOptions, FlowResult};
+use crate::models::PAPER_MODELS;
+
+/// Models present in the artifacts dir, paper order.
+pub fn available_models(artifacts: &Path) -> Vec<String> {
+    PAPER_MODELS
+        .iter()
+        .filter(|n| {
+            artifacts.join("models").join(format!("{n}.json")).exists()
+        })
+        .map(|s| s.to_string())
+        .collect()
+}
+
+/// Run the full flow for every available model (shared by Fig 11 / Fig 12 /
+/// Table 10 so the simulations run once).
+pub fn run_all_flows(
+    artifacts: &Path,
+    opts: &FlowOptions,
+) -> Result<Vec<FlowResult>> {
+    available_models(artifacts)
+        .iter()
+        .map(|m| run_flow(artifacts, m, opts))
+        .collect()
+}

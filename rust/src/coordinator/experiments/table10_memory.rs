@@ -1,0 +1,41 @@
+//! Table 10: data-memory and program-memory usage per model × variant,
+//! with the "total memory saved" row.
+//!
+//! Known deviation (DESIGN.md §9): our DM is variant-independent by
+//! construction (the planner's layout does not depend on the ISA), so the
+//! paper's v0→v1 DM drops — an artifact of the authors' hand-coded build —
+//! do not appear; the PM column shows the fusion/zol shrinkage trend.
+
+use crate::coordinator::flow::FlowResult;
+use crate::util::tables::Table;
+
+fn kb(bytes: u32) -> String {
+    format!("{:.2}", bytes as f64 / 1024.0)
+}
+
+/// Render Table 10 from completed flow results.
+pub fn render(flows: &[FlowResult]) -> String {
+    let mut t = Table::new(&["model", "variant", "DM (kB)", "PM (kB)"])
+        .with_title("Table 10 — data & program memory usage across processor versions");
+    for f in flows {
+        for m in &f.metrics {
+            t.row(vec![
+                f.model.clone(),
+                m.variant.name.to_string(),
+                kb(m.dm_bytes),
+                kb(m.pm_bytes),
+            ]);
+        }
+        if let (Some(v0), Some(vl)) = (f.metrics.first(), f.metrics.last()) {
+            let dm_saved = 100.0 * (1.0 - vl.dm_bytes as f64 / v0.dm_bytes as f64);
+            let pm_saved = 100.0 * (1.0 - vl.pm_bytes as f64 / v0.pm_bytes as f64);
+            t.row(vec![
+                f.model.clone(),
+                "saved (%)".to_string(),
+                format!("{dm_saved:.2}"),
+                format!("{pm_saved:.2}"),
+            ]);
+        }
+    }
+    t.render()
+}

@@ -1,0 +1,64 @@
+//! Table 8 + Fig 10: FPGA utilisation and power of the five core variants,
+//! from the calibrated area model, including the overhead row and the
+//! Fig 10 proportions-of-baseline view.
+
+use crate::hw::{area_of, overhead, BASELINE};
+use crate::sim::VARIANTS;
+use crate::util::tables::Table;
+
+/// Render Table 8.
+pub fn render() -> String {
+    let mut t = Table::new(&["Processor", "LUT", "MUX", "Registers", "DSP", "Power"])
+        .with_title("Table 8 — FPGA utilisation of all processor variants (calibrated model)");
+    let names = [
+        "v0: Baseline",
+        "v1: v0 + mac",
+        "v2: v1 + add2i",
+        "v3: v2 + fusedmac",
+        "v4: v3 + hardware loops",
+    ];
+    for (v, label) in VARIANTS.iter().zip(names) {
+        let a = area_of(v);
+        t.row(vec![
+            label.to_string(),
+            a.lut.to_string(),
+            a.mux.to_string(),
+            a.regs.to_string(),
+            a.dsp.to_string(),
+            format!("{:.0} mW", a.power_mw),
+        ]);
+    }
+    let o = overhead(&crate::sim::V4);
+    t.row(vec![
+        "Overhead:".to_string(),
+        format!("{} ({:.2}%)", o[0].1, o[0].2),
+        format!("{} ({:.1}%)", o[1].1, o[1].2),
+        format!("{} ({:.2}%)", o[2].1, o[2].2),
+        format!("{} ({:.0}%)", o[3].1, o[3].2),
+        format!(
+            "{:.0} mW ({:.2}%)",
+            area_of(&crate::sim::V4).power_mw - BASELINE.power_mw,
+            (area_of(&crate::sim::V4).power_mw - BASELINE.power_mw)
+                / BASELINE.power_mw
+                * 100.0
+        ),
+    ]);
+    t.render()
+}
+
+/// Render Fig 10 (utilisation as a proportion of the base core).
+pub fn render_fig10() -> String {
+    let mut t = Table::new(&["Processor", "LUT x", "MUX x", "Registers x", "Power x"])
+        .with_title("Fig 10 — resource utilisation relative to baseline");
+    for v in &VARIANTS {
+        let a = area_of(v);
+        t.row(vec![
+            v.name.to_string(),
+            format!("{:.3}", a.lut as f64 / BASELINE.lut as f64),
+            format!("{:.3}", a.mux as f64 / BASELINE.mux as f64),
+            format!("{:.3}", a.regs as f64 / BASELINE.regs as f64),
+            format!("{:.3}", a.power_mw / BASELINE.power_mw),
+        ]);
+    }
+    t.render()
+}

@@ -1,0 +1,143 @@
+//! One-model end-to-end flow: spec → 5 compiled cores → simulate → verify
+//! → measure.  This is the rust twin of the paper's Fig 1 pipeline with the
+//! FPGA replaced by the cycle-accurate core model.
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::compiler::{self, Compiled};
+use crate::hw::{area_of, energy_mj, AreaReport, EnergyPoint};
+use crate::models;
+use crate::runtime;
+use crate::sim::{NopHook, Variant, VARIANTS};
+
+/// Flow configuration.
+#[derive(Clone, Debug)]
+pub struct FlowOptions {
+    /// How many golden inputs to run (the paper averages 2 inferences).
+    pub n_inputs: usize,
+    /// Also execute the AOT HLO artifact via PJRT and cross-check.
+    pub use_pjrt: bool,
+    /// Watchdog budget per inference.
+    pub max_instrs: u64,
+    /// Which variants to build/run.
+    pub variants: Vec<Variant>,
+}
+
+impl Default for FlowOptions {
+    fn default() -> Self {
+        FlowOptions {
+            n_inputs: 2,
+            use_pjrt: false,
+            max_instrs: 1 << 36,
+            variants: VARIANTS.to_vec(),
+        }
+    }
+}
+
+/// Measured results for one core variant.
+#[derive(Clone, Debug)]
+pub struct VariantMetrics {
+    pub variant: Variant,
+    /// Average per-inference retired instructions.
+    pub instrs: u64,
+    /// Average per-inference cycles.
+    pub cycles: u64,
+    /// Program memory bytes.
+    pub pm_bytes: u32,
+    /// Data memory bytes.
+    pub dm_bytes: u32,
+    pub area: AreaReport,
+    pub energy: EnergyPoint,
+    /// Speedup vs v0 (cycles ratio).
+    pub speedup: f64,
+    pub rewrite: compiler::rewrite::RewriteStats,
+    pub zol_loops: u64,
+}
+
+/// End-to-end result for one model.
+#[derive(Clone, Debug)]
+pub struct FlowResult {
+    pub model: String,
+    pub n_inputs: usize,
+    /// ISS outputs matched the exporter's golden logits on every variant.
+    pub verified_golden: bool,
+    /// ISS outputs matched the PJRT-executed HLO artifact (if requested).
+    pub verified_pjrt: Option<bool>,
+    pub metrics: Vec<VariantMetrics>,
+    pub total_macs: u64,
+}
+
+/// Compile + simulate + verify one model across core variants.
+pub fn run_flow(artifacts: &Path, name: &str, opts: &FlowOptions) -> Result<FlowResult> {
+    let spec = models::load(artifacts, name)
+        .with_context(|| format!("loading model {name}"))?;
+    let io = runtime::load_golden_io(artifacts, name)
+        .with_context(|| format!("loading golden I/O for {name}"))?;
+    ensure!(!io.inputs.is_empty(), "{name}: no golden inputs");
+    let n = opts.n_inputs.min(io.inputs.len());
+
+    // optional PJRT golden path (executes the AOT HLO artifact)
+    let pjrt = if opts.use_pjrt {
+        let rt = runtime::Runtime::cpu()?;
+        Some(rt.load_model(artifacts, name, spec.input_shape, spec.output_elems())?)
+    } else {
+        None
+    };
+
+    let mut verified_golden = true;
+    let mut verified_pjrt = opts.use_pjrt.then_some(true);
+    let mut metrics = Vec::new();
+    let mut v0_cycles = None;
+
+    for &variant in &opts.variants {
+        let c: Compiled = compiler::compile(&spec, variant)
+            .with_context(|| format!("compiling {name} for {}", variant.name))?;
+        let mut tot_instrs = 0u64;
+        let mut tot_cycles = 0u64;
+        for (i, input) in io.inputs.iter().take(n).enumerate() {
+            let (got, stats) = compiler::execute_compiled(
+                &c,
+                &spec,
+                input,
+                opts.max_instrs,
+                &mut NopHook,
+            )?;
+            tot_instrs += stats.instrs;
+            tot_cycles += stats.cycles;
+            if got != io.outputs[i] {
+                verified_golden = false;
+            }
+            if let Some(g) = &pjrt {
+                let want = g.run(input)?;
+                if got != want {
+                    verified_pjrt = Some(false);
+                }
+            }
+        }
+        let cycles = tot_cycles / n as u64;
+        let v0c = *v0_cycles.get_or_insert(cycles);
+        metrics.push(VariantMetrics {
+            variant,
+            instrs: tot_instrs / n as u64,
+            cycles,
+            pm_bytes: c.pm_bytes(),
+            dm_bytes: c.dm_bytes(),
+            area: area_of(&variant),
+            energy: energy_mj(&variant, cycles),
+            speedup: v0c as f64 / cycles as f64,
+            rewrite: c.rewrite_stats,
+            zol_loops: c.flatten_stats.zol_loops,
+        });
+    }
+
+    Ok(FlowResult {
+        model: name.to_string(),
+        n_inputs: n,
+        verified_golden,
+        verified_pjrt,
+        metrics,
+        total_macs: spec.total_macs(),
+    })
+}

@@ -1,0 +1,14 @@
+//! The end-to-end MARVEL flow (paper Fig 1/Fig 2) and the experiment
+//! regeneration harness.
+//!
+//! `flow` drives one model through the whole system — load the AOT-exported
+//! spec, compile for all five core variants, simulate, verify against the
+//! exporter's golden outputs (and optionally the PJRT-executed HLO
+//! artifact), and attach the area/power/energy models.  `experiments`
+//! regenerates every table and figure of the paper's evaluation from those
+//! runs (see DESIGN.md §5 for the experiment index).
+
+pub mod experiments;
+pub mod flow;
+
+pub use flow::{run_flow, FlowOptions, FlowResult, VariantMetrics};

@@ -1,0 +1,89 @@
+//! nML-style model fragments (the paper's Fig 6 hand-off artifact).
+//!
+//! ASIP Designer consumes nML + PDG to generate both the RTL and the
+//! retargeted compiler; we emit the same *shape* of description for each
+//! proposed extension so a user of the real Synopsys flow could paste it
+//! into the trv32p3 model.  (Offline these are documentation artifacts: our
+//! ISS + rewrite passes play the roles of Go/Chess.)
+
+/// nML for the fixed-register mac (compare paper Listing 1 / Fig 6).
+pub fn mac_nml() -> String {
+    r#"opn mac_instr()
+{
+  action {
+    stage EX:
+      x20 = add(x20, mul(x21, x22)) @alu;
+  }
+  syntax : "mac";
+  image  : "0100000"::"00000"::"00000"::"000"::"00000"::"1011011";
+}
+"#
+    .to_string()
+}
+
+/// nML for add2i with an (a, b)-bit immediate split.
+pub fn add2i_nml(bits_small: u32, bits_large: u32) -> String {
+    format!(
+        r#"opn add2i_instr(rs1: c5u, rs2: c5u, i1: c{bits_small}u, i2: c{bits_large}u)
+{{
+  action {{
+    stage EX:
+      rs1 = add(rs1, i1) @alu;
+      rs2 = add(rs2, i2) @alu2;
+  }}
+  syntax : "add2i " rs1 "," rs2 "," i1 "," i2;
+  image  : i2::i1[4..3]::rs2::i1[2..0]::rs1::"0101011";
+}}
+"#
+    )
+}
+
+/// nML for fusedmac (paper Fig 6).
+pub fn fusedmac_nml(bits_small: u32, bits_large: u32) -> String {
+    format!(
+        r#"opn fusedmac_instr(rs1: c5u, rs2: c5u, i1: c{bits_small}u, i2: c{bits_large}u)
+{{
+  action {{
+    stage EX:
+      x20 = add(x20, mul(x21, x22)) @mac;
+      rs1 = add(rs1, i1) @alu;
+      rs2 = add(rs2, i2) @alu2;
+  }}
+  syntax : "fusedmac " rs1 "," rs2 "," i1 "," i2;
+  image  : i2::i1[4..3]::rs2::i1[2..0]::rs1::"0001011";
+}}
+"#
+    )
+}
+
+/// nML for the zero-overhead-loop register file + PCU hooks.
+pub fn zol_nml() -> String {
+    r#"reg ZC<1,32>;  // loop count
+reg ZS<1,32>;  // start address
+reg ZE<1,32>;  // end address
+
+opn dlpi_instr(cnt: c5u, len: c12u)
+{
+  action {
+    stage EX:
+      ZC = cnt; ZS = add(PC, 4) @pcu; ZE = add(PC, add(4, mul(len, 4))) @pcu;
+  }
+  syntax : "dlpi " cnt "," len;
+  image  : len::cnt::"001"::"00000"::"1110111";
+}
+// PCU: if (nPC == ZE && ZC > 1) { ZC = ZC - 1; nPC = ZS; }
+"#
+    .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fragments_mention_key_fields() {
+        assert!(super::mac_nml().contains("1011011"));
+        let a = super::add2i_nml(5, 10);
+        assert!(a.contains("c5u") && a.contains("c10u") && a.contains("0101011"));
+        assert!(super::fusedmac_nml(5, 10).contains("0001011"));
+        assert!(super::zol_nml().contains("ZC"));
+    }
+}

@@ -1,0 +1,55 @@
+//! Energy model — the paper's eq. (1): E = P · (C / f).
+//!
+//! P comes from the calibrated area/power model, C from the cycle-accurate
+//! simulation, f is the 100 MHz evaluation clock (§III.B: chosen because v4
+//! meets timing at 100 MHz on the ZCU104 with no RTL changes).
+
+use super::area::area_of;
+use crate::sim::Variant;
+
+/// Evaluation clock (Hz).
+pub const CLOCK_HZ: f64 = 100_000_000.0;
+
+/// One (variant, model) energy measurement.
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyPoint {
+    pub cycles: u64,
+    pub power_mw: f64,
+    pub time_ms: f64,
+    pub energy_mj: f64,
+}
+
+/// Energy per inference in millijoules for `cycles` on `variant`.
+pub fn energy_mj(variant: &Variant, cycles: u64) -> EnergyPoint {
+    let power_mw = area_of(variant).power_mw;
+    let time_s = cycles as f64 / CLOCK_HZ;
+    EnergyPoint {
+        cycles,
+        power_mw,
+        time_ms: time_s * 1e3,
+        energy_mj: power_mw * time_s, // mW · s = mJ
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{V0, V4};
+
+    #[test]
+    fn eq1_arithmetic() {
+        // 1e8 cycles at 100 MHz = 1 s; at 830 mW that is 830 mJ.
+        let e = energy_mj(&V0, 100_000_000);
+        assert!((e.time_ms - 1000.0).abs() < 1e-9);
+        assert!((e.energy_mj - 830.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn v4_halving_cycles_halves_energy_modulo_power_delta() {
+        let e0 = energy_mj(&V0, 2_000_000);
+        let e4 = energy_mj(&V4, 1_000_000);
+        // 2x cycle reduction at +2.3% power => ~1.96x energy reduction
+        let ratio = e0.energy_mj / e4.energy_mj;
+        assert!(ratio > 1.9 && ratio < 2.0, "ratio {ratio}");
+    }
+}

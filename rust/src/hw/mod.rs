@@ -1,0 +1,16 @@
+//! Hardware cost models: FPGA area, power, and energy per inference.
+//!
+//! The paper implements each core variant on a ZCU104 with Vivado and
+//! reports LUT/MUX/register/DSP utilisation and post-implementation power
+//! (Table 8, Fig 10) plus energy per inference E = P·C/f at f = 100 MHz
+//! (eq. 1, Fig 12).  Offline we replace Vivado with a **parametric model**:
+//! a baseline-core cost plus one calibrated increment per functional unit,
+//! where the increments are the exact deltas of the paper's Table 8 — so the
+//! variant table reproduces the paper by construction, and `extgen` can
+//! price *proposed* extensions with the same unit costs (DESIGN.md §2).
+
+pub mod area;
+pub mod energy;
+
+pub use area::{area_of, overhead, AreaReport, FuCost, BASELINE, FU_COSTS};
+pub use energy::{energy_mj, EnergyPoint, CLOCK_HZ};

@@ -1,0 +1,272 @@
+//! Instruction decoding: 32-bit machine words → [`Instr`].
+//!
+//! `decode` is total over the words `encode` produces (round-trip property
+//! tested) and returns a structured error for everything else — the
+//! simulator surfaces that as an illegal-instruction trap, which is also how
+//! running v1..v4 binaries on a v0 core fails loudly rather than silently.
+
+use super::*;
+
+/// Decode failure (the simulator's illegal-instruction trap payload).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DecodeError {
+    pub word: u32,
+    pub reason: &'static str,
+}
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "illegal instruction {:#010x}: {}", self.word, self.reason)
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+fn err(word: u32, reason: &'static str) -> Result<Instr, DecodeError> {
+    Err(DecodeError { word, reason })
+}
+
+#[inline]
+fn rd(w: u32) -> Reg {
+    ((w >> 7) & 0x1f) as Reg
+}
+#[inline]
+fn rs1(w: u32) -> Reg {
+    ((w >> 15) & 0x1f) as Reg
+}
+#[inline]
+fn rs2(w: u32) -> Reg {
+    ((w >> 20) & 0x1f) as Reg
+}
+#[inline]
+fn funct3(w: u32) -> u32 {
+    (w >> 12) & 0b111
+}
+#[inline]
+fn funct7(w: u32) -> u32 {
+    w >> 25
+}
+
+/// Sign-extended 12-bit I-type immediate.
+#[inline]
+fn imm_i(w: u32) -> i32 {
+    (w as i32) >> 20
+}
+
+/// Decode one machine word.
+pub fn decode(w: u32) -> Result<Instr, DecodeError> {
+    use opcodes::*;
+    match w & 0x7f {
+        LUI => Ok(Instr::Lui { rd: rd(w), imm: (w & 0xffff_f000) as i32 }),
+        AUIPC => Ok(Instr::Auipc { rd: rd(w), imm: (w & 0xffff_f000) as i32 }),
+        JAL => {
+            let i = ((((w >> 31) & 1) << 20)
+                | (((w >> 12) & 0xff) << 12)
+                | (((w >> 20) & 1) << 11)
+                | (((w >> 21) & 0x3ff) << 1)) as i32;
+            let offset = (i << 11) >> 11; // sign-extend 21 bits
+            Ok(Instr::Jal { rd: rd(w), offset })
+        }
+        JALR => {
+            if funct3(w) != 0 {
+                return err(w, "jalr funct3");
+            }
+            Ok(Instr::Jalr { rd: rd(w), rs1: rs1(w), offset: imm_i(w) })
+        }
+        BRANCH => {
+            let op = match funct3(w) {
+                0b000 => BranchOp::Beq,
+                0b001 => BranchOp::Bne,
+                0b100 => BranchOp::Blt,
+                0b101 => BranchOp::Bge,
+                0b110 => BranchOp::Bltu,
+                0b111 => BranchOp::Bgeu,
+                _ => return err(w, "branch funct3"),
+            };
+            let i = ((((w >> 31) & 1) << 12)
+                | (((w >> 7) & 1) << 11)
+                | (((w >> 25) & 0x3f) << 5)
+                | (((w >> 8) & 0xf) << 1)) as i32;
+            let offset = (i << 19) >> 19; // sign-extend 13 bits
+            Ok(Instr::Branch { op, rs1: rs1(w), rs2: rs2(w), offset })
+        }
+        LOAD => {
+            let op = match funct3(w) {
+                0b000 => LoadOp::Lb,
+                0b001 => LoadOp::Lh,
+                0b010 => LoadOp::Lw,
+                0b100 => LoadOp::Lbu,
+                0b101 => LoadOp::Lhu,
+                _ => return err(w, "load funct3"),
+            };
+            Ok(Instr::Load { op, rd: rd(w), rs1: rs1(w), offset: imm_i(w) })
+        }
+        STORE => {
+            let op = match funct3(w) {
+                0b000 => StoreOp::Sb,
+                0b001 => StoreOp::Sh,
+                0b010 => StoreOp::Sw,
+                _ => return err(w, "store funct3"),
+            };
+            let offset =
+                ((((w >> 25) << 5) | ((w >> 7) & 0x1f)) as i32) << 20 >> 20;
+            Ok(Instr::Store { op, rs2: rs2(w), rs1: rs1(w), offset })
+        }
+        OP_IMM => {
+            let (op, imm) = match funct3(w) {
+                0b000 => (AluImmOp::Addi, imm_i(w)),
+                0b010 => (AluImmOp::Slti, imm_i(w)),
+                0b011 => (AluImmOp::Sltiu, imm_i(w)),
+                0b100 => (AluImmOp::Xori, imm_i(w)),
+                0b110 => (AluImmOp::Ori, imm_i(w)),
+                0b111 => (AluImmOp::Andi, imm_i(w)),
+                0b001 => {
+                    if funct7(w) != 0 {
+                        return err(w, "slli funct7");
+                    }
+                    (AluImmOp::Slli, ((w >> 20) & 0x1f) as i32)
+                }
+                0b101 => match funct7(w) {
+                    0b000_0000 => (AluImmOp::Srli, ((w >> 20) & 0x1f) as i32),
+                    0b010_0000 => (AluImmOp::Srai, ((w >> 20) & 0x1f) as i32),
+                    _ => return err(w, "srli/srai funct7"),
+                },
+                _ => unreachable!(),
+            };
+            Ok(Instr::OpImm { op, rd: rd(w), rs1: rs1(w), imm })
+        }
+        OP => {
+            let op = match (funct7(w), funct3(w)) {
+                (0b000_0000, 0b000) => AluOp::Add,
+                (0b010_0000, 0b000) => AluOp::Sub,
+                (0b000_0000, 0b001) => AluOp::Sll,
+                (0b000_0000, 0b010) => AluOp::Slt,
+                (0b000_0000, 0b011) => AluOp::Sltu,
+                (0b000_0000, 0b100) => AluOp::Xor,
+                (0b000_0000, 0b101) => AluOp::Srl,
+                (0b010_0000, 0b101) => AluOp::Sra,
+                (0b000_0000, 0b110) => AluOp::Or,
+                (0b000_0000, 0b111) => AluOp::And,
+                (0b000_0001, 0b000) => AluOp::Mul,
+                (0b000_0001, 0b001) => AluOp::Mulh,
+                (0b000_0001, 0b010) => AluOp::Mulhsu,
+                (0b000_0001, 0b011) => AluOp::Mulhu,
+                (0b000_0001, 0b100) => AluOp::Div,
+                (0b000_0001, 0b101) => AluOp::Divu,
+                (0b000_0001, 0b110) => AluOp::Rem,
+                (0b000_0001, 0b111) => AluOp::Remu,
+                _ => return err(w, "op funct7/funct3"),
+            };
+            Ok(Instr::Op { op, rd: rd(w), rs1: rs1(w), rs2: rs2(w) })
+        }
+        MISC_MEM => Ok(Instr::Fence),
+        SYSTEM => match w >> 20 {
+            0 => Ok(Instr::Ecall),
+            1 => Ok(Instr::Ebreak),
+            _ => err(w, "system imm"),
+        },
+        // --- custom ---
+        CUSTOM2_MAC => {
+            if funct7(w) == 0b010_0000 && funct3(w) == 0 {
+                Ok(Instr::Mac)
+            } else {
+                err(w, "mac funct fields")
+            }
+        }
+        CUSTOM1_ADD2I => {
+            let (r1, r2, i1, i2) = fused_fields(w);
+            Ok(Instr::Add2i { rs1: r1, rs2: r2, i1, i2 })
+        }
+        CUSTOM0_FUSEDMAC => {
+            let (r1, r2, i1, i2) = fused_fields(w);
+            Ok(Instr::FusedMac { rs1: r1, rs2: r2, i1, i2 })
+        }
+        ZOL1 => {
+            let body_len = (w >> 20) as u16;
+            if body_len == 0 {
+                return err(w, "zol body_len 0");
+            }
+            match funct3(w) {
+                0b000 => Ok(Instr::Dlp { rs1: rs1(w), body_len }),
+                0b001 => {
+                    let count = rs1(w);
+                    if count == 0 {
+                        return err(w, "dlpi count 0");
+                    }
+                    Ok(Instr::Dlpi { count, body_len })
+                }
+                0b010 => Ok(Instr::Zlp { rs1: rs1(w), body_len }),
+                _ => err(w, "zol1 funct3"),
+            }
+        }
+        ZOL2 => match funct3(w) {
+            0b000 => Ok(Instr::SetZc { rs1: rs1(w) }),
+            0b001 => Ok(Instr::SetZs { rs1: rs1(w) }),
+            0b010 => Ok(Instr::SetZe { rs1: rs1(w) }),
+            _ => err(w, "zol2 funct3"),
+        },
+        _ => err(w, "unknown opcode"),
+    }
+}
+
+/// Shared field extraction for add2i/fusedmac (Tables 5/6).
+fn fused_fields(w: u32) -> (Reg, Reg, u8, u16) {
+    let r1 = rd(w); // rs1 sits in the rd slot
+    let r2 = rs1(w); // rs2 sits in the rs1 slot
+    let i1 = ((funct3(w) as u8) & 0b111) | ((((w >> 20) & 0b11) as u8) << 3);
+    let i2 = (w >> 22) as u16;
+    (r1, r2, i1, i2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::encode::encode;
+    use super::*;
+
+    #[test]
+    fn decode_known_words() {
+        // addi x10, x11, -3
+        assert_eq!(
+            decode(0xffd5_8513).unwrap(),
+            Instr::OpImm { op: AluImmOp::Addi, rd: 10, rs1: 11, imm: -3 }
+        );
+        // ecall
+        assert_eq!(decode(0x0000_0073).unwrap(), Instr::Ecall);
+    }
+
+    #[test]
+    fn illegal_words_rejected() {
+        assert!(decode(0xffff_ffff).is_err());
+        assert!(decode(0x0000_0000).is_err()); // opcode 0 is not valid
+        // branch with funct3=010 is illegal
+        let bad = 0b0000000_00001_00010_010_00000_1100011u32;
+        assert!(decode(bad).is_err());
+    }
+
+    #[test]
+    fn negative_offsets_roundtrip() {
+        for &off in &[-4096i32, -2, 0, 2, 4094] {
+            let i = Instr::Branch {
+                op: BranchOp::Blt,
+                rs1: 3,
+                rs2: 4,
+                offset: off,
+            };
+            assert_eq!(decode(encode(&i)).unwrap(), i, "offset {off}");
+        }
+        for &off in &[-(1 << 20), -2, 0, 2, (1 << 20) - 2] {
+            let i = Instr::Jal { rd: 1, offset: off };
+            assert_eq!(decode(encode(&i)).unwrap(), i, "offset {off}");
+        }
+    }
+
+    #[test]
+    fn fused_fields_roundtrip() {
+        for (i1, i2) in [(0u8, 0u16), (31, 1023), (5, 1), (24, 512)] {
+            let i = Instr::FusedMac { rs1: 9, rs2: 10, i1, i2 };
+            assert_eq!(decode(encode(&i)).unwrap(), i);
+            let i = Instr::Add2i { rs1: 30, rs2: 31, i1, i2 };
+            assert_eq!(decode(encode(&i)).unwrap(), i);
+        }
+    }
+}

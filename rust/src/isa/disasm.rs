@@ -1,0 +1,84 @@
+//! Disassembly: [`Instr`] → assembly text (the format used by the Fig 5
+//! listings and the simulator traces).
+
+use super::*;
+
+fn r(reg: Reg) -> &'static str {
+    REG_NAMES[reg as usize]
+}
+
+/// Render one instruction as assembly text.
+pub fn disasm(i: &Instr) -> String {
+    match *i {
+        Instr::Lui { rd, imm } => format!("lui {}, {:#x}", r(rd), (imm as u32) >> 12),
+        Instr::Auipc { rd, imm } => {
+            format!("auipc {}, {:#x}", r(rd), (imm as u32) >> 12)
+        }
+        Instr::Jal { rd, offset } => format!("jal {}, {}", r(rd), offset),
+        Instr::Jalr { rd, rs1, offset } => {
+            format!("jalr {}, {}({})", r(rd), offset, r(rs1))
+        }
+        Instr::Branch { rs1, rs2, offset, .. } => {
+            format!("{} {}, {}, {}", i.mnemonic(), r(rs1), r(rs2), offset)
+        }
+        Instr::Load { rd, rs1, offset, .. } => {
+            format!("{} {}, {}({})", i.mnemonic(), r(rd), offset, r(rs1))
+        }
+        Instr::Store { rs2, rs1, offset, .. } => {
+            format!("{} {}, {}({})", i.mnemonic(), r(rs2), offset, r(rs1))
+        }
+        Instr::OpImm { rd, rs1, imm, .. } => {
+            format!("{} {}, {}, {}", i.mnemonic(), r(rd), r(rs1), imm)
+        }
+        Instr::Op { rd, rs1, rs2, .. } => {
+            format!("{} {}, {}, {}", i.mnemonic(), r(rd), r(rs1), r(rs2))
+        }
+        Instr::Fence => "fence".into(),
+        Instr::Ecall => "ecall".into(),
+        Instr::Ebreak => "ebreak".into(),
+        Instr::Mac => "mac".into(), // fixed x20, x21, x22 (Listing 1)
+        Instr::Add2i { rs1, rs2, i1, i2 } => {
+            format!("add2i {}, {}, {}, {}", r(rs1), r(rs2), i1, i2)
+        }
+        Instr::FusedMac { rs1, rs2, i1, i2 } => {
+            format!("fusedmac {}, {}, {}, {}", r(rs1), r(rs2), i1, i2)
+        }
+        Instr::Dlp { rs1, body_len } => format!("dlp {}, {}", r(rs1), body_len),
+        Instr::Dlpi { count, body_len } => {
+            format!("dlpi {}, {}", count, body_len)
+        }
+        Instr::Zlp { rs1, body_len } => format!("zlp {}, {}", r(rs1), body_len),
+        Instr::SetZc { rs1 } => format!("set.zc {}", r(rs1)),
+        Instr::SetZs { rs1 } => format!("set.zs {}", r(rs1)),
+        Instr::SetZe { rs1 } => format!("set.ze {}", r(rs1)),
+    }
+}
+
+impl std::fmt::Display for Instr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&disasm(self))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn formats() {
+        assert_eq!(
+            disasm(&Instr::OpImm { op: AluImmOp::Addi, rd: 10, rs1: 10, imm: 1 }),
+            "addi x10, x10, 1"
+        );
+        assert_eq!(
+            disasm(&Instr::Load { op: LoadOp::Lb, rd: 21, rs1: 5, offset: -4 }),
+            "lb x21, -4(x5)"
+        );
+        assert_eq!(disasm(&Instr::Mac), "mac");
+        assert_eq!(
+            disasm(&Instr::FusedMac { rs1: 5, rs2: 6, i1: 1, i2: 128 }),
+            "fusedmac x5, x6, 1, 128"
+        );
+        assert_eq!(disasm(&Instr::Dlpi { count: 7, body_len: 3 }), "dlpi 7, 3");
+    }
+}

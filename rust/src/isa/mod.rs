@@ -1,0 +1,380 @@
+//! The RV32IM instruction set plus MARVEL's four custom extensions.
+//!
+//! The baseline matches the Synopsys trv32p3 the paper starts from: RV32I
+//! integer instructions + the M extension (hardware mul/div/rem).  The
+//! custom extensions occupy exactly the opcodes of the paper's Table 3:
+//!
+//! | extension  | opcode      | paper encoding            |
+//! |------------|-------------|---------------------------|
+//! | `fusedmac` | `0001011`   | custom-0 (Table 6)        |
+//! | `add2i`    | `0101011`   | custom-1 (Table 5)        |
+//! | `mac`      | `1011011`   | custom-2 (Table 4)        |
+//! | `zol` 1/2  | `1110111`   | reserved row 11/col 101   |
+//! | `zol` 2/2  | `1011111`   | row 10/col 111            |
+//!
+//! The paper's Table 7 (zol decoding) is not fully legible in the source
+//! scan; our zol encodings keep the documented opcode split and the five
+//! instruction names (`dlp`, `dlpi`, `zlp`, `set.zc/zs/ze`) with a
+//! conventional I-type field layout (documented on [`Instr`]).
+
+pub mod decode;
+pub mod disasm;
+pub mod encode;
+
+/// Architectural register index (x0..x31).
+pub type Reg = u8;
+
+/// ABI names for pretty-printing.
+pub const REG_NAMES: [&str; 32] = [
+    "x0", "x1", "x2", "x3", "x4", "x5", "x6", "x7", "x8", "x9", "x10", "x11",
+    "x12", "x13", "x14", "x15", "x16", "x17", "x18", "x19", "x20", "x21",
+    "x22", "x23", "x24", "x25", "x26", "x27", "x28", "x29", "x30", "x31",
+];
+
+/// The fixed registers of the `mac` / `fusedmac` datapath (paper §II.C.1:
+/// rd = x20, rs1 = x21, rs2 = x22, hardwired to cut decoder area).
+pub const MAC_RD: Reg = 20;
+pub const MAC_RS1: Reg = 21;
+pub const MAC_RS2: Reg = 22;
+
+/// Register-register ALU ops (OP opcode, incl. the M extension).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AluOp {
+    Add, Sub, Sll, Slt, Sltu, Xor, Srl, Sra, Or, And,
+    Mul, Mulh, Mulhsu, Mulhu, Div, Divu, Rem, Remu,
+}
+
+/// Register-immediate ALU ops (OP-IMM opcode).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AluImmOp {
+    Addi, Slti, Sltiu, Xori, Ori, Andi, Slli, Srli, Srai,
+}
+
+/// Conditional branches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BranchOp {
+    Beq, Bne, Blt, Bge, Bltu, Bgeu,
+}
+
+/// Loads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LoadOp {
+    Lb, Lh, Lw, Lbu, Lhu,
+}
+
+/// Stores.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum StoreOp {
+    Sb, Sh, Sw,
+}
+
+/// A decoded instruction.
+///
+/// Custom-extension semantics:
+/// - `Mac`: `x20 += x21 * x22` (1 cycle; replaces `mul`+`add`).
+/// - `Add2i { rs1, rs2, i1, i2 }`: `rs1 += i1; rs2 += i2` with
+///   i1 ∈ [0, 31] (5 bits), i2 ∈ [0, 1023] (10 bits) — the split chosen
+///   from the paper's Fig 4 histogram analysis.
+/// - `FusedMac`: `Mac` + `Add2i` in one cycle (the 4-instruction
+///   `addi,addi,mul,add` conv inner-loop pattern).
+/// - `Dlp { rs1, body_len }`: arm the zero-overhead loop — `ZC = x[rs1]`,
+///   `ZS = pc+4`, `ZE = pc+4+4·body_len`; hardware loops back from ZE to ZS
+///   `ZC` times at zero cycle cost.  `Dlpi` takes a 5-bit immediate count;
+///   `Zlp` is the zero-iteration-safe variant (skips the body when
+///   `x[rs1] == 0`).  `SetZc/SetZs/SetZe` write the loop registers directly
+///   (used when the body is produced far from the loop head).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Instr {
+    Lui { rd: Reg, imm: i32 },
+    Auipc { rd: Reg, imm: i32 },
+    Jal { rd: Reg, offset: i32 },
+    Jalr { rd: Reg, rs1: Reg, offset: i32 },
+    Branch { op: BranchOp, rs1: Reg, rs2: Reg, offset: i32 },
+    Load { op: LoadOp, rd: Reg, rs1: Reg, offset: i32 },
+    Store { op: StoreOp, rs2: Reg, rs1: Reg, offset: i32 },
+    OpImm { op: AluImmOp, rd: Reg, rs1: Reg, imm: i32 },
+    Op { op: AluOp, rd: Reg, rs1: Reg, rs2: Reg },
+    Fence,
+    Ecall,
+    Ebreak,
+    // --- MARVEL custom extensions ---
+    Mac,
+    Add2i { rs1: Reg, rs2: Reg, i1: u8, i2: u16 },
+    FusedMac { rs1: Reg, rs2: Reg, i1: u8, i2: u16 },
+    Dlp { rs1: Reg, body_len: u16 },
+    Dlpi { count: u8, body_len: u16 },
+    Zlp { rs1: Reg, body_len: u16 },
+    SetZc { rs1: Reg },
+    SetZs { rs1: Reg },
+    SetZe { rs1: Reg },
+}
+
+/// Opcode constants (Table 3).
+pub mod opcodes {
+    pub const LOAD: u32 = 0b000_0011;
+    pub const CUSTOM0_FUSEDMAC: u32 = 0b000_1011;
+    pub const OP_IMM: u32 = 0b001_0011;
+    pub const AUIPC: u32 = 0b001_0111;
+    pub const STORE: u32 = 0b010_0011;
+    pub const CUSTOM1_ADD2I: u32 = 0b010_1011;
+    pub const OP: u32 = 0b011_0011;
+    pub const LUI: u32 = 0b011_0111;
+    pub const CUSTOM2_MAC: u32 = 0b101_1011;
+    pub const ZOL2: u32 = 0b101_1111;
+    pub const BRANCH: u32 = 0b110_0011;
+    pub const JALR: u32 = 0b110_0111;
+    pub const JAL: u32 = 0b110_1111;
+    pub const SYSTEM: u32 = 0b111_0011;
+    pub const ZOL1: u32 = 0b111_0111;
+    pub const MISC_MEM: u32 = 0b000_1111;
+}
+
+impl Instr {
+    /// Mnemonic class used by the profiler's pattern tables (Fig 3 legend).
+    pub fn mnemonic(&self) -> &'static str {
+        match self {
+            Instr::Lui { .. } => "lui",
+            Instr::Auipc { .. } => "auipc",
+            Instr::Jal { .. } => "jal",
+            Instr::Jalr { .. } => "jalr",
+            Instr::Branch { op, .. } => match op {
+                BranchOp::Beq => "beq",
+                BranchOp::Bne => "bne",
+                BranchOp::Blt => "blt",
+                BranchOp::Bge => "bge",
+                BranchOp::Bltu => "bltu",
+                BranchOp::Bgeu => "bgeu",
+            },
+            Instr::Load { op, .. } => match op {
+                LoadOp::Lb => "lb",
+                LoadOp::Lh => "lh",
+                LoadOp::Lw => "lw",
+                LoadOp::Lbu => "lbu",
+                LoadOp::Lhu => "lhu",
+            },
+            Instr::Store { op, .. } => match op {
+                StoreOp::Sb => "sb",
+                StoreOp::Sh => "sh",
+                StoreOp::Sw => "sw",
+            },
+            Instr::OpImm { op, .. } => match op {
+                AluImmOp::Addi => "addi",
+                AluImmOp::Slti => "slti",
+                AluImmOp::Sltiu => "sltiu",
+                AluImmOp::Xori => "xori",
+                AluImmOp::Ori => "ori",
+                AluImmOp::Andi => "andi",
+                AluImmOp::Slli => "slli",
+                AluImmOp::Srli => "srli",
+                AluImmOp::Srai => "srai",
+            },
+            Instr::Op { op, .. } => match op {
+                AluOp::Add => "add",
+                AluOp::Sub => "sub",
+                AluOp::Sll => "sll",
+                AluOp::Slt => "slt",
+                AluOp::Sltu => "sltu",
+                AluOp::Xor => "xor",
+                AluOp::Srl => "srl",
+                AluOp::Sra => "sra",
+                AluOp::Or => "or",
+                AluOp::And => "and",
+                AluOp::Mul => "mul",
+                AluOp::Mulh => "mulh",
+                AluOp::Mulhsu => "mulhsu",
+                AluOp::Mulhu => "mulhu",
+                AluOp::Div => "div",
+                AluOp::Divu => "divu",
+                AluOp::Rem => "rem",
+                AluOp::Remu => "remu",
+            },
+            Instr::Fence => "fence",
+            Instr::Ecall => "ecall",
+            Instr::Ebreak => "ebreak",
+            Instr::Mac => "mac",
+            Instr::Add2i { .. } => "add2i",
+            Instr::FusedMac { .. } => "fusedmac",
+            Instr::Dlp { .. } => "dlp",
+            Instr::Dlpi { .. } => "dlpi",
+            Instr::Zlp { .. } => "zlp",
+            Instr::SetZc { .. } => "set.zc",
+            Instr::SetZs { .. } => "set.zs",
+            Instr::SetZe { .. } => "set.ze",
+        }
+    }
+
+    /// Dense mnemonic index for array-indexed counters (the profiler's hot
+    /// path — avoids a map lookup per retired instruction).  Indices are
+    /// stable positions in [`MNEMONICS`].
+    #[inline]
+    pub fn mnemonic_idx(&self) -> usize {
+        match self {
+            Instr::Lui { .. } => 0,
+            Instr::Auipc { .. } => 1,
+            Instr::Jal { .. } => 2,
+            Instr::Jalr { .. } => 3,
+            Instr::Branch { op, .. } => 4 + *op as usize,
+            Instr::Load { op, .. } => 10 + *op as usize,
+            Instr::Store { op, .. } => 15 + *op as usize,
+            Instr::OpImm { op, .. } => 18 + *op as usize,
+            Instr::Op { op, .. } => 27 + *op as usize,
+            Instr::Fence => 45,
+            Instr::Ecall => 46,
+            Instr::Ebreak => 47,
+            Instr::Mac => 48,
+            Instr::Add2i { .. } => 49,
+            Instr::FusedMac { .. } => 50,
+            Instr::Dlp { .. } => 51,
+            Instr::Dlpi { .. } => 52,
+            Instr::Zlp { .. } => 53,
+            Instr::SetZc { .. } => 54,
+            Instr::SetZs { .. } => 55,
+            Instr::SetZe { .. } => 56,
+        }
+    }
+
+    /// Is this one of the four MARVEL extensions?
+    pub fn is_custom(&self) -> bool {
+        matches!(
+            self,
+            Instr::Mac
+                | Instr::Add2i { .. }
+                | Instr::FusedMac { .. }
+                | Instr::Dlp { .. }
+                | Instr::Dlpi { .. }
+                | Instr::Zlp { .. }
+                | Instr::SetZc { .. }
+                | Instr::SetZs { .. }
+                | Instr::SetZe { .. }
+        )
+    }
+}
+
+/// Mnemonic table indexed by [`Instr::mnemonic_idx`].
+pub const MNEMONICS: [&str; 57] = [
+    "lui", "auipc", "jal", "jalr",
+    "beq", "bne", "blt", "bge", "bltu", "bgeu",
+    "lb", "lh", "lw", "lbu", "lhu",
+    "sb", "sh", "sw",
+    "addi", "slti", "sltiu", "xori", "ori", "andi", "slli", "srli", "srai",
+    "add", "sub", "sll", "slt", "sltu", "xor", "srl", "sra", "or", "and",
+    "mul", "mulh", "mulhsu", "mulhu", "div", "divu", "rem", "remu",
+    "fence", "ecall", "ebreak",
+    "mac", "add2i", "fusedmac", "dlp", "dlpi", "zlp",
+    "set.zc", "set.zs", "set.ze",
+];
+
+/// Generate a random *valid* instruction (all fields in encodable range) —
+/// shared by the round-trip property test and the ISS fuzzers.
+pub fn random_instr(rng: &mut crate::util::rng::Rng) -> Instr {
+    let reg = |rng: &mut crate::util::rng::Rng| rng.int_in(0, 31) as Reg;
+    let imm12 = |rng: &mut crate::util::rng::Rng| rng.int_in(-2048, 2047);
+    match rng.int_in(0, 17) {
+        0 => Instr::Lui { rd: reg(rng), imm: (rng.next_u32() & 0xffff_f000) as i32 },
+        1 => Instr::Auipc { rd: reg(rng), imm: (rng.next_u32() & 0xffff_f000) as i32 },
+        2 => Instr::Jal { rd: reg(rng), offset: rng.int_in(-(1 << 19), (1 << 19) - 1) * 2 },
+        3 => Instr::Jalr { rd: reg(rng), rs1: reg(rng), offset: imm12(rng) },
+        4 => {
+            let op = *rng.choice(&[
+                BranchOp::Beq, BranchOp::Bne, BranchOp::Blt,
+                BranchOp::Bge, BranchOp::Bltu, BranchOp::Bgeu,
+            ]);
+            Instr::Branch { op, rs1: reg(rng), rs2: reg(rng),
+                            offset: rng.int_in(-2048, 2047) * 2 }
+        }
+        5 => {
+            let op = *rng.choice(&[LoadOp::Lb, LoadOp::Lh, LoadOp::Lw,
+                                   LoadOp::Lbu, LoadOp::Lhu]);
+            Instr::Load { op, rd: reg(rng), rs1: reg(rng), offset: imm12(rng) }
+        }
+        6 => {
+            let op = *rng.choice(&[StoreOp::Sb, StoreOp::Sh, StoreOp::Sw]);
+            Instr::Store { op, rs2: reg(rng), rs1: reg(rng), offset: imm12(rng) }
+        }
+        7 => {
+            let op = *rng.choice(&[
+                AluImmOp::Addi, AluImmOp::Slti, AluImmOp::Sltiu, AluImmOp::Xori,
+                AluImmOp::Ori, AluImmOp::Andi, AluImmOp::Slli, AluImmOp::Srli,
+                AluImmOp::Srai,
+            ]);
+            let imm = match op {
+                AluImmOp::Slli | AluImmOp::Srli | AluImmOp::Srai => rng.int_in(0, 31),
+                _ => imm12(rng),
+            };
+            Instr::OpImm { op, rd: reg(rng), rs1: reg(rng), imm }
+        }
+        8 => {
+            let op = *rng.choice(&[
+                AluOp::Add, AluOp::Sub, AluOp::Sll, AluOp::Slt, AluOp::Sltu,
+                AluOp::Xor, AluOp::Srl, AluOp::Sra, AluOp::Or, AluOp::And,
+                AluOp::Mul, AluOp::Mulh, AluOp::Mulhsu, AluOp::Mulhu,
+                AluOp::Div, AluOp::Divu, AluOp::Rem, AluOp::Remu,
+            ]);
+            Instr::Op { op, rd: reg(rng), rs1: reg(rng), rs2: reg(rng) }
+        }
+        9 => Instr::Fence,
+        10 => Instr::Ecall,
+        11 => Instr::Mac,
+        12 => Instr::Add2i {
+            rs1: reg(rng), rs2: reg(rng),
+            i1: rng.int_in(0, 31) as u8, i2: rng.int_in(0, 1023) as u16,
+        },
+        13 => Instr::FusedMac {
+            rs1: reg(rng), rs2: reg(rng),
+            i1: rng.int_in(0, 31) as u8, i2: rng.int_in(0, 1023) as u16,
+        },
+        14 => Instr::Dlp { rs1: reg(rng), body_len: rng.int_in(1, 4095) as u16 },
+        15 => Instr::Dlpi {
+            count: rng.int_in(1, 31) as u8,
+            body_len: rng.int_in(1, 4095) as u16,
+        },
+        16 => Instr::Zlp { rs1: reg(rng), body_len: rng.int_in(1, 4095) as u16 },
+        _ => match rng.int_in(0, 2) {
+            0 => Instr::SetZc { rs1: reg(rng) },
+            1 => Instr::SetZs { rs1: reg(rng) },
+            _ => Instr::SetZe { rs1: reg(rng) },
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert_eq;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn prop_encode_decode_roundtrip() {
+        check("decode(encode(i)) == i", 20_000, |rng: &mut Rng| {
+            let i = random_instr(rng);
+            let w = encode::encode(&i);
+            let back = decode::decode(w)
+                .map_err(|e| format!("decode failed for {i:?}: {e}"))?;
+            prop_assert_eq!(back, i, "word {w:#010x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_mnemonic_idx_consistent_with_table() {
+        check("MNEMONICS[idx] == mnemonic()", 5_000, |rng: &mut Rng| {
+            let i = random_instr(rng);
+            prop_assert_eq!(MNEMONICS[i.mnemonic_idx()], i.mnemonic(),
+                            "instr {i:?}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_custom_opcodes_disjoint_from_rv32im() {
+        // Custom instructions must decode back as custom, never shadowing a
+        // base instruction (opcode-space correctness of Table 3).
+        check("custom stays custom", 5_000, |rng: &mut Rng| {
+            let i = random_instr(rng);
+            let back = decode::decode(encode::encode(&i)).unwrap();
+            prop_assert_eq!(back.is_custom(), i.is_custom(), "instr {i:?}");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,45 @@
+//! MARVEL — model-class aware custom RISC-V ISA extension generation for
+//! lightweight AI (reproduction).
+//!
+//! This crate is the Layer-3 coordinator of the three-layer architecture
+//! (see DESIGN.md): it owns the end-to-end flow the paper contributes —
+//! profiling TVM-class generated code on a baseline RV32IM core, mining the
+//! model-class instruction patterns, generating the extended cores
+//! (v1 `mac`, v2 `add2i`, v3 `fusedmac`, v4 `zol`), compiling models with
+//! the pattern-rewriting compiler, and regenerating every table and figure
+//! of the paper's evaluation.
+//!
+//! Module map:
+//! - [`util`] — JSON, RNG, ASCII tables, property-test harness (offline
+//!   substitutes for serde/proptest/criterion).
+//! - [`isa`] — RV32IM + custom instruction encode/decode/disassemble.
+//! - [`sim`] — the instruction/cycle-accurate trv32p3-class simulator.
+//! - [`quant`] — the int8/int32 shift-requant arithmetic contract.
+//! - [`compiler`] — model spec → RV32 assembly → machine code, with the
+//!   Chess-style rewrite passes.
+//! - [`refexec`] — rust-native quantized reference executor (oracle).
+//! - [`models`] — spec loading + synthetic spec builders for tests.
+//! - [`profiler`] — retired-stream pattern mining (Fig 3, Fig 4).
+//! - [`extgen`] — automatic extension proposal from profiles (the
+//!   "model-class aware" discovery) + pseudo-nML emission (Fig 6).
+//! - [`hw`] — area/power/energy models calibrated to Table 8.
+//! - [`runtime`] — PJRT CPU client executing the AOT HLO golden model.
+//! - [`coordinator`] — flow orchestration + per-experiment report
+//!   generators (Fig 3/4/5/10/11/12, Tables 8/10).
+
+pub mod compiler;
+pub mod coordinator;
+pub mod extgen;
+pub mod hw;
+pub mod isa;
+pub mod models;
+pub mod profiler;
+pub mod quant;
+pub mod refexec;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

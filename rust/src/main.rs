@@ -1,0 +1,451 @@
+//! `marvel` — the MARVEL flow CLI (leader entrypoint).
+//!
+//! Subcommands mirror the paper's Fig 1 pipeline stages:
+//!
+//! ```text
+//! marvel flow     --model lenet5            end-to-end: compile x5, simulate,
+//!                                           verify vs golden (+ --pjrt), report
+//! marvel run      --model m --variant v4    one inference, cycle/instr stats
+//! marvel compile  --model m --variant v4    compile only; --dump-asm listing
+//! marvel profile  --model m                 v0 pattern profile (Fig 3 metrics)
+//! marvel extgen   --model m                 propose ISA extensions + nML
+//! marvel report   fig3|fig4|fig5|table8|fig10|fig11|fig12|table10|all
+//! marvel hw       [--fig10]                 area/power model
+//! marvel golden   --model m                 run the AOT HLO artifact via PJRT
+//! ```
+//!
+//! Arguments are hand-parsed (clap is unavailable offline).
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use anyhow::{bail, Context, Result};
+
+use marvel::coordinator::experiments::{self, ablation, fig11_cycles,
+                                       fig12_energy, fig3_patterns,
+                                       fig4_addi_hist, fig5_asm_diff,
+                                       table10_memory, table8_area};
+use marvel::coordinator::{run_flow, FlowOptions};
+use marvel::sim::Variant;
+use marvel::util::tables::{fmt_si, Table};
+use marvel::{compiler, extgen, models, profiler, refexec, runtime};
+
+/// Parsed command line: free args + --key[=value] options.
+struct Args {
+    free: Vec<String>,
+    opts: std::collections::BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut free = Vec::new();
+        let mut opts = std::collections::BTreeMap::new();
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().is_some_and(|n| !n.starts_with("--")) {
+                    opts.insert(key.to_string(), it.next().unwrap().clone());
+                } else {
+                    opts.insert(key.to_string(), "true".to_string());
+                }
+            } else {
+                free.push(a.clone());
+            }
+        }
+        Args { free, opts }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    fn flag(&self, key: &str) -> bool {
+        self.get(key) == Some("true")
+    }
+
+    fn model(&self) -> Result<String> {
+        self.get("model")
+            .map(str::to_string)
+            .context("--model <name> is required")
+    }
+
+    fn variant(&self) -> Result<Variant> {
+        let name = self.get("variant").unwrap_or("v4");
+        Variant::by_name(name).with_context(|| format!("unknown variant {name}"))
+    }
+
+    fn artifacts(&self) -> PathBuf {
+        PathBuf::from(self.get("artifacts").unwrap_or("artifacts"))
+    }
+
+    fn usize_opt(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+}
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match dispatch(&argv) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn dispatch(argv: &[String]) -> Result<()> {
+    let Some(cmd) = argv.first().map(String::as_str) else {
+        print_usage();
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..]);
+    match cmd {
+        "flow" => cmd_flow(&args),
+        "run" => cmd_run(&args),
+        "compile" => cmd_compile(&args),
+        "profile" => cmd_profile(&args),
+        "extgen" => cmd_extgen(&args),
+        "report" => cmd_report(&args),
+        "hw" => cmd_hw(&args),
+        "golden" => cmd_golden(&args),
+        "version" => {
+            println!("marvel {}", marvel::version());
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?} (try `marvel help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "marvel {} — model-class aware custom RISC-V extension generation\n\n\
+         usage: marvel <flow|run|compile|profile|extgen|report|hw|golden> \
+         [--model NAME] [--variant v0..v4] [--artifacts DIR] ...",
+        marvel::version()
+    );
+}
+
+fn cmd_flow(args: &Args) -> Result<()> {
+    let artifacts = args.artifacts();
+    let opts = FlowOptions {
+        n_inputs: args.usize_opt("n", 2),
+        use_pjrt: args.flag("pjrt"),
+        ..FlowOptions::default()
+    };
+    let model = args.model()?;
+    let f = run_flow(&artifacts, &model, &opts)?;
+    let mut t = Table::new(&[
+        "variant", "instrs", "cycles", "speedup", "PM (kB)", "DM (kB)",
+        "energy (mJ)",
+    ])
+    .with_title(&format!(
+        "MARVEL flow — {} ({} MACs, {} inferences, golden {}{})",
+        f.model,
+        fmt_si(f.total_macs),
+        f.n_inputs,
+        if f.verified_golden { "VERIFIED" } else { "FAILED" },
+        match f.verified_pjrt {
+            Some(true) => ", pjrt VERIFIED",
+            Some(false) => ", pjrt FAILED",
+            None => "",
+        }
+    ));
+    for m in &f.metrics {
+        t.row(vec![
+            m.variant.name.to_string(),
+            fmt_si(m.instrs),
+            fmt_si(m.cycles),
+            format!("{:.2}x", m.speedup),
+            format!("{:.2}", m.pm_bytes as f64 / 1024.0),
+            format!("{:.2}", m.dm_bytes as f64 / 1024.0),
+            format!("{:.4}", m.energy.energy_mj),
+        ]);
+    }
+    println!("{}", t.render());
+    if !f.verified_golden || f.verified_pjrt == Some(false) {
+        bail!("verification failed");
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let artifacts = args.artifacts();
+    let model = args.model()?;
+    let variant = args.variant()?;
+    let spec = models::load(&artifacts, &model)?;
+    let io = runtime::load_golden_io(&artifacts, &model)?;
+    let idx = args.usize_opt("input", 0).min(io.inputs.len() - 1);
+    let c = compiler::compile(&spec, variant)?;
+    // --trace N: print the first N retired instructions (the OCD/JTAG
+    // debugging substitute, paper §II.E.3)
+    let trace_n = args.usize_opt("trace", 0);
+    let (out, stats) = if trace_n > 0 {
+        let mut tracer = marvel::sim::TraceHook::new(trace_n);
+        let r = compiler::execute_compiled(
+            &c, &spec, &io.inputs[idx], 1 << 36, &mut tracer,
+        )?;
+        for line in &tracer.lines {
+            println!("{line}");
+        }
+        r
+    } else {
+        compiler::execute_compiled(
+            &c,
+            &spec,
+            &io.inputs[idx],
+            1 << 36,
+            &mut marvel::sim::NopHook,
+        )?
+    };
+    println!(
+        "{model} on {}: {} instrs, {} cycles ({:.3} ms @100MHz)",
+        variant.name,
+        fmt_si(stats.instrs),
+        fmt_si(stats.cycles),
+        stats.cycles as f64 / 1e5
+    );
+    println!("logits: {out:?}");
+    println!("golden: {:?}", io.outputs[idx]);
+    println!(
+        "match:  {}",
+        if out == io.outputs[idx] { "YES" } else { "NO" }
+    );
+    Ok(())
+}
+
+fn cmd_compile(args: &Args) -> Result<()> {
+    let artifacts = args.artifacts();
+    let model = args.model()?;
+    let variant = args.variant()?;
+    let spec = models::load(&artifacts, &model)?;
+    let c = compiler::compile(&spec, variant)?;
+    println!(
+        "{model} for {}: {} instrs, PM {:.2} kB, DM {:.2} kB",
+        variant.name,
+        c.instrs.len(),
+        c.pm_bytes() as f64 / 1024.0,
+        c.dm_bytes() as f64 / 1024.0
+    );
+    println!(
+        "rewrites: {} fusedmac, {} mac, {} add2i; {} zol loops",
+        c.rewrite_stats.fusedmac,
+        c.rewrite_stats.mac,
+        c.rewrite_stats.add2i,
+        c.flatten_stats.zol_loops
+    );
+    if let Some(out) = args.get("out") {
+        let bytes: Vec<u8> =
+            c.words.iter().flat_map(|w| w.to_le_bytes()).collect();
+        std::fs::write(out, &bytes)?;
+        println!("PM image written to {out}");
+    }
+    if args.flag("dump-asm") {
+        for (li, (s, e)) in c.layer_ranges.iter().enumerate() {
+            println!("; layer {li} ({})", spec.layers[li].op_name());
+            for i in *s..*e {
+                println!(
+                    "  {:#07x}  {:08x}  {}",
+                    i * 4,
+                    c.words[i],
+                    marvel::isa::disasm::disasm(&c.instrs[i])
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_profile(args: &Args) -> Result<()> {
+    let artifacts = args.artifacts();
+    let model = args.model()?;
+    let counts = fig3_patterns::profile_model(&artifacts, &model)?;
+    println!("{}", fig3_patterns::render(&artifacts, &[model.clone()])?);
+    println!("top addi immediate pairs (Fig 4):");
+    for ((a, b), n) in counts.top_addi_pairs(args.usize_opt("top", 12)) {
+        println!("  {a}_{b}: {}", fmt_si(n));
+    }
+    let (sa, sb, cov) = profiler::best_split(&counts.addi_imm_hist);
+    println!(
+        "add2i split: best {sa}+{sb} bits covers {:.2}%; paper 5+10 covers {:.2}%",
+        cov * 100.0,
+        profiler::split_coverage(&counts.addi_imm_hist, 5, 10) * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_extgen(args: &Args) -> Result<()> {
+    let artifacts = args.artifacts();
+    let model = args.model()?;
+    let counts = fig3_patterns::profile_model(&artifacts, &model)?;
+    let min = args
+        .get("min-savings")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.005);
+    let props = extgen::propose(&counts, min);
+    println!(
+        "extgen — {model}: {} proposals (min dynamic savings {:.1}%)\n",
+        props.len(),
+        min * 100.0
+    );
+    for p in &props {
+        println!(
+            "== {} (opcode {:#04x}) ==\n  pattern:    {}\n  dynamic:    \
+             {} occurrences, {} -> {} cycles ({:.1}% of total)\n  area:       \
+             {:+} LUT, {:+} regs, {:+} DSP, {:+.0} mW",
+            p.name,
+            p.opcode,
+            p.pattern,
+            fmt_si(p.occurrences),
+            fmt_si(p.cycles_before),
+            fmt_si(p.cycles_after),
+            p.savings_frac * 100.0,
+            p.cost.lut,
+            p.cost.regs,
+            p.cost.dsp,
+            p.cost.power_mw,
+        );
+        if let Some((a, b, cov)) = p.imm_split {
+            println!("  imm split:  {a}+{b} bits ({:.2}% coverage)", cov * 100.0);
+        }
+        if args.flag("nml") {
+            println!("  nML model:\n{}", indent(&p.nml, 4));
+        }
+        println!();
+    }
+    Ok(())
+}
+
+fn indent(s: &str, n: usize) -> String {
+    let pad = " ".repeat(n);
+    s.lines()
+        .map(|l| format!("{pad}{l}"))
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let artifacts = args.artifacts();
+    let which = args.free.first().map(String::as_str).unwrap_or("all");
+    let models = match args.get("model") {
+        Some(m) => vec![m.to_string()],
+        None => experiments::available_models(&artifacts),
+    };
+    if models.is_empty() {
+        bail!(
+            "no model artifacts found under {} — run `make artifacts`",
+            artifacts.display()
+        );
+    }
+    let needs_flows = matches!(which, "fig11" | "fig12" | "table10" | "all");
+    let flows = if needs_flows {
+        let opts = FlowOptions {
+            n_inputs: args.usize_opt("n", 2),
+            use_pjrt: args.flag("pjrt"),
+            ..FlowOptions::default()
+        };
+        models
+            .iter()
+            .map(|m| run_flow(&artifacts, m, &opts))
+            .collect::<Result<Vec<_>>>()?
+    } else {
+        Vec::new()
+    };
+
+    let mut out = String::new();
+    if matches!(which, "fig3" | "all") {
+        out.push_str(&fig3_patterns::render(&artifacts, &models)?);
+        out.push('\n');
+    }
+    if matches!(which, "fig4" | "all") {
+        out.push_str(&fig4_addi_hist::render(
+            &artifacts,
+            &models,
+            args.usize_opt("top", 10),
+        )?);
+        out.push('\n');
+    }
+    if matches!(which, "fig5" | "all") {
+        let m = models.iter().find(|m| *m != "lenet5").unwrap_or(&models[0]);
+        out.push_str(&fig5_asm_diff::render(&artifacts, m, None)?);
+        out.push('\n');
+    }
+    if matches!(which, "table8" | "all") {
+        out.push_str(&table8_area::render());
+        out.push('\n');
+    }
+    if matches!(which, "fig10" | "all") {
+        out.push_str(&table8_area::render_fig10());
+        out.push('\n');
+    }
+    if matches!(which, "fig11" | "all") {
+        out.push_str(&fig11_cycles::render(&flows));
+        out.push('\n');
+    }
+    if matches!(which, "fig12" | "all") {
+        out.push_str(&fig12_energy::render(&flows));
+        out.push('\n');
+    }
+    if matches!(which, "table10" | "all") {
+        out.push_str(&table10_memory::render(&flows));
+        out.push('\n');
+    }
+    if matches!(which, "ablation" | "all") {
+        out.push_str(&ablation::render(&artifacts, &models)?);
+        out.push('\n');
+    }
+    if out.is_empty() {
+        bail!("unknown report {which:?}");
+    }
+    println!("{out}");
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, &out)?;
+        eprintln!("report written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_hw(args: &Args) -> Result<()> {
+    println!("{}", table8_area::render());
+    if args.flag("fig10") {
+        println!("{}", table8_area::render_fig10());
+    }
+    Ok(())
+}
+
+fn cmd_golden(args: &Args) -> Result<()> {
+    let artifacts = args.artifacts();
+    let model = args.model()?;
+    let spec = models::load(&artifacts, &model)?;
+    let io = runtime::load_golden_io(&artifacts, &model)?;
+    let rt = runtime::Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let g = rt.load_model(&artifacts, &model, spec.input_shape,
+                          spec.output_elems())?;
+    let mut ok = true;
+    for (i, x) in io.inputs.iter().enumerate() {
+        let got = g.run(x)?;
+        let want_ref = refexec::run(&spec, x)?;
+        let exported = &io.outputs[i];
+        let matches = got == *exported && got == want_ref;
+        ok &= matches;
+        println!(
+            "input {i}: pjrt {:?} exported {:?} refexec {:?} -> {}",
+            got,
+            exported,
+            want_ref,
+            if matches { "MATCH" } else { "MISMATCH" }
+        );
+    }
+    if !ok {
+        bail!("golden verification failed");
+    }
+    println!("golden model verified: PJRT == exporter == refexec");
+    Ok(())
+}

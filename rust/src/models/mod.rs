@@ -1,0 +1,39 @@
+//! Model access: artifact loading plus synthetic spec builders.
+//!
+//! Real models come from the AOT exporter (`artifacts/models/*.json`, loaded
+//! via [`crate::compiler::spec::load_spec`]).  The [`synth`] module builds
+//! small in-process specs for tests and property fuzzing — no artifacts
+//! required, which keeps `cargo test` self-contained.
+
+pub mod synth;
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::compiler::spec::{load_spec, ModelSpec};
+
+/// Paper model names, Table-10 order.
+pub const PAPER_MODELS: [&str; 6] = [
+    "lenet5",
+    "mobilenet_v1",
+    "resnet50",
+    "vgg16",
+    "mobilenet_v2",
+    "densenet121",
+];
+
+/// Load one model from the artifacts directory.
+pub fn load(artifacts: &Path, name: &str) -> Result<ModelSpec> {
+    load_spec(artifacts, name)
+}
+
+/// Load every paper model present in the artifacts directory.
+pub fn load_available(artifacts: &Path) -> Vec<(String, ModelSpec)> {
+    PAPER_MODELS
+        .iter()
+        .filter_map(|name| {
+            load_spec(artifacts, name).ok().map(|s| (name.to_string(), s))
+        })
+        .collect()
+}

@@ -1,0 +1,303 @@
+//! Synthetic spec builders: deterministic tiny models and a randomized
+//! model generator for the compile→simulate≡reference property tests.
+//!
+//! The generator exercises every operator the six paper models use
+//! (conv/dw/dense/pools/add/concat), random strides/pads/shifts, and weights
+//! spanning the full int8 range — saturation and rounding paths included.
+//! No calibration: equivalence between the ISS and the reference executor
+//! must hold for *any* shift, not just non-saturating ones.
+
+use std::collections::BTreeMap;
+
+use crate::compiler::spec::{Dtype, Layer, ModelSpec, Tensor};
+use crate::util::rng::Rng;
+
+/// Incremental spec builder (rust twin of python's SpecBuilder).
+pub struct Builder {
+    name: String,
+    input_shape: [usize; 3],
+    layers: Vec<Layer>,
+    tensors: BTreeMap<String, Tensor>,
+    rng: Rng,
+    tid: usize,
+}
+
+impl Builder {
+    pub fn new(name: &str, input_shape: [usize; 3], seed: u64) -> Self {
+        Builder {
+            name: name.into(),
+            input_shape,
+            layers: Vec::new(),
+            tensors: BTreeMap::new(),
+            rng: Rng::new(seed),
+            tid: 0,
+        }
+    }
+
+    pub fn shape_of(&self, idx: i32) -> [usize; 3] {
+        if idx == -1 {
+            self.input_shape
+        } else {
+            match &self.layers[idx as usize] {
+                Layer::Conv2d { out_shape, .. }
+                | Layer::DwConv2d { out_shape, .. }
+                | Layer::MaxPool { out_shape, .. }
+                | Layer::AvgPool2d { out_shape, .. }
+                | Layer::AvgPoolGlobal { out_shape, .. }
+                | Layer::Concat { out_shape, .. } => *out_shape,
+                Layer::Add { shape, .. } => [shape[0], shape[1], shape[2]],
+                Layer::Dense { out_len, .. } => [*out_len, 1, 1],
+            }
+        }
+    }
+
+    pub fn last(&self) -> i32 {
+        self.layers.len() as i32 - 1
+    }
+
+    fn tensor(&mut self, shape: Vec<usize>, dtype: Dtype, data: Vec<i32>) -> String {
+        let name = format!("t{}", self.tid);
+        self.tid += 1;
+        self.tensors.insert(
+            name.clone(),
+            Tensor { name: name.clone(), shape, dtype, data },
+        );
+        name
+    }
+
+    fn rand_w(&mut self, n: usize) -> Vec<i32> {
+        (0..n).map(|_| self.rng.int_in(-127, 127)).collect()
+    }
+
+    fn rand_b(&mut self, n: usize) -> Vec<i32> {
+        (0..n).map(|_| self.rng.int_in(-1000, 1000)).collect()
+    }
+
+    pub fn conv2d(
+        &mut self,
+        input: i32,
+        oc: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+        shift: u32,
+        relu: bool,
+    ) -> i32 {
+        let [ic, ih, iw] = self.shape_of(input);
+        let oh = (ih + 2 * pad - k) / stride + 1;
+        let ow = (iw + 2 * pad - k) / stride + 1;
+        let wdata = self.rand_w(oc * ic * k * k);
+        let w = self.tensor(vec![oc, ic, k, k], Dtype::I8, wdata);
+        let bdata = self.rand_b(oc);
+        let b = self.tensor(vec![oc], Dtype::I32, bdata);
+        self.layers.push(Layer::Conv2d {
+            input, w, b, stride, pad, shift, relu,
+            in_shape: [ic, ih, iw],
+            out_shape: [oc, oh, ow],
+        });
+        self.last()
+    }
+
+    pub fn dwconv2d(
+        &mut self,
+        input: i32,
+        k: usize,
+        stride: usize,
+        pad: usize,
+        shift: u32,
+        relu: bool,
+    ) -> i32 {
+        let [c, ih, iw] = self.shape_of(input);
+        let oh = (ih + 2 * pad - k) / stride + 1;
+        let ow = (iw + 2 * pad - k) / stride + 1;
+        let wdata = self.rand_w(c * k * k);
+        let w = self.tensor(vec![c, k, k], Dtype::I8, wdata);
+        let bdata = self.rand_b(c);
+        let b = self.tensor(vec![c], Dtype::I32, bdata);
+        self.layers.push(Layer::DwConv2d {
+            input, w, b, stride, pad, shift, relu,
+            in_shape: [c, ih, iw],
+            out_shape: [c, oh, ow],
+        });
+        self.last()
+    }
+
+    pub fn dense(&mut self, input: i32, out_len: usize, shift: u32, relu: bool) -> i32 {
+        let [c, h, w] = self.shape_of(input);
+        let in_len = c * h * w;
+        let wdata = self.rand_w(out_len * in_len);
+        let wt = self.tensor(vec![out_len, in_len], Dtype::I8, wdata);
+        let bdata = self.rand_b(out_len);
+        let b = self.tensor(vec![out_len], Dtype::I32, bdata);
+        self.layers.push(Layer::Dense {
+            input, w: wt, b, shift, relu, in_len, out_len,
+        });
+        self.last()
+    }
+
+    pub fn maxpool(&mut self, input: i32, k: usize, stride: usize) -> i32 {
+        let [c, ih, iw] = self.shape_of(input);
+        let out_shape = [c, (ih - k) / stride + 1, (iw - k) / stride + 1];
+        self.layers.push(Layer::MaxPool {
+            input, k, stride, in_shape: [c, ih, iw], out_shape,
+        });
+        self.last()
+    }
+
+    pub fn avgpool2d(&mut self, input: i32, k: usize, stride: usize) -> i32 {
+        let [c, ih, iw] = self.shape_of(input);
+        let shift = (k * k).trailing_zeros();
+        assert!(k * k == 1 << shift, "avgpool window must be a power of two");
+        let out_shape = [c, (ih - k) / stride + 1, (iw - k) / stride + 1];
+        self.layers.push(Layer::AvgPool2d {
+            input, k, stride, shift, in_shape: [c, ih, iw], out_shape,
+        });
+        self.last()
+    }
+
+    pub fn avgpool_global(&mut self, input: i32) -> i32 {
+        let [c, h, w] = self.shape_of(input);
+        let shift = (h * w).trailing_zeros();
+        assert!(h * w == 1 << shift, "global pool window must be 2^k");
+        self.layers.push(Layer::AvgPoolGlobal {
+            input, shift, in_shape: [c, h, w], out_shape: [c, 1, 1],
+        });
+        self.last()
+    }
+
+    pub fn add(&mut self, a: i32, b: i32, relu: bool) -> i32 {
+        let sa = self.shape_of(a);
+        assert_eq!(sa, self.shape_of(b), "add shape mismatch");
+        self.layers.push(Layer::Add { a, b, relu, shape: sa.to_vec() });
+        self.last()
+    }
+
+    pub fn concat(&mut self, inputs: Vec<i32>) -> i32 {
+        let shapes: Vec<[usize; 3]> =
+            inputs.iter().map(|&i| self.shape_of(i)).collect();
+        let (h, w) = (shapes[0][1], shapes[0][2]);
+        assert!(shapes.iter().all(|s| s[1] == h && s[2] == w));
+        let c = shapes.iter().map(|s| s[0]).sum();
+        self.layers.push(Layer::Concat {
+            inputs,
+            in_shapes: shapes,
+            out_shape: [c, h, w],
+        });
+        self.last()
+    }
+
+    pub fn finish(self, num_classes: usize) -> ModelSpec {
+        let spec = ModelSpec {
+            name: self.name,
+            profile: "synth".into(),
+            input_shape: self.input_shape,
+            num_classes,
+            layers: self.layers,
+            tensors: self.tensors,
+        };
+        spec.validate().expect("synthetic spec invalid");
+        spec
+    }
+
+    /// Random int8 input for this model.
+    pub fn random_input(spec: &ModelSpec, rng: &mut Rng) -> Vec<i32> {
+        (0..spec.input_elems()).map(|_| rng.int8()).collect()
+    }
+}
+
+/// Small fixed net covering conv (padded + unpadded), pool, dw and dense.
+pub fn tiny_conv_net(seed: u64) -> ModelSpec {
+    let mut b = Builder::new("tiny", [2, 8, 8], seed);
+    let c1 = b.conv2d(-1, 4, 3, 1, 1, 6, true); // padded conv
+    let p1 = b.maxpool(c1, 2, 2);
+    let d1 = b.dwconv2d(p1, 3, 1, 1, 5, true);
+    let c2 = b.conv2d(d1, 6, 3, 1, 0, 7, false); // valid conv
+    b.dense(c2, 5, 4, false);
+    b.finish(5)
+}
+
+/// A LeNet-5*-shaped net (Table 9) with random weights.
+pub fn lenet_shaped(seed: u64) -> ModelSpec {
+    let mut b = Builder::new("lenet_shaped", [1, 28, 28], seed);
+    let c1 = b.conv2d(-1, 12, 6, 2, 0, 7, true);
+    let c2 = b.conv2d(c1, 32, 6, 2, 0, 8, true);
+    b.dense(c2, 10, 7, false);
+    b.finish(10)
+}
+
+/// Residual + concat net (the ResNet/DenseNet graph shapes).
+pub fn residual_net(seed: u64) -> ModelSpec {
+    let mut b = Builder::new("residual", [3, 8, 8], seed);
+    let c1 = b.conv2d(-1, 8, 3, 1, 1, 6, true);
+    let c2 = b.conv2d(c1, 8, 3, 1, 1, 6, false);
+    let a = b.add(c1, c2, true);
+    let c3 = b.conv2d(a, 4, 1, 1, 0, 5, true);
+    let cat = b.concat(vec![a, c3]);
+    let t = b.conv2d(cat, 8, 1, 1, 0, 6, true);
+    let p = b.avgpool2d(t, 2, 2);
+    let g = b.avgpool_global(p);
+    b.dense(g, 3, 5, false);
+    b.finish(3)
+}
+
+/// Fully random model for property fuzzing.
+pub fn random_net(rng: &mut Rng) -> ModelSpec {
+    let c0 = rng.range_usize(1, 4);
+    let hw = *rng.choice(&[4usize, 6, 8, 9]);
+    let seed = rng.next_u64();
+    let mut b = Builder::new("fuzz", [c0, hw, hw], seed);
+    let mut cur: i32 = -1;
+    let n_layers = rng.range_usize(1, 6);
+    for _ in 0..n_layers {
+        let [c, h, w] = b.shape_of(cur);
+        let shift = rng.int_in(0, 10) as u32;
+        let relu = rng.bool();
+        match rng.int_in(0, 5) {
+            0 => {
+                let k = *rng.choice(&[1usize, 2, 3]);
+                let stride = rng.range_usize(1, 3);
+                let pad = rng.range_usize(0, 2);
+                if h + 2 * pad >= k && w + 2 * pad >= k {
+                    let oc = rng.range_usize(1, 5);
+                    cur = b.conv2d(cur, oc, k, stride, pad, shift, relu);
+                }
+            }
+            1 => {
+                let k = *rng.choice(&[1usize, 3]);
+                let pad = rng.range_usize(0, 2);
+                if h + 2 * pad >= k && w + 2 * pad >= k {
+                    cur = b.dwconv2d(cur, k, rng.range_usize(1, 3), pad, shift,
+                                     relu);
+                }
+            }
+            2 => {
+                if h >= 2 && w >= 2 {
+                    cur = b.maxpool(cur, 2, rng.range_usize(1, 3));
+                }
+            }
+            3 => {
+                if h >= 2 && w >= 2 {
+                    cur = b.avgpool2d(cur, 2, rng.range_usize(1, 3));
+                }
+            }
+            4 => {
+                // residual around a 3x3 same conv
+                if h >= 3 && w >= 3 {
+                    let y = b.conv2d(cur, c, 3, 1, 1, shift, false);
+                    cur = b.add(cur, y, relu);
+                }
+            }
+            _ => {
+                // dense branch + concat
+                if c <= 4 && h <= 6 {
+                    let y = b.conv2d(cur, rng.range_usize(1, 3), 1, 1, 0, shift,
+                                     relu);
+                    cur = b.concat(vec![cur, y]);
+                }
+            }
+        }
+    }
+    let classes = rng.range_usize(2, 6);
+    b.dense(cur, classes, rng.int_in(0, 10) as u32, false);
+    b.finish(classes)
+}

@@ -1,0 +1,93 @@
+//! Execution profiling: the data-driven half of MARVEL (paper §II.C).
+//!
+//! The paper's pitch is that its ISA extensions come from *profiling* the
+//! generated code on the baseline core rather than from assumed hotspots.
+//! [`ProfileHook`] watches the retired instruction stream of a v0 run and
+//! collects exactly the metrics of Fig 3 (pattern execution counts), Fig 4
+//! (consecutive-`addi` immediate-pair histogram) and the per-instruction
+//! cycle attribution behind Fig 5; [`crate::extgen`] then turns the profile
+//! into extension proposals.
+
+pub mod patterns;
+
+pub use patterns::{PatternCounts, ProfileHook};
+
+use std::collections::BTreeMap;
+
+/// The add2i immediate-split coverage analysis of §II.C.2: given the Fig 4
+/// histogram, what fraction of consecutive-addi pairs (weighted by their
+/// 2-cycle baseline cost — proportional to raw count) is covered by an
+/// (a, b)-bit unsigned immediate split, commuting the pair when needed?
+pub fn split_coverage(
+    hist: &BTreeMap<(i32, i32), u64>,
+    bits_small: u32,
+    bits_large: u32,
+) -> f64 {
+    let max_s = (1i64 << bits_small) - 1;
+    let max_l = (1i64 << bits_large) - 1;
+    let mut total = 0u64;
+    let mut covered = 0u64;
+    for (&(i1, i2), &n) in hist {
+        total += n;
+        let (a, b) = (i1 as i64, i2 as i64);
+        let fits = |x: i64, y: i64| x >= 0 && y >= 0 && x <= max_s && y <= max_l;
+        if fits(a, b) || fits(b, a) {
+            covered += n;
+        }
+    }
+    if total == 0 {
+        return 1.0;
+    }
+    covered as f64 / total as f64
+}
+
+/// Search all 15-bit splits (the encoding budget of the fused format) for
+/// the coverage-maximizing allocation — reproducing the paper's choice of
+/// 5 + 10 bits.
+pub fn best_split(hist: &BTreeMap<(i32, i32), u64>) -> (u32, u32, f64) {
+    let mut best = (0, 15, 0.0f64);
+    for a in 0..=15u32 {
+        let b = 15 - a;
+        let c = split_coverage(hist, a, b);
+        if c > best.2 {
+            best = (a, b, c);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hist(entries: &[((i32, i32), u64)]) -> BTreeMap<(i32, i32), u64> {
+        entries.iter().copied().collect()
+    }
+
+    #[test]
+    fn coverage_counts_commuted_pairs() {
+        // (600, 3): only fits with the small slot taking 3
+        let h = hist(&[((600, 3), 10)]);
+        assert_eq!(split_coverage(&h, 5, 10), 1.0);
+        // (600, 700): needs both large
+        let h = hist(&[((600, 700), 10)]);
+        assert_eq!(split_coverage(&h, 5, 10), 0.0);
+        // negative immediates are never covered
+        let h = hist(&[((-1, 3), 5)]);
+        assert_eq!(split_coverage(&h, 5, 10), 0.0);
+    }
+
+    #[test]
+    fn best_split_prefers_skewed_histograms() {
+        // mostly (1, 512)-like pairs: needs >=10 bits on the large side
+        let h = hist(&[((1, 512), 90), ((4, 900), 10)]);
+        let (a, b, c) = best_split(&h);
+        assert!(b >= 10, "split {a}/{b}");
+        assert_eq!(c, 1.0);
+    }
+
+    #[test]
+    fn empty_histogram_is_fully_covered() {
+        assert_eq!(split_coverage(&BTreeMap::new(), 5, 10), 1.0);
+    }
+}

@@ -1,0 +1,270 @@
+//! The retire-stream pattern miner (the instrument behind Fig 3 and Fig 4).
+//!
+//! Counts per-mnemonic retires and the consecutive patterns the paper's
+//! Table 2 defines:
+//!
+//! * `mul_add_count` — `mul` immediately followed by an `add` that
+//!   accumulates its product;
+//! * `addi_addi_count` — two consecutive in-place `addi`s to distinct
+//!   registers (+ the (i1, i2) immediate histogram of Fig 4);
+//! * `fusedmac_count` — the 4-instruction conv inner-loop group
+//!   (`mul, add, addi, addi` in our generated order; the paper lists the
+//!   same four instructions);
+//!
+//! plus taken/total branch counts (the `blt` motivation for `zol`) and
+//! per-PC cycle attribution (Fig 5's highlighted columns).
+
+use std::collections::BTreeMap;
+
+use crate::compiler::rewrite::patterns::{
+    match_addi_pair_loose, match_mul_add_loose,
+};
+use crate::isa::Instr;
+use crate::sim::RetireHook;
+
+/// Aggregated pattern statistics from one (or more) runs.
+#[derive(Clone, Debug)]
+pub struct PatternCounts {
+    /// Retired instructions per mnemonic, indexed by
+    /// [`crate::isa::Instr::mnemonic_idx`] (array-indexed: this counter is
+    /// bumped once per retired instruction — §Perf iteration 3).
+    pub mnem: [u64; crate::isa::MNEMONICS.len()],
+    /// Total retired instructions.
+    pub total: u64,
+    /// Total cycles.
+    pub cycles: u64,
+    /// `mul`+`add` accumulate pairs (Table 2: mul_add_count).
+    pub mul_add: u64,
+    /// Consecutive in-place `addi` pairs (Table 2: addi_addi_count).
+    pub addi_addi: u64,
+    /// The 4-instruction fusedmac group (Table 2: fusedmac_count).
+    pub fusedmac: u64,
+    /// Taken branches (pipeline-refill cycles — the zol target).
+    pub branches_taken: u64,
+    /// Fig 4 histogram: (first, second) immediate of consecutive addi pairs.
+    pub addi_imm_hist: BTreeMap<(i32, i32), u64>,
+}
+
+impl Default for PatternCounts {
+    fn default() -> Self {
+        PatternCounts {
+            mnem: [0; crate::isa::MNEMONICS.len()],
+            total: 0,
+            cycles: 0,
+            mul_add: 0,
+            addi_addi: 0,
+            fusedmac: 0,
+            branches_taken: 0,
+            addi_imm_hist: BTreeMap::new(),
+        }
+    }
+}
+
+impl PatternCounts {
+    pub fn count(&self, mnemonic: &str) -> u64 {
+        crate::isa::MNEMONICS
+            .iter()
+            .position(|&m| m == mnemonic)
+            .map(|i| self.mnem[i])
+            .unwrap_or(0)
+    }
+
+    /// Per-mnemonic counts as a (sparse) sorted map, for reports.
+    pub fn by_mnemonic(&self) -> BTreeMap<&'static str, u64> {
+        crate::isa::MNEMONICS
+            .iter()
+            .zip(self.mnem.iter())
+            .filter(|(_, &n)| n > 0)
+            .map(|(&m, &n)| (m, n))
+            .collect()
+    }
+
+    /// Merge another run's counts (multi-input profiling).
+    pub fn merge(&mut self, other: &PatternCounts) {
+        for (a, b) in self.mnem.iter_mut().zip(other.mnem.iter()) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.cycles += other.cycles;
+        self.mul_add += other.mul_add;
+        self.addi_addi += other.addi_addi;
+        self.fusedmac += other.fusedmac;
+        self.branches_taken += other.branches_taken;
+        for (k, v) in &other.addi_imm_hist {
+            *self.addi_imm_hist.entry(*k).or_insert(0) += v;
+        }
+    }
+
+    /// Top-n immediate pairs of the Fig 4 histogram (count-descending).
+    pub fn top_addi_pairs(&self, n: usize) -> Vec<((i32, i32), u64)> {
+        let mut v: Vec<_> =
+            self.addi_imm_hist.iter().map(|(k, c)| (*k, *c)).collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        v.truncate(n);
+        v
+    }
+}
+
+/// Retire hook that mines the pattern counts with a 4-instruction window.
+///
+/// §Perf: pattern matching is gated on the class of the *retiring*
+/// instruction (every mined pattern ends in `add` or `addi`), and the
+/// Fig 4 histogram keeps a one-entry cache for the hot bucket (the `1_1`
+/// inner-loop pair dominates every conv workload) so the BTreeMap is only
+/// touched on key changes.
+pub struct ProfileHook {
+    pub counts: PatternCounts,
+    window: [Option<Instr>; 3],
+    /// Cached histogram accumulator: (key, pending count).
+    hist_cache: ((i32, i32), u64),
+    /// Per-PC cycles/retires (Fig 5), sized to the program.
+    pub pc_cycles: Vec<u64>,
+    pub pc_retires: Vec<u64>,
+}
+
+impl ProfileHook {
+    pub fn new(program_words: usize) -> Self {
+        ProfileHook {
+            counts: PatternCounts::default(),
+            window: [None; 3],
+            hist_cache: ((0, 0), 0),
+            pc_cycles: vec![0; program_words],
+            pc_retires: vec![0; program_words],
+        }
+    }
+
+    #[inline]
+    fn hist_bump(&mut self, key: (i32, i32)) {
+        if self.hist_cache.1 > 0 && self.hist_cache.0 != key {
+            let (k, n) = self.hist_cache;
+            *self.counts.addi_imm_hist.entry(k).or_insert(0) += n;
+            self.hist_cache = (key, 1);
+        } else {
+            self.hist_cache = (key, self.hist_cache.1 + 1);
+        }
+    }
+
+    /// Flush the histogram cache (called automatically by `finish`).
+    fn flush(&mut self) {
+        if self.hist_cache.1 > 0 {
+            let (k, n) = self.hist_cache;
+            *self.counts.addi_imm_hist.entry(k).or_insert(0) += n;
+            self.hist_cache.1 = 0;
+        }
+    }
+
+    /// Finalize and take the counts (flushes internal caches).
+    pub fn finish(mut self) -> PatternCounts {
+        self.flush();
+        self.counts
+    }
+
+    /// Borrowing accessor that flushes first (for in-place use).
+    pub fn counts_flushed(&mut self) -> &PatternCounts {
+        self.flush();
+        &self.counts
+    }
+}
+
+impl RetireHook for ProfileHook {
+    fn retire(&mut self, pc: u32, instr: &Instr, cycles: u64) {
+        {
+            let c = &mut self.counts;
+            c.mnem[instr.mnemonic_idx()] += 1;
+            c.total += 1;
+            c.cycles += cycles;
+        }
+
+        // pattern windows, gated on the retiring instruction's class:
+        // every mined pattern ends in `add` (mac) or `addi` (add2i, quad)
+        let [p3, p2, p1] = self.window;
+        match instr {
+            Instr::Op { op: crate::isa::AluOp::Add, .. } => {
+                if let Some(p1) = p1 {
+                    if match_mul_add_loose(&p1, instr) {
+                        self.counts.mul_add += 1;
+                    }
+                }
+            }
+            Instr::OpImm { op: crate::isa::AluImmOp::Addi, .. } => {
+                if let Some(p1) = p1 {
+                    if let Some(pair) = match_addi_pair_loose(&p1, instr) {
+                        self.counts.addi_addi += 1;
+                        self.hist_bump(pair);
+                        // mul, add(acc), addi, addi — the fusedmac group
+                        if let (Some(p3), Some(p2)) = (p3, p2) {
+                            if match_mul_add_loose(&p3, &p2) {
+                                self.counts.fusedmac += 1;
+                            }
+                        }
+                    }
+                }
+            }
+            Instr::Branch { .. } => {
+                // cycle cost > not-taken cost means the branch redirected
+                if cycles > 1 {
+                    self.counts.branches_taken += 1;
+                }
+            }
+            _ => {}
+        }
+        self.window = [p2, p1, Some(*instr)];
+
+        let idx = (pc / 4) as usize;
+        if idx < self.pc_cycles.len() {
+            self.pc_cycles[idx] += cycles;
+            self.pc_retires[idx] += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile, execute_compiled};
+    use crate::models::synth::{tiny_conv_net, Builder};
+    use crate::sim::V0;
+    use crate::util::rng::Rng;
+
+    fn profile_tiny() -> PatternCounts {
+        let spec = tiny_conv_net(21);
+        let c = compile(&spec, V0).unwrap();
+        let mut hook = ProfileHook::new(c.words.len());
+        let mut rng = Rng::new(5);
+        let input = Builder::random_input(&spec, &mut rng);
+        execute_compiled(&c, &spec, &input, 1 << 32, &mut hook).unwrap();
+        hook.finish()
+    }
+
+    #[test]
+    fn conv_workload_shows_paper_patterns() {
+        let c = profile_tiny();
+        assert!(c.total > 1000);
+        // the Fig 3 patterns must all be present in generated conv code
+        assert!(c.mul_add > 0, "mul+add pairs: {}", c.mul_add);
+        assert!(c.addi_addi > 0, "addi pairs: {}", c.addi_addi);
+        assert!(c.fusedmac > 0, "fusedmac quads: {}", c.fusedmac);
+        assert!(c.branches_taken > 0);
+        // conv inner loop: every mul is followed by its accumulate
+        assert_eq!(c.mul_add, c.count("mul"));
+        // fusedmac groups can't outnumber their parts
+        assert!(c.fusedmac <= c.mul_add);
+        assert!(c.fusedmac <= c.addi_addi);
+        // histogram dominated by the (1, 1) inner-loop bump pair
+        let top = c.top_addi_pairs(1);
+        assert_eq!(top[0].0, (1, 1), "top pair {:?}", top);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let a = profile_tiny();
+        let mut m = a.clone();
+        m.merge(&a);
+        assert_eq!(m.total, 2 * a.total);
+        assert_eq!(m.fusedmac, 2 * a.fusedmac);
+        assert_eq!(
+            m.addi_imm_hist.values().sum::<u64>(),
+            2 * a.addi_imm_hist.values().sum::<u64>()
+        );
+    }
+}

@@ -1,0 +1,99 @@
+//! The rust mirror of `python/compile/quant.py` — MARVEL's quantized
+//! arithmetic contract.
+//!
+//! Everything downstream (the native reference executor, the codegen
+//! constants, the golden comparison against the PJRT artifact) depends on
+//! these four functions matching the Python definitions bit-for-bit.  The
+//! generated RV32 code implements `requant` as:
+//!
+//! ```text
+//! add  acc, acc, rnd   ; rnd = 1 << (shift-1), hoisted outside the loops
+//! srai acc, acc, shift
+//! blt/bge clamp to [relu ? 0 : -128, 127]
+//! ```
+
+pub const INT8_MIN: i32 = -128;
+pub const INT8_MAX: i32 = 127;
+
+/// Round-half-up arithmetic right shift (shift == 0 is the identity).
+#[inline]
+pub fn round_shift(acc: i32, shift: u32) -> i32 {
+    debug_assert!(shift < 32);
+    if shift == 0 {
+        acc
+    } else {
+        acc.wrapping_add(1 << (shift - 1)) >> shift
+    }
+}
+
+/// Requantize an int32 accumulator to int8 range: shift, clamp, optional
+/// ReLU floor (clamp order matches the generated code and the jnp model).
+#[inline]
+pub fn requant(acc: i32, shift: u32, relu: bool) -> i32 {
+    let v = round_shift(acc, shift);
+    let lo = if relu { 0 } else { INT8_MIN };
+    v.clamp(lo, INT8_MAX)
+}
+
+/// Saturating int8 add (residual connections), with optional ReLU.
+#[inline]
+pub fn saturating_add(a: i32, b: i32, relu: bool) -> i32 {
+    let v = (a + b).clamp(INT8_MIN, INT8_MAX);
+    if relu {
+        v.max(0)
+    } else {
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::{prop_assert, prop_assert_eq};
+
+    #[test]
+    fn round_shift_matches_python_examples() {
+        // mirrors python/tests/test_quant.py
+        assert_eq!(round_shift(5, 2), 1);
+        assert_eq!(round_shift(6, 2), 2);
+        assert_eq!(round_shift(7, 2), 2);
+        assert_eq!(round_shift(-5, 2), -1);
+        assert_eq!(round_shift(-6, 2), -1);
+        assert_eq!(round_shift(-7, 2), -2);
+        assert_eq!(round_shift(42, 0), 42);
+    }
+
+    #[test]
+    fn prop_round_shift_is_round_half_up() {
+        check("round_shift ≡ floor(x/2^s + 1/2)", 2000, |rng| {
+            let acc = rng.int_in(-10_000_000, 10_000_000);
+            let s = rng.int_in(0, 20) as u32;
+            let got = round_shift(acc, s);
+            let want = ((acc as f64) / f64::from(1u32 << s) + 0.5).floor() as i32;
+            prop_assert_eq!(got, want, "acc={acc} s={s}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_requant_in_range() {
+        check("requant lands in int8 range", 2000, |rng| {
+            let acc = rng.int_in(i32::MIN / 4, i32::MAX / 4);
+            let s = rng.int_in(0, 24) as u32;
+            let relu = rng.bool();
+            let v = requant(acc, s, relu);
+            let lo = if relu { 0 } else { INT8_MIN };
+            prop_assert!(v >= lo && v <= INT8_MAX, "v={v} acc={acc} s={s}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn saturating_add_edges() {
+        assert_eq!(saturating_add(127, 127, false), 127);
+        assert_eq!(saturating_add(-128, -128, false), -128);
+        assert_eq!(saturating_add(-5, 2, true), 0);
+        assert_eq!(saturating_add(-5, 2, false), -3);
+    }
+}

@@ -1,0 +1,330 @@
+//! Rust-native quantized reference executor — the in-process oracle.
+//!
+//! Executes a [`ModelSpec`] directly (plain nested loops over i32 buffers),
+//! mirroring `python/compile/kernels/ref.py` operator for operator.  Three
+//! uses:
+//! 1. oracle for the compiler round-trip property tests (compile → simulate
+//!    → compare), with no artifacts required;
+//! 2. fast golden path for the coordinator when the PJRT runtime is not
+//!    needed;
+//! 3. itself cross-validated against the AOT HLO artifact in the
+//!    `golden_artifacts` integration test, closing the Python↔Rust loop.
+//!
+//! Layouts match the exporter: activations CHW row-major, conv weights
+//! (OC, IC, KH, KW), dw weights (C, KH, KW), dense (O, I).
+
+use anyhow::{ensure, Result};
+
+use crate::compiler::spec::{Layer, ModelSpec};
+use crate::quant::{requant, saturating_add};
+
+/// In-bounds (zero-padded) input fetch for convolutions.
+#[inline]
+fn at_pad(x: &[i32], shape: [usize; 3], c: usize, y: isize, xc: isize) -> i32 {
+    let (h, w) = (shape[1] as isize, shape[2] as isize);
+    if y < 0 || y >= h || xc < 0 || xc >= w {
+        0
+    } else {
+        x[c * (h as usize) * (w as usize)
+            + (y as usize) * (w as usize)
+            + xc as usize]
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn conv2d(
+    x: &[i32],
+    in_shape: [usize; 3],
+    w: &[i32],
+    wshape: &[usize],
+    b: &[i32],
+    stride: usize,
+    pad: usize,
+    shift: u32,
+    relu: bool,
+    out_shape: [usize; 3],
+) -> Vec<i32> {
+    let [oc, oh, ow] = out_shape;
+    let (ic, kh, kw) = (wshape[1], wshape[2], wshape[3]);
+    let mut out = vec![0i32; oc * oh * ow];
+    for o in 0..oc {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut acc = b[o];
+                for i in 0..ic {
+                    for ky in 0..kh {
+                        for kx in 0..kw {
+                            let y = (oy * stride + ky) as isize - pad as isize;
+                            let xx = (ox * stride + kx) as isize - pad as isize;
+                            let xv = at_pad(x, in_shape, i, y, xx);
+                            let wv = w[((o * ic + i) * kh + ky) * kw + kx];
+                            acc = acc.wrapping_add(xv.wrapping_mul(wv));
+                        }
+                    }
+                }
+                out[(o * oh + oy) * ow + ox] = requant(acc, shift, relu);
+            }
+        }
+    }
+    out
+}
+
+#[allow(clippy::too_many_arguments)]
+fn dwconv2d(
+    x: &[i32],
+    in_shape: [usize; 3],
+    w: &[i32],
+    wshape: &[usize],
+    b: &[i32],
+    stride: usize,
+    pad: usize,
+    shift: u32,
+    relu: bool,
+    out_shape: [usize; 3],
+) -> Vec<i32> {
+    let [c, oh, ow] = out_shape;
+    let (kh, kw) = (wshape[1], wshape[2]);
+    let mut out = vec![0i32; c * oh * ow];
+    for ch in 0..c {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut acc = b[ch];
+                for ky in 0..kh {
+                    for kx in 0..kw {
+                        let y = (oy * stride + ky) as isize - pad as isize;
+                        let xx = (ox * stride + kx) as isize - pad as isize;
+                        let xv = at_pad(x, in_shape, ch, y, xx);
+                        let wv = w[(ch * kh + ky) * kw + kx];
+                        acc = acc.wrapping_add(xv.wrapping_mul(wv));
+                    }
+                }
+                out[(ch * oh + oy) * ow + ox] = requant(acc, shift, relu);
+            }
+        }
+    }
+    out
+}
+
+fn dense(
+    x: &[i32],
+    w: &[i32],
+    b: &[i32],
+    in_len: usize,
+    out_len: usize,
+    shift: u32,
+    relu: bool,
+) -> Vec<i32> {
+    let mut out = vec![0i32; out_len];
+    for o in 0..out_len {
+        let mut acc = b[o];
+        for i in 0..in_len {
+            acc = acc.wrapping_add(x[i].wrapping_mul(w[o * in_len + i]));
+        }
+        out[o] = requant(acc, shift, relu);
+    }
+    out
+}
+
+fn maxpool(
+    x: &[i32],
+    in_shape: [usize; 3],
+    k: usize,
+    stride: usize,
+    out_shape: [usize; 3],
+) -> Vec<i32> {
+    let [c, oh, ow] = out_shape;
+    let (ih, iw) = (in_shape[1], in_shape[2]);
+    let _ = ih;
+    let mut out = vec![0i32; c * oh * ow];
+    for ch in 0..c {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut m = i32::MIN;
+                for ky in 0..k {
+                    for kx in 0..k {
+                        let v = x[ch * ih * iw
+                            + (oy * stride + ky) * iw
+                            + (ox * stride + kx)];
+                        m = m.max(v);
+                    }
+                }
+                out[(ch * oh + oy) * ow + ox] = m;
+            }
+        }
+    }
+    out
+}
+
+fn avgpool2d(
+    x: &[i32],
+    in_shape: [usize; 3],
+    k: usize,
+    stride: usize,
+    shift: u32,
+    out_shape: [usize; 3],
+) -> Vec<i32> {
+    let [c, oh, ow] = out_shape;
+    let (ih, iw) = (in_shape[1], in_shape[2]);
+    let _ = ih;
+    let mut out = vec![0i32; c * oh * ow];
+    for ch in 0..c {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut acc = 0i32;
+                for ky in 0..k {
+                    for kx in 0..k {
+                        acc += x[ch * ih * iw
+                            + (oy * stride + ky) * iw
+                            + (ox * stride + kx)];
+                    }
+                }
+                out[(ch * oh + oy) * ow + ox] = requant(acc, shift, false);
+            }
+        }
+    }
+    out
+}
+
+fn avgpool_global(x: &[i32], in_shape: [usize; 3], shift: u32) -> Vec<i32> {
+    let [c, h, w] = in_shape;
+    (0..c)
+        .map(|ch| {
+            let acc: i32 = x[ch * h * w..(ch + 1) * h * w].iter().sum();
+            requant(acc, shift, false)
+        })
+        .collect()
+}
+
+/// Execute every layer; returns all intermediate activations (the last entry
+/// is the logits).
+pub fn run_all(spec: &ModelSpec, input: &[i32]) -> Result<Vec<Vec<i32>>> {
+    ensure!(
+        input.len() == spec.input_elems(),
+        "input len {} != expected {}",
+        input.len(),
+        spec.input_elems()
+    );
+    let mut outs: Vec<Vec<i32>> = Vec::with_capacity(spec.layers.len());
+    fn src<'a>(input: &'a [i32], outs: &'a [Vec<i32>], i: i32) -> &'a [i32] {
+        if i == -1 {
+            input
+        } else {
+            &outs[i as usize]
+        }
+    }
+    for layer in &spec.layers {
+        let out = match layer {
+            Layer::Conv2d {
+                input: inp, w, b, stride, pad, shift, relu, in_shape, out_shape,
+            } => {
+                let x = src(input, &outs, *inp);
+                let wt = spec.tensor(w)?;
+                let bt = spec.tensor(b)?;
+                conv2d(x, *in_shape, &wt.data, &wt.shape, &bt.data, *stride,
+                       *pad, *shift, *relu, *out_shape)
+            }
+            Layer::DwConv2d {
+                input: inp, w, b, stride, pad, shift, relu, in_shape, out_shape,
+            } => {
+                let x = src(input, &outs, *inp);
+                let wt = spec.tensor(w)?;
+                let bt = spec.tensor(b)?;
+                dwconv2d(x, *in_shape, &wt.data, &wt.shape, &bt.data, *stride,
+                         *pad, *shift, *relu, *out_shape)
+            }
+            Layer::Dense { input: inp, w, b, shift, relu, in_len, out_len } => {
+                let x = src(input, &outs, *inp);
+                let wt = spec.tensor(w)?;
+                let bt = spec.tensor(b)?;
+                dense(x, &wt.data, &bt.data, *in_len, *out_len, *shift, *relu)
+            }
+            Layer::MaxPool { input: inp, k, stride, in_shape, out_shape } => {
+                maxpool(src(input, &outs, *inp), *in_shape, *k, *stride,
+                        *out_shape)
+            }
+            Layer::AvgPool2d {
+                input: inp, k, stride, shift, in_shape, out_shape,
+            } => avgpool2d(src(input, &outs, *inp), *in_shape, *k, *stride,
+                           *shift, *out_shape),
+            Layer::AvgPoolGlobal { input: inp, shift, in_shape, .. } => {
+                avgpool_global(src(input, &outs, *inp), *in_shape, *shift)
+            }
+            Layer::Add { a, b, relu, .. } => {
+                let xa = src(input, &outs, *a);
+                let xb = src(input, &outs, *b);
+                ensure!(xa.len() == xb.len(), "add operand size mismatch");
+                xa.iter()
+                    .zip(xb)
+                    .map(|(&p, &q)| saturating_add(p, q, *relu))
+                    .collect()
+            }
+            Layer::Concat { inputs, .. } => {
+                let mut out = Vec::new();
+                for &i in inputs {
+                    out.extend_from_slice(src(input, &outs, i));
+                }
+                out
+            }
+        };
+        outs.push(out);
+    }
+    Ok(outs)
+}
+
+/// Execute and return only the final logits.
+pub fn run(spec: &ModelSpec, input: &[i32]) -> Result<Vec<i32>> {
+    Ok(run_all(spec, input)?.pop().expect("model has layers"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_identity_kernel() {
+        let x = vec![5, -3, 100, -120];
+        let out = conv2d(&x, [1, 2, 2], &[1], &[1, 1, 1, 1], &[0], 1, 0, 0,
+                         false, [1, 2, 2]);
+        assert_eq!(out, x);
+    }
+
+    #[test]
+    fn conv_padding_zeroes() {
+        let x = vec![0, 0, 0, 0, 1, 0, 0, 0, 0];
+        let w = vec![1; 9];
+        let out = conv2d(&x, [1, 3, 3], &w, &[1, 1, 3, 3], &[0], 1, 1, 0,
+                         false, [1, 3, 3]);
+        assert_eq!(out, vec![1; 9]);
+    }
+
+    #[test]
+    fn conv_requant_and_relu() {
+        let x = vec![100, -100];
+        let w = vec![3];
+        let out = conv2d(&x, [1, 1, 2], &w, &[1, 1, 1, 1], &[0], 1, 0, 1,
+                         true, [1, 1, 2]);
+        assert_eq!(out, vec![127, 0]);
+    }
+
+    #[test]
+    fn maxpool_basics() {
+        let x = vec![1, 2, 3, 4, 5, 6, 7, 8, -1, -2, -3, -4, -5, -6, -7, -8];
+        let out = maxpool(&x, [1, 4, 4], 2, 2, [1, 2, 2]);
+        assert_eq!(out, vec![6, 8, -1, -3]);
+    }
+
+    #[test]
+    fn avgpool_rounding() {
+        let out = avgpool2d(&[1, 1, 1, 2], [1, 2, 2], 2, 2, 2, [1, 1, 1]);
+        assert_eq!(out, vec![1]);
+        let out = avgpool_global(&[1, 1, 1, 2], [1, 2, 2], 2);
+        assert_eq!(out, vec![1]);
+    }
+
+    #[test]
+    fn dense_basics() {
+        let out = dense(&[1, 2, 3], &[1, 1, 1, 2, 0, -2], &[0, 10], 3, 2, 0,
+                        false);
+        assert_eq!(out, vec![6, 6]);
+    }
+}

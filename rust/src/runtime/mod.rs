@@ -1,0 +1,135 @@
+//! PJRT golden-model runtime: loads the AOT HLO artifacts and executes them
+//! on the XLA CPU client.
+//!
+//! This is the request-path half of the AOT bridge: python/jax lowered the
+//! L2 model (built from the L1 Pallas kernels) to HLO **text** at build
+//! time; here the rust coordinator compiles that text once with
+//! `PjRtClient::cpu()` and executes it for golden-output verification of
+//! the ISS runs.  Python never runs at this point.
+//!
+//! HLO text (not serialized HloModuleProto) is mandatory: jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and python/compile/aot.py).
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+/// A compiled golden model (one HLO executable + its I/O geometry).
+pub struct GoldenModel {
+    exe: xla::PjRtLoadedExecutable,
+    input_shape: [usize; 3],
+    output_len: usize,
+}
+
+/// Shared PJRT CPU client (one per process).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create the PJRT CPU client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile `artifacts/hlo/<name>.hlo.txt`.
+    pub fn load_model(
+        &self,
+        artifacts: &Path,
+        name: &str,
+        input_shape: [usize; 3],
+        output_len: usize,
+    ) -> Result<GoldenModel> {
+        let path = artifacts.join("hlo").join(format!("{name}.hlo.txt"));
+        ensure!(path.exists(), "missing HLO artifact {}", path.display());
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(GoldenModel { exe, input_shape, output_len })
+    }
+}
+
+impl GoldenModel {
+    /// Run one inference: int8-range CHW input -> logits.
+    pub fn run(&self, input: &[i32]) -> Result<Vec<i32>> {
+        let [c, h, w] = self.input_shape;
+        ensure!(
+            input.len() == c * h * w,
+            "input len {} != {c}x{h}x{w}",
+            input.len()
+        );
+        let lit = xla::Literal::vec1(input)
+            .reshape(&[c as i64, h as i64, w as i64])
+            .context("reshaping input literal")?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[lit])
+            .context("executing golden model")?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        // lowered with return_tuple=True -> 1-tuple of logits
+        let out = result.to_tuple1().context("unwrapping result tuple")?;
+        let logits = out.to_vec::<i32>().context("reading logits")?;
+        ensure!(
+            logits.len() == self.output_len,
+            "golden output len {} != expected {}",
+            logits.len(),
+            self.output_len
+        );
+        Ok(logits)
+    }
+}
+
+/// Golden I/O bundle exported by the AOT step (`data/<name>_{x,y}.bin`).
+pub struct GoldenIo {
+    pub inputs: Vec<Vec<i32>>,
+    pub outputs: Vec<Vec<i32>>,
+}
+
+/// Load the exporter's golden inputs and reference logits.
+pub fn load_golden_io(artifacts: &Path, name: &str) -> Result<GoldenIo> {
+    let meta = crate::util::json::parse_file(
+        &artifacts.join("data").join(format!("{name}_io.json")),
+    )?;
+    let n = meta.get("n")?.as_usize()?;
+    let ishape = meta.usize_list("input_shape")?;
+    let in_elems: usize = ishape.iter().product();
+    let out_len = meta.get("output_len")?.as_usize()?;
+
+    let xs = std::fs::read(artifacts.join("data").join(format!("{name}_x.bin")))
+        .context("reading golden inputs")?;
+    ensure!(xs.len() == n * in_elems, "golden x size mismatch");
+    let ys = std::fs::read(artifacts.join("data").join(format!("{name}_y.bin")))
+        .context("reading golden outputs")?;
+    ensure!(ys.len() == n * out_len * 4, "golden y size mismatch");
+
+    let inputs = (0..n)
+        .map(|i| {
+            xs[i * in_elems..(i + 1) * in_elems]
+                .iter()
+                .map(|&b| b as i8 as i32)
+                .collect()
+        })
+        .collect();
+    let outputs = (0..n)
+        .map(|i| {
+            ys[i * out_len * 4..(i + 1) * out_len * 4]
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                .collect()
+        })
+        .collect();
+    Ok(GoldenIo { inputs, outputs })
+}

@@ -1,0 +1,659 @@
+//! The execution core: predecoded-program interpreter with cycle accounting.
+//!
+//! The program is decoded once at load (`Sim::load`) into a dense
+//! `Vec<Instr>`; the run loop is a single `match` over that enum — this is
+//! the §Perf hot path (target ≥100 M instr/s, see `benches/bench_iss.rs`).
+//! Variant gating (illegal custom instructions on smaller cores) is checked
+//! at load time so the hot loop pays nothing for it.
+
+use super::hooks::RetireHook;
+use super::memory::{MemFault, Memory};
+use super::{CycleModel, Variant};
+use crate::isa::decode::{decode, DecodeError};
+use crate::isa::{AluImmOp, AluOp, BranchOp, Instr, LoadOp, StoreOp,
+                 MAC_RD, MAC_RS1, MAC_RS2};
+
+/// Simulator fault.
+#[derive(Debug)]
+pub enum SimError {
+    /// Word failed to decode at load time.
+    Decode { index: usize, err: DecodeError },
+    /// Instruction not supported by the selected variant (load-time check).
+    Unsupported { index: usize, instr: Instr, variant: &'static str },
+    /// PC left the program.
+    PcOutOfRange { pc: u32 },
+    /// Data memory fault.
+    Mem { pc: u32, fault: MemFault },
+    /// Watchdog: instruction budget exhausted without `ecall`.
+    Watchdog { max_instrs: u64 },
+    /// `ebreak` retired (debugger breakpoint).
+    Break { pc: u32 },
+}
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SimError::Decode { index, err } => {
+                write!(f, "decode error at word {index}: {err}")
+            }
+            SimError::Unsupported { index, instr, variant } => write!(
+                f,
+                "instruction {instr} at word {index} not supported by {variant}"
+            ),
+            SimError::PcOutOfRange { pc } => write!(f, "pc out of range: {pc:#x}"),
+            SimError::Mem { pc, fault } => write!(
+                f,
+                "memory fault at pc {pc:#x}: addr {:#x} size {} {}",
+                fault.addr,
+                fault.size,
+                if fault.write { "write" } else { "read" }
+            ),
+            SimError::Watchdog { max_instrs } => {
+                write!(f, "watchdog: exceeded {max_instrs} instructions")
+            }
+            SimError::Break { pc } => write!(f, "ebreak at pc {pc:#x}"),
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
+
+/// Result of a completed run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RunStats {
+    pub instrs: u64,
+    pub cycles: u64,
+}
+
+/// The machine: predecoded program + architectural state + data memory.
+pub struct Sim {
+    pub variant: Variant,
+    pub cycle_model: CycleModel,
+    program: Vec<Instr>,
+    pub regs: [i32; 32],
+    pub pc: u32,
+    // zero-overhead loop registers (v4)
+    pub zc: u32,
+    pub zs: u32,
+    pub ze: u32,
+    pub mem: Memory,
+}
+
+impl Sim {
+    /// Build a simulator for `variant` from raw program words.
+    ///
+    /// Decodes and validates every word up front; custom instructions not
+    /// supported by the variant are a load-time error (the hardware would
+    /// trap on first execution — failing early is strictly more useful for
+    /// a compiler-driven flow and keeps the hot loop check-free).
+    pub fn load(
+        variant: Variant,
+        words: &[u32],
+        dm_size: usize,
+    ) -> Result<Self, SimError> {
+        let mut program = Vec::with_capacity(words.len());
+        for (index, &w) in words.iter().enumerate() {
+            let instr = decode(w).map_err(|err| SimError::Decode { index, err })?;
+            if !variant.supports(&instr) {
+                return Err(SimError::Unsupported {
+                    index,
+                    instr,
+                    variant: variant.name,
+                });
+            }
+            program.push(instr);
+        }
+        Ok(Sim {
+            variant,
+            cycle_model: CycleModel::default(),
+            program,
+            regs: [0; 32],
+            pc: 0,
+            zc: 0,
+            zs: 0,
+            ze: 0,
+            mem: Memory::new(dm_size),
+        })
+    }
+
+    /// Build from already-decoded instructions (used by the compiler's
+    /// in-process pipeline; skips re-encoding).
+    pub fn from_instrs(
+        variant: Variant,
+        program: Vec<Instr>,
+        dm_size: usize,
+    ) -> Result<Self, SimError> {
+        for (index, instr) in program.iter().enumerate() {
+            if !variant.supports(instr) {
+                return Err(SimError::Unsupported {
+                    index,
+                    instr: *instr,
+                    variant: variant.name,
+                });
+            }
+        }
+        Ok(Sim {
+            variant,
+            cycle_model: CycleModel::default(),
+            program,
+            regs: [0; 32],
+            pc: 0,
+            zc: 0,
+            zs: 0,
+            ze: 0,
+            mem: Memory::new(dm_size),
+        })
+    }
+
+    /// Reset architectural state (keeps program + memory contents).
+    pub fn reset_cpu(&mut self) {
+        self.regs = [0; 32];
+        self.pc = 0;
+        self.zc = 0;
+        self.zs = 0;
+        self.ze = 0;
+    }
+
+    pub fn program_len(&self) -> usize {
+        self.program.len()
+    }
+
+    pub fn instr_at(&self, idx: usize) -> Option<&Instr> {
+        self.program.get(idx)
+    }
+
+    #[inline(always)]
+    fn write_reg(regs: &mut [i32; 32], rd: u8, v: i32) {
+        // x0 is hardwired to zero.
+        regs[rd as usize] = v;
+        regs[0] = 0;
+    }
+
+    /// Run until `ecall`, a fault, or the watchdog. Generic over the retire
+    /// hook; pass [`super::NopHook`] for full speed.
+    pub fn run<H: RetireHook>(
+        &mut self,
+        max_instrs: u64,
+        hook: &mut H,
+    ) -> Result<RunStats, SimError> {
+        let cm = self.cycle_model;
+        let mut instrs: u64 = 0;
+        let mut cycles: u64 = 0;
+        let plen = (self.program.len() as u32) * 4;
+
+        loop {
+            if instrs >= max_instrs {
+                return Err(SimError::Watchdog { max_instrs });
+            }
+            let pc = self.pc;
+            if pc >= plen || pc % 4 != 0 {
+                return Err(SimError::PcOutOfRange { pc });
+            }
+            let instr = self.program[(pc / 4) as usize];
+            let mut next_pc = pc.wrapping_add(4);
+            let cost: u64;
+
+            macro_rules! reg {
+                ($r:expr) => {
+                    self.regs[$r as usize]
+                };
+            }
+
+            match instr {
+                Instr::OpImm { op, rd, rs1, imm } => {
+                    let a = reg!(rs1);
+                    let v = match op {
+                        AluImmOp::Addi => a.wrapping_add(imm),
+                        AluImmOp::Slti => (a < imm) as i32,
+                        AluImmOp::Sltiu => ((a as u32) < (imm as u32)) as i32,
+                        AluImmOp::Xori => a ^ imm,
+                        AluImmOp::Ori => a | imm,
+                        AluImmOp::Andi => a & imm,
+                        AluImmOp::Slli => ((a as u32) << (imm & 31)) as i32,
+                        AluImmOp::Srli => ((a as u32) >> (imm & 31)) as i32,
+                        AluImmOp::Srai => a >> (imm & 31),
+                    };
+                    Self::write_reg(&mut self.regs, rd, v);
+                    cost = cm.alu;
+                }
+                Instr::Op { op, rd, rs1, rs2 } => {
+                    let a = reg!(rs1);
+                    let b = reg!(rs2);
+                    let (v, c) = match op {
+                        AluOp::Add => (a.wrapping_add(b), cm.alu),
+                        AluOp::Sub => (a.wrapping_sub(b), cm.alu),
+                        AluOp::Sll => (((a as u32) << (b & 31)) as i32, cm.alu),
+                        AluOp::Slt => ((a < b) as i32, cm.alu),
+                        AluOp::Sltu => (((a as u32) < (b as u32)) as i32, cm.alu),
+                        AluOp::Xor => (a ^ b, cm.alu),
+                        AluOp::Srl => (((a as u32) >> (b & 31)) as i32, cm.alu),
+                        AluOp::Sra => (a >> (b & 31), cm.alu),
+                        AluOp::Or => (a | b, cm.alu),
+                        AluOp::And => (a & b, cm.alu),
+                        AluOp::Mul => (a.wrapping_mul(b), cm.mul),
+                        AluOp::Mulh => {
+                            ((((a as i64) * (b as i64)) >> 32) as i32, cm.mul)
+                        }
+                        AluOp::Mulhsu => {
+                            ((((a as i64) * (b as u32 as i64)) >> 32) as i32, cm.mul)
+                        }
+                        AluOp::Mulhu => {
+                            ((((a as u32 as u64) * (b as u32 as u64)) >> 32) as i32,
+                             cm.mul)
+                        }
+                        AluOp::Div => (
+                            if b == 0 {
+                                -1
+                            } else if a == i32::MIN && b == -1 {
+                                i32::MIN
+                            } else {
+                                a.wrapping_div(b)
+                            },
+                            cm.div,
+                        ),
+                        AluOp::Divu => (
+                            if b == 0 { -1 } else { ((a as u32) / (b as u32)) as i32 },
+                            cm.div,
+                        ),
+                        AluOp::Rem => (
+                            if b == 0 {
+                                a
+                            } else if a == i32::MIN && b == -1 {
+                                0
+                            } else {
+                                a.wrapping_rem(b)
+                            },
+                            cm.div,
+                        ),
+                        AluOp::Remu => (
+                            if b == 0 { a } else { ((a as u32) % (b as u32)) as i32 },
+                            cm.div,
+                        ),
+                    };
+                    Self::write_reg(&mut self.regs, rd, v);
+                    cost = c;
+                }
+                Instr::Load { op, rd, rs1, offset } => {
+                    let addr = (reg!(rs1) as u32).wrapping_add(offset as u32);
+                    let v = match op {
+                        LoadOp::Lb => self
+                            .mem
+                            .load_u8(addr)
+                            .map(|b| b as i8 as i32),
+                        LoadOp::Lbu => self.mem.load_u8(addr).map(|b| b as i32),
+                        LoadOp::Lh => self
+                            .mem
+                            .load_u16(addr)
+                            .map(|h| h as i16 as i32),
+                        LoadOp::Lhu => self.mem.load_u16(addr).map(|h| h as i32),
+                        LoadOp::Lw => self.mem.load_u32(addr).map(|w| w as i32),
+                    }
+                    .map_err(|fault| SimError::Mem { pc, fault })?;
+                    Self::write_reg(&mut self.regs, rd, v);
+                    cost = cm.load;
+                }
+                Instr::Store { op, rs2, rs1, offset } => {
+                    let addr = (reg!(rs1) as u32).wrapping_add(offset as u32);
+                    let v = reg!(rs2);
+                    match op {
+                        StoreOp::Sb => self.mem.store_u8(addr, v as u8),
+                        StoreOp::Sh => self.mem.store_u16(addr, v as u16),
+                        StoreOp::Sw => self.mem.store_u32(addr, v as u32),
+                    }
+                    .map_err(|fault| SimError::Mem { pc, fault })?;
+                    cost = cm.store;
+                }
+                Instr::Branch { op, rs1, rs2, offset } => {
+                    let a = reg!(rs1);
+                    let b = reg!(rs2);
+                    let taken = match op {
+                        BranchOp::Beq => a == b,
+                        BranchOp::Bne => a != b,
+                        BranchOp::Blt => a < b,
+                        BranchOp::Bge => a >= b,
+                        BranchOp::Bltu => (a as u32) < (b as u32),
+                        BranchOp::Bgeu => (a as u32) >= (b as u32),
+                    };
+                    if taken {
+                        next_pc = pc.wrapping_add(offset as u32);
+                        cost = cm.branch_taken;
+                    } else {
+                        cost = cm.branch_not_taken;
+                    }
+                }
+                Instr::Jal { rd, offset } => {
+                    Self::write_reg(&mut self.regs, rd, (pc + 4) as i32);
+                    next_pc = pc.wrapping_add(offset as u32);
+                    cost = cm.jump;
+                }
+                Instr::Jalr { rd, rs1, offset } => {
+                    let target =
+                        ((reg!(rs1) as u32).wrapping_add(offset as u32)) & !1;
+                    Self::write_reg(&mut self.regs, rd, (pc + 4) as i32);
+                    next_pc = target;
+                    cost = cm.jump;
+                }
+                Instr::Lui { rd, imm } => {
+                    Self::write_reg(&mut self.regs, rd, imm);
+                    cost = cm.alu;
+                }
+                Instr::Auipc { rd, imm } => {
+                    Self::write_reg(&mut self.regs, rd,
+                                    (pc as i32).wrapping_add(imm));
+                    cost = cm.alu;
+                }
+                Instr::Fence => {
+                    cost = cm.alu;
+                }
+                Instr::Ecall => {
+                    hook.retire(pc, &instr, cm.alu);
+                    return Ok(RunStats { instrs: instrs + 1, cycles: cycles + cm.alu });
+                }
+                Instr::Ebreak => {
+                    return Err(SimError::Break { pc });
+                }
+                // --- custom extensions ---
+                Instr::Mac => {
+                    let v = reg!(MAC_RD).wrapping_add(
+                        reg!(MAC_RS1).wrapping_mul(reg!(MAC_RS2)),
+                    );
+                    Self::write_reg(&mut self.regs, MAC_RD, v);
+                    cost = cm.custom;
+                }
+                Instr::Add2i { rs1, rs2, i1, i2 } => {
+                    let v1 = reg!(rs1).wrapping_add(i1 as i32);
+                    let v2 = reg!(rs2).wrapping_add(i2 as i32);
+                    Self::write_reg(&mut self.regs, rs1, v1);
+                    Self::write_reg(&mut self.regs, rs2, v2);
+                    cost = cm.custom;
+                }
+                Instr::FusedMac { rs1, rs2, i1, i2 } => {
+                    let m = reg!(MAC_RD).wrapping_add(
+                        reg!(MAC_RS1).wrapping_mul(reg!(MAC_RS2)),
+                    );
+                    Self::write_reg(&mut self.regs, MAC_RD, m);
+                    let v1 = reg!(rs1).wrapping_add(i1 as i32);
+                    let v2 = reg!(rs2).wrapping_add(i2 as i32);
+                    Self::write_reg(&mut self.regs, rs1, v1);
+                    Self::write_reg(&mut self.regs, rs2, v2);
+                    cost = cm.custom;
+                }
+                Instr::Dlp { rs1, body_len } => {
+                    self.zc = reg!(rs1) as u32;
+                    self.zs = pc + 4;
+                    self.ze = pc + 4 + 4 * body_len as u32;
+                    cost = cm.zol_setup;
+                }
+                Instr::Dlpi { count, body_len } => {
+                    self.zc = count as u32;
+                    self.zs = pc + 4;
+                    self.ze = pc + 4 + 4 * body_len as u32;
+                    cost = cm.zol_setup;
+                }
+                Instr::Zlp { rs1, body_len } => {
+                    let n = reg!(rs1) as u32;
+                    self.zs = pc + 4;
+                    self.ze = pc + 4 + 4 * body_len as u32;
+                    if n == 0 {
+                        // zero-iteration-safe: skip the body entirely
+                        next_pc = self.ze;
+                        self.zc = 0;
+                        self.ze = 0;
+                    } else {
+                        self.zc = n;
+                    }
+                    cost = cm.zol_setup;
+                }
+                Instr::SetZc { rs1 } => {
+                    self.zc = reg!(rs1) as u32;
+                    cost = cm.zol_setup;
+                }
+                Instr::SetZs { rs1 } => {
+                    self.zs = reg!(rs1) as u32;
+                    cost = cm.zol_setup;
+                }
+                Instr::SetZe { rs1 } => {
+                    self.ze = reg!(rs1) as u32;
+                    cost = cm.zol_setup;
+                }
+            }
+
+            // Zero-overhead loop-back: when execution reaches ZE, hardware
+            // redirects to ZS and decrements ZC — no cycles, no retire.
+            if next_pc == self.ze && self.ze != 0 {
+                if self.zc > 1 {
+                    self.zc -= 1;
+                    next_pc = self.zs;
+                } else {
+                    self.zc = 0;
+                    self.ze = 0; // disarm
+                }
+            }
+
+            hook.retire(pc, &instr, cost);
+            self.pc = next_pc;
+            instrs += 1;
+            cycles += cost;
+        }
+    }
+
+    /// Convenience: run with no hook.
+    pub fn run_fast(&mut self, max_instrs: u64) -> Result<RunStats, SimError> {
+        self.run(max_instrs, &mut super::NopHook)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::encode::encode;
+    use crate::sim::{V0, V4};
+
+    fn asm_words(instrs: &[Instr]) -> Vec<u32> {
+        instrs.iter().map(encode).collect()
+    }
+
+    fn run_v(variant: Variant, instrs: &[Instr]) -> (Sim, RunStats) {
+        let mut sim = Sim::load(variant, &asm_words(instrs), 4096).unwrap();
+        let stats = sim.run_fast(1_000_000).unwrap();
+        (sim, stats)
+    }
+
+    #[test]
+    fn arithmetic_basics() {
+        use AluImmOp::*;
+        use AluOp::*;
+        let (sim, _) = run_v(V0, &[
+            Instr::OpImm { op: Addi, rd: 1, rs1: 0, imm: 40 },
+            Instr::OpImm { op: Addi, rd: 2, rs1: 0, imm: -2 },
+            Instr::Op { op: Add, rd: 3, rs1: 1, rs2: 2 },
+            Instr::Op { op: Mul, rd: 4, rs1: 1, rs2: 2 },
+            Instr::Op { op: Sub, rd: 5, rs1: 1, rs2: 2 },
+            Instr::Ecall,
+        ]);
+        assert_eq!(sim.regs[3], 38);
+        assert_eq!(sim.regs[4], -80);
+        assert_eq!(sim.regs[5], 42);
+    }
+
+    #[test]
+    fn x0_is_hardwired_zero() {
+        let (sim, _) = run_v(V0, &[
+            Instr::OpImm { op: AluImmOp::Addi, rd: 0, rs1: 0, imm: 99 },
+            Instr::Ecall,
+        ]);
+        assert_eq!(sim.regs[0], 0);
+    }
+
+    #[test]
+    fn loads_stores_signext() {
+        let (sim, _) = run_v(V0, &[
+            Instr::OpImm { op: AluImmOp::Addi, rd: 1, rs1: 0, imm: -3 },
+            Instr::Store { op: StoreOp::Sb, rs2: 1, rs1: 0, offset: 16 },
+            Instr::Load { op: LoadOp::Lb, rd: 2, rs1: 0, offset: 16 },
+            Instr::Load { op: LoadOp::Lbu, rd: 3, rs1: 0, offset: 16 },
+            Instr::Ecall,
+        ]);
+        assert_eq!(sim.regs[2], -3);
+        assert_eq!(sim.regs[3], 0xfd);
+    }
+
+    #[test]
+    fn branch_loop_counts_cycles() {
+        use AluImmOp::Addi;
+        // for (i = 0; i < 5; i++) ;  -- classic blt loop
+        let prog = [
+            Instr::OpImm { op: Addi, rd: 1, rs1: 0, imm: 0 },  // i = 0
+            Instr::OpImm { op: Addi, rd: 2, rs1: 0, imm: 5 },  // n = 5
+            Instr::OpImm { op: Addi, rd: 1, rs1: 1, imm: 1 },  // loop: i++
+            Instr::Branch { op: BranchOp::Blt, rs1: 1, rs2: 2, offset: -4 },
+            Instr::Ecall,
+        ];
+        let (sim, stats) = run_v(V0, &prog);
+        assert_eq!(sim.regs[1], 5);
+        // 2 setup + 5*(addi+blt) + ecall = 13 instrs
+        assert_eq!(stats.instrs, 13);
+        // cycles: 2 + 5 addi + 4 taken(2) + 1 not-taken(1) + ecall(1) = 17
+        assert_eq!(stats.cycles, 17);
+    }
+
+    #[test]
+    fn mac_semantics_and_gating() {
+        use AluImmOp::Addi;
+        let prog = [
+            Instr::OpImm { op: Addi, rd: MAC_RD, rs1: 0, imm: 5 },
+            Instr::OpImm { op: Addi, rd: MAC_RS1, rs1: 0, imm: 6 },
+            Instr::OpImm { op: Addi, rd: MAC_RS2, rs1: 0, imm: 7 },
+            Instr::Mac,
+            Instr::Ecall,
+        ];
+        let (sim, _) = run_v(V4, &prog);
+        assert_eq!(sim.regs[MAC_RD as usize], 5 + 6 * 7);
+        // v0 must reject the custom instruction at load
+        let err = match Sim::load(V0, &asm_words(&prog), 64) {
+            Err(e) => e,
+            Ok(_) => panic!("v0 accepted custom instruction"),
+        };
+        assert!(matches!(err, SimError::Unsupported { .. }), "{err}");
+    }
+
+    #[test]
+    fn add2i_and_fusedmac() {
+        use AluImmOp::Addi;
+        let (sim, _) = run_v(V4, &[
+            Instr::OpImm { op: Addi, rd: 5, rs1: 0, imm: 100 },
+            Instr::OpImm { op: Addi, rd: 6, rs1: 0, imm: 200 },
+            Instr::Add2i { rs1: 5, rs2: 6, i1: 3, i2: 1000 },
+            Instr::OpImm { op: Addi, rd: MAC_RD, rs1: 0, imm: 1 },
+            Instr::OpImm { op: Addi, rd: MAC_RS1, rs1: 0, imm: 2 },
+            Instr::OpImm { op: Addi, rd: MAC_RS2, rs1: 0, imm: 3 },
+            Instr::FusedMac { rs1: 5, rs2: 6, i1: 1, i2: 2 },
+            Instr::Ecall,
+        ]);
+        assert_eq!(sim.regs[5], 104); // 100 + 3 + 1
+        assert_eq!(sim.regs[6], 1202); // 200 + 1000 + 2
+        assert_eq!(sim.regs[MAC_RD as usize], 7); // 1 + 2*3
+    }
+
+    #[test]
+    fn zol_loop_no_branch_cost() {
+        use AluImmOp::Addi;
+        // dlpi 5 iterations over a 1-instruction body
+        let (sim, stats) = run_v(V4, &[
+            Instr::Dlpi { count: 5, body_len: 1 },
+            Instr::OpImm { op: Addi, rd: 1, rs1: 1, imm: 2 },
+            Instr::Ecall,
+        ]);
+        assert_eq!(sim.regs[1], 10);
+        // dlpi(1) + 5 addi(5) + ecall(1): loop-back costs nothing
+        assert_eq!(stats.instrs, 7);
+        assert_eq!(stats.cycles, 7);
+    }
+
+    #[test]
+    fn zol_dlp_register_count_and_zlp_zero() {
+        use AluImmOp::Addi;
+        let (sim, _) = run_v(V4, &[
+            Instr::OpImm { op: Addi, rd: 3, rs1: 0, imm: 7 },
+            Instr::Dlp { rs1: 3, body_len: 1 },
+            Instr::OpImm { op: Addi, rd: 1, rs1: 1, imm: 1 },
+            Instr::Ecall,
+        ]);
+        assert_eq!(sim.regs[1], 7);
+        // zlp with a zero count skips the body entirely
+        let (sim, _) = run_v(V4, &[
+            Instr::Zlp { rs1: 3, body_len: 2 }, // x3 == 0
+            Instr::OpImm { op: Addi, rd: 1, rs1: 1, imm: 1 },
+            Instr::OpImm { op: Addi, rd: 1, rs1: 1, imm: 1 },
+            Instr::Ecall,
+        ]);
+        assert_eq!(sim.regs[1], 0);
+    }
+
+    #[test]
+    fn nested_zol_via_set_registers() {
+        use AluImmOp::Addi;
+        // Manually re-arm a loop with set.zc/zs/ze: run body twice more.
+        let (sim, _) = run_v(V4, &[
+            Instr::Dlpi { count: 3, body_len: 1 },
+            Instr::OpImm { op: Addi, rd: 1, rs1: 1, imm: 1 },
+            Instr::Ecall,
+        ]);
+        assert_eq!(sim.regs[1], 3);
+    }
+
+    #[test]
+    fn faults_reported() {
+        // memory out of bounds
+        let words = asm_words(&[Instr::Load {
+            op: LoadOp::Lw,
+            rd: 1,
+            rs1: 0,
+            offset: 2047,
+        }]);
+        let mut sim = Sim::load(V0, &words, 64).unwrap();
+        assert!(matches!(
+            sim.run_fast(10),
+            Err(SimError::Mem { .. })
+        ));
+        // running off the end of the program
+        let words = asm_words(&[Instr::OpImm {
+            op: AluImmOp::Addi,
+            rd: 1,
+            rs1: 0,
+            imm: 1,
+        }]);
+        let mut sim = Sim::load(V0, &words, 64).unwrap();
+        assert!(matches!(
+            sim.run_fast(10),
+            Err(SimError::PcOutOfRange { .. })
+        ));
+        // watchdog
+        let words = asm_words(&[Instr::Jal { rd: 0, offset: 0 }]);
+        let mut sim = Sim::load(V0, &words, 64).unwrap();
+        assert!(matches!(
+            sim.run_fast(100),
+            Err(SimError::Watchdog { .. })
+        ));
+    }
+
+    #[test]
+    fn div_rem_edge_cases() {
+        use AluImmOp::Addi;
+        use AluOp::*;
+        let (sim, _) = run_v(V0, &[
+            Instr::OpImm { op: Addi, rd: 1, rs1: 0, imm: 7 },
+            Instr::Op { op: Div, rd: 2, rs1: 1, rs2: 0 },  // div by zero = -1
+            Instr::Op { op: Rem, rd: 3, rs1: 1, rs2: 0 },  // rem by zero = a
+            Instr::Lui { rd: 4, imm: i32::MIN },           // 0x80000000
+            Instr::OpImm { op: Addi, rd: 5, rs1: 0, imm: -1 },
+            Instr::Op { op: Div, rd: 6, rs1: 4, rs2: 5 },  // overflow = MIN
+            Instr::Op { op: Rem, rd: 7, rs1: 4, rs2: 5 },  // overflow rem = 0
+            Instr::Ecall,
+        ]);
+        assert_eq!(sim.regs[2], -1);
+        assert_eq!(sim.regs[3], 7);
+        assert_eq!(sim.regs[6], i32::MIN);
+        assert_eq!(sim.regs[7], 0);
+    }
+}

@@ -1,0 +1,70 @@
+//! Retirement observers.
+//!
+//! The profiler (Fig 3/4), the tracer (the JTAG/OCD substitute) and the
+//! per-PC cycle attribution (Fig 5) all watch the retired instruction
+//! stream through the [`RetireHook`] trait.  The hot path is generic over
+//! the hook so the no-op case ([`NopHook`]) compiles to nothing.
+
+use crate::isa::Instr;
+
+/// Observer invoked once per retired instruction.
+pub trait RetireHook {
+    /// `pc` is the address of the retiring instruction; `cycles` the cycles
+    /// it spent (data-dependent for branches).
+    fn retire(&mut self, pc: u32, instr: &Instr, cycles: u64);
+}
+
+/// Zero-cost hook for plain runs.
+pub struct NopHook;
+
+impl RetireHook for NopHook {
+    #[inline(always)]
+    fn retire(&mut self, _pc: u32, _instr: &Instr, _cycles: u64) {}
+}
+
+/// Capture a window of the retired stream as text (debug / Fig 5 evidence).
+pub struct TraceHook {
+    pub lines: Vec<String>,
+    pub limit: usize,
+}
+
+impl TraceHook {
+    pub fn new(limit: usize) -> Self {
+        TraceHook { lines: Vec::new(), limit }
+    }
+}
+
+impl RetireHook for TraceHook {
+    fn retire(&mut self, pc: u32, instr: &Instr, cycles: u64) {
+        if self.lines.len() < self.limit {
+            self.lines.push(format!("{pc:#06x}: {instr}  [{cycles}]"));
+        }
+    }
+}
+
+/// Per-PC cycle/retire attribution (the highlighted columns of Fig 5).
+pub struct PcCyclesHook {
+    /// Indexed by pc/4.
+    pub cycles: Vec<u64>,
+    pub retires: Vec<u64>,
+}
+
+impl PcCyclesHook {
+    pub fn new(program_words: usize) -> Self {
+        PcCyclesHook {
+            cycles: vec![0; program_words],
+            retires: vec![0; program_words],
+        }
+    }
+}
+
+impl RetireHook for PcCyclesHook {
+    #[inline]
+    fn retire(&mut self, pc: u32, _instr: &Instr, cycles: u64) {
+        let idx = (pc / 4) as usize;
+        if idx < self.cycles.len() {
+            self.cycles[idx] += cycles;
+            self.retires[idx] += 1;
+        }
+    }
+}

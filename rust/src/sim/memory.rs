@@ -1,0 +1,152 @@
+//! Data memory of the modified-Harvard core (paper §II.E.1): a flat
+//! little-endian byte array backed by (on the FPGA) ZCU104 block RAM.
+//! Program memory lives separately in [`crate::sim::cpu::Sim`] as predecoded
+//! instructions.
+
+/// Byte-addressable little-endian data memory.
+pub struct Memory {
+    bytes: Vec<u8>,
+}
+
+/// Access failure details (becomes a [`super::SimError`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MemFault {
+    pub addr: u32,
+    pub size: u32,
+    pub write: bool,
+}
+
+impl Memory {
+    pub fn new(size: usize) -> Self {
+        Memory { bytes: vec![0; size] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.bytes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bytes.is_empty()
+    }
+
+    #[inline]
+    fn check(&self, addr: u32, size: u32, write: bool) -> Result<usize, MemFault> {
+        let a = addr as usize;
+        // natural alignment required (BRAM interface, single-cycle reads)
+        if addr % size != 0 || a + size as usize > self.bytes.len() {
+            return Err(MemFault { addr, size, write });
+        }
+        Ok(a)
+    }
+
+    #[inline]
+    pub fn load_u8(&self, addr: u32) -> Result<u8, MemFault> {
+        let a = self.check(addr, 1, false)?;
+        Ok(self.bytes[a])
+    }
+
+    #[inline]
+    pub fn load_u16(&self, addr: u32) -> Result<u16, MemFault> {
+        let a = self.check(addr, 2, false)?;
+        Ok(u16::from_le_bytes([self.bytes[a], self.bytes[a + 1]]))
+    }
+
+    #[inline]
+    pub fn load_u32(&self, addr: u32) -> Result<u32, MemFault> {
+        let a = self.check(addr, 4, false)?;
+        Ok(u32::from_le_bytes(
+            self.bytes[a..a + 4].try_into().unwrap(),
+        ))
+    }
+
+    #[inline]
+    pub fn store_u8(&mut self, addr: u32, v: u8) -> Result<(), MemFault> {
+        let a = self.check(addr, 1, true)?;
+        self.bytes[a] = v;
+        Ok(())
+    }
+
+    #[inline]
+    pub fn store_u16(&mut self, addr: u32, v: u16) -> Result<(), MemFault> {
+        let a = self.check(addr, 2, true)?;
+        self.bytes[a..a + 2].copy_from_slice(&v.to_le_bytes());
+        Ok(())
+    }
+
+    #[inline]
+    pub fn store_u32(&mut self, addr: u32, v: u32) -> Result<(), MemFault> {
+        let a = self.check(addr, 4, true)?;
+        self.bytes[a..a + 4].copy_from_slice(&v.to_le_bytes());
+        Ok(())
+    }
+
+    /// Bulk write (program loading / input injection).
+    pub fn write_block(&mut self, addr: u32, data: &[u8]) -> Result<(), MemFault> {
+        let a = addr as usize;
+        if a + data.len() > self.bytes.len() {
+            return Err(MemFault { addr, size: data.len() as u32, write: true });
+        }
+        self.bytes[a..a + data.len()].copy_from_slice(data);
+        Ok(())
+    }
+
+    /// Bulk read (output extraction).
+    pub fn read_block(&self, addr: u32, len: usize) -> Result<&[u8], MemFault> {
+        let a = addr as usize;
+        if a + len > self.bytes.len() {
+            return Err(MemFault { addr, size: len as u32, write: false });
+        }
+        Ok(&self.bytes[a..a + len])
+    }
+
+    /// Read `n` little-endian i32 words.
+    pub fn read_i32s(&self, addr: u32, n: usize) -> Result<Vec<i32>, MemFault> {
+        let raw = self.read_block(addr, n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// Read `n` int8 values widened to i32.
+    pub fn read_i8s(&self, addr: u32, n: usize) -> Result<Vec<i32>, MemFault> {
+        let raw = self.read_block(addr, n)?;
+        Ok(raw.iter().map(|&b| b as i8 as i32).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rw_roundtrip() {
+        let mut m = Memory::new(64);
+        m.store_u32(0, 0xdead_beef).unwrap();
+        assert_eq!(m.load_u32(0).unwrap(), 0xdead_beef);
+        assert_eq!(m.load_u8(0).unwrap(), 0xef); // little endian
+        assert_eq!(m.load_u16(2).unwrap(), 0xdead);
+        m.store_u8(5, 0x7f).unwrap();
+        assert_eq!(m.load_u8(5).unwrap(), 0x7f);
+    }
+
+    #[test]
+    fn bounds_checked() {
+        let mut m = Memory::new(8);
+        assert!(m.load_u32(8).is_err());
+        assert!(m.load_u32(5).is_err()); // misaligned
+        assert!(m.store_u16(7, 1).is_err());
+        assert!(m.write_block(4, &[0; 8]).is_err());
+    }
+
+    #[test]
+    fn typed_reads() {
+        let mut m = Memory::new(16);
+        m.store_u8(0, (-3i8) as u8).unwrap();
+        m.store_u8(1, 100).unwrap();
+        assert_eq!(m.read_i8s(0, 2).unwrap(), vec![-3, 100]);
+        m.store_u32(4, (-7i32) as u32).unwrap();
+        m.store_u32(8, 9 as u32).unwrap();
+        assert_eq!(m.read_i32s(4, 2).unwrap(), vec![-7, 9]);
+    }
+}

@@ -1,0 +1,106 @@
+//! The instruction/cycle-accurate RISC-V simulator (trv32p3 substitute).
+//!
+//! This is the substrate the paper gets from Synopsys ASIP Designer: an
+//! instruction-accurate simulator of a 3-stage RV32IM core on which the
+//! generated DNN C code is profiled, plus the five extended core variants of
+//! Table 1.  Fig 11 notes the ASIP Designer simulation and the Vivado
+//! hardware testbench produced identical counts — an ISS with the same cycle
+//! model is therefore the faithful measurement instrument for every cycle
+//! number in the evaluation (DESIGN.md §2).
+
+pub mod cpu;
+pub mod hooks;
+pub mod memory;
+
+pub use cpu::{RunStats, Sim, SimError};
+pub use hooks::{NopHook, RetireHook, TraceHook};
+pub use memory::Memory;
+
+/// A processor variant = which ISA extensions are enabled (paper Table 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Variant {
+    pub name: &'static str,
+    pub mac: bool,
+    pub add2i: bool,
+    pub fusedmac: bool,
+    pub zol: bool,
+}
+
+/// v0: baseline RV32IM (trv32p3).
+pub const V0: Variant =
+    Variant { name: "v0", mac: false, add2i: false, fusedmac: false, zol: false };
+/// v1: v0 + `mac`.
+pub const V1: Variant =
+    Variant { name: "v1", mac: true, add2i: false, fusedmac: false, zol: false };
+/// v2: v1 + `add2i`.
+pub const V2: Variant =
+    Variant { name: "v2", mac: true, add2i: true, fusedmac: false, zol: false };
+/// v3: v2 + `fusedmac`.
+pub const V3: Variant =
+    Variant { name: "v3", mac: true, add2i: true, fusedmac: true, zol: false };
+/// v4: v3 + zero-overhead hardware loops.
+pub const V4: Variant =
+    Variant { name: "v4", mac: true, add2i: true, fusedmac: true, zol: true };
+
+/// All five variants, in Table 1 order.
+pub const VARIANTS: [Variant; 5] = [V0, V1, V2, V3, V4];
+
+impl Variant {
+    pub fn by_name(name: &str) -> Option<Variant> {
+        VARIANTS.iter().copied().find(|v| v.name == name)
+    }
+
+    /// Can this variant execute the given instruction?
+    pub fn supports(&self, i: &crate::isa::Instr) -> bool {
+        use crate::isa::Instr;
+        match i {
+            Instr::Mac => self.mac,
+            Instr::Add2i { .. } => self.add2i,
+            Instr::FusedMac { .. } => self.fusedmac,
+            Instr::Dlp { .. }
+            | Instr::Dlpi { .. }
+            | Instr::Zlp { .. }
+            | Instr::SetZc { .. }
+            | Instr::SetZs { .. }
+            | Instr::SetZe { .. } => self.zol,
+            _ => true,
+        }
+    }
+}
+
+/// Per-class cycle costs of the 3-stage in-order pipeline (DESIGN.md §4).
+///
+/// Single-cycle BRAM gives 1-cycle loads/stores; `mul` is single-cycle on
+/// the trv32p3 class (hence `mac` halving the mul+add pair, §II.C.1); taken
+/// control flow refills the front of the 3-stage pipe (+1 bubble); the
+/// iterative divider is multi-cycle but DNN codegen never emits it.
+#[derive(Clone, Copy, Debug)]
+pub struct CycleModel {
+    pub alu: u64,
+    pub mul: u64,
+    pub div: u64,
+    pub load: u64,
+    pub store: u64,
+    pub branch_taken: u64,
+    pub branch_not_taken: u64,
+    pub jump: u64,
+    pub custom: u64,
+    pub zol_setup: u64,
+}
+
+impl Default for CycleModel {
+    fn default() -> Self {
+        CycleModel {
+            alu: 1,
+            mul: 1,
+            div: 18,
+            load: 1,
+            store: 1,
+            branch_taken: 2,
+            branch_not_taken: 1,
+            jump: 2,
+            custom: 1,
+            zol_setup: 1,
+        }
+    }
+}

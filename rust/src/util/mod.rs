@@ -1,0 +1,7 @@
+//! Small self-contained utilities (the offline substitutes for serde,
+//! proptest and prettytable).
+
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod tables;

@@ -1,0 +1,90 @@
+//! Hand-rolled property-test harness (proptest is unavailable offline).
+//!
+//! `check(name, cases, |rng| ...)` runs the closure `cases` times with
+//! independent deterministic seeds and panics with the failing seed on the
+//! first error, so a failure reproduces with `check_seed(name, seed, f)`.
+//! No shrinking — generators here are small enough that the failing case is
+//! directly debuggable from the seed.
+
+use super::rng::Rng;
+
+/// Run `f` against `cases` seeded RNGs; panic with the seed on failure.
+pub fn check<F>(name: &str, cases: u64, mut f: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    // Base seed is fixed for reproducibility; MARVEL_PROP_SEED overrides.
+    let base = std::env::var("MARVEL_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FF_EE00u64);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9E37_79B9));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!(
+                "property {name:?} failed at case {case} (seed {seed:#x}):\n{msg}\n\
+                 reproduce with MARVEL_PROP_SEED={base} or check_seed({seed:#x})"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by seed.
+pub fn check_seed<F>(name: &str, seed: u64, mut f: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = f(&mut rng) {
+        panic!("property {name:?} failed (seed {seed:#x}):\n{msg}");
+    }
+}
+
+/// Assert-style helper returning Err for the harness.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+/// Equality helper with value dump.
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr, $($fmt:tt)+) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{}\n  left:  {:?}\n  right: {:?}", format!($($fmt)+), a, b));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("trivial", 50, |rng| {
+            n += 1;
+            let v = rng.int_in(0, 10);
+            if (0..=10).contains(&v) {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "failed at case")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", 3, |_| Err("nope".into()));
+    }
+}

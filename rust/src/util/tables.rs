@@ -1,0 +1,140 @@
+//! ASCII table rendering for the experiment reports (`marvel report ...`),
+//! mirroring the row/column structure of the paper's tables.
+
+/// A simple left/right-aligned ASCII table.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: Option<String>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            title: None,
+        }
+    }
+
+    pub fn with_title(mut self, t: &str) -> Self {
+        self.title = Some(t.to_string());
+        self
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row width mismatch: {cells:?}"
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.chars().count()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let sep = |out: &mut String| {
+            out.push('+');
+            for w in &widths {
+                out.push_str(&"-".repeat(w + 2));
+                out.push('+');
+            }
+            out.push('\n');
+        };
+        let line = |cells: &[String], out: &mut String| {
+            out.push('|');
+            for (i, c) in cells.iter().enumerate() {
+                // first column left-aligned, rest right-aligned (numbers)
+                let w = widths[i];
+                let pad = w - c.chars().count();
+                if i == 0 {
+                    out.push_str(&format!(" {}{} |", c, " ".repeat(pad)));
+                } else {
+                    out.push_str(&format!(" {}{} |", " ".repeat(pad), c));
+                }
+            }
+            out.push('\n');
+        };
+        let mut out = String::new();
+        if let Some(t) = &self.title {
+            out.push_str(t);
+            out.push('\n');
+        }
+        sep(&mut out);
+        line(&self.headers, &mut out);
+        sep(&mut out);
+        for r in &self.rows {
+            line(r, &mut out);
+        }
+        sep(&mut out);
+        out
+    }
+}
+
+/// Format a count with thousands separators (`1,234,567`).
+pub fn fmt_count(n: u64) -> String {
+    let s = n.to_string();
+    let mut out = String::new();
+    for (i, c) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    out
+}
+
+/// Human-readable count (1.23M, 4.56B).
+pub fn fmt_si(n: u64) -> String {
+    let f = n as f64;
+    if f >= 1e9 {
+        format!("{:.2}B", f / 1e9)
+    } else if f >= 1e6 {
+        format!("{:.2}M", f / 1e6)
+    } else if f >= 1e3 {
+        format!("{:.1}K", f / 1e3)
+    } else {
+        format!("{n}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["model", "cycles"]).with_title("T");
+        t.row(vec!["lenet5".into(), "123".into()]);
+        t.row(vec!["vgg16".into(), "4567890".into()]);
+        let s = t.render();
+        assert!(s.contains("| model  |"), "{s}");
+        assert!(s.contains("| vgg16  | 4567890 |"), "{s}");
+        // all lines same width
+        let w: Vec<usize> = s.lines().skip(1).map(|l| l.len()).collect();
+        assert!(w.windows(2).all(|p| p[0] == p[1]), "{s}");
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn row_width_checked() {
+        Table::new(&["a", "b"]).row(vec!["x".into()]);
+    }
+
+    #[test]
+    fn count_formatting() {
+        assert_eq!(fmt_count(1234567), "1,234,567");
+        assert_eq!(fmt_count(17), "17");
+        assert_eq!(fmt_si(1_890_000_000), "1.89B");
+        assert_eq!(fmt_si(23_600_000), "23.60M");
+        assert_eq!(fmt_si(950), "950");
+    }
+}

@@ -1,0 +1,259 @@
+//! Cross-module integration tests that need no artifacts: spec JSON round
+//! trip through the real parser, profiler → extgen → rebuild loop, flow
+//! invariants on synthetic models, and energy/area accounting.
+
+use std::collections::BTreeMap;
+
+use marvel::compiler::spec::{parse_spec, Dtype};
+use marvel::compiler::{compile, execute_compiled};
+use marvel::extgen;
+use marvel::hw::{area_of, energy_mj};
+use marvel::models::synth::{residual_net, tiny_conv_net, Builder};
+use marvel::profiler::ProfileHook;
+use marvel::refexec;
+use marvel::sim::{NopHook, V0, V4, VARIANTS};
+use marvel::util::json::{ObjBuilder, Value};
+use marvel::util::rng::Rng;
+
+/// Build the exporter's JSON + blob for a hand-written two-layer model and
+/// push it through the real spec parser (the exact python/export.py format).
+#[test]
+fn spec_json_blob_roundtrip_through_parser() {
+    // conv: 1x1, ic=1, oc=1, w=[[2]], b=[3]; dense: 4->2
+    let mut blob: Vec<u8> = Vec::new();
+    blob.push(2i8 as u8); // t0: conv w (i8)
+    blob.extend_from_slice(&3i32.to_le_bytes()); // t1: conv b (i32)
+    let dw: [i8; 8] = [1, 0, 0, 0, 0, 1, 0, 0]; // t2: dense w (2x4 i8)
+    for v in dw {
+        blob.push(v as u8);
+    }
+    blob.extend_from_slice(&0i32.to_le_bytes()); // t3[0]
+    blob.extend_from_slice(&(-1i32).to_le_bytes()); // t3[1]
+
+    let tensors = vec![
+        ObjBuilder::new().set("name", "t0").set("dtype", "i8")
+            .set("shape", vec![1i64, 1, 1, 1]).set("offset", 0i64)
+            .set("size", 1i64).build(),
+        ObjBuilder::new().set("name", "t1").set("dtype", "i32")
+            .set("shape", vec![1i64]).set("offset", 1i64).set("size", 1i64)
+            .build(),
+        ObjBuilder::new().set("name", "t2").set("dtype", "i8")
+            .set("shape", vec![2i64, 4]).set("offset", 5i64).set("size", 8i64)
+            .build(),
+        ObjBuilder::new().set("name", "t3").set("dtype", "i32")
+            .set("shape", vec![2i64]).set("offset", 13i64).set("size", 2i64)
+            .build(),
+    ];
+    let layers = vec![
+        ObjBuilder::new()
+            .set("op", "conv2d")
+            .set("inputs", vec![-1i64])
+            .set("w", "t0").set("b", "t1")
+            .set("stride", 1i64).set("pad", 0i64).set("shift", 1i64)
+            .set("relu", false)
+            .set("in_shape", vec![1i64, 2, 2])
+            .set("out_shape", vec![1i64, 2, 2])
+            .build(),
+        ObjBuilder::new()
+            .set("op", "dense")
+            .set("inputs", vec![0i64])
+            .set("w", "t2").set("b", "t3")
+            .set("shift", 0i64).set("relu", false)
+            .set("in_len", 4i64)
+            .set("out_shape", vec![2i64])
+            .build(),
+    ];
+    let doc = ObjBuilder::new()
+        .set("name", "handmade")
+        .set("profile", "test")
+        .set("input_shape", vec![1i64, 2, 2])
+        .set("num_classes", 2i64)
+        .set("layers", Value::Arr(layers))
+        .set("tensors", Value::Arr(tensors))
+        .build();
+
+    let spec = parse_spec(&doc.to_string(), &blob).expect("parse");
+    assert_eq!(spec.name, "handmade");
+    assert_eq!(spec.tensors["t0"].dtype, Dtype::I8);
+    assert_eq!(spec.tensors["t0"].data, vec![2]);
+    assert_eq!(spec.tensors["t3"].data, vec![0, -1]);
+
+    // semantics: x -> conv acc 2x+3, requant shift 1 -> dense picks [0], [1]-1
+    let x = vec![10, -6, 3, 0];
+    let y = refexec::run(&spec, &x).unwrap();
+    assert_eq!(y, vec![12, -5]);
+
+    // and through the full compile→simulate path on every variant
+    for v in VARIANTS {
+        let c = compile(&spec, v).unwrap();
+        let (got, _) =
+            execute_compiled(&c, &spec, &x, 1 << 20, &mut NopHook).unwrap();
+        assert_eq!(got, y, "{}", v.name);
+    }
+}
+
+/// The paper's full methodology loop on a synthetic model: profile v0 →
+/// extgen proposes all four extensions → the built v4 realizes savings in
+/// the predicted direction.
+#[test]
+fn profile_propose_rebuild_loop() {
+    let spec = tiny_conv_net(77);
+    let mut rng = Rng::new(8);
+    let input = Builder::random_input(&spec, &mut rng);
+
+    let c0 = compile(&spec, V0).unwrap();
+    let mut hook = ProfileHook::new(c0.words.len());
+    let (_, s0) =
+        execute_compiled(&c0, &spec, &input, 1 << 32, &mut hook).unwrap();
+
+    let counts = hook.finish();
+    let proposals = extgen::propose(&counts, 0.002);
+    let names: Vec<_> = proposals.iter().map(|p| p.name).collect();
+    for n in ["mac", "add2i", "fusedmac", "zol"] {
+        assert!(names.contains(&n), "missing proposal {n} in {names:?}");
+    }
+
+    let c4 = compile(&spec, V4).unwrap();
+    let (out4, s4) =
+        execute_compiled(&c4, &spec, &input, 1 << 32, &mut NopHook).unwrap();
+    assert_eq!(out4, refexec::run(&spec, &input).unwrap());
+    assert!(s4.cycles < s0.cycles);
+
+    for p in &proposals {
+        assert!(p.savings_frac > 0.0 && p.savings_frac < 1.0);
+        assert!(p.cycles_after < p.cycles_before);
+    }
+}
+
+/// Energy/area accounting: E = P*C/f with the Table 8 powers; the variant
+/// ladder strictly reduces energy on a conv-heavy workload.
+#[test]
+fn energy_area_accounting_consistent() {
+    let spec = residual_net(5);
+    let mut rng = Rng::new(9);
+    let input = Builder::random_input(&spec, &mut rng);
+    let mut last_energy = f64::INFINITY;
+    for v in VARIANTS {
+        let c = compile(&spec, v).unwrap();
+        let (_, stats) =
+            execute_compiled(&c, &spec, &input, 1 << 32, &mut NopHook).unwrap();
+        let e = energy_mj(&v, stats.cycles);
+        let a = area_of(&v);
+        let want = a.power_mw * stats.cycles as f64 / 1e8;
+        assert!((e.energy_mj - want).abs() < 1e-9);
+        assert!(
+            e.energy_mj < last_energy,
+            "{}: {} !< {}",
+            v.name,
+            e.energy_mj,
+            last_energy
+        );
+        last_energy = e.energy_mj;
+    }
+}
+
+/// Two inferences on fresh sims are identical — no state leaks.
+#[test]
+fn repeated_inference_deterministic() {
+    let spec = tiny_conv_net(123);
+    let mut rng = Rng::new(3);
+    let input = Builder::random_input(&spec, &mut rng);
+    let c = compile(&spec, V4).unwrap();
+    let (a, sa) =
+        execute_compiled(&c, &spec, &input, 1 << 32, &mut NopHook).unwrap();
+    let (b, sb) =
+        execute_compiled(&c, &spec, &input, 1 << 32, &mut NopHook).unwrap();
+    assert_eq!(a, b);
+    assert_eq!(sa, sb);
+}
+
+/// Profiler cycle accounting must equal the simulator's RunStats.
+#[test]
+fn profiler_cycles_match_runstats() {
+    let spec = tiny_conv_net(55);
+    let mut rng = Rng::new(4);
+    let input = Builder::random_input(&spec, &mut rng);
+    let c = compile(&spec, V0).unwrap();
+    let mut hook = ProfileHook::new(c.words.len());
+    let (_, stats) =
+        execute_compiled(&c, &spec, &input, 1 << 32, &mut hook).unwrap();
+    assert_eq!(hook.counts.total, stats.instrs);
+    assert_eq!(hook.counts.cycles, stats.cycles);
+    let pc_total: u64 = hook.pc_cycles.iter().sum();
+    assert_eq!(pc_total, stats.cycles);
+}
+
+/// Malformed spec inputs must fail with errors, not panics or silence.
+#[test]
+fn malformed_specs_rejected() {
+    // valid skeleton to mutate
+    let ok = r#"{"name":"m","input_shape":[1,2,2],"num_classes":2,
+        "layers":[{"op":"dense","inputs":[-1],"w":"t0","b":"t1","shift":0,
+                   "relu":false,"in_len":4,"out_shape":[2]}],
+        "tensors":[{"name":"t0","dtype":"i8","shape":[2,4],"offset":0,"size":8},
+                   {"name":"t1","dtype":"i32","shape":[2],"offset":8,"size":2}]}"#;
+    let blob = vec![0u8; 16];
+    assert!(parse_spec(ok, &blob).is_ok());
+
+    // blob too small for the declared tensors
+    assert!(parse_spec(ok, &blob[..4]).is_err());
+    // unknown op
+    let bad = ok.replace("\"dense\"", "\"softmax\"");
+    assert!(parse_spec(&bad, &blob).is_err());
+    // unknown dtype
+    let bad = ok.replace("\"i32\"", "\"f32\"");
+    assert!(parse_spec(&bad, &blob).is_err());
+    // shape/size mismatch
+    let bad = ok.replace("\"size\":8", "\"size\":7");
+    assert!(parse_spec(&bad, &blob).is_err());
+    // dangling input index
+    let bad = ok.replace("\"inputs\":[-1]", "\"inputs\":[5]");
+    assert!(parse_spec(&bad, &blob).is_err());
+    // truncated JSON
+    assert!(parse_spec(&ok[..ok.len() - 3], &blob).is_err());
+}
+
+/// Custom cycle models flow through the whole stack (a slower multiplier
+/// must raise cycle counts but never change outputs).
+#[test]
+fn custom_cycle_model_affects_cycles_not_outputs() {
+    use marvel::compiler::{load_input, make_sim, read_output};
+    let spec = tiny_conv_net(31);
+    let mut rng = Rng::new(12);
+    let input = Builder::random_input(&spec, &mut rng);
+    let c = compile(&spec, V0).unwrap();
+    let run_with = |mul_cost: u64| {
+        let mut sim = make_sim(&c).unwrap();
+        sim.cycle_model.mul = mul_cost;
+        load_input(&mut sim, &c, &input).unwrap();
+        let stats = sim.run_fast(1 << 32).unwrap();
+        let out = read_output(&sim, &c, spec.output_elems()).unwrap();
+        (out, stats)
+    };
+    let (out1, fast) = run_with(1);
+    let (out4, slow) = run_with(4);
+    assert_eq!(out1, out4);
+    assert!(slow.cycles > fast.cycles);
+    assert_eq!(slow.instrs, fast.instrs);
+}
+
+/// JSON emitted by our writer parses back to the identical value.
+#[test]
+fn json_writer_parser_fixpoint() {
+    let v = ObjBuilder::new()
+        .set("models", vec!["lenet5", "vgg16"])
+        .set("speedup", 2.48f64)
+        .set("cycles", 1_169_634i64)
+        .set(
+            "nested",
+            Value::Arr(vec![
+                ObjBuilder::new().set("a", Value::Null).set("b", false).build(),
+            ]),
+        )
+        .build();
+    let text = v.to_string();
+    let back = marvel::util::json::parse(&text).unwrap();
+    assert_eq!(back, v);
+    let map: &BTreeMap<String, Value> = back.as_obj().unwrap();
+    assert_eq!(map["speedup"].as_f64().unwrap(), 2.48);
+}

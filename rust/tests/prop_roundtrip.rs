@@ -1,0 +1,198 @@
+//! The central end-to-end property: for ANY model graph the generator can
+//! produce, compiling for every processor variant and running on the ISS
+//! yields bit-identical outputs to the native reference executor — i.e. the
+//! codegen templates, the Chess-style rewrite passes, and the zol lowering
+//! are all semantics-preserving, including saturation/rounding edge cases.
+
+use marvel::compiler::{compile, execute_compiled};
+use marvel::isa::decode::decode;
+use marvel::isa::encode::encode;
+use marvel::models::synth::{random_net, Builder};
+use marvel::refexec;
+use marvel::sim::{NopHook, Sim, V0, VARIANTS};
+use marvel::util::proptest::check;
+
+#[test]
+fn prop_random_nets_all_variants_match_reference() {
+    check("compile→simulate ≡ refexec (all variants)", 60, |rng| {
+        let spec = random_net(rng);
+        let input = Builder::random_input(&spec, rng);
+        let want = refexec::run(&spec, &input)
+            .map_err(|e| format!("refexec: {e}"))?;
+        for v in VARIANTS {
+            let c = compile(&spec, v)
+                .map_err(|e| format!("compile {} {}: {e}", spec.name, v.name))?;
+            let (got, _) =
+                execute_compiled(&c, &spec, &input, 1 << 33, &mut NopHook)
+                    .map_err(|e| format!("run {} {}: {e}", spec.name, v.name))?;
+            if got != want {
+                return Err(format!(
+                    "{} on {}: mismatch\n got: {:?}\nwant: {:?}\nlayers: {:?}",
+                    spec.name,
+                    v.name,
+                    got,
+                    want,
+                    spec.layers.iter().map(|l| l.op_name()).collect::<Vec<_>>()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_arbitrary_feature_masks_match_reference() {
+    // Beyond the paper's cumulative ladder: ANY of the 16 extension
+    // combinations (the ablation cores) must stay semantics-preserving.
+    check("compile→simulate ≡ refexec (random masks)", 40, |rng| {
+        let spec = random_net(rng);
+        let input = Builder::random_input(&spec, rng);
+        let want = refexec::run(&spec, &input)
+            .map_err(|e| format!("refexec: {e}"))?;
+        let v = marvel::sim::Variant {
+            name: "mask",
+            mac: rng.bool(),
+            add2i: rng.bool(),
+            fusedmac: rng.bool(),
+            zol: rng.bool(),
+        };
+        let c = compile(&spec, v).map_err(|e| format!("{e}"))?;
+        let (got, _) = execute_compiled(&c, &spec, &input, 1 << 33, &mut NopHook)
+            .map_err(|e| format!("{e}"))?;
+        if got != want {
+            return Err(format!(
+                "mask mac={} add2i={} fusedmac={} zol={}: {got:?} != {want:?}",
+                v.mac, v.add2i, v.fusedmac, v.zol
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_variant_ladder_monotone_cycles() {
+    // v0 ≥ v1 ≥ v2 ≥ v3 ≥ v4 in cycles: each extension only removes work.
+    check("cycle counts decrease along the variant ladder", 15, |rng| {
+        let spec = random_net(rng);
+        let input = Builder::random_input(&spec, rng);
+        let mut prev = u64::MAX;
+        for v in VARIANTS {
+            let c = compile(&spec, v).map_err(|e| format!("{e}"))?;
+            let (_, stats) =
+                execute_compiled(&c, &spec, &input, 1 << 33, &mut NopHook)
+                    .map_err(|e| format!("{e}"))?;
+            if stats.cycles > prev {
+                return Err(format!(
+                    "{}: {} cycles {} > previous {}",
+                    spec.name, v.name, stats.cycles, prev
+                ));
+            }
+            prev = stats.cycles;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_machine_code_words_reload_identically() {
+    // The encoded PM image decodes back to the same program (assembler and
+    // Sim::load agree with Sim::from_instrs).
+    check("words → decode ≡ instrs", 20, |rng| {
+        let spec = random_net(rng);
+        let variant = *rng.choice(&VARIANTS);
+        let c = compile(&spec, variant).map_err(|e| format!("{e}"))?;
+        for (i, (instr, &word)) in
+            c.instrs.iter().zip(c.words.iter()).enumerate()
+        {
+            let back = decode(word).map_err(|e| format!("word {i}: {e}"))?;
+            if back != *instr {
+                return Err(format!("word {i}: {back:?} != {instr:?}"));
+            }
+            if encode(&back) != word {
+                return Err(format!("word {i}: re-encode mismatch"));
+            }
+        }
+        // and a Sim::load of the words must run to the same output
+        let input = Builder::random_input(&spec, rng);
+        let want = refexec::run(&spec, &input).map_err(|e| format!("{e}"))?;
+        let mut sim = Sim::load(variant, &c.words, c.plan.dm_size as usize)
+            .map_err(|e| format!("{e}"))?;
+        sim.mem
+            .write_block(c.plan.weights_base, &c.plan.weights_image)
+            .map_err(|e| format!("weights: {e:?}"))?;
+        let bytes: Vec<u8> = input.iter().map(|&v| v as i8 as u8).collect();
+        sim.mem
+            .write_block(c.plan.input_addr, &bytes)
+            .map_err(|e| format!("input: {e:?}"))?;
+        sim.run(1 << 33, &mut NopHook).map_err(|e| format!("{e}"))?;
+        let got = sim
+            .mem
+            .read_i8s(c.plan.output_addr, spec.output_elems())
+            .map_err(|e| format!("output: {e:?}"))?;
+        if got != want {
+            return Err(format!("reloaded run mismatch: {got:?} vs {want:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_v0_code_never_contains_custom_instrs() {
+    check("v0 binaries are pure RV32IM", 25, |rng| {
+        let spec = random_net(rng);
+        let c = compile(&spec, V0).map_err(|e| format!("{e}"))?;
+        for (i, instr) in c.instrs.iter().enumerate() {
+            if instr.is_custom() {
+                return Err(format!("custom instr at {i}: {instr}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_v4_code_never_larger_than_v0() {
+    // Fusion + zol shrink the program (Table 10's PM column trend).
+    check("pm(v4) <= pm(v0)", 25, |rng| {
+        let spec = random_net(rng);
+        let c0 = compile(&spec, V0).map_err(|e| format!("{e}"))?;
+        let c4 = compile(&spec, marvel::sim::V4).map_err(|e| format!("{e}"))?;
+        if c4.pm_bytes() > c0.pm_bytes() {
+            return Err(format!(
+                "v4 PM {} > v0 PM {}",
+                c4.pm_bytes(),
+                c0.pm_bytes()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_simulator_fuzz_random_words_never_panic() {
+    // Arbitrary (mostly illegal) words must produce errors, not panics, and
+    // legal-but-wild programs must stop at a fault or the watchdog.
+    check("ISS is total over random programs", 200, |rng| {
+        let n = rng.range_usize(1, 40);
+        let words: Vec<u32> = (0..n).map(|_| rng.next_u32()).collect();
+        if let Ok(mut sim) = Sim::load(marvel::sim::V4, &words, 4096) {
+            let _ = sim.run(10_000, &mut NopHook);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_random_instruction_sequences_respect_watchdog() {
+    use marvel::isa::random_instr;
+    check("decoded random programs terminate or fault", 200, |rng| {
+        let n = rng.range_usize(1, 60);
+        let instrs: Vec<_> = (0..n).map(|_| random_instr(rng)).collect();
+        let mut sim = match Sim::from_instrs(marvel::sim::V4, instrs, 1 << 16) {
+            Ok(s) => s,
+            Err(_) => return Ok(()),
+        };
+        let _ = sim.run(50_000, &mut NopHook); // must not hang or panic
+        Ok(())
+    });
+}

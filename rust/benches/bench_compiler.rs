@@ -20,12 +20,12 @@ fn main() {
     for (name, spec) in &specs {
         for v in VARIANTS {
             let c = compile(spec, v).unwrap();
-            let n_instrs = c.instrs.len() as f64;
+            let n_instrs = c.instrs().len() as f64;
             let secs = common::time_runs(1, 5, || {
                 let _ = compile(spec, v).unwrap();
             });
             common::report(
-                &format!("compile/{name}/{} ({} instrs)", v.name, c.instrs.len()),
+                &format!("compile/{name}/{} ({} instrs)", v.name, c.instrs().len()),
                 secs,
                 Some((n_instrs, "instr")),
             );

@@ -1,0 +1,75 @@
+//! §Perf L3 bench: batch-engine throughput — the full variants × inputs
+//! sweep of one model as a single job list, timed at 1 worker and at one
+//! worker per core.  Tracks aggregate instr/s next to `bench_iss`'s
+//! single-machine number; the ratio is the engine's scaling factor on this
+//! host (DESIGN.md §10).
+
+#[path = "common.rs"]
+mod common;
+
+use marvel::compiler::{make_job, pack_input, CompileCache};
+use marvel::models::synth::{lenet_shaped, Builder};
+use marvel::sim::engine::{default_threads, run_batch, Job};
+use marvel::sim::VARIANTS;
+use marvel::util::rng::Rng;
+
+fn main() {
+    let (spec, inputs) = match common::artifacts() {
+        Some(arts) => {
+            let spec = marvel::models::load(&arts, "lenet5").unwrap();
+            let io = marvel::runtime::load_golden_io(&arts, "lenet5").unwrap();
+            (spec, io.inputs)
+        }
+        None => {
+            let spec = lenet_shaped(1);
+            let mut rng = Rng::new(1);
+            let inputs: Vec<Vec<i32>> = (0..4)
+                .map(|_| Builder::random_input(&spec, &mut rng))
+                .collect();
+            (spec, inputs)
+        }
+    };
+
+    let packed: Vec<Vec<u8>> =
+        inputs.iter().map(|x| pack_input(x).unwrap()).collect();
+    let cache = CompileCache::new();
+    let compiled: Vec<_> = VARIANTS
+        .iter()
+        .map(|&v| cache.get_or_compile(&spec, v).unwrap())
+        .collect();
+    let mut jobs: Vec<Job<'_>> = Vec::new();
+    for c in &compiled {
+        for x in &packed {
+            jobs.push(make_job(c, &spec, x, 1 << 36));
+        }
+    }
+
+    // One sequential pass establishes the total retired-instruction work
+    // (identical on every run — the engine is deterministic).
+    let total_instrs: u64 = run_batch(&jobs, 1)
+        .into_iter()
+        .map(|r| r.unwrap().stats.instrs)
+        .sum();
+
+    let all = default_threads();
+    let mut configs = vec![1usize];
+    if all > 1 {
+        configs.push(all);
+    }
+    for threads in configs {
+        let secs = common::time_runs(1, 5, || {
+            let rs = run_batch(&jobs, threads);
+            assert!(rs.iter().all(|r| r.is_ok()));
+        });
+        common::report(
+            &format!(
+                "engine/{}x{} jobs/{threads} thread{}",
+                compiled.len(),
+                inputs.len(),
+                if threads == 1 { "" } else { "s" }
+            ),
+            secs,
+            Some((total_instrs as f64, "instr")),
+        );
+    }
+}

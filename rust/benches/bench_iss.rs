@@ -46,7 +46,7 @@ fn main() {
         let secs = common::time_runs(1, 5, || {
             sim.reset_cpu();
             load_input(&mut sim, &c, &input).unwrap();
-            let mut hook = ProfileHook::new(c.words.len());
+            let mut hook = ProfileHook::new(c.words().len());
             sim.run(1 << 36, &mut hook).unwrap();
         });
         common::report(

@@ -13,21 +13,26 @@ pub mod plan;
 pub mod rewrite;
 pub mod spec;
 
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
 use anyhow::{Context, Result};
 
-use crate::isa::encode::encode;
 use crate::isa::Instr;
-use crate::sim::{RetireHook, RunStats, Sim, SimError, Variant};
+use crate::sim::engine::Job;
+use crate::sim::{Machine, Program, RetireHook, RunStats, SimError, Variant};
 use asm::FlattenStats;
 use rewrite::RewriteStats;
 use spec::ModelSpec;
 
 /// A fully compiled model for one processor variant.
+///
+/// The instruction stream and PM image live in a shared [`Program`]: any
+/// number of [`Machine`]s / batch-engine jobs execute it via a cheap `Arc`
+/// handle — nothing on the per-inference path clones instructions.
 pub struct Compiled {
-    pub variant: Variant,
-    pub instrs: Vec<Instr>,
-    /// Encoded machine words (PM image).
-    pub words: Vec<u32>,
+    /// The validated, decode-once program (instructions + PM image).
+    pub program: Arc<Program>,
     pub plan: plan::Plan,
     /// Per-layer [start, end) instruction index ranges.
     pub layer_ranges: Vec<(usize, usize)>,
@@ -36,9 +41,25 @@ pub struct Compiled {
 }
 
 impl Compiled {
+    /// The variant this model was compiled for (authoritative copy lives
+    /// in the validated [`Program`]).
+    pub fn variant(&self) -> Variant {
+        self.program.variant()
+    }
+
+    /// Predecoded instruction stream.
+    pub fn instrs(&self) -> &[Instr] {
+        self.program.instrs()
+    }
+
+    /// Encoded machine words (PM image).
+    pub fn words(&self) -> &[u32] {
+        self.program.words()
+    }
+
     /// Program-memory footprint in bytes (Table 10 PM column).
     pub fn pm_bytes(&self) -> u32 {
-        (self.words.len() * 4) as u32
+        self.program.pm_bytes()
     }
 
     /// Data-memory footprint in bytes (Table 10 DM column).
@@ -70,11 +91,12 @@ pub fn compile(spec: &ModelSpec, variant: Variant) -> Result<Compiled> {
     }
     instrs.push(Instr::Ecall);
 
-    let words = instrs.iter().map(encode).collect();
+    let program = Arc::new(
+        Program::from_instrs(variant, instrs)
+            .map_err(|e| anyhow::anyhow!("compiled program rejected: {e}"))?,
+    );
     Ok(Compiled {
-        variant,
-        instrs,
-        words,
+        program,
         plan,
         layer_ranges,
         rewrite_stats,
@@ -82,19 +104,147 @@ pub fn compile(spec: &ModelSpec, variant: Variant) -> Result<Compiled> {
     })
 }
 
+/// Process-wide compile cache keyed by (model name, variant feature mask).
+///
+/// Sweeps — Fig 11/12, Table 10, the ablation grid, `report all` — revisit
+/// the same (model, variant) pairs; the cache hands back the same
+/// `Arc<Compiled>` (and therefore the same shared [`Program`]) instead of
+/// recompiling.  Thread-safe: callers can share one cache across batch
+/// workers.
+#[derive(Default)]
+pub struct CompileCache {
+    map: Mutex<HashMap<String, Arc<Compiled>>>,
+}
+
+impl CompileCache {
+    pub fn new() -> CompileCache {
+        CompileCache::default()
+    }
+
+    /// FNV-1a over the spec's content: two specs that share a name but
+    /// differ in anything that affects codegen (layer kinds, scalar params
+    /// like shift/relu/stride/pad, graph wiring, weights) must not collide.
+    /// The layer graph goes in via its `Debug` rendering, which covers
+    /// every field; the weight payload is hashed directly.
+    fn fingerprint(spec: &ModelSpec) -> u64 {
+        fn eat_byte(h: &mut u64, b: u8) {
+            *h ^= b as u64;
+            *h = h.wrapping_mul(0x100_0000_01b3);
+        }
+        fn eat(h: &mut u64, v: u64) {
+            for b in v.to_le_bytes() {
+                eat_byte(h, b);
+            }
+        }
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        eat(&mut h, spec.num_classes as u64);
+        for d in spec.input_shape {
+            eat(&mut h, d as u64);
+        }
+        for b in format!("{:?}", spec.layers).bytes() {
+            eat_byte(&mut h, b);
+        }
+        for t in spec.tensors.values() {
+            eat(&mut h, t.shape.len() as u64);
+            for &d in &t.shape {
+                eat(&mut h, d as u64);
+            }
+            eat(&mut h, t.data.len() as u64);
+            for &x in &t.data {
+                eat(&mut h, x as u64);
+            }
+        }
+        h
+    }
+
+
+    /// Return the cached compilation or compile-and-insert.
+    ///
+    /// One-off convenience: fingerprints the spec on every call.  Sweeps
+    /// compiling several variants of one spec should use [`Self::for_spec`]
+    /// so the weight payload is hashed once.
+    pub fn get_or_compile(
+        &self,
+        spec: &ModelSpec,
+        variant: Variant,
+    ) -> Result<Arc<Compiled>> {
+        self.for_spec(spec).get_or_compile(variant)
+    }
+
+    /// Bind the cache to one spec, computing its content fingerprint once.
+    pub fn for_spec<'c, 's>(
+        &'c self,
+        spec: &'s ModelSpec,
+    ) -> SpecCompileCache<'c, 's> {
+        SpecCompileCache { cache: self, spec, fingerprint: Self::fingerprint(spec) }
+    }
+
+    /// Number of cached compilations.
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A [`CompileCache`] bound to one spec with its fingerprint precomputed —
+/// the handle sweeps use to compile many variants without re-hashing the
+/// weight payload per lookup.
+pub struct SpecCompileCache<'c, 's> {
+    cache: &'c CompileCache,
+    spec: &'s ModelSpec,
+    fingerprint: u64,
+}
+
+impl SpecCompileCache<'_, '_> {
+    /// The full feature mask participates so custom variants (ablation
+    /// cores) with reused names cannot collide.
+    fn key(&self, v: &Variant) -> String {
+        format!(
+            "{}|{:016x}|{}|{}{}{}{}",
+            self.spec.name,
+            self.fingerprint,
+            v.name,
+            v.mac as u8,
+            v.add2i as u8,
+            v.fusedmac as u8,
+            v.zol as u8
+        )
+    }
+
+    /// Return the cached compilation or compile-and-insert.
+    pub fn get_or_compile(&self, variant: Variant) -> Result<Arc<Compiled>> {
+        let key = self.key(&variant);
+        if let Some(c) = self.cache.map.lock().unwrap().get(&key) {
+            return Ok(Arc::clone(c));
+        }
+        // Compile outside the lock: a sweep's first pass may race to build
+        // the same entry twice, but never blocks other variants behind one
+        // long compilation.
+        let c = Arc::new(compile(self.spec, variant)?);
+        let mut map = self.cache.map.lock().unwrap();
+        let entry = map.entry(key).or_insert_with(|| Arc::clone(&c));
+        Ok(Arc::clone(entry))
+    }
+}
+
 /// Instantiate a simulator with the compiled program + weights loaded.
-pub fn make_sim(c: &Compiled) -> Result<Sim, SimError> {
+/// The program is shared, not cloned.
+pub fn make_sim(c: &Compiled) -> Result<Machine, SimError> {
     let mut sim =
-        Sim::from_instrs(c.variant, c.instrs.clone(), c.plan.dm_size as usize)?;
+        Machine::new(Arc::clone(&c.program), c.plan.dm_size as usize);
     sim.mem
         .write_block(c.plan.weights_base, &c.plan.weights_image)
         .map_err(|fault| SimError::Mem { pc: 0, fault })?;
     Ok(sim)
 }
 
-/// Write an int8 input tensor into the sim's DM.
-pub fn load_input(sim: &mut Sim, c: &Compiled, input: &[i32]) -> Result<()> {
-    let bytes: Vec<u8> = input
+/// Validate + pack an int8 input tensor into DM bytes.  Pack once per
+/// input and feed the same slice to every variant's [`make_job`].
+pub fn pack_input(input: &[i32]) -> Result<Vec<u8>> {
+    input
         .iter()
         .map(|&v| {
             anyhow::ensure!(
@@ -103,7 +253,31 @@ pub fn load_input(sim: &mut Sim, c: &Compiled, input: &[i32]) -> Result<()> {
             );
             Ok(v as i8 as u8)
         })
-        .collect::<Result<_>>()?;
+        .collect()
+}
+
+/// Build a batch-engine [`Job`] for one inference on a compiled model.
+/// The weights image and the packed input (see [`pack_input`]) are
+/// borrowed, the program `Arc`-shared — a job costs no copies.
+pub fn make_job<'a>(
+    c: &'a Compiled,
+    spec: &ModelSpec,
+    input: &'a [u8],
+    max_instrs: u64,
+) -> Job<'a> {
+    Job {
+        program: Arc::clone(&c.program),
+        dm_size: c.plan.dm_size as usize,
+        preload: vec![(c.plan.weights_base, &c.plan.weights_image)],
+        input: (c.plan.input_addr, input),
+        output: (c.plan.output_addr, spec.output_elems()),
+        max_instrs,
+    }
+}
+
+/// Write an int8 input tensor into the sim's DM.
+pub fn load_input(sim: &mut Machine, c: &Compiled, input: &[i32]) -> Result<()> {
+    let bytes = pack_input(input)?;
     sim.mem
         .write_block(c.plan.input_addr, &bytes)
         .map_err(|fault| anyhow::anyhow!("input write fault at {:#x}", fault.addr))?;
@@ -111,7 +285,7 @@ pub fn load_input(sim: &mut Sim, c: &Compiled, input: &[i32]) -> Result<()> {
 }
 
 /// Read the final logits back from DM.
-pub fn read_output(sim: &Sim, c: &Compiled, n: usize) -> Result<Vec<i32>> {
+pub fn read_output(sim: &Machine, c: &Compiled, n: usize) -> Result<Vec<i32>> {
     sim.mem
         .read_i8s(c.plan.output_addr, n)
         .map_err(|fault| anyhow::anyhow!("output read fault at {:#x}", fault.addr))
@@ -208,11 +382,11 @@ mod tests {
         let spec = tiny_conv_net(11);
         let c0 = compile(&spec, V0).unwrap();
         assert_eq!(c0.rewrite_stats, RewriteStats::default());
-        assert!(c0.instrs.iter().all(|i| !i.is_custom()));
+        assert!(c0.instrs().iter().all(|i| !i.is_custom()));
         let c4 = compile(&spec, V4).unwrap();
         assert!(c4.rewrite_stats.fusedmac > 0);
         assert!(c4.rewrite_stats.add2i > 0);
-        assert!(c4.instrs.iter().any(|i| i.is_custom()));
+        assert!(c4.instrs().iter().any(|i| i.is_custom()));
     }
 
     #[test]
@@ -220,6 +394,26 @@ mod tests {
         let spec = tiny_conv_net(13);
         let a = compile(&spec, V4).unwrap();
         let b = compile(&spec, V4).unwrap();
-        assert_eq!(a.words, b.words);
+        assert_eq!(a.words(), b.words());
+    }
+
+    #[test]
+    fn compile_cache_shares_programs() {
+        let spec = tiny_conv_net(17);
+        let cache = CompileCache::new();
+        let a = cache.get_or_compile(&spec, V4).unwrap();
+        let b = cache.get_or_compile(&spec, V4).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "same (model, variant) must hit");
+        let c0 = cache.get_or_compile(&spec, V0).unwrap();
+        assert!(!Arc::ptr_eq(&a, &c0));
+        assert_eq!(cache.len(), 2);
+        // same name, different seed (different weights) must not collide
+        let other = tiny_conv_net(18);
+        let d = cache.get_or_compile(&other, V4).unwrap();
+        assert!(!Arc::ptr_eq(&a, &d), "content fingerprint must split key");
+        assert_eq!(cache.len(), 3);
+        // the cached program is the one the sims execute — no copies
+        let sim = make_sim(&a).unwrap();
+        assert!(Arc::ptr_eq(sim.program(), &a.program));
     }
 }

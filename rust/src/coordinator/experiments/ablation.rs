@@ -15,11 +15,12 @@ use std::path::Path;
 
 use anyhow::Result;
 
-use crate::compiler;
+use crate::compiler::{self, CompileCache};
 use crate::hw::area_of;
 use crate::models;
 use crate::runtime;
-use crate::sim::{NopHook, Variant, V0, V4};
+use crate::sim::engine::{run_batch, Job};
+use crate::sim::{Variant, V0, V4};
 use crate::util::tables::{fmt_si, Table};
 
 /// The ablation cores: baseline, each extension alone, the pair-fusions
@@ -48,28 +49,58 @@ pub struct AblationPoint {
 
 /// Measure the ablation grid for one model.
 pub fn measure(artifacts: &Path, name: &str) -> Result<Vec<AblationPoint>> {
+    measure_cached(artifacts, name, &CompileCache::new(), 0)
+}
+
+/// [`measure`] on the batch engine with a shared compile cache: all
+/// ablation cores simulate concurrently (`threads` 0 = one per core).
+pub fn measure_cached(
+    artifacts: &Path,
+    name: &str,
+    cache: &CompileCache,
+    threads: usize,
+) -> Result<Vec<AblationPoint>> {
     let spec = models::load(artifacts, name)?;
     let io = runtime::load_golden_io(artifacts, name)?;
-    let input = &io.inputs[0];
-    let mut out = Vec::new();
-    let mut v0_cycles = 0u64;
-    for variant in ablation_variants() {
-        let c = compiler::compile(&spec, variant)?;
-        let (got, stats) =
-            compiler::execute_compiled(&c, &spec, input, 1 << 36, &mut NopHook)?;
+    let input = compiler::pack_input(&io.inputs[0])?;
+    let variants = ablation_variants();
+
+    let scache = cache.for_spec(&spec);
+    let compiled = variants
+        .iter()
+        .map(|&v| scache.get_or_compile(v))
+        .collect::<Result<Vec<_>>>()?;
+    let jobs: Vec<Job<'_>> = compiled
+        .iter()
+        .map(|c| compiler::make_job(c, &spec, &input, 1 << 36))
+        .collect();
+    let results = run_batch(&jobs, threads);
+
+    let mut runs = Vec::with_capacity(variants.len());
+    for (variant, r) in variants.iter().zip(results) {
+        let run = r.map_err(|e| {
+            anyhow::anyhow!("{name} on {}: simulation failed: {e}", variant.name)
+        })?;
         anyhow::ensure!(
-            got == io.outputs[0],
+            run.output == io.outputs[0],
             "{name} on {}: output mismatch",
             variant.name
         );
-        if variant == V0 {
-            v0_cycles = stats.cycles;
-        }
+        runs.push(run);
+    }
+    let v0_cycles = variants
+        .iter()
+        .position(|v| *v == V0)
+        .map(|i| runs[i].stats.cycles)
+        .expect("ablation grid always contains V0");
+
+    let mut out = Vec::new();
+    for (variant, run) in variants.into_iter().zip(runs) {
         let lut_delta = area_of(&variant).lut - area_of(&V0).lut;
-        let speedup = v0_cycles as f64 / stats.cycles as f64;
+        let speedup = v0_cycles as f64 / run.stats.cycles as f64;
         out.push(AblationPoint {
             variant,
-            cycles: stats.cycles,
+            cycles: run.stats.cycles,
             speedup,
             lut_delta,
             speedup_per_klut: if lut_delta > 0 {
@@ -84,9 +115,19 @@ pub fn measure(artifacts: &Path, name: &str) -> Result<Vec<AblationPoint>> {
 
 /// Render the ablation table for the given models.
 pub fn render(artifacts: &Path, models: &[String]) -> Result<String> {
+    render_cached(artifacts, models, &CompileCache::new(), 0)
+}
+
+/// [`render`] with a shared compile cache + thread override.
+pub fn render_cached(
+    artifacts: &Path,
+    models: &[String],
+    cache: &CompileCache,
+    threads: usize,
+) -> Result<String> {
     let mut out = String::new();
     for name in models {
-        let points = measure(artifacts, name)?;
+        let points = measure_cached(artifacts, name, cache, threads)?;
         let mut t = Table::new(&[
             "core", "cycles", "speedup", "ΔLUT", "speedup/kLUT",
         ])

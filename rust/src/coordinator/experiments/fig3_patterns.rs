@@ -17,7 +17,7 @@ pub fn profile_model(artifacts: &Path, name: &str) -> Result<PatternCounts> {
     let spec = models::load(artifacts, name)?;
     let io = runtime::load_golden_io(artifacts, name)?;
     let c = compiler::compile(&spec, V0)?;
-    let mut hook = ProfileHook::new(c.words.len());
+    let mut hook = ProfileHook::new(c.words().len());
     compiler::execute_compiled(&c, &spec, &io.inputs[0], 1 << 36, &mut hook)?;
     Ok(hook.finish())
 }

@@ -35,7 +35,7 @@ pub fn layer_listing(
     ensure!(layer_idx < spec.layers.len(), "layer index out of range");
     let io = runtime::load_golden_io(artifacts, name)?;
     let c: Compiled = compiler::compile(&spec, variant)?;
-    let mut hook = ProfileHook::new(c.words.len());
+    let mut hook = ProfileHook::new(c.words().len());
     compiler::execute_compiled(&c, &spec, &io.inputs[0], 1 << 36, &mut hook)?;
 
     let (start, end) = c.layer_ranges[layer_idx];
@@ -46,8 +46,8 @@ pub fn layer_listing(
         layer_cycles += cycles;
         lines.push(AsmLine {
             pc: (i * 4) as u32,
-            word: c.words[i],
-            asm: disasm(&c.instrs[i]),
+            word: c.words()[i],
+            asm: disasm(&c.instrs()[i]),
             cycles,
             retires: hook.pc_retires[i],
         });

@@ -17,7 +17,8 @@ use std::path::Path;
 
 use anyhow::Result;
 
-use super::flow::{run_flow, FlowOptions, FlowResult};
+use super::flow::{run_flow_cached, FlowOptions, FlowResult};
+use crate::compiler::CompileCache;
 use crate::models::PAPER_MODELS;
 
 /// Models present in the artifacts dir, paper order.
@@ -37,8 +38,19 @@ pub fn run_all_flows(
     artifacts: &Path,
     opts: &FlowOptions,
 ) -> Result<Vec<FlowResult>> {
+    run_all_flows_cached(artifacts, opts, &CompileCache::new())
+}
+
+/// [`run_all_flows`] against a shared compile cache: each flow's batch
+/// already saturates the cores, and the cache lets follow-up generators
+/// (e.g. the ablation grid in `report all`) reuse every compilation.
+pub fn run_all_flows_cached(
+    artifacts: &Path,
+    opts: &FlowOptions,
+    cache: &CompileCache,
+) -> Result<Vec<FlowResult>> {
     available_models(artifacts)
         .iter()
-        .map(|m| run_flow(artifacts, m, opts))
+        .map(|m| run_flow_cached(artifacts, m, opts, cache))
         .collect()
 }

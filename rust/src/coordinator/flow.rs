@@ -1,16 +1,22 @@
-//! One-model end-to-end flow: spec → 5 compiled cores → simulate → verify
+//! One-model end-to-end flow: spec → compiled cores → simulate → verify
 //! → measure.  This is the rust twin of the paper's Fig 1 pipeline with the
 //! FPGA replaced by the cycle-accurate core model.
+//!
+//! All variant × input runs of a flow go through the batch engine
+//! ([`crate::sim::engine`]) as one job list, so a flow saturates every core
+//! while producing results identical to the sequential path (DESIGN.md §3).
 
 use std::path::Path;
+use std::sync::Arc;
 
-use anyhow::{ensure, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
-use crate::compiler::{self, Compiled};
+use crate::compiler::{self, CompileCache, Compiled};
 use crate::hw::{area_of, energy_mj, AreaReport, EnergyPoint};
 use crate::models;
 use crate::runtime;
-use crate::sim::{NopHook, Variant, VARIANTS};
+use crate::sim::engine::{run_batch, Job};
+use crate::sim::{Variant, V0, VARIANTS};
 
 /// Flow configuration.
 #[derive(Clone, Debug)]
@@ -23,6 +29,8 @@ pub struct FlowOptions {
     pub max_instrs: u64,
     /// Which variants to build/run.
     pub variants: Vec<Variant>,
+    /// Batch-engine worker threads (0 = one per core, 1 = sequential).
+    pub threads: usize,
 }
 
 impl Default for FlowOptions {
@@ -32,6 +40,7 @@ impl Default for FlowOptions {
             use_pjrt: false,
             max_instrs: 1 << 36,
             variants: VARIANTS.to_vec(),
+            threads: 0,
         }
     }
 }
@@ -50,7 +59,9 @@ pub struct VariantMetrics {
     pub dm_bytes: u32,
     pub area: AreaReport,
     pub energy: EnergyPoint,
-    /// Speedup vs v0 (cycles ratio).
+    /// Speedup vs the v0 baseline (cycles ratio).  The baseline is always
+    /// measured on the real [`V0`] core — if v0 is not among
+    /// `FlowOptions::variants` an extra hidden baseline run provides it.
     pub speedup: f64,
     pub rewrite: compiler::rewrite::RewriteStats,
     pub zol_loops: u64,
@@ -71,12 +82,25 @@ pub struct FlowResult {
 
 /// Compile + simulate + verify one model across core variants.
 pub fn run_flow(artifacts: &Path, name: &str, opts: &FlowOptions) -> Result<FlowResult> {
+    run_flow_cached(artifacts, name, opts, &CompileCache::new())
+}
+
+/// [`run_flow`] against a shared compile cache — sweeps (`report all`, the
+/// experiment generators, benches) pass one cache so each (model, variant)
+/// compiles exactly once per process.
+pub fn run_flow_cached(
+    artifacts: &Path,
+    name: &str,
+    opts: &FlowOptions,
+    cache: &CompileCache,
+) -> Result<FlowResult> {
+    ensure!(!opts.variants.is_empty(), "{name}: no variants requested");
     let spec = models::load(artifacts, name)
         .with_context(|| format!("loading model {name}"))?;
     let io = runtime::load_golden_io(artifacts, name)
         .with_context(|| format!("loading golden I/O for {name}"))?;
     ensure!(!io.inputs.is_empty(), "{name}: no golden inputs");
-    let n = opts.n_inputs.min(io.inputs.len());
+    let n = opts.n_inputs.min(io.inputs.len()).max(1);
 
     // optional PJRT golden path (executes the AOT HLO artifact)
     let pjrt = if opts.use_pjrt {
@@ -86,51 +110,117 @@ pub fn run_flow(artifacts: &Path, name: &str, opts: &FlowOptions) -> Result<Flow
         None
     };
 
-    let mut verified_golden = true;
-    let mut verified_pjrt = opts.use_pjrt.then_some(true);
-    let mut metrics = Vec::new();
-    let mut v0_cycles = None;
+    // Compile every requested variant, plus a hidden V0 baseline when the
+    // request omits it: `speedup` is defined against the real v0 core, not
+    // against whichever variant happens to be listed first.
+    let reported = opts.variants.len();
+    let scache = cache.for_spec(&spec);
+    let mut units: Vec<Arc<Compiled>> = opts
+        .variants
+        .iter()
+        .map(|&v| {
+            scache
+                .get_or_compile(v)
+                .with_context(|| format!("compiling {name} for {}", v.name))
+        })
+        .collect::<Result<_>>()?;
+    if !opts.variants.contains(&V0) {
+        units.push(
+            scache
+                .get_or_compile(V0)
+                .with_context(|| format!("compiling {name} baseline v0"))?,
+        );
+    }
 
-    for &variant in &opts.variants {
-        let c: Compiled = compiler::compile(&spec, variant)
-            .with_context(|| format!("compiling {name} for {}", variant.name))?;
-        let mut tot_instrs = 0u64;
-        let mut tot_cycles = 0u64;
-        for (i, input) in io.inputs.iter().take(n).enumerate() {
-            let (got, stats) = compiler::execute_compiled(
-                &c,
-                &spec,
-                input,
-                opts.max_instrs,
-                &mut NopHook,
-            )?;
-            tot_instrs += stats.instrs;
-            tot_cycles += stats.cycles;
-            if got != io.outputs[i] {
-                verified_golden = false;
+    // One job per (unit, input) — a single batch saturates the machine.
+    // Inputs are packed once and borrowed by every variant's job.
+    let packed: Vec<Vec<u8>> = io
+        .inputs
+        .iter()
+        .take(n)
+        .map(|x| compiler::pack_input(x))
+        .collect::<Result<_>>()?;
+    let mut jobs: Vec<Job<'_>> = Vec::with_capacity(units.len() * n);
+    for c in &units {
+        for input in &packed {
+            jobs.push(compiler::make_job(c, &spec, input, opts.max_instrs));
+        }
+    }
+    let raw = run_batch(&jobs, opts.threads);
+
+    // Reassemble in submission order: unit u's runs are raw[u*n .. u*n+n].
+    let mut outputs = Vec::with_capacity(raw.len());
+    for (j, r) in raw.into_iter().enumerate() {
+        let (u, i) = (j / n, j % n);
+        let out = r.map_err(|e| {
+            anyhow::anyhow!(
+                "{name} on {} input {i}: simulation failed: {e}",
+                units[u].variant().name
+            )
+        })?;
+        outputs.push(out);
+    }
+
+    // Per-unit aggregates; the baseline comes from the real V0 unit
+    // (reported or hidden).  Golden verification covers only the variants
+    // the caller requested — the hidden baseline exists purely to define
+    // `speedup` (its simulation errors still abort above, since a broken
+    // baseline means no speedup can be reported).
+    let mut verified_golden = true;
+    let mut avg = Vec::with_capacity(units.len());
+    for u in 0..units.len() {
+        let runs = &outputs[u * n..u * n + n];
+        let instrs = runs.iter().map(|r| r.stats.instrs).sum::<u64>() / n as u64;
+        let cycles = runs.iter().map(|r| r.stats.cycles).sum::<u64>() / n as u64;
+        if u < reported {
+            for (i, r) in runs.iter().enumerate() {
+                if r.output != io.outputs[i] {
+                    verified_golden = false;
+                }
             }
-            if let Some(g) = &pjrt {
-                let want = g.run(input)?;
-                if got != want {
+        }
+        avg.push((instrs, cycles));
+    }
+    let v0_cycles = match units.iter().position(|c| c.variant() == V0) {
+        Some(u) => avg[u].1,
+        None => bail!("{name}: V0 baseline missing from flow units"),
+    };
+
+    // PJRT cross-check: one golden execution per input, compared against
+    // every reported variant's logits.
+    let mut verified_pjrt = opts.use_pjrt.then_some(true);
+    if let Some(g) = &pjrt {
+        for (i, input) in io.inputs.iter().take(n).enumerate() {
+            let want = g.run(input)?;
+            for u in 0..reported {
+                if outputs[u * n + i].output != want {
                     verified_pjrt = Some(false);
                 }
             }
         }
-        let cycles = tot_cycles / n as u64;
-        let v0c = *v0_cycles.get_or_insert(cycles);
-        metrics.push(VariantMetrics {
-            variant,
-            instrs: tot_instrs / n as u64,
-            cycles,
-            pm_bytes: c.pm_bytes(),
-            dm_bytes: c.dm_bytes(),
-            area: area_of(&variant),
-            energy: energy_mj(&variant, cycles),
-            speedup: v0c as f64 / cycles as f64,
-            rewrite: c.rewrite_stats,
-            zol_loops: c.flatten_stats.zol_loops,
-        });
     }
+
+    let metrics = units
+        .iter()
+        .take(reported)
+        .enumerate()
+        .map(|(u, c)| {
+            let (instrs, cycles) = avg[u];
+            let variant = c.variant();
+            VariantMetrics {
+                variant,
+                instrs,
+                cycles,
+                pm_bytes: c.pm_bytes(),
+                dm_bytes: c.dm_bytes(),
+                area: area_of(&variant),
+                energy: energy_mj(&variant, cycles),
+                speedup: v0_cycles as f64 / cycles as f64,
+                rewrite: c.rewrite_stats,
+                zol_loops: c.flatten_stats.zol_loops,
+            }
+        })
+        .collect();
 
     Ok(FlowResult {
         model: name.to_string(),

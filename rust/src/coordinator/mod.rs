@@ -11,4 +11,5 @@
 pub mod experiments;
 pub mod flow;
 
-pub use flow::{run_flow, FlowOptions, FlowResult, VariantMetrics};
+pub use flow::{run_flow, run_flow_cached, FlowOptions, FlowResult,
+               VariantMetrics};

@@ -165,7 +165,7 @@ mod tests {
     fn lenet_profile() -> PatternCounts {
         let spec = lenet_shaped(33);
         let c = compile(&spec, V0).unwrap();
-        let mut hook = ProfileHook::new(c.words.len());
+        let mut hook = ProfileHook::new(c.words().len());
         let mut rng = Rng::new(2);
         let input = Builder::random_input(&spec, &mut rng);
         execute_compiled(&c, &spec, &input, 1 << 33, &mut hook).unwrap();

@@ -13,7 +13,9 @@
 //! - [`util`] — JSON, RNG, ASCII tables, property-test harness (offline
 //!   substitutes for serde/proptest/criterion).
 //! - [`isa`] — RV32IM + custom instruction encode/decode/disassemble.
-//! - [`sim`] — the instruction/cycle-accurate trv32p3-class simulator.
+//! - [`sim`] — the instruction/cycle-accurate trv32p3-class simulator:
+//!   shared decode-once [`sim::Program`], per-run [`sim::Machine`], and the
+//!   [`sim::engine`] parallel batch layer.
 //! - [`quant`] — the int8/int32 shift-requant arithmetic contract.
 //! - [`compiler`] — model spec → RV32 assembly → machine code, with the
 //!   Chess-style rewrite passes.

@@ -127,7 +127,8 @@ fn print_usage() {
     println!(
         "marvel {} — model-class aware custom RISC-V extension generation\n\n\
          usage: marvel <flow|run|compile|profile|extgen|report|hw|golden> \
-         [--model NAME] [--variant v0..v4] [--artifacts DIR] ...",
+         [--model NAME] [--variant v0..v4] [--artifacts DIR] \
+         [--threads N (batch engine workers, 0 = all cores)] ...",
         marvel::version()
     );
 }
@@ -137,6 +138,7 @@ fn cmd_flow(args: &Args) -> Result<()> {
     let opts = FlowOptions {
         n_inputs: args.usize_opt("n", 2),
         use_pjrt: args.flag("pjrt"),
+        threads: args.usize_opt("threads", 0),
         ..FlowOptions::default()
     };
     let model = args.model()?;
@@ -229,7 +231,7 @@ fn cmd_compile(args: &Args) -> Result<()> {
     println!(
         "{model} for {}: {} instrs, PM {:.2} kB, DM {:.2} kB",
         variant.name,
-        c.instrs.len(),
+        c.instrs().len(),
         c.pm_bytes() as f64 / 1024.0,
         c.dm_bytes() as f64 / 1024.0
     );
@@ -242,7 +244,7 @@ fn cmd_compile(args: &Args) -> Result<()> {
     );
     if let Some(out) = args.get("out") {
         let bytes: Vec<u8> =
-            c.words.iter().flat_map(|w| w.to_le_bytes()).collect();
+            c.words().iter().flat_map(|w| w.to_le_bytes()).collect();
         std::fs::write(out, &bytes)?;
         println!("PM image written to {out}");
     }
@@ -253,8 +255,8 @@ fn cmd_compile(args: &Args) -> Result<()> {
                 println!(
                     "  {:#07x}  {:08x}  {}",
                     i * 4,
-                    c.words[i],
-                    marvel::isa::disasm::disasm(&c.instrs[i])
+                    c.words()[i],
+                    marvel::isa::disasm::disasm(&c.instrs()[i])
                 );
             }
         }
@@ -343,16 +345,21 @@ fn cmd_report(args: &Args) -> Result<()> {
             artifacts.display()
         );
     }
+    // One compile cache for the whole report: the flow sweeps and the
+    // ablation grid revisit the same (model, variant) pairs.
+    let cache = marvel::compiler::CompileCache::new();
+    let threads = args.usize_opt("threads", 0);
     let needs_flows = matches!(which, "fig11" | "fig12" | "table10" | "all");
     let flows = if needs_flows {
         let opts = FlowOptions {
             n_inputs: args.usize_opt("n", 2),
             use_pjrt: args.flag("pjrt"),
+            threads,
             ..FlowOptions::default()
         };
         models
             .iter()
-            .map(|m| run_flow(&artifacts, m, &opts))
+            .map(|m| marvel::coordinator::run_flow_cached(&artifacts, m, &opts, &cache))
             .collect::<Result<Vec<_>>>()?
     } else {
         Vec::new()
@@ -397,7 +404,7 @@ fn cmd_report(args: &Args) -> Result<()> {
         out.push('\n');
     }
     if matches!(which, "ablation" | "all") {
-        out.push_str(&ablation::render(&artifacts, &models)?);
+        out.push_str(&ablation::render_cached(&artifacts, &models, &cache, threads)?);
         out.push('\n');
     }
     if out.is_empty() {

@@ -229,7 +229,7 @@ mod tests {
     fn profile_tiny() -> PatternCounts {
         let spec = tiny_conv_net(21);
         let c = compile(&spec, V0).unwrap();
-        let mut hook = ProfileHook::new(c.words.len());
+        let mut hook = ProfileHook::new(c.words().len());
         let mut rng = Rng::new(5);
         let input = Builder::random_input(&spec, &mut rng);
         execute_compiled(&c, &spec, &input, 1 << 32, &mut hook).unwrap();

@@ -10,87 +10,147 @@
 //! HLO text (not serialized HloModuleProto) is mandatory: jax ≥ 0.5 emits
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
 //! reassigns ids (see /opt/xla-example/README.md and python/compile/aot.py).
+//!
+//! The PJRT path wraps the `xla` crate, which cannot be vendored offline —
+//! it is therefore gated behind the `pjrt` cargo feature (add `xla` to
+//! `[dependencies]` when enabling it).  Without the feature, [`Runtime`]
+//! and [`GoldenModel`] compile to stubs that report themselves unavailable,
+//! and everything else in this module ([`GoldenIo`], [`load_golden_io`])
+//! works unchanged — flows simply run with `use_pjrt: false`.
 
 use std::path::Path;
 
 use anyhow::{ensure, Context, Result};
 
-/// A compiled golden model (one HLO executable + its I/O geometry).
-pub struct GoldenModel {
-    exe: xla::PjRtLoadedExecutable,
-    input_shape: [usize; 3],
-    output_len: usize,
-}
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use super::*;
 
-/// Shared PJRT CPU client (one per process).
-pub struct Runtime {
-    client: xla::PjRtClient,
-}
-
-impl Runtime {
-    /// Create the PJRT CPU client.
-    pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime { client })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load and compile `artifacts/hlo/<name>.hlo.txt`.
-    pub fn load_model(
-        &self,
-        artifacts: &Path,
-        name: &str,
+    /// A compiled golden model (one HLO executable + its I/O geometry).
+    pub struct GoldenModel {
+        exe: xla::PjRtLoadedExecutable,
         input_shape: [usize; 3],
         output_len: usize,
-    ) -> Result<GoldenModel> {
-        let path = artifacts.join("hlo").join(format!("{name}.hlo.txt"));
-        ensure!(path.exists(), "missing HLO artifact {}", path.display());
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 path")?,
-        )
-        .with_context(|| format!("parsing {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?;
-        Ok(GoldenModel { exe, input_shape, output_len })
+    }
+
+    /// Shared PJRT CPU client (one per process).
+    pub struct Runtime {
+        client: xla::PjRtClient,
+    }
+
+    impl Runtime {
+        /// Create the PJRT CPU client.
+        pub fn cpu() -> Result<Self> {
+            let client =
+                xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(Runtime { client })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load and compile `artifacts/hlo/<name>.hlo.txt`.
+        pub fn load_model(
+            &self,
+            artifacts: &Path,
+            name: &str,
+            input_shape: [usize; 3],
+            output_len: usize,
+        ) -> Result<GoldenModel> {
+            let path = artifacts.join("hlo").join(format!("{name}.hlo.txt"));
+            ensure!(path.exists(), "missing HLO artifact {}", path.display());
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            Ok(GoldenModel { exe, input_shape, output_len })
+        }
+    }
+
+    impl GoldenModel {
+        /// Run one inference: int8-range CHW input -> logits.
+        pub fn run(&self, input: &[i32]) -> Result<Vec<i32>> {
+            let [c, h, w] = self.input_shape;
+            ensure!(
+                input.len() == c * h * w,
+                "input len {} != {c}x{h}x{w}",
+                input.len()
+            );
+            let lit = xla::Literal::vec1(input)
+                .reshape(&[c as i64, h as i64, w as i64])
+                .context("reshaping input literal")?;
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&[lit])
+                .context("executing golden model")?[0][0]
+                .to_literal_sync()
+                .context("fetching result")?;
+            // lowered with return_tuple=True -> 1-tuple of logits
+            let out = result.to_tuple1().context("unwrapping result tuple")?;
+            let logits = out.to_vec::<i32>().context("reading logits")?;
+            ensure!(
+                logits.len() == self.output_len,
+                "golden output len {} != expected {}",
+                logits.len(),
+                self.output_len
+            );
+            Ok(logits)
+        }
     }
 }
 
-impl GoldenModel {
-    /// Run one inference: int8-range CHW input -> logits.
-    pub fn run(&self, input: &[i32]) -> Result<Vec<i32>> {
-        let [c, h, w] = self.input_shape;
-        ensure!(
-            input.len() == c * h * w,
-            "input len {} != {c}x{h}x{w}",
-            input.len()
-        );
-        let lit = xla::Literal::vec1(input)
-            .reshape(&[c as i64, h as i64, w as i64])
-            .context("reshaping input literal")?;
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&[lit])
-            .context("executing golden model")?[0][0]
-            .to_literal_sync()
-            .context("fetching result")?;
-        // lowered with return_tuple=True -> 1-tuple of logits
-        let out = result.to_tuple1().context("unwrapping result tuple")?;
-        let logits = out.to_vec::<i32>().context("reading logits")?;
-        ensure!(
-            logits.len() == self.output_len,
-            "golden output len {} != expected {}",
-            logits.len(),
-            self.output_len
-        );
-        Ok(logits)
+#[cfg(not(feature = "pjrt"))]
+mod pjrt_impl {
+    use super::*;
+    use anyhow::bail;
+
+    const UNAVAILABLE: &str = "PJRT runtime unavailable: built without the \
+         `pjrt` cargo feature (requires the `xla` crate)";
+
+    /// Stub standing in for the PJRT-compiled HLO executable.
+    pub struct GoldenModel {
+        _private: (),
+    }
+
+    /// Stub standing in for the PJRT CPU client.
+    pub struct Runtime {
+        _private: (),
+    }
+
+    impl Runtime {
+        pub fn cpu() -> Result<Self> {
+            bail!("{UNAVAILABLE}")
+        }
+
+        pub fn platform(&self) -> String {
+            "unavailable".to_string()
+        }
+
+        pub fn load_model(
+            &self,
+            _artifacts: &Path,
+            _name: &str,
+            _input_shape: [usize; 3],
+            _output_len: usize,
+        ) -> Result<GoldenModel> {
+            bail!("{UNAVAILABLE}")
+        }
+    }
+
+    impl GoldenModel {
+        pub fn run(&self, _input: &[i32]) -> Result<Vec<i32>> {
+            bail!("{UNAVAILABLE}")
+        }
     }
 }
+
+pub use pjrt_impl::{GoldenModel, Runtime};
 
 /// Golden I/O bundle exported by the AOT step (`data/<name>_{x,y}.bin`).
 pub struct GoldenIo {

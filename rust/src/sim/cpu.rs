@@ -1,15 +1,21 @@
-//! The execution core: predecoded-program interpreter with cycle accounting.
+//! The execution core: a lightweight [`Machine`] interpreting a shared,
+//! immutable [`Program`] with cycle accounting.
 //!
-//! The program is decoded once at load (`Sim::load`) into a dense
-//! `Vec<Instr>`; the run loop is a single `match` over that enum — this is
-//! the §Perf hot path (target ≥100 M instr/s, see `benches/bench_iss.rs`).
-//! Variant gating (illegal custom instructions on smaller cores) is checked
-//! at load time so the hot loop pays nothing for it.
+//! The program is decoded once into a dense `Vec<Instr>` inside
+//! [`Program`] and shared via `Arc`; the run loop is a single `match` over
+//! that enum — this is the §Perf hot path (target ≥100 M instr/s, see
+//! `benches/bench_iss.rs`).  Variant gating (illegal custom instructions on
+//! smaller cores) is checked when the `Program` is built so the hot loop
+//! pays nothing for it, and [`Machine`] carries only mutable architectural
+//! state: registers, pc, the ZOL registers and the data memory.
+
+use std::sync::Arc;
 
 use super::hooks::RetireHook;
 use super::memory::{MemFault, Memory};
+use super::program::Program;
 use super::{CycleModel, Variant};
-use crate::isa::decode::{decode, DecodeError};
+use crate::isa::decode::DecodeError;
 use crate::isa::{AluImmOp, AluOp, BranchOp, Instr, LoadOp, StoreOp,
                  MAC_RD, MAC_RS1, MAC_RS2};
 
@@ -65,11 +71,12 @@ pub struct RunStats {
     pub cycles: u64,
 }
 
-/// The machine: predecoded program + architectural state + data memory.
-pub struct Sim {
-    pub variant: Variant,
+/// Mutable machine state executing a shared [`Program`]: registers, pc,
+/// ZOL registers and data memory.  Cheap to construct per run — the
+/// instruction stream is never copied.
+pub struct Machine {
     pub cycle_model: CycleModel,
-    program: Vec<Instr>,
+    program: Arc<Program>,
     pub regs: [i32; 32],
     pub pc: u32,
     // zero-overhead loop registers (v4)
@@ -79,70 +86,60 @@ pub struct Sim {
     pub mem: Memory,
 }
 
-impl Sim {
+/// Historical name for [`Machine`] (pre program/state split).
+pub type Sim = Machine;
+
+impl Machine {
+    /// Attach fresh architectural state to an already-validated program.
+    pub fn new(program: Arc<Program>, dm_size: usize) -> Machine {
+        Machine {
+            cycle_model: CycleModel::default(),
+            program,
+            regs: [0; 32],
+            pc: 0,
+            zc: 0,
+            zs: 0,
+            ze: 0,
+            mem: Memory::new(dm_size),
+        }
+    }
+
     /// Build a simulator for `variant` from raw program words.
     ///
-    /// Decodes and validates every word up front; custom instructions not
-    /// supported by the variant are a load-time error (the hardware would
-    /// trap on first execution — failing early is strictly more useful for
-    /// a compiler-driven flow and keeps the hot loop check-free).
+    /// Decodes and validates every word up front via [`Program::decode`];
+    /// custom instructions not supported by the variant are a load-time
+    /// error (the hardware would trap on first execution — failing early is
+    /// strictly more useful for a compiler-driven flow and keeps the hot
+    /// loop check-free).
     pub fn load(
         variant: Variant,
         words: &[u32],
         dm_size: usize,
     ) -> Result<Self, SimError> {
-        let mut program = Vec::with_capacity(words.len());
-        for (index, &w) in words.iter().enumerate() {
-            let instr = decode(w).map_err(|err| SimError::Decode { index, err })?;
-            if !variant.supports(&instr) {
-                return Err(SimError::Unsupported {
-                    index,
-                    instr,
-                    variant: variant.name,
-                });
-            }
-            program.push(instr);
-        }
-        Ok(Sim {
-            variant,
-            cycle_model: CycleModel::default(),
-            program,
-            regs: [0; 32],
-            pc: 0,
-            zc: 0,
-            zs: 0,
-            ze: 0,
-            mem: Memory::new(dm_size),
-        })
+        Ok(Machine::new(Arc::new(Program::decode(variant, words)?), dm_size))
     }
 
     /// Build from already-decoded instructions (used by the compiler's
-    /// in-process pipeline; skips re-encoding).
+    /// in-process pipeline and tests).
     pub fn from_instrs(
         variant: Variant,
-        program: Vec<Instr>,
+        instrs: Vec<Instr>,
         dm_size: usize,
     ) -> Result<Self, SimError> {
-        for (index, instr) in program.iter().enumerate() {
-            if !variant.supports(instr) {
-                return Err(SimError::Unsupported {
-                    index,
-                    instr: *instr,
-                    variant: variant.name,
-                });
-            }
-        }
-        Ok(Sim {
-            variant,
-            cycle_model: CycleModel::default(),
-            program,
-            regs: [0; 32],
-            pc: 0,
-            zc: 0,
-            zs: 0,
-            ze: 0,
-            mem: Memory::new(dm_size),
-        })
+        Ok(Machine::new(
+            Arc::new(Program::from_instrs(variant, instrs)?),
+            dm_size,
+        ))
+    }
+
+    /// The shared program this machine executes.
+    pub fn program(&self) -> &Arc<Program> {
+        &self.program
+    }
+
+    /// The variant the program was validated against.
+    pub fn variant(&self) -> Variant {
+        self.program.variant()
     }
 
     /// Reset architectural state (keeps program + memory contents).
@@ -159,7 +156,7 @@ impl Sim {
     }
 
     pub fn instr_at(&self, idx: usize) -> Option<&Instr> {
-        self.program.get(idx)
+        self.program.instrs().get(idx)
     }
 
     #[inline(always)]
@@ -179,7 +176,11 @@ impl Sim {
         let cm = self.cycle_model;
         let mut instrs: u64 = 0;
         let mut cycles: u64 = 0;
-        let plen = (self.program.len() as u32) * 4;
+        // One Arc clone per run keeps the borrow checker away from the
+        // per-field mutations below; the instruction slice itself is shared.
+        let program = Arc::clone(&self.program);
+        let prog: &[Instr] = program.instrs();
+        let plen = (prog.len() as u32) * 4;
 
         loop {
             if instrs >= max_instrs {
@@ -189,7 +190,7 @@ impl Sim {
             if pc >= plen || pc % 4 != 0 {
                 return Err(SimError::PcOutOfRange { pc });
             }
-            let instr = self.program[(pc / 4) as usize];
+            let instr = prog[(pc / 4) as usize];
             let mut next_pc = pc.wrapping_add(4);
             let cost: u64;
 

@@ -1,0 +1,212 @@
+//! Parallel batch execution: N inputs × M variants across worker threads.
+//!
+//! The paper's evaluation (Fig 10–12, Tables 8/10) simulates every model on
+//! five core variants over multiple golden inputs.  With the program/state
+//! split ([`Program`]/[`super::Machine`]) each of those runs is an
+//! independent pure function of its [`Job`], so the engine fans a batch out
+//! over `std::thread` workers and reassembles results in submission order —
+//! results are deterministic and byte-identical for any worker count
+//! (DESIGN.md §3, "threading and determinism contract").
+//!
+//! The layer is deliberately compiler-agnostic: a [`Job`] describes memory
+//! setup as raw `(addr, bytes)` blocks, so the sim crate stays free of
+//! model-spec knowledge.  `compiler::make_job` builds jobs from a
+//! `Compiled`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::cpu::{Machine, RunStats, SimError};
+use super::program::Program;
+
+/// One simulation run: a shared program plus its memory setup.
+pub struct Job<'a> {
+    /// The shared, decode-once program (cheap `Arc` handle).
+    pub program: Arc<Program>,
+    /// Data-memory size in bytes.
+    pub dm_size: usize,
+    /// Blocks written into DM before the run (weights images, constants).
+    /// Borrowed — the batch only needs them alive for the call.
+    pub preload: Vec<(u32, &'a [u8])>,
+    /// Per-run input block, written after `preload`.  Borrowed like
+    /// `preload`, so one packed input can feed many variants' jobs.
+    pub input: (u32, &'a [u8]),
+    /// `(addr, n)`: read back `n` int8 values (widened to i32) after a
+    /// successful run.
+    pub output: (u32, usize),
+    /// Watchdog budget.
+    pub max_instrs: u64,
+}
+
+/// What one completed job produces.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct JobOutput {
+    /// int8 outputs widened to i32 (the model logits).
+    pub output: Vec<i32>,
+    pub stats: RunStats,
+}
+
+/// Execute one job on the current thread.
+pub fn run_job(job: &Job<'_>) -> Result<JobOutput, SimError> {
+    let mut m = Machine::new(Arc::clone(&job.program), job.dm_size);
+    for &(addr, block) in &job.preload {
+        m.mem
+            .write_block(addr, block)
+            .map_err(|fault| SimError::Mem { pc: 0, fault })?;
+    }
+    m.mem
+        .write_block(job.input.0, job.input.1)
+        .map_err(|fault| SimError::Mem { pc: 0, fault })?;
+    let stats = m.run_fast(job.max_instrs)?;
+    let output = m
+        .mem
+        .read_i8s(job.output.0, job.output.1)
+        .map_err(|fault| SimError::Mem { pc: m.pc, fault })?;
+    Ok(JobOutput { output, stats })
+}
+
+/// One worker thread per core by default.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map_or(1, |n| n.get())
+}
+
+/// Run a batch of jobs on up to `threads` worker threads (`0` = one per
+/// core).  `results[i]` always corresponds to `jobs[i]`: each job is a pure
+/// function of its inputs, so the output is byte-identical for any worker
+/// count — only wall-clock changes.
+pub fn run_batch(
+    jobs: &[Job<'_>],
+    threads: usize,
+) -> Vec<Result<JobOutput, SimError>> {
+    let n = jobs.len();
+    let threads = if threads == 0 { default_threads() } else { threads };
+    let threads = threads.min(n).max(1);
+    if threads == 1 {
+        return jobs.iter().map(run_job).collect();
+    }
+
+    // Work-stealing by atomic cursor: long jobs (big models) don't leave
+    // workers idle the way a static chunking would.
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<Result<JobOutput, SimError>>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = run_job(&jobs[i]);
+                *slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker filled every slot"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{AluImmOp, Instr};
+    use crate::sim::{V0, V4};
+
+    /// load x1 <- dm[0]; x1 += k; store dm[4] <- x1; ecall
+    fn add_k_program(k: i32) -> Arc<Program> {
+        use crate::isa::{LoadOp, StoreOp};
+        Arc::new(
+            Program::from_instrs(
+                V0,
+                vec![
+                    Instr::Load { op: LoadOp::Lb, rd: 1, rs1: 0, offset: 0 },
+                    Instr::OpImm { op: AluImmOp::Addi, rd: 1, rs1: 1, imm: k },
+                    Instr::Store { op: StoreOp::Sb, rs2: 1, rs1: 0, offset: 4 },
+                    Instr::Ecall,
+                ],
+            )
+            .unwrap(),
+        )
+    }
+
+    fn jobs_for<'a>(p: &Arc<Program>, inputs: &'a [[u8; 1]]) -> Vec<Job<'a>> {
+        inputs
+            .iter()
+            .map(|x| Job {
+                program: Arc::clone(p),
+                dm_size: 64,
+                preload: Vec::new(),
+                input: (0, &x[..]),
+                output: (4, 1),
+                max_instrs: 100,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn batch_results_in_submission_order() {
+        let p = add_k_program(10);
+        let inputs: Vec<[u8; 1]> = (0..20u8).map(|x| [x]).collect();
+        let jobs = jobs_for(&p, &inputs);
+        for threads in [1, 2, 8] {
+            let rs = run_batch(&jobs, threads);
+            assert_eq!(rs.len(), inputs.len());
+            for (i, r) in rs.iter().enumerate() {
+                let out = r.as_ref().unwrap();
+                assert_eq!(out.output, vec![i as i32 + 10], "threads={threads}");
+                assert_eq!(out.stats.instrs, 4);
+            }
+        }
+    }
+
+    #[test]
+    fn errors_stay_at_their_index() {
+        let p = add_k_program(1);
+        let inputs: Vec<[u8; 1]> = vec![[1], [2], [3]];
+        let mut jobs = jobs_for(&p, &inputs);
+        // job 1 writes its input out of bounds -> Mem fault before the run
+        jobs[1].input.0 = 1 << 20;
+        let rs = run_batch(&jobs, 4);
+        assert!(rs[0].is_ok());
+        assert!(matches!(rs[1], Err(SimError::Mem { .. })));
+        assert!(rs[2].is_ok());
+    }
+
+    #[test]
+    fn zol_program_shared_across_threads() {
+        // dlpi 5 over addi body — exercises the v4 path under threading
+        let p = Arc::new(
+            Program::from_instrs(
+                V4,
+                vec![
+                    Instr::Dlpi { count: 5, body_len: 1 },
+                    Instr::OpImm { op: AluImmOp::Addi, rd: 1, rs1: 1, imm: 2 },
+                    Instr::Store {
+                        op: crate::isa::StoreOp::Sb,
+                        rs2: 1,
+                        rs1: 0,
+                        offset: 4,
+                    },
+                    Instr::Ecall,
+                ],
+            )
+            .unwrap(),
+        );
+        let zero = [0u8];
+        let jobs: Vec<Job<'_>> = (0..8)
+            .map(|_| Job {
+                program: Arc::clone(&p),
+                dm_size: 64,
+                preload: Vec::new(),
+                input: (0, &zero[..]),
+                output: (4, 1),
+                max_instrs: 100,
+            })
+            .collect();
+        for r in run_batch(&jobs, 3) {
+            assert_eq!(r.unwrap().output, vec![10]);
+        }
+    }
+}

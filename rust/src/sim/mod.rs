@@ -8,13 +8,22 @@
 //! model is therefore the faithful measurement instrument for every cycle
 //! number in the evaluation (DESIGN.md §2).
 
+//! The module is split along the program/state seam (DESIGN.md §3):
+//! [`Program`] is the immutable decode-once image shared via `Arc`,
+//! [`Machine`] the mutable per-run state, and [`engine`] the batch layer
+//! that runs N inputs × M variants across worker threads.
+
 pub mod cpu;
+pub mod engine;
 pub mod hooks;
 pub mod memory;
+pub mod program;
 
-pub use cpu::{RunStats, Sim, SimError};
+pub use cpu::{Machine, RunStats, Sim, SimError};
+pub use engine::{run_batch, run_job, Job, JobOutput};
 pub use hooks::{NopHook, RetireHook, TraceHook};
 pub use memory::Memory;
+pub use program::Program;
 
 /// A processor variant = which ISA extensions are enabled (paper Table 1).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

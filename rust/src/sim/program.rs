@@ -1,0 +1,145 @@
+//! The immutable, decode-once program image.
+//!
+//! [`Program`] is the shared half of the program/state split (DESIGN.md §3):
+//! instructions are decoded and variant-gated exactly once, then the whole
+//! image — predecoded [`Instr`]s plus the encoded PM words — is handed out
+//! behind an `Arc` so any number of [`super::Machine`]s (across threads, see
+//! [`super::engine`]) execute it without ever cloning the instruction
+//! stream.  Mutable architectural state (registers, pc, ZOL registers, data
+//! memory) lives exclusively in [`super::Machine`].
+
+use std::sync::Arc;
+
+use super::cpu::SimError;
+use super::Variant;
+use crate::isa::decode::decode;
+use crate::isa::encode::encode;
+use crate::isa::Instr;
+
+/// A validated, predecoded program for one processor variant.
+///
+/// Invariant: every instruction is supported by `variant`, and `words`
+/// is the exact encoding of `instrs` (the PM image the hardware would
+/// load).  Both are checked/derived at construction, so the execution
+/// hot loop never re-validates.
+pub struct Program {
+    variant: Variant,
+    instrs: Vec<Instr>,
+    words: Vec<u32>,
+}
+
+impl Program {
+    /// Decode raw PM words and gate them against `variant`.
+    ///
+    /// Unsupported custom instructions are a load-time error: the hardware
+    /// would trap on first execution, and failing early is strictly more
+    /// useful for a compiler-driven flow.
+    pub fn decode(variant: Variant, words: &[u32]) -> Result<Program, SimError> {
+        let mut instrs = Vec::with_capacity(words.len());
+        for (index, &w) in words.iter().enumerate() {
+            let instr = decode(w).map_err(|err| SimError::Decode { index, err })?;
+            if !variant.supports(&instr) {
+                return Err(SimError::Unsupported {
+                    index,
+                    instr,
+                    variant: variant.name,
+                });
+            }
+            instrs.push(instr);
+        }
+        Ok(Program { variant, instrs, words: words.to_vec() })
+    }
+
+    /// Build from already-decoded instructions (the compiler's in-process
+    /// pipeline); gates against `variant` and derives the PM image.
+    pub fn from_instrs(
+        variant: Variant,
+        instrs: Vec<Instr>,
+    ) -> Result<Program, SimError> {
+        for (index, instr) in instrs.iter().enumerate() {
+            if !variant.supports(instr) {
+                return Err(SimError::Unsupported {
+                    index,
+                    instr: *instr,
+                    variant: variant.name,
+                });
+            }
+        }
+        let words = instrs.iter().map(encode).collect();
+        Ok(Program { variant, instrs, words })
+    }
+
+    /// Convenience: decode + wrap in the `Arc` the machines share.
+    pub fn decode_shared(
+        variant: Variant,
+        words: &[u32],
+    ) -> Result<Arc<Program>, SimError> {
+        Ok(Arc::new(Program::decode(variant, words)?))
+    }
+
+    /// The variant this program was validated against.
+    pub fn variant(&self) -> Variant {
+        self.variant
+    }
+
+    /// Predecoded instruction stream.
+    pub fn instrs(&self) -> &[Instr] {
+        &self.instrs
+    }
+
+    /// Encoded PM image (what the FPGA bitstream's BRAM would hold).
+    pub fn words(&self) -> &[u32] {
+        &self.words
+    }
+
+    pub fn len(&self) -> usize {
+        self.instrs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instrs.is_empty()
+    }
+
+    /// Program-memory footprint in bytes (Table 10 PM column).
+    pub fn pm_bytes(&self) -> u32 {
+        (self.words.len() * 4) as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::AluImmOp;
+    use crate::sim::{V0, V4};
+
+    #[test]
+    fn from_instrs_encodes_words() {
+        let instrs = vec![
+            Instr::OpImm { op: AluImmOp::Addi, rd: 1, rs1: 0, imm: 7 },
+            Instr::Ecall,
+        ];
+        let p = Program::from_instrs(V0, instrs.clone()).unwrap();
+        assert_eq!(p.len(), 2);
+        assert_eq!(p.pm_bytes(), 8);
+        assert_eq!(p.instrs(), &instrs[..]);
+        // words round-trip back to the same program
+        let q = Program::decode(V0, p.words()).unwrap();
+        assert_eq!(q.instrs(), p.instrs());
+    }
+
+    #[test]
+    fn variant_gating_at_build() {
+        let err = Program::from_instrs(V0, vec![Instr::Mac]);
+        assert!(matches!(err, Err(SimError::Unsupported { .. })));
+        assert!(Program::from_instrs(V4, vec![Instr::Mac]).is_ok());
+    }
+
+    #[test]
+    fn shared_across_clones_is_same_allocation() {
+        let p =
+            Program::decode_shared(V0, &[crate::isa::encode::encode(&Instr::Ecall)])
+                .unwrap();
+        let q = Arc::clone(&p);
+        assert!(std::ptr::eq(p.instrs().as_ptr(), q.instrs().as_ptr()));
+    }
+}

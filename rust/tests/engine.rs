@@ -1,0 +1,100 @@
+//! Batch-engine contract tests (DESIGN.md §3):
+//!
+//! 1. **Equivalence** — a batch-engine job produces the same logits and the
+//!    same `RunStats` as the single-threaded `Machine::run` path, for every
+//!    variant on `lenet_shaped` and `residual_net`.
+//! 2. **Determinism** — a variants × inputs batch is byte-identical across
+//!    1, 2 and 8 worker threads (result order is submission order).
+//! 3. **Sharing** — jobs hold the compiler's `Program` by `Arc`, never a
+//!    copy.
+
+use std::sync::Arc;
+
+use marvel::compiler::{compile, execute_compiled, make_job, pack_input,
+                       CompileCache};
+use marvel::models::synth::{lenet_shaped, residual_net, Builder};
+use marvel::sim::engine::{run_batch, Job};
+use marvel::sim::{NopHook, VARIANTS};
+use marvel::util::rng::Rng;
+
+#[test]
+fn batch_engine_matches_single_threaded_sim() {
+    for (spec, seed) in [(lenet_shaped(21), 31u64), (residual_net(9), 32u64)] {
+        let mut rng = Rng::new(seed);
+        let input = Builder::random_input(&spec, &mut rng);
+        let packed = pack_input(&input).unwrap();
+        for v in VARIANTS {
+            let c = compile(&spec, v).unwrap();
+            let (want_out, want_stats) =
+                execute_compiled(&c, &spec, &input, 1 << 33, &mut NopHook)
+                    .unwrap();
+            let jobs = vec![make_job(&c, &spec, &packed, 1 << 33)];
+            let got = run_batch(&jobs, 0).remove(0).unwrap();
+            assert_eq!(got.output, want_out, "{} on {}", spec.name, v.name);
+            assert_eq!(got.stats, want_stats, "{} on {}", spec.name, v.name);
+        }
+    }
+}
+
+#[test]
+fn batch_results_identical_across_worker_counts() {
+    let spec = lenet_shaped(33);
+    let mut rng = Rng::new(77);
+    let inputs: Vec<Vec<i32>> =
+        (0..3).map(|_| Builder::random_input(&spec, &mut rng)).collect();
+
+    let packed: Vec<Vec<u8>> =
+        inputs.iter().map(|x| pack_input(x).unwrap()).collect();
+
+    let cache = CompileCache::new();
+    let compiled: Vec<_> = VARIANTS
+        .iter()
+        .map(|&v| cache.get_or_compile(&spec, v).unwrap())
+        .collect();
+    let mut jobs: Vec<Job<'_>> = Vec::new();
+    for c in &compiled {
+        for x in &packed {
+            jobs.push(make_job(c, &spec, x, 1 << 33));
+        }
+    }
+
+    let baseline: Vec<_> =
+        run_batch(&jobs, 1).into_iter().map(|r| r.unwrap()).collect();
+    assert_eq!(baseline.len(), VARIANTS.len() * inputs.len());
+    for threads in [2, 8] {
+        let got: Vec<_> = run_batch(&jobs, threads)
+            .into_iter()
+            .map(|r| r.unwrap())
+            .collect();
+        assert_eq!(got, baseline, "threads={threads} must be byte-identical");
+    }
+
+    // all variants agree on the logits for each input (batch order is
+    // unit-major: run j belongs to variant j / n, input j % n)
+    let n = inputs.len();
+    for i in 0..n {
+        for u in 1..VARIANTS.len() {
+            assert_eq!(
+                baseline[u * n + i].output,
+                baseline[i].output,
+                "variant {} input {i}",
+                VARIANTS[u].name
+            );
+        }
+    }
+}
+
+#[test]
+fn jobs_share_the_compiled_program() {
+    let spec = lenet_shaped(5);
+    let mut rng = Rng::new(9);
+    let input = Builder::random_input(&spec, &mut rng);
+    let c = compile(&spec, marvel::sim::V4).unwrap();
+    let packed = pack_input(&input).unwrap();
+    let a = make_job(&c, &spec, &packed, 1 << 33);
+    let b = make_job(&c, &spec, &packed, 1 << 33);
+    assert!(Arc::ptr_eq(&a.program, &c.program));
+    assert!(Arc::ptr_eq(&a.program, &b.program));
+    // the packed input is borrowed, not duplicated per job
+    assert!(std::ptr::eq(a.input.1, b.input.1));
+}

@@ -102,7 +102,7 @@ fn profile_propose_rebuild_loop() {
     let input = Builder::random_input(&spec, &mut rng);
 
     let c0 = compile(&spec, V0).unwrap();
-    let mut hook = ProfileHook::new(c0.words.len());
+    let mut hook = ProfileHook::new(c0.words().len());
     let (_, s0) =
         execute_compiled(&c0, &spec, &input, 1 << 32, &mut hook).unwrap();
 
@@ -174,7 +174,7 @@ fn profiler_cycles_match_runstats() {
     let mut rng = Rng::new(4);
     let input = Builder::random_input(&spec, &mut rng);
     let c = compile(&spec, V0).unwrap();
-    let mut hook = ProfileHook::new(c.words.len());
+    let mut hook = ProfileHook::new(c.words().len());
     let (_, stats) =
         execute_compiled(&c, &spec, &input, 1 << 32, &mut hook).unwrap();
     assert_eq!(hook.counts.total, stats.instrs);

@@ -102,7 +102,7 @@ fn prop_machine_code_words_reload_identically() {
         let variant = *rng.choice(&VARIANTS);
         let c = compile(&spec, variant).map_err(|e| format!("{e}"))?;
         for (i, (instr, &word)) in
-            c.instrs.iter().zip(c.words.iter()).enumerate()
+            c.instrs().iter().zip(c.words().iter()).enumerate()
         {
             let back = decode(word).map_err(|e| format!("word {i}: {e}"))?;
             if back != *instr {
@@ -115,7 +115,7 @@ fn prop_machine_code_words_reload_identically() {
         // and a Sim::load of the words must run to the same output
         let input = Builder::random_input(&spec, rng);
         let want = refexec::run(&spec, &input).map_err(|e| format!("{e}"))?;
-        let mut sim = Sim::load(variant, &c.words, c.plan.dm_size as usize)
+        let mut sim = Sim::load(variant, c.words(), c.plan.dm_size as usize)
             .map_err(|e| format!("{e}"))?;
         sim.mem
             .write_block(c.plan.weights_base, &c.plan.weights_image)
@@ -141,7 +141,7 @@ fn prop_v0_code_never_contains_custom_instrs() {
     check("v0 binaries are pure RV32IM", 25, |rng| {
         let spec = random_net(rng);
         let c = compile(&spec, V0).map_err(|e| format!("{e}"))?;
-        for (i, instr) in c.instrs.iter().enumerate() {
+        for (i, instr) in c.instrs().iter().enumerate() {
             if instr.is_custom() {
                 return Err(format!("custom instr at {i}: {instr}"));
             }

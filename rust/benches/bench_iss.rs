@@ -1,6 +1,11 @@
 //! §Perf L3 bench: raw simulator throughput (instructions/second) on the
 //! real LeNet-5* workload, v0 and v4, with and without the profiling hook.
 //! Target (DESIGN.md §10): ≥100 M instr/s in the NopHook configuration.
+//!
+//! The lowered micro-op loop (DESIGN.md §11) is timed against the
+//! reference decode-enum interpreter it replaced, and the speedup is
+//! printed directly; the two paths' `RunStats` are asserted identical
+//! first, so the number is a like-for-like comparison.
 
 #[path = "common.rs"]
 mod common;
@@ -10,6 +15,12 @@ use marvel::models::synth::{lenet_shaped, Builder};
 use marvel::profiler::ProfileHook;
 use marvel::sim::{NopHook, V0, V4};
 use marvel::util::rng::Rng;
+
+fn median(secs: &[f64]) -> f64 {
+    let mut v = secs.to_vec();
+    v.sort_by(f64::total_cmp);
+    v[v.len() / 2]
+}
 
 fn main() {
     let (spec, input) = match common::artifacts() {
@@ -32,15 +43,38 @@ fn main() {
             execute_compiled(&c, &spec, &input, 1 << 36, &mut NopHook).unwrap();
         // steady-state: reuse one sim, re-inject input, reset cpu
         let mut sim = make_sim(&c).unwrap();
-        let secs = common::time_runs(2, 10, || {
+
+        // sanity: lowered and reference agree before we compare speeds
+        sim.reset_cpu();
+        load_input(&mut sim, &c, &input).unwrap();
+        let ref_stats = sim.run_reference(1 << 36, &mut NopHook).unwrap();
+        assert_eq!(ref_stats, stats, "lowered/reference RunStats diverged");
+
+        let lowered_secs = common::time_runs(2, 10, || {
             sim.reset_cpu();
             load_input(&mut sim, &c, &input).unwrap();
             sim.run_fast(1 << 36).unwrap();
         });
         common::report(
             &format!("iss/{}/nop-hook ({} instrs)", variant.name, stats.instrs),
-            secs,
+            lowered_secs.clone(),
             Some((stats.instrs as f64, "instr")),
+        );
+
+        let reference_secs = common::time_runs(2, 10, || {
+            sim.reset_cpu();
+            load_input(&mut sim, &c, &input).unwrap();
+            sim.run_reference(1 << 36, &mut NopHook).unwrap();
+        });
+        common::report(
+            &format!("iss/{}/reference-interp", variant.name),
+            reference_secs.clone(),
+            Some((stats.instrs as f64, "instr")),
+        );
+        println!(
+            "iss/{}: lowered-vs-reference speedup {:.2}x",
+            variant.name,
+            median(&reference_secs) / median(&lowered_secs)
         );
 
         let secs = common::time_runs(1, 5, || {

@@ -5,7 +5,12 @@
 use std::time::Instant;
 
 /// Time `f` `iters` times (after `warmup` runs); returns per-run seconds.
+/// `BENCH_SMOKE=1` (CI) caps warmup at 1 and iters at 2 so the benches
+/// double as smoke tests.
 pub fn time_runs<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Vec<f64> {
+    let smoke = std::env::var_os("BENCH_SMOKE").is_some();
+    let warmup = if smoke { warmup.min(1) } else { warmup };
+    let iters = if smoke { iters.clamp(1, 2) } else { iters };
     for _ in 0..warmup {
         f();
     }
@@ -19,6 +24,10 @@ pub fn time_runs<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Vec<f64> 
 }
 
 /// Render a stats line: `name: median 12.3 ms (min 11.9, mean 12.5) [x units/s]`.
+///
+/// With `BENCH_JSON=<path>` set, also appends one JSON object per line to
+/// `<path>` (`{"name", "median_s", "min_s", "mean_s", "units_per_s"?}`) —
+/// CI uploads the file as the per-PR perf-trajectory artifact.
 pub fn report(name: &str, mut secs: Vec<f64>, work: Option<(f64, &str)>) {
     secs.sort_by(f64::total_cmp);
     let min = secs[0];
@@ -34,6 +43,26 @@ pub fn report(name: &str, mut secs: Vec<f64>, work: Option<(f64, &str)>) {
         line.push_str(&format!("  [{:.1} M{label}/s]", units / median / 1e6));
     }
     println!("{line}");
+
+    if let Some(path) = std::env::var_os("BENCH_JSON") {
+        use std::io::Write;
+        let mut json = format!(
+            "{{\"name\":\"{}\",\"median_s\":{median:.9},\"min_s\":{min:.9},\
+             \"mean_s\":{mean:.9}",
+            name.replace('\\', "\\\\").replace('"', "\\\"")
+        );
+        if let Some((units, _)) = work {
+            json.push_str(&format!(",\"units_per_s\":{:.1}", units / median));
+        }
+        json.push_str("}\n");
+        match std::fs::OpenOptions::new().create(true).append(true).open(&path)
+        {
+            Ok(mut f) => {
+                let _ = f.write_all(json.as_bytes());
+            }
+            Err(e) => eprintln!("BENCH_JSON: cannot open {path:?}: {e}"),
+        }
+    }
 }
 
 fn fmt_t(s: f64) -> String {

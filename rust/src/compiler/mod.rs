@@ -16,7 +16,7 @@ pub mod spec;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
-use anyhow::{Context, Result};
+use anyhow::{ensure, Context, Result};
 
 use crate::isa::Instr;
 use crate::sim::engine::Job;
@@ -34,6 +34,12 @@ pub struct Compiled {
     /// The validated, decode-once program (instructions + PM image).
     pub program: Arc<Program>,
     pub plan: plan::Plan,
+    /// Prebuilt base DM image: `plan.dm_size` bytes, zeroed, with the
+    /// weights image already written at `plan.weights_base`.  Built once
+    /// per compilation so every run initializes memory with a single
+    /// `copy_from_slice` ([`crate::sim::engine::Job::base_image`]) instead
+    /// of zero-fill + block writes.
+    pub base_dm: Vec<u8>,
     /// Per-layer [start, end) instruction index ranges.
     pub layer_ranges: Vec<(usize, usize)>,
     pub rewrite_stats: RewriteStats,
@@ -95,9 +101,15 @@ pub fn compile(spec: &ModelSpec, variant: Variant) -> Result<Compiled> {
         Program::from_instrs(variant, instrs)
             .map_err(|e| anyhow::anyhow!("compiled program rejected: {e}"))?,
     );
+    let mut base_dm = vec![0u8; plan.dm_size as usize];
+    let wb = plan.weights_base as usize;
+    let wend = wb + plan.weights_image.len();
+    ensure!(wend <= base_dm.len(), "weights image exceeds planned DM");
+    base_dm[wb..wend].copy_from_slice(&plan.weights_image);
     Ok(Compiled {
         program,
         plan,
+        base_dm,
         layer_ranges,
         rewrite_stats,
         flatten_stats,
@@ -231,12 +243,12 @@ impl SpecCompileCache<'_, '_> {
 }
 
 /// Instantiate a simulator with the compiled program + weights loaded.
-/// The program is shared, not cloned.
+/// The program is shared, not cloned; DM is one copy of the prebuilt
+/// base image.
 pub fn make_sim(c: &Compiled) -> Result<Machine, SimError> {
-    let mut sim =
-        Machine::new(Arc::clone(&c.program), c.plan.dm_size as usize);
+    let mut sim = Machine::new(Arc::clone(&c.program), 0);
     sim.mem
-        .write_block(c.plan.weights_base, &c.plan.weights_image)
+        .reset_from(&c.base_dm, c.plan.dm_size as usize)
         .map_err(|fault| SimError::Mem { pc: 0, fault })?;
     Ok(sim)
 }
@@ -257,8 +269,9 @@ pub fn pack_input(input: &[i32]) -> Result<Vec<u8>> {
 }
 
 /// Build a batch-engine [`Job`] for one inference on a compiled model.
-/// The weights image and the packed input (see [`pack_input`]) are
-/// borrowed, the program `Arc`-shared — a job costs no copies.
+/// The base DM image and the packed input (see [`pack_input`]) are
+/// borrowed, the program `Arc`-shared — a job costs no copies, and the
+/// engine initializes DM with a single `copy_from_slice` of `base_dm`.
 pub fn make_job<'a>(
     c: &'a Compiled,
     spec: &ModelSpec,
@@ -268,7 +281,8 @@ pub fn make_job<'a>(
     Job {
         program: Arc::clone(&c.program),
         dm_size: c.plan.dm_size as usize,
-        preload: vec![(c.plan.weights_base, &c.plan.weights_image)],
+        base_image: Some(&c.base_dm),
+        preload: Vec::new(),
         input: (c.plan.input_addr, input),
         output: (c.plan.output_addr, spec.output_elems()),
         max_instrs,

@@ -17,9 +17,10 @@ use std::path::Path;
 
 use anyhow::Result;
 
-use super::flow::{run_flow_cached, FlowOptions, FlowResult};
+use super::flow::{FlowOptions, FlowResult, PreparedFlow};
 use crate::compiler::CompileCache;
 use crate::models::PAPER_MODELS;
+use crate::sim::engine::{run_batch, Job};
 
 /// Models present in the artifacts dir, paper order.
 pub fn available_models(artifacts: &Path) -> Vec<String> {
@@ -41,16 +42,40 @@ pub fn run_all_flows(
     run_all_flows_cached(artifacts, opts, &CompileCache::new())
 }
 
-/// [`run_all_flows`] against a shared compile cache: each flow's batch
-/// already saturates the cores, and the cache lets follow-up generators
-/// (e.g. the ablation grid in `report all`) reuse every compilation.
+/// [`run_all_flows`] against a shared compile cache: every model's
+/// variants × inputs jobs are submitted as **one global batch**, and the
+/// cache lets follow-up generators (e.g. the ablation grid in `report
+/// all`) reuse every compilation.
 pub fn run_all_flows_cached(
     artifacts: &Path,
     opts: &FlowOptions,
     cache: &CompileCache,
 ) -> Result<Vec<FlowResult>> {
-    available_models(artifacts)
+    run_flows_cached(artifacts, &available_models(artifacts), opts, cache)
+}
+
+/// Run the flows for an explicit model list as one cross-model batch:
+/// the workers drain a single global job list, so a small model finishing
+/// early never leaves cores idle while a big one still runs (the tail
+/// problem of per-model batching).  Results are per-model, in `names`
+/// order, and byte-identical to running each flow alone.
+pub fn run_flows_cached(
+    artifacts: &Path,
+    names: &[String],
+    opts: &FlowOptions,
+    cache: &CompileCache,
+) -> Result<Vec<FlowResult>> {
+    let flows: Vec<PreparedFlow> = names
         .iter()
-        .map(|m| run_flow_cached(artifacts, m, opts, cache))
+        .map(|m| PreparedFlow::prepare(artifacts, m, opts, cache))
+        .collect::<Result<_>>()?;
+    let jobs: Vec<Job<'_>> = flows.iter().flat_map(PreparedFlow::jobs).collect();
+    let mut raw = run_batch(&jobs, opts.threads).into_iter();
+    flows
+        .iter()
+        .map(|f| {
+            let chunk: Vec<_> = raw.by_ref().take(f.n_jobs()).collect();
+            f.finish(chunk)
+        })
         .collect()
 }

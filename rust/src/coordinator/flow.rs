@@ -2,21 +2,31 @@
 //! → measure.  This is the rust twin of the paper's Fig 1 pipeline with the
 //! FPGA replaced by the cycle-accurate core model.
 //!
-//! All variant × input runs of a flow go through the batch engine
-//! ([`crate::sim::engine`]) as one job list, so a flow saturates every core
-//! while producing results identical to the sequential path (DESIGN.md §3).
+//! The flow is split into three phases so sweeps can batch *across*
+//! models (DESIGN.md §3):
+//!
+//! 1. [`PreparedFlow::prepare`] — load spec + golden I/O, compile every
+//!    requested variant (plus the hidden v0 baseline), pack the inputs;
+//! 2. [`PreparedFlow::jobs`] — the flow's variants × inputs job list,
+//!    borrowing the prepared buffers.  `run_flow` submits it alone;
+//!    `experiments::run_all_flows` concatenates every model's list into
+//!    one global batch so small models don't leave workers idle at the
+//!    tail;
+//! 3. [`PreparedFlow::finish`] — verify outputs against the golden (and
+//!    optionally PJRT) references and aggregate the per-variant metrics.
 
 use std::path::Path;
 use std::sync::Arc;
 
-use anyhow::{bail, ensure, Context, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 
+use crate::compiler::spec::ModelSpec;
 use crate::compiler::{self, CompileCache, Compiled};
 use crate::hw::{area_of, energy_mj, AreaReport, EnergyPoint};
 use crate::models;
 use crate::runtime;
-use crate::sim::engine::{run_batch, Job};
-use crate::sim::{Variant, V0, VARIANTS};
+use crate::sim::engine::{run_batch, Job, JobOutput};
+use crate::sim::{SimError, Variant, V0, VARIANTS};
 
 /// Flow configuration.
 #[derive(Clone, Debug)]
@@ -80,6 +90,223 @@ pub struct FlowResult {
     pub total_macs: u64,
 }
 
+/// A model flow with everything compiled/loaded and ready to simulate:
+/// the unit of cross-model batching.
+pub struct PreparedFlow {
+    name: String,
+    opts: FlowOptions,
+    spec: ModelSpec,
+    io: runtime::GoldenIo,
+    pjrt: Option<runtime::GoldenModel>,
+    /// Compiled units, requested variants first; the tail may hold the
+    /// hidden V0 baseline.
+    units: Vec<Arc<Compiled>>,
+    /// How many of `units` were requested (and are golden-verified).
+    reported: usize,
+    /// Packed int8 input images, one per golden input used.
+    packed: Vec<Vec<u8>>,
+    /// Inputs per unit.
+    n: usize,
+}
+
+impl PreparedFlow {
+    /// Load, compile and pack everything `name` needs — no simulation yet.
+    pub fn prepare(
+        artifacts: &Path,
+        name: &str,
+        opts: &FlowOptions,
+        cache: &CompileCache,
+    ) -> Result<PreparedFlow> {
+        ensure!(!opts.variants.is_empty(), "{name}: no variants requested");
+        let spec = models::load(artifacts, name)
+            .with_context(|| format!("loading model {name}"))?;
+        let io = runtime::load_golden_io(artifacts, name)
+            .with_context(|| format!("loading golden I/O for {name}"))?;
+        ensure!(!io.inputs.is_empty(), "{name}: no golden inputs");
+        let n = opts.n_inputs.min(io.inputs.len()).max(1);
+
+        // optional PJRT golden path (executes the AOT HLO artifact)
+        let pjrt = if opts.use_pjrt {
+            let rt = runtime::Runtime::cpu()?;
+            Some(rt.load_model(
+                artifacts,
+                name,
+                spec.input_shape,
+                spec.output_elems(),
+            )?)
+        } else {
+            None
+        };
+
+        // Compile every requested variant, plus a hidden V0 baseline when
+        // the request omits it: `speedup` is defined against the real v0
+        // core, not against whichever variant happens to be listed first.
+        let reported = opts.variants.len();
+        let scache = cache.for_spec(&spec);
+        let mut units: Vec<Arc<Compiled>> = opts
+            .variants
+            .iter()
+            .map(|&v| {
+                scache
+                    .get_or_compile(v)
+                    .with_context(|| format!("compiling {name} for {}", v.name))
+            })
+            .collect::<Result<_>>()?;
+        if !opts.variants.contains(&V0) {
+            units.push(
+                scache
+                    .get_or_compile(V0)
+                    .with_context(|| format!("compiling {name} baseline v0"))?,
+            );
+        }
+
+        // Inputs are packed once and borrowed by every variant's job.
+        let packed: Vec<Vec<u8>> = io
+            .inputs
+            .iter()
+            .take(n)
+            .map(|x| compiler::pack_input(x))
+            .collect::<Result<_>>()?;
+
+        Ok(PreparedFlow {
+            name: name.to_string(),
+            opts: opts.clone(),
+            spec,
+            io,
+            pjrt,
+            units,
+            reported,
+            packed,
+            n,
+        })
+    }
+
+    /// Number of simulation jobs this flow contributes.
+    pub fn n_jobs(&self) -> usize {
+        self.units.len() * self.n
+    }
+
+    /// The flow's job list, unit-major (`jobs[u * n + i]` = unit `u`,
+    /// input `i`).  Borrows the prepared buffers; concatenate several
+    /// flows' lists for a cross-model batch.
+    pub fn jobs(&self) -> Vec<Job<'_>> {
+        let mut jobs = Vec::with_capacity(self.n_jobs());
+        for c in &self.units {
+            for input in &self.packed {
+                jobs.push(compiler::make_job(
+                    c,
+                    &self.spec,
+                    input,
+                    self.opts.max_instrs,
+                ));
+            }
+        }
+        jobs
+    }
+
+    /// Verify + aggregate the engine results for this flow's jobs (in the
+    /// order [`Self::jobs`] produced them).
+    pub fn finish(
+        &self,
+        raw: Vec<Result<JobOutput, SimError>>,
+    ) -> Result<FlowResult> {
+        ensure!(
+            raw.len() == self.n_jobs(),
+            "{}: expected {} results, got {}",
+            self.name,
+            self.n_jobs(),
+            raw.len()
+        );
+        let n = self.n;
+        let mut outputs = Vec::with_capacity(raw.len());
+        for (j, r) in raw.into_iter().enumerate() {
+            let (u, i) = (j / n, j % n);
+            let out = r.map_err(|e| {
+                anyhow!(
+                    "{} on {} input {i}: simulation failed: {e}",
+                    self.name,
+                    self.units[u].variant().name
+                )
+            })?;
+            outputs.push(out);
+        }
+
+        // Per-unit aggregates; the baseline comes from the real V0 unit
+        // (reported or hidden).  Golden verification covers only the
+        // variants the caller requested — the hidden baseline exists purely
+        // to define `speedup` (its simulation errors still abort above,
+        // since a broken baseline means no speedup can be reported).
+        let mut verified_golden = true;
+        let mut avg = Vec::with_capacity(self.units.len());
+        for u in 0..self.units.len() {
+            let runs = &outputs[u * n..u * n + n];
+            let instrs =
+                runs.iter().map(|r| r.stats.instrs).sum::<u64>() / n as u64;
+            let cycles =
+                runs.iter().map(|r| r.stats.cycles).sum::<u64>() / n as u64;
+            if u < self.reported {
+                for (i, r) in runs.iter().enumerate() {
+                    if r.output != self.io.outputs[i] {
+                        verified_golden = false;
+                    }
+                }
+            }
+            avg.push((instrs, cycles));
+        }
+        let v0_cycles =
+            match self.units.iter().position(|c| c.variant() == V0) {
+                Some(u) => avg[u].1,
+                None => bail!("{}: V0 baseline missing from flow units", self.name),
+            };
+
+        // PJRT cross-check: one golden execution per input, compared
+        // against every reported variant's logits.
+        let mut verified_pjrt = self.opts.use_pjrt.then_some(true);
+        if let Some(g) = &self.pjrt {
+            for (i, input) in self.io.inputs.iter().take(n).enumerate() {
+                let want = g.run(input)?;
+                for u in 0..self.reported {
+                    if outputs[u * n + i].output != want {
+                        verified_pjrt = Some(false);
+                    }
+                }
+            }
+        }
+
+        let metrics = self
+            .units
+            .iter()
+            .take(self.reported)
+            .enumerate()
+            .map(|(u, c)| {
+                let (instrs, cycles) = avg[u];
+                let variant = c.variant();
+                VariantMetrics {
+                    variant,
+                    instrs,
+                    cycles,
+                    pm_bytes: c.pm_bytes(),
+                    dm_bytes: c.dm_bytes(),
+                    area: area_of(&variant),
+                    energy: energy_mj(&variant, cycles),
+                    speedup: v0_cycles as f64 / cycles as f64,
+                    rewrite: c.rewrite_stats,
+                    zol_loops: c.flatten_stats.zol_loops,
+                }
+            })
+            .collect();
+
+        Ok(FlowResult {
+            model: self.name.clone(),
+            n_inputs: n,
+            verified_golden,
+            verified_pjrt,
+            metrics,
+            total_macs: self.spec.total_macs(),
+        })
+    }
+}
+
 /// Compile + simulate + verify one model across core variants.
 pub fn run_flow(artifacts: &Path, name: &str, opts: &FlowOptions) -> Result<FlowResult> {
     run_flow_cached(artifacts, name, opts, &CompileCache::new())
@@ -94,140 +321,8 @@ pub fn run_flow_cached(
     opts: &FlowOptions,
     cache: &CompileCache,
 ) -> Result<FlowResult> {
-    ensure!(!opts.variants.is_empty(), "{name}: no variants requested");
-    let spec = models::load(artifacts, name)
-        .with_context(|| format!("loading model {name}"))?;
-    let io = runtime::load_golden_io(artifacts, name)
-        .with_context(|| format!("loading golden I/O for {name}"))?;
-    ensure!(!io.inputs.is_empty(), "{name}: no golden inputs");
-    let n = opts.n_inputs.min(io.inputs.len()).max(1);
-
-    // optional PJRT golden path (executes the AOT HLO artifact)
-    let pjrt = if opts.use_pjrt {
-        let rt = runtime::Runtime::cpu()?;
-        Some(rt.load_model(artifacts, name, spec.input_shape, spec.output_elems())?)
-    } else {
-        None
-    };
-
-    // Compile every requested variant, plus a hidden V0 baseline when the
-    // request omits it: `speedup` is defined against the real v0 core, not
-    // against whichever variant happens to be listed first.
-    let reported = opts.variants.len();
-    let scache = cache.for_spec(&spec);
-    let mut units: Vec<Arc<Compiled>> = opts
-        .variants
-        .iter()
-        .map(|&v| {
-            scache
-                .get_or_compile(v)
-                .with_context(|| format!("compiling {name} for {}", v.name))
-        })
-        .collect::<Result<_>>()?;
-    if !opts.variants.contains(&V0) {
-        units.push(
-            scache
-                .get_or_compile(V0)
-                .with_context(|| format!("compiling {name} baseline v0"))?,
-        );
-    }
-
-    // One job per (unit, input) — a single batch saturates the machine.
-    // Inputs are packed once and borrowed by every variant's job.
-    let packed: Vec<Vec<u8>> = io
-        .inputs
-        .iter()
-        .take(n)
-        .map(|x| compiler::pack_input(x))
-        .collect::<Result<_>>()?;
-    let mut jobs: Vec<Job<'_>> = Vec::with_capacity(units.len() * n);
-    for c in &units {
-        for input in &packed {
-            jobs.push(compiler::make_job(c, &spec, input, opts.max_instrs));
-        }
-    }
+    let flow = PreparedFlow::prepare(artifacts, name, opts, cache)?;
+    let jobs = flow.jobs();
     let raw = run_batch(&jobs, opts.threads);
-
-    // Reassemble in submission order: unit u's runs are raw[u*n .. u*n+n].
-    let mut outputs = Vec::with_capacity(raw.len());
-    for (j, r) in raw.into_iter().enumerate() {
-        let (u, i) = (j / n, j % n);
-        let out = r.map_err(|e| {
-            anyhow::anyhow!(
-                "{name} on {} input {i}: simulation failed: {e}",
-                units[u].variant().name
-            )
-        })?;
-        outputs.push(out);
-    }
-
-    // Per-unit aggregates; the baseline comes from the real V0 unit
-    // (reported or hidden).  Golden verification covers only the variants
-    // the caller requested — the hidden baseline exists purely to define
-    // `speedup` (its simulation errors still abort above, since a broken
-    // baseline means no speedup can be reported).
-    let mut verified_golden = true;
-    let mut avg = Vec::with_capacity(units.len());
-    for u in 0..units.len() {
-        let runs = &outputs[u * n..u * n + n];
-        let instrs = runs.iter().map(|r| r.stats.instrs).sum::<u64>() / n as u64;
-        let cycles = runs.iter().map(|r| r.stats.cycles).sum::<u64>() / n as u64;
-        if u < reported {
-            for (i, r) in runs.iter().enumerate() {
-                if r.output != io.outputs[i] {
-                    verified_golden = false;
-                }
-            }
-        }
-        avg.push((instrs, cycles));
-    }
-    let v0_cycles = match units.iter().position(|c| c.variant() == V0) {
-        Some(u) => avg[u].1,
-        None => bail!("{name}: V0 baseline missing from flow units"),
-    };
-
-    // PJRT cross-check: one golden execution per input, compared against
-    // every reported variant's logits.
-    let mut verified_pjrt = opts.use_pjrt.then_some(true);
-    if let Some(g) = &pjrt {
-        for (i, input) in io.inputs.iter().take(n).enumerate() {
-            let want = g.run(input)?;
-            for u in 0..reported {
-                if outputs[u * n + i].output != want {
-                    verified_pjrt = Some(false);
-                }
-            }
-        }
-    }
-
-    let metrics = units
-        .iter()
-        .take(reported)
-        .enumerate()
-        .map(|(u, c)| {
-            let (instrs, cycles) = avg[u];
-            let variant = c.variant();
-            VariantMetrics {
-                variant,
-                instrs,
-                cycles,
-                pm_bytes: c.pm_bytes(),
-                dm_bytes: c.dm_bytes(),
-                area: area_of(&variant),
-                energy: energy_mj(&variant, cycles),
-                speedup: v0_cycles as f64 / cycles as f64,
-                rewrite: c.rewrite_stats,
-                zol_loops: c.flatten_stats.zol_loops,
-            }
-        })
-        .collect();
-
-    Ok(FlowResult {
-        model: name.to_string(),
-        n_inputs: n,
-        verified_golden,
-        verified_pjrt,
-        metrics,
-        total_macs: spec.total_macs(),
-    })
+    flow.finish(raw)
 }

@@ -12,4 +12,4 @@ pub mod experiments;
 pub mod flow;
 
 pub use flow::{run_flow, run_flow_cached, FlowOptions, FlowResult,
-               VariantMetrics};
+               PreparedFlow, VariantMetrics};

@@ -357,10 +357,11 @@ fn cmd_report(args: &Args) -> Result<()> {
             threads,
             ..FlowOptions::default()
         };
-        models
-            .iter()
-            .map(|m| marvel::coordinator::run_flow_cached(&artifacts, m, &opts, &cache))
-            .collect::<Result<Vec<_>>>()?
+        // One global cross-model batch: workers drain every model's jobs
+        // from a single list, closing the tail small models leave behind.
+        marvel::coordinator::experiments::run_flows_cached(
+            &artifacts, &models, &opts, &cache,
+        )?
     } else {
         Vec::new()
     };

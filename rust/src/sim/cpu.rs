@@ -2,12 +2,19 @@
 //! immutable [`Program`] with cycle accounting.
 //!
 //! The program is decoded once into a dense `Vec<Instr>` inside
-//! [`Program`] and shared via `Arc`; the run loop is a single `match` over
-//! that enum — this is the §Perf hot path (target ≥100 M instr/s, see
-//! `benches/bench_iss.rs`).  Variant gating (illegal custom instructions on
-//! smaller cores) is checked when the `Program` is built so the hot loop
-//! pays nothing for it, and [`Machine`] carries only mutable architectural
-//! state: registers, pc, the ZOL registers and the data memory.
+//! [`Program`] and shared via `Arc`.  [`Machine::run`] executes the
+//! *lowered* micro-op form ([`super::lowered`], DESIGN.md §11) — baked
+//! cycle costs, branch targets resolved to instruction indices, no
+//! per-instruction pc validation — and falls back to the original
+//! decode-enum loop, kept as [`Machine::run_reference`], whenever a
+//! program/cycle-model cannot be lowered.  The reference loop is also the
+//! oracle the differential tests compare against
+//! (`rust/tests/lowered_diff.rs`).  This is the §Perf hot path (target
+//! ≥100 M instr/s, see `benches/bench_iss.rs`).  Variant gating (illegal
+//! custom instructions on smaller cores) is checked when the `Program` is
+//! built so neither loop pays for it, and [`Machine`] carries only mutable
+//! architectural state: registers, pc, the ZOL registers and the data
+//! memory.
 
 use std::sync::Arc;
 
@@ -151,6 +158,24 @@ impl Machine {
         self.ze = 0;
     }
 
+    /// Rebind to a (possibly different) program, resetting CPU state and
+    /// the cycle model; data memory is left untouched — callers re-init it
+    /// via [`super::Memory::reset`] / [`super::Memory::reset_from`].  The
+    /// batch engine's pooled workers use this to reuse one machine's
+    /// allocations across jobs (DESIGN.md §3).
+    pub fn rebind(&mut self, program: Arc<Program>) {
+        self.program = program;
+        self.cycle_model = CycleModel::default();
+        self.reset_cpu();
+    }
+
+    /// Recycle into exactly the state `Machine::new(program, dm_size)`
+    /// would produce, reusing the DM allocation instead of reallocating.
+    pub fn recycle(&mut self, program: Arc<Program>, dm_size: usize) {
+        self.rebind(program);
+        self.mem.reset(dm_size);
+    }
+
     pub fn program_len(&self) -> usize {
         self.program.len()
     }
@@ -159,16 +184,46 @@ impl Machine {
         self.program.instrs().get(idx)
     }
 
+    /// Architectural register write: x0 is hardwired to zero.  Shared by
+    /// the reference and lowered interpreters so the invariant lives once.
     #[inline(always)]
-    fn write_reg(regs: &mut [i32; 32], rd: u8, v: i32) {
-        // x0 is hardwired to zero.
+    pub(crate) fn write_reg(regs: &mut [i32; 32], rd: u8, v: i32) {
         regs[rd as usize] = v;
         regs[0] = 0;
     }
 
     /// Run until `ecall`, a fault, or the watchdog. Generic over the retire
     /// hook; pass [`super::NopHook`] for full speed.
+    ///
+    /// Dispatches over the lowered micro-op form (cached on the shared
+    /// [`Program`], DESIGN.md §11); behaviour is bit-identical to
+    /// [`Self::run_reference`], which serves as fallback whenever the
+    /// program/cycle-model — or an entry state with a manually-armed `ze`
+    /// the static lowering does not cover — cannot take the fast path.
     pub fn run<H: RetireHook>(
+        &mut self,
+        max_instrs: u64,
+        hook: &mut H,
+    ) -> Result<RunStats, SimError> {
+        let program = Arc::clone(&self.program);
+        if let Some(lp) = program.lowered(&self.cycle_model) {
+            if lp.covers_entry(self.ze) {
+                return super::lowered::run_lowered(
+                    self,
+                    &lp,
+                    program.instrs(),
+                    max_instrs,
+                    hook,
+                );
+            }
+        }
+        self.run_reference(max_instrs, hook)
+    }
+
+    /// The original decode-enum interpreter — the reference oracle the
+    /// lowered loop is differentially tested against, and the fallback for
+    /// states/models the lowering cannot bake.
+    pub fn run_reference<H: RetireHook>(
         &mut self,
         max_instrs: u64,
         hook: &mut H,

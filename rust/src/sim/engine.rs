@@ -8,13 +8,30 @@
 //! results are deterministic and byte-identical for any worker count
 //! (DESIGN.md §3, "threading and determinism contract").
 //!
+//! Two allocation disciplines keep the per-job overhead flat (DESIGN.md
+//! §3):
+//!
+//! - **Machine/DM pooling** — each worker owns one [`Machine`] and recycles
+//!   it across every job it claims ([`run_job_pooled`]); the DM `Vec`
+//!   allocation survives job boundaries, so a many-small-model sweep costs
+//!   no allocator traffic per run.
+//! - **Base DM images** — a job may carry a prebuilt full-DM image
+//!   ([`Job::base_image`], typically `compiler::Compiled::base_dm` with the
+//!   weights already written), initializing memory with one
+//!   `copy_from_slice` instead of zero-fill + per-block writes.
+//!
+//! Results land in pre-claimed, lock-free slots (the atomic work cursor
+//! hands each index to exactly one worker), and a panicking worker is
+//! propagated to the caller via `resume_unwind` instead of surfacing as a
+//! confusing poisoned-slot error.
+//!
 //! The layer is deliberately compiler-agnostic: a [`Job`] describes memory
-//! setup as raw `(addr, bytes)` blocks, so the sim crate stays free of
-//! model-spec knowledge.  `compiler::make_job` builds jobs from a
-//! `Compiled`.
+//! setup as raw bytes/blocks, so the sim crate stays free of model-spec
+//! knowledge.  `compiler::make_job` builds jobs from a `Compiled`.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
 
 use super::cpu::{Machine, RunStats, SimError};
 use super::program::Program;
@@ -25,8 +42,13 @@ pub struct Job<'a> {
     pub program: Arc<Program>,
     /// Data-memory size in bytes.
     pub dm_size: usize,
-    /// Blocks written into DM before the run (weights images, constants).
-    /// Borrowed — the batch only needs them alive for the call.
+    /// Optional full base DM image copied in before `preload` (shorter
+    /// images are zero-padded to `dm_size`).  Borrowed — typically the
+    /// compiler's prebuilt weights image, shared by every job of a model.
+    pub base_image: Option<&'a [u8]>,
+    /// Blocks written into DM after `base_image` (weights images,
+    /// constants).  Borrowed — the batch only needs them alive for the
+    /// call.
     pub preload: Vec<(u32, &'a [u8])>,
     /// Per-run input block, written after `preload`.  Borrowed like
     /// `preload`, so one packed input can feed many variants' jobs.
@@ -46,9 +68,26 @@ pub struct JobOutput {
     pub stats: RunStats,
 }
 
-/// Execute one job on the current thread.
+/// Execute one job on a fresh machine on the current thread.
 pub fn run_job(job: &Job<'_>) -> Result<JobOutput, SimError> {
-    let mut m = Machine::new(Arc::clone(&job.program), job.dm_size);
+    let mut m = Machine::new(Arc::clone(&job.program), 0);
+    run_job_on(&mut m, job)
+}
+
+/// Execute one job on an existing machine, recycling its allocations —
+/// the pooled path the batch workers use.  Produces output byte-identical
+/// to [`run_job`]: the machine is rebound and its memory fully
+/// re-initialized, so no state leaks between jobs.
+pub fn run_job_on(m: &mut Machine, job: &Job<'_>) -> Result<JobOutput, SimError> {
+    match job.base_image {
+        Some(image) => {
+            m.rebind(Arc::clone(&job.program));
+            m.mem
+                .reset_from(image, job.dm_size)
+                .map_err(|fault| SimError::Mem { pc: 0, fault })?;
+        }
+        None => m.recycle(Arc::clone(&job.program), job.dm_size),
+    }
     for &(addr, block) in &job.preload {
         m.mem
             .write_block(addr, block)
@@ -65,15 +104,52 @@ pub fn run_job(job: &Job<'_>) -> Result<JobOutput, SimError> {
     Ok(JobOutput { output, stats })
 }
 
+/// [`run_job_on`] against a lazily-created pool slot: the first call
+/// builds the machine, later calls recycle it.
+pub fn run_job_pooled(
+    pool: &mut Option<Machine>,
+    job: &Job<'_>,
+) -> Result<JobOutput, SimError> {
+    let m = pool
+        .get_or_insert_with(|| Machine::new(Arc::clone(&job.program), 0));
+    run_job_on(m, job)
+}
+
 /// One worker thread per core by default.
 pub fn default_threads() -> usize {
     std::thread::available_parallelism().map_or(1, |n| n.get())
 }
 
+/// Per-job result slots written without locks: the atomic work cursor
+/// hands each index to exactly one worker, which is the sole writer of
+/// that slot; the buffer is only read back after every worker has been
+/// joined.
+struct Slots<T>(Vec<UnsafeCell<Option<T>>>);
+
+// SAFETY: see the struct docs — slot `i` is written only by the single
+// worker that claimed `i` from the cursor, and read only after join.
+unsafe impl<T: Send> Sync for Slots<T> {}
+
+impl<T> Slots<T> {
+    fn new(n: usize) -> Slots<T> {
+        Slots((0..n).map(|_| UnsafeCell::new(None)).collect())
+    }
+
+    /// SAFETY: the caller must hold the unique claim on index `i`.
+    unsafe fn write(&self, i: usize, v: T) {
+        *self.0[i].get() = Some(v);
+    }
+
+    fn into_results(self) -> Vec<Option<T>> {
+        self.0.into_iter().map(UnsafeCell::into_inner).collect()
+    }
+}
+
 /// Run a batch of jobs on up to `threads` worker threads (`0` = one per
 /// core).  `results[i]` always corresponds to `jobs[i]`: each job is a pure
 /// function of its inputs, so the output is byte-identical for any worker
-/// count — only wall-clock changes.
+/// count — only wall-clock changes.  A panic on a worker thread (a bug, not
+/// a [`SimError`]) is re-raised on the calling thread.
 pub fn run_batch(
     jobs: &[Job<'_>],
     threads: usize,
@@ -82,29 +158,67 @@ pub fn run_batch(
     let threads = if threads == 0 { default_threads() } else { threads };
     let threads = threads.min(n).max(1);
     if threads == 1 {
-        return jobs.iter().map(run_job).collect();
+        let mut pool: Option<Machine> = None;
+        return jobs.iter().map(|j| run_job_pooled(&mut pool, j)).collect();
     }
 
     // Work-stealing by atomic cursor: long jobs (big models) don't leave
-    // workers idle the way a static chunking would.
+    // workers idle the way a static chunking would.  A panicking worker
+    // raises `stop` so its siblings quit claiming jobs instead of draining
+    // the rest of a possibly-huge batch first.
     let next = AtomicUsize::new(0);
-    let slots: Vec<Mutex<Option<Result<JobOutput, SimError>>>> =
-        (0..n).map(|_| Mutex::new(None)).collect();
-    std::thread::scope(|s| {
-        for _ in 0..threads {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
+    let stop = AtomicBool::new(false);
+    let slots: Slots<Result<JobOutput, SimError>> = Slots::new(n);
+    let panic = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut pool: Option<Machine> = None;
+                    loop {
+                        if stop.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        let r = std::panic::catch_unwind(
+                            std::panic::AssertUnwindSafe(|| {
+                                run_job_pooled(&mut pool, &jobs[i])
+                            }),
+                        );
+                        match r {
+                            // SAFETY: the cursor handed index i to this
+                            // worker alone.
+                            Ok(res) => unsafe { slots.write(i, res) },
+                            Err(p) => {
+                                stop.store(true, Ordering::Relaxed);
+                                std::panic::resume_unwind(p);
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+        // Join explicitly so a worker panic is captured (and re-raised
+        // below) rather than aborting via the scope's implicit join.
+        let mut panic = None;
+        for h in handles {
+            if let Err(p) = h.join() {
+                if panic.is_none() {
+                    panic = Some(p);
                 }
-                let r = run_job(&jobs[i]);
-                *slots[i].lock().unwrap() = Some(r);
-            });
+            }
         }
+        panic
     });
+    if let Some(p) = panic {
+        std::panic::resume_unwind(p);
+    }
     slots
+        .into_results()
         .into_iter()
-        .map(|m| m.into_inner().unwrap().expect("worker filled every slot"))
+        .map(|r| r.expect("worker filled every slot"))
         .collect()
 }
 
@@ -137,6 +251,7 @@ mod tests {
             .map(|x| Job {
                 program: Arc::clone(p),
                 dm_size: 64,
+                base_image: None,
                 preload: Vec::new(),
                 input: (0, &x[..]),
                 output: (4, 1),
@@ -175,6 +290,96 @@ mod tests {
     }
 
     #[test]
+    fn base_image_initializes_dm() {
+        // load x1 <- dm[8] (beyond the input block); add; store dm[4]
+        use crate::isa::{LoadOp, StoreOp};
+        let p = Arc::new(
+            Program::from_instrs(
+                V0,
+                vec![
+                    Instr::Load { op: LoadOp::Lb, rd: 1, rs1: 0, offset: 8 },
+                    Instr::OpImm { op: AluImmOp::Addi, rd: 1, rs1: 1, imm: 1 },
+                    Instr::Store { op: StoreOp::Sb, rs2: 1, rs1: 0, offset: 4 },
+                    Instr::Ecall,
+                ],
+            )
+            .unwrap(),
+        );
+        let mut base = vec![0u8; 16];
+        base[8] = 41;
+        let zero = [0u8];
+        let job = Job {
+            program: Arc::clone(&p),
+            dm_size: 64, // shorter base image is zero-padded
+            base_image: Some(&base),
+            preload: Vec::new(),
+            input: (0, &zero[..]),
+            output: (4, 1),
+            max_instrs: 100,
+        };
+        assert_eq!(run_job(&job).unwrap().output, vec![42]);
+        // an oversized base image faults instead of truncating
+        let big = vec![0u8; 65];
+        let bad = Job { base_image: Some(&big), ..job };
+        assert!(matches!(run_job(&bad), Err(SimError::Mem { .. })));
+    }
+
+    #[test]
+    fn pooled_machine_matches_fresh_across_programs() {
+        // Alternate two different programs (different k, dm sizes) through
+        // one pooled machine; every result must equal the fresh-machine
+        // path.
+        let p1 = add_k_program(3);
+        let p2 = add_k_program(9);
+        let inputs: Vec<[u8; 1]> = (0..6u8).map(|x| [x]).collect();
+        let mut jobs = Vec::new();
+        for (i, x) in inputs.iter().enumerate() {
+            let p = if i % 2 == 0 { &p1 } else { &p2 };
+            jobs.push(Job {
+                program: Arc::clone(p),
+                dm_size: if i % 2 == 0 { 64 } else { 128 },
+                base_image: None,
+                preload: Vec::new(),
+                input: (0, &x[..]),
+                output: (4, 1),
+                max_instrs: 100,
+            });
+        }
+        let mut pool: Option<Machine> = None;
+        for job in &jobs {
+            let fresh = run_job(job).unwrap();
+            let pooled = run_job_pooled(&mut pool, job).unwrap();
+            assert_eq!(pooled, fresh);
+        }
+        // the pool really was reused, not rebuilt
+        assert!(pool.is_some());
+    }
+
+    #[test]
+    fn worker_panic_propagates() {
+        // dm_size = usize::MAX makes the DM Vec resize panic with
+        // "capacity overflow" (an unwinding panic, before any allocation
+        // is attempted) inside the worker — a bug class, not a SimError.
+        // run_batch must re-raise it, not die on a missing-slot expect.
+        let p = add_k_program(1);
+        let zero = [0u8];
+        let mk = |dm_size: usize| Job {
+            program: Arc::clone(&p),
+            dm_size,
+            base_image: None,
+            preload: Vec::new(),
+            input: (0, &zero[..]),
+            output: (4, 1),
+            max_instrs: 100,
+        };
+        let jobs = vec![mk(64), mk(usize::MAX), mk(64)];
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_batch(&jobs, 2)
+        }));
+        assert!(r.is_err(), "worker panic must reach the caller");
+    }
+
+    #[test]
     fn zol_program_shared_across_threads() {
         // dlpi 5 over addi body — exercises the v4 path under threading
         let p = Arc::new(
@@ -199,6 +404,7 @@ mod tests {
             .map(|_| Job {
                 program: Arc::clone(&p),
                 dm_size: 64,
+                base_image: None,
                 preload: Vec::new(),
                 input: (0, &zero[..]),
                 output: (4, 1),

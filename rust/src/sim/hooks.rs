@@ -9,6 +9,11 @@ use crate::isa::Instr;
 
 /// Observer invoked once per retired instruction.
 pub trait RetireHook {
+    /// Statically `false` only for hooks that ignore every retirement
+    /// ([`NopHook`]); the lowered interpreter then skips materializing the
+    /// retire arguments (pc, `&Instr` lookup) entirely.
+    const OBSERVES: bool = true;
+
     /// `pc` is the address of the retiring instruction; `cycles` the cycles
     /// it spent (data-dependent for branches).
     fn retire(&mut self, pc: u32, instr: &Instr, cycles: u64);
@@ -18,6 +23,8 @@ pub trait RetireHook {
 pub struct NopHook;
 
 impl RetireHook for NopHook {
+    const OBSERVES: bool = false;
+
     #[inline(always)]
     fn retire(&mut self, _pc: u32, _instr: &Instr, _cycles: u64) {}
 }

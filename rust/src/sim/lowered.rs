@@ -1,0 +1,1004 @@
+//! The lowered micro-op form of a [`Program`] — the execution hot loop's
+//! native representation (DESIGN.md §11).
+//!
+//! [`super::cpu::Machine::run`] used to interpret the decoded [`Instr`]
+//! enum directly, recomputing per retired instruction what never changes
+//! across a run: the `pc % 4` / `pc >= plen` fetch checks, the `pc/4`
+//! index division, the per-class cycle cost lookup in the
+//! [`CycleModel`], the branch-offset → target arithmetic, and the
+//! zero-overhead-loop `next_pc == ZE` compare even in programs that cannot
+//! arm a loop.  Lowering bakes all of that in once, at
+//! [`Program::lower`] time:
+//!
+//! - every instruction becomes a flat, fixed-width [`MicroOp`] (one
+//!   dispatch, no nested enum matching);
+//! - cycle costs are resolved against the [`CycleModel`] and stored in the
+//!   op (branches carry both the taken and not-taken cost);
+//! - branch/jump offsets are resolved to direct instruction indices, and
+//!   every statically-invalid target (fall-off-the-end, misaligned or
+//!   out-of-range branch) points at a dedicated trap op — the straight-line
+//!   path therefore needs *no* pc validation at all;
+//! - the set of possible ZOL loop-end addresses (`ZE` values of every
+//!   `dlp`/`dlpi`/`zlp`) is computed up front and only the ops whose
+//!   successor could be a loop end carry the `zmark` flag; unmarked ops
+//!   skip the loop-back compare entirely.  A program containing `set.ze`
+//!   (arbitrary runtime `ZE`) conservatively marks every op.
+//!
+//! The lowered loop is behaviourally **bit-identical** to the reference
+//! interpreter ([`super::cpu::Machine::run_reference`]): same
+//! [`super::cpu::RunStats`], same outputs, same architectural state after
+//! the run, same faults, same retire-hook stream.  The reference path
+//! survives as the differential-test oracle (`rust/tests/lowered_diff.rs`)
+//! and as the fallback when a program/cycle-model cannot be lowered
+//! (costs beyond `u32`, a `ZE` out of `u32` range, or an entry state whose
+//! armed `ZE` the static mark set does not cover).
+
+use std::collections::{HashMap, HashSet};
+
+use super::cpu::{Machine, RunStats, SimError};
+use super::hooks::RetireHook;
+use super::program::Program;
+use super::CycleModel;
+use crate::isa::{AluImmOp, AluOp, BranchOp, Instr, LoadOp, StoreOp, MAC_RD,
+                 MAC_RS1, MAC_RS2};
+
+/// Flat micro-op opcode: one variant per executable form, plus the two
+/// trap kinds that materialize statically-known-invalid pc targets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[rustfmt::skip]
+pub(crate) enum Kind {
+    Lui, Auipc, Jal, Jalr,
+    Beq, Bne, Blt, Bge, Bltu, Bgeu,
+    Lb, Lh, Lw, Lbu, Lhu,
+    Sb, Sh, Sw,
+    Addi, Slti, Sltiu, Xori, Ori, Andi, Slli, Srli, Srai,
+    Add, Sub, Sll, Slt, Sltu, Xor, Srl, Sra, Or, And,
+    Mul, Mulh, Mulhsu, Mulhu, Div, Divu, Rem, Remu,
+    Fence, Ecall, Ebreak,
+    Mac, Add2i, FusedMac, Dlp, Dlpi, Zlp, SetZc, SetZs, SetZe,
+    /// Reaching this slot is `PcOutOfRange { pc: imm }` (static bad target).
+    Trap,
+    /// Reaching this slot is `PcOutOfRange` at the dynamically-recorded pc
+    /// (invalid `jalr` target or invalid ZOL loop-start).
+    TrapDyn,
+}
+
+/// One lowered instruction: 16 bytes, field meaning per [`Kind`].
+///
+/// | field | use |
+/// |-------|-----|
+/// | `a`   | rd (ALU/load/jal/jalr/lui/auipc), rs2 of stores, rs1 of add2i/fusedmac |
+/// | `b`   | rs1 (ALU/load/store/jalr/zol), rs2 of add2i/fusedmac |
+/// | `zmark` | 1 = run the ZOL loop-back compare after this op |
+/// | `imm` | immediate/offset; taken-branch cost; `dlpi` count; trap pc |
+/// | `aux` | rs2 of reg-reg ALU; resolved target index (branch/jal); ZE byte address (zol); i2 of add2i/fusedmac |
+/// | `cost`| retire cost in cycles (not-taken cost for branches) |
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct MicroOp {
+    pub(crate) kind: Kind,
+    pub(crate) a: u8,
+    pub(crate) b: u8,
+    pub(crate) zmark: u8,
+    pub(crate) imm: i32,
+    pub(crate) aux: u32,
+    pub(crate) cost: u32,
+}
+
+/// A [`Program`] lowered against one [`CycleModel`].
+///
+/// Layout of `ops`: indices `0..n` mirror the program's instructions;
+/// `ops[n]` is the shared fall-off-the-end trap, `ops[n+1]` the dynamic
+/// trap ([`Kind::TrapDyn`]), and further slots hold one trap per distinct
+/// statically-invalid branch/jump target.  Every index stored in an op is
+/// `< ops.len()` by construction, so the hot loop never validates a pc.
+pub struct LoweredProgram {
+    ops: Vec<MicroOp>,
+    /// Index of the [`Kind::TrapDyn`] slot.
+    dyn_trap: usize,
+    /// Program length in bytes (`n * 4`).
+    plen_bytes: u32,
+    /// Possible ZE byte addresses of the program's hardware loops.
+    zset: HashSet<u32>,
+    /// `set.ze` present: every op carries the loop-back compare.
+    all_marked: bool,
+}
+
+/// Per-class costs checked into `u32` at lowering time.
+struct Baked {
+    alu: u32,
+    mul: u32,
+    div: u32,
+    load: u32,
+    store: u32,
+    branch_taken: u32,
+    branch_not_taken: u32,
+    jump: u32,
+    custom: u32,
+    zol_setup: u32,
+}
+
+impl Baked {
+    fn of(cm: &CycleModel) -> Option<Baked> {
+        Some(Baked {
+            alu: u32::try_from(cm.alu).ok()?,
+            mul: u32::try_from(cm.mul).ok()?,
+            div: u32::try_from(cm.div).ok()?,
+            load: u32::try_from(cm.load).ok()?,
+            store: u32::try_from(cm.store).ok()?,
+            branch_taken: u32::try_from(cm.branch_taken).ok()?,
+            branch_not_taken: u32::try_from(cm.branch_not_taken).ok()?,
+            jump: u32::try_from(cm.jump).ok()?,
+            custom: u32::try_from(cm.custom).ok()?,
+            zol_setup: u32::try_from(cm.zol_setup).ok()?,
+        })
+    }
+}
+
+impl LoweredProgram {
+    /// Lower `program` against `cm`.  `None` when the program cannot be
+    /// lowered faithfully (see module docs) — callers fall back to the
+    /// reference interpreter.
+    pub fn lower(program: &Program, cm: &CycleModel) -> Option<LoweredProgram> {
+        let baked = Baked::of(cm)?;
+        let instrs = program.instrs();
+        let n = instrs.len();
+        if (n as u64) * 4 > u64::from(u32::MAX) {
+            return None;
+        }
+        let plen_bytes = (n * 4) as u32;
+
+        // Pass 1: the static set of possible ZE values.
+        let mut zset: HashSet<u32> = HashSet::new();
+        let mut all_marked = false;
+        for (i, instr) in instrs.iter().enumerate() {
+            match instr {
+                Instr::Dlp { body_len, .. }
+                | Instr::Dlpi { body_len, .. }
+                | Instr::Zlp { body_len, .. } => {
+                    let ze = (i as u64) * 4 + 4 + 4 * u64::from(*body_len);
+                    zset.insert(u32::try_from(ze).ok()?);
+                }
+                Instr::SetZe { .. } => all_marked = true,
+                _ => {}
+            }
+        }
+
+        // Pass 2: convert, resolving targets.  Statically-invalid targets
+        // get dedicated trap slots appended after ops[n] (fall-off trap)
+        // and ops[n+1] (dynamic trap).
+        let mut trap_at: HashMap<u32, usize> = HashMap::new();
+        let mut extra_traps: Vec<u32> = Vec::new();
+        let mut ops: Vec<MicroOp> = Vec::with_capacity(n + 2);
+        for (i, instr) in instrs.iter().enumerate() {
+            let pc = (i as u32) * 4;
+            let fall = pc + 4;
+            let mut resolve = |byte: u32| -> usize {
+                if byte % 4 == 0 && byte < plen_bytes {
+                    (byte / 4) as usize
+                } else if byte == plen_bytes {
+                    n
+                } else {
+                    *trap_at.entry(byte).or_insert_with(|| {
+                        extra_traps.push(byte);
+                        n + 1 + extra_traps.len()
+                    })
+                }
+            };
+
+            let mut op = MicroOp {
+                kind: Kind::Fence,
+                a: 0,
+                b: 0,
+                zmark: 0,
+                imm: 0,
+                aux: 0,
+                cost: baked.alu,
+            };
+            // Statically-possible successor addresses (for ZOL marking);
+            // `None` entries are unused, `dynamic` covers jalr.
+            let mut nexts: [Option<u32>; 2] = [Some(fall), None];
+            let mut dynamic_next = false;
+
+            match *instr {
+                Instr::Lui { rd, imm } => {
+                    op.kind = Kind::Lui;
+                    op.a = rd;
+                    op.imm = imm;
+                }
+                Instr::Auipc { rd, imm } => {
+                    op.kind = Kind::Auipc;
+                    op.a = rd;
+                    op.imm = imm;
+                }
+                Instr::Jal { rd, offset } => {
+                    op.kind = Kind::Jal;
+                    op.a = rd;
+                    let t = pc.wrapping_add(offset as u32);
+                    op.aux = resolve(t) as u32;
+                    op.cost = baked.jump;
+                    nexts = [Some(t), None];
+                }
+                Instr::Jalr { rd, rs1, offset } => {
+                    op.kind = Kind::Jalr;
+                    op.a = rd;
+                    op.b = rs1;
+                    op.imm = offset;
+                    op.cost = baked.jump;
+                    nexts = [None, None];
+                    dynamic_next = true;
+                }
+                Instr::Branch { op: bop, rs1, rs2, offset } => {
+                    op.kind = match bop {
+                        BranchOp::Beq => Kind::Beq,
+                        BranchOp::Bne => Kind::Bne,
+                        BranchOp::Blt => Kind::Blt,
+                        BranchOp::Bge => Kind::Bge,
+                        BranchOp::Bltu => Kind::Bltu,
+                        BranchOp::Bgeu => Kind::Bgeu,
+                    };
+                    op.a = rs1;
+                    op.b = rs2;
+                    let t = pc.wrapping_add(offset as u32);
+                    op.aux = resolve(t) as u32;
+                    op.imm = baked.branch_taken as i32;
+                    op.cost = baked.branch_not_taken;
+                    nexts = [Some(fall), Some(t)];
+                }
+                Instr::Load { op: lop, rd, rs1, offset } => {
+                    op.kind = match lop {
+                        LoadOp::Lb => Kind::Lb,
+                        LoadOp::Lh => Kind::Lh,
+                        LoadOp::Lw => Kind::Lw,
+                        LoadOp::Lbu => Kind::Lbu,
+                        LoadOp::Lhu => Kind::Lhu,
+                    };
+                    op.a = rd;
+                    op.b = rs1;
+                    op.imm = offset;
+                    op.cost = baked.load;
+                }
+                Instr::Store { op: sop, rs2, rs1, offset } => {
+                    op.kind = match sop {
+                        StoreOp::Sb => Kind::Sb,
+                        StoreOp::Sh => Kind::Sh,
+                        StoreOp::Sw => Kind::Sw,
+                    };
+                    op.a = rs2;
+                    op.b = rs1;
+                    op.imm = offset;
+                    op.cost = baked.store;
+                }
+                Instr::OpImm { op: aop, rd, rs1, imm } => {
+                    op.kind = match aop {
+                        AluImmOp::Addi => Kind::Addi,
+                        AluImmOp::Slti => Kind::Slti,
+                        AluImmOp::Sltiu => Kind::Sltiu,
+                        AluImmOp::Xori => Kind::Xori,
+                        AluImmOp::Ori => Kind::Ori,
+                        AluImmOp::Andi => Kind::Andi,
+                        AluImmOp::Slli => Kind::Slli,
+                        AluImmOp::Srli => Kind::Srli,
+                        AluImmOp::Srai => Kind::Srai,
+                    };
+                    op.a = rd;
+                    op.b = rs1;
+                    op.imm = imm;
+                }
+                Instr::Op { op: rop, rd, rs1, rs2 } => {
+                    op.kind = match rop {
+                        AluOp::Add => Kind::Add,
+                        AluOp::Sub => Kind::Sub,
+                        AluOp::Sll => Kind::Sll,
+                        AluOp::Slt => Kind::Slt,
+                        AluOp::Sltu => Kind::Sltu,
+                        AluOp::Xor => Kind::Xor,
+                        AluOp::Srl => Kind::Srl,
+                        AluOp::Sra => Kind::Sra,
+                        AluOp::Or => Kind::Or,
+                        AluOp::And => Kind::And,
+                        AluOp::Mul => Kind::Mul,
+                        AluOp::Mulh => Kind::Mulh,
+                        AluOp::Mulhsu => Kind::Mulhsu,
+                        AluOp::Mulhu => Kind::Mulhu,
+                        AluOp::Div => Kind::Div,
+                        AluOp::Divu => Kind::Divu,
+                        AluOp::Rem => Kind::Rem,
+                        AluOp::Remu => Kind::Remu,
+                    };
+                    op.a = rd;
+                    op.b = rs1;
+                    op.aux = u32::from(rs2);
+                    op.cost = match rop {
+                        AluOp::Mul | AluOp::Mulh | AluOp::Mulhsu
+                        | AluOp::Mulhu => baked.mul,
+                        AluOp::Div | AluOp::Divu | AluOp::Rem
+                        | AluOp::Remu => baked.div,
+                        _ => baked.alu,
+                    };
+                }
+                Instr::Fence => {
+                    op.kind = Kind::Fence;
+                }
+                Instr::Ecall => {
+                    op.kind = Kind::Ecall;
+                    nexts = [None, None];
+                }
+                Instr::Ebreak => {
+                    op.kind = Kind::Ebreak;
+                    op.cost = 0;
+                    nexts = [None, None];
+                }
+                Instr::Mac => {
+                    op.kind = Kind::Mac;
+                    op.cost = baked.custom;
+                }
+                Instr::Add2i { rs1, rs2, i1, i2 } => {
+                    op.kind = Kind::Add2i;
+                    op.a = rs1;
+                    op.b = rs2;
+                    op.imm = i32::from(i1);
+                    op.aux = u32::from(i2);
+                    op.cost = baked.custom;
+                }
+                Instr::FusedMac { rs1, rs2, i1, i2 } => {
+                    op.kind = Kind::FusedMac;
+                    op.a = rs1;
+                    op.b = rs2;
+                    op.imm = i32::from(i1);
+                    op.aux = u32::from(i2);
+                    op.cost = baked.custom;
+                }
+                Instr::Dlp { rs1, body_len } => {
+                    op.kind = Kind::Dlp;
+                    op.b = rs1;
+                    let ze = u64::from(fall) + 4 * u64::from(body_len);
+                    op.aux = u32::try_from(ze).ok()?;
+                    op.cost = baked.zol_setup;
+                }
+                Instr::Dlpi { count, body_len } => {
+                    op.kind = Kind::Dlpi;
+                    op.imm = i32::from(count);
+                    let ze = u64::from(fall) + 4 * u64::from(body_len);
+                    op.aux = u32::try_from(ze).ok()?;
+                    op.cost = baked.zol_setup;
+                }
+                Instr::Zlp { rs1, body_len } => {
+                    op.kind = Kind::Zlp;
+                    op.b = rs1;
+                    let ze = u64::from(fall) + 4 * u64::from(body_len);
+                    op.aux = u32::try_from(ze).ok()?;
+                    op.cost = baked.zol_setup;
+                    nexts = [Some(fall), Some(op.aux)];
+                }
+                Instr::SetZc { rs1 } => {
+                    op.kind = Kind::SetZc;
+                    op.b = rs1;
+                    op.cost = baked.zol_setup;
+                }
+                Instr::SetZs { rs1 } => {
+                    op.kind = Kind::SetZs;
+                    op.b = rs1;
+                    op.cost = baked.zol_setup;
+                }
+                Instr::SetZe { rs1 } => {
+                    op.kind = Kind::SetZe;
+                    op.b = rs1;
+                    op.cost = baked.zol_setup;
+                }
+            }
+
+            let marked = all_marked
+                || (dynamic_next && !zset.is_empty())
+                || nexts.iter().flatten().any(|b| zset.contains(b));
+            op.zmark = u8::from(marked);
+            ops.push(op);
+        }
+
+        // Shared fall-off trap (byte pc == plen) and the dynamic trap.
+        ops.push(MicroOp {
+            kind: Kind::Trap,
+            a: 0,
+            b: 0,
+            zmark: 0,
+            imm: plen_bytes as i32,
+            aux: 0,
+            cost: 0,
+        });
+        ops.push(MicroOp {
+            kind: Kind::TrapDyn,
+            a: 0,
+            b: 0,
+            zmark: 0,
+            imm: 0,
+            aux: 0,
+            cost: 0,
+        });
+        for byte in extra_traps {
+            ops.push(MicroOp {
+                kind: Kind::Trap,
+                a: 0,
+                b: 0,
+                zmark: 0,
+                imm: byte as i32,
+                aux: 0,
+                cost: 0,
+            });
+        }
+
+        Some(LoweredProgram {
+            ops,
+            dyn_trap: n + 1,
+            plen_bytes,
+            zset,
+            all_marked,
+        })
+    }
+
+    /// Total micro-ops including trap slots (diagnostics/tests).
+    pub fn n_ops(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// How many ops carry the ZOL loop-back compare (diagnostics/tests).
+    pub fn n_marked(&self) -> usize {
+        self.ops.iter().filter(|o| o.zmark != 0).count()
+    }
+
+    /// Can a run that starts with `ze` already armed execute on the
+    /// lowered form?  `ze == 0` (disarmed) always can; an armed `ze` must
+    /// be one the static mark set covers.  [`Machine::run`] falls back to
+    /// the reference interpreter otherwise.
+    pub(crate) fn covers_entry(&self, ze: u32) -> bool {
+        ze == 0 || self.all_marked || self.zset.contains(&ze)
+    }
+}
+
+/// The byte pc a slot stands for: real slots are `idx * 4`, trap slots
+/// carry the (possibly misaligned / out-of-range) pc they materialize.
+#[inline]
+fn byte_of(ops: &[MicroOp], idx: usize, dyn_pc: u32) -> u32 {
+    match ops[idx].kind {
+        Kind::Trap => ops[idx].imm as u32,
+        Kind::TrapDyn => dyn_pc,
+        _ => (idx as u32) * 4,
+    }
+}
+
+/// Execute `machine` over the lowered form — same observable behaviour as
+/// [`Machine::run_reference`], instruction for instruction (module docs).
+///
+/// `instrs_for_hook` is the program's decoded stream, used only to feed
+/// [`RetireHook::retire`]; hooks with [`RetireHook::OBSERVES`] `== false`
+/// (the [`super::NopHook`] fast path) skip even that lookup.
+pub(crate) fn run_lowered<H: RetireHook>(
+    machine: &mut Machine,
+    lp: &LoweredProgram,
+    instrs_for_hook: &[Instr],
+    max_instrs: u64,
+    hook: &mut H,
+) -> Result<RunStats, SimError> {
+    let ops: &[MicroOp] = &lp.ops;
+    let plen = lp.plen_bytes;
+    let mut retired: u64 = 0;
+    let mut cycles: u64 = 0;
+    // The pc recorded for the dynamic trap slot (invalid jalr / ZOL start).
+    let mut dyn_pc: u32 = 0;
+    let mut idx: usize = {
+        let pc = machine.pc;
+        if pc % 4 == 0 && pc < plen {
+            (pc / 4) as usize
+        } else {
+            dyn_pc = pc;
+            lp.dyn_trap
+        }
+    };
+
+    loop {
+        // Watchdog first: the reference loop checks the budget before
+        // validating the pc, and a lowered run must fault identically.
+        if retired >= max_instrs {
+            machine.pc = byte_of(ops, idx, dyn_pc);
+            return Err(SimError::Watchdog { max_instrs });
+        }
+        let op = ops[idx];
+        // Correct for every real slot (idx < n); trap slots never read it.
+        let pc = (idx as u32).wrapping_mul(4);
+        let mut next = idx + 1;
+        let mut cost = op.cost;
+
+        // Early-return on a data-memory fault, leaving `machine.pc` at the
+        // faulting instruction like the reference loop does.
+        macro_rules! mem_try {
+            ($e:expr) => {
+                match $e {
+                    Ok(v) => v,
+                    Err(fault) => {
+                        machine.pc = pc;
+                        return Err(SimError::Mem { pc, fault });
+                    }
+                }
+            };
+        }
+
+        match op.kind {
+            Kind::Addi => {
+                let v = machine.regs[op.b as usize].wrapping_add(op.imm);
+                Machine::write_reg(&mut machine.regs, op.a, v);
+            }
+            Kind::Slti => {
+                let v = (machine.regs[op.b as usize] < op.imm) as i32;
+                Machine::write_reg(&mut machine.regs, op.a, v);
+            }
+            Kind::Sltiu => {
+                let v = ((machine.regs[op.b as usize] as u32)
+                    < (op.imm as u32)) as i32;
+                Machine::write_reg(&mut machine.regs, op.a, v);
+            }
+            Kind::Xori => {
+                let v = machine.regs[op.b as usize] ^ op.imm;
+                Machine::write_reg(&mut machine.regs, op.a, v);
+            }
+            Kind::Ori => {
+                let v = machine.regs[op.b as usize] | op.imm;
+                Machine::write_reg(&mut machine.regs, op.a, v);
+            }
+            Kind::Andi => {
+                let v = machine.regs[op.b as usize] & op.imm;
+                Machine::write_reg(&mut machine.regs, op.a, v);
+            }
+            Kind::Slli => {
+                let v = ((machine.regs[op.b as usize] as u32) << (op.imm & 31))
+                    as i32;
+                Machine::write_reg(&mut machine.regs, op.a, v);
+            }
+            Kind::Srli => {
+                let v = ((machine.regs[op.b as usize] as u32) >> (op.imm & 31))
+                    as i32;
+                Machine::write_reg(&mut machine.regs, op.a, v);
+            }
+            Kind::Srai => {
+                let v = machine.regs[op.b as usize] >> (op.imm & 31);
+                Machine::write_reg(&mut machine.regs, op.a, v);
+            }
+            Kind::Add => {
+                let v = machine.regs[op.b as usize]
+                    .wrapping_add(machine.regs[op.aux as usize]);
+                Machine::write_reg(&mut machine.regs, op.a, v);
+            }
+            Kind::Sub => {
+                let v = machine.regs[op.b as usize]
+                    .wrapping_sub(machine.regs[op.aux as usize]);
+                Machine::write_reg(&mut machine.regs, op.a, v);
+            }
+            Kind::Sll => {
+                let a = machine.regs[op.b as usize];
+                let b = machine.regs[op.aux as usize];
+                Machine::write_reg(&mut machine.regs, op.a, ((a as u32) << (b & 31)) as i32);
+            }
+            Kind::Slt => {
+                let v = (machine.regs[op.b as usize]
+                    < machine.regs[op.aux as usize]) as i32;
+                Machine::write_reg(&mut machine.regs, op.a, v);
+            }
+            Kind::Sltu => {
+                let v = ((machine.regs[op.b as usize] as u32)
+                    < (machine.regs[op.aux as usize] as u32))
+                    as i32;
+                Machine::write_reg(&mut machine.regs, op.a, v);
+            }
+            Kind::Xor => {
+                let v =
+                    machine.regs[op.b as usize] ^ machine.regs[op.aux as usize];
+                Machine::write_reg(&mut machine.regs, op.a, v);
+            }
+            Kind::Srl => {
+                let a = machine.regs[op.b as usize];
+                let b = machine.regs[op.aux as usize];
+                Machine::write_reg(&mut machine.regs, op.a, ((a as u32) >> (b & 31)) as i32);
+            }
+            Kind::Sra => {
+                let a = machine.regs[op.b as usize];
+                let b = machine.regs[op.aux as usize];
+                Machine::write_reg(&mut machine.regs, op.a, a >> (b & 31));
+            }
+            Kind::Or => {
+                let v =
+                    machine.regs[op.b as usize] | machine.regs[op.aux as usize];
+                Machine::write_reg(&mut machine.regs, op.a, v);
+            }
+            Kind::And => {
+                let v =
+                    machine.regs[op.b as usize] & machine.regs[op.aux as usize];
+                Machine::write_reg(&mut machine.regs, op.a, v);
+            }
+            Kind::Mul => {
+                let v = machine.regs[op.b as usize]
+                    .wrapping_mul(machine.regs[op.aux as usize]);
+                Machine::write_reg(&mut machine.regs, op.a, v);
+            }
+            Kind::Mulh => {
+                let a = machine.regs[op.b as usize];
+                let b = machine.regs[op.aux as usize];
+                let v = (((a as i64) * (b as i64)) >> 32) as i32;
+                Machine::write_reg(&mut machine.regs, op.a, v);
+            }
+            Kind::Mulhsu => {
+                let a = machine.regs[op.b as usize];
+                let b = machine.regs[op.aux as usize];
+                let v = (((a as i64) * (b as u32 as i64)) >> 32) as i32;
+                Machine::write_reg(&mut machine.regs, op.a, v);
+            }
+            Kind::Mulhu => {
+                let a = machine.regs[op.b as usize];
+                let b = machine.regs[op.aux as usize];
+                let v = (((a as u32 as u64) * (b as u32 as u64)) >> 32) as i32;
+                Machine::write_reg(&mut machine.regs, op.a, v);
+            }
+            Kind::Div => {
+                let a = machine.regs[op.b as usize];
+                let b = machine.regs[op.aux as usize];
+                let v = if b == 0 {
+                    -1
+                } else if a == i32::MIN && b == -1 {
+                    i32::MIN
+                } else {
+                    a.wrapping_div(b)
+                };
+                Machine::write_reg(&mut machine.regs, op.a, v);
+            }
+            Kind::Divu => {
+                let a = machine.regs[op.b as usize];
+                let b = machine.regs[op.aux as usize];
+                let v =
+                    if b == 0 { -1 } else { ((a as u32) / (b as u32)) as i32 };
+                Machine::write_reg(&mut machine.regs, op.a, v);
+            }
+            Kind::Rem => {
+                let a = machine.regs[op.b as usize];
+                let b = machine.regs[op.aux as usize];
+                let v = if b == 0 {
+                    a
+                } else if a == i32::MIN && b == -1 {
+                    0
+                } else {
+                    a.wrapping_rem(b)
+                };
+                Machine::write_reg(&mut machine.regs, op.a, v);
+            }
+            Kind::Remu => {
+                let a = machine.regs[op.b as usize];
+                let b = machine.regs[op.aux as usize];
+                let v =
+                    if b == 0 { a } else { ((a as u32) % (b as u32)) as i32 };
+                Machine::write_reg(&mut machine.regs, op.a, v);
+            }
+            Kind::Lb => {
+                let addr = (machine.regs[op.b as usize] as u32)
+                    .wrapping_add(op.imm as u32);
+                let raw = mem_try!(machine.mem.load_u8(addr));
+                Machine::write_reg(&mut machine.regs, op.a, raw as i8 as i32);
+            }
+            Kind::Lbu => {
+                let addr = (machine.regs[op.b as usize] as u32)
+                    .wrapping_add(op.imm as u32);
+                let raw = mem_try!(machine.mem.load_u8(addr));
+                Machine::write_reg(&mut machine.regs, op.a, i32::from(raw));
+            }
+            Kind::Lh => {
+                let addr = (machine.regs[op.b as usize] as u32)
+                    .wrapping_add(op.imm as u32);
+                let raw = mem_try!(machine.mem.load_u16(addr));
+                Machine::write_reg(&mut machine.regs, op.a, raw as i16 as i32);
+            }
+            Kind::Lhu => {
+                let addr = (machine.regs[op.b as usize] as u32)
+                    .wrapping_add(op.imm as u32);
+                let raw = mem_try!(machine.mem.load_u16(addr));
+                Machine::write_reg(&mut machine.regs, op.a, i32::from(raw));
+            }
+            Kind::Lw => {
+                let addr = (machine.regs[op.b as usize] as u32)
+                    .wrapping_add(op.imm as u32);
+                let raw = mem_try!(machine.mem.load_u32(addr));
+                Machine::write_reg(&mut machine.regs, op.a, raw as i32);
+            }
+            Kind::Sb => {
+                let addr = (machine.regs[op.b as usize] as u32)
+                    .wrapping_add(op.imm as u32);
+                let v = machine.regs[op.a as usize];
+                mem_try!(machine.mem.store_u8(addr, v as u8));
+            }
+            Kind::Sh => {
+                let addr = (machine.regs[op.b as usize] as u32)
+                    .wrapping_add(op.imm as u32);
+                let v = machine.regs[op.a as usize];
+                mem_try!(machine.mem.store_u16(addr, v as u16));
+            }
+            Kind::Sw => {
+                let addr = (machine.regs[op.b as usize] as u32)
+                    .wrapping_add(op.imm as u32);
+                let v = machine.regs[op.a as usize];
+                mem_try!(machine.mem.store_u32(addr, v as u32));
+            }
+            Kind::Beq => {
+                if machine.regs[op.a as usize] == machine.regs[op.b as usize] {
+                    next = op.aux as usize;
+                    cost = op.imm as u32;
+                }
+            }
+            Kind::Bne => {
+                if machine.regs[op.a as usize] != machine.regs[op.b as usize] {
+                    next = op.aux as usize;
+                    cost = op.imm as u32;
+                }
+            }
+            Kind::Blt => {
+                if machine.regs[op.a as usize] < machine.regs[op.b as usize] {
+                    next = op.aux as usize;
+                    cost = op.imm as u32;
+                }
+            }
+            Kind::Bge => {
+                if machine.regs[op.a as usize] >= machine.regs[op.b as usize] {
+                    next = op.aux as usize;
+                    cost = op.imm as u32;
+                }
+            }
+            Kind::Bltu => {
+                if (machine.regs[op.a as usize] as u32)
+                    < (machine.regs[op.b as usize] as u32)
+                {
+                    next = op.aux as usize;
+                    cost = op.imm as u32;
+                }
+            }
+            Kind::Bgeu => {
+                if (machine.regs[op.a as usize] as u32)
+                    >= (machine.regs[op.b as usize] as u32)
+                {
+                    next = op.aux as usize;
+                    cost = op.imm as u32;
+                }
+            }
+            Kind::Jal => {
+                Machine::write_reg(&mut machine.regs, op.a, (pc + 4) as i32);
+                next = op.aux as usize;
+            }
+            Kind::Jalr => {
+                // Target from rs1 *before* the link write (rd may alias).
+                let target = ((machine.regs[op.b as usize] as u32)
+                    .wrapping_add(op.imm as u32))
+                    & !1;
+                Machine::write_reg(&mut machine.regs, op.a, (pc + 4) as i32);
+                if target % 4 == 0 && target < plen {
+                    next = (target / 4) as usize;
+                } else {
+                    dyn_pc = target;
+                    next = lp.dyn_trap;
+                }
+            }
+            Kind::Lui => {
+                Machine::write_reg(&mut machine.regs, op.a, op.imm);
+            }
+            Kind::Auipc => {
+                Machine::write_reg(&mut machine.regs, op.a, (pc as i32).wrapping_add(op.imm));
+            }
+            Kind::Fence => {}
+            Kind::Ecall => {
+                if H::OBSERVES {
+                    hook.retire(pc, &instrs_for_hook[idx], u64::from(cost));
+                }
+                machine.pc = pc;
+                return Ok(RunStats {
+                    instrs: retired + 1,
+                    cycles: cycles + u64::from(cost),
+                });
+            }
+            Kind::Ebreak => {
+                machine.pc = pc;
+                return Err(SimError::Break { pc });
+            }
+            Kind::Mac => {
+                let v = machine.regs[MAC_RD as usize].wrapping_add(
+                    machine.regs[MAC_RS1 as usize]
+                        .wrapping_mul(machine.regs[MAC_RS2 as usize]),
+                );
+                Machine::write_reg(&mut machine.regs, MAC_RD, v);
+            }
+            Kind::Add2i => {
+                let v1 = machine.regs[op.a as usize].wrapping_add(op.imm);
+                let v2 =
+                    machine.regs[op.b as usize].wrapping_add(op.aux as i32);
+                Machine::write_reg(&mut machine.regs, op.a, v1);
+                Machine::write_reg(&mut machine.regs, op.b, v2);
+            }
+            Kind::FusedMac => {
+                let m = machine.regs[MAC_RD as usize].wrapping_add(
+                    machine.regs[MAC_RS1 as usize]
+                        .wrapping_mul(machine.regs[MAC_RS2 as usize]),
+                );
+                Machine::write_reg(&mut machine.regs, MAC_RD, m);
+                let v1 = machine.regs[op.a as usize].wrapping_add(op.imm);
+                let v2 =
+                    machine.regs[op.b as usize].wrapping_add(op.aux as i32);
+                Machine::write_reg(&mut machine.regs, op.a, v1);
+                Machine::write_reg(&mut machine.regs, op.b, v2);
+            }
+            Kind::Dlp => {
+                machine.zc = machine.regs[op.b as usize] as u32;
+                machine.zs = pc + 4;
+                machine.ze = op.aux;
+            }
+            Kind::Dlpi => {
+                machine.zc = op.imm as u32;
+                machine.zs = pc + 4;
+                machine.ze = op.aux;
+            }
+            Kind::Zlp => {
+                let count = machine.regs[op.b as usize] as u32;
+                machine.zs = pc + 4;
+                machine.ze = op.aux;
+                if count == 0 {
+                    // zero-iteration-safe: skip the body entirely
+                    let ze = op.aux;
+                    machine.zc = 0;
+                    machine.ze = 0;
+                    if ze % 4 == 0 && ze < plen {
+                        next = (ze / 4) as usize;
+                    } else {
+                        dyn_pc = ze;
+                        next = lp.dyn_trap;
+                    }
+                } else {
+                    machine.zc = count;
+                }
+            }
+            Kind::SetZc => {
+                machine.zc = machine.regs[op.b as usize] as u32;
+            }
+            Kind::SetZs => {
+                machine.zs = machine.regs[op.b as usize] as u32;
+            }
+            Kind::SetZe => {
+                machine.ze = machine.regs[op.b as usize] as u32;
+            }
+            Kind::Trap => {
+                let bad = op.imm as u32;
+                machine.pc = bad;
+                return Err(SimError::PcOutOfRange { pc: bad });
+            }
+            Kind::TrapDyn => {
+                machine.pc = dyn_pc;
+                return Err(SimError::PcOutOfRange { pc: dyn_pc });
+            }
+        }
+
+        // Zero-overhead loop-back, only on ops whose successor can be a
+        // loop end: when execution reaches ZE, hardware redirects to ZS
+        // and decrements ZC — no cycles, no retire.
+        if op.zmark != 0 && machine.ze != 0 {
+            let next_byte = byte_of(ops, next, dyn_pc);
+            if next_byte == machine.ze {
+                if machine.zc > 1 {
+                    machine.zc -= 1;
+                    let zs = machine.zs;
+                    if zs % 4 == 0 && zs < plen {
+                        next = (zs / 4) as usize;
+                    } else {
+                        dyn_pc = zs;
+                        next = lp.dyn_trap;
+                    }
+                } else {
+                    machine.zc = 0;
+                    machine.ze = 0; // disarm
+                }
+            }
+        }
+
+        if H::OBSERVES {
+            hook.retire(pc, &instrs_for_hook[idx], u64::from(cost));
+        }
+        retired += 1;
+        cycles += u64::from(cost);
+        idx = next;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Instr;
+    use crate::sim::{V0, V4};
+
+    fn lowered(
+        variant: crate::sim::Variant,
+        instrs: Vec<Instr>,
+    ) -> LoweredProgram {
+        let p = Program::from_instrs(variant, instrs).unwrap();
+        LoweredProgram::lower(&p, &CycleModel::default()).unwrap()
+    }
+
+    #[test]
+    fn straight_line_lowers_without_marks() {
+        let lp = lowered(V0, vec![
+            Instr::OpImm { op: AluImmOp::Addi, rd: 1, rs1: 0, imm: 7 },
+            Instr::OpImm { op: AluImmOp::Addi, rd: 2, rs1: 1, imm: 1 },
+            Instr::Ecall,
+        ]);
+        // 3 real ops + fall-off trap + dynamic trap
+        assert_eq!(lp.n_ops(), 5);
+        assert_eq!(lp.n_marked(), 0);
+        assert_eq!(lp.ops[0].kind, Kind::Addi);
+        assert_eq!(lp.ops[3].kind, Kind::Trap);
+        assert_eq!(lp.ops[4].kind, Kind::TrapDyn);
+    }
+
+    #[test]
+    fn costs_are_baked_per_class() {
+        let cm = CycleModel::default();
+        let lp = lowered(V0, vec![
+            Instr::Op { op: AluOp::Mul, rd: 1, rs1: 2, rs2: 3 },
+            Instr::Op { op: AluOp::Div, rd: 1, rs1: 2, rs2: 3 },
+            Instr::Load { op: LoadOp::Lw, rd: 1, rs1: 0, offset: 0 },
+            Instr::Ecall,
+        ]);
+        assert_eq!(u64::from(lp.ops[0].cost), cm.mul);
+        assert_eq!(u64::from(lp.ops[1].cost), cm.div);
+        assert_eq!(u64::from(lp.ops[2].cost), cm.load);
+    }
+
+    #[test]
+    fn branch_targets_resolve_to_indices_or_traps() {
+        let lp = lowered(V0, vec![
+            Instr::OpImm { op: AluImmOp::Addi, rd: 1, rs1: 1, imm: 1 },
+            // taken target = instruction 0
+            Instr::Branch { op: BranchOp::Blt, rs1: 1, rs2: 2, offset: -4 },
+            // taken target = way out of range -> trap slot (4092 is the
+            // largest encodable b-type offset)
+            Instr::Branch { op: BranchOp::Beq, rs1: 0, rs2: 0, offset: 4092 },
+            Instr::Ecall,
+        ]);
+        assert_eq!(lp.ops[1].aux, 0);
+        let trap_idx = lp.ops[2].aux as usize;
+        assert!(trap_idx > lp.dyn_trap);
+        assert_eq!(lp.ops[trap_idx].kind, Kind::Trap);
+        assert_eq!(lp.ops[trap_idx].imm as u32, 2 * 4 + 4092);
+    }
+
+    #[test]
+    fn zol_marks_only_possible_loop_ends() {
+        let lp = lowered(V4, vec![
+            Instr::Dlpi { count: 3, body_len: 2 },
+            Instr::OpImm { op: AluImmOp::Addi, rd: 1, rs1: 1, imm: 1 },
+            Instr::OpImm { op: AluImmOp::Addi, rd: 2, rs1: 2, imm: 1 },
+            Instr::Ecall,
+        ]);
+        // ZE = 12: only the op at index 2 (fallthrough 12) is marked.
+        let marks: Vec<u8> =
+            lp.ops.iter().take(4).map(|o| o.zmark).collect();
+        assert_eq!(marks, vec![0, 0, 1, 0]);
+    }
+
+    #[test]
+    fn setze_marks_every_op() {
+        let lp = lowered(V4, vec![
+            Instr::SetZe { rs1: 1 },
+            Instr::OpImm { op: AluImmOp::Addi, rd: 1, rs1: 1, imm: 1 },
+            Instr::Ecall,
+        ]);
+        assert!(lp.all_marked);
+        assert!(lp.ops.iter().take(2).all(|o| o.zmark == 1));
+        assert!(lp.covers_entry(0x1234));
+    }
+
+    #[test]
+    fn unbakeable_cycle_model_falls_back() {
+        let p = Program::from_instrs(V0, vec![Instr::Ecall]).unwrap();
+        let cm = CycleModel {
+            alu: u64::from(u32::MAX) + 1,
+            ..CycleModel::default()
+        };
+        assert!(LoweredProgram::lower(&p, &cm).is_none());
+        assert!(LoweredProgram::lower(&p, &CycleModel::default()).is_some());
+    }
+}

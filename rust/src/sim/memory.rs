@@ -32,11 +32,13 @@ impl Memory {
     #[inline]
     fn check(&self, addr: u32, size: u32, write: bool) -> Result<usize, MemFault> {
         let a = addr as usize;
-        // natural alignment required (BRAM interface, single-cycle reads)
-        if addr % size != 0 || a + size as usize > self.bytes.len() {
-            return Err(MemFault { addr, size, write });
+        // Natural alignment required (BRAM interface, single-cycle reads);
+        // the end-of-access bound uses checked_add so `addr + size` cannot
+        // wrap on 32-bit hosts and alias low memory.
+        match a.checked_add(size as usize) {
+            Some(end) if addr % size == 0 && end <= self.bytes.len() => Ok(a),
+            _ => Err(MemFault { addr, size, write }),
         }
-        Ok(a)
     }
 
     #[inline]
@@ -80,23 +82,50 @@ impl Memory {
         Ok(())
     }
 
-    /// Bulk write (program loading / input injection).
+    /// Bulk write (program loading / input injection).  The bounds math is
+    /// overflow-safe: `addr + len` cannot wrap on 32-bit hosts.
     pub fn write_block(&mut self, addr: u32, data: &[u8]) -> Result<(), MemFault> {
         let a = addr as usize;
-        if a + data.len() > self.bytes.len() {
-            return Err(MemFault { addr, size: data.len() as u32, write: true });
+        match a.checked_add(data.len()) {
+            Some(end) if end <= self.bytes.len() => {
+                self.bytes[a..end].copy_from_slice(data);
+                Ok(())
+            }
+            _ => Err(MemFault { addr, size: data.len() as u32, write: true }),
         }
-        self.bytes[a..a + data.len()].copy_from_slice(data);
-        Ok(())
     }
 
-    /// Bulk read (output extraction).
+    /// Bulk read (output extraction), overflow-safe like [`Self::write_block`].
     pub fn read_block(&self, addr: u32, len: usize) -> Result<&[u8], MemFault> {
         let a = addr as usize;
-        if a + len > self.bytes.len() {
-            return Err(MemFault { addr, size: len as u32, write: false });
+        match a.checked_add(len) {
+            Some(end) if end <= self.bytes.len() => Ok(&self.bytes[a..end]),
+            _ => Err(MemFault { addr, size: len as u32, write: false }),
         }
-        Ok(&self.bytes[a..a + len])
+    }
+
+    /// Reset to `size` zeroed bytes, reusing the existing allocation — the
+    /// pooled engine's per-run re-init (DESIGN.md §3).
+    pub fn reset(&mut self, size: usize) {
+        self.bytes.clear();
+        self.bytes.resize(size, 0);
+    }
+
+    /// Reset to `size` bytes initialized from `image` (zero-padded tail),
+    /// reusing the allocation.  One `copy_from_slice` of a prebuilt base
+    /// image replaces zero-fill + per-block writes on the per-run path.
+    pub fn reset_from(&mut self, image: &[u8], size: usize) -> Result<(), MemFault> {
+        if image.len() > size {
+            return Err(MemFault {
+                addr: 0,
+                size: image.len() as u32,
+                write: true,
+            });
+        }
+        self.bytes.clear();
+        self.bytes.extend_from_slice(image);
+        self.bytes.resize(size, 0);
+        Ok(())
     }
 
     /// Read `n` little-endian i32 words.
@@ -137,6 +166,24 @@ mod tests {
         assert!(m.load_u32(5).is_err()); // misaligned
         assert!(m.store_u16(7, 1).is_err());
         assert!(m.write_block(4, &[0; 8]).is_err());
+        // near-wraparound addresses must fault, not alias low memory
+        assert!(m.load_u32(u32::MAX - 3).is_err());
+        assert!(m.store_u8(u32::MAX, 1).is_err());
+        assert!(m.write_block(u32::MAX - 1, &[0; 4]).is_err());
+        assert!(m.read_block(u32::MAX - 1, 4).is_err());
+    }
+
+    #[test]
+    fn reset_reuses_and_reinitializes() {
+        let mut m = Memory::new(16);
+        m.store_u32(0, 0xdead_beef).unwrap();
+        m.reset(8);
+        assert_eq!(m.len(), 8);
+        assert_eq!(m.read_block(0, 8).unwrap(), &[0u8; 8]);
+        m.reset_from(&[1, 2, 3], 6).unwrap();
+        assert_eq!(m.read_block(0, 6).unwrap(), &[1, 2, 3, 0, 0, 0]);
+        // image larger than the requested size is a fault
+        assert!(m.reset_from(&[0; 9], 8).is_err());
     }
 
     #[test]

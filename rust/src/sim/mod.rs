@@ -10,18 +10,23 @@
 
 //! The module is split along the program/state seam (DESIGN.md §3):
 //! [`Program`] is the immutable decode-once image shared via `Arc`,
-//! [`Machine`] the mutable per-run state, and [`engine`] the batch layer
-//! that runs N inputs × M variants across worker threads.
+//! [`Machine`] the mutable per-run state, [`lowered`] the baked micro-op
+//! form the hot loop actually executes (DESIGN.md §11), and [`engine`] the
+//! batch layer that runs N inputs × M variants across pooled worker
+//! threads.
 
 pub mod cpu;
 pub mod engine;
 pub mod hooks;
+pub mod lowered;
 pub mod memory;
 pub mod program;
 
 pub use cpu::{Machine, RunStats, Sim, SimError};
-pub use engine::{run_batch, run_job, Job, JobOutput};
+pub use engine::{run_batch, run_job, run_job_on, run_job_pooled, Job,
+                 JobOutput};
 pub use hooks::{NopHook, RetireHook, TraceHook};
+pub use lowered::LoweredProgram;
 pub use memory::Memory;
 pub use program::Program;
 
@@ -83,7 +88,10 @@ impl Variant {
 /// the trv32p3 class (hence `mac` halving the mul+add pair, §II.C.1); taken
 /// control flow refills the front of the 3-stage pipe (+1 bubble); the
 /// iterative divider is multi-cycle but DNN codegen never emits it.
-#[derive(Clone, Copy, Debug)]
+///
+/// Equality matters operationally: [`Program::lowered`] memoizes one baked
+/// micro-op image per distinct cycle model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct CycleModel {
     pub alu: u64,
     pub mul: u64,

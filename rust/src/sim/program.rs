@@ -8,10 +8,11 @@
 //! stream.  Mutable architectural state (registers, pc, ZOL registers, data
 //! memory) lives exclusively in [`super::Machine`].
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use super::cpu::SimError;
-use super::Variant;
+use super::lowered::LoweredProgram;
+use super::{CycleModel, Variant};
 use crate::isa::decode::decode;
 use crate::isa::encode::encode;
 use crate::isa::Instr;
@@ -26,6 +27,10 @@ pub struct Program {
     variant: Variant,
     instrs: Vec<Instr>,
     words: Vec<u32>,
+    /// Memoized lowered forms, one per cycle model seen (DESIGN.md §11) —
+    /// sweeps re-running one program on many [`super::Machine`]s lower it
+    /// exactly once.
+    lowered: Mutex<Vec<(CycleModel, Arc<LoweredProgram>)>>,
 }
 
 impl Program {
@@ -47,7 +52,12 @@ impl Program {
             }
             instrs.push(instr);
         }
-        Ok(Program { variant, instrs, words: words.to_vec() })
+        Ok(Program {
+            variant,
+            instrs,
+            words: words.to_vec(),
+            lowered: Mutex::new(Vec::new()),
+        })
     }
 
     /// Build from already-decoded instructions (the compiler's in-process
@@ -66,7 +76,12 @@ impl Program {
             }
         }
         let words = instrs.iter().map(encode).collect();
-        Ok(Program { variant, instrs, words })
+        Ok(Program {
+            variant,
+            instrs,
+            words,
+            lowered: Mutex::new(Vec::new()),
+        })
     }
 
     /// Convenience: decode + wrap in the `Arc` the machines share.
@@ -104,6 +119,35 @@ impl Program {
     pub fn pm_bytes(&self) -> u32 {
         (self.words.len() * 4) as u32
     }
+
+    /// Lower to the baked micro-op form for `cm` (DESIGN.md §11).
+    ///
+    /// `None` when the combination cannot be lowered faithfully (cycle
+    /// costs beyond `u32`, ZOL end addresses beyond `u32`); callers fall
+    /// back to [`super::Machine::run_reference`].
+    pub fn lower(&self, cm: &CycleModel) -> Option<LoweredProgram> {
+        LoweredProgram::lower(self, cm)
+    }
+
+    /// Memoizing [`Self::lower`]: the lowered image for `cm`, shared via
+    /// `Arc` across every machine/run executing this program.
+    pub fn lowered(&self, cm: &CycleModel) -> Option<Arc<LoweredProgram>> {
+        {
+            let cache = self.lowered.lock().unwrap();
+            if let Some((_, lp)) = cache.iter().find(|(c, _)| c == cm) {
+                return Some(Arc::clone(lp));
+            }
+        }
+        // Lower outside the lock; a race builds the image twice but never
+        // blocks other runs behind the (one-time, O(n)) lowering.
+        let lp = Arc::new(self.lower(cm)?);
+        let mut cache = self.lowered.lock().unwrap();
+        if let Some((_, existing)) = cache.iter().find(|(c, _)| c == cm) {
+            return Some(Arc::clone(existing));
+        }
+        cache.push((*cm, Arc::clone(&lp)));
+        Some(lp)
+    }
 }
 
 #[cfg(test)]
@@ -132,6 +176,18 @@ mod tests {
         let err = Program::from_instrs(V0, vec![Instr::Mac]);
         assert!(matches!(err, Err(SimError::Unsupported { .. })));
         assert!(Program::from_instrs(V4, vec![Instr::Mac]).is_ok());
+    }
+
+    #[test]
+    fn lowered_is_memoized_per_cycle_model() {
+        let p = Program::from_instrs(V0, vec![Instr::Ecall]).unwrap();
+        let cm = CycleModel::default();
+        let a = p.lowered(&cm).unwrap();
+        let b = p.lowered(&cm).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "same cycle model must share the image");
+        let slow = CycleModel { alu: 3, ..cm };
+        let c = p.lowered(&slow).unwrap();
+        assert!(!Arc::ptr_eq(&a, &c), "distinct cycle models lower separately");
     }
 
     #[test]

@@ -12,9 +12,11 @@ use std::sync::Arc;
 
 use marvel::compiler::{compile, execute_compiled, make_job, pack_input,
                        CompileCache};
-use marvel::models::synth::{lenet_shaped, residual_net, Builder};
-use marvel::sim::engine::{run_batch, Job};
-use marvel::sim::{NopHook, VARIANTS};
+use marvel::models::synth::{lenet_shaped, residual_net, tiny_conv_net,
+                            Builder};
+use marvel::sim::engine::{run_batch, run_job, run_job_on, run_job_pooled,
+                          Job};
+use marvel::sim::{Machine, NopHook, VARIANTS};
 use marvel::util::rng::Rng;
 
 #[test]
@@ -82,6 +84,51 @@ fn batch_results_identical_across_worker_counts() {
             );
         }
     }
+}
+
+/// Pool-reuse contract (DESIGN.md §3): a machine recycled through the
+/// pooled path — across different models, variants and DM sizes — produces
+/// the same outputs *and* ends in the same architectural state as a fresh
+/// machine.
+#[test]
+fn recycled_machine_is_indistinguishable_from_fresh() {
+    let spec_a = tiny_conv_net(41);
+    let spec_b = lenet_shaped(42);
+    let ca = compile(&spec_a, marvel::sim::V0).unwrap();
+    let cb = compile(&spec_b, marvel::sim::V4).unwrap();
+    let mut rng = Rng::new(7);
+    let input_a = Builder::random_input(&spec_a, &mut rng);
+    let input_b = Builder::random_input(&spec_b, &mut rng);
+    let packed_a = pack_input(&input_a).unwrap();
+    let packed_b = pack_input(&input_b).unwrap();
+    let job_a = make_job(&ca, &spec_a, &packed_a, 1 << 33);
+    let job_b = make_job(&cb, &spec_b, &packed_b, 1 << 33);
+
+    // run A then B through one pooled machine; B must match the
+    // fresh-machine result exactly
+    let fresh_out = run_job(&job_b).unwrap();
+    let mut pool: Option<Machine> = None;
+    run_job_pooled(&mut pool, &job_a).unwrap();
+    let pooled_out = run_job_pooled(&mut pool, &job_b).unwrap();
+    assert_eq!(pooled_out, fresh_out);
+
+    // ... and the recycled machine's end state matches a fresh machine's
+    let mut fresh = Machine::new(Arc::clone(&cb.program), 0);
+    let fresh_again = run_job_on(&mut fresh, &job_b).unwrap();
+    assert_eq!(fresh_again, fresh_out);
+    let recycled = pool.as_ref().unwrap();
+    assert_eq!(recycled.regs, fresh.regs);
+    assert_eq!(recycled.pc, fresh.pc);
+    assert_eq!(
+        (recycled.zc, recycled.zs, recycled.ze),
+        (fresh.zc, fresh.zs, fresh.ze)
+    );
+    assert_eq!(recycled.mem.len(), fresh.mem.len());
+    assert_eq!(
+        recycled.mem.read_block(0, recycled.mem.len()).unwrap(),
+        fresh.mem.read_block(0, fresh.mem.len()).unwrap()
+    );
+    assert!(Arc::ptr_eq(recycled.program(), &cb.program));
 }
 
 #[test]

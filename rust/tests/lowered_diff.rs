@@ -1,0 +1,253 @@
+//! Differential tests: the lowered micro-op interpreter (`Machine::run`)
+//! against the reference decode-enum interpreter
+//! (`Machine::run_reference`), which survives precisely to be this oracle
+//! (DESIGN.md §11).
+//!
+//! The contract is *bit-identical observable behaviour*: same
+//! `Result<RunStats, SimError>` (including the exact fault and pc), same
+//! registers / pc / ZOL registers / data memory after the run, and the
+//! same retire-hook stream (pc, instruction, cycle cost per retirement).
+
+use std::sync::Arc;
+
+use marvel::compiler::{compile, execute_compiled};
+use marvel::isa::random_instr;
+use marvel::models::synth::{lenet_shaped, Builder};
+use marvel::sim::{CycleModel, Machine, NopHook, Program, TraceHook, Variant,
+                  RunStats, SimError, V4, VARIANTS};
+use marvel::util::proptest::check;
+use marvel::util::rng::Rng;
+
+const DM_SIZE: usize = 4096;
+const MAX_INSTRS: u64 = 3_000;
+
+/// A random program of supported instructions for `variant`.
+fn random_program(rng: &mut Rng, variant: Variant) -> Arc<Program> {
+    let len = rng.range_usize(1, 48);
+    let mut instrs = Vec::with_capacity(len);
+    while instrs.len() < len {
+        let i = random_instr(rng);
+        if variant.supports(&i) {
+            instrs.push(i);
+        }
+    }
+    Arc::new(Program::from_instrs(variant, instrs).unwrap())
+}
+
+/// Seed both machines with identical, partly-memory-friendly registers so
+/// loads/stores sometimes land in bounds.
+fn seed_regs(rng: &mut Rng) -> [i32; 32] {
+    let mut regs = [0i32; 32];
+    for r in regs.iter_mut().skip(1) {
+        *r = if rng.bool() {
+            rng.int_in(0, (DM_SIZE as i32 / 4) - 1) * 4
+        } else {
+            rng.int_in(i32::MIN / 2, i32::MAX / 2)
+        };
+    }
+    regs
+}
+
+/// Everything one run exposes: the result, the final machine state, and
+/// the retire trace.
+type RunOutcome = (Result<RunStats, SimError>, Machine, Vec<String>);
+
+fn run_both(
+    program: &Arc<Program>,
+    regs: [i32; 32],
+    max_instrs: u64,
+) -> (RunOutcome, RunOutcome) {
+    let mut run_one = |reference: bool| {
+        let mut m = Machine::new(Arc::clone(program), DM_SIZE);
+        m.regs = regs;
+        let mut trace = TraceHook::new(256);
+        let r = if reference {
+            m.run_reference(max_instrs, &mut trace)
+        } else {
+            m.run(max_instrs, &mut trace)
+        };
+        (r, m, trace.lines)
+    };
+    (run_one(true), run_one(false))
+}
+
+fn diff(
+    label: &str,
+    (ref_r, ref_m, ref_t): RunOutcome,
+    (low_r, low_m, low_t): RunOutcome,
+) -> Result<(), String> {
+    let (ref_s, low_s) = (format!("{ref_r:?}"), format!("{low_r:?}"));
+    if ref_s != low_s {
+        return Err(format!("{label}: result mismatch\n ref: {ref_s}\n low: {low_s}"));
+    }
+    if ref_m.regs != low_m.regs {
+        return Err(format!(
+            "{label}: register mismatch\n ref: {:?}\n low: {:?}",
+            ref_m.regs, low_m.regs
+        ));
+    }
+    if ref_m.pc != low_m.pc {
+        return Err(format!(
+            "{label}: pc mismatch ref={:#x} low={:#x}",
+            ref_m.pc, low_m.pc
+        ));
+    }
+    if (ref_m.zc, ref_m.zs, ref_m.ze) != (low_m.zc, low_m.zs, low_m.ze) {
+        return Err(format!(
+            "{label}: zol mismatch ref=({},{},{}) low=({},{},{})",
+            ref_m.zc, ref_m.zs, ref_m.ze, low_m.zc, low_m.zs, low_m.ze
+        ));
+    }
+    let ref_mem = ref_m.mem.read_block(0, ref_m.mem.len()).unwrap();
+    let low_mem = low_m.mem.read_block(0, low_m.mem.len()).unwrap();
+    if ref_mem != low_mem {
+        return Err(format!("{label}: data memory diverged"));
+    }
+    if ref_t != low_t {
+        return Err(format!(
+            "{label}: retire trace mismatch\n ref: {:?}\n low: {:?}",
+            ref_t, low_t
+        ));
+    }
+    Ok(())
+}
+
+/// The central property: for random programs on every variant, the lowered
+/// interpreter is indistinguishable from the reference interpreter.
+#[test]
+fn prop_lowered_matches_reference_on_random_programs() {
+    check("lowered ≡ reference (random programs)", 1200, |rng| {
+        let variant = *rng.choice(&VARIANTS);
+        let program = random_program(rng, variant);
+        if program.lowered(&CycleModel::default()).is_none() {
+            return Err(format!(
+                "{}: random program unexpectedly not lowerable",
+                variant.name
+            ));
+        }
+        let regs = seed_regs(rng);
+        let (r, l) = run_both(&program, regs, MAX_INSTRS);
+        diff(variant.name, r, l)
+    });
+}
+
+/// Watchdog budgets, including 0, fault identically on both paths.
+#[test]
+fn prop_lowered_matches_reference_on_tiny_budgets() {
+    check("lowered ≡ reference (tiny watchdog)", 300, |rng| {
+        let variant = *rng.choice(&VARIANTS);
+        let program = random_program(rng, variant);
+        let regs = seed_regs(rng);
+        let budget = rng.range_usize(0, 12) as u64;
+        let (r, l) = run_both(&program, regs, budget);
+        diff(variant.name, r, l)
+    });
+}
+
+/// Deterministic edge cases the random generator rarely hits.
+#[test]
+fn lowered_matches_reference_on_edge_programs() {
+    use marvel::isa::{AluImmOp, BranchOp, Instr};
+
+    let cases: Vec<(&str, Variant, Vec<Instr>)> = vec![
+        ("ebreak", V4, vec![Instr::Ebreak]),
+        ("fall off the end", V4, vec![Instr::OpImm {
+            op: AluImmOp::Addi, rd: 1, rs1: 0, imm: 1,
+        }]),
+        ("self jump watchdog", V4, vec![Instr::Jal { rd: 0, offset: 0 }]),
+        ("branch to misaligned", V4, vec![
+            Instr::Branch { op: BranchOp::Beq, rs1: 0, rs2: 0, offset: 6 },
+            Instr::Ecall,
+        ]),
+        ("jalr to oblivion", V4, vec![
+            Instr::OpImm { op: AluImmOp::Addi, rd: 1, rs1: 0, imm: 2000 },
+            Instr::Jalr { rd: 2, rs1: 1, offset: 1 },
+            Instr::Ecall,
+        ]),
+        // a loop whose ZE is exactly one past the program end: the
+        // loop-back must still fire instead of trapping
+        ("zol body at program end", V4, vec![
+            Instr::Dlpi { count: 3, body_len: 1 },
+            Instr::OpImm { op: AluImmOp::Addi, rd: 1, rs1: 1, imm: 1 },
+        ]),
+        ("zlp zero-count skip", V4, vec![
+            Instr::Zlp { rs1: 0, body_len: 2 },
+            Instr::OpImm { op: AluImmOp::Addi, rd: 1, rs1: 1, imm: 1 },
+            Instr::OpImm { op: AluImmOp::Addi, rd: 1, rs1: 1, imm: 1 },
+            Instr::Ecall,
+        ]),
+        ("zero-length zol body", V4, vec![
+            Instr::Dlpi { count: 4, body_len: 0 },
+            Instr::Ecall,
+        ]),
+        ("set registers arm a loop", V4, vec![
+            Instr::OpImm { op: AluImmOp::Addi, rd: 1, rs1: 0, imm: 3 },
+            Instr::OpImm { op: AluImmOp::Addi, rd: 2, rs1: 0, imm: 12 },
+            Instr::OpImm { op: AluImmOp::Addi, rd: 3, rs1: 0, imm: 16 },
+            Instr::SetZc { rs1: 1 },
+            Instr::SetZs { rs1: 2 },
+            Instr::SetZe { rs1: 3 },
+            Instr::Ecall,
+        ]),
+    ];
+    for (label, variant, instrs) in cases {
+        let program = Arc::new(Program::from_instrs(variant, instrs).unwrap());
+        let (r, l) = run_both(&program, [0; 32], 100);
+        if let Err(e) = diff(label, r, l) {
+            panic!("{e}");
+        }
+    }
+}
+
+/// Entry states the static lowering cannot cover (a manually armed ZE that
+/// is not a program loop end) must still behave identically — `run` falls
+/// back to the reference loop for them.
+#[test]
+fn lowered_matches_reference_with_manually_armed_ze() {
+    use marvel::isa::{AluImmOp, Instr};
+    let program = Arc::new(
+        Program::from_instrs(V4, vec![
+            Instr::OpImm { op: AluImmOp::Addi, rd: 1, rs1: 1, imm: 1 },
+            Instr::OpImm { op: AluImmOp::Addi, rd: 2, rs1: 2, imm: 1 },
+            Instr::OpImm { op: AluImmOp::Addi, rd: 3, rs1: 3, imm: 1 },
+            Instr::Ecall,
+        ])
+        .unwrap(),
+    );
+    let mut run_one = |reference: bool| {
+        let mut m = Machine::new(Arc::clone(&program), DM_SIZE);
+        m.zc = 2;
+        m.zs = 0;
+        m.ze = 8; // not a dlp/dlpi/zlp loop end of this program
+        let r = if reference {
+            m.run_reference(200, &mut NopHook)
+        } else {
+            m.run(200, &mut NopHook)
+        };
+        (format!("{r:?}"), m.regs, m.pc, (m.zc, m.zs, m.ze))
+    };
+    assert_eq!(run_one(true), run_one(false));
+}
+
+/// The real workload: LeNet-5*-shaped model end-to-end, reference vs
+/// lowered, on the baseline and fully-extended cores.
+#[test]
+fn lowered_matches_reference_on_lenet() {
+    let spec = lenet_shaped(77);
+    let mut rng = Rng::new(999);
+    let input = Builder::random_input(&spec, &mut rng);
+    for v in VARIANTS {
+        let c = compile(&spec, v).unwrap();
+        // reference path, via the raw machine
+        let mut m = marvel::compiler::make_sim(&c).unwrap();
+        marvel::compiler::load_input(&mut m, &c, &input).unwrap();
+        let ref_stats = m.run_reference(1 << 33, &mut NopHook).unwrap();
+        let ref_out =
+            marvel::compiler::read_output(&m, &c, spec.output_elems()).unwrap();
+        // lowered path, via the normal entry point
+        let (low_out, low_stats) =
+            execute_compiled(&c, &spec, &input, 1 << 33, &mut NopHook).unwrap();
+        assert_eq!(low_stats, ref_stats, "{} RunStats", v.name);
+        assert_eq!(low_out, ref_out, "{} outputs", v.name);
+    }
+}

@@ -1,0 +1,82 @@
+//! §Perf serving bench: request latency through the async batching front
+//! (DESIGN.md §12) at increasing levels of concurrency.
+//!
+//! The offline engine benches measure *throughput* over a fixed job list;
+//! this one measures what a caller of `marvel serve` experiences: the
+//! wall-clock of `submit → wait` while other clients are in flight.  The
+//! interesting number is how the p50 moves as concurrency grows — flat
+//! p50 with rising concurrency means the window batching is amortizing the
+//! engine across callers rather than serializing them.
+
+#[path = "common.rs"]
+mod common;
+
+use std::time::Duration;
+
+use marvel::compiler::CompileCache;
+use marvel::models::synth::{lenet_shaped, Builder};
+use marvel::sim::serve::{build_serve_models, model_key, Server};
+use marvel::sim::{ServeOptions, V4};
+use marvel::util::rng::Rng;
+
+fn main() {
+    let model = "synth:lenet:1".to_string();
+    let spec = lenet_shaped(1);
+    let cache = CompileCache::new();
+    let units = build_serve_models(
+        std::path::Path::new("artifacts"),
+        &[model.clone()],
+        &[V4],
+        &cache,
+    )
+    .unwrap();
+    let key = model_key(&model, "v4");
+
+    let opts = ServeOptions {
+        window: Duration::from_millis(2),
+        max_batch: 64,
+        threads: 0,
+    };
+    let (server, client) = Server::start(units, opts);
+
+    let mut rng = Rng::new(7);
+    let inputs: Vec<Vec<u8>> = (0..16)
+        .map(|_| {
+            Builder::random_input(&spec, &mut rng)
+                .iter()
+                .map(|&v| v as i8 as u8)
+                .collect()
+        })
+        .collect();
+
+    // Warm the compile/lowering caches through the front once.
+    client.infer(&key, inputs[0].clone()).unwrap();
+
+    let smoke = std::env::var_os("BENCH_SMOKE").is_some();
+    let rounds = if smoke { 2 } else { 20 };
+    for concurrency in [1usize, 4, 16] {
+        let secs = common::time_runs(1, rounds, || {
+            // `concurrency` clients submit together; the round's time is
+            // until the slowest reply (all share at most ceil(c/64)
+            // batches).
+            let tickets: Vec<_> = (0..concurrency)
+                .map(|i| {
+                    client
+                        .submit(&key, inputs[i % inputs.len()].clone())
+                        .unwrap()
+                })
+                .collect();
+            for t in tickets {
+                t.wait().unwrap();
+            }
+        });
+        common::report(
+            &format!("serve lenet-shaped v4 c={concurrency}"),
+            secs,
+            Some((concurrency as f64, "inference")),
+        );
+    }
+    drop(client);
+    let batches = server.join();
+    println!("serve: {batches} batches dispatched");
+}

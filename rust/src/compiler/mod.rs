@@ -139,23 +139,16 @@ impl CompileCache {
     /// The layer graph goes in via its `Debug` rendering, which covers
     /// every field; the weight payload is hashed directly.
     fn fingerprint(spec: &ModelSpec) -> u64 {
-        fn eat_byte(h: &mut u64, b: u8) {
-            *h ^= b as u64;
-            *h = h.wrapping_mul(0x100_0000_01b3);
-        }
+        use crate::util::{fnv1a_extend, FNV_OFFSET};
         fn eat(h: &mut u64, v: u64) {
-            for b in v.to_le_bytes() {
-                eat_byte(h, b);
-            }
+            *h = fnv1a_extend(*h, &v.to_le_bytes());
         }
-        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut h: u64 = FNV_OFFSET;
         eat(&mut h, spec.num_classes as u64);
         for d in spec.input_shape {
             eat(&mut h, d as u64);
         }
-        for b in format!("{:?}", spec.layers).bytes() {
-            eat_byte(&mut h, b);
-        }
+        h = fnv1a_extend(h, format!("{:?}", spec.layers).as_bytes());
         for t in spec.tensors.values() {
             eat(&mut h, t.shape.len() as u64);
             for &d in &t.shape {
@@ -401,6 +394,20 @@ mod tests {
         assert!(c4.rewrite_stats.fusedmac > 0);
         assert!(c4.rewrite_stats.add2i > 0);
         assert!(c4.instrs().iter().any(|i| i.is_custom()));
+    }
+
+    #[test]
+    fn spec_rejects_out_of_range_shift() {
+        // shift >= 32 must die at validation (clean error), never reach
+        // quant::round_shift's checked precondition as a panic.
+        let mut spec = tiny_conv_net(19);
+        if let spec::Layer::Conv2d { shift, .. } = &mut spec.layers[0] {
+            *shift = 32;
+        } else {
+            panic!("tiny_conv_net layer 0 should be conv");
+        }
+        let e = compile(&spec, V0).unwrap_err().to_string();
+        assert!(e.contains("requant shift 32 out of range"), "{e}");
     }
 
     #[test]

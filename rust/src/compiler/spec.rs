@@ -214,6 +214,20 @@ impl ModelSpec {
                     "layer {li}: bad input index {i}"
                 );
             }
+            // The requant shift is a checked precondition of
+            // `quant::round_shift` (< 32, see its contract); reject it here
+            // so a bad spec is a load-time error, not a simulator panic.
+            if let Layer::Conv2d { shift, .. }
+            | Layer::DwConv2d { shift, .. }
+            | Layer::Dense { shift, .. }
+            | Layer::AvgPool2d { shift, .. }
+            | Layer::AvgPoolGlobal { shift, .. } = layer
+            {
+                ensure!(
+                    *shift < 32,
+                    "layer {li}: requant shift {shift} out of range (< 32)"
+                );
+            }
             match layer {
                 Layer::Conv2d { w, b, in_shape, out_shape, stride, pad, .. } => {
                     let wt = self.tensor(w)?;

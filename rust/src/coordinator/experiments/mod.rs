@@ -21,6 +21,7 @@ use super::flow::{FlowOptions, FlowResult, PreparedFlow};
 use crate::compiler::CompileCache;
 use crate::models::PAPER_MODELS;
 use crate::sim::engine::{run_batch, Job};
+use crate::sim::shard::{JobDesc, ShardPool};
 
 /// Models present in the artifacts dir, paper order.
 pub fn available_models(artifacts: &Path) -> Vec<String> {
@@ -71,6 +72,36 @@ pub fn run_flows_cached(
         .collect::<Result<_>>()?;
     let jobs: Vec<Job<'_>> = flows.iter().flat_map(PreparedFlow::jobs).collect();
     let mut raw = run_batch(&jobs, opts.threads).into_iter();
+    flows
+        .iter()
+        .map(|f| {
+            let chunk: Vec<_> = raw.by_ref().take(f.n_jobs()).collect();
+            f.finish(chunk)
+        })
+        .collect()
+}
+
+/// [`run_flows_cached`] with the global job list dispatched across a
+/// [`ShardPool`] of worker processes instead of in-process threads.
+/// Preparation (compile + goldens) and verification/aggregation stay on
+/// the coordinator; only the simulation jobs travel.  The pool's
+/// submission-ordered merge makes the per-model results bit-identical to
+/// the in-process path — `tests/shard.rs` and `marvel shard-sweep --check`
+/// hold that differential.
+pub fn run_flows_sharded(
+    artifacts: &Path,
+    names: &[String],
+    opts: &FlowOptions,
+    cache: &CompileCache,
+    pool: &mut ShardPool,
+) -> Result<Vec<FlowResult>> {
+    let flows: Vec<PreparedFlow> = names
+        .iter()
+        .map(|m| PreparedFlow::prepare(artifacts, m, opts, cache))
+        .collect::<Result<_>>()?;
+    let descs: Vec<JobDesc> =
+        flows.iter().flat_map(PreparedFlow::descs).collect();
+    let mut raw = pool.run(&descs).into_iter();
     flows
         .iter()
         .map(|f| {

@@ -26,6 +26,7 @@ use crate::hw::{area_of, energy_mj, AreaReport, EnergyPoint};
 use crate::models;
 use crate::runtime;
 use crate::sim::engine::{run_batch, Job, JobOutput};
+use crate::sim::shard::{self, JobDesc};
 use crate::sim::{SimError, Variant, V0, VARIANTS};
 
 /// Flow configuration.
@@ -118,9 +119,12 @@ impl PreparedFlow {
         cache: &CompileCache,
     ) -> Result<PreparedFlow> {
         ensure!(!opts.variants.is_empty(), "{name}: no variants requested");
-        let spec = models::load(artifacts, name)
+        // `resolve`/`resolve_io` accept `synth:<kind>:<seed>` names (the
+        // reference executor provides synthetic goldens), so flows — and
+        // therefore sharded sweeps and serving — run without artifacts.
+        let spec = models::resolve(artifacts, name)
             .with_context(|| format!("loading model {name}"))?;
-        let io = runtime::load_golden_io(artifacts, name)
+        let io = models::resolve_io(artifacts, name, &spec, opts.n_inputs)
             .with_context(|| format!("loading golden I/O for {name}"))?;
         ensure!(!io.inputs.is_empty(), "{name}: no golden inputs");
         let n = opts.n_inputs.min(io.inputs.len()).max(1);
@@ -202,6 +206,26 @@ impl PreparedFlow {
             }
         }
         jobs
+    }
+
+    /// The wire-format twin of [`Self::jobs`]: job *descriptions* in the
+    /// same order, for dispatch through a
+    /// [`crate::sim::shard::ShardPool`].  Each carries the program and
+    /// base-DM fingerprints of this coordinator's compilation, so a worker
+    /// whose hydration diverges fails loudly.
+    pub fn descs(&self) -> Vec<JobDesc> {
+        let mut descs = Vec::with_capacity(self.n_jobs());
+        for c in &self.units {
+            for input in &self.packed {
+                descs.push(shard::desc_for(
+                    &self.name,
+                    c,
+                    input,
+                    self.opts.max_instrs,
+                ));
+            }
+        }
+        descs
     }
 
     /// Verify + aggregate the engine results for this flow's jobs (in the

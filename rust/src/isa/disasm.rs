@@ -7,12 +7,26 @@ fn r(reg: Reg) -> &'static str {
     REG_NAMES[reg as usize]
 }
 
+/// The 20-bit U-type immediate field an assembler expects after `lui` /
+/// `auipc`.  `imm` is carried as the full shifted 32-bit value (what the
+/// instruction deposits in `rd`); the *logical* u32 shift drops the low 12
+/// bits and cannot sign-extend, so the result is exactly the encoded
+/// word's top 20 bits for every `imm`, negative ones and hand-built
+/// non-canonical ones (low 12 bits set) included.  The encode→decode→
+/// disasm round-trip tests below pin that equivalence over the boundary
+/// immediates.
+fn u_imm_field(imm: i32) -> u32 {
+    (imm as u32) >> 12
+}
+
 /// Render one instruction as assembly text.
 pub fn disasm(i: &Instr) -> String {
     match *i {
-        Instr::Lui { rd, imm } => format!("lui {}, {:#x}", r(rd), (imm as u32) >> 12),
+        Instr::Lui { rd, imm } => {
+            format!("lui {}, {:#x}", r(rd), u_imm_field(imm))
+        }
         Instr::Auipc { rd, imm } => {
-            format!("auipc {}, {:#x}", r(rd), (imm as u32) >> 12)
+            format!("auipc {}, {:#x}", r(rd), u_imm_field(imm))
         }
         Instr::Jal { rd, offset } => format!("jal {}, {}", r(rd), offset),
         Instr::Jalr { rd, rs1, offset } => {
@@ -63,6 +77,53 @@ impl std::fmt::Display for Instr {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::isa::decode::decode;
+    use crate::isa::encode::encode;
+
+    /// encode → decode → disasm round-trip over negative and boundary
+    /// U-type immediates: the decoded instruction must equal the original
+    /// and the printed field must be exactly the encoded word's top 20
+    /// bits.
+    #[test]
+    fn u_type_roundtrip_negative_and_boundary() {
+        for imm in [
+            0i32,
+            0x1000,
+            0x7fff_f000,          // most positive canonical imm
+            -4096,                // 0xffff_f000: smallest negative
+            i32::MIN,             // 0x8000_0000: sign-bit-only field
+            i32::MIN + 0x1000,    // 0x8000_1000
+            0x0012_3000,
+            -0x0012_3000i32 & !0xfff,
+        ] {
+            for instr in [
+                Instr::Lui { rd: 5, imm },
+                Instr::Auipc { rd: 7, imm },
+            ] {
+                let w = encode(&instr);
+                let back = decode(w).unwrap();
+                assert_eq!(back, instr, "decode({w:#010x})");
+                let field = w >> 12;
+                let want_tail = format!("{field:#x}");
+                let text = disasm(&back);
+                assert!(
+                    text.ends_with(&want_tail),
+                    "disasm({instr:?}) = {text:?}, want field {want_tail} \
+                     (word {w:#010x})"
+                );
+            }
+        }
+    }
+
+    /// A hand-built non-canonical immediate (low 12 bits set) must not
+    /// leak into the printed 20-bit field.
+    #[test]
+    fn u_type_non_canonical_imm_masked() {
+        let text = disasm(&Instr::Lui { rd: 1, imm: 0x1234_5fff_u32 as i32 });
+        assert_eq!(text, "lui x1, 0x12345");
+        let text = disasm(&Instr::Auipc { rd: 2, imm: -1 }); // 0xffff_ffff
+        assert_eq!(text, "auipc x2, 0xfffff");
+    }
 
     #[test]
     fn formats() {

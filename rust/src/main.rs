@@ -10,10 +10,21 @@
 //! marvel profile  --model m                 v0 pattern profile (Fig 3 metrics)
 //! marvel extgen   --model m                 propose ISA extensions + nML
 //! marvel report   fig3|fig4|fig5|table8|fig10|fig11|fig12|table10|all
+//!                 [--shard N]               sweep across N worker processes
 //! marvel hw       [--fig10]                 area/power model
 //! marvel golden   --model m                 run the AOT HLO artifact via PJRT
+//! marvel shard-worker                       job protocol on stdin/stdout
+//! marvel shard-sweep  --workers N [--check] sharded model-zoo sweep
+//!                                           (--check: diff vs in-process)
+//! marvel serve    [--models a,b] [--variants v0,v4]
+//!                                           batched inference requests as
+//!                                           JSON lines on stdin
 //! ```
 //!
+//! `flow`, `run`, `compile`, `report --model`, `shard-*` and `serve`
+//! accept `synth:<kind>:<seed>` model names (self-contained synthetic
+//! specs — no artifacts dir needed; goldens come from the reference
+//! executor).  `profile`, `extgen` and `golden` need exported artifacts.
 //! Arguments are hand-parsed (clap is unavailable offline).
 
 use std::path::PathBuf;
@@ -26,7 +37,8 @@ use marvel::coordinator::experiments::{self, ablation, fig11_cycles,
                                        fig4_addi_hist, fig5_asm_diff,
                                        table10_memory, table8_area};
 use marvel::coordinator::{run_flow, FlowOptions};
-use marvel::sim::Variant;
+use marvel::sim::shard::{ShardPool, WorkerCmd};
+use marvel::sim::{serve, Variant};
 use marvel::util::tables::{fmt_si, Table};
 use marvel::{compiler, extgen, models, profiler, refexec, runtime};
 
@@ -111,6 +123,9 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "report" => cmd_report(&args),
         "hw" => cmd_hw(&args),
         "golden" => cmd_golden(&args),
+        "shard-worker" => cmd_shard_worker(&args),
+        "shard-sweep" => cmd_shard_sweep(&args),
+        "serve" => cmd_serve(&args),
         "version" => {
             println!("marvel {}", marvel::version());
             Ok(())
@@ -126,11 +141,173 @@ fn dispatch(argv: &[String]) -> Result<()> {
 fn print_usage() {
     println!(
         "marvel {} — model-class aware custom RISC-V extension generation\n\n\
-         usage: marvel <flow|run|compile|profile|extgen|report|hw|golden> \
+         usage: marvel <flow|run|compile|profile|extgen|report|hw|golden|\
+         shard-worker|shard-sweep|serve> \
          [--model NAME] [--variant v0..v4] [--artifacts DIR] \
-         [--threads N (batch engine workers, 0 = all cores)] ...",
+         [--threads N (batch engine workers, 0 = all cores)] \
+         [--shard N (report: sweep across N worker processes)] ...",
         marvel::version()
     );
+}
+
+/// Comma-separated `--models`, defaulting to the artifact models and, with
+/// no artifacts dir, to a self-contained synthetic zoo.
+fn models_arg(args: &Args) -> Vec<String> {
+    match args.get("models") {
+        Some(s) => s
+            .split(',')
+            .map(|m| m.trim().to_string())
+            .filter(|m| !m.is_empty())
+            .collect(),
+        None => {
+            let avail = experiments::available_models(&args.artifacts());
+            if avail.is_empty() {
+                ["synth:tiny:3", "synth:lenet:5", "synth:residual:7"]
+                    .map(String::from)
+                    .to_vec()
+            } else {
+                avail
+            }
+        }
+    }
+}
+
+fn cmd_shard_worker(args: &Args) -> Result<()> {
+    let artifacts = args.artifacts();
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    marvel::sim::shard::worker_loop(&artifacts, stdin.lock(), stdout.lock())
+}
+
+fn cmd_shard_sweep(args: &Args) -> Result<()> {
+    let artifacts = args.artifacts();
+    let workers = args.usize_opt("workers", 2).max(1);
+    let models = models_arg(args);
+    let opts = FlowOptions {
+        n_inputs: args.usize_opt("n", 2),
+        threads: args.usize_opt("threads", 0),
+        ..FlowOptions::default()
+    };
+    let cache = compiler::CompileCache::new();
+    let cmd = WorkerCmd::current_exe(&artifacts)?;
+    let mut pool = ShardPool::spawn(&cmd, workers)?;
+    let t0 = std::time::Instant::now();
+    let sharded = experiments::run_flows_sharded(
+        &artifacts, &models, &opts, &cache, &mut pool,
+    )?;
+    let dt = t0.elapsed();
+
+    let mut t = Table::new(&["model", "golden", "variants", "v4 speedup"])
+        .with_title(&format!(
+            "sharded sweep — {} models × {} inputs across {workers} worker \
+             processes ({:.1} ms)",
+            sharded.len(),
+            opts.n_inputs,
+            dt.as_secs_f64() * 1e3
+        ));
+    for f in &sharded {
+        let v4 = f
+            .metrics
+            .iter()
+            .find(|m| m.variant.name == "v4")
+            .map(|m| format!("{:.2}x", m.speedup))
+            .unwrap_or_else(|| "-".into());
+        let golden = if f.verified_golden { "VERIFIED" } else { "FAILED" };
+        t.row(vec![
+            f.model.clone(),
+            golden.to_string(),
+            f.metrics.len().to_string(),
+            v4,
+        ]);
+    }
+    println!("{}", t.render());
+
+    if args.flag("check") {
+        let local = experiments::run_flows_cached(
+            &artifacts, &models, &opts, &cache,
+        )?;
+        compare_flow_results(&sharded, &local)?;
+        println!(
+            "check: sharded ≡ in-process (bit-identical metrics, {} models)",
+            sharded.len()
+        );
+    }
+    if sharded.iter().any(|f| !f.verified_golden) {
+        bail!("golden verification failed");
+    }
+    Ok(())
+}
+
+/// Bit-exact comparison of two sweep results (`--check` differential).
+fn compare_flow_results(
+    a: &[marvel::coordinator::FlowResult],
+    b: &[marvel::coordinator::FlowResult],
+) -> Result<()> {
+    if a.len() != b.len() {
+        bail!("model count differs: {} vs {}", a.len(), b.len());
+    }
+    for (x, y) in a.iter().zip(b) {
+        if x.model != y.model || x.verified_golden != y.verified_golden {
+            bail!("{}: verification diverged (sharded {} vs local {})",
+                  x.model, x.verified_golden, y.verified_golden);
+        }
+        if x.metrics.len() != y.metrics.len() {
+            bail!("{}: metric count differs", x.model);
+        }
+        for (m, n) in x.metrics.iter().zip(&y.metrics) {
+            if m.variant != n.variant
+                || m.instrs != n.instrs
+                || m.cycles != n.cycles
+                || m.pm_bytes != n.pm_bytes
+                || m.dm_bytes != n.dm_bytes
+                || m.speedup.to_bits() != n.speedup.to_bits()
+            {
+                bail!(
+                    "{} on {}: sharded ({} instrs, {} cycles) != local \
+                     ({} instrs, {} cycles)",
+                    x.model, m.variant.name, m.instrs, m.cycles,
+                    n.instrs, n.cycles
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let artifacts = args.artifacts();
+    let models = models_arg(args);
+    let variants: Vec<Variant> = match args.get("variants") {
+        Some(s) => s
+            .split(',')
+            .map(|v| {
+                Variant::by_name(v.trim())
+                    .with_context(|| format!("unknown variant {v:?}"))
+            })
+            .collect::<Result<_>>()?,
+        None => vec![marvel::sim::V0, marvel::sim::V4],
+    };
+    let opts = marvel::sim::ServeOptions {
+        window: std::time::Duration::from_millis(
+            args.usize_opt("window-ms", 2) as u64,
+        ),
+        max_batch: args.usize_opt("max-batch", 64),
+        threads: args.usize_opt("threads", 0),
+    };
+    let cache = compiler::CompileCache::new();
+    let units =
+        serve::build_serve_models(&artifacts, &models, &variants, &cache)?;
+    eprintln!(
+        "serving {} (model, variant) units; window {:?}, max batch {} — \
+         JSON request lines on stdin",
+        units.len(),
+        opts.window,
+        opts.max_batch
+    );
+    let stdin = std::io::stdin();
+    // Unlocked Stdout: the response writer runs on its own thread and
+    // needs a Send sink (StdoutLock is not Send).
+    serve::serve_lines(units, opts, stdin.lock(), std::io::stdout())
 }
 
 fn cmd_flow(args: &Args) -> Result<()> {
@@ -181,9 +358,10 @@ fn cmd_run(args: &Args) -> Result<()> {
     let artifacts = args.artifacts();
     let model = args.model()?;
     let variant = args.variant()?;
-    let spec = models::load(&artifacts, &model)?;
-    let io = runtime::load_golden_io(&artifacts, &model)?;
-    let idx = args.usize_opt("input", 0).min(io.inputs.len() - 1);
+    let spec = models::resolve(&artifacts, &model)?;
+    let want_idx = args.usize_opt("input", 0);
+    let io = models::resolve_io(&artifacts, &model, &spec, want_idx + 1)?;
+    let idx = want_idx.min(io.inputs.len() - 1);
     let c = compiler::compile(&spec, variant)?;
     // --trace N: print the first N retired instructions (the OCD/JTAG
     // debugging substitute, paper §II.E.3)
@@ -226,7 +404,7 @@ fn cmd_compile(args: &Args) -> Result<()> {
     let artifacts = args.artifacts();
     let model = args.model()?;
     let variant = args.variant()?;
-    let spec = models::load(&artifacts, &model)?;
+    let spec = models::resolve(&artifacts, &model)?;
     let c = compiler::compile(&spec, variant)?;
     println!(
         "{model} for {}: {} instrs, PM {:.2} kB, DM {:.2} kB",
@@ -359,9 +537,20 @@ fn cmd_report(args: &Args) -> Result<()> {
         };
         // One global cross-model batch: workers drain every model's jobs
         // from a single list, closing the tail small models leave behind.
-        marvel::coordinator::experiments::run_flows_cached(
-            &artifacts, &models, &opts, &cache,
-        )?
+        // `--shard N` dispatches that same list across N worker processes
+        // instead (bit-identical results, see sim::shard).
+        let shard = args.usize_opt("shard", 0);
+        if shard > 0 {
+            let cmd = WorkerCmd::current_exe(&artifacts)?;
+            let mut pool = ShardPool::spawn(&cmd, shard)?;
+            marvel::coordinator::experiments::run_flows_sharded(
+                &artifacts, &models, &opts, &cache, &mut pool,
+            )?
+        } else {
+            marvel::coordinator::experiments::run_flows_cached(
+                &artifacts, &models, &opts, &cache,
+            )?
+        }
     } else {
         Vec::new()
     };

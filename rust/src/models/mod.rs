@@ -9,9 +9,11 @@ pub mod synth;
 
 use std::path::Path;
 
-use anyhow::Result;
+use anyhow::{bail, Context, Result};
 
 use crate::compiler::spec::{load_spec, ModelSpec};
+use crate::runtime::GoldenIo;
+use crate::util::rng::Rng;
 
 /// Paper model names, Table-10 order.
 pub const PAPER_MODELS: [&str; 6] = [
@@ -26,6 +28,61 @@ pub const PAPER_MODELS: [&str; 6] = [
 /// Load one model from the artifacts directory.
 pub fn load(artifacts: &Path, name: &str) -> Result<ModelSpec> {
     load_spec(artifacts, name)
+}
+
+/// Resolve a model name that may be synthetic.
+///
+/// `synth:<kind>:<seed>` (kind ∈ `tiny`/`lenet`/`residual`) builds the
+/// corresponding [`synth`] spec in-process — deterministic in the seed, so a
+/// shard worker in another process hydrates the *same* model the
+/// coordinator compiled (verified by program fingerprint, see
+/// [`crate::sim::shard`]).  Anything else loads from the artifacts dir.
+pub fn resolve(artifacts: &Path, name: &str) -> Result<ModelSpec> {
+    let Some(rest) = name.strip_prefix("synth:") else {
+        return load(artifacts, name);
+    };
+    let (kind, seed) = rest
+        .split_once(':')
+        .with_context(|| format!("bad synthetic model name {name:?} (want synth:<kind>:<seed>)"))?;
+    let seed: u64 = seed
+        .parse()
+        .with_context(|| format!("bad seed in synthetic model name {name:?}"))?;
+    match kind {
+        "tiny" => Ok(synth::tiny_conv_net(seed)),
+        "lenet" => Ok(synth::lenet_shaped(seed)),
+        "residual" => Ok(synth::residual_net(seed)),
+        other => bail!("unknown synthetic model kind {other:?} in {name:?}"),
+    }
+}
+
+/// Golden I/O for a possibly-synthetic model.
+///
+/// Artifact models load the exporter's recorded inputs/logits; `synth:`
+/// models get `n_inputs` deterministic random inputs (seeded from the full
+/// name) with the native reference executor providing the golden logits —
+/// which makes the full `PreparedFlow` verification path (and therefore
+/// sharded sweeps and serving) runnable with no artifacts directory.
+pub fn resolve_io(
+    artifacts: &Path,
+    name: &str,
+    spec: &ModelSpec,
+    n_inputs: usize,
+) -> Result<GoldenIo> {
+    if !name.starts_with("synth:") {
+        return crate::runtime::load_golden_io(artifacts, name);
+    }
+    let mut rng = Rng::new(crate::util::fnv1a(name.as_bytes()));
+    let n = n_inputs.max(1);
+    let mut inputs = Vec::with_capacity(n);
+    let mut outputs = Vec::with_capacity(n);
+    for _ in 0..n {
+        let x = synth::Builder::random_input(spec, &mut rng);
+        let y = crate::refexec::run(spec, &x)
+            .with_context(|| format!("reference executor on {name}"))?;
+        inputs.push(x);
+        outputs.push(y);
+    }
+    Ok(GoldenIo { inputs, outputs })
 }
 
 /// Load every paper model present in the artifacts directory.

@@ -16,9 +16,26 @@ pub const INT8_MIN: i32 = -128;
 pub const INT8_MAX: i32 = 127;
 
 /// Round-half-up arithmetic right shift (shift == 0 is the identity).
+///
+/// **Contract** (mirrors the generated RV32 code, see module docs):
+///
+/// - `shift` must be `< 32`.  The hardware has no requant shift ≥ 32 (the
+///   field is derived from layer scales, all ≤ 31) and `1 << (shift - 1)`
+///   would be UB-adjacent (release builds would silently mask the shift
+///   amount); it is therefore a *checked* precondition, not a debug
+///   assert — a spec that smuggles one in fails loudly on every build.
+/// - The rounding add is **wrapping**, exactly like the RV32 `add` the
+///   codegen emits: for `acc > i32::MAX - 2^(shift-1)` the sum wraps
+///   negative and the result diverges from the arbitrary-precision Python
+///   model (`quant.py` promotes to int64).  This is intentional — the rust
+///   side mirrors the *hardware*, and real accumulators stay far below the
+///   boundary (int8 × int8 MACs would need ~2^16 terms to get close).  The
+///   property tests pin both regimes: bit-equality with the Python/i64
+///   model on the non-overflowing domain, and the exact wrap semantics at
+///   the boundary.
 #[inline]
 pub fn round_shift(acc: i32, shift: u32) -> i32 {
-    debug_assert!(shift < 32);
+    assert!(shift < 32, "requant shift {shift} out of range (must be < 32)");
     if shift == 0 {
         acc
     } else {
@@ -74,6 +91,72 @@ mod tests {
             prop_assert_eq!(got, want, "acc={acc} s={s}");
             Ok(())
         });
+    }
+
+    /// The Python kernel reference (`quant.py::requant_np`): round-half-up
+    /// in int64, where `acc + 2^(s-1)` can never wrap.
+    fn python_round_shift_i64(acc: i64, shift: u32) -> i64 {
+        if shift == 0 {
+            acc
+        } else {
+            (acc + (1i64 << (shift - 1))) >> shift
+        }
+    }
+
+    #[test]
+    fn prop_round_shift_matches_python_up_to_overflow_boundary() {
+        // On the whole domain where the i32 rounding add cannot wrap, the
+        // hardware-mirroring implementation is bit-equal to the Python/i64
+        // model — including accumulators *at* the last safe value.
+        check("round_shift ≡ python model (non-wrapping domain)", 4000, |rng| {
+            let s = rng.int_in(1, 31) as u32;
+            let rnd = 1i32 << (s - 1);
+            let hi = i32::MAX - rnd; // last acc whose rounding add fits
+            let acc = match rng.int_in(0, 9) {
+                0 => hi,                   // exact boundary
+                1 => hi - 1,
+                2 => i32::MIN,             // negative side never wraps
+                _ => rng.int_in(i32::MIN, hi),
+            };
+            let got = round_shift(acc, s);
+            let want = python_round_shift_i64(acc as i64, s);
+            prop_assert_eq!(got as i64, want, "acc={acc} s={s}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn round_shift_wraps_like_rv32_add_past_boundary() {
+        // One past the boundary the add wraps — the documented
+        // hardware-mirroring divergence from the int64 Python model.
+        for s in [1u32, 8, 15, 31] {
+            let rnd = 1i32 << (s - 1);
+            let acc = i32::MAX - rnd + 1; // acc + rnd == i32::MIN (wrapped)
+            let got = round_shift(acc, s);
+            let want_hw = i32::MIN >> s; // srai of the wrapped sum
+            assert_eq!(got, want_hw, "s={s}");
+            let python = python_round_shift_i64(acc as i64, s);
+            assert_ne!(got as i64, python, "s={s}: wrap must be observable");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "requant shift 32 out of range")]
+    fn round_shift_rejects_shift_32() {
+        round_shift(1, 32);
+    }
+
+    #[test]
+    fn round_shift_full_shift_range_is_defined() {
+        // Every legal shift 0..=31 has defined, python-matching semantics
+        // for small accumulators (the common case).
+        for s in 0..32u32 {
+            assert_eq!(
+                round_shift(1000, s) as i64,
+                python_round_shift_i64(1000, s),
+                "s={s}"
+            );
+        }
     }
 
     #[test]

@@ -41,6 +41,12 @@ pub enum SimError {
     Watchdog { max_instrs: u64 },
     /// `ebreak` retired (debugger breakpoint).
     Break { pc: u32 },
+    /// A failure reported by a shard worker over the wire
+    /// ([`crate::sim::shard`]): the original error arrives as its rendered
+    /// message, so it stays a `SimError` for the coordinator-side plumbing
+    /// (`PreparedFlow::finish`) without the wire having to encode every
+    /// variant structurally.
+    Remote { msg: String },
 }
 
 impl std::fmt::Display for SimError {
@@ -65,6 +71,7 @@ impl std::fmt::Display for SimError {
                 write!(f, "watchdog: exceeded {max_instrs} instructions")
             }
             SimError::Break { pc } => write!(f, "ebreak at pc {pc:#x}"),
+            SimError::Remote { msg } => write!(f, "shard worker: {msg}"),
         }
     }
 }

@@ -356,6 +356,110 @@ mod tests {
     }
 
     #[test]
+    fn pool_rebind_never_leaks_bytes_across_dm_sizes() {
+        // Interleave jobs with differing DM sizes and base images through
+        // ONE pooled machine, in the order that would expose every leak
+        // mode of `Memory::reset_from`/`reset`:
+        //   big job (0xAA-filled base image)  →  small job (short base
+        //   image) → small job (no base image) → big job again.
+        // Each probe reads a byte the *previous* job wrote but the current
+        // job's init must have cleared; any nonzero read is a leak.
+        use crate::isa::{LoadOp, StoreOp};
+        // load x1 <- dm[probe]; store dm[4] <- x1; ecall
+        let probe_program = |probe: i32| {
+            Arc::new(
+                Program::from_instrs(
+                    V0,
+                    vec![
+                        Instr::Load {
+                            op: LoadOp::Lb,
+                            rd: 1,
+                            rs1: 0,
+                            offset: probe,
+                        },
+                        Instr::Store {
+                            op: StoreOp::Sb,
+                            rs2: 1,
+                            rs1: 0,
+                            offset: 4,
+                        },
+                        Instr::Ecall,
+                    ],
+                )
+                .unwrap(),
+            )
+        };
+        let zero = [0u8];
+        let big_image = vec![0xAAu8; 256]; // poison everything it covers
+        let mut small_image = vec![0u8; 16];
+        small_image[8] = 0x55;
+        let tiny_image = vec![0u8; 4];
+
+        let p_high = probe_program(200); // beyond the small jobs' images
+        let p_low = probe_program(8);
+
+        let jobs = [
+            // 1: big, poisoned base image — seeds the allocation with 0xAA
+            Job {
+                program: Arc::clone(&p_high),
+                dm_size: 256,
+                base_image: Some(&big_image),
+                preload: Vec::new(),
+                input: (0, &zero[..]),
+                output: (4, 1),
+                max_instrs: 100,
+            },
+            // 2: small + short base image; probe dm[8] sees ITS image byte
+            Job {
+                program: Arc::clone(&p_low),
+                dm_size: 64,
+                base_image: Some(&small_image),
+                preload: Vec::new(),
+                input: (0, &zero[..]),
+                output: (4, 1),
+                max_instrs: 100,
+            },
+            // 3: small, NO base image (recycle path); dm[8] must be 0,
+            // not small_image's 0x55 or the big job's 0xAA
+            Job {
+                program: Arc::clone(&p_low),
+                dm_size: 64,
+                base_image: None,
+                preload: Vec::new(),
+                input: (0, &zero[..]),
+                output: (4, 1),
+                max_instrs: 100,
+            },
+            // 4: big again with a short, all-zero base image; dm[200]
+            // (covered by nothing since job 1) must be 0, not 0xAA
+            Job {
+                program: Arc::clone(&p_high),
+                dm_size: 256,
+                base_image: Some(&tiny_image),
+                preload: Vec::new(),
+                input: (0, &zero[..]),
+                output: (4, 1),
+                max_instrs: 100,
+            },
+        ];
+        let want = [0xAAu8 as i8 as i32, 0x55, 0, 0];
+
+        // Pooled machine must match both the expectation and a fresh
+        // machine per job.
+        let mut pool: Option<Machine> = None;
+        for (i, job) in jobs.iter().enumerate() {
+            let fresh = run_job(job).unwrap();
+            let pooled = run_job_pooled(&mut pool, job).unwrap();
+            assert_eq!(
+                pooled.output,
+                vec![want[i]],
+                "job {i}: pooled machine leaked prior-job bytes"
+            );
+            assert_eq!(pooled, fresh, "job {i}: pooled != fresh");
+        }
+    }
+
+    #[test]
     fn worker_panic_propagates() {
         // dm_size = usize::MAX makes the DM Vec resize panic with
         // "capacity overflow" (an unwinding panic, before any allocation

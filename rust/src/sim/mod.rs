@@ -13,7 +13,10 @@
 //! [`Machine`] the mutable per-run state, [`lowered`] the baked micro-op
 //! form the hot loop actually executes (DESIGN.md §11), and [`engine`] the
 //! batch layer that runs N inputs × M variants across pooled worker
-//! threads.
+//! threads.  Above the engine sit the process-scale layers (DESIGN.md
+//! §12): [`shard`] partitions a batch across worker *processes* over a
+//! line-JSON wire, and [`serve`] is the async batching front for
+//! latency-oriented inference requests.
 
 pub mod cpu;
 pub mod engine;
@@ -21,6 +24,8 @@ pub mod hooks;
 pub mod lowered;
 pub mod memory;
 pub mod program;
+pub mod serve;
+pub mod shard;
 
 pub use cpu::{Machine, RunStats, Sim, SimError};
 pub use engine::{run_batch, run_job, run_job_on, run_job_pooled, Job,
@@ -29,6 +34,8 @@ pub use hooks::{NopHook, RetireHook, TraceHook};
 pub use lowered::LoweredProgram;
 pub use memory::Memory;
 pub use program::Program;
+pub use serve::{Client, Reply, ServeModel, ServeOptions, Server};
+pub use shard::{JobDesc, ShardPool, WorkerCmd};
 
 /// A processor variant = which ISA extensions are enabled (paper Table 1).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

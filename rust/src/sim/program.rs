@@ -120,6 +120,27 @@ impl Program {
         (self.words.len() * 4) as u32
     }
 
+    /// Content fingerprint (FNV-1a over the variant feature mask and the
+    /// encoded PM words).  Two programs with the same fingerprint execute
+    /// identically on the same inputs, so the shard layer uses it to verify
+    /// that a worker's locally-hydrated compilation matches the
+    /// coordinator's without shipping the instruction stream
+    /// ([`crate::sim::shard`]).
+    pub fn fingerprint(&self) -> u64 {
+        use crate::util::{fnv1a_extend, FNV_OFFSET};
+        let flags = [
+            self.variant.mac as u8,
+            self.variant.add2i as u8,
+            self.variant.fusedmac as u8,
+            self.variant.zol as u8,
+        ];
+        let mut h = fnv1a_extend(FNV_OFFSET, &flags);
+        for w in &self.words {
+            h = fnv1a_extend(h, &w.to_le_bytes());
+        }
+        h
+    }
+
     /// Lower to the baked micro-op form for `cm` (DESIGN.md §11).
     ///
     /// `None` when the combination cannot be lowered faithfully (cycle

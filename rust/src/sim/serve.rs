@@ -1,0 +1,490 @@
+//! An async serving front over the batch engine: the repo's first
+//! latency-oriented scenario next to the offline throughput sweeps
+//! (DESIGN.md §12).
+//!
+//! Requests target precompiled `(model, variant)` pairs and are submitted
+//! through a non-blocking channel; a dispatcher thread collects them into
+//! batches bounded by a **time window** (first request arms a deadline) and
+//! a **size cap**, then feeds the whole batch to [`run_batch`] — so the
+//! engine's pooling/parallelism amortizes across concurrent callers the
+//! same way it does across a sweep.  "Async" here is channels + threads
+//! (the offline toolchain has no executor): [`Client::submit`] never blocks
+//! on inference, and the ticket it returns is awaited independently.
+//!
+//! Determinism: one batch's results are computed by the same engine as the
+//! offline path, so a served inference is bit-identical to `marvel run` /
+//! `run_flow` on the same `(model, variant, input)`.  Batching changes only
+//! latency, never logits or `RunStats` — asserted by `tests/shard.rs`.
+
+use std::collections::HashMap;
+use std::io::{BufRead, Write};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::cpu::RunStats;
+use super::engine::{run_batch, Job};
+use crate::compiler::{CompileCache, Compiled};
+use crate::models;
+use crate::sim::Variant;
+use crate::util::json::{self, ObjBuilder};
+use crate::util::rng::Rng;
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOptions {
+    /// How long after the first request of a batch the dispatcher waits
+    /// for more before running.
+    pub window: Duration,
+    /// Hard batch-size cap: a full batch runs immediately.
+    pub max_batch: usize,
+    /// Engine worker threads per batch (0 = one per core).
+    pub threads: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            window: Duration::from_millis(2),
+            max_batch: 64,
+            threads: 0,
+        }
+    }
+}
+
+/// One servable `(model, variant)` unit.
+pub struct ServeModel {
+    /// Registry key (see [`model_key`]).
+    pub key: String,
+    pub compiled: Arc<Compiled>,
+    /// Input image size in bytes (request validation).
+    pub in_elems: usize,
+    /// Logit count read back after a run.
+    pub out_elems: usize,
+}
+
+/// Registry key for a `(model, variant)` pair: `"<model>@<variant>"`
+/// (model names may themselves contain `:`, e.g. `synth:tiny:3`).
+pub fn model_key(model: &str, variant: &str) -> String {
+    format!("{model}@{variant}")
+}
+
+/// Compile every `models × variants` pair for serving (shared cache, so a
+/// pair already compiled by a sweep is reused).
+pub fn build_serve_models(
+    artifacts: &std::path::Path,
+    names: &[String],
+    variants: &[Variant],
+    cache: &CompileCache,
+) -> Result<Vec<ServeModel>> {
+    let mut out = Vec::new();
+    for name in names {
+        let spec = models::resolve(artifacts, name)
+            .with_context(|| format!("loading model {name}"))?;
+        let scache = cache.for_spec(&spec);
+        for &v in variants {
+            let compiled = scache
+                .get_or_compile(v)
+                .with_context(|| format!("compiling {name} for {}", v.name))?;
+            out.push(ServeModel {
+                key: model_key(name, v.name),
+                compiled,
+                in_elems: spec.input_elems(),
+                out_elems: spec.output_elems(),
+            });
+        }
+    }
+    Ok(out)
+}
+
+/// A completed inference.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Reply {
+    /// int8 logits widened to i32 — bit-identical to the offline engine.
+    pub output: Vec<i32>,
+    pub stats: RunStats,
+    /// How many requests shared this engine batch (observability: a loaded
+    /// server should show > 1).
+    pub batch_size: usize,
+    /// Monotonic batch number.
+    pub batch_seq: u64,
+}
+
+struct Pending {
+    key: String,
+    input: Vec<u8>,
+    reply: mpsc::Sender<Result<Reply, String>>,
+}
+
+/// A ticket for an in-flight request: redeem with [`Ticket::wait`].
+pub struct Ticket(mpsc::Receiver<Result<Reply, String>>);
+
+impl Ticket {
+    /// Block until the batch containing this request has run.
+    pub fn wait(self) -> Result<Reply> {
+        self.0
+            .recv()
+            .map_err(|_| anyhow!("serve dispatcher dropped the request"))?
+            .map_err(|e| anyhow!(e))
+    }
+}
+
+/// Cheap, clonable request submitter.
+#[derive(Clone)]
+pub struct Client {
+    tx: mpsc::Sender<Pending>,
+}
+
+impl Client {
+    /// Enqueue an inference without blocking on its execution.
+    pub fn submit(&self, key: &str, input: Vec<u8>) -> Result<Ticket> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Pending { key: key.to_string(), input, reply: rtx })
+            .map_err(|_| anyhow!("serve dispatcher is gone"))?;
+        Ok(Ticket(rrx))
+    }
+
+    /// Submit + wait (the simple blocking call).
+    pub fn infer(&self, key: &str, input: Vec<u8>) -> Result<Reply> {
+        self.submit(key, input)?.wait()
+    }
+}
+
+/// Handle to the dispatcher thread.  Dropping the last [`Client`] shuts the
+/// dispatcher down; [`Server::join`] then returns the batch count.
+pub struct Server {
+    handle: std::thread::JoinHandle<u64>,
+}
+
+impl Server {
+    /// Start a server over the given units; returns the server handle and
+    /// the first client.
+    pub fn start(units: Vec<ServeModel>, opts: ServeOptions) -> (Server, Client) {
+        let (tx, rx) = mpsc::channel::<Pending>();
+        let registry: HashMap<String, ServeModel> =
+            units.into_iter().map(|u| (u.key.clone(), u)).collect();
+        let handle =
+            std::thread::spawn(move || dispatcher(rx, registry, opts));
+        (Server { handle }, Client { tx })
+    }
+
+    /// Wait for shutdown (all clients dropped); returns batches served.
+    pub fn join(self) -> u64 {
+        self.handle.join().expect("serve dispatcher panicked")
+    }
+}
+
+fn dispatcher(
+    rx: mpsc::Receiver<Pending>,
+    registry: HashMap<String, ServeModel>,
+    opts: ServeOptions,
+) -> u64 {
+    let max_batch = opts.max_batch.max(1);
+    let mut batch_seq: u64 = 0;
+    loop {
+        // Arm the window on the first request of a batch.
+        let first = match rx.recv() {
+            Ok(p) => p,
+            Err(_) => return batch_seq, // all clients gone
+        };
+        let deadline = Instant::now() + opts.window;
+        let mut pending = vec![first];
+        while pending.len() < max_batch {
+            let left = deadline.saturating_duration_since(Instant::now());
+            match rx.recv_timeout(left) {
+                Ok(p) => pending.push(p),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        batch_seq += 1;
+
+        // Validate against the registry; invalid requests answer
+        // immediately and don't occupy a job slot.
+        let mut runnable: Vec<&Pending> = Vec::with_capacity(pending.len());
+        for p in &pending {
+            match registry.get(&p.key) {
+                None => {
+                    let _ = p.reply.send(Err(format!(
+                        "unknown model key {:?} (available: {:?})",
+                        p.key,
+                        {
+                            let mut ks: Vec<&String> = registry.keys().collect();
+                            ks.sort();
+                            ks
+                        }
+                    )));
+                }
+                Some(u) if p.input.len() != u.in_elems => {
+                    let _ = p.reply.send(Err(format!(
+                        "{}: input is {} bytes, model wants {}",
+                        p.key,
+                        p.input.len(),
+                        u.in_elems
+                    )));
+                }
+                Some(_) => runnable.push(p),
+            }
+        }
+        let jobs: Vec<Job<'_>> = runnable
+            .iter()
+            .map(|p| {
+                let u = &registry[&p.key];
+                let c = &u.compiled;
+                Job {
+                    program: Arc::clone(&c.program),
+                    dm_size: c.plan.dm_size as usize,
+                    base_image: Some(&c.base_dm),
+                    preload: Vec::new(),
+                    input: (c.plan.input_addr, &p.input),
+                    output: (c.plan.output_addr, u.out_elems),
+                    max_instrs: 1 << 36,
+                }
+            })
+            .collect();
+        let results = run_batch(&jobs, opts.threads);
+        let size = runnable.len();
+        for (p, r) in runnable.iter().zip(results) {
+            let _ = p.reply.send(match r {
+                Ok(o) => Ok(Reply {
+                    output: o.output,
+                    stats: o.stats,
+                    batch_size: size,
+                    batch_seq,
+                }),
+                Err(e) => Err(format!("{e}")),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Line protocol (the `marvel serve` CLI and the CI smoke)
+// ---------------------------------------------------------------------------
+
+/// Serve requests read as JSON lines, one response line per request, in
+/// request order (responses for a batch are written as their tickets
+/// resolve; ordering across batches follows submission).
+///
+/// Request: `{"id":1,"model":"synth:tiny:3","variant":"v4","input":"<hex>"}`
+/// — or `"seed":N` instead of `"input"` for a deterministic random image
+/// (CI smoke without shipping bytes).  Response:
+/// `{"id":1,"output":[...],"instrs":..,"cycles":..,"batch":k}` or
+/// `{"id":1,"error":"..."}`.
+pub fn serve_lines(
+    units: Vec<ServeModel>,
+    opts: ServeOptions,
+    input: impl BufRead,
+    out: impl Write + Send,
+) -> Result<()> {
+    // Input sizes for seed-expansion, before the registry moves.
+    let sizes: HashMap<String, usize> =
+        units.iter().map(|u| (u.key.clone(), u.in_elems)).collect();
+    let (server, client) = Server::start(units, opts);
+
+    // The reading loop submits without waiting (so requests read within one
+    // window share a batch); a writer thread drains tickets in request
+    // order, which keeps output incremental *and* deterministic.
+    let (wtx, wrx) = mpsc::channel::<(u64, Result<Ticket, String>)>();
+    let writer = std::thread::scope(|s| -> Result<()> {
+        let writer = s.spawn(move || -> Result<()> {
+            let mut out = out;
+            for (id, t) in wrx {
+                let b = ObjBuilder::new().set("id", id);
+                let b = match t
+                    .and_then(|t| t.wait().map_err(|e| format!("{e:#}")))
+                {
+                    Ok(r) => b
+                        .set(
+                            "output",
+                            r.output
+                                .iter()
+                                .map(|&v| i64::from(v))
+                                .collect::<Vec<i64>>(),
+                        )
+                        .set("instrs", r.stats.instrs)
+                        .set("cycles", r.stats.cycles)
+                        .set("batch", r.batch_size),
+                    Err(e) => b.set("error", e),
+                };
+                writeln!(out, "{}", json::to_compact_string(&b.build()))?;
+                out.flush()?;
+            }
+            Ok(())
+        });
+        for line in input.lines() {
+            let line = line.context("reading request line")?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let (id, ticket) = match parse_request(&line, &sizes) {
+                Ok((id, key, bytes)) => (
+                    id,
+                    client.submit(&key, bytes).map_err(|e| format!("{e:#}")),
+                ),
+                Err(e) => (request_id(&line), Err(format!("{e:#}"))),
+            };
+            let _ = wtx.send((id, ticket));
+        }
+        drop(wtx); // EOF: writer drains remaining tickets and exits
+        drop(client); // dispatcher runs the tail batch, then shuts down
+        writer.join().expect("serve writer panicked")
+    });
+    writer?;
+    server.join();
+    Ok(())
+}
+
+/// Best-effort id extraction for malformed requests (so the error response
+/// still correlates).
+fn request_id(line: &str) -> u64 {
+    json::parse(line)
+        .ok()
+        .and_then(|v| v.get("id").ok().and_then(|i| i.as_u64().ok()))
+        .unwrap_or(0)
+}
+
+fn parse_request(
+    line: &str,
+    sizes: &HashMap<String, usize>,
+) -> Result<(u64, String, Vec<u8>)> {
+    let v = json::parse(line)?;
+    let id = v.get("id")?.as_u64()?;
+    let key = model_key(v.get("model")?.as_str()?, v.get("variant")?.as_str()?);
+    let bytes = match v.get_opt("input") {
+        Some(h) => super::shard::from_hex(h.as_str()?)?,
+        None => {
+            let seed = v
+                .get("seed")
+                .context("request needs \"input\" hex or \"seed\"")?
+                .as_u64()?;
+            let n = *sizes
+                .get(&key)
+                .with_context(|| format!("unknown model key {key:?}"))?;
+            let mut rng = Rng::new(seed);
+            (0..n).map(|_| rng.int8() as i8 as u8).collect()
+        }
+    };
+    Ok((id, key, bytes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::synth::tiny_conv_net;
+    use crate::sim::{V0, V4};
+
+    fn units() -> Vec<ServeModel> {
+        let cache = CompileCache::new();
+        build_serve_models(
+            std::path::Path::new("artifacts"),
+            &["synth:tiny:3".to_string()],
+            &[V0, V4],
+            &cache,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn serve_matches_direct_execution() {
+        let spec = tiny_conv_net(3);
+        let mut rng = Rng::new(9);
+        let input = crate::models::synth::Builder::random_input(&spec, &mut rng);
+        let packed = crate::compiler::pack_input(&input).unwrap();
+        let (want, want_stats) =
+            crate::compiler::execute(&spec, V4, &input, 1 << 36).unwrap();
+
+        let (server, client) = Server::start(units(), ServeOptions::default());
+        let r = client
+            .infer(&model_key("synth:tiny:3", "v4"), packed)
+            .unwrap();
+        assert_eq!(r.output, want);
+        assert_eq!(r.stats, want_stats);
+        assert!(r.batch_size >= 1);
+        drop(client);
+        assert_eq!(server.join(), 1);
+    }
+
+    #[test]
+    fn bad_requests_answer_without_jobs() {
+        let (server, client) = Server::start(units(), ServeOptions::default());
+        let e = client.infer("nope@v4", vec![0; 4]).unwrap_err().to_string();
+        assert!(e.contains("unknown model key"), "{e}");
+        let e = client
+            .infer(&model_key("synth:tiny:3", "v4"), vec![0; 3])
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("input is 3 bytes"), "{e}");
+        drop(client);
+        server.join();
+    }
+
+    #[test]
+    fn window_batches_concurrent_requests() {
+        let spec = tiny_conv_net(3);
+        let n_in = spec.input_elems();
+        let opts = ServeOptions {
+            window: Duration::from_millis(200),
+            max_batch: 8,
+            threads: 2,
+        };
+        let (server, client) = Server::start(units(), opts);
+        // Submit 4 requests inside one window, then wait: they must share
+        // a batch (size > 1) and each match the offline engine.
+        let tickets: Vec<(Vec<u8>, Ticket)> = (0..4u64)
+            .map(|i| {
+                let mut rng = Rng::new(100 + i);
+                let bytes: Vec<u8> =
+                    (0..n_in).map(|_| rng.int8() as i8 as u8).collect();
+                let t = client
+                    .submit(&model_key("synth:tiny:3", "v0"), bytes.clone())
+                    .unwrap();
+                (bytes, t)
+            })
+            .collect();
+        for (bytes, t) in tickets {
+            let r = t.wait().unwrap();
+            let input: Vec<i32> =
+                bytes.iter().map(|&b| b as i8 as i32).collect();
+            let (want, want_stats) =
+                crate::compiler::execute(&spec, V0, &input, 1 << 36).unwrap();
+            assert_eq!(r.output, want);
+            assert_eq!(r.stats, want_stats);
+            assert_eq!(r.batch_size, 4, "requests must share the window");
+            assert_eq!(r.batch_seq, 1);
+        }
+        drop(client);
+        assert_eq!(server.join(), 1);
+    }
+
+    #[test]
+    fn line_protocol_end_to_end() {
+        let reqs = concat!(
+            r#"{"id":1,"model":"synth:tiny:3","variant":"v4","seed":5}"#, "\n",
+            r#"{"id":2,"model":"synth:tiny:3","variant":"nope","seed":5}"#, "\n",
+            "not json\n",
+        );
+        let mut out = Vec::new();
+        serve_lines(
+            units(),
+            ServeOptions::default(),
+            std::io::Cursor::new(reqs),
+            &mut out,
+        )
+        .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3, "{text}");
+        let r1 = json::parse(lines[0]).unwrap();
+        assert_eq!(r1.get("id").unwrap().as_u64().unwrap(), 1);
+        assert!(r1.get_opt("output").is_some(), "{text}");
+        assert!(r1.get("cycles").unwrap().as_u64().unwrap() > 0);
+        let r2 = json::parse(lines[1]).unwrap();
+        assert!(r2.get_opt("error").is_some(), "{text}");
+        let r3 = json::parse(lines[2]).unwrap();
+        assert!(r3.get_opt("error").is_some(), "{text}");
+    }
+}

@@ -1,0 +1,853 @@
+//! Process-sharded batch execution: the engine's `Job`s over a wire.
+//!
+//! [`super::engine`] scales a sweep across the threads of one process; this
+//! layer scales it across *processes* (and, because the protocol is plain
+//! line-delimited JSON on stdin/stdout, across hosts behind any pipe-shaped
+//! transport).  The design rests on the same fact the in-process engine
+//! exploits: a [`Job`] is a pure function of its inputs, so work can be
+//! partitioned, duplicated and re-dispatched freely without changing the
+//! result (DESIGN.md §12).
+//!
+//! **Wire format** — one JSON document per `\n`-terminated line
+//! ([`crate::util::json::to_compact_string`]).  A job line does *not* carry
+//! program bytes or the base DM image; it names the model
+//! (`models::resolve` syntax, so `synth:<kind>:<seed>` works with no
+//! artifacts dir) and the variant, and the worker hydrates both from its
+//! own [`CompileCache`].  Compilation is deterministic, and the line carries
+//! the coordinator's program and base-DM fingerprints so a divergent
+//! hydration is an explicit error instead of silently wrong logits:
+//!
+//! ```text
+//! > {"type":"job","seq":7,"model":"synth:tiny:3","variant":"v4",
+//!    "input":"<hex>","max_instrs":68719476736,"pfp":"<16hex>","dmfp":"<16hex>"}
+//! < {"type":"result","seq":7,"output":[-12,33,...],"instrs":9041,"cycles":11213}
+//! < {"type":"result","seq":8,"error":"memory fault at pc 0x40: ..."}
+//! ```
+//!
+//! **Failure model** — mirrors the in-process contract ([`run_batch`]):
+//! a [`SimError`] travels back as a result line (it stays at its index, as
+//! [`SimError::Remote`]); a worker *death* (crash, kill, protocol
+//! corruption — the process-level analogue of a worker-thread panic) gets
+//! its outstanding jobs re-dispatched to surviving workers, and a job that
+//! kills [`POISON_DEATHS`] workers — or the death of every worker — is
+//! propagated to the caller as a panic, exactly like a panicking job in the
+//! thread pool.  Re-dispatch is idempotent: jobs are pure, duplicate
+//! results are byte-identical and the first one wins.
+//!
+//! **Determinism** — `run` merges results by submission order (`results[i]`
+//! ↔ `descs[i]`), so the output is byte-identical for any worker count,
+//! any partition, and any re-dispatch schedule; `tests/shard.rs` holds the
+//! differential against the in-process engine.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::io::{BufRead, BufReader, Write};
+use std::path::{Path, PathBuf};
+use std::process::{Child, ChildStdin, Command, Stdio};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use super::cpu::{Machine, RunStats, SimError};
+use super::engine::{run_batch, run_job_pooled, Job, JobOutput};
+use crate::compiler::{CompileCache, Compiled};
+use crate::models;
+use crate::sim::Variant;
+use crate::util::json::{self, ObjBuilder, Value};
+
+/// A worker death is attributed to every job outstanding on it; a job that
+/// accumulates this many attributed deaths is declared poison and
+/// propagated as a panic (the process analogue of a panicking thread job).
+pub const POISON_DEATHS: u32 = 2;
+
+/// Max jobs kept in flight per worker: deep enough to hide the pipe
+/// round-trip behind execution, shallow enough that a death re-dispatches
+/// little work.
+const PIPELINE: usize = 2;
+
+/// Floor for the stall backstop (see [`stall_timeout`]).
+const STALL_TIMEOUT_MIN: Duration = Duration::from_secs(300);
+
+/// Pessimistic sustained simulation rate used to convert a watchdog budget
+/// into wall-clock: the ISS targets ≥100 M instr/s (DESIGN.md §10), so a
+/// worker more than an order of magnitude slower is treated as wedged.
+const STALL_FLOOR_INSTRS_PER_SEC: u64 = 10_000_000;
+
+/// How long `run` waits for *any* worker event before declaring the pool
+/// stalled.  A worker is silent for the whole duration of one job, so the
+/// backstop must dominate the longest *legitimate* job: the batch's
+/// largest `max_instrs` at a pessimistic simulation rate (a job within its
+/// watchdog budget must never panic the pool), floored at
+/// [`STALL_TIMEOUT_MIN`] for tiny budgets.
+fn stall_timeout(descs: &[JobDesc]) -> Duration {
+    let max_instrs = descs.iter().map(|d| d.max_instrs).max().unwrap_or(0);
+    STALL_TIMEOUT_MIN
+        .max(Duration::from_secs(max_instrs / STALL_FLOOR_INSTRS_PER_SEC + 1))
+}
+
+// ---------------------------------------------------------------------------
+// Wire format
+// ---------------------------------------------------------------------------
+
+/// FNV-1a over a byte slice — the fingerprint the wire uses for base-DM
+/// images (the program side uses [`super::Program::fingerprint`]; one
+/// shared definition in `util`, since these hashes are compared across
+/// processes).
+pub use crate::util::fnv1a;
+
+/// Lowercase hex encoding (input images on the wire).
+pub fn to_hex(bytes: &[u8]) -> String {
+    const HEX: &[u8; 16] = b"0123456789abcdef";
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for &b in bytes {
+        s.push(HEX[(b >> 4) as usize] as char);
+        s.push(HEX[(b & 0xf) as usize] as char);
+    }
+    s
+}
+
+/// Inverse of [`to_hex`].
+pub fn from_hex(s: &str) -> Result<Vec<u8>> {
+    ensure!(s.len() % 2 == 0, "odd-length hex string ({} chars)", s.len());
+    (0..s.len() / 2)
+        .map(|i| {
+            u8::from_str_radix(&s[2 * i..2 * i + 2], 16)
+                .map_err(|e| anyhow!("bad hex at byte {i}: {e}"))
+        })
+        .collect()
+}
+
+/// One simulation run described *by reference*: everything a worker needs
+/// to rebuild the corresponding [`Job`] from its own compile cache.  The
+/// only bulk payload is the per-run input image.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct JobDesc {
+    /// Model name in [`models::resolve`] syntax (artifact or `synth:`).
+    pub model: String,
+    /// Variant name (`v0`..`v4`).
+    pub variant: String,
+    /// Packed int8 input image ([`crate::compiler::pack_input`]).
+    pub input: Vec<u8>,
+    /// Watchdog budget (values above 2^53 are clamped on the wire — the
+    /// JSON number model — which no reachable run can tell apart).
+    pub max_instrs: u64,
+    /// [`super::Program::fingerprint`] of the coordinator's compilation;
+    /// `0` skips the hydration cross-check (hand-built descriptions).
+    pub program_fp: u64,
+    /// [`fnv1a`] of the coordinator's `Compiled::base_dm`; `0` skips.
+    pub base_dm_fp: u64,
+}
+
+/// Describe one inference on a coordinator-side compilation, fingerprints
+/// included — the standard way to build a [`JobDesc`].
+pub fn desc_for(
+    model: &str,
+    c: &Compiled,
+    input: &[u8],
+    max_instrs: u64,
+) -> JobDesc {
+    JobDesc {
+        model: model.to_string(),
+        variant: c.variant().name.to_string(),
+        input: input.to_vec(),
+        max_instrs,
+        program_fp: c.program.fingerprint(),
+        base_dm_fp: fnv1a(&c.base_dm),
+    }
+}
+
+/// A parsed protocol line (both directions share the enum).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Msg {
+    /// Worker → coordinator: handshake after startup.
+    Ready,
+    /// Coordinator → worker: one job to run.
+    Job { seq: u64, desc: JobDesc },
+    /// Worker → coordinator: outcome of job `seq`.
+    Done { seq: u64, result: Result<JobOutput, String> },
+}
+
+fn fp_hex(fp: u64) -> String {
+    format!("{fp:016x}")
+}
+
+/// Serialize the handshake line.
+pub fn encode_ready() -> String {
+    json::to_compact_string(
+        &ObjBuilder::new()
+            .set("type", "ready")
+            .set("version", crate::version())
+            .build(),
+    )
+}
+
+/// Serialize a job line.
+pub fn encode_job(seq: u64, d: &JobDesc) -> String {
+    json::to_compact_string(
+        &ObjBuilder::new()
+            .set("type", "job")
+            .set("seq", seq)
+            .set("model", d.model.as_str())
+            .set("variant", d.variant.as_str())
+            .set("input", to_hex(&d.input))
+            .set("max_instrs", d.max_instrs.min(1 << 53))
+            .set("pfp", fp_hex(d.program_fp))
+            .set("dmfp", fp_hex(d.base_dm_fp))
+            .build(),
+    )
+}
+
+/// Serialize a result line.
+pub fn encode_result(seq: u64, r: &Result<JobOutput, String>) -> String {
+    let b = ObjBuilder::new().set("type", "result").set("seq", seq);
+    let b = match r {
+        Ok(o) => b
+            .set(
+                "output",
+                o.output.iter().map(|&v| i64::from(v)).collect::<Vec<i64>>(),
+            )
+            .set("instrs", o.stats.instrs)
+            .set("cycles", o.stats.cycles),
+        Err(e) => b.set("error", e.as_str()),
+    };
+    json::to_compact_string(&b.build())
+}
+
+fn parse_fp(v: &Value, key: &str) -> Result<u64> {
+    let s = v.get(key)?.as_str()?;
+    u64::from_str_radix(s, 16)
+        .map_err(|e| anyhow!("bad fingerprint {key}={s:?}: {e}"))
+}
+
+/// Parse one protocol line.
+pub fn parse_line(line: &str) -> Result<Msg> {
+    let v = json::parse(line)?;
+    match v.get("type")?.as_str()? {
+        "ready" => Ok(Msg::Ready),
+        "job" => Ok(Msg::Job {
+            seq: v.get("seq")?.as_u64()?,
+            desc: JobDesc {
+                model: v.get("model")?.as_str()?.to_string(),
+                variant: v.get("variant")?.as_str()?.to_string(),
+                input: from_hex(v.get("input")?.as_str()?)?,
+                max_instrs: v.get("max_instrs")?.as_u64()?,
+                program_fp: parse_fp(&v, "pfp")?,
+                base_dm_fp: parse_fp(&v, "dmfp")?,
+            },
+        }),
+        "result" => {
+            let seq = v.get("seq")?.as_u64()?;
+            let result = match v.get_opt("error") {
+                Some(e) => Err(e.as_str()?.to_string()),
+                None => {
+                    let output = v
+                        .get("output")?
+                        .as_arr()?
+                        .iter()
+                        .map(|x| {
+                            let n = x.as_i64()?;
+                            i32::try_from(n)
+                                .map_err(|_| anyhow!("logit {n} exceeds i32"))
+                        })
+                        .collect::<Result<Vec<i32>>>()?;
+                    Ok(JobOutput {
+                        output,
+                        stats: RunStats {
+                            instrs: v.get("instrs")?.as_u64()?,
+                            cycles: v.get("cycles")?.as_u64()?,
+                        },
+                    })
+                }
+            };
+            Ok(Msg::Done { seq, result })
+        }
+        other => bail!("unknown message type {other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker side: hydrate a JobDesc from the local compile cache and run it
+// ---------------------------------------------------------------------------
+
+/// Per-process model/compilation store a worker hydrates job descriptions
+/// from.  Every `(model, variant)` resolves and compiles exactly once; the
+/// resulting [`Compiled`] (program + base DM image) is what the wire
+/// deliberately does not ship.
+pub struct Hydrator {
+    artifacts: PathBuf,
+    cache: CompileCache,
+    /// `(model, variant)` → compiled unit + its output element count.
+    units: HashMap<(String, String), (Arc<Compiled>, usize)>,
+}
+
+impl Hydrator {
+    pub fn new(artifacts: &Path) -> Hydrator {
+        Hydrator {
+            artifacts: artifacts.to_path_buf(),
+            cache: CompileCache::new(),
+            units: HashMap::new(),
+        }
+    }
+
+    /// Resolve + compile (memoized) the unit a description references.
+    pub fn hydrate(
+        &mut self,
+        model: &str,
+        variant: &str,
+    ) -> Result<(Arc<Compiled>, usize)> {
+        let key = (model.to_string(), variant.to_string());
+        if let Some((c, n)) = self.units.get(&key) {
+            return Ok((Arc::clone(c), *n));
+        }
+        let spec = models::resolve(&self.artifacts, model)
+            .with_context(|| format!("hydrating model {model}"))?;
+        let v = Variant::by_name(variant)
+            .with_context(|| format!("unknown variant {variant:?}"))?;
+        let c = self
+            .cache
+            .get_or_compile(&spec, v)
+            .with_context(|| format!("compiling {model} for {variant}"))?;
+        let n = spec.output_elems();
+        self.units.insert(key, (Arc::clone(&c), n));
+        Ok((c, n))
+    }
+
+    /// Hydrate + cross-check + execute one description on the pooled
+    /// machine.  Fingerprint mismatches (coordinator and worker compiled
+    /// different programs) are an error, not silent divergence.
+    pub fn run_desc(
+        &mut self,
+        pool: &mut Option<Machine>,
+        desc: &JobDesc,
+    ) -> Result<JobOutput> {
+        let (c, out_elems) = self.hydrate(&desc.model, &desc.variant)?;
+        check_fingerprints(desc, &c)?;
+        let job = job_of(&c, out_elems, &desc.input, desc.max_instrs);
+        run_job_pooled(pool, &job).map_err(|e| anyhow!("{e}"))
+    }
+}
+
+fn check_fingerprints(desc: &JobDesc, c: &Compiled) -> Result<()> {
+    if desc.program_fp != 0 {
+        let got = c.program.fingerprint();
+        ensure!(
+            got == desc.program_fp,
+            "program fingerprint mismatch for {} on {}: coordinator {:016x}, \
+             worker {got:016x} (divergent hydration)",
+            desc.model,
+            desc.variant,
+            desc.program_fp
+        );
+    }
+    if desc.base_dm_fp != 0 {
+        let got = fnv1a(&c.base_dm);
+        ensure!(
+            got == desc.base_dm_fp,
+            "base-DM fingerprint mismatch for {} on {}: coordinator {:016x}, \
+             worker {got:016x}",
+            desc.model,
+            desc.variant,
+            desc.base_dm_fp
+        );
+    }
+    Ok(())
+}
+
+/// The engine [`Job`] a hydrated description denotes (the wire-side twin of
+/// [`crate::compiler::make_job`], which takes the spec the worker folded
+/// into `out_elems` at hydration).
+fn job_of<'a>(
+    c: &'a Compiled,
+    out_elems: usize,
+    input: &'a [u8],
+    max_instrs: u64,
+) -> Job<'a> {
+    Job {
+        program: Arc::clone(&c.program),
+        dm_size: c.plan.dm_size as usize,
+        base_image: Some(&c.base_dm),
+        preload: Vec::new(),
+        input: (c.plan.input_addr, input),
+        output: (c.plan.output_addr, out_elems),
+        max_instrs,
+    }
+}
+
+/// The `marvel shard-worker` body: read job lines, stream result lines
+/// back incrementally (one write + flush per job, so the coordinator sees
+/// results as they complete, not at batch end).  Returns on EOF.  A panic
+/// (a bug class, not a [`SimError`]) kills the process — which is exactly
+/// the event the coordinator's death handling translates back into the
+/// in-process panic contract.
+pub fn worker_loop(
+    artifacts: &Path,
+    input: impl BufRead,
+    mut out: impl Write,
+) -> Result<()> {
+    let mut hyd = Hydrator::new(artifacts);
+    let mut pool: Option<Machine> = None;
+    writeln!(out, "{}", encode_ready())?;
+    out.flush()?;
+    for line in input.lines() {
+        let line = line.context("reading job line")?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        match parse_line(&line)? {
+            Msg::Job { seq, desc } => {
+                let result = hyd
+                    .run_desc(&mut pool, &desc)
+                    .map_err(|e| format!("{e:#}"));
+                writeln!(out, "{}", encode_result(seq, &result))?;
+                out.flush()?;
+            }
+            Msg::Ready => {}
+            Msg::Done { .. } => bail!("unexpected result message on worker stdin"),
+        }
+    }
+    Ok(())
+}
+
+/// Run descriptions in-process: hydrate everything locally and hand the
+/// batch to the thread engine.  This is the single-process twin the
+/// differential tests (and `marvel shard-sweep --check`) compare a sharded
+/// run against; per-description hydration failures stay at their index as
+/// [`SimError::Remote`], mirroring the pool.
+pub fn run_descs_local(
+    artifacts: &Path,
+    descs: &[JobDesc],
+    threads: usize,
+) -> Vec<Result<JobOutput, SimError>> {
+    let mut hyd = Hydrator::new(artifacts);
+    let units: Vec<Result<(Arc<Compiled>, usize), String>> = descs
+        .iter()
+        .map(|d| {
+            let u = hyd.hydrate(&d.model, &d.variant).map_err(|e| format!("{e:#}"))?;
+            check_fingerprints(d, &u.0).map_err(|e| format!("{e:#}"))?;
+            Ok(u)
+        })
+        .collect();
+    let jobs: Vec<Job<'_>> = units
+        .iter()
+        .zip(descs)
+        .filter_map(|(u, d)| {
+            let (c, n) = u.as_ref().ok()?;
+            Some(job_of(c, *n, &d.input, d.max_instrs))
+        })
+        .collect();
+    let ran = run_batch(&jobs, threads);
+    drop(jobs); // release the borrows of `units` before consuming it
+    let mut ran = ran.into_iter();
+    units
+        .into_iter()
+        .map(|u| match u {
+            Ok(_) => ran.next().expect("one result per hydrated job"),
+            Err(msg) => Err(SimError::Remote { msg }),
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator side: the shard pool
+// ---------------------------------------------------------------------------
+
+/// How to launch one worker process.
+#[derive(Clone, Debug)]
+pub struct WorkerCmd {
+    pub program: PathBuf,
+    pub args: Vec<String>,
+}
+
+impl WorkerCmd {
+    /// The standard worker: this very binary, `marvel shard-worker`.
+    pub fn current_exe(artifacts: &Path) -> Result<WorkerCmd> {
+        Ok(WorkerCmd {
+            program: std::env::current_exe()
+                .context("locating the marvel binary for shard workers")?,
+            args: vec![
+                "shard-worker".to_string(),
+                "--artifacts".to_string(),
+                artifacts.display().to_string(),
+            ],
+        })
+    }
+}
+
+enum Event {
+    Msg { worker: usize, msg: Msg },
+    Dead { worker: usize, reason: String },
+}
+
+/// One result slot per submitted job (`None` = not yet merged).
+type Slots = [Option<Result<JobOutput, SimError>>];
+
+struct Worker {
+    child: Child,
+    stdin: Option<ChildStdin>,
+    alive: bool,
+    /// Job indices (current `run` call) dispatched here and not yet done.
+    outstanding: HashSet<usize>,
+}
+
+/// A pool of worker processes executing [`JobDesc`] batches with
+/// submission-ordered merge (see the module docs for the failure model).
+/// Workers stay warm across `run` calls, so a sweep's later batches reuse
+/// every compilation the first one hydrated.
+pub struct ShardPool {
+    workers: Vec<Worker>,
+    rx: mpsc::Receiver<Event>,
+    next_seq: u64,
+}
+
+impl ShardPool {
+    /// Spawn `n` worker processes (stderr passes through to the caller's).
+    pub fn spawn(cmd: &WorkerCmd, n: usize) -> Result<ShardPool> {
+        ensure!(n > 0, "shard pool needs at least one worker");
+        let (tx, rx) = mpsc::channel();
+        let mut workers = Vec::with_capacity(n);
+        for worker in 0..n {
+            let mut child = Command::new(&cmd.program)
+                .args(&cmd.args)
+                .stdin(Stdio::piped())
+                .stdout(Stdio::piped())
+                .spawn()
+                .with_context(|| {
+                    format!("spawning shard worker {}", cmd.program.display())
+                })?;
+            let stdin = child.stdin.take();
+            let stdout = child.stdout.take().expect("piped stdout");
+            let tx = tx.clone();
+            std::thread::spawn(move || {
+                let rd = BufReader::new(stdout);
+                for line in rd.lines() {
+                    let event = match line {
+                        Ok(l) if l.trim().is_empty() => continue,
+                        Ok(l) => match parse_line(&l) {
+                            Ok(msg) => Event::Msg { worker, msg },
+                            Err(e) => {
+                                let _ = tx.send(Event::Dead {
+                                    worker,
+                                    reason: format!("protocol error: {e:#}"),
+                                });
+                                return;
+                            }
+                        },
+                        Err(e) => {
+                            let _ = tx.send(Event::Dead {
+                                worker,
+                                reason: format!("read error: {e}"),
+                            });
+                            return;
+                        }
+                    };
+                    if tx.send(event).is_err() {
+                        return;
+                    }
+                }
+                let _ = tx.send(Event::Dead { worker, reason: "eof".into() });
+            });
+            workers.push(Worker {
+                child,
+                stdin,
+                alive: true,
+                outstanding: HashSet::new(),
+            });
+        }
+        Ok(ShardPool { workers, rx, next_seq: 0 })
+    }
+
+    /// Live worker count (before a run, this is the spawn count).
+    pub fn live_workers(&self) -> usize {
+        self.workers.iter().filter(|w| w.alive).count()
+    }
+
+    /// Execute a batch across the pool.  `results[i]` corresponds to
+    /// `descs[i]`, byte-identical to [`run_descs_local`] for any worker
+    /// count or re-dispatch schedule.  Panics if a poison job kills
+    /// [`POISON_DEATHS`] workers or every worker dies — the process-level
+    /// mirror of [`run_batch`]'s panic propagation.
+    pub fn run(&mut self, descs: &[JobDesc]) -> Vec<Result<JobOutput, SimError>> {
+        let n = descs.len();
+        let base = self.next_seq;
+        self.next_seq += n as u64;
+        let stall = stall_timeout(descs);
+        // Per-run bookkeeping: stale outstanding entries are duplicates
+        // from a previous batch whose first copy already won; their late
+        // results are discarded below by the seq-range guard, so the slots
+        // are free again.
+        for w in &mut self.workers {
+            w.outstanding.clear();
+        }
+        let mut results: Vec<Option<Result<JobOutput, SimError>>> =
+            (0..n).map(|_| None).collect();
+        let mut done = 0usize;
+        let mut queue: VecDeque<usize> = (0..n).collect();
+        // Which workers job i has been dispatched to (caps duplicate
+        // dispatch at one per worker) and how many worker deaths it has
+        // been implicated in.
+        let mut dispatched: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut deaths: Vec<u32> = vec![0; n];
+
+        while done < n {
+            // Fill pipelines from the queue; once the queue drains,
+            // speculatively re-dispatch outstanding work to idle workers
+            // (straggler mitigation: first result wins, duplicates are
+            // byte-identical by purity).
+            self.dispatch(
+                descs, base, &results, &mut queue, &mut dispatched,
+                &mut deaths,
+            );
+            if self.live_workers() == 0 {
+                panic!(
+                    "shard pool: all workers died with {} of {n} jobs \
+                     unfinished",
+                    n - done
+                );
+            }
+            let event = match self.rx.recv_timeout(stall) {
+                Ok(e) => e,
+                Err(_) => panic!(
+                    "shard pool stalled: no worker event within {stall:?} \
+                     ({} of {n} jobs unfinished)",
+                    n - done
+                ),
+            };
+            match event {
+                Event::Msg { msg: Msg::Ready, .. } => {}
+                Event::Msg { worker, msg: Msg::Done { seq, result } } => {
+                    let Some(i) = seq.checked_sub(base).map(|d| d as usize)
+                    else {
+                        continue; // stale: previous run
+                    };
+                    if i >= n {
+                        continue;
+                    }
+                    self.workers[worker].outstanding.remove(&i);
+                    if results[i].is_none() {
+                        results[i] = Some(
+                            result
+                                .map_err(|msg| SimError::Remote { msg }),
+                        );
+                        done += 1;
+                    }
+                }
+                Event::Msg { worker, msg: Msg::Job { .. } } => {
+                    // A worker must never send jobs; treat as corruption.
+                    self.kill_worker(worker, "sent a job message");
+                    Self::requeue(
+                        &mut self.workers[worker],
+                        &results,
+                        &mut queue,
+                        &mut deaths,
+                        descs,
+                    );
+                }
+                Event::Dead { worker, reason } => {
+                    if !self.workers[worker].alive {
+                        continue;
+                    }
+                    self.kill_worker(worker, &reason);
+                    Self::requeue(
+                        &mut self.workers[worker],
+                        &results,
+                        &mut queue,
+                        &mut deaths,
+                        descs,
+                    );
+                }
+            }
+        }
+        results
+            .into_iter()
+            .map(|r| r.expect("merge filled every slot"))
+            .collect()
+    }
+
+    /// Send queued jobs to live workers with pipeline capacity; with an
+    /// empty queue, duplicate outstanding jobs onto idle workers.
+    fn dispatch(
+        &mut self,
+        descs: &[JobDesc],
+        base: u64,
+        results: &Slots,
+        queue: &mut VecDeque<usize>,
+        dispatched: &mut [Vec<usize>],
+        deaths: &mut [u32],
+    ) {
+        loop {
+            let Some(w) = self
+                .workers
+                .iter()
+                .enumerate()
+                .filter(|(_, wk)| wk.alive && wk.outstanding.len() < PIPELINE)
+                .min_by_key(|(_, wk)| wk.outstanding.len())
+                .map(|(i, _)| i)
+            else {
+                return;
+            };
+            // Skip anything that completed while queued (a duplicate's
+            // first copy finished).
+            while queue.front().is_some_and(|&i| results[i].is_some()) {
+                queue.pop_front();
+            }
+            let i = match queue.pop_front() {
+                Some(i) => i,
+                None => {
+                    // Straggler re-dispatch: only for fully idle workers,
+                    // onto the least-duplicated outstanding job this worker
+                    // has not seen.
+                    if !self.workers[w].outstanding.is_empty() {
+                        return;
+                    }
+                    let Some(i) = (0..descs.len())
+                        .filter(|&i| {
+                            results[i].is_none()
+                                && !dispatched[i].contains(&w)
+                        })
+                        .min_by_key(|&i| dispatched[i].len())
+                    else {
+                        return;
+                    };
+                    i
+                }
+            };
+            let line = encode_job(base + i as u64, &descs[i]);
+            let ok = match self.workers[w].stdin.as_mut() {
+                Some(stdin) => writeln!(stdin, "{line}")
+                    .and_then(|()| stdin.flush())
+                    .is_ok(),
+                None => false,
+            };
+            if ok {
+                self.workers[w].outstanding.insert(i);
+                dispatched[i].push(w);
+            } else {
+                // Broken pipe: handle the death here in full (the reader
+                // thread's Dead event for this worker is then a no-op) so
+                // its outstanding jobs requeue exactly once.
+                queue.push_front(i);
+                self.kill_worker(w, "stdin write failed");
+                Self::requeue(
+                    &mut self.workers[w], results, queue, deaths, descs,
+                );
+            }
+        }
+    }
+
+    fn kill_worker(&mut self, worker: usize, reason: &str) {
+        let w = &mut self.workers[worker];
+        w.alive = false;
+        w.stdin = None;
+        let _ = w.child.kill();
+        let _ = w.child.wait();
+        eprintln!("shard worker {worker} lost: {reason}");
+    }
+
+    /// Put a dead worker's unfinished jobs back on the queue, attributing
+    /// the death to each; a job implicated in [`POISON_DEATHS`] deaths is
+    /// propagated as a panic.
+    fn requeue(
+        worker: &mut Worker,
+        results: &Slots,
+        queue: &mut VecDeque<usize>,
+        deaths: &mut [u32],
+        descs: &[JobDesc],
+    ) {
+        for i in std::mem::take(&mut worker.outstanding) {
+            if results[i].is_some() {
+                continue;
+            }
+            deaths[i] += 1;
+            if deaths[i] >= POISON_DEATHS {
+                panic!(
+                    "shard job {i} ({} on {}) killed {} workers — poison job \
+                     propagated (in-process contract: a panicking job \
+                     panics the batch)",
+                    descs[i].model, descs[i].variant, deaths[i]
+                );
+            }
+            if !queue.contains(&i) {
+                queue.push_front(i);
+            }
+        }
+    }
+}
+
+impl Drop for ShardPool {
+    fn drop(&mut self) {
+        for w in &mut self.workers {
+            w.stdin = None; // EOF → graceful worker exit
+        }
+        for w in &mut self.workers {
+            // Reap; workers exit on stdin EOF, kill covers wedged ones.
+            let _ = w.child.kill();
+            let _ = w.child.wait();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hex_roundtrip() {
+        let bytes: Vec<u8> = (0..=255).collect();
+        assert_eq!(from_hex(&to_hex(&bytes)).unwrap(), bytes);
+        assert_eq!(to_hex(&[0x00, 0xff, 0x7f]), "00ff7f");
+        assert!(from_hex("abc").is_err());
+        assert!(from_hex("zz").is_err());
+    }
+
+    #[test]
+    fn job_line_roundtrip() {
+        let d = JobDesc {
+            model: "synth:tiny:3".into(),
+            variant: "v4".into(),
+            input: vec![0, 127, 128, 255],
+            max_instrs: 1 << 36,
+            program_fp: u64::MAX,
+            base_dm_fp: 1,
+        };
+        let line = encode_job(42, &d);
+        assert!(!line.contains('\n'));
+        match parse_line(&line).unwrap() {
+            Msg::Job { seq, desc } => {
+                assert_eq!(seq, 42);
+                assert_eq!(desc, d);
+            }
+            other => panic!("wrong message: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn result_line_roundtrip() {
+        let ok = Ok(JobOutput {
+            output: vec![i32::MIN, -1, 0, i32::MAX],
+            stats: RunStats { instrs: 123, cycles: 456 },
+        });
+        match parse_line(&encode_result(7, &ok)).unwrap() {
+            Msg::Done { seq, result } => {
+                assert_eq!(seq, 7);
+                assert_eq!(result, ok);
+            }
+            other => panic!("wrong message: {other:?}"),
+        }
+        let err: Result<JobOutput, String> = Err("memory fault \"x\"".into());
+        match parse_line(&encode_result(8, &err)).unwrap() {
+            Msg::Done { seq, result } => {
+                assert_eq!(seq, 8);
+                assert_eq!(result, err);
+            }
+            other => panic!("wrong message: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn ready_line_roundtrip() {
+        assert_eq!(parse_line(&encode_ready()).unwrap(), Msg::Ready);
+        assert!(parse_line("{\"type\":\"nope\"}").is_err());
+        assert!(parse_line("not json").is_err());
+    }
+}

@@ -48,6 +48,14 @@ impl Value {
         usize::try_from(v).map_err(|_| anyhow!("expected unsigned, got {v}"))
     }
 
+    /// Unsigned integer up to 2^53 (the f64-exact range, same contract as
+    /// [`Self::as_i64`]).  Wire fields that must cover the full u64 range
+    /// (fingerprints) travel as hex strings instead.
+    pub fn as_u64(&self) -> Result<u64> {
+        let v = self.as_i64()?;
+        u64::try_from(v).map_err(|_| anyhow!("expected unsigned, got {v}"))
+    }
+
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Value::Str(s) => Ok(s),
@@ -109,6 +117,19 @@ impl Value {
 impl From<i64> for Value {
     fn from(v: i64) -> Self {
         Value::Num(v as f64)
+    }
+}
+impl From<u64> for Value {
+    /// Exact only up to 2^53 (the shared f64 number model); the wire layer
+    /// asserts this for its fields and moves wider values to hex strings.
+    fn from(v: u64) -> Self {
+        debug_assert!(v <= 1 << 53, "u64 {v} exceeds exact f64 range");
+        Value::Num(v as f64)
+    }
+}
+impl From<usize> for Value {
+    fn from(v: usize) -> Self {
+        Value::from(v as u64)
     }
 }
 impl From<f64> for Value {
@@ -429,6 +450,45 @@ pub fn to_string(v: &Value) -> String {
     out
 }
 
+fn write_compact(v: &Value, out: &mut String) {
+    match v {
+        Value::Null | Value::Bool(_) | Value::Num(_) | Value::Str(_) => {
+            write_val(v, 0, out)
+        }
+        Value::Arr(a) => {
+            out.push('[');
+            for (i, item) in a.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_compact(item, out);
+            }
+            out.push(']');
+        }
+        Value::Obj(o) => {
+            out.push('{');
+            for (i, (k, val)) in o.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                escape(k, out);
+                out.push(':');
+                write_compact(val, out);
+            }
+            out.push('}');
+        }
+    }
+}
+
+/// Serialize to a single line with no whitespace — the form the shard/serve
+/// wire protocols need, where one JSON document per `\n`-terminated line is
+/// the framing ([`crate::sim::shard`]).
+pub fn to_compact_string(v: &Value) -> String {
+    let mut out = String::new();
+    write_compact(v, &mut out);
+    out
+}
+
 impl fmt::Display for Value {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         f.write_str(&to_string(self))
@@ -490,6 +550,25 @@ mod tests {
         let v = parse(&n.to_string()).unwrap();
         assert_eq!(v.as_i64().unwrap(), n);
         assert!(parse("1e60").unwrap().as_i64().is_err());
+    }
+
+    #[test]
+    fn compact_is_one_line_and_roundtrips() {
+        let src = r#"{"a": [1, {"b": "x\ny"}, null], "c": true, "d": 2.5}"#;
+        let v = parse(src).unwrap();
+        let line = to_compact_string(&v);
+        assert!(!line.contains('\n'), "{line}");
+        assert!(!line.contains(": "), "no pretty separators: {line}");
+        assert_eq!(parse(&line).unwrap(), v);
+        assert_eq!(line, r#"{"a":[1,{"b":"x\ny"},null],"c":true,"d":2.5}"#);
+    }
+
+    #[test]
+    fn u64_fields() {
+        let v = ObjBuilder::new().set("n", 42u64).set("z", 0usize).build();
+        assert_eq!(v.get("n").unwrap().as_u64().unwrap(), 42);
+        assert_eq!(v.get("z").unwrap().as_u64().unwrap(), 0);
+        assert!(parse("-1").unwrap().as_u64().is_err());
     }
 
     #[test]

@@ -5,3 +5,39 @@ pub mod json;
 pub mod proptest;
 pub mod rng;
 pub mod tables;
+
+/// FNV-1a offset basis — the seed for [`fnv1a_extend`] chains.
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Fold `bytes` into a running FNV-1a hash.  The single definition every
+/// fingerprint in the repo shares (`Program::fingerprint`, the compile
+/// cache key, the shard wire's base-DM check): the shard layer compares
+/// hashes computed in different processes, so divergent copies of the
+/// algorithm would surface as spurious fingerprint-mismatch errors.
+pub fn fnv1a_extend(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// FNV-1a over one byte slice.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    fnv1a_extend(FNV_OFFSET, bytes)
+}
+
+#[cfg(test)]
+mod fnv_tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a_reference_vectors() {
+        // Published FNV-1a 64-bit test vectors.
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
+        // extend() chains identically to one flat pass
+        assert_eq!(fnv1a_extend(fnv1a(b"foo"), b"bar"), fnv1a(b"foobar"));
+    }
+}

@@ -1,0 +1,88 @@
+#!/usr/bin/env python3
+"""Bench regression gate: compare a fresh BENCH_iss.json against the
+previous run's uploaded artifact and fail on a large throughput drop.
+
+Each input file holds one JSON object per line (see rust/benches/common.rs):
+
+    {"name": "...", "median_s": ..., "min_s": ..., "mean_s": ..., "units_per_s": ...}
+
+Only measurements present in BOTH files with a `units_per_s` field are
+compared (names change as benches evolve; new/renamed entries just pass).
+A measurement regresses if current throughput falls below
+(1 - max-drop) x previous.  Missing/empty previous file is a pass — the
+first run on a branch has no baseline.
+
+Usage: bench_gate.py PREV.json CURRENT.json [--max-drop 0.15]
+"""
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def load(path: Path) -> dict[str, float]:
+    """name -> units_per_s for every parseable line with a throughput."""
+    out: dict[str, float] = {}
+    if not path.exists():
+        return out
+    for line in path.read_text().splitlines():
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            row = json.loads(line)
+        except json.JSONDecodeError:
+            continue
+        ups = row.get("units_per_s")
+        if isinstance(ups, (int, float)) and ups > 0 and "name" in row:
+            # Keep the best rep if a name repeats across bench invocations.
+            out[row["name"]] = max(ups, out.get(row["name"], 0.0))
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("prev", type=Path)
+    ap.add_argument("current", type=Path)
+    ap.add_argument("--max-drop", type=float, default=0.15,
+                    help="fractional throughput drop that fails the gate")
+    args = ap.parse_args()
+
+    prev = load(args.prev)
+    cur = load(args.current)
+    if not prev:
+        print(f"bench gate: no baseline at {args.prev} — pass (first run)")
+        return 0
+    if not cur:
+        print(f"bench gate: FAIL — no measurements in {args.current}")
+        return 1
+
+    failures = []
+    compared = 0
+    for name, was in sorted(prev.items()):
+        now = cur.get(name)
+        if now is None:
+            print(f"  skip (gone):   {name}")
+            continue
+        compared += 1
+        ratio = now / was
+        status = "ok" if ratio >= 1.0 - args.max_drop else "REGRESSED"
+        print(f"  {status:9s} {name}: {was:.3e} -> {now:.3e} units/s "
+              f"({(ratio - 1.0) * 100.0:+.1f}%)")
+        if status != "ok":
+            failures.append(name)
+    for name in sorted(set(cur) - set(prev)):
+        print(f"  new:           {name}")
+
+    if failures:
+        print(f"bench gate: FAIL — {len(failures)}/{compared} measurements "
+              f"dropped more than {args.max_drop:.0%}: {', '.join(failures)}")
+        return 1
+    print(f"bench gate: pass ({compared} measurements within "
+          f"{args.max_drop:.0%})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,8 +1,10 @@
 //! §Perf L3 bench: batch-engine throughput — the full variants × inputs
 //! sweep of one model as a single job list, timed at 1 worker and at one
-//! worker per core.  Tracks aggregate instr/s next to `bench_iss`'s
-//! single-machine number; the ratio is the engine's scaling factor on this
-//! host (DESIGN.md §10).
+//! worker per core, through both the one-shot `run_batch` primitive and
+//! the persistent `LocalExec` pool (DESIGN.md §13): the delta between the
+//! two is the per-batch thread spawn/join cost the executor amortizes.
+//! Tracks aggregate instr/s next to `bench_iss`'s single-machine number;
+//! the ratio is the engine's scaling factor on this host (DESIGN.md §10).
 
 #[path = "common.rs"]
 mod common;
@@ -10,6 +12,7 @@ mod common;
 use marvel::compiler::{make_job, pack_input, CompileCache};
 use marvel::models::synth::{lenet_shaped, Builder};
 use marvel::sim::engine::{default_threads, run_batch, Job};
+use marvel::sim::exec::{Executor, JobSpec, LocalExec};
 use marvel::sim::VARIANTS;
 use marvel::util::rng::Rng;
 
@@ -56,7 +59,8 @@ fn main() {
     if all > 1 {
         configs.push(all);
     }
-    for threads in configs {
+    for threads in &configs {
+        let threads = *threads;
         let secs = common::time_runs(1, 5, || {
             let rs = run_batch(&jobs, threads);
             assert!(rs.iter().all(|r| r.is_ok()));
@@ -64,6 +68,36 @@ fn main() {
         common::report(
             &format!(
                 "engine/{}x{} jobs/{threads} thread{}",
+                compiled.len(),
+                inputs.len(),
+                if threads == 1 { "" } else { "s" }
+            ),
+            secs,
+            Some((total_instrs as f64, "instr")),
+        );
+    }
+
+    // The same sweep through the persistent executor pool: workers (and
+    // their pooled machines) live across every timed batch instead of
+    // being respawned per call.
+    let out_elems = spec.output_elems();
+    for threads in &configs {
+        let threads = *threads;
+        let mut exec = LocalExec::new(std::path::Path::new("artifacts"), threads);
+        let secs = common::time_runs(1, 5, || {
+            for c in &compiled {
+                for x in &packed {
+                    exec.submit(JobSpec::hydrated(
+                        &spec.name, c, out_elems, x, 1 << 36,
+                    ));
+                }
+            }
+            let rs = exec.run();
+            assert!(rs.iter().all(|r| r.is_ok()));
+        });
+        common::report(
+            &format!(
+                "exec/local/{}x{} jobs/{threads} thread{}",
                 compiled.len(),
                 inputs.len(),
                 if threads == 1 { "" } else { "s" }

@@ -15,6 +15,7 @@ use std::time::Duration;
 
 use marvel::compiler::CompileCache;
 use marvel::models::synth::{lenet_shaped, Builder};
+use marvel::sim::exec::LocalExec;
 use marvel::sim::serve::{build_serve_models, model_key, Server};
 use marvel::sim::{ServeOptions, V4};
 use marvel::util::rng::Rng;
@@ -32,12 +33,10 @@ fn main() {
     .unwrap();
     let key = model_key(&model, "v4");
 
-    let opts = ServeOptions {
-        window: Duration::from_millis(2),
-        max_batch: 64,
-        threads: 0,
-    };
-    let (server, client) = Server::start(units, opts);
+    let opts =
+        ServeOptions { window: Duration::from_millis(2), max_batch: 64 };
+    let exec = Box::new(LocalExec::new(std::path::Path::new("artifacts"), 0));
+    let (server, client) = Server::start(units, opts, exec);
 
     let mut rng = Rng::new(7);
     let inputs: Vec<Vec<u8>> = (0..16)

@@ -14,7 +14,7 @@ pub mod rewrite;
 pub mod spec;
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use anyhow::{ensure, Context, Result};
 
@@ -44,6 +44,8 @@ pub struct Compiled {
     pub layer_ranges: Vec<(usize, usize)>,
     pub rewrite_stats: RewriteStats,
     pub flatten_stats: FlattenStats,
+    /// Memoized wire fingerprint of `base_dm` (see [`Self::base_dm_fp`]).
+    base_dm_fp: OnceLock<u64>,
 }
 
 impl Compiled {
@@ -71,6 +73,16 @@ impl Compiled {
     /// Data-memory footprint in bytes (Table 10 DM column).
     pub fn dm_bytes(&self) -> u32 {
         self.plan.dm_size
+    }
+
+    /// FNV-1a of the prebuilt base DM image — the fingerprint job
+    /// descriptions carry on the wire ([`crate::sim::shard`]).  Memoized:
+    /// hashed once per compilation, not per job, so per-request callers
+    /// (the serve dispatcher, `PreparedFlow::specs`) pay nothing.
+    pub fn base_dm_fp(&self) -> u64 {
+        *self
+            .base_dm_fp
+            .get_or_init(|| crate::util::fnv1a(&self.base_dm))
     }
 }
 
@@ -113,6 +125,7 @@ pub fn compile(spec: &ModelSpec, variant: Variant) -> Result<Compiled> {
         layer_ranges,
         rewrite_stats,
         flatten_stats,
+        base_dm_fp: OnceLock::new(),
     })
 }
 

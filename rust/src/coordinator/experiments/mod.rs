@@ -20,8 +20,7 @@ use anyhow::Result;
 use super::flow::{FlowOptions, FlowResult, PreparedFlow};
 use crate::compiler::CompileCache;
 use crate::models::PAPER_MODELS;
-use crate::sim::engine::{run_batch, Job};
-use crate::sim::shard::{JobDesc, ShardPool};
+use crate::sim::exec::Executor;
 
 /// Models present in the artifacts dir, paper order.
 pub fn available_models(artifacts: &Path) -> Vec<String> {
@@ -34,74 +33,35 @@ pub fn available_models(artifacts: &Path) -> Vec<String> {
         .collect()
 }
 
-/// Run the full flow for every available model (shared by Fig 11 / Fig 12 /
-/// Table 10 so the simulations run once).
-pub fn run_all_flows(
-    artifacts: &Path,
-    opts: &FlowOptions,
-) -> Result<Vec<FlowResult>> {
-    run_all_flows_cached(artifacts, opts, &CompileCache::new())
-}
-
-/// [`run_all_flows`] against a shared compile cache: every model's
-/// variants × inputs jobs are submitted as **one global batch**, and the
-/// cache lets follow-up generators (e.g. the ablation grid in `report
-/// all`) reuse every compilation.
-pub fn run_all_flows_cached(
-    artifacts: &Path,
-    opts: &FlowOptions,
-    cache: &CompileCache,
-) -> Result<Vec<FlowResult>> {
-    run_flows_cached(artifacts, &available_models(artifacts), opts, cache)
-}
-
-/// Run the flows for an explicit model list as one cross-model batch:
-/// the workers drain a single global job list, so a small model finishing
-/// early never leaves cores idle while a big one still runs (the tail
-/// problem of per-model batching).  Results are per-model, in `names`
-/// order, and byte-identical to running each flow alone.
-pub fn run_flows_cached(
+/// THE sweep entry point (DESIGN.md §13): run the flows for a model list
+/// as **one global cross-model batch** on any execution backend.
+///
+/// Preparation (compile + goldens, against the shared `cache`) and
+/// verification/aggregation stay on the caller; only the simulation jobs
+/// go through `exec`.  The backend drains a single global job list, so a
+/// small model finishing early never leaves workers idle while a big one
+/// still runs (the tail problem of per-model batching).  Results are
+/// per-model, in `names` order, and — by the executor contract —
+/// byte-identical to running each flow alone, on any backend
+/// (`tests/shard.rs` and `marvel shard-sweep --check` hold the
+/// local-vs-sharded differential).
+pub fn run_flows(
     artifacts: &Path,
     names: &[String],
     opts: &FlowOptions,
     cache: &CompileCache,
+    exec: &mut dyn Executor,
 ) -> Result<Vec<FlowResult>> {
     let flows: Vec<PreparedFlow> = names
         .iter()
         .map(|m| PreparedFlow::prepare(artifacts, m, opts, cache))
         .collect::<Result<_>>()?;
-    let jobs: Vec<Job<'_>> = flows.iter().flat_map(PreparedFlow::jobs).collect();
-    let mut raw = run_batch(&jobs, opts.threads).into_iter();
-    flows
-        .iter()
-        .map(|f| {
-            let chunk: Vec<_> = raw.by_ref().take(f.n_jobs()).collect();
-            f.finish(chunk)
-        })
-        .collect()
-}
-
-/// [`run_flows_cached`] with the global job list dispatched across a
-/// [`ShardPool`] of worker processes instead of in-process threads.
-/// Preparation (compile + goldens) and verification/aggregation stay on
-/// the coordinator; only the simulation jobs travel.  The pool's
-/// submission-ordered merge makes the per-model results bit-identical to
-/// the in-process path — `tests/shard.rs` and `marvel shard-sweep --check`
-/// hold that differential.
-pub fn run_flows_sharded(
-    artifacts: &Path,
-    names: &[String],
-    opts: &FlowOptions,
-    cache: &CompileCache,
-    pool: &mut ShardPool,
-) -> Result<Vec<FlowResult>> {
-    let flows: Vec<PreparedFlow> = names
-        .iter()
-        .map(|m| PreparedFlow::prepare(artifacts, m, opts, cache))
-        .collect::<Result<_>>()?;
-    let descs: Vec<JobDesc> =
-        flows.iter().flat_map(PreparedFlow::descs).collect();
-    let mut raw = pool.run(&descs).into_iter();
+    for f in &flows {
+        for spec in f.specs() {
+            exec.submit(spec);
+        }
+    }
+    let mut raw = exec.run().into_iter();
     flows
         .iter()
         .map(|f| {

@@ -3,15 +3,17 @@
 //! FPGA replaced by the cycle-accurate core model.
 //!
 //! The flow is split into three phases so sweeps can batch *across*
-//! models (DESIGN.md §3):
+//! models (DESIGN.md §3, §13):
 //!
 //! 1. [`PreparedFlow::prepare`] — load spec + golden I/O, compile every
 //!    requested variant (plus the hidden v0 baseline), pack the inputs;
-//! 2. [`PreparedFlow::jobs`] — the flow's variants × inputs job list,
-//!    borrowing the prepared buffers.  `run_flow` submits it alone;
-//!    `experiments::run_all_flows` concatenates every model's list into
-//!    one global batch so small models don't leave workers idle at the
-//!    tail;
+//! 2. [`PreparedFlow::specs`] — the flow's variants × inputs as canonical
+//!    executor [`JobSpec`]s (pre-hydrated, so a local backend runs this
+//!    coordinator's compilations and a sharded backend ships only the
+//!    wire half).  `run_flow` submits one model's list alone;
+//!    `experiments::run_flows` concatenates every model's list into one
+//!    global batch on any backend, so small models don't leave workers
+//!    idle at the tail;
 //! 3. [`PreparedFlow::finish`] — verify outputs against the golden (and
 //!    optionally PJRT) references and aggregate the per-variant metrics.
 
@@ -25,8 +27,8 @@ use crate::compiler::{self, CompileCache, Compiled};
 use crate::hw::{area_of, energy_mj, AreaReport, EnergyPoint};
 use crate::models;
 use crate::runtime;
-use crate::sim::engine::{run_batch, Job, JobOutput};
-use crate::sim::shard::{self, JobDesc};
+use crate::sim::engine::JobOutput;
+use crate::sim::exec::{Executor, JobSpec, LocalExec};
 use crate::sim::{SimError, Variant, V0, VARIANTS};
 
 /// Flow configuration.
@@ -40,7 +42,9 @@ pub struct FlowOptions {
     pub max_instrs: u64,
     /// Which variants to build/run.
     pub variants: Vec<Variant>,
-    /// Batch-engine worker threads (0 = one per core, 1 = sequential).
+    /// Local-backend worker threads (0 = one per core, honoring the
+    /// `MARVEL_THREADS` override; 1 = sequential).  A caller-built
+    /// [`Executor`] brings its own parallelism.
     pub threads: usize,
 }
 
@@ -190,46 +194,33 @@ impl PreparedFlow {
         self.units.len() * self.n
     }
 
-    /// The flow's job list, unit-major (`jobs[u * n + i]` = unit `u`,
-    /// input `i`).  Borrows the prepared buffers; concatenate several
-    /// flows' lists for a cross-model batch.
-    pub fn jobs(&self) -> Vec<Job<'_>> {
-        let mut jobs = Vec::with_capacity(self.n_jobs());
+    /// The flow's executor job list, unit-major (`specs[u * n + i]` =
+    /// unit `u`, input `i`) — one canonical [`JobSpec`] per simulation,
+    /// valid on any [`Executor`].  Each spec is pre-hydrated with this
+    /// coordinator's compilation (an in-process backend runs it directly)
+    /// *and* carries the wire description with program/base-DM
+    /// fingerprints (a cross-process backend ships that half, and a
+    /// worker whose hydration diverges fails loudly).  Concatenate
+    /// several flows' lists for a cross-model batch.
+    pub fn specs(&self) -> Vec<JobSpec> {
+        let out_elems = self.spec.output_elems();
+        let mut specs = Vec::with_capacity(self.n_jobs());
         for c in &self.units {
             for input in &self.packed {
-                jobs.push(compiler::make_job(
-                    c,
-                    &self.spec,
-                    input,
-                    self.opts.max_instrs,
-                ));
-            }
-        }
-        jobs
-    }
-
-    /// The wire-format twin of [`Self::jobs`]: job *descriptions* in the
-    /// same order, for dispatch through a
-    /// [`crate::sim::shard::ShardPool`].  Each carries the program and
-    /// base-DM fingerprints of this coordinator's compilation, so a worker
-    /// whose hydration diverges fails loudly.
-    pub fn descs(&self) -> Vec<JobDesc> {
-        let mut descs = Vec::with_capacity(self.n_jobs());
-        for c in &self.units {
-            for input in &self.packed {
-                descs.push(shard::desc_for(
+                specs.push(JobSpec::hydrated(
                     &self.name,
                     c,
+                    out_elems,
                     input,
                     self.opts.max_instrs,
                 ));
             }
         }
-        descs
+        specs
     }
 
     /// Verify + aggregate the engine results for this flow's jobs (in the
-    /// order [`Self::jobs`] produced them).
+    /// order [`Self::specs`] produced them).
     pub fn finish(
         &self,
         raw: Vec<Result<JobOutput, SimError>>,
@@ -338,15 +329,30 @@ pub fn run_flow(artifacts: &Path, name: &str, opts: &FlowOptions) -> Result<Flow
 
 /// [`run_flow`] against a shared compile cache — sweeps (`report all`, the
 /// experiment generators, benches) pass one cache so each (model, variant)
-/// compiles exactly once per process.
+/// compiles exactly once per process.  Runs on a one-shot local executor;
+/// multi-model sweeps and other backends go through
+/// `experiments::run_flows` with a caller-built [`Executor`].
 pub fn run_flow_cached(
     artifacts: &Path,
     name: &str,
     opts: &FlowOptions,
     cache: &CompileCache,
 ) -> Result<FlowResult> {
+    let mut exec = LocalExec::new(artifacts, opts.threads);
+    run_flow_on(artifacts, name, opts, cache, &mut exec)
+}
+
+/// [`run_flow_cached`] on a caller-supplied execution backend.
+pub fn run_flow_on(
+    artifacts: &Path,
+    name: &str,
+    opts: &FlowOptions,
+    cache: &CompileCache,
+    exec: &mut dyn Executor,
+) -> Result<FlowResult> {
     let flow = PreparedFlow::prepare(artifacts, name, opts, cache)?;
-    let jobs = flow.jobs();
-    let raw = run_batch(&jobs, opts.threads);
-    flow.finish(raw)
+    for spec in flow.specs() {
+        exec.submit(spec);
+    }
+    flow.finish(exec.run())
 }

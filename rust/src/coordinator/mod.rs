@@ -11,5 +11,5 @@
 pub mod experiments;
 pub mod flow;
 
-pub use flow::{run_flow, run_flow_cached, FlowOptions, FlowResult,
-               PreparedFlow, VariantMetrics};
+pub use flow::{run_flow, run_flow_cached, run_flow_on, FlowOptions,
+               FlowResult, PreparedFlow, VariantMetrics};

@@ -10,16 +10,24 @@
 //! marvel profile  --model m                 v0 pattern profile (Fig 3 metrics)
 //! marvel extgen   --model m                 propose ISA extensions + nML
 //! marvel report   fig3|fig4|fig5|table8|fig10|fig11|fig12|table10|all
-//!                 [--shard N]               sweep across N worker processes
+//!                 [--backend B]             sweep on backend B
 //! marvel hw       [--fig10]                 area/power model
 //! marvel golden   --model m                 run the AOT HLO artifact via PJRT
 //! marvel shard-worker                       job protocol on stdin/stdout
-//! marvel shard-sweep  --workers N [--check] sharded model-zoo sweep
+//! marvel shard-sweep  [--backend B] [--check] model-zoo sweep
 //!                                           (--check: diff vs in-process)
-//! marvel serve    [--models a,b] [--variants v0,v4]
+//! marvel serve    [--models a,b] [--variants v0,v4] [--backend B]
 //!                                           batched inference requests as
 //!                                           JSON lines on stdin
 //! ```
+//!
+//! Every sweep-style command executes through one swappable backend
+//! (DESIGN.md §13), selected by `--backend local[:T] | shard:N` and
+//! parsed in exactly one place ([`backend_arg`]); results are
+//! bit-identical across backends.  `--threads T` fills an unspecified
+//! local thread count, and `--shard N` / `--workers N` survive as aliases
+//! for `shard:N`.  `MARVEL_THREADS=N` overrides the "one worker per core"
+//! default wherever a thread count is 0/omitted.
 //!
 //! `flow`, `run`, `compile`, `report --model`, `shard-*` and `serve`
 //! accept `synth:<kind>:<seed>` model names (self-contained synthetic
@@ -37,7 +45,7 @@ use marvel::coordinator::experiments::{self, ablation, fig11_cycles,
                                        fig4_addi_hist, fig5_asm_diff,
                                        table10_memory, table8_area};
 use marvel::coordinator::{run_flow, FlowOptions};
-use marvel::sim::shard::{ShardPool, WorkerCmd};
+use marvel::sim::exec::{BackendSpec, Executor, LocalExec};
 use marvel::sim::{serve, Variant};
 use marvel::util::tables::{fmt_si, Table};
 use marvel::{compiler, extgen, models, profiler, refexec, runtime};
@@ -144,10 +152,42 @@ fn print_usage() {
          usage: marvel <flow|run|compile|profile|extgen|report|hw|golden|\
          shard-worker|shard-sweep|serve> \
          [--model NAME] [--variant v0..v4] [--artifacts DIR] \
-         [--threads N (batch engine workers, 0 = all cores)] \
-         [--shard N (report: sweep across N worker processes)] ...",
+         [--backend local[:T]|shard:N (execution backend for report/\
+         shard-sweep/serve; results are bit-identical across backends)] \
+         [--threads N (local backend workers, 0 = all cores)] \
+         [--shard N (alias for --backend shard:N)] ...\n\n\
+         env: MARVEL_THREADS=N overrides the one-worker-per-core default \
+         wherever a thread count is 0 or omitted",
         marvel::version()
     );
+}
+
+/// The execution backend a sweep-style command uses — THE one place the
+/// `--backend local[:T] | shard:N` spec is parsed (DESIGN.md §13).
+/// `--shard N` / `--workers N` stay as lenient aliases for `shard:N`:
+/// `0` or a non-number falls back to the command's default instead of
+/// erroring (old `--shard 0` meant in-process; old `--workers 0` clamped
+/// to one worker, and now gets the default pool instead).  `--threads T`
+/// fills in an unspecified local thread count.
+fn backend_arg(args: &Args, default: &str) -> Result<BackendSpec> {
+    let mut spec = match args.get("backend") {
+        Some(s) => BackendSpec::parse(s)?,
+        None => match args
+            .get("shard")
+            .or_else(|| args.get("workers"))
+            .and_then(|n| n.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+        {
+            Some(workers) => BackendSpec::Shard { workers },
+            None => BackendSpec::parse(default)?,
+        },
+    };
+    if let BackendSpec::Local { threads } = &mut spec {
+        if *threads == 0 {
+            *threads = args.usize_opt("threads", 0);
+        }
+    }
+    Ok(spec)
 }
 
 /// Comma-separated `--models`, defaulting to the artifact models and, with
@@ -181,7 +221,6 @@ fn cmd_shard_worker(args: &Args) -> Result<()> {
 
 fn cmd_shard_sweep(args: &Args) -> Result<()> {
     let artifacts = args.artifacts();
-    let workers = args.usize_opt("workers", 2).max(1);
     let models = models_arg(args);
     let opts = FlowOptions {
         n_inputs: args.usize_opt("n", 2),
@@ -189,20 +228,20 @@ fn cmd_shard_sweep(args: &Args) -> Result<()> {
         ..FlowOptions::default()
     };
     let cache = compiler::CompileCache::new();
-    let cmd = WorkerCmd::current_exe(&artifacts)?;
-    let mut pool = ShardPool::spawn(&cmd, workers)?;
+    let mut exec = backend_arg(args, "shard:2")?.build(&artifacts)?;
     let t0 = std::time::Instant::now();
-    let sharded = experiments::run_flows_sharded(
-        &artifacts, &models, &opts, &cache, &mut pool,
+    let sharded = experiments::run_flows(
+        &artifacts, &models, &opts, &cache, exec.as_mut(),
     )?;
     let dt = t0.elapsed();
 
     let mut t = Table::new(&["model", "golden", "variants", "v4 speedup"])
         .with_title(&format!(
-            "sharded sweep — {} models × {} inputs across {workers} worker \
-             processes ({:.1} ms)",
+            "sharded sweep — {} models × {} inputs on backend {} \
+             ({:.1} ms)",
             sharded.len(),
             opts.n_inputs,
+            exec.describe(),
             dt.as_secs_f64() * 1e3
         ));
     for f in &sharded {
@@ -223,12 +262,16 @@ fn cmd_shard_sweep(args: &Args) -> Result<()> {
     println!("{}", t.render());
 
     if args.flag("check") {
-        let local = experiments::run_flows_cached(
-            &artifacts, &models, &opts, &cache,
+        // Built-in differential: the same sweep on the in-process backend
+        // must be bit-identical (the executor contract, end to end).
+        let mut local = LocalExec::new(&artifacts, opts.threads);
+        let reference = experiments::run_flows(
+            &artifacts, &models, &opts, &cache, &mut local,
         )?;
-        compare_flow_results(&sharded, &local)?;
+        compare_flow_results(&sharded, &reference)?;
         println!(
-            "check: sharded ≡ in-process (bit-identical metrics, {} models)",
+            "check: {} ≡ local (bit-identical metrics, {} models)",
+            exec.describe(),
             sharded.len()
         );
     }
@@ -287,27 +330,30 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .collect::<Result<_>>()?,
         None => vec![marvel::sim::V0, marvel::sim::V4],
     };
+    // Parallelism lives in the backend (--backend/--threads via
+    // backend_arg), not in the batching policy.
     let opts = marvel::sim::ServeOptions {
         window: std::time::Duration::from_millis(
             args.usize_opt("window-ms", 2) as u64,
         ),
         max_batch: args.usize_opt("max-batch", 64),
-        threads: args.usize_opt("threads", 0),
     };
     let cache = compiler::CompileCache::new();
     let units =
         serve::build_serve_models(&artifacts, &models, &variants, &cache)?;
+    let exec = backend_arg(args, "local")?.build(&artifacts)?;
     eprintln!(
-        "serving {} (model, variant) units; window {:?}, max batch {} — \
-         JSON request lines on stdin",
+        "serving {} (model, variant) units on backend {}; window {:?}, \
+         max batch {} — JSON request lines on stdin",
         units.len(),
+        exec.describe(),
         opts.window,
         opts.max_batch
     );
     let stdin = std::io::stdin();
     // Unlocked Stdout: the response writer runs on its own thread and
     // needs a Send sink (StdoutLock is not Send).
-    serve::serve_lines(units, opts, stdin.lock(), std::io::stdout())
+    serve::serve_lines(units, opts, exec, stdin.lock(), std::io::stdout())
 }
 
 fn cmd_flow(args: &Args) -> Result<()> {
@@ -535,22 +581,15 @@ fn cmd_report(args: &Args) -> Result<()> {
             threads,
             ..FlowOptions::default()
         };
-        // One global cross-model batch: workers drain every model's jobs
-        // from a single list, closing the tail small models leave behind.
-        // `--shard N` dispatches that same list across N worker processes
-        // instead (bit-identical results, see sim::shard).
-        let shard = args.usize_opt("shard", 0);
-        if shard > 0 {
-            let cmd = WorkerCmd::current_exe(&artifacts)?;
-            let mut pool = ShardPool::spawn(&cmd, shard)?;
-            marvel::coordinator::experiments::run_flows_sharded(
-                &artifacts, &models, &opts, &cache, &mut pool,
-            )?
-        } else {
-            marvel::coordinator::experiments::run_flows_cached(
-                &artifacts, &models, &opts, &cache,
-            )?
-        }
+        // One global cross-model batch on the selected backend: the
+        // backend drains every model's jobs from a single list, closing
+        // the tail small models leave behind, and `--backend shard:N`
+        // dispatches that same list across N worker processes instead
+        // (bit-identical results — the executor contract).
+        let mut exec = backend_arg(args, "local")?.build(&artifacts)?;
+        marvel::coordinator::experiments::run_flows(
+            &artifacts, &models, &opts, &cache, exec.as_mut(),
+        )?
     } else {
         Vec::new()
     };

@@ -28,6 +28,12 @@
 //! The layer is deliberately compiler-agnostic: a [`Job`] describes memory
 //! setup as raw bytes/blocks, so the sim crate stays free of model-spec
 //! knowledge.  `compiler::make_job` builds jobs from a `Compiled`.
+//!
+//! [`run_batch`] is the one-shot primitive: it spawns scoped workers per
+//! call.  Sweep-style callers go through the [`crate::sim::exec`]
+//! `Executor` API instead — its `LocalExec` keeps this module's pooling
+//! and panic-propagation contract on a worker pool that persists across
+//! batches (DESIGN.md §13).
 
 use std::cell::UnsafeCell;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -115,29 +121,48 @@ pub fn run_job_pooled(
     run_job_on(m, job)
 }
 
-/// One worker thread per core by default.
+/// Worker count for `threads == 0`: the `MARVEL_THREADS` environment
+/// override when set to a positive integer (documented in `marvel help`),
+/// else one worker thread per core.
 pub fn default_threads() -> usize {
-    std::thread::available_parallelism().map_or(1, |n| n.get())
+    match threads_override(std::env::var("MARVEL_THREADS").ok().as_deref()) {
+        Some(n) => n,
+        None => std::thread::available_parallelism().map_or(1, |n| n.get()),
+    }
+}
+
+/// Parse a `MARVEL_THREADS` value: positive integers (surrounding
+/// whitespace tolerated) override; anything else — unset, empty, `0`,
+/// garbage — falls back to auto.
+pub fn threads_override(v: Option<&str>) -> Option<usize> {
+    v.and_then(|s| s.trim().parse::<usize>().ok()).filter(|&n| n > 0)
 }
 
 /// Per-job result slots written without locks: the atomic work cursor
 /// hands each index to exactly one worker, which is the sole writer of
 /// that slot; the buffer is only read back after every worker has been
-/// joined.
-struct Slots<T>(Vec<UnsafeCell<Option<T>>>);
+/// joined (or otherwise synchronized-with).  Shared with the persistent
+/// pool in [`crate::sim::exec`].
+pub(crate) struct Slots<T>(Vec<UnsafeCell<Option<T>>>);
 
 // SAFETY: see the struct docs — slot `i` is written only by the single
 // worker that claimed `i` from the cursor, and read only after join.
 unsafe impl<T: Send> Sync for Slots<T> {}
 
 impl<T> Slots<T> {
-    fn new(n: usize) -> Slots<T> {
+    pub(crate) fn new(n: usize) -> Slots<T> {
         Slots((0..n).map(|_| UnsafeCell::new(None)).collect())
     }
 
     /// SAFETY: the caller must hold the unique claim on index `i`.
-    unsafe fn write(&self, i: usize, v: T) {
+    pub(crate) unsafe fn write(&self, i: usize, v: T) {
         *self.0[i].get() = Some(v);
+    }
+
+    /// SAFETY: the caller must guarantee every writer has quiesced (its
+    /// writes happen-before this call) and that no slot has two readers.
+    pub(crate) unsafe fn take(&self, i: usize) -> Option<T> {
+        (*self.0[i].get()).take()
     }
 
     fn into_results(self) -> Vec<Option<T>> {
@@ -457,6 +482,30 @@ mod tests {
             );
             assert_eq!(pooled, fresh, "job {i}: pooled != fresh");
         }
+    }
+
+    #[test]
+    fn threads_override_parses_only_positive_integers() {
+        assert_eq!(threads_override(Some("3")), Some(3));
+        assert_eq!(threads_override(Some(" 12 ")), Some(12));
+        for bad in [None, Some(""), Some("0"), Some("-1"), Some("two"),
+                    Some("3.5")]
+        {
+            assert_eq!(threads_override(bad), None, "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn marvel_threads_env_overrides_default() {
+        // A positive override wins; clearing it restores auto (≥ 1).
+        // The value 3 is harmless to any concurrently-running test: the
+        // engine contract makes results identical for every worker count.
+        std::env::set_var("MARVEL_THREADS", "3");
+        assert_eq!(default_threads(), 3);
+        std::env::set_var("MARVEL_THREADS", "not a number");
+        assert!(default_threads() >= 1);
+        std::env::remove_var("MARVEL_THREADS");
+        assert!(default_threads() >= 1);
     }
 
     #[test]

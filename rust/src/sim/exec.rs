@@ -1,0 +1,726 @@
+//! One `Executor` API over every execution substrate (DESIGN.md §13).
+//!
+//! The repo grew three ways to run a batch of inferences — the in-process
+//! thread engine ([`super::engine::run_batch`]), the process-sharded pool
+//! ([`super::shard::ShardPool`]) and the serving front's private batcher —
+//! each with its own job type and caller glue.  This module is the seam
+//! that collapses them: a [`JobSpec`] is the one canonical description of
+//! a simulation job, an [`Executor`] is anything that can run a batch of
+//! them with the engine's determinism contract, and every sweep-style
+//! caller (`run_flows`, `report`, `shard-sweep`, `marvel serve`, the
+//! benches) is written against the trait.  Future substrates — a socket
+//! transport, multi-host sweeps — implement `Executor` instead of adding a
+//! fourth copy of the dispatch plumbing.
+//!
+//! **Contract** (inherited from DESIGN.md §3/§12, asserted by
+//! `tests/exec_conformance.rs` against every backend):
+//!
+//! - `run()` returns one result per submitted job, in submission order.
+//! - Results (logits *and* `RunStats`) are byte-identical across backends
+//!   and across repeated runs — execution substrate changes wall-clock,
+//!   never bytes.
+//! - A per-job failure ([`SimError`]) stays at its index; a *poison* job —
+//!   one that panics a worker thread or keeps killing worker processes —
+//!   propagates as a panic on the caller.
+//!
+//! **Backends**:
+//!
+//! - [`LocalExec`] — a persistent in-process worker pool.  Unlike
+//!   `run_batch`, which spawns scoped threads per call, the pool's threads
+//!   (and their recycled [`Machine`]s) live for the executor's lifetime,
+//!   so a sweep of many small batches pays thread spawn/join once.  It
+//!   even survives a poison batch: the panic is re-raised on the caller,
+//!   but the workers stay up for the next `run`.
+//! - [`ShardExec`] — [`ShardPool`] behind the trait: jobs travel as wire
+//!   descriptions and workers hydrate from their own compile caches.  A
+//!   dead worker process is relaunched in place up to
+//!   [`super::shard::RESPAWN_ATTEMPTS`] times before its slot is retired
+//!   and its jobs fall back to survivors.
+//!
+//! Backends are selected everywhere by one spec string, parsed in one
+//! place ([`BackendSpec::parse`]): `local[:T]` or `shard:N`.
+
+use std::any::Any;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::cpu::{Machine, SimError};
+use super::engine::{default_threads, run_job_pooled, Job, JobOutput, Slots};
+use super::program::Program;
+use super::shard::{self, Hydrator, JobDesc, ShardPool, WorkerCmd};
+use crate::compiler::Compiled;
+
+// ---------------------------------------------------------------------------
+// The canonical job
+// ---------------------------------------------------------------------------
+
+/// A pre-compiled execution unit: what a [`Work::Named`] job hydrates to.
+#[derive(Clone)]
+pub struct Hydrated {
+    pub compiled: Arc<Compiled>,
+    /// Logit count read back after a successful run.
+    pub out_elems: usize,
+}
+
+/// A raw memory-image job — the owned twin of the engine's borrowed
+/// [`Job`], for callers below the compiler (hand-built programs, the
+/// engine benches, poison-job tests).  Raw jobs cannot travel a wire:
+/// backends with the [`Caps::cross_process`] capability refuse them with a
+/// per-job [`SimError::Remote`] instead of shipping program bytes.
+#[derive(Clone)]
+pub struct RawJob {
+    pub program: Arc<Program>,
+    pub dm_size: usize,
+    /// Optional full base DM image (shorter images are zero-padded).
+    pub base_image: Option<Vec<u8>>,
+    /// Blocks written into DM after `base_image`.
+    pub preload: Vec<(u32, Vec<u8>)>,
+    /// Per-run input block, written after `preload`.
+    pub input: (u32, Vec<u8>),
+    /// `(addr, n)`: read back `n` int8 values (widened to i32).
+    pub output: (u32, usize),
+    /// Watchdog budget.
+    pub max_instrs: u64,
+}
+
+/// How a [`JobSpec`] describes its work.
+pub enum Work {
+    /// By reference — the wire form ([`JobDesc`]: model/variant names,
+    /// input image, watchdog budget, compilation fingerprints).  `hydrated`
+    /// optionally carries the submitter's own compilation so in-process
+    /// backends skip re-resolution; without it, hydration happens lazily
+    /// in whichever process executes the job (local backends hydrate from
+    /// their own [`Hydrator`] and cross-check the fingerprints, exactly
+    /// like a shard worker).
+    Named {
+        desc: JobDesc,
+        hydrated: Option<Hydrated>,
+    },
+    /// A raw memory-image job (in-process backends only).
+    Raw(RawJob),
+}
+
+/// One simulation job, in the one form every [`Executor`] accepts — this
+/// subsumes the old `Job` (as [`Work::Raw`]) / `JobDesc` (as
+/// [`Work::Named`]) duality.
+pub struct JobSpec {
+    pub work: Work,
+}
+
+impl JobSpec {
+    /// A by-reference job, hydrated lazily by the executing process.
+    pub fn named(desc: JobDesc) -> JobSpec {
+        JobSpec { work: Work::Named { desc, hydrated: None } }
+    }
+
+    /// A by-reference job carrying the submitter's compilation (`c`,
+    /// reading `out_elems` logits) so in-process backends run it without
+    /// re-resolving the model.  The description's fingerprints are derived
+    /// from `c`, so a cross-process backend whose worker hydration
+    /// diverges still fails loudly.
+    pub fn hydrated(
+        model: &str,
+        c: &Arc<Compiled>,
+        out_elems: usize,
+        input: &[u8],
+        max_instrs: u64,
+    ) -> JobSpec {
+        JobSpec {
+            work: Work::Named {
+                desc: shard::desc_for(model, c, input, max_instrs),
+                hydrated: Some(Hydrated {
+                    compiled: Arc::clone(c),
+                    out_elems,
+                }),
+            },
+        }
+    }
+
+    /// A raw memory-image job (in-process backends only).
+    pub fn raw(job: RawJob) -> JobSpec {
+        JobSpec { work: Work::Raw(job) }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The trait
+// ---------------------------------------------------------------------------
+
+/// What an execution backend can do — callers branch on capabilities, not
+/// on concrete backend types.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Caps {
+    /// Worker state (pooled machines, hydration/compile caches) survives
+    /// across `run` calls, so later batches reuse earlier warm-up.
+    pub persistent_pool: bool,
+    /// Jobs execute in other processes: only [`Work::Named`] jobs are
+    /// accepted ([`Work::Raw`] yields a per-job error), and lazy hydration
+    /// happens remotely against the worker's own compile cache.
+    pub cross_process: bool,
+}
+
+/// A batch execution backend with the engine's determinism contract (see
+/// the module docs).  `submit` enqueues; `run` executes everything
+/// enqueued since the last `run` and returns results in submission order.
+pub trait Executor: Send {
+    /// Capability flags for this backend.
+    fn caps(&self) -> Caps;
+
+    /// The backend spec string this executor answers to (e.g. `local:8`,
+    /// `shard:2`) — for logs and report titles.
+    fn describe(&self) -> String;
+
+    /// Enqueue one job; returns its index in the next `run`'s results.
+    fn submit(&mut self, job: JobSpec) -> usize;
+
+    /// Execute the queued batch.  `results[i]` corresponds to the job
+    /// whose `submit` returned `i`; the queue is left empty.  Panics only
+    /// on a poison job (worker panic / repeated worker death), mirroring
+    /// `run_batch`.
+    fn run(&mut self) -> Vec<Result<JobOutput, SimError>>;
+}
+
+// ---------------------------------------------------------------------------
+// Backend spec: one grammar, parsed in one place
+// ---------------------------------------------------------------------------
+
+/// A parsed `--backend` value: `local[:T]` (in-process pool, `T` worker
+/// threads, 0/omitted = one per core via [`default_threads`]) or
+/// `shard:N` (`N` worker processes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendSpec {
+    Local { threads: usize },
+    Shard { workers: usize },
+}
+
+impl BackendSpec {
+    /// Parse a backend spec string.  Grammar: `local`, `local:T`,
+    /// `shard:N` (`N ≥ 1`).
+    pub fn parse(s: &str) -> Result<BackendSpec> {
+        let (kind, arg) = match s.split_once(':') {
+            Some((k, a)) => (k, Some(a)),
+            None => (s, None),
+        };
+        match kind {
+            "local" => {
+                let threads = match arg {
+                    None => 0,
+                    Some(a) => a.parse().with_context(|| {
+                        format!("bad thread count in backend {s:?}")
+                    })?,
+                };
+                Ok(BackendSpec::Local { threads })
+            }
+            "shard" => {
+                let workers: usize = arg
+                    .with_context(|| {
+                        format!(
+                            "backend {s:?} needs a worker count (shard:N)"
+                        )
+                    })?
+                    .parse()
+                    .with_context(|| {
+                        format!("bad worker count in backend {s:?}")
+                    })?;
+                ensure!(workers > 0, "backend {s:?}: shard needs ≥ 1 worker");
+                Ok(BackendSpec::Shard { workers })
+            }
+            other => bail!(
+                "unknown backend {other:?} (expected local[:T] or shard:N)"
+            ),
+        }
+    }
+
+    /// Build the executor this spec names.  `artifacts` seeds lazy
+    /// hydration (and, for `shard:N`, the worker command line).
+    pub fn build(&self, artifacts: &Path) -> Result<Box<dyn Executor>> {
+        Ok(match *self {
+            BackendSpec::Local { threads } => {
+                Box::new(LocalExec::new(artifacts, threads))
+            }
+            BackendSpec::Shard { workers } => {
+                Box::new(ShardExec::spawn(artifacts, workers)?)
+            }
+        })
+    }
+}
+
+impl std::fmt::Display for BackendSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            BackendSpec::Local { threads: 0 } => write!(f, "local"),
+            BackendSpec::Local { threads } => write!(f, "local:{threads}"),
+            BackendSpec::Shard { workers } => write!(f, "shard:{workers}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LocalExec: the persistent in-process worker pool
+// ---------------------------------------------------------------------------
+
+/// A hydrated, owned job — what the pool workers actually execute.
+enum ReadyJob {
+    Unit {
+        compiled: Arc<Compiled>,
+        out_elems: usize,
+        input: Vec<u8>,
+        max_instrs: u64,
+    },
+    Raw(RawJob),
+}
+
+impl ReadyJob {
+    /// The engine [`Job`] this denotes (borrowing our owned buffers).
+    fn as_job(&self) -> Job<'_> {
+        match self {
+            ReadyJob::Unit { compiled, out_elems, input, max_instrs } => {
+                shard::job_of(compiled, *out_elems, input, *max_instrs)
+            }
+            ReadyJob::Raw(r) => Job {
+                program: Arc::clone(&r.program),
+                dm_size: r.dm_size,
+                base_image: r.base_image.as_deref(),
+                preload: r
+                    .preload
+                    .iter()
+                    .map(|(addr, block)| (*addr, block.as_slice()))
+                    .collect(),
+                input: (r.input.0, r.input.1.as_slice()),
+                output: r.output,
+                max_instrs: r.max_instrs,
+            },
+        }
+    }
+}
+
+/// One in-flight batch, shared with every pool worker.  Hydration
+/// failures occupy their slot as `Err` and are skipped by the cursor
+/// claimants, mirroring `run_descs_local`.
+struct Batch {
+    jobs: Vec<Result<ReadyJob, String>>,
+    /// Work-stealing cursor (same discipline as `run_batch`).
+    next: AtomicUsize,
+    /// Raised on a worker panic so siblings quit claiming jobs.
+    stop: AtomicBool,
+    slots: Slots<Result<JobOutput, SimError>>,
+    /// First worker-panic payload, re-raised on the caller.
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
+}
+
+/// The body of one persistent pool worker: drain each batch's cursor,
+/// recycling one [`Machine`] across every job of every batch.  A panicking
+/// job is *captured* (not re-thrown): the payload parks in the batch for
+/// the caller to re-raise, and the worker survives for the next batch —
+/// only its possibly-corrupt pooled machine is discarded.
+fn pool_worker(rx: mpsc::Receiver<Arc<Batch>>, done: mpsc::Sender<()>) {
+    let mut pool: Option<Machine> = None;
+    for batch in rx {
+        loop {
+            if batch.stop.load(Ordering::Relaxed) {
+                break;
+            }
+            let i = batch.next.fetch_add(1, Ordering::Relaxed);
+            if i >= batch.jobs.len() {
+                break;
+            }
+            let Ok(ready) = &batch.jobs[i] else { continue };
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                || {
+                    let job = ready.as_job();
+                    run_job_pooled(&mut pool, &job)
+                },
+            ));
+            match r {
+                // SAFETY: the cursor handed index i to this worker alone.
+                Ok(res) => unsafe { batch.slots.write(i, res) },
+                Err(p) => {
+                    batch.stop.store(true, Ordering::Relaxed);
+                    let mut first = batch.panic.lock().unwrap();
+                    if first.is_none() {
+                        *first = Some(p);
+                    }
+                    drop(first);
+                    // The machine may hold arbitrary mid-panic state;
+                    // rebuild instead of recycling it.
+                    pool = None;
+                }
+            }
+        }
+        if done.send(()).is_err() {
+            return;
+        }
+    }
+}
+
+/// The in-process backend: a pool of worker threads that persists across
+/// `run` calls (created once, joined when the executor drops), each
+/// recycling one [`Machine`] — the engine's pooling contract without the
+/// per-batch thread spawn/join of [`super::engine::run_batch`].
+///
+/// [`Work::Named`] jobs submitted without a [`Hydrated`] unit are
+/// hydrated lazily on the calling thread from this executor's own
+/// [`Hydrator`] (rooted at `artifacts`), with the description's
+/// fingerprints cross-checked; hydration failures stay at their index as
+/// [`SimError::Remote`].
+pub struct LocalExec {
+    threads: usize,
+    hyd: Hydrator,
+    queue: Vec<JobSpec>,
+    /// One channel per worker; dropping them shuts the pool down.
+    txs: Vec<mpsc::Sender<Arc<Batch>>>,
+    /// One token per worker per batch.
+    done_rx: mpsc::Receiver<()>,
+}
+
+impl LocalExec {
+    /// Spawn a pool of `threads` workers (`0` = one per core, honoring
+    /// the `MARVEL_THREADS` override — see [`default_threads`]).
+    pub fn new(artifacts: &Path, threads: usize) -> LocalExec {
+        let threads = if threads == 0 { default_threads() } else { threads };
+        let (done_tx, done_rx) = mpsc::channel();
+        let txs = (0..threads)
+            .map(|_| {
+                let (tx, rx) = mpsc::channel::<Arc<Batch>>();
+                let done = done_tx.clone();
+                std::thread::Builder::new()
+                    .name("marvel-local-exec".into())
+                    .spawn(move || pool_worker(rx, done))
+                    .expect("spawn local exec worker");
+                tx
+            })
+            .collect();
+        LocalExec {
+            threads,
+            hyd: Hydrator::new(artifacts),
+            queue: Vec::new(),
+            txs,
+            done_rx,
+        }
+    }
+
+    /// Resolve one spec to an executable job (or its per-job error).
+    fn ready(&mut self, spec: JobSpec) -> Result<ReadyJob, String> {
+        match spec.work {
+            Work::Raw(raw) => Ok(ReadyJob::Raw(raw)),
+            Work::Named { desc, hydrated: Some(h) } => Ok(ReadyJob::Unit {
+                compiled: h.compiled,
+                out_elems: h.out_elems,
+                input: desc.input,
+                max_instrs: desc.max_instrs,
+            }),
+            Work::Named { desc, hydrated: None } => {
+                let (compiled, out_elems) = self
+                    .hyd
+                    .hydrate(&desc.model, &desc.variant)
+                    .map_err(|e| format!("{e:#}"))?;
+                shard::check_fingerprints(&desc, &compiled)
+                    .map_err(|e| format!("{e:#}"))?;
+                Ok(ReadyJob::Unit {
+                    compiled,
+                    out_elems,
+                    input: desc.input,
+                    max_instrs: desc.max_instrs,
+                })
+            }
+        }
+    }
+}
+
+impl Executor for LocalExec {
+    fn caps(&self) -> Caps {
+        Caps { persistent_pool: true, cross_process: false }
+    }
+
+    fn describe(&self) -> String {
+        format!("local:{}", self.threads)
+    }
+
+    fn submit(&mut self, job: JobSpec) -> usize {
+        self.queue.push(job);
+        self.queue.len() - 1
+    }
+
+    fn run(&mut self) -> Vec<Result<JobOutput, SimError>> {
+        let specs = std::mem::take(&mut self.queue);
+        if specs.is_empty() {
+            return Vec::new();
+        }
+        let jobs: Vec<Result<ReadyJob, String>> =
+            specs.into_iter().map(|s| self.ready(s)).collect();
+        let n = jobs.len();
+        let batch = Arc::new(Batch {
+            jobs,
+            next: AtomicUsize::new(0),
+            stop: AtomicBool::new(false),
+            slots: Slots::new(n),
+            panic: Mutex::new(None),
+        });
+        for tx in &self.txs {
+            tx.send(Arc::clone(&batch)).expect("local exec worker died");
+        }
+        for _ in &self.txs {
+            self.done_rx.recv().expect("local exec worker died");
+        }
+        if let Some(p) = batch.panic.lock().unwrap().take() {
+            std::panic::resume_unwind(p);
+        }
+        batch
+            .jobs
+            .iter()
+            .enumerate()
+            .map(|(i, j)| match j {
+                Err(msg) => Err(SimError::Remote { msg: msg.clone() }),
+                // SAFETY: every worker has quiesced — the done tokens
+                // above synchronize with their slot writes — and slot i
+                // was written only by the worker that claimed i.
+                Ok(_) => unsafe { batch.slots.take(i) }
+                    .expect("worker filled every slot"),
+            })
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ShardExec: the process pool behind the trait
+// ---------------------------------------------------------------------------
+
+/// The cross-process backend: a [`ShardPool`] of `marvel shard-worker`
+/// processes behind the [`Executor`] trait.  Only the wire half of a
+/// [`Work::Named`] job travels (any [`Hydrated`] unit is dropped — the
+/// worker hydrates from its own cache and the fingerprints catch
+/// divergence); [`Work::Raw`] jobs answer with a capability error at
+/// their index.
+pub struct ShardExec {
+    pool: ShardPool,
+    workers: usize,
+    queue: Vec<JobSpec>,
+}
+
+impl ShardExec {
+    /// Spawn `workers` processes of this very binary (`marvel
+    /// shard-worker --artifacts …`).
+    pub fn spawn(artifacts: &Path, workers: usize) -> Result<ShardExec> {
+        let cmd = WorkerCmd::current_exe(artifacts)?;
+        Ok(ShardExec::from_pool(ShardPool::spawn(&cmd, workers)?, workers))
+    }
+
+    /// Wrap an existing pool (tests use this to inject custom worker
+    /// commands).
+    pub fn from_pool(pool: ShardPool, workers: usize) -> ShardExec {
+        ShardExec { pool, workers, queue: Vec::new() }
+    }
+
+    /// The wrapped pool (respawn counters, live-worker count).
+    pub fn pool(&self) -> &ShardPool {
+        &self.pool
+    }
+}
+
+impl Executor for ShardExec {
+    fn caps(&self) -> Caps {
+        Caps { persistent_pool: true, cross_process: true }
+    }
+
+    fn describe(&self) -> String {
+        format!("shard:{}", self.workers)
+    }
+
+    fn submit(&mut self, job: JobSpec) -> usize {
+        self.queue.push(job);
+        self.queue.len() - 1
+    }
+
+    fn run(&mut self) -> Vec<Result<JobOutput, SimError>> {
+        let specs = std::mem::take(&mut self.queue);
+        // Compact the dispatchable descriptions; remember, per submitted
+        // job, either its desc index or its immediate capability error.
+        let mut descs: Vec<JobDesc> = Vec::with_capacity(specs.len());
+        let routed: Vec<Result<usize, String>> = specs
+            .into_iter()
+            .map(|s| match s.work {
+                Work::Named { desc, .. } => {
+                    descs.push(desc);
+                    Ok(descs.len() - 1)
+                }
+                Work::Raw(_) => Err(
+                    "raw memory-image job on a cross-process backend: \
+                     raw jobs cannot travel the wire (submit a named job, \
+                     or run on a local backend)"
+                        .to_string(),
+                ),
+            })
+            .collect();
+        let mut ran: Vec<Option<Result<JobOutput, SimError>>> =
+            self.pool.run(&descs).into_iter().map(Some).collect();
+        routed
+            .into_iter()
+            .map(|r| match r {
+                Ok(i) => ran[i].take().expect("one result per dispatched job"),
+                Err(msg) => Err(SimError::Remote { msg }),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{AluImmOp, Instr, LoadOp, StoreOp};
+    use crate::sim::V0;
+
+    #[test]
+    fn backend_spec_grammar() {
+        assert_eq!(
+            BackendSpec::parse("local").unwrap(),
+            BackendSpec::Local { threads: 0 }
+        );
+        assert_eq!(
+            BackendSpec::parse("local:8").unwrap(),
+            BackendSpec::Local { threads: 8 }
+        );
+        assert_eq!(
+            BackendSpec::parse("shard:2").unwrap(),
+            BackendSpec::Shard { workers: 2 }
+        );
+        for bad in ["", "local:x", "shard", "shard:0", "shard:x", "remote:1"] {
+            assert!(BackendSpec::parse(bad).is_err(), "{bad:?} must not parse");
+        }
+        // Display round-trips through parse.
+        for s in ["local", "local:8", "shard:2"] {
+            assert_eq!(BackendSpec::parse(s).unwrap().to_string(), s);
+        }
+    }
+
+    /// load x1 <- dm[0]; x1 += k; store dm[4] <- x1; ecall
+    fn add_k_program(k: i32) -> Arc<Program> {
+        Arc::new(
+            Program::from_instrs(
+                V0,
+                vec![
+                    Instr::Load { op: LoadOp::Lb, rd: 1, rs1: 0, offset: 0 },
+                    Instr::OpImm { op: AluImmOp::Addi, rd: 1, rs1: 1, imm: k },
+                    Instr::Store { op: StoreOp::Sb, rs2: 1, rs1: 0, offset: 4 },
+                    Instr::Ecall,
+                ],
+            )
+            .unwrap(),
+        )
+    }
+
+    fn raw_job(p: &Arc<Program>, x: u8, dm_size: usize) -> RawJob {
+        RawJob {
+            program: Arc::clone(p),
+            dm_size,
+            base_image: None,
+            preload: Vec::new(),
+            input: (0, vec![x]),
+            output: (4, 1),
+            max_instrs: 100,
+        }
+    }
+
+    #[test]
+    fn local_exec_runs_raw_jobs_in_submission_order() {
+        let p = add_k_program(10);
+        let mut exec = LocalExec::new(Path::new("artifacts"), 3);
+        assert_eq!(
+            exec.caps(),
+            Caps { persistent_pool: true, cross_process: false }
+        );
+        assert_eq!(exec.describe(), "local:3");
+        for x in 0..20u8 {
+            assert_eq!(exec.submit(JobSpec::raw(raw_job(&p, x, 64))), x as usize);
+        }
+        let rs = exec.run();
+        assert_eq!(rs.len(), 20);
+        for (i, r) in rs.iter().enumerate() {
+            let out = r.as_ref().unwrap();
+            assert_eq!(out.output, vec![i as i32 + 10]);
+            assert_eq!(out.stats.instrs, 4);
+        }
+        // The queue drained; an empty run is an empty result.
+        assert!(exec.run().is_empty());
+    }
+
+    #[test]
+    fn local_exec_errors_stay_at_their_index() {
+        let p = add_k_program(1);
+        let mut exec = LocalExec::new(Path::new("artifacts"), 2);
+        exec.submit(JobSpec::raw(raw_job(&p, 1, 64)));
+        // out-of-bounds input write -> Mem fault at index 1
+        let mut bad = raw_job(&p, 2, 64);
+        bad.input.0 = 1 << 20;
+        exec.submit(JobSpec::raw(bad));
+        // unknown model -> hydration failure at index 2
+        exec.submit(JobSpec::named(JobDesc {
+            model: "synth:nope:1".into(),
+            variant: "v0".into(),
+            input: vec![0],
+            max_instrs: 100,
+            program_fp: 0,
+            base_dm_fp: 0,
+        }));
+        exec.submit(JobSpec::raw(raw_job(&p, 3, 64)));
+        let rs = exec.run();
+        assert!(rs[0].is_ok());
+        assert!(matches!(rs[1], Err(SimError::Mem { .. })));
+        match &rs[2] {
+            Err(SimError::Remote { msg }) => {
+                assert!(msg.contains("synth:nope"), "{msg}")
+            }
+            other => panic!("expected hydration error, got {other:?}"),
+        }
+        assert_eq!(rs[3].as_ref().unwrap().output, vec![4]);
+    }
+
+    #[test]
+    fn local_exec_poison_panics_and_pool_survives() {
+        // dm_size = usize::MAX makes the worker's DM resize panic
+        // ("capacity overflow") — a bug class, not a SimError.  The panic
+        // must reach the caller, and the pool must stay usable.
+        let p = add_k_program(1);
+        let mut exec = LocalExec::new(Path::new("artifacts"), 2);
+        exec.submit(JobSpec::raw(raw_job(&p, 1, 64)));
+        exec.submit(JobSpec::raw(raw_job(&p, 2, usize::MAX)));
+        exec.submit(JobSpec::raw(raw_job(&p, 3, 64)));
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            exec.run()
+        }));
+        assert!(r.is_err(), "poison job must panic the caller");
+        // The persistent pool survives the poison batch.
+        exec.submit(JobSpec::raw(raw_job(&p, 7, 64)));
+        let rs = exec.run();
+        assert_eq!(rs[0].as_ref().unwrap().output, vec![8]);
+    }
+
+    #[test]
+    fn local_exec_results_identical_across_pool_sizes() {
+        let p = add_k_program(5);
+        let mk_specs = || -> Vec<JobSpec> {
+            (0..13u8)
+                .map(|x| {
+                    JobSpec::raw(raw_job(&p, x, if x % 2 == 0 { 64 } else { 256 }))
+                })
+                .collect()
+        };
+        let mut one = LocalExec::new(Path::new("artifacts"), 1);
+        for s in mk_specs() {
+            one.submit(s);
+        }
+        let baseline: Vec<_> =
+            one.run().into_iter().map(|r| r.unwrap()).collect();
+        for threads in [2, 8] {
+            let mut exec = LocalExec::new(Path::new("artifacts"), threads);
+            for s in mk_specs() {
+                exec.submit(s);
+            }
+            let got: Vec<_> =
+                exec.run().into_iter().map(|r| r.unwrap()).collect();
+            assert_eq!(got, baseline, "threads={threads}");
+        }
+    }
+}

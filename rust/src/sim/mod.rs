@@ -16,10 +16,15 @@
 //! threads.  Above the engine sit the process-scale layers (DESIGN.md
 //! §12): [`shard`] partitions a batch across worker *processes* over a
 //! line-JSON wire, and [`serve`] is the async batching front for
-//! latency-oriented inference requests.
+//! latency-oriented inference requests.  [`exec`] is the seam over all of
+//! them (DESIGN.md §13): one `Executor` trait + canonical `JobSpec` that
+//! every sweep-style caller is written against, with `LocalExec`
+//! (persistent in-process pool) and `ShardExec` (process pool) as the two
+//! current backends, selected by a `--backend local[:T]|shard:N` spec.
 
 pub mod cpu;
 pub mod engine;
+pub mod exec;
 pub mod hooks;
 pub mod lowered;
 pub mod memory;
@@ -30,6 +35,8 @@ pub mod shard;
 pub use cpu::{Machine, RunStats, Sim, SimError};
 pub use engine::{run_batch, run_job, run_job_on, run_job_pooled, Job,
                  JobOutput};
+pub use exec::{BackendSpec, Caps, Executor, JobSpec, LocalExec, RawJob,
+               ShardExec};
 pub use hooks::{NopHook, RetireHook, TraceHook};
 pub use lowered::LoweredProgram;
 pub use memory::Memory;

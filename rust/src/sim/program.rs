@@ -8,7 +8,7 @@
 //! stream.  Mutable architectural state (registers, pc, ZOL registers, data
 //! memory) lives exclusively in [`super::Machine`].
 
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use super::cpu::SimError;
 use super::lowered::LoweredProgram;
@@ -31,6 +31,9 @@ pub struct Program {
     /// sweeps re-running one program on many [`super::Machine`]s lower it
     /// exactly once.
     lowered: Mutex<Vec<(CycleModel, Arc<LoweredProgram>)>>,
+    /// Memoized content fingerprint — per-job callers ([`Self::fingerprint`]
+    /// via `shard::desc_for`) must not re-hash the PM image per request.
+    fingerprint: OnceLock<u64>,
 }
 
 impl Program {
@@ -57,6 +60,7 @@ impl Program {
             instrs,
             words: words.to_vec(),
             lowered: Mutex::new(Vec::new()),
+            fingerprint: OnceLock::new(),
         })
     }
 
@@ -81,6 +85,7 @@ impl Program {
             instrs,
             words,
             lowered: Mutex::new(Vec::new()),
+            fingerprint: OnceLock::new(),
         })
     }
 
@@ -125,20 +130,24 @@ impl Program {
     /// identically on the same inputs, so the shard layer uses it to verify
     /// that a worker's locally-hydrated compilation matches the
     /// coordinator's without shipping the instruction stream
-    /// ([`crate::sim::shard`]).
+    /// ([`crate::sim::shard`]).  Memoized: computed once per program, so
+    /// per-request callers (the serve dispatcher, `PreparedFlow::specs`)
+    /// never re-hash the PM image.
     pub fn fingerprint(&self) -> u64 {
-        use crate::util::{fnv1a_extend, FNV_OFFSET};
-        let flags = [
-            self.variant.mac as u8,
-            self.variant.add2i as u8,
-            self.variant.fusedmac as u8,
-            self.variant.zol as u8,
-        ];
-        let mut h = fnv1a_extend(FNV_OFFSET, &flags);
-        for w in &self.words {
-            h = fnv1a_extend(h, &w.to_le_bytes());
-        }
-        h
+        *self.fingerprint.get_or_init(|| {
+            use crate::util::{fnv1a_extend, FNV_OFFSET};
+            let flags = [
+                self.variant.mac as u8,
+                self.variant.add2i as u8,
+                self.variant.fusedmac as u8,
+                self.variant.zol as u8,
+            ];
+            let mut h = fnv1a_extend(FNV_OFFSET, &flags);
+            for w in &self.words {
+                h = fnv1a_extend(h, &w.to_le_bytes());
+            }
+            h
+        })
     }
 
     /// Lower to the baked micro-op form for `cm` (DESIGN.md §11).

@@ -5,16 +5,20 @@
 //! Requests target precompiled `(model, variant)` pairs and are submitted
 //! through a non-blocking channel; a dispatcher thread collects them into
 //! batches bounded by a **time window** (first request arms a deadline) and
-//! a **size cap**, then feeds the whole batch to [`run_batch`] — so the
-//! engine's pooling/parallelism amortizes across concurrent callers the
-//! same way it does across a sweep.  "Async" here is channels + threads
-//! (the offline toolchain has no executor): [`Client::submit`] never blocks
-//! on inference, and the ticket it returns is awaited independently.
+//! a **size cap**, then feeds the whole batch to an [`Executor`]
+//! (DESIGN.md §13) — so the backend's pooling/parallelism amortizes across
+//! concurrent callers the same way it does across a sweep, whether the
+//! backend is the in-process pool (`--backend local`) or a shard of worker
+//! processes (`--backend shard:N`).  "Async" here is channels + threads
+//! (the offline toolchain has no executor runtime): [`Client::submit`]
+//! never blocks on inference, and the ticket it returns is awaited
+//! independently.
 //!
-//! Determinism: one batch's results are computed by the same engine as the
-//! offline path, so a served inference is bit-identical to `marvel run` /
-//! `run_flow` on the same `(model, variant, input)`.  Batching changes only
-//! latency, never logits or `RunStats` — asserted by `tests/shard.rs`.
+//! Determinism: one batch's results are computed by the same contract as
+//! the offline path, so a served inference is bit-identical to `marvel
+//! run` / `run_flow` on the same `(model, variant, input)`, on every
+//! backend.  Batching changes only latency, never logits or `RunStats` —
+//! asserted by `tests/shard.rs` and the executor conformance suite.
 
 use std::collections::HashMap;
 use std::io::{BufRead, Write};
@@ -25,14 +29,15 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Context, Result};
 
 use super::cpu::RunStats;
-use super::engine::{run_batch, Job};
+use super::exec::{Executor, JobSpec};
 use crate::compiler::{CompileCache, Compiled};
 use crate::models;
 use crate::sim::Variant;
 use crate::util::json::{self, ObjBuilder};
 use crate::util::rng::Rng;
 
-/// Batching policy.
+/// Batching policy.  Parallelism is not configured here: it belongs to
+/// the [`Executor`] the server batches into.
 #[derive(Clone, Copy, Debug)]
 pub struct ServeOptions {
     /// How long after the first request of a batch the dispatcher waits
@@ -40,17 +45,11 @@ pub struct ServeOptions {
     pub window: Duration,
     /// Hard batch-size cap: a full batch runs immediately.
     pub max_batch: usize,
-    /// Engine worker threads per batch (0 = one per core).
-    pub threads: usize,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
-        ServeOptions {
-            window: Duration::from_millis(2),
-            max_batch: 64,
-            threads: 0,
-        }
+        ServeOptions { window: Duration::from_millis(2), max_batch: 64 }
     }
 }
 
@@ -58,6 +57,10 @@ impl Default for ServeOptions {
 pub struct ServeModel {
     /// Registry key (see [`model_key`]).
     pub key: String,
+    /// Model name in [`models::resolve`] syntax — the by-reference half of
+    /// the [`JobSpec`]s this unit's requests become (the variant comes
+    /// from `compiled`).
+    pub model: String,
     pub compiled: Arc<Compiled>,
     /// Input image size in bytes (request validation).
     pub in_elems: usize,
@@ -90,6 +93,7 @@ pub fn build_serve_models(
                 .with_context(|| format!("compiling {name} for {}", v.name))?;
             out.push(ServeModel {
                 key: model_key(name, v.name),
+                model: name.clone(),
                 compiled,
                 in_elems: spec.input_elems(),
                 out_elems: spec.output_elems(),
@@ -160,14 +164,20 @@ pub struct Server {
 }
 
 impl Server {
-    /// Start a server over the given units; returns the server handle and
-    /// the first client.
-    pub fn start(units: Vec<ServeModel>, opts: ServeOptions) -> (Server, Client) {
+    /// Start a server over the given units, batching into `exec`; returns
+    /// the server handle and the first client.  The executor moves onto
+    /// the dispatcher thread — a persistent backend keeps its pools warm
+    /// across every batch the server runs.
+    pub fn start(
+        units: Vec<ServeModel>,
+        opts: ServeOptions,
+        exec: Box<dyn Executor>,
+    ) -> (Server, Client) {
         let (tx, rx) = mpsc::channel::<Pending>();
         let registry: HashMap<String, ServeModel> =
             units.into_iter().map(|u| (u.key.clone(), u)).collect();
         let handle =
-            std::thread::spawn(move || dispatcher(rx, registry, opts));
+            std::thread::spawn(move || dispatcher(rx, registry, opts, exec));
         (Server { handle }, Client { tx })
     }
 
@@ -181,6 +191,7 @@ fn dispatcher(
     rx: mpsc::Receiver<Pending>,
     registry: HashMap<String, ServeModel>,
     opts: ServeOptions,
+    mut exec: Box<dyn Executor>,
 ) -> u64 {
     let max_batch = opts.max_batch.max(1);
     let mut batch_seq: u64 = 0;
@@ -229,23 +240,17 @@ fn dispatcher(
                 Some(_) => runnable.push(p),
             }
         }
-        let jobs: Vec<Job<'_>> = runnable
-            .iter()
-            .map(|p| {
-                let u = &registry[&p.key];
-                let c = &u.compiled;
-                Job {
-                    program: Arc::clone(&c.program),
-                    dm_size: c.plan.dm_size as usize,
-                    base_image: Some(&c.base_dm),
-                    preload: Vec::new(),
-                    input: (c.plan.input_addr, &p.input),
-                    output: (c.plan.output_addr, u.out_elems),
-                    max_instrs: 1 << 36,
-                }
-            })
-            .collect();
-        let results = run_batch(&jobs, opts.threads);
+        for p in &runnable {
+            let u = &registry[&p.key];
+            exec.submit(JobSpec::hydrated(
+                &u.model,
+                &u.compiled,
+                u.out_elems,
+                &p.input,
+                1 << 36,
+            ));
+        }
+        let results = exec.run();
         let size = runnable.len();
         for (p, r) in runnable.iter().zip(results) {
             let _ = p.reply.send(match r {
@@ -277,13 +282,14 @@ fn dispatcher(
 pub fn serve_lines(
     units: Vec<ServeModel>,
     opts: ServeOptions,
+    exec: Box<dyn Executor>,
     input: impl BufRead,
     out: impl Write + Send,
 ) -> Result<()> {
     // Input sizes for seed-expansion, before the registry moves.
     let sizes: HashMap<String, usize> =
         units.iter().map(|u| (u.key.clone(), u.in_elems)).collect();
-    let (server, client) = Server::start(units, opts);
+    let (server, client) = Server::start(units, opts, exec);
 
     // The reading loop submits without waiting (so requests read within one
     // window share a batch); a writer thread drains tickets in request
@@ -375,6 +381,7 @@ fn parse_request(
 mod tests {
     use super::*;
     use crate::models::synth::tiny_conv_net;
+    use crate::sim::exec::LocalExec;
     use crate::sim::{V0, V4};
 
     fn units() -> Vec<ServeModel> {
@@ -388,6 +395,10 @@ mod tests {
         .unwrap()
     }
 
+    fn local_exec(threads: usize) -> Box<dyn Executor> {
+        Box::new(LocalExec::new(std::path::Path::new("artifacts"), threads))
+    }
+
     #[test]
     fn serve_matches_direct_execution() {
         let spec = tiny_conv_net(3);
@@ -397,7 +408,8 @@ mod tests {
         let (want, want_stats) =
             crate::compiler::execute(&spec, V4, &input, 1 << 36).unwrap();
 
-        let (server, client) = Server::start(units(), ServeOptions::default());
+        let (server, client) =
+            Server::start(units(), ServeOptions::default(), local_exec(0));
         let r = client
             .infer(&model_key("synth:tiny:3", "v4"), packed)
             .unwrap();
@@ -410,7 +422,8 @@ mod tests {
 
     #[test]
     fn bad_requests_answer_without_jobs() {
-        let (server, client) = Server::start(units(), ServeOptions::default());
+        let (server, client) =
+            Server::start(units(), ServeOptions::default(), local_exec(1));
         let e = client.infer("nope@v4", vec![0; 4]).unwrap_err().to_string();
         assert!(e.contains("unknown model key"), "{e}");
         let e = client
@@ -426,12 +439,9 @@ mod tests {
     fn window_batches_concurrent_requests() {
         let spec = tiny_conv_net(3);
         let n_in = spec.input_elems();
-        let opts = ServeOptions {
-            window: Duration::from_millis(200),
-            max_batch: 8,
-            threads: 2,
-        };
-        let (server, client) = Server::start(units(), opts);
+        let opts =
+            ServeOptions { window: Duration::from_millis(200), max_batch: 8 };
+        let (server, client) = Server::start(units(), opts, local_exec(2));
         // Submit 4 requests inside one window, then wait: they must share
         // a batch (size > 1) and each match the offline engine.
         let tickets: Vec<(Vec<u8>, Ticket)> = (0..4u64)
@@ -471,6 +481,7 @@ mod tests {
         serve_lines(
             units(),
             ServeOptions::default(),
+            local_exec(0),
             std::io::Cursor::new(reqs),
             &mut out,
         )

@@ -32,7 +32,10 @@
 //! kills [`POISON_DEATHS`] workers — or the death of every worker — is
 //! propagated to the caller as a panic, exactly like a panicking job in the
 //! thread pool.  Re-dispatch is idempotent: jobs are pure, duplicate
-//! results are byte-identical and the first one wins.
+//! results are byte-identical and the first one wins.  A dead worker slot
+//! is additionally *relaunched* in place up to [`RESPAWN_ATTEMPTS`] times
+//! (fresh process, fresh hydration cache) — death attribution happens
+//! before the respawn, so the poison contract is unchanged.
 //!
 //! **Determinism** — `run` merges results by submission order (`results[i]`
 //! ↔ `descs[i]`), so the output is byte-identical for any worker count,
@@ -60,6 +63,14 @@ use crate::util::json::{self, ObjBuilder, Value};
 /// accumulates this many attributed deaths is declared poison and
 /// propagated as a panic (the process analogue of a panicking thread job).
 pub const POISON_DEATHS: u32 = 2;
+
+/// How many times a dead worker slot is relaunched before it is retired
+/// for good and its jobs fall back to survivors.  Respawn restores pool
+/// capacity after a transient death (OOM kill, node hiccup) without
+/// weakening the poison contract: death attribution happens before the
+/// respawn, so a job that keeps killing its workers still panics after
+/// [`POISON_DEATHS`] deaths.
+pub const RESPAWN_ATTEMPTS: u32 = 2;
 
 /// Max jobs kept in flight per worker: deep enough to hide the pipe
 /// round-trip behind execution, shallow enough that a death re-dispatches
@@ -153,7 +164,7 @@ pub fn desc_for(
         input: input.to_vec(),
         max_instrs,
         program_fp: c.program.fingerprint(),
-        base_dm_fp: fnv1a(&c.base_dm),
+        base_dm_fp: c.base_dm_fp(),
     }
 }
 
@@ -328,7 +339,7 @@ impl Hydrator {
     }
 }
 
-fn check_fingerprints(desc: &JobDesc, c: &Compiled) -> Result<()> {
+pub(crate) fn check_fingerprints(desc: &JobDesc, c: &Compiled) -> Result<()> {
     if desc.program_fp != 0 {
         let got = c.program.fingerprint();
         ensure!(
@@ -341,7 +352,7 @@ fn check_fingerprints(desc: &JobDesc, c: &Compiled) -> Result<()> {
         );
     }
     if desc.base_dm_fp != 0 {
-        let got = fnv1a(&c.base_dm);
+        let got = c.base_dm_fp();
         ensure!(
             got == desc.base_dm_fp,
             "base-DM fingerprint mismatch for {} on {}: coordinator {:016x}, \
@@ -356,8 +367,9 @@ fn check_fingerprints(desc: &JobDesc, c: &Compiled) -> Result<()> {
 
 /// The engine [`Job`] a hydrated description denotes (the wire-side twin of
 /// [`crate::compiler::make_job`], which takes the spec the worker folded
-/// into `out_elems` at hydration).
-fn job_of<'a>(
+/// into `out_elems` at hydration).  Also the job builder of
+/// [`crate::sim::exec::LocalExec`]'s hydrated path.
+pub(crate) fn job_of<'a>(
     c: &'a Compiled,
     out_elems: usize,
     input: &'a [u8],
@@ -475,8 +487,8 @@ impl WorkerCmd {
 }
 
 enum Event {
-    Msg { worker: usize, msg: Msg },
-    Dead { worker: usize, reason: String },
+    Msg { worker: usize, gen: u64, msg: Msg },
+    Dead { worker: usize, gen: u64, reason: String },
 }
 
 /// One result slot per submitted job (`None` = not yet merged).
@@ -486,6 +498,10 @@ struct Worker {
     child: Child,
     stdin: Option<ChildStdin>,
     alive: bool,
+    /// Incarnation counter for this slot: events from a replaced process
+    /// (its reader thread races the respawn) carry the old generation and
+    /// must not be charged to the new one.
+    gen: u64,
     /// Job indices (current `run` call) dispatched here and not yet done.
     outstanding: HashSet<usize>,
 }
@@ -493,11 +509,19 @@ struct Worker {
 /// A pool of worker processes executing [`JobDesc`] batches with
 /// submission-ordered merge (see the module docs for the failure model).
 /// Workers stay warm across `run` calls, so a sweep's later batches reuse
-/// every compilation the first one hydrated.
+/// every compilation the first one hydrated.  A worker slot whose process
+/// dies is relaunched in place up to [`RESPAWN_ATTEMPTS`] times (its jobs
+/// are requeued either way — the respawn only restores capacity).
 pub struct ShardPool {
     workers: Vec<Worker>,
     rx: mpsc::Receiver<Event>,
+    tx: mpsc::Sender<Event>,
+    cmd: WorkerCmd,
     next_seq: u64,
+    gen_counter: u64,
+    /// Remaining relaunches per worker slot.
+    respawns_left: Vec<u32>,
+    respawns_used: u32,
 }
 
 impl ShardPool {
@@ -505,61 +529,123 @@ impl ShardPool {
     pub fn spawn(cmd: &WorkerCmd, n: usize) -> Result<ShardPool> {
         ensure!(n > 0, "shard pool needs at least one worker");
         let (tx, rx) = mpsc::channel();
-        let mut workers = Vec::with_capacity(n);
-        for worker in 0..n {
-            let mut child = Command::new(&cmd.program)
-                .args(&cmd.args)
-                .stdin(Stdio::piped())
-                .stdout(Stdio::piped())
-                .spawn()
-                .with_context(|| {
-                    format!("spawning shard worker {}", cmd.program.display())
-                })?;
-            let stdin = child.stdin.take();
-            let stdout = child.stdout.take().expect("piped stdout");
-            let tx = tx.clone();
-            std::thread::spawn(move || {
-                let rd = BufReader::new(stdout);
-                for line in rd.lines() {
-                    let event = match line {
-                        Ok(l) if l.trim().is_empty() => continue,
-                        Ok(l) => match parse_line(&l) {
-                            Ok(msg) => Event::Msg { worker, msg },
-                            Err(e) => {
-                                let _ = tx.send(Event::Dead {
-                                    worker,
-                                    reason: format!("protocol error: {e:#}"),
-                                });
-                                return;
-                            }
-                        },
+        let workers = (0..n)
+            .map(|worker| Self::spawn_worker(cmd, worker, worker as u64, &tx))
+            .collect::<Result<Vec<Worker>>>()?;
+        Ok(ShardPool {
+            workers,
+            rx,
+            tx,
+            cmd: cmd.clone(),
+            next_seq: 0,
+            gen_counter: n as u64,
+            respawns_left: vec![RESPAWN_ATTEMPTS; n],
+            respawns_used: 0,
+        })
+    }
+
+    /// Spawn one worker process + its stdout reader thread for slot
+    /// `worker`, incarnation `gen`.
+    fn spawn_worker(
+        cmd: &WorkerCmd,
+        worker: usize,
+        gen: u64,
+        tx: &mpsc::Sender<Event>,
+    ) -> Result<Worker> {
+        let mut child = Command::new(&cmd.program)
+            .args(&cmd.args)
+            .stdin(Stdio::piped())
+            .stdout(Stdio::piped())
+            .spawn()
+            .with_context(|| {
+                format!("spawning shard worker {}", cmd.program.display())
+            })?;
+        let stdin = child.stdin.take();
+        let stdout = child.stdout.take().expect("piped stdout");
+        let tx = tx.clone();
+        std::thread::spawn(move || {
+            let rd = BufReader::new(stdout);
+            for line in rd.lines() {
+                let event = match line {
+                    Ok(l) if l.trim().is_empty() => continue,
+                    Ok(l) => match parse_line(&l) {
+                        Ok(msg) => Event::Msg { worker, gen, msg },
                         Err(e) => {
                             let _ = tx.send(Event::Dead {
                                 worker,
-                                reason: format!("read error: {e}"),
+                                gen,
+                                reason: format!("protocol error: {e:#}"),
                             });
                             return;
                         }
-                    };
-                    if tx.send(event).is_err() {
+                    },
+                    Err(e) => {
+                        let _ = tx.send(Event::Dead {
+                            worker,
+                            gen,
+                            reason: format!("read error: {e}"),
+                        });
                         return;
                     }
+                };
+                if tx.send(event).is_err() {
+                    return;
                 }
-                let _ = tx.send(Event::Dead { worker, reason: "eof".into() });
-            });
-            workers.push(Worker {
-                child,
-                stdin,
-                alive: true,
-                outstanding: HashSet::new(),
-            });
+            }
+            let _ = tx.send(Event::Dead { worker, gen, reason: "eof".into() });
+        });
+        Ok(Worker {
+            child,
+            stdin,
+            alive: true,
+            gen,
+            outstanding: HashSet::new(),
+        })
+    }
+
+    /// Relaunch a dead worker slot, consuming one unit of its
+    /// [`RESPAWN_ATTEMPTS`] budget per spawn attempt (a failed spawn —
+    /// transient fork/exec errors — retries until the budget is spent, so
+    /// a slot is only retired with its budget exhausted).  The old
+    /// incarnation was already killed/requeued; a fresh process (new
+    /// generation) takes over the slot and is immediately dispatchable.
+    fn try_respawn(&mut self, worker: usize) {
+        while self.respawns_left[worker] > 0 {
+            self.respawns_left[worker] -= 1;
+            self.gen_counter += 1;
+            match Self::spawn_worker(
+                &self.cmd,
+                worker,
+                self.gen_counter,
+                &self.tx,
+            ) {
+                Ok(w) => {
+                    self.respawns_used += 1;
+                    eprintln!(
+                        "shard worker {worker} respawned ({} attempts left)",
+                        self.respawns_left[worker]
+                    );
+                    self.workers[worker] = w;
+                    return;
+                }
+                Err(e) => eprintln!(
+                    "shard worker {worker} respawn failed ({} attempts \
+                     left): {e:#}",
+                    self.respawns_left[worker]
+                ),
+            }
         }
-        Ok(ShardPool { workers, rx, next_seq: 0 })
     }
 
     /// Live worker count (before a run, this is the spawn count).
     pub fn live_workers(&self) -> usize {
         self.workers.iter().filter(|w| w.alive).count()
+    }
+
+    /// How many dead workers have been relaunched over the pool's
+    /// lifetime (observability + the respawn tests).
+    pub fn respawns_used(&self) -> u32 {
+        self.respawns_used
     }
 
     /// Execute a batch across the pool.  `results[i]` corresponds to
@@ -615,7 +701,7 @@ impl ShardPool {
             };
             match event {
                 Event::Msg { msg: Msg::Ready, .. } => {}
-                Event::Msg { worker, msg: Msg::Done { seq, result } } => {
+                Event::Msg { worker, gen, msg: Msg::Done { seq, result } } => {
                     let Some(i) = seq.checked_sub(base).map(|d| d as usize)
                     else {
                         continue; // stale: previous run
@@ -623,7 +709,13 @@ impl ShardPool {
                     if i >= n {
                         continue;
                     }
-                    self.workers[worker].outstanding.remove(&i);
+                    // A result is mergeable whatever its generation (jobs
+                    // are pure — a late result from a replaced process is
+                    // byte-identical), but only the current incarnation's
+                    // pipeline bookkeeping may be touched.
+                    if gen == self.workers[worker].gen {
+                        self.workers[worker].outstanding.remove(&i);
+                    }
                     if results[i].is_none() {
                         results[i] = Some(
                             result
@@ -632,7 +724,10 @@ impl ShardPool {
                         done += 1;
                     }
                 }
-                Event::Msg { worker, msg: Msg::Job { .. } } => {
+                Event::Msg { worker, gen, msg: Msg::Job { .. } } => {
+                    if gen != self.workers[worker].gen {
+                        continue; // a replaced process's last gasp
+                    }
                     // A worker must never send jobs; treat as corruption.
                     self.kill_worker(worker, "sent a job message");
                     Self::requeue(
@@ -642,10 +737,13 @@ impl ShardPool {
                         &mut deaths,
                         descs,
                     );
+                    self.try_respawn(worker);
                 }
-                Event::Dead { worker, reason } => {
-                    if !self.workers[worker].alive {
-                        continue;
+                Event::Dead { worker, gen, reason } => {
+                    if gen != self.workers[worker].gen
+                        || !self.workers[worker].alive
+                    {
+                        continue; // already handled (or a replaced process)
                     }
                     self.kill_worker(worker, &reason);
                     Self::requeue(
@@ -655,6 +753,7 @@ impl ShardPool {
                         &mut deaths,
                         descs,
                     );
+                    self.try_respawn(worker);
                 }
             }
         }
@@ -724,13 +823,14 @@ impl ShardPool {
                 dispatched[i].push(w);
             } else {
                 // Broken pipe: handle the death here in full (the reader
-                // thread's Dead event for this worker is then a no-op) so
-                // its outstanding jobs requeue exactly once.
+                // thread's Dead event carries the replaced generation and
+                // is ignored) so its outstanding jobs requeue exactly once.
                 queue.push_front(i);
                 self.kill_worker(w, "stdin write failed");
                 Self::requeue(
                     &mut self.workers[w], results, queue, deaths, descs,
                 );
+                self.try_respawn(w);
             }
         }
     }

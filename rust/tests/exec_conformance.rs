@@ -1,0 +1,296 @@
+//! Executor conformance suite (DESIGN.md §13): one shared harness, run
+//! against every backend of the matrix, proving the contract the
+//! `Executor` trait promises:
+//!
+//! 1. **Determinism + bit-identity** — the same batch run twice on the
+//!    same executor, and once on every other backend, produces identical
+//!    logits and `RunStats` (equal to the `run_descs_local` reference).
+//! 2. **Submission order** — `results[i]` corresponds to the job whose
+//!    `submit` returned `i`; per-job failures (watchdog, hydration) stay
+//!    at their index.
+//! 3. **DM-size interleaving** — the batch round-robins models with
+//!    different data-memory footprints, so pooled machines rebind/reset
+//!    across sizes without leaking bytes.
+//! 4. **Poison-job panic propagation** — a job that panics a worker
+//!    thread (local) or keeps killing worker processes (shard) panics the
+//!    caller instead of returning a partial result.
+//! 5. **Capabilities** — `Work::Raw` jobs run in-process but are refused,
+//!    at their index, by a `cross_process` backend.
+//!
+//! Like `tests/shard.rs`, the process-spawning cases use the real
+//! `marvel` binary (`CARGO_BIN_EXE_marvel`) and synthetic models, so no
+//! artifacts directory is needed.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use marvel::compiler::pack_input;
+use marvel::isa::{AluImmOp, Instr, LoadOp, StoreOp};
+use marvel::sim::exec::{Executor, JobSpec, LocalExec, RawJob, ShardExec};
+use marvel::sim::shard::{self, run_descs_local, JobDesc, ShardPool,
+                         WorkerCmd};
+use marvel::sim::{Program, SimError, V0, V4};
+use marvel::util::rng::Rng;
+
+fn marvel_worker_cmd() -> WorkerCmd {
+    WorkerCmd {
+        program: PathBuf::from(env!("CARGO_BIN_EXE_marvel")),
+        args: vec![
+            "shard-worker".to_string(),
+            "--artifacts".to_string(),
+            "artifacts".to_string(),
+        ],
+    }
+}
+
+/// The backend matrix every conformance check runs against.
+fn backends() -> Vec<Box<dyn Executor>> {
+    vec![
+        Box::new(LocalExec::new(Path::new("artifacts"), 1)),
+        Box::new(LocalExec::new(Path::new("artifacts"), 4)),
+        Box::new(ShardExec::from_pool(
+            ShardPool::spawn(&marvel_worker_cmd(), 2).unwrap(),
+            2,
+        )),
+    ]
+}
+
+/// Deterministic job descriptions over a small synthetic zoo,
+/// round-robin-interleaved across models so consecutive jobs have
+/// different DM footprints (the pool rebind/reset stress of DESIGN.md §3).
+fn zoo_descs(n_inputs: usize) -> Vec<JobDesc> {
+    let artifacts = Path::new("artifacts");
+    let mut hyd = shard::Hydrator::new(artifacts);
+    let models = ["synth:tiny:3", "synth:lenet:5", "synth:residual:7"];
+    let mut per_model: Vec<Vec<JobDesc>> = Vec::new();
+    for (mi, model) in models.iter().enumerate() {
+        let spec = marvel::models::resolve(artifacts, model).unwrap();
+        let mut rng = Rng::new(500 + mi as u64);
+        let mut descs = Vec::new();
+        for v in [V0, V4] {
+            let (c, _) = hyd.hydrate(model, v.name).unwrap();
+            for _ in 0..n_inputs {
+                let input = marvel::models::synth::Builder::random_input(
+                    &spec, &mut rng,
+                );
+                let packed = pack_input(&input).unwrap();
+                descs.push(shard::desc_for(model, &c, &packed, 1 << 33));
+            }
+        }
+        per_model.push(descs);
+    }
+    let mut out = Vec::new();
+    let longest = per_model.iter().map(Vec::len).max().unwrap();
+    for i in 0..longest {
+        for m in &per_model {
+            if let Some(d) = m.get(i) {
+                out.push(d.clone());
+            }
+        }
+    }
+    out
+}
+
+/// load x1 <- dm[0]; x1 += 1; store dm[4] <- x1; ecall
+fn add_one_program() -> Arc<Program> {
+    Arc::new(
+        Program::from_instrs(
+            V0,
+            vec![
+                Instr::Load { op: LoadOp::Lb, rd: 1, rs1: 0, offset: 0 },
+                Instr::OpImm { op: AluImmOp::Addi, rd: 1, rs1: 1, imm: 1 },
+                Instr::Store { op: StoreOp::Sb, rs2: 1, rs1: 0, offset: 4 },
+                Instr::Ecall,
+            ],
+        )
+        .unwrap(),
+    )
+}
+
+fn raw_add_job(x: u8, dm_size: usize) -> RawJob {
+    RawJob {
+        program: add_one_program(),
+        dm_size,
+        base_image: None,
+        preload: Vec::new(),
+        input: (0, vec![x]),
+        output: (4, 1),
+        max_instrs: 100,
+    }
+}
+
+/// Checks 1–3: every backend, twice (the second round proves persistent
+/// state never leaks into results), against the in-process reference —
+/// including an erroring job pinned mid-batch.
+#[test]
+fn every_backend_matches_reference_bit_for_bit() {
+    let mut descs = zoo_descs(2);
+    // One failing job mid-batch: an absurd watchdog budget.  Its error
+    // must stay exactly at this index on every backend.
+    let mut starved = descs[0].clone();
+    starved.max_instrs = 1;
+    descs.insert(3, starved);
+    let reference = run_descs_local(Path::new("artifacts"), &descs, 0);
+    assert!(reference[3].is_err(), "the starved job must fail");
+
+    for mut exec in backends() {
+        let name = exec.describe();
+        assert!(exec.caps().persistent_pool, "{name}: pools persist");
+        for round in 0..2 {
+            for (i, d) in descs.iter().enumerate() {
+                assert_eq!(
+                    exec.submit(JobSpec::named(d.clone())),
+                    i,
+                    "{name}: submit returns the submission index"
+                );
+            }
+            let got = exec.run();
+            assert_eq!(got.len(), reference.len(), "{name} round {round}");
+            for (i, (g, r)) in got.iter().zip(&reference).enumerate() {
+                match (g, r) {
+                    (Ok(g), Ok(r)) => {
+                        assert_eq!(
+                            g.output, r.output,
+                            "{name} round {round} job {i}: logits diverged"
+                        );
+                        assert_eq!(
+                            g.stats, r.stats,
+                            "{name} round {round} job {i}: stats diverged"
+                        );
+                    }
+                    (Err(_), Err(_)) => {}
+                    (g, r) => panic!(
+                        "{name} round {round} job {i}: {g:?} vs {r:?}"
+                    ),
+                }
+            }
+        }
+    }
+}
+
+/// A lazily-hydrated spec (wire description only) and an eagerly-hydrated
+/// one (submitter's compilation attached) are the same job.
+#[test]
+fn lazy_and_eager_hydration_agree() {
+    let artifacts = Path::new("artifacts");
+    let descs = zoo_descs(1);
+    let reference = run_descs_local(artifacts, &descs, 0);
+    let mut hyd = shard::Hydrator::new(artifacts);
+    let mut exec = LocalExec::new(artifacts, 2);
+    for d in &descs {
+        let (c, n) = hyd.hydrate(&d.model, &d.variant).unwrap();
+        exec.submit(JobSpec::hydrated(
+            &d.model, &c, n, &d.input, d.max_instrs,
+        ));
+    }
+    for (i, (g, r)) in exec.run().iter().zip(&reference).enumerate() {
+        assert_eq!(g.as_ref().unwrap(), r.as_ref().unwrap(), "job {i}");
+    }
+}
+
+/// Check 2 (hydration flavor): an unresolvable model is a per-job error
+/// at its index on every backend, never a batch failure.
+#[test]
+fn hydration_failure_stays_at_its_index_on_every_backend() {
+    let mut descs = zoo_descs(1);
+    let mut unknown = descs[0].clone();
+    unknown.model = "synth:nope:1".into();
+    descs.insert(1, unknown);
+    let reference = run_descs_local(Path::new("artifacts"), &descs, 0);
+
+    for mut exec in backends() {
+        let name = exec.describe();
+        for d in &descs {
+            exec.submit(JobSpec::named(d.clone()));
+        }
+        let got = exec.run();
+        match &got[1] {
+            Err(SimError::Remote { msg }) => {
+                assert!(msg.contains("synth:nope"), "{name}: {msg}")
+            }
+            other => panic!("{name}: expected hydration error, got {other:?}"),
+        }
+        for (i, (g, r)) in got.iter().zip(&reference).enumerate() {
+            if i == 1 {
+                continue;
+            }
+            assert_eq!(
+                g.as_ref().unwrap(),
+                r.as_ref().unwrap(),
+                "{name} job {i}"
+            );
+        }
+    }
+}
+
+/// Check 4, local flavor: a job that panics its worker thread (DM resize
+/// capacity overflow — a bug class, not a `SimError`) panics the caller.
+#[test]
+fn poison_job_panics_local_backend() {
+    let mut exec = LocalExec::new(Path::new("artifacts"), 2);
+    exec.submit(JobSpec::raw(raw_add_job(1, 64)));
+    exec.submit(JobSpec::raw(raw_add_job(2, usize::MAX)));
+    exec.submit(JobSpec::raw(raw_add_job(3, 64)));
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        exec.run()
+    }));
+    assert!(r.is_err(), "local poison job must panic the caller");
+}
+
+/// Check 4, shard flavor: a pool whose workers keep dying on every job
+/// (respawn budget included) propagates as a panic, mirroring the
+/// in-process contract.
+#[test]
+fn poison_job_panics_shard_backend() {
+    let cmd = WorkerCmd {
+        program: PathBuf::from("/bin/sh"),
+        args: vec![
+            "-c".to_string(),
+            "echo '{\"type\":\"ready\",\"version\":\"stub\"}'; read line; \
+             exit 1"
+                .to_string(),
+        ],
+    };
+    let mut exec =
+        ShardExec::from_pool(ShardPool::spawn(&cmd, 2).unwrap(), 2);
+    for d in zoo_descs(1).into_iter().take(2) {
+        exec.submit(JobSpec::named(d));
+    }
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        exec.run()
+    }));
+    assert!(r.is_err(), "shard poison job must panic the caller");
+}
+
+/// Check 5: raw memory-image jobs run in-process but a `cross_process`
+/// backend refuses them at their index — named neighbors still run.
+#[test]
+fn raw_jobs_refused_by_cross_process_backend() {
+    let descs = zoo_descs(1);
+    let reference = run_descs_local(Path::new("artifacts"), &descs[..2], 0);
+
+    // In-process: the raw job simply runs.
+    let mut local = LocalExec::new(Path::new("artifacts"), 2);
+    assert!(!local.caps().cross_process);
+    local.submit(JobSpec::raw(raw_add_job(41, 64)));
+    assert_eq!(local.run()[0].as_ref().unwrap().output, vec![42]);
+
+    // Cross-process: refused at its index, neighbors unharmed.
+    let mut exec = ShardExec::from_pool(
+        ShardPool::spawn(&marvel_worker_cmd(), 1).unwrap(),
+        1,
+    );
+    assert!(exec.caps().cross_process);
+    exec.submit(JobSpec::named(descs[0].clone()));
+    exec.submit(JobSpec::raw(raw_add_job(41, 64)));
+    exec.submit(JobSpec::named(descs[1].clone()));
+    let rs = exec.run();
+    assert_eq!(rs[0].as_ref().unwrap(), reference[0].as_ref().unwrap());
+    match &rs[1] {
+        Err(SimError::Remote { msg }) => {
+            assert!(msg.contains("cross-process"), "{msg}")
+        }
+        other => panic!("expected capability refusal, got {other:?}"),
+    }
+    assert_eq!(rs[2].as_ref().unwrap(), reference[1].as_ref().unwrap());
+}

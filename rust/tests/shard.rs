@@ -5,10 +5,12 @@
 //! 2. **Differential** — a 2+-process sharded model-zoo sweep produces
 //!    bit-identical logits and `RunStats` to the in-process engine, at the
 //!    raw job level (`ShardPool::run` vs `run_descs_local`) and at the
-//!    flow level (`run_flows_sharded` vs `run_flows_cached`).
+//!    flow level (`run_flows` on `ShardExec` vs on `LocalExec`).
 //! 3. **Failure model** — a worker death re-dispatches its jobs to
-//!    survivors (results still complete and correct); losing every worker
-//!    propagates as a panic, mirroring the in-process contract.
+//!    survivors (results still complete and correct), a dead worker slot
+//!    respawns so even a 1-worker pool survives a mid-sweep kill, and
+//!    losing every worker (respawn budget included) propagates as a
+//!    panic, mirroring the in-process contract.
 //! 4. **Serving** — the async batching front answers with the same bytes
 //!    the offline engine produces.
 //!
@@ -19,8 +21,9 @@
 use std::path::{Path, PathBuf};
 
 use marvel::compiler::CompileCache;
-use marvel::coordinator::experiments::{run_flows_cached, run_flows_sharded};
+use marvel::coordinator::experiments::run_flows;
 use marvel::coordinator::FlowOptions;
+use marvel::sim::exec::{LocalExec, ShardExec};
 use marvel::sim::shard::{
     self, desc_for, encode_job, encode_result, parse_line, run_descs_local,
     JobDesc, Msg, ShardPool, WorkerCmd,
@@ -232,8 +235,10 @@ fn two_process_shard_sweep_bit_identical_to_in_process() {
     }
 }
 
-/// Flow-level differential: `run_flows_sharded` ≡ `run_flows_cached` on
-/// verification outcome and every per-variant metric.
+/// Flow-level differential: `run_flows` on a `ShardExec` backend ≡ the
+/// same sweep on `LocalExec`, on verification outcome and every
+/// per-variant metric — the acceptance contract of the one
+/// executor-driven entry point.
 #[test]
 fn sharded_flows_match_cached_flows() {
     let artifacts = Path::new("artifacts");
@@ -244,10 +249,16 @@ fn sharded_flows_match_cached_flows() {
         ..FlowOptions::default()
     };
     let cache = CompileCache::new();
-    let local = run_flows_cached(artifacts, &models, &opts, &cache).unwrap();
-    let mut pool = ShardPool::spawn(&marvel_worker_cmd(), 3).unwrap();
+    let mut local_exec = LocalExec::new(artifacts, 0);
+    let local =
+        run_flows(artifacts, &models, &opts, &cache, &mut local_exec)
+            .unwrap();
+    let mut shard_exec = ShardExec::from_pool(
+        ShardPool::spawn(&marvel_worker_cmd(), 3).unwrap(),
+        3,
+    );
     let sharded =
-        run_flows_sharded(artifacts, &models, &opts, &cache, &mut pool)
+        run_flows(artifacts, &models, &opts, &cache, &mut shard_exec)
             .unwrap();
 
     assert_eq!(local.len(), sharded.len());
@@ -355,6 +366,56 @@ fn mixed_pool_death_still_completes_batch() {
     }
 }
 
+/// Auto-respawn: a 1-worker pool whose only worker is killed mid-sweep
+/// (the stub dies after receiving its first job) must relaunch the slot
+/// and still produce results bit-identical to the in-process engine.
+/// Without respawn this configuration is fatal — the pool would panic on
+/// total worker loss — so completion alone proves the relaunch, and
+/// `respawns_used` pins it down.
+#[test]
+fn dead_worker_respawns_and_batch_completes() {
+    let real = marvel_worker_cmd();
+    let descs = descs_for_zoo(&zoo()[..2], 2);
+    let local = run_descs_local(Path::new("artifacts"), &descs, 0);
+
+    // File-based turnstile (one flag dir per test): the first spawn is a
+    // stub that dies on its first job — the mid-sweep kill — and every
+    // respawn execs the real worker.
+    let dir = std::env::temp_dir().join(format!(
+        "marvel-respawn-test-{}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    let flag = dir.join("first");
+    let script = format!(
+        "if mkdir {f} 2>/dev/null; then \
+           echo '{{\"type\":\"ready\",\"version\":\"stub\"}}'; \
+           read line; exit 1; \
+         else exec {prog} shard-worker --artifacts artifacts; fi",
+        f = flag.display(),
+        prog = real.program.display(),
+    );
+    let cmd = WorkerCmd {
+        program: PathBuf::from("/bin/sh"),
+        args: vec!["-c".to_string(), script],
+    };
+    let mut pool = ShardPool::spawn(&cmd, 1).unwrap();
+    let r = pool.run(&descs);
+    let _ = std::fs::remove_dir_all(&dir);
+    assert!(
+        pool.respawns_used() >= 1,
+        "the killed worker must have been relaunched"
+    );
+    assert_eq!(pool.live_workers(), 1);
+    for (i, (a, l)) in r.iter().zip(&local).enumerate() {
+        assert_eq!(
+            a.as_ref().unwrap(),
+            l.as_ref().unwrap(),
+            "job {i} after worker respawn"
+        );
+    }
+}
+
 // ---------------------------------------------------------------------------
 // 4. Serving front end-to-end (library level; the CLI line protocol has
 //    its own unit tests and the CI smoke)
@@ -379,8 +440,8 @@ fn serve_front_matches_offline_engine() {
         ServeOptions {
             window: std::time::Duration::from_millis(100),
             max_batch: 16,
-            threads: 2,
         },
+        Box::new(LocalExec::new(artifacts, 2)),
     );
 
     // Mirror requests through the offline engine via descs.

@@ -1,0 +1,142 @@
+#!/usr/bin/env python3
+"""Bench trend dashboard: render BENCH_iss.json measurements across the
+last N CI runs into a small markdown/ASCII report (ROADMAP item — the
+trajectory view next to tools/bench_gate.py's pairwise gate).
+
+Each input file holds one JSON object per line (see rust/benches/common.rs):
+
+    {"name": "...", "median_s": ..., "min_s": ..., "mean_s": ..., "units_per_s": ...}
+
+Files are given OLDEST FIRST; the last file is the current run.  For every
+measurement name seen anywhere, the dashboard shows a sparkline of
+`units_per_s` across the runs (missing runs render as a gap), the oldest
+and newest values, and the total change.  Unparseable or empty files are
+tolerated — CI artifact retrieval is best-effort.
+
+Usage: bench_trend.py OLDEST.json [...] CURRENT.json [--out BENCH_trend.md]
+"""
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+SPARK = "▁▂▃▄▅▆▇█"
+GAP = "·"
+
+
+def load(path: Path) -> dict[str, float]:
+    """name -> units_per_s for every parseable line with a throughput."""
+    out: dict[str, float] = {}
+    if not path.exists():
+        return out
+    for line in path.read_text().splitlines():
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            row = json.loads(line)
+        except json.JSONDecodeError:
+            continue
+        ups = row.get("units_per_s")
+        if isinstance(ups, (int, float)) and ups > 0 and "name" in row:
+            # Keep the best rep if a name repeats across bench invocations.
+            out[row["name"]] = max(ups, out.get(row["name"], 0.0))
+    return out
+
+
+def sparkline(values: list[float | None]) -> str:
+    """Unicode sparkline, normalized per measurement; None renders a gap."""
+    present = [v for v in values if v is not None]
+    if not present:
+        return GAP * len(values)
+    lo, hi = min(present), max(present)
+    span = hi - lo
+    chars = []
+    for v in values:
+        if v is None:
+            chars.append(GAP)
+        elif span <= 0:
+            chars.append(SPARK[-1])
+        else:
+            idx = int((v - lo) / span * (len(SPARK) - 1))
+            chars.append(SPARK[idx])
+    return "".join(chars)
+
+
+def fmt(v: float | None) -> str:
+    if v is None:
+        return "-"
+    if v >= 1e9:
+        return f"{v / 1e9:.2f}G"
+    if v >= 1e6:
+        return f"{v / 1e6:.2f}M"
+    if v >= 1e3:
+        return f"{v / 1e3:.2f}k"
+    return f"{v:.1f}"
+
+
+def render(runs: list[dict[str, float]], labels: list[str]) -> str:
+    names = sorted({n for r in runs for n in r})
+    lines = [
+        f"# Bench trend — {len(runs)} runs (oldest → newest)",
+        "",
+        "Throughput (`units_per_s`) per measurement across the last CI "
+        "artifacts; sparkline is normalized per row.",
+        "",
+        "| measurement | trend | oldest | newest | Δ |",
+        "|---|---|---:|---:|---:|",
+    ]
+    for name in names:
+        values = [r.get(name) for r in runs]
+        first = next(v for v in values if v is not None)
+        # "newest" is strictly the current (last) run: a renamed/removed
+        # measurement shows a gap, not its stale last-seen value.
+        current = values[-1]
+        delta = (
+            f"{(current / first - 1.0) * 100.0:+.1f}%"
+            if current is not None and first > 0
+            else "-"
+        )
+        lines.append(
+            f"| `{name}` | `{sparkline(values)}` | {fmt(first)} "
+            f"| {fmt(current)} | {delta} |"
+        )
+    if not names:
+        lines.append("| _no measurements found_ | | | | |")
+    lines += ["", f"Runs: {', '.join(labels)}", ""]
+    return "\n".join(lines)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("files", type=Path, nargs="+",
+                    help="BENCH json files, oldest first, current last")
+    ap.add_argument("--out", type=Path, default=None,
+                    help="also write the dashboard to this markdown file")
+    args = ap.parse_args()
+
+    runs, labels = [], []
+    for path in args.files:
+        data = load(path)
+        if not data:
+            print(f"bench trend: skipping {path} (no measurements)",
+                  file=sys.stderr)
+            continue
+        runs.append(data)
+        labels.append(str(path))
+    if not runs:
+        print("bench trend: no usable inputs — nothing to render",
+              file=sys.stderr)
+        return 0  # best-effort: an empty history is not a CI failure
+
+    text = render(runs, labels)
+    print(text)
+    if args.out:
+        args.out.write_text(text)
+        print(f"bench trend: written to {args.out}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,12 +1,17 @@
-//! §Perf serving bench: request latency through the async batching front
-//! (DESIGN.md §12) at increasing levels of concurrency.
+//! §Perf serving bench: a multi-tenant skewed-arrival scenario through
+//! the scheduler subsystem (DESIGN.md §14).
 //!
-//! The offline engine benches measure *throughput* over a fixed job list;
-//! this one measures what a caller of `marvel serve` experiences: the
-//! wall-clock of `submit → wait` while other clients are in flight.  The
-//! interesting number is how the p50 moves as concurrency grows — flat
-//! p50 with rising concurrency means the window batching is amortizing the
-//! engine across callers rather than serializing them.
+//! Two tenants share one server at a 10:1 request-rate skew — a chatty
+//! lenet-shaped stream next to a quiet tiny-conv stream, the MobileNet-
+//! class-floods-the-front situation the scheduler exists for.  The
+//! scenario runs once per `--policy` (fifo, drr); for each it reports the
+//! submit→reply throughput of the mixed stream (`units_per_s`, gated like
+//! the ISS numbers) and the server's own per-model p50/p95/p99 + SLO
+//! attainment (`p99_s`, gated as lower-is-better).  The interesting
+//! comparison is the *quiet* tenant's p99 across policies: under fifo it
+//! rides behind the chatty backlog, under drr it keeps its round-robin
+//! share of every batch.  Results land in `BENCH_serve.json` (CI sets
+//! `BENCH_JSON`).
 
 #[path = "common.rs"]
 mod common;
@@ -14,68 +19,142 @@ mod common;
 use std::time::Duration;
 
 use marvel::compiler::CompileCache;
-use marvel::models::synth::{lenet_shaped, Builder};
+use marvel::models::synth::{lenet_shaped, tiny_conv_net, Builder};
 use marvel::sim::exec::LocalExec;
 use marvel::sim::serve::{build_serve_models, model_key, Server};
-use marvel::sim::{ServeOptions, V4};
+use marvel::sim::{PolicyKind, ServeOptions, ServeReport, V4};
 use marvel::util::rng::Rng;
 
-fn main() {
-    let model = "synth:lenet:1".to_string();
-    let spec = lenet_shaped(1);
-    let cache = CompileCache::new();
-    let units = build_serve_models(
-        std::path::Path::new("artifacts"),
-        &[model.clone()],
-        &[V4],
-        &cache,
-    )
-    .unwrap();
-    let key = model_key(&model, "v4");
+/// Requests per round per tenant: the 10:1 skew of the scenario.
+const CHATTY_PER_ROUND: usize = 10;
+const QUIET_PER_ROUND: usize = 1;
 
-    let opts =
-        ServeOptions { window: Duration::from_millis(2), max_batch: 64 };
-    let exec = Box::new(LocalExec::new(std::path::Path::new("artifacts"), 0));
-    let (server, client) = Server::start(units, opts, exec);
-
-    let mut rng = Rng::new(7);
-    let inputs: Vec<Vec<u8>> = (0..16)
+fn inputs_for(spec: &marvel::compiler::spec::ModelSpec, seed: u64) -> Vec<Vec<u8>> {
+    let mut rng = Rng::new(seed);
+    (0..16)
         .map(|_| {
-            Builder::random_input(&spec, &mut rng)
+            Builder::random_input(spec, &mut rng)
                 .iter()
                 .map(|&v| v as i8 as u8)
                 .collect()
         })
-        .collect();
+        .collect()
+}
 
-    // Warm the compile/lowering caches through the front once.
-    client.infer(&key, inputs[0].clone()).unwrap();
+fn scenario(policy: PolicyKind, rounds: usize) -> ServeReport {
+    let chatty_model = "synth:lenet:1".to_string();
+    let quiet_model = "synth:tiny:3".to_string();
+    let cache = CompileCache::new();
+    let units = build_serve_models(
+        std::path::Path::new("artifacts"),
+        &[chatty_model.clone(), quiet_model.clone()],
+        &[V4],
+        &cache,
+    )
+    .unwrap();
+    let chatty_key = model_key(&chatty_model, "v4");
+    let quiet_key = model_key(&quiet_model, "v4");
+    let chatty_inputs = inputs_for(&lenet_shaped(1), 7);
+    let quiet_inputs = inputs_for(&tiny_conv_net(3), 8);
 
+    let opts = ServeOptions {
+        window_min: Duration::from_micros(200),
+        window_max: Duration::from_millis(2),
+        max_batch: 32,
+        queue_cap: 4096,
+        policy,
+        slo: Some(Duration::from_millis(50)),
+    };
+    // Warm the compile/lowering caches (shared via `cache` and memoized on
+    // the Arc'd programs) through a throwaway server, so the measured
+    // server's histograms — the rows CI gates — never contain the cold
+    // compile/lowering sample.  (The measured server's own warm pass below
+    // IS recorded, deliberately: it absorbs pool setup while staying a
+    // near-steady-state sample, and every gated run shares the same
+    // warmup-plus-rounds structure, so the comparison stays apples-to-
+    // apples.  The timed skew rounds produce strictly larger samples than
+    // a solo warm inference, so the p99 rank lands on a flood sample.)
+    {
+        let warm_units = build_serve_models(
+            std::path::Path::new("artifacts"),
+            &[chatty_model.clone(), quiet_model.clone()],
+            &[V4],
+            &cache,
+        )
+        .unwrap();
+        let (wserver, wclient) = Server::start(
+            warm_units,
+            opts,
+            Box::new(LocalExec::new(std::path::Path::new("artifacts"), 0)),
+        );
+        wclient.infer(&chatty_key, chatty_inputs[0].clone()).unwrap();
+        wclient.infer(&quiet_key, quiet_inputs[0].clone()).unwrap();
+        drop(wclient);
+        wserver.join();
+    }
+
+    let exec = Box::new(LocalExec::new(std::path::Path::new("artifacts"), 0));
+    let (server, client) = Server::start(units, opts, exec);
+    // One warm pass through the *measured* server as well: compile and
+    // lowering are already hot (throwaway server above, shared cache), so
+    // these two samples only absorb this executor's pool/machine
+    // allocation instead of letting it inflate the first timed round.
+    client.infer(&chatty_key, chatty_inputs[0].clone()).unwrap();
+    client.infer(&quiet_key, quiet_inputs[0].clone()).unwrap();
+
+    let per_round = CHATTY_PER_ROUND + QUIET_PER_ROUND;
+    let secs = common::time_runs(1, rounds, || {
+        // One round = the skewed burst: 10 chatty submissions, then 1
+        // quiet rider; the round's time is until the slowest reply.
+        let chatty = (0..CHATTY_PER_ROUND).map(|i| {
+            client
+                .submit(&chatty_key, chatty_inputs[i % chatty_inputs.len()].clone())
+                .unwrap()
+        });
+        let tickets: Vec<_> = chatty
+            .chain((0..QUIET_PER_ROUND).map(|i| {
+                client
+                    .submit(&quiet_key, quiet_inputs[i % quiet_inputs.len()].clone())
+                    .unwrap()
+            }))
+            .collect();
+        for t in tickets {
+            t.wait().unwrap();
+        }
+    });
+    common::report(
+        &format!("serve skew 10:1 {policy} c={per_round}"),
+        secs,
+        Some((per_round as f64, "inference")),
+    );
+    drop(client);
+    server.join()
+}
+
+fn main() {
     let smoke = std::env::var_os("BENCH_SMOKE").is_some();
     let rounds = if smoke { 2 } else { 20 };
-    for concurrency in [1usize, 4, 16] {
-        let secs = common::time_runs(1, rounds, || {
-            // `concurrency` clients submit together; the round's time is
-            // until the slowest reply (all share at most ceil(c/64)
-            // batches).
-            let tickets: Vec<_> = (0..concurrency)
-                .map(|i| {
-                    client
-                        .submit(&key, inputs[i % inputs.len()].clone())
-                        .unwrap()
-                })
-                .collect();
-            for t in tickets {
-                t.wait().unwrap();
-            }
-        });
-        common::report(
-            &format!("serve lenet-shaped v4 c={concurrency}"),
-            secs,
-            Some((concurrency as f64, "inference")),
+    for policy in [PolicyKind::Fifo, PolicyKind::Drr] {
+        let report = scenario(policy, rounds);
+        for row in &report.slo.rows {
+            // Tenant-labeled latency rows: the quiet tenant's p99 under
+            // drr vs fifo is the scheduler's headline number.
+            let tenant = if row.key.starts_with("synth:lenet") {
+                "chatty"
+            } else {
+                "quiet"
+            };
+            common::report_latency(
+                &format!("serve {policy} {tenant} p99"),
+                row.p50_ms / 1e3,
+                row.p95_ms / 1e3,
+                row.p99_ms / 1e3,
+                row.attainment,
+            );
+        }
+        println!(
+            "serve {policy}: {} batches dispatched",
+            report.batches
         );
     }
-    drop(client);
-    let batches = server.join();
-    println!("serve: {batches} batches dispatched");
 }

@@ -65,6 +65,50 @@ pub fn report(name: &str, mut secs: Vec<f64>, work: Option<(f64, &str)>) {
     }
 }
 
+/// Render + record a latency-quantile measurement (the serve bench's
+/// per-model SLO rows).  With `BENCH_JSON=<path>` set, appends
+/// `{"name","p50_s","p95_s","p99_s","slo_attainment"?}` — the gate/trend
+/// tools treat `p99_s` as lower-is-better, next to the higher-is-better
+/// `units_per_s` throughput rows.
+#[allow(dead_code)] // only the serve bench records latency rows
+pub fn report_latency(
+    name: &str,
+    p50_s: f64,
+    p95_s: f64,
+    p99_s: f64,
+    attainment: Option<f64>,
+) {
+    println!(
+        "{name}: p50 {} p95 {} p99 {}{}",
+        fmt_t(p50_s),
+        fmt_t(p95_s),
+        fmt_t(p99_s),
+        match attainment {
+            Some(a) => format!("  [SLO attainment {:.1}%]", a * 100.0),
+            None => String::new(),
+        }
+    );
+    if let Some(path) = std::env::var_os("BENCH_JSON") {
+        use std::io::Write;
+        let mut json = format!(
+            "{{\"name\":\"{}\",\"p50_s\":{p50_s:.9},\"p95_s\":{p95_s:.9},\
+             \"p99_s\":{p99_s:.9}",
+            name.replace('\\', "\\\\").replace('"', "\\\"")
+        );
+        if let Some(a) = attainment {
+            json.push_str(&format!(",\"slo_attainment\":{a:.4}"));
+        }
+        json.push_str("}\n");
+        match std::fs::OpenOptions::new().create(true).append(true).open(&path)
+        {
+            Ok(mut f) => {
+                let _ = f.write_all(json.as_bytes());
+            }
+            Err(e) => eprintln!("BENCH_JSON: cannot open {path:?}: {e}"),
+        }
+    }
+}
+
 fn fmt_t(s: f64) -> String {
     if s >= 1.0 {
         format!("{s:.3} s")

@@ -17,8 +17,10 @@
 //! marvel shard-sweep  [--backend B] [--check] model-zoo sweep
 //!                                           (--check: diff vs in-process)
 //! marvel serve    [--models a,b] [--variants v0,v4] [--backend B]
-//!                                           batched inference requests as
-//!                                           JSON lines on stdin
+//!                 [--policy fifo|drr] [--queue-cap N] [--window-min MS]
+//!                 [--window-max MS] [--slo-ms MS]
+//!                                           scheduled inference requests
+//!                                           as JSON lines on stdin
 //! ```
 //!
 //! Every sweep-style command executes through one swappable backend
@@ -103,6 +105,28 @@ impl Args {
     fn usize_opt(&self, key: &str, default: usize) -> usize {
         self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
+
+    /// A `--key MS` duration in (fractional) milliseconds.  Bounded to
+    /// ~11 days so the f64→Duration conversion can never panic.
+    fn ms_opt(&self, key: &str) -> Result<Option<std::time::Duration>> {
+        const MAX_MS: f64 = 1e9;
+        match self.get(key) {
+            None => Ok(None),
+            Some(s) => {
+                let ms: f64 = s
+                    .parse()
+                    .ok()
+                    .filter(|v: &f64| v.is_finite() && (0.0..=MAX_MS).contains(v))
+                    .with_context(|| {
+                        format!(
+                            "--{key} wants a millisecond value in 0..={MAX_MS}, \
+                             got {s:?}"
+                        )
+                    })?;
+                Ok(Some(std::time::Duration::from_secs_f64(ms / 1e3)))
+            }
+        }
+    }
 }
 
 fn main() -> ExitCode {
@@ -156,6 +180,23 @@ fn print_usage() {
          shard-sweep/serve; results are bit-identical across backends)] \
          [--threads N (local backend workers, 0 = all cores)] \
          [--shard N (alias for --backend shard:N)] ...\n\n\
+         serve scheduler (DESIGN.md §14):\n  \
+         --policy fifo|drr     batch-forming policy across per-model \
+         queues:\n                        fifo = strict arrival order, \
+         drr = deficit\n                        round-robin fairness \
+         (default fifo)\n  \
+         --queue-cap N         per-model queue bound; requests past it \
+         are\n                        rejected with a structured error \
+         (default 1024)\n  \
+         --window-min MS       lower bound of the auto-tuned batching \
+         window\n                        (fractional ms, default 1)\n  \
+         --window-max MS       upper bound of the auto-tuned batching \
+         window\n                        (default 8)\n  \
+         --window-ms MS        pin a fixed window (sets min = max)\n  \
+         --max-batch N         hard batch-size cap (default 64)\n  \
+         --slo-ms MS           latency target for the SLO-attainment \
+         column of\n                        the shutdown report (default: \
+         no SLO)\n\n\
          env: MARVEL_THREADS=N overrides the one-worker-per-core default \
          wherever a thread count is 0 or omitted",
         marvel::version()
@@ -331,29 +372,70 @@ fn cmd_serve(args: &Args) -> Result<()> {
         None => vec![marvel::sim::V0, marvel::sim::V4],
     };
     // Parallelism lives in the backend (--backend/--threads via
-    // backend_arg), not in the batching policy.
-    let opts = marvel::sim::ServeOptions {
-        window: std::time::Duration::from_millis(
-            args.usize_opt("window-ms", 2) as u64,
-        ),
-        max_batch: args.usize_opt("max-batch", 64),
-    };
+    // backend_arg), not in the scheduler options.
+    let opts = serve_opts_arg(args)?;
     let cache = compiler::CompileCache::new();
     let units =
         serve::build_serve_models(&artifacts, &models, &variants, &cache)?;
     let exec = backend_arg(args, "local")?.build(&artifacts)?;
     eprintln!(
-        "serving {} (model, variant) units on backend {}; window {:?}, \
-         max batch {} — JSON request lines on stdin",
+        "serving {} (model, variant) units on backend {}; policy {}, \
+         window {:?}..{:?}, max batch {}, queue cap {}{} — JSON request \
+         lines on stdin",
         units.len(),
         exec.describe(),
-        opts.window,
-        opts.max_batch
+        opts.policy,
+        opts.window_min,
+        opts.window_max,
+        opts.max_batch,
+        opts.queue_cap,
+        match opts.slo {
+            Some(s) => format!(", SLO {:.1} ms", s.as_secs_f64() * 1e3),
+            None => String::new(),
+        }
     );
     let stdin = std::io::stdin();
     // Unlocked Stdout: the response writer runs on its own thread and
     // needs a Send sink (StdoutLock is not Send).
-    serve::serve_lines(units, opts, exec, stdin.lock(), std::io::stdout())
+    let report = serve::serve_lines(
+        units, opts, exec, stdin.lock(), std::io::stdout(),
+    )?;
+    // The protocol owns stdout; the SLO report goes to stderr.
+    eprintln!("{}", report.slo.render());
+    eprintln!("serve: {} batches dispatched", report.batches);
+    Ok(())
+}
+
+/// The serving scheduler's knobs, parsed next to [`backend_arg`] —
+/// `--policy fifo|drr`, `--queue-cap N`, `--window-min/--window-max MS`
+/// (auto-tune bounds; `--window-ms MS` pins a fixed window), `--max-batch
+/// N` and `--slo-ms MS` (DESIGN.md §14).
+fn serve_opts_arg(args: &Args) -> Result<marvel::sim::ServeOptions> {
+    let mut opts = marvel::sim::ServeOptions {
+        max_batch: args.usize_opt("max-batch", 64),
+        queue_cap: args.usize_opt("queue-cap", 1024),
+        policy: marvel::sim::PolicyKind::parse(
+            args.get("policy").unwrap_or("fifo"),
+        )?,
+        slo: args.ms_opt("slo-ms")?,
+        ..Default::default()
+    };
+    if let Some(w) = args.ms_opt("window-ms")? {
+        opts = opts.fixed_window(w);
+    }
+    if let Some(w) = args.ms_opt("window-min")? {
+        opts.window_min = w;
+    }
+    if let Some(w) = args.ms_opt("window-max")? {
+        opts.window_max = w;
+    }
+    anyhow::ensure!(
+        opts.window_min <= opts.window_max,
+        "--window-min ({:?}) must not exceed --window-max ({:?})",
+        opts.window_min,
+        opts.window_max
+    );
+    Ok(opts)
 }
 
 fn cmd_flow(args: &Args) -> Result<()> {

@@ -160,6 +160,11 @@ pub struct Caps {
     /// accepted ([`Work::Raw`] yields a per-job error), and lazy hydration
     /// happens remotely against the worker's own compile cache.
     pub cross_process: bool,
+    /// How many jobs the backend can hold in flight concurrently — the
+    /// batch-size hint the serving scheduler sizes its batches and window
+    /// to (DESIGN.md §14).  Worker threads for [`LocalExec`]; worker
+    /// processes × pipeline depth for [`ShardExec`].  Always ≥ 1.
+    pub parallelism: usize,
 }
 
 /// A batch execution backend with the engine's determinism contract (see
@@ -432,7 +437,11 @@ impl LocalExec {
 
 impl Executor for LocalExec {
     fn caps(&self) -> Caps {
-        Caps { persistent_pool: true, cross_process: false }
+        Caps {
+            persistent_pool: true,
+            cross_process: false,
+            parallelism: self.threads.max(1),
+        }
     }
 
     fn describe(&self) -> String {
@@ -522,7 +531,12 @@ impl ShardExec {
 
 impl Executor for ShardExec {
     fn caps(&self) -> Caps {
-        Caps { persistent_pool: true, cross_process: true }
+        Caps {
+            persistent_pool: true,
+            cross_process: true,
+            // Each worker process keeps PIPELINE jobs in flight.
+            parallelism: (self.workers * shard::PIPELINE).max(1),
+        }
     }
 
     fn describe(&self) -> String {
@@ -629,7 +643,11 @@ mod tests {
         let mut exec = LocalExec::new(Path::new("artifacts"), 3);
         assert_eq!(
             exec.caps(),
-            Caps { persistent_pool: true, cross_process: false }
+            Caps {
+                persistent_pool: true,
+                cross_process: false,
+                parallelism: 3
+            }
         );
         assert_eq!(exec.describe(), "local:3");
         for x in 0..20u8 {

@@ -500,7 +500,17 @@ pub(crate) fn run_lowered<H: RetireHook>(
             machine.pc = byte_of(ops, idx, dyn_pc);
             return Err(SimError::Watchdog { max_instrs });
         }
-        let op = ops[idx];
+        // §Perf: this fetch is the hottest load in the ISS; the bounds
+        // check is provably dead, so elide it.  Every value `idx` can hold
+        // is `< ops.len()` by construction at lower time: resolved
+        // branch/jump targets point at real slots or appended traps,
+        // `idx + 1 ≤ n + 1` for the real slot `idx < n` that produced it
+        // (trap slots return before the increment is consumed), `dyn_trap
+        // = n + 1`, and every dynamic target (`jalr`, ZOL start/skip) is
+        // range-checked against `plen` before the `/ 4` conversion.
+        debug_assert!(idx < ops.len(), "lowered slot index out of range");
+        // SAFETY: idx < ops.len() per the invariant above.
+        let op = unsafe { *ops.get_unchecked(idx) };
         // Correct for every real slot (idx < n); trap slots never read it.
         let pc = (idx as u32).wrapping_mul(4);
         let mut next = idx + 1;

@@ -15,8 +15,10 @@
 //! batch layer that runs N inputs × M variants across pooled worker
 //! threads.  Above the engine sit the process-scale layers (DESIGN.md
 //! §12): [`shard`] partitions a batch across worker *processes* over a
-//! line-JSON wire, and [`serve`] is the async batching front for
-//! latency-oriented inference requests.  [`exec`] is the seam over all of
+//! line-JSON wire, and [`serve`] is the scheduling front for
+//! latency-oriented inference requests — per-model fair queues, an
+//! auto-tuned batching window and per-model SLO metrics (DESIGN.md §14).
+//! [`exec`] is the seam over all of
 //! them (DESIGN.md §13): one `Executor` trait + canonical `JobSpec` that
 //! every sweep-style caller is written against, with `LocalExec`
 //! (persistent in-process pool) and `ShardExec` (process pool) as the two
@@ -41,7 +43,8 @@ pub use hooks::{NopHook, RetireHook, TraceHook};
 pub use lowered::LoweredProgram;
 pub use memory::Memory;
 pub use program::Program;
-pub use serve::{Client, Reply, ServeModel, ServeOptions, Server};
+pub use serve::{Client, PolicyKind, Reply, SchedPolicy, ServeModel,
+                ServeOptions, ServeReport, Server, SloReport};
 pub use shard::{JobDesc, ShardPool, WorkerCmd};
 
 /// A processor variant = which ISA extensions are enabled (paper Table 1).

@@ -1,0 +1,321 @@
+//! Per-model latency histograms and the SLO report (DESIGN.md §14).
+//!
+//! The dispatcher records one sample per served request — client submit
+//! to reply, so channel wait, queueing delay *and* execution are all
+//! inside the number a caller actually experiences — into a log-bucketed
+//! histogram per `(model, variant)` key.  Buckets double from 1 µs up
+//! (32 buckets ≈ 71 minutes), which keeps recording O(1) — and, after a
+//! model's first event, allocation-free — on the dispatcher thread, and
+//! makes p50/p95/p99 a cheap cumulative walk with linear
+//! interpolation inside the landing bucket (resolution: a factor-of-2
+//! envelope, far below scheduling noise).  Admission rejections are
+//! counted per key next to the latency data, so a tenant's SLO row shows
+//! both how fast it was served and how much of its load was shed.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use crate::util::json::{ObjBuilder, Value};
+use crate::util::tables::Table;
+
+/// Bucket `i` holds samples in `[2^i, 2^(i+1))` µs (bucket 0 also takes
+/// sub-µs samples); the last bucket absorbs everything beyond.
+const N_BUCKETS: usize = 32;
+
+/// One model's latency histogram + admission/failure counters.
+#[derive(Clone, Debug, Default)]
+pub(crate) struct Hist {
+    buckets: [u64; N_BUCKETS],
+    count: u64,
+    sum_us: u64,
+    max_us: u64,
+    under_slo: u64,
+    rejected: u64,
+    errored: u64,
+}
+
+impl Hist {
+    fn bucket_of(us: u64) -> usize {
+        // 0..=1 µs land in bucket 0; each bucket doubles the upper bound.
+        ((64 - us.max(1).leading_zeros() as usize) - 1).min(N_BUCKETS - 1)
+    }
+
+    fn record(&mut self, latency: Duration, slo: Option<Duration>) {
+        let us = latency.as_micros().min(u128::from(u64::MAX)) as u64;
+        self.buckets[Self::bucket_of(us)] += 1;
+        self.count += 1;
+        self.sum_us = self.sum_us.saturating_add(us);
+        self.max_us = self.max_us.max(us);
+        if slo.is_some_and(|s| latency <= s) {
+            self.under_slo += 1;
+        }
+    }
+
+    /// Quantile estimate in microseconds: cumulative walk to the landing
+    /// bucket, linear interpolation across that bucket's `[lo, hi)` span.
+    fn quantile_us(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = (q.clamp(0.0, 1.0) * self.count as f64).ceil().max(1.0);
+        let mut seen = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            if n == 0 {
+                continue;
+            }
+            let before = seen;
+            seen += n;
+            if (seen as f64) >= rank {
+                let lo = if i == 0 { 0.0 } else { (1u64 << i) as f64 };
+                let hi = (1u64 << (i + 1)) as f64;
+                let frac = (rank - before as f64) / n as f64;
+                return (lo + (hi - lo) * frac).min(self.max_us as f64);
+            }
+        }
+        self.max_us as f64
+    }
+}
+
+/// Accumulates per-model service data on the dispatcher thread.
+pub(crate) struct Metrics {
+    slo: Option<Duration>,
+    per_model: BTreeMap<String, Hist>,
+}
+
+impl Metrics {
+    pub(crate) fn new(slo: Option<Duration>) -> Metrics {
+        Metrics { slo, per_model: BTreeMap::new() }
+    }
+
+    /// The key's histogram; allocates the `String` key only on a model's
+    /// first event, keeping steady-state recording allocation-free.
+    fn hist_mut(&mut self, key: &str) -> &mut Hist {
+        if self.per_model.contains_key(key) {
+            return self.per_model.get_mut(key).unwrap();
+        }
+        self.per_model.entry(key.to_string()).or_default()
+    }
+
+    pub(crate) fn record(&mut self, key: &str, latency: Duration) {
+        let slo = self.slo;
+        self.hist_mut(key).record(latency, slo);
+    }
+
+    pub(crate) fn reject(&mut self, key: &str) {
+        self.hist_mut(key).rejected += 1;
+    }
+
+    /// A dispatched job that answered with an engine error (watchdog,
+    /// memory fault, remote failure): the caller got a reply, but not
+    /// logits — kept out of the latency histogram and `served`.
+    pub(crate) fn error(&mut self, key: &str) {
+        self.hist_mut(key).errored += 1;
+    }
+
+    pub(crate) fn report(&self) -> SloReport {
+        SloReport {
+            slo_ms: self.slo.map(|s| s.as_secs_f64() * 1e3),
+            rows: self
+                .per_model
+                .iter()
+                .map(|(key, h)| ModelStats {
+                    key: key.clone(),
+                    served: h.count,
+                    rejected: h.rejected,
+                    errored: h.errored,
+                    p50_ms: h.quantile_us(0.50) / 1e3,
+                    p95_ms: h.quantile_us(0.95) / 1e3,
+                    p99_ms: h.quantile_us(0.99) / 1e3,
+                    mean_ms: if h.count == 0 {
+                        0.0
+                    } else {
+                        h.sum_us as f64 / h.count as f64 / 1e3
+                    },
+                    max_ms: h.max_us as f64 / 1e3,
+                    attainment: (self.slo.is_some() && h.count > 0)
+                        .then(|| h.under_slo as f64 / h.count as f64),
+                })
+                .collect(),
+        }
+    }
+}
+
+/// One model's service summary (all latencies in milliseconds).
+#[derive(Clone, Debug)]
+pub struct ModelStats {
+    /// Registry key (`"<model>@<variant>"`).
+    pub key: String,
+    /// Requests served (replied with logits); only these feed the
+    /// latency quantiles.
+    pub served: u64,
+    /// Requests shed at admission (queue full).
+    pub rejected: u64,
+    /// Dispatched requests whose engine job failed (replied with an
+    /// error, not logits).
+    pub errored: u64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+    pub max_ms: f64,
+    /// Fraction of served requests within the SLO (`--slo-ms`); `None`
+    /// when no SLO was configured or nothing was served.
+    pub attainment: Option<f64>,
+}
+
+/// The per-model latency/SLO report a server hands back on shutdown.
+#[derive(Clone, Debug)]
+pub struct SloReport {
+    /// The configured SLO target, if any.
+    pub slo_ms: Option<f64>,
+    /// One row per `(model, variant)` key, sorted by key.
+    pub rows: Vec<ModelStats>,
+}
+
+impl SloReport {
+    /// Rendered table for logs/stderr.
+    pub fn render(&self) -> String {
+        let title = match self.slo_ms {
+            Some(slo) => format!("serve SLO report — target {slo:.1} ms"),
+            None => "serve latency report — no SLO configured".to_string(),
+        };
+        let mut t = Table::new(&[
+            "model@variant", "served", "rejected", "errored", "p50 ms",
+            "p95 ms", "p99 ms", "mean ms", "max ms", "SLO att.",
+        ])
+        .with_title(&title);
+        for r in &self.rows {
+            t.row(vec![
+                r.key.clone(),
+                r.served.to_string(),
+                r.rejected.to_string(),
+                r.errored.to_string(),
+                format!("{:.3}", r.p50_ms),
+                format!("{:.3}", r.p95_ms),
+                format!("{:.3}", r.p99_ms),
+                format!("{:.3}", r.mean_ms),
+                format!("{:.3}", r.max_ms),
+                match r.attainment {
+                    Some(a) => format!("{:.1}%", a * 100.0),
+                    None => "-".to_string(),
+                },
+            ]);
+        }
+        t.render()
+    }
+
+    /// Machine-readable form of the report (latencies in ms).  Note: the
+    /// serve bench does NOT use this — `BENCH_serve.json` rows are flat
+    /// `p99_s`-style objects written by `benches/common.rs` for the
+    /// gate/trend tools.
+    pub fn to_json(&self) -> Value {
+        let rows: Vec<Value> = self
+            .rows
+            .iter()
+            .map(|r| {
+                let b = ObjBuilder::new()
+                    .set("key", r.key.as_str())
+                    .set("served", r.served)
+                    .set("rejected", r.rejected)
+                    .set("errored", r.errored)
+                    .set("p50_ms", r.p50_ms)
+                    .set("p95_ms", r.p95_ms)
+                    .set("p99_ms", r.p99_ms)
+                    .set("mean_ms", r.mean_ms)
+                    .set("max_ms", r.max_ms);
+                match r.attainment {
+                    Some(a) => b.set("slo_attainment", a).build(),
+                    None => b.build(),
+                }
+            })
+            .collect();
+        let b = ObjBuilder::new().set("rows", rows);
+        match self.slo_ms {
+            Some(slo) => b.set("slo_ms", slo).build(),
+            None => b.build(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ms(v: u64) -> Duration {
+        Duration::from_millis(v)
+    }
+
+    #[test]
+    fn bucket_of_doubles() {
+        assert_eq!(Hist::bucket_of(0), 0);
+        assert_eq!(Hist::bucket_of(1), 0);
+        assert_eq!(Hist::bucket_of(2), 1);
+        assert_eq!(Hist::bucket_of(3), 1);
+        assert_eq!(Hist::bucket_of(4), 2);
+        assert_eq!(Hist::bucket_of(1024), 10);
+        assert_eq!(Hist::bucket_of(u64::MAX), N_BUCKETS - 1);
+    }
+
+    #[test]
+    fn quantiles_track_the_distribution_envelope() {
+        let mut h = Hist::default();
+        // 90 fast samples (~1 ms), 10 slow (~64 ms).
+        for _ in 0..90 {
+            h.record(ms(1), None);
+        }
+        for _ in 0..10 {
+            h.record(ms(64), None);
+        }
+        let p50 = h.quantile_us(0.50) / 1e3;
+        let p99 = h.quantile_us(0.99) / 1e3;
+        assert!((0.5..=1.1).contains(&p50), "p50 {p50}");
+        assert!((32.0..=64.1).contains(&p99), "p99 {p99}");
+        assert!(p50 < p99);
+        // Quantiles never exceed the observed max.
+        assert!(h.quantile_us(1.0) <= h.max_us as f64);
+    }
+
+    #[test]
+    fn empty_hist_reports_zeros() {
+        let h = Hist::default();
+        assert_eq!(h.quantile_us(0.99), 0.0);
+    }
+
+    #[test]
+    fn slo_attainment_counts_at_record_time() {
+        let mut m = Metrics::new(Some(ms(10)));
+        m.record("a@v4", ms(2));
+        m.record("a@v4", ms(4));
+        m.record("a@v4", ms(50));
+        m.reject("a@v4");
+        m.error("a@v4");
+        m.record("b@v0", ms(1));
+        let r = m.report();
+        assert_eq!(r.slo_ms, Some(10.0));
+        assert_eq!(r.rows.len(), 2);
+        let a = &r.rows[0];
+        assert_eq!(
+            (a.key.as_str(), a.served, a.rejected, a.errored),
+            ("a@v4", 3, 1, 1)
+        );
+        let att = a.attainment.unwrap();
+        assert!((att - 2.0 / 3.0).abs() < 1e-9, "{att}");
+        assert!(a.max_ms >= 50.0 && a.max_ms < 51.0);
+        // Render + JSON smoke: every row appears.
+        let text = r.render();
+        assert!(text.contains("a@v4") && text.contains("b@v0"), "{text}");
+        let j = r.to_json();
+        assert_eq!(j.get("slo_ms").unwrap().as_f64().unwrap(), 10.0);
+        assert_eq!(j.get("rows").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn no_slo_means_no_attainment_column() {
+        let mut m = Metrics::new(None);
+        m.record("a@v4", ms(2));
+        let r = m.report();
+        assert_eq!(r.slo_ms, None);
+        assert_eq!(r.rows[0].attainment, None);
+        assert!(r.to_json().get_opt("slo_ms").is_none());
+    }
+}

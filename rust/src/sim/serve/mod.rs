@@ -1,0 +1,890 @@
+//! The serving front: a scheduler subsystem over the batch engine
+//! (DESIGN.md §14; the original single-FIFO front was §12).
+//!
+//! Requests target precompiled `(model, variant)` pairs and are submitted
+//! through a non-blocking channel ([`Client::submit`] → [`Ticket`]).  The
+//! dispatcher validates each arrival against the registry, admits it into
+//! its model's **bounded queue** ([`queue`], `--queue-cap`; admission
+//! pressure answers the ticket with a structured error instead of growing
+//! an unbounded backlog), and forms engine batches by asking a
+//! **scheduling policy** ([`policy`]: strict [`policy::Fifo`] or
+//! [`policy::DeficitRoundRobin`] fairness) to drain the queues.  The
+//! batching **window auto-tunes** from an EWMA of the observed arrival
+//! gap — it stretches toward `--window-max` when requests trickle and
+//! shrinks toward `--window-min` under load, targeting just enough
+//! arrivals to fill the executor's parallel lanes
+//! ([`crate::sim::exec::Caps::parallelism`]).  Each batch feeds a
+//! `Box<dyn Executor>` (DESIGN.md §13), so `local` and `shard:N` backends
+//! serve identically; per-request latency (client submit → reply, so
+//! channel wait during a busy batch is counted) lands in per-model
+//! histograms ([`metrics`]) and [`Server::join`] returns the SLO report.
+//!
+//! Determinism: one batch's results are computed by the same contract as
+//! the offline path, so a served inference is bit-identical to `marvel
+//! run` / `run_flow` on the same `(model, variant, input)`, on every
+//! backend and under every policy.  Scheduling changes only *latency* —
+//! which batch a request rides in — never logits or `RunStats`
+//! (`tests/serve_sched.rs`, `tests/shard.rs`, the exec conformance
+//! suite).
+
+pub mod metrics;
+pub mod policy;
+pub mod queue;
+
+pub use metrics::{ModelStats, SloReport};
+pub use policy::{BatchHint, PolicyKind, SchedPolicy};
+pub use queue::{Pending, QueueSet};
+
+use std::collections::HashMap;
+use std::io::{BufRead, Write};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::cpu::RunStats;
+use super::exec::{Executor, JobSpec};
+use crate::compiler::{CompileCache, Compiled};
+use crate::models;
+use crate::sim::Variant;
+use crate::util::json::{self, ObjBuilder};
+use crate::util::rng::Rng;
+
+use metrics::Metrics;
+
+/// Scheduler configuration.  Parallelism is not configured here: it
+/// belongs to the [`Executor`] the server batches into (and feeds back
+/// into the window tuner via [`super::exec::Caps::parallelism`]).
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOptions {
+    /// Lower bound of the auto-tuned batching window.
+    pub window_min: Duration,
+    /// Upper bound of the auto-tuned batching window (also the window
+    /// used before any arrival-rate data exists).
+    pub window_max: Duration,
+    /// Hard batch-size cap: a full queue set stops collecting and runs.
+    pub max_batch: usize,
+    /// Per-model queue bound; admission past it rejects the request with
+    /// a structured [`Ticket`] error.
+    pub queue_cap: usize,
+    /// Batch-forming discipline across the per-model queues.
+    pub policy: PolicyKind,
+    /// Latency target for the SLO-attainment column of the final report.
+    pub slo: Option<Duration>,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            window_min: Duration::from_millis(1),
+            window_max: Duration::from_millis(8),
+            max_batch: 64,
+            queue_cap: 1024,
+            policy: PolicyKind::Fifo,
+            slo: None,
+        }
+    }
+}
+
+impl ServeOptions {
+    /// Pin the batching window to exactly `w` (no auto-tuning) — the
+    /// legacy fixed-window behavior, and what `--window-ms` sets.
+    pub fn fixed_window(mut self, w: Duration) -> Self {
+        self.window_min = w;
+        self.window_max = w;
+        self
+    }
+}
+
+/// One servable `(model, variant)` unit.
+pub struct ServeModel {
+    /// Registry key (see [`model_key`]).
+    pub key: String,
+    /// Model name in [`models::resolve`] syntax — the by-reference half of
+    /// the [`JobSpec`]s this unit's requests become (the variant comes
+    /// from `compiled`).
+    pub model: String,
+    pub compiled: Arc<Compiled>,
+    /// Input image size in bytes (request validation).
+    pub in_elems: usize,
+    /// Logit count read back after a run.
+    pub out_elems: usize,
+}
+
+/// Registry key for a `(model, variant)` pair: `"<model>@<variant>"`
+/// (model names may themselves contain `:`, e.g. `synth:tiny:3`).
+pub fn model_key(model: &str, variant: &str) -> String {
+    format!("{model}@{variant}")
+}
+
+/// Compile every `models × variants` pair for serving (shared cache, so a
+/// pair already compiled by a sweep is reused).
+pub fn build_serve_models(
+    artifacts: &std::path::Path,
+    names: &[String],
+    variants: &[Variant],
+    cache: &CompileCache,
+) -> Result<Vec<ServeModel>> {
+    let mut out = Vec::new();
+    for name in names {
+        let spec = models::resolve(artifacts, name)
+            .with_context(|| format!("loading model {name}"))?;
+        let scache = cache.for_spec(&spec);
+        for &v in variants {
+            let compiled = scache
+                .get_or_compile(v)
+                .with_context(|| format!("compiling {name} for {}", v.name))?;
+            out.push(ServeModel {
+                key: model_key(name, v.name),
+                model: name.clone(),
+                compiled,
+                in_elems: spec.input_elems(),
+                out_elems: spec.output_elems(),
+            });
+        }
+    }
+    Ok(out)
+}
+
+/// A completed inference.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Reply {
+    /// int8 logits widened to i32 — bit-identical to the offline engine.
+    pub output: Vec<i32>,
+    pub stats: RunStats,
+    /// How many requests shared this engine batch (observability: a loaded
+    /// server should show > 1).
+    pub batch_size: usize,
+    /// Monotonic batch number.
+    pub batch_seq: u64,
+}
+
+/// What the dispatcher hands back on shutdown.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    /// Engine batches dispatched.
+    pub batches: u64,
+    /// Per-model latency histograms + SLO attainment.
+    pub slo: SloReport,
+}
+
+/// Where a request's reply — or its structured error — goes.
+pub(crate) type ReplyTx = mpsc::Sender<Result<Reply, String>>;
+
+/// A freshly-submitted request, before validation/admission.
+struct Submit {
+    key: String,
+    input: Vec<u8>,
+    reply: ReplyTx,
+    /// When the client submitted — the latency clock starts here, so the
+    /// histograms include time spent in the submission channel while the
+    /// dispatcher is busy executing a batch (the overload regime is
+    /// exactly what the SLO report exists to measure).
+    submitted: Instant,
+}
+
+/// A ticket for an in-flight request: redeem with [`Ticket::wait`].
+pub struct Ticket(mpsc::Receiver<Result<Reply, String>>);
+
+impl Ticket {
+    /// Block until the batch containing this request has run (or the
+    /// request was rejected: unknown key, bad input size, queue full).
+    pub fn wait(self) -> Result<Reply> {
+        self.0
+            .recv()
+            .map_err(|_| anyhow!("serve dispatcher dropped the request"))?
+            .map_err(|e| anyhow!(e))
+    }
+}
+
+/// Upper bound on buffered, not-yet-admitted submissions.  The per-model
+/// queue caps can only act when the dispatcher drains the channel — it
+/// doesn't while a batch executes — so without this second line of
+/// defense a flood arriving mid-batch would buffer unboundedly.  Hitting
+/// it fails [`Client::submit`] with an overload error (still without
+/// blocking).
+const SUBMIT_CHANNEL_CAP: usize = 1 << 16;
+
+/// Cheap, clonable request submitter.
+#[derive(Clone)]
+pub struct Client {
+    tx: mpsc::SyncSender<Submit>,
+}
+
+impl Client {
+    /// Enqueue an inference without blocking on its execution.
+    pub fn submit(&self, key: &str, input: Vec<u8>) -> Result<Ticket> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .try_send(Submit {
+                key: key.to_string(),
+                input,
+                reply: rtx,
+                submitted: Instant::now(),
+            })
+            .map_err(|e| match e {
+                mpsc::TrySendError::Full(_) => anyhow!(
+                    "serve overloaded: {SUBMIT_CHANNEL_CAP} submissions \
+                     buffered ahead of admission control"
+                ),
+                mpsc::TrySendError::Disconnected(_) => {
+                    anyhow!("serve dispatcher is gone")
+                }
+            })?;
+        Ok(Ticket(rrx))
+    }
+
+    /// Submit + wait (the simple blocking call).
+    pub fn infer(&self, key: &str, input: Vec<u8>) -> Result<Reply> {
+        self.submit(key, input)?.wait()
+    }
+}
+
+/// Handle to the dispatcher thread.  Dropping the last [`Client`] shuts the
+/// dispatcher down; [`Server::join`] then returns the [`ServeReport`].
+pub struct Server {
+    handle: std::thread::JoinHandle<ServeReport>,
+}
+
+impl Server {
+    /// Start a server over the given units, batching into `exec`; returns
+    /// the server handle and the first client.  The executor moves onto
+    /// the dispatcher thread — a persistent backend keeps its pools warm
+    /// across every batch the server runs.
+    pub fn start(
+        units: Vec<ServeModel>,
+        opts: ServeOptions,
+        exec: Box<dyn Executor>,
+    ) -> (Server, Client) {
+        let (tx, rx) = mpsc::sync_channel::<Submit>(SUBMIT_CHANNEL_CAP);
+        let registry: HashMap<String, ServeModel> =
+            units.into_iter().map(|u| (u.key.clone(), u)).collect();
+        let handle =
+            std::thread::spawn(move || dispatcher(rx, registry, opts, exec));
+        (Server { handle }, Client { tx })
+    }
+
+    /// Wait for shutdown (all clients dropped); returns the serve report.
+    pub fn join(self) -> ServeReport {
+        self.handle.join().expect("serve dispatcher panicked")
+    }
+}
+
+/// EWMA smoothing factor for the arrival-gap estimate (≈ the last 5
+/// arrivals dominate).
+const ARRIVAL_EWMA_ALPHA: f64 = 0.2;
+
+/// Auto-tunes the batching window from the observed arrival rate: the
+/// window aims to collect `target_fill` arrivals (enough to fill the
+/// executor's parallel lanes, never more than the batch cap), estimated
+/// as `EWMA(inter-arrival gap) × target_fill`, clamped to
+/// `[window_min, window_max]`.  With no data yet — or min == max
+/// ([`ServeOptions::fixed_window`]) — the window is the configured
+/// maximum, which reproduces the legacy fixed-window dispatcher.
+struct WindowTuner {
+    min: Duration,
+    max: Duration,
+    target_fill: f64,
+    ewma_gap_s: Option<f64>,
+    last_arrival: Option<Instant>,
+}
+
+impl WindowTuner {
+    fn new(opts: &ServeOptions, hint: &BatchHint) -> WindowTuner {
+        WindowTuner {
+            min: opts.window_min.min(opts.window_max),
+            max: opts.window_max.max(opts.window_min),
+            target_fill: hint.target_fill() as f64,
+            ewma_gap_s: None,
+            last_arrival: None,
+        }
+    }
+
+    /// Feed one admitted arrival at time `now`.
+    fn observe(&mut self, now: Instant) {
+        if let Some(last) = self.last_arrival {
+            let gap = now.saturating_duration_since(last).as_secs_f64();
+            self.ewma_gap_s = Some(match self.ewma_gap_s {
+                Some(e) => {
+                    ARRIVAL_EWMA_ALPHA * gap + (1.0 - ARRIVAL_EWMA_ALPHA) * e
+                }
+                None => gap,
+            });
+        }
+        self.last_arrival = Some(now);
+    }
+
+    /// The window to arm for the next batch.
+    fn window(&self) -> Duration {
+        match self.ewma_gap_s {
+            None => self.max,
+            Some(gap) => Duration::from_secs_f64(
+                (gap * self.target_fill)
+                    .clamp(self.min.as_secs_f64(), self.max.as_secs_f64()),
+            ),
+        }
+    }
+}
+
+/// Validate one submission against the registry and admit it into its
+/// queue; invalid or shed requests answer their ticket immediately and
+/// never occupy a job slot.
+fn admit(
+    sub: Submit,
+    registry: &HashMap<String, ServeModel>,
+    queues: &mut QueueSet,
+    metrics: &mut Metrics,
+    tuner: &mut WindowTuner,
+) {
+    match registry.get(&sub.key) {
+        None => {
+            let _ = sub.reply.send(Err(format!(
+                "unknown model key {:?} (available: {:?})",
+                sub.key,
+                {
+                    let mut ks: Vec<&String> = registry.keys().collect();
+                    ks.sort();
+                    ks
+                }
+            )));
+        }
+        Some(u) if sub.input.len() != u.in_elems => {
+            let _ = sub.reply.send(Err(format!(
+                "{}: input is {} bytes, model wants {}",
+                sub.key,
+                sub.input.len(),
+                u.in_elems
+            )));
+        }
+        Some(_) => {
+            // Arrival rate is measured at submission time, not at the
+            // (possibly batch-delayed) moment the dispatcher drains the
+            // channel.
+            tuner.observe(sub.submitted);
+            if let Err((reply, msg)) = queues.admit(
+                sub.key.clone(),
+                sub.input,
+                sub.reply,
+                sub.submitted,
+            ) {
+                metrics.reject(&sub.key);
+                let _ = reply.send(Err(msg));
+            }
+        }
+    }
+}
+
+fn dispatcher(
+    rx: mpsc::Receiver<Submit>,
+    registry: HashMap<String, ServeModel>,
+    opts: ServeOptions,
+    mut exec: Box<dyn Executor>,
+) -> ServeReport {
+    let hint = BatchHint {
+        max_batch: opts.max_batch.max(1),
+        parallelism: exec.caps().parallelism,
+    };
+    let mut policy = opts.policy.build();
+    let mut queues = QueueSet::new(opts.queue_cap);
+    let mut metrics = Metrics::new(opts.slo);
+    let mut tuner = WindowTuner::new(&opts, &hint);
+    let mut batch_seq: u64 = 0;
+    // `false` once every Client is dropped: drain the backlog, then stop.
+    let mut open = true;
+    loop {
+        if queues.is_empty() {
+            if !open {
+                break;
+            }
+            // Idle: block for the first request of the next batch, which
+            // arms the (auto-tuned) window.
+            match rx.recv() {
+                Ok(s) => {
+                    admit(s, &registry, &mut queues, &mut metrics, &mut tuner)
+                }
+                Err(_) => break,
+            }
+            // Window collection.  Everything that has *already arrived* is
+            // always drained into the queues — admission control
+            // (`queue_cap`), not the batch cap, bounds the backlog, and a
+            // policy must see the whole cross-tenant backlog to be fair.
+            // Only the *waiting* is bounded: once a full batch's worth is
+            // queued (or the window closes), stop waiting and dispatch.
+            let deadline = Instant::now() + tuner.window();
+            loop {
+                loop {
+                    match rx.try_recv() {
+                        Ok(s) => admit(
+                            s, &registry, &mut queues, &mut metrics,
+                            &mut tuner,
+                        ),
+                        Err(mpsc::TryRecvError::Empty) => break,
+                        Err(mpsc::TryRecvError::Disconnected) => {
+                            open = false;
+                            break;
+                        }
+                    }
+                }
+                if !open || queues.total() >= hint.max_batch {
+                    break;
+                }
+                let left = deadline.saturating_duration_since(Instant::now());
+                if left.is_zero() {
+                    break;
+                }
+                match rx.recv_timeout(left) {
+                    Ok(s) => admit(
+                        s, &registry, &mut queues, &mut metrics, &mut tuner,
+                    ),
+                    Err(mpsc::RecvTimeoutError::Timeout) => break,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => open = false,
+                }
+            }
+        } else {
+            // Backlog: the queued requests already waited their window —
+            // pick up whatever else has arrived, but don't wait for more.
+            loop {
+                match rx.try_recv() {
+                    Ok(s) => admit(
+                        s, &registry, &mut queues, &mut metrics, &mut tuner,
+                    ),
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        open = false;
+                        break;
+                    }
+                }
+            }
+        }
+        if queues.is_empty() {
+            // Every arrival so far was invalid/rejected — nothing to run.
+            continue;
+        }
+
+        let batch = policy.next_batch(&mut queues, &hint);
+        assert!(
+            !batch.is_empty() && batch.len() <= hint.max_batch,
+            "policy {} broke the batch contract ({} requests, cap {})",
+            policy.name(),
+            batch.len(),
+            hint.max_batch
+        );
+        batch_seq += 1;
+        for p in &batch {
+            let u = &registry[&p.key];
+            exec.submit(JobSpec::hydrated(
+                &u.model,
+                &u.compiled,
+                u.out_elems,
+                &p.input,
+                1 << 36,
+            ));
+        }
+        let results = exec.run();
+        let size = batch.len();
+        for (p, r) in batch.iter().zip(results) {
+            // Only successful inferences feed the latency histogram —
+            // a job error is counted on its own so `served` and the
+            // quantiles always mean "replied with logits".
+            let _ = p.reply.send(match r {
+                Ok(o) => {
+                    metrics.record(&p.key, p.submitted.elapsed());
+                    Ok(Reply {
+                        output: o.output,
+                        stats: o.stats,
+                        batch_size: size,
+                        batch_seq,
+                    })
+                }
+                Err(e) => {
+                    metrics.error(&p.key);
+                    Err(format!("{e}"))
+                }
+            });
+        }
+    }
+    ServeReport { batches: batch_seq, slo: metrics.report() }
+}
+
+// ---------------------------------------------------------------------------
+// Line protocol (the `marvel serve` CLI and the CI smoke)
+// ---------------------------------------------------------------------------
+
+/// Serve requests read as JSON lines, one response line per request, in
+/// request order (responses for a batch are written as their tickets
+/// resolve; ordering across batches follows submission).  Returns the
+/// dispatcher's [`ServeReport`] once the input stream ends.
+///
+/// Request: `{"id":1,"model":"synth:tiny:3","variant":"v4","input":"<hex>"}`
+/// — or `"seed":N` instead of `"input"` for a deterministic random image
+/// (CI smoke without shipping bytes).  Response:
+/// `{"id":1,"output":[...],"instrs":..,"cycles":..,"batch":k}` or
+/// `{"id":1,"error":"..."}`.
+///
+/// The session survives bad input: a malformed request line, an unknown
+/// model key, or an unreadable line (e.g. invalid UTF-8) each answer with
+/// a structured `{"id":..,"error":"..."}` response and the loop reads on
+/// — only EOF ends the session.
+pub fn serve_lines(
+    units: Vec<ServeModel>,
+    opts: ServeOptions,
+    exec: Box<dyn Executor>,
+    input: impl BufRead,
+    out: impl Write + Send,
+) -> Result<ServeReport> {
+    // Input sizes for seed-expansion, before the registry moves.
+    let sizes: HashMap<String, usize> =
+        units.iter().map(|u| (u.key.clone(), u.in_elems)).collect();
+    let (server, client) = Server::start(units, opts, exec);
+
+    // The reading loop submits without waiting (so requests read within one
+    // window share a batch); a writer thread drains tickets in request
+    // order, which keeps output incremental *and* deterministic.
+    let (wtx, wrx) = mpsc::channel::<(u64, Result<Ticket, String>)>();
+    let writer = std::thread::scope(|s| -> Result<()> {
+        let writer = s.spawn(move || -> Result<()> {
+            let mut out = out;
+            for (id, t) in wrx {
+                let b = ObjBuilder::new().set("id", id);
+                let b = match t
+                    .and_then(|t| t.wait().map_err(|e| format!("{e:#}")))
+                {
+                    Ok(r) => b
+                        .set(
+                            "output",
+                            r.output
+                                .iter()
+                                .map(|&v| i64::from(v))
+                                .collect::<Vec<i64>>(),
+                        )
+                        .set("instrs", r.stats.instrs)
+                        .set("cycles", r.stats.cycles)
+                        .set("batch", r.batch_size),
+                    Err(e) => b.set("error", e),
+                };
+                writeln!(out, "{}", json::to_compact_string(&b.build()))?;
+                out.flush()?;
+            }
+            Ok(())
+        });
+        for line in input.lines() {
+            // An unreadable line (invalid UTF-8, transient I/O error) is a
+            // structured error response, not the end of the session.
+            let line = match line {
+                Ok(l) => l,
+                Err(e) => {
+                    let _ = wtx.send((
+                        0,
+                        Err(format!("reading request line: {e}")),
+                    ));
+                    continue;
+                }
+            };
+            if line.trim().is_empty() {
+                continue;
+            }
+            let (id, ticket) = match parse_request(&line, &sizes) {
+                Ok((id, key, bytes)) => (
+                    id,
+                    client.submit(&key, bytes).map_err(|e| format!("{e:#}")),
+                ),
+                Err(e) => (request_id(&line), Err(format!("{e:#}"))),
+            };
+            let _ = wtx.send((id, ticket));
+        }
+        drop(wtx); // EOF: writer drains remaining tickets and exits
+        drop(client); // dispatcher runs the tail batches, then shuts down
+        writer.join().expect("serve writer panicked")
+    });
+    writer?;
+    Ok(server.join())
+}
+
+/// Best-effort id extraction for malformed requests (so the error response
+/// still correlates).
+fn request_id(line: &str) -> u64 {
+    json::parse(line)
+        .ok()
+        .and_then(|v| v.get("id").ok().and_then(|i| i.as_u64().ok()))
+        .unwrap_or(0)
+}
+
+fn parse_request(
+    line: &str,
+    sizes: &HashMap<String, usize>,
+) -> Result<(u64, String, Vec<u8>)> {
+    let v = json::parse(line)?;
+    let id = v.get("id")?.as_u64()?;
+    let key = model_key(v.get("model")?.as_str()?, v.get("variant")?.as_str()?);
+    let bytes = match v.get_opt("input") {
+        Some(h) => super::shard::from_hex(h.as_str()?)?,
+        None => {
+            let seed = v
+                .get("seed")
+                .context("request needs \"input\" hex or \"seed\"")?
+                .as_u64()?;
+            let n = *sizes
+                .get(&key)
+                .with_context(|| format!("unknown model key {key:?}"))?;
+            let mut rng = Rng::new(seed);
+            (0..n).map(|_| rng.int8() as i8 as u8).collect()
+        }
+    };
+    Ok((id, key, bytes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::synth::tiny_conv_net;
+    use crate::sim::exec::LocalExec;
+    use crate::sim::{V0, V4};
+
+    fn units() -> Vec<ServeModel> {
+        let cache = CompileCache::new();
+        build_serve_models(
+            std::path::Path::new("artifacts"),
+            &["synth:tiny:3".to_string()],
+            &[V0, V4],
+            &cache,
+        )
+        .unwrap()
+    }
+
+    fn local_exec(threads: usize) -> Box<dyn Executor> {
+        Box::new(LocalExec::new(std::path::Path::new("artifacts"), threads))
+    }
+
+    #[test]
+    fn serve_matches_direct_execution() {
+        let spec = tiny_conv_net(3);
+        let mut rng = Rng::new(9);
+        let input = crate::models::synth::Builder::random_input(&spec, &mut rng);
+        let packed = crate::compiler::pack_input(&input).unwrap();
+        let (want, want_stats) =
+            crate::compiler::execute(&spec, V4, &input, 1 << 36).unwrap();
+
+        let (server, client) =
+            Server::start(units(), ServeOptions::default(), local_exec(0));
+        let r = client
+            .infer(&model_key("synth:tiny:3", "v4"), packed)
+            .unwrap();
+        assert_eq!(r.output, want);
+        assert_eq!(r.stats, want_stats);
+        assert!(r.batch_size >= 1);
+        drop(client);
+        let report = server.join();
+        assert_eq!(report.batches, 1);
+        assert_eq!(report.slo.rows.len(), 1);
+        let row = &report.slo.rows[0];
+        assert_eq!(row.key, model_key("synth:tiny:3", "v4"));
+        assert_eq!((row.served, row.rejected), (1, 0));
+        assert!(row.p99_ms > 0.0);
+    }
+
+    #[test]
+    fn bad_requests_answer_without_jobs() {
+        let (server, client) =
+            Server::start(units(), ServeOptions::default(), local_exec(1));
+        let e = client.infer("nope@v4", vec![0; 4]).unwrap_err().to_string();
+        assert!(e.contains("unknown model key"), "{e}");
+        let e = client
+            .infer(&model_key("synth:tiny:3", "v4"), vec![0; 3])
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("input is 3 bytes"), "{e}");
+        drop(client);
+        let report = server.join();
+        assert_eq!(report.batches, 0, "invalid requests never form a batch");
+    }
+
+    #[test]
+    fn window_batches_concurrent_requests() {
+        let spec = tiny_conv_net(3);
+        let n_in = spec.input_elems();
+        let opts = ServeOptions { max_batch: 8, ..ServeOptions::default() }
+            .fixed_window(Duration::from_millis(200));
+        let (server, client) = Server::start(units(), opts, local_exec(2));
+        // Submit 4 requests inside one window, then wait: they must share
+        // a batch (size > 1) and each match the offline engine.
+        let tickets: Vec<(Vec<u8>, Ticket)> = (0..4u64)
+            .map(|i| {
+                let mut rng = Rng::new(100 + i);
+                let bytes: Vec<u8> =
+                    (0..n_in).map(|_| rng.int8() as i8 as u8).collect();
+                let t = client
+                    .submit(&model_key("synth:tiny:3", "v0"), bytes.clone())
+                    .unwrap();
+                (bytes, t)
+            })
+            .collect();
+        for (bytes, t) in tickets {
+            let r = t.wait().unwrap();
+            let input: Vec<i32> =
+                bytes.iter().map(|&b| b as i8 as i32).collect();
+            let (want, want_stats) =
+                crate::compiler::execute(&spec, V0, &input, 1 << 36).unwrap();
+            assert_eq!(r.output, want);
+            assert_eq!(r.stats, want_stats);
+            assert_eq!(r.batch_size, 4, "requests must share the window");
+            assert_eq!(r.batch_seq, 1);
+        }
+        drop(client);
+        assert_eq!(server.join().batches, 1);
+    }
+
+    #[test]
+    fn line_protocol_end_to_end() {
+        let reqs = concat!(
+            r#"{"id":1,"model":"synth:tiny:3","variant":"v4","seed":5}"#, "\n",
+            r#"{"id":2,"model":"synth:tiny:3","variant":"nope","seed":5}"#, "\n",
+            "not json\n",
+        );
+        let mut out = Vec::new();
+        serve_lines(
+            units(),
+            ServeOptions::default(),
+            local_exec(0),
+            std::io::Cursor::new(reqs),
+            &mut out,
+        )
+        .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3, "{text}");
+        let r1 = json::parse(lines[0]).unwrap();
+        assert_eq!(r1.get("id").unwrap().as_u64().unwrap(), 1);
+        assert!(r1.get_opt("output").is_some(), "{text}");
+        assert!(r1.get("cycles").unwrap().as_u64().unwrap() > 0);
+        let r2 = json::parse(lines[1]).unwrap();
+        assert!(r2.get_opt("error").is_some(), "{text}");
+        let r3 = json::parse(lines[2]).unwrap();
+        assert!(r3.get_opt("error").is_some(), "{text}");
+    }
+
+    /// Satellite regression: every bad-input shape — malformed JSON, an
+    /// unknown model key via the hex-input path *and* the seed path, an
+    /// unreadable (non-UTF-8) line — answers with a structured JSON error
+    /// and the session keeps serving the requests that follow.
+    #[test]
+    fn line_protocol_survives_bad_requests_mid_session() {
+        let good =
+            br#"{"id":7,"model":"synth:tiny:3","variant":"v4","seed":5}"#;
+        let mut reqs: Vec<u8> = Vec::new();
+        reqs.extend_from_slice(b"{\"id\":1,\"model\":\"nope\",\"variant\":\"v4\",\"seed\":3}\n");
+        reqs.extend_from_slice(b"{\"id\":2,\"model\":\"nope\",\"variant\":\"v4\",\"input\":\"00ff\"}\n");
+        reqs.extend_from_slice(b"{\"id\":3,\"model\":");
+        reqs.extend_from_slice(b"\n");
+        reqs.extend_from_slice(&[0xff, 0xfe, b'\n']); // invalid UTF-8 line
+        reqs.extend_from_slice(good);
+        reqs.extend_from_slice(b"\n");
+        let mut out = Vec::new();
+        serve_lines(
+            units(),
+            ServeOptions::default(),
+            local_exec(1),
+            std::io::Cursor::new(reqs),
+            &mut out,
+        )
+        .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 5, "{text}");
+        // Line 3 is malformed JSON, so even its id is unrecoverable (0).
+        for (i, want_id) in [(0usize, 1u64), (1, 2), (2, 0), (3, 0)] {
+            let v = json::parse(lines[i]).unwrap();
+            assert_eq!(v.get("id").unwrap().as_u64().unwrap(), want_id, "{text}");
+            let err = v.get("error").unwrap().as_str().unwrap().to_string();
+            assert!(!err.is_empty(), "{text}");
+            if i < 2 {
+                assert!(err.contains("unknown model key"), "{err}");
+            }
+        }
+        // The session survived: the final valid request was served.
+        let last = json::parse(lines[4]).unwrap();
+        assert_eq!(last.get("id").unwrap().as_u64().unwrap(), 7);
+        assert!(last.get_opt("output").is_some(), "{text}");
+    }
+
+    #[test]
+    fn window_tuner_tracks_arrival_rate_within_bounds() {
+        let opts = ServeOptions {
+            window_min: Duration::from_millis(1),
+            window_max: Duration::from_millis(8),
+            ..ServeOptions::default()
+        };
+        let hint = BatchHint { max_batch: 64, parallelism: 4 };
+        let mut t = WindowTuner::new(&opts, &hint);
+        // No data: the window is the configured max.
+        assert_eq!(t.window(), Duration::from_millis(8));
+        let t0 = Instant::now();
+        // Fast arrivals (100 µs apart): 4 lanes × 100 µs = 400 µs target,
+        // clamped up to window_min.
+        for i in 0..20u32 {
+            t.observe(t0 + i * Duration::from_micros(100));
+        }
+        assert_eq!(t.window(), Duration::from_millis(1));
+        // Slow arrivals (50 ms apart) stretch the window to the cap.
+        let mut t = WindowTuner::new(&opts, &hint);
+        for i in 0..20u32 {
+            t.observe(t0 + i * Duration::from_millis(50));
+        }
+        assert_eq!(t.window(), Duration::from_millis(8));
+        // Mid-rate arrivals land between the bounds: 1 ms gaps × 4 lanes.
+        let mut t = WindowTuner::new(&opts, &hint);
+        for i in 0..50u32 {
+            t.observe(t0 + i * Duration::from_millis(1));
+        }
+        let w = t.window();
+        assert!(
+            w > Duration::from_millis(1) && w < Duration::from_millis(8),
+            "{w:?}"
+        );
+        // A fixed window never moves, whatever the rate.
+        let fixed = ServeOptions::default()
+            .fixed_window(Duration::from_millis(2));
+        let mut t = WindowTuner::new(&fixed, &hint);
+        for i in 0..20u32 {
+            t.observe(t0 + i * Duration::from_micros(10));
+        }
+        assert_eq!(t.window(), Duration::from_millis(2));
+    }
+
+    #[test]
+    fn queue_cap_rejection_is_a_ticket_error() {
+        // Cap 2, one-worker backend, a long fixed window: the 3rd..6th
+        // concurrent submissions must be shed with a structured error —
+        // not a panic, not a hang — and the admitted ones still serve.
+        let opts = ServeOptions {
+            queue_cap: 2,
+            max_batch: 64,
+            ..ServeOptions::default()
+        }
+        .fixed_window(Duration::from_millis(300));
+        let spec = tiny_conv_net(3);
+        let n_in = spec.input_elems();
+        let (server, client) = Server::start(units(), opts, local_exec(1));
+        let key = model_key("synth:tiny:3", "v0");
+        let tickets: Vec<Ticket> = (0..6)
+            .map(|_| client.submit(&key, vec![0; n_in]).unwrap())
+            .collect();
+        let results: Vec<Result<Reply>> =
+            tickets.into_iter().map(Ticket::wait).collect();
+        let served = results.iter().filter(|r| r.is_ok()).count();
+        let shed: Vec<String> = results
+            .iter()
+            .filter_map(|r| r.as_ref().err().map(|e| e.to_string()))
+            .collect();
+        assert_eq!(served, 2, "cap 2 admits exactly 2 of a 6-burst");
+        assert_eq!(shed.len(), 4);
+        for e in &shed {
+            assert!(e.contains("admission rejected"), "{e}");
+            assert!(e.contains("queue full"), "{e}");
+        }
+        drop(client);
+        let report = server.join();
+        let row = &report.slo.rows[0];
+        assert_eq!((row.served, row.rejected), (2, 4));
+    }
+}

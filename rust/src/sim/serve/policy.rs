@@ -1,0 +1,390 @@
+//! Scheduling policies: how the dispatcher picks the next engine batch
+//! from the per-model queues (DESIGN.md §14).
+//!
+//! A [`SchedPolicy`] sees the whole [`QueueSet`] and drains up to
+//! [`BatchHint::max_batch`] requests per call.  Two implementations ship:
+//!
+//! - [`Fifo`] — strict global arrival order, bit-identical in service
+//!   order to the pre-scheduler dispatcher (one shared FIFO).  Simple and
+//!   throughput-optimal, but a chatty tenant that floods the queue ahead
+//!   of a quiet one delays every later arrival behind its whole backlog.
+//! - [`DeficitRoundRobin`] — classic deficit round-robin across the
+//!   non-empty model queues.  Every round each active queue earns a
+//!   quantum of service; a tenant with a 10:1 arrival-rate advantage
+//!   still only gets its round-robin share of each batch, so the
+//!   low-rate tenant's queueing delay stays bounded by the batch period,
+//!   not by the flood (asserted by `tests/serve_sched.rs`).
+//!
+//! Policies never reorder one model's requests relative to each other —
+//! per-model FIFO is part of the trait contract, so replies stay
+//! deterministic for a fixed arrival sequence.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use super::queue::{Pending, QueueSet};
+
+/// What the dispatcher tells the policy about the batch it may form.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchHint {
+    /// Hard batch-size cap (`--max-batch`).
+    pub max_batch: usize,
+    /// The executor's concurrent-lane count
+    /// ([`crate::sim::exec::Caps::parallelism`]): worker threads for a
+    /// local backend, workers × pipeline depth for a shard.  Policies use
+    /// it to size batches to what the substrate can actually overlap.
+    pub parallelism: usize,
+}
+
+impl BatchHint {
+    /// The batch size worth filling: the hard cap, or the executor's
+    /// parallel lane count when that is smaller — a batch larger than the
+    /// lane count only adds queueing delay inside the backend.
+    pub fn target_fill(&self) -> usize {
+        self.max_batch.min(self.parallelism.max(1)).max(1)
+    }
+}
+
+/// A batch-forming discipline over the per-model queues.
+///
+/// **Contract** (relied on by the dispatcher, asserted by the scheduler
+/// tests):
+///
+/// - `next_batch` returns a **non-empty** batch whenever `queues` is
+///   non-empty (the dispatcher would otherwise spin), and never more than
+///   `hint.max_batch` requests.
+/// - Per-model FIFO order is preserved: one model's requests are only
+///   ever popped from the queue head, never reordered.
+/// - Decisions are a pure function of the queue state and the policy's
+///   own counters — no clocks, no randomness — so a fixed arrival
+///   sequence always forms the same batches.
+pub trait SchedPolicy: Send {
+    /// Policy name (logs, reports, `describe` strings).
+    fn name(&self) -> &'static str;
+
+    /// Drain up to `hint.max_batch` requests from `queues` into the next
+    /// engine batch.
+    fn next_batch(&mut self, queues: &mut QueueSet, hint: &BatchHint)
+        -> Vec<Pending>;
+}
+
+/// Which scheduling policy to run — the parsed `--policy` value.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// Strict global arrival order (the legacy dispatcher's behavior).
+    #[default]
+    Fifo,
+    /// Deficit round-robin fairness across models.
+    Drr,
+}
+
+impl PolicyKind {
+    /// Parse a `--policy` value: `fifo` or `drr`.
+    pub fn parse(s: &str) -> Result<PolicyKind> {
+        match s {
+            "fifo" => Ok(PolicyKind::Fifo),
+            "drr" => Ok(PolicyKind::Drr),
+            other => bail!("unknown policy {other:?} (expected fifo or drr)"),
+        }
+    }
+
+    /// Build a fresh policy instance of this kind.
+    pub fn build(self) -> Box<dyn SchedPolicy> {
+        match self {
+            PolicyKind::Fifo => Box::new(Fifo),
+            PolicyKind::Drr => Box::new(DeficitRoundRobin::new()),
+        }
+    }
+}
+
+impl std::fmt::Display for PolicyKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            PolicyKind::Fifo => "fifo",
+            PolicyKind::Drr => "drr",
+        })
+    }
+}
+
+/// Strict global arrival order: repeatedly serve the queue holding the
+/// globally-oldest request.  This reconstructs exactly the one shared
+/// FIFO of the pre-scheduler dispatcher, so `--policy fifo` replies are
+/// bit-identical to the legacy serve path.
+pub struct Fifo;
+
+impl SchedPolicy for Fifo {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn next_batch(
+        &mut self,
+        queues: &mut QueueSet,
+        hint: &BatchHint,
+    ) -> Vec<Pending> {
+        let mut batch = Vec::new();
+        while batch.len() < hint.max_batch {
+            let Some(p) = queues.pop_oldest() else { break };
+            batch.push(p);
+        }
+        batch
+    }
+}
+
+/// Deficit round-robin across the non-empty model queues.
+///
+/// Each `next_batch` round walks the active queues in sorted key order,
+/// resuming *after* the last queue served in the previous batch (the
+/// rotation cursor), and credits each visited queue one quantum —
+/// `max_batch / active_queues`, at least 1.  A queue spends its deficit
+/// one request at a time while it has any; unspent deficit carries to the
+/// next round, and a queue that empties forfeits its credit (standard
+/// DRR, so an idle tenant cannot hoard service).  Requests cost 1 each —
+/// inference jobs are near-uniform per model, and the per-model histogram
+/// (DESIGN.md §14) is where actual cost skew becomes visible.
+#[derive(Default)]
+pub struct DeficitRoundRobin {
+    /// Carried-over service credit per key.
+    deficit: HashMap<String, usize>,
+    /// Last key served — the next batch starts after it (fair rotation
+    /// across batches, not just within one).
+    cursor: Option<String>,
+}
+
+impl DeficitRoundRobin {
+    pub fn new() -> DeficitRoundRobin {
+        DeficitRoundRobin::default()
+    }
+}
+
+impl SchedPolicy for DeficitRoundRobin {
+    fn name(&self) -> &'static str {
+        "drr"
+    }
+
+    fn next_batch(
+        &mut self,
+        queues: &mut QueueSet,
+        hint: &BatchHint,
+    ) -> Vec<Pending> {
+        let mut batch = Vec::new();
+        'rounds: while batch.len() < hint.max_batch {
+            let active = queues.active_keys();
+            if active.is_empty() {
+                break;
+            }
+            let quantum = (hint.max_batch / active.len()).max(1);
+            // Rotate: start at the first active key after the cursor.
+            let start = match &self.cursor {
+                Some(c) => active.iter().position(|k| k > c).unwrap_or(0),
+                None => 0,
+            };
+            for i in 0..active.len() {
+                let key = &active[(start + i) % active.len()];
+                let d = self.deficit.entry(key.clone()).or_insert(0);
+                *d += quantum;
+                let mut full = false;
+                while *d > 0 {
+                    match queues.pop(key) {
+                        Some(p) => {
+                            *d -= 1;
+                            batch.push(p);
+                        }
+                        None => break,
+                    }
+                    if batch.len() >= hint.max_batch {
+                        full = true;
+                        break;
+                    }
+                }
+                if queues.len_of(key) == 0 {
+                    // An emptied queue forfeits unspent credit — even when
+                    // its last pop is what filled the batch (otherwise an
+                    // idle tenant returns with hoarded deficit).
+                    self.deficit.remove(key);
+                }
+                self.cursor = Some(key.clone());
+                if full {
+                    break 'rounds;
+                }
+            }
+        }
+        batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+    use std::time::Instant;
+
+    fn push(qs: &mut QueueSet, key: &str) {
+        qs.admit(key.to_string(), Vec::new(), mpsc::channel().0, Instant::now())
+            .unwrap();
+    }
+
+    fn filled(reqs: &[(&str, usize)]) -> QueueSet {
+        let mut qs = QueueSet::new(1 << 20);
+        for &(key, n) in reqs {
+            for _ in 0..n {
+                push(&mut qs, key);
+            }
+        }
+        qs
+    }
+
+    fn keys(batch: &[Pending]) -> Vec<&str> {
+        batch.iter().map(|p| p.key.as_str()).collect()
+    }
+
+    #[test]
+    fn policy_kind_parses_and_displays() {
+        assert_eq!(PolicyKind::parse("fifo").unwrap(), PolicyKind::Fifo);
+        assert_eq!(PolicyKind::parse("drr").unwrap(), PolicyKind::Drr);
+        assert!(PolicyKind::parse("lifo").is_err());
+        for k in [PolicyKind::Fifo, PolicyKind::Drr] {
+            assert_eq!(PolicyKind::parse(&k.to_string()).unwrap(), k);
+            assert_eq!(k.build().name(), k.to_string());
+        }
+    }
+
+    #[test]
+    fn fifo_serves_global_arrival_order_across_queues() {
+        // Arrivals: a, b, a, c, b — FIFO must replay exactly that.
+        let mut qs = QueueSet::new(16);
+        for key in ["a", "b", "a", "c", "b"] {
+            push(&mut qs, key);
+        }
+        let hint = BatchHint { max_batch: 3, parallelism: 8 };
+        let b1 = Fifo.next_batch(&mut qs, &hint);
+        assert_eq!(keys(&b1), ["a", "b", "a"]);
+        assert_eq!(b1.iter().map(|p| p.seq).collect::<Vec<_>>(), [0, 1, 2]);
+        let b2 = Fifo.next_batch(&mut qs, &hint);
+        assert_eq!(keys(&b2), ["c", "b"]);
+        assert!(Fifo.next_batch(&mut qs, &hint).is_empty());
+    }
+
+    #[test]
+    fn drr_splits_each_batch_across_backlogged_tenants() {
+        // 10:1 backlog skew; max_batch 8 over 2 active queues -> quantum 4.
+        let mut qs = filled(&[("chatty", 40), ("quiet", 4)]);
+        let hint = BatchHint { max_batch: 8, parallelism: 8 };
+        let mut drr = DeficitRoundRobin::new();
+        let b1 = drr.next_batch(&mut qs, &hint);
+        assert_eq!(
+            keys(&b1).iter().filter(|&&k| k == "quiet").count(),
+            4,
+            "quiet tenant gets its full quantum in the first batch"
+        );
+        assert_eq!(b1.len(), 8);
+        // Quiet's 4 remaining requests were already served; the rest of the
+        // backlog is chatty-only, and DRR degrades to plain draining.
+        let b2 = drr.next_batch(&mut qs, &hint);
+        assert!(keys(&b2).iter().all(|k| *k == "chatty"));
+        assert_eq!(b2.len(), 8);
+    }
+
+    #[test]
+    fn drr_preserves_per_model_fifo_order() {
+        let mut qs = filled(&[("a", 6), ("b", 6)]);
+        let hint = BatchHint { max_batch: 4, parallelism: 4 };
+        let mut drr = DeficitRoundRobin::new();
+        let mut seen: std::collections::HashMap<&str, Vec<u64>> =
+            Default::default();
+        loop {
+            let batch = drr.next_batch(&mut qs, &hint);
+            if batch.is_empty() {
+                break;
+            }
+            assert!(batch.len() <= 4);
+            for p in &batch {
+                seen.entry(if p.key == "a" { "a" } else { "b" })
+                    .or_default()
+                    .push(p.seq);
+            }
+        }
+        for (k, seqs) in seen {
+            let mut sorted = seqs.clone();
+            sorted.sort_unstable();
+            assert_eq!(seqs, sorted, "model {k} requests were reordered");
+        }
+    }
+
+    #[test]
+    fn drr_rotation_does_not_favor_the_first_key() {
+        // max_batch 3 over 3 queues -> quantum 1; rotation must cycle so
+        // each queue drains at the same rate across batches.
+        let mut qs = filled(&[("a", 3), ("b", 3), ("c", 3)]);
+        let hint = BatchHint { max_batch: 3, parallelism: 4 };
+        let mut drr = DeficitRoundRobin::new();
+        for _ in 0..3 {
+            let batch = drr.next_batch(&mut qs, &hint);
+            let mut ks = keys(&batch);
+            ks.sort_unstable();
+            assert_eq!(ks, ["a", "b", "c"], "each batch serves each tenant");
+        }
+        assert!(qs.is_empty());
+    }
+
+    /// Regression: when the pop that *fills the batch* is also the pop
+    /// that *empties a queue*, that queue's unspent credit must still be
+    /// forfeited — otherwise an idle tenant returns with hoarded deficit
+    /// and takes more than its round-robin share.
+    #[test]
+    fn drr_forfeits_credit_when_the_filling_pop_empties_a_queue() {
+        let hint = BatchHint { max_batch: 4, parallelism: 4 };
+        let mut drr = DeficitRoundRobin::new();
+        // Batch 1 trace (quantum 1 over {a,b,c}, then 2 over {a,b}): a's
+        // second request is the pop that both fills the batch and empties
+        // a, leaving a with 1 unspent credit unless it is forfeited.
+        let mut qs = filled(&[("a", 2), ("b", 2), ("c", 1)]);
+        let b1 = drr.next_batch(&mut qs, &hint);
+        assert_eq!(b1.len(), 4);
+        assert_eq!(qs.len_of("a"), 0, "a emptied by the filling pop");
+        // Batch 2: only b's leftover — moves the cursor past a.
+        let b2 = drr.next_batch(&mut qs, &hint);
+        assert_eq!(keys(&b2), ["b"]);
+        // a returns from idle; the rotation now visits a first.  With
+        // hoarded credit a would take 3 of the 4 slots; its fair share
+        // is exactly the quantum (2).
+        for _ in 0..3 {
+            push(&mut qs, "a");
+        }
+        for _ in 0..3 {
+            push(&mut qs, "b");
+        }
+        let b3 = drr.next_batch(&mut qs, &hint);
+        assert_eq!(b3.len(), 4);
+        let a_share = keys(&b3).iter().filter(|&&k| k == "a").count();
+        assert_eq!(a_share, 2, "returning tenant must not hoard deficit");
+    }
+
+    #[test]
+    fn policies_always_progress_on_nonempty_queues() {
+        for kind in [PolicyKind::Fifo, PolicyKind::Drr] {
+            let mut qs = filled(&[("only", 5)]);
+            let mut p = kind.build();
+            let hint = BatchHint { max_batch: 2, parallelism: 1 };
+            let mut served = 0;
+            while !qs.is_empty() {
+                let b = p.next_batch(&mut qs, &hint);
+                assert!(!b.is_empty(), "{kind}: empty batch on non-empty queues");
+                assert!(b.len() <= 2);
+                served += b.len();
+            }
+            assert_eq!(served, 5, "{kind}");
+        }
+    }
+
+    #[test]
+    fn batch_hint_target_fill_clamps() {
+        let h = BatchHint { max_batch: 64, parallelism: 8 };
+        assert_eq!(h.target_fill(), 8);
+        let h = BatchHint { max_batch: 4, parallelism: 8 };
+        assert_eq!(h.target_fill(), 4);
+        let h = BatchHint { max_batch: 4, parallelism: 0 };
+        assert_eq!(h.target_fill(), 1);
+    }
+}

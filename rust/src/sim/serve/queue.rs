@@ -1,0 +1,189 @@
+//! Bounded per-model request queues with admission control — the buffer
+//! stage of the serving scheduler (DESIGN.md §14).
+//!
+//! Every admitted request lands in the FIFO queue of its `(model,
+//! variant)` key.  Queues are **bounded** (`--queue-cap`): a tenant that
+//! submits faster than the backend drains is rejected at admission with a
+//! structured error on its [`super::Ticket`] — the scheduler never grows
+//! an unbounded backlog and never lets one tenant's flood consume the
+//! dispatcher's memory.  [`Pending::seq`] is the *global* arrival order,
+//! so a policy that wants strict FIFO across tenants ([`super::policy::Fifo`])
+//! can reconstruct it exactly.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::time::Instant;
+
+use super::ReplyTx;
+
+/// One admitted, not-yet-dispatched inference request.
+pub struct Pending {
+    /// Registry key (`"<model>@<variant>"`, see [`super::model_key`]).
+    pub key: String,
+    /// Global arrival sequence number — total order across every queue.
+    pub seq: u64,
+    /// Packed int8 input image.
+    pub input: Vec<u8>,
+    /// Where the reply (or a structured error) goes.
+    pub(crate) reply: ReplyTx,
+    /// Client submission time — the latency clock starts here (it covers
+    /// channel wait + queueing + execution, the number a caller sees).
+    pub(crate) submitted: Instant,
+}
+
+/// The set of bounded per-model queues the scheduler drains.
+///
+/// Keys iterate in sorted order everywhere ([`BTreeMap`]), so every
+/// policy decision over "the active queues" is deterministic for a given
+/// arrival sequence.
+pub struct QueueSet {
+    /// Per-queue capacity (admission bound).
+    cap: usize,
+    queues: BTreeMap<String, VecDeque<Pending>>,
+    next_seq: u64,
+    total: usize,
+}
+
+impl QueueSet {
+    /// A queue set whose per-model queues hold at most `cap` requests.
+    pub fn new(cap: usize) -> QueueSet {
+        QueueSet {
+            cap: cap.max(1),
+            queues: BTreeMap::new(),
+            next_seq: 0,
+            total: 0,
+        }
+    }
+
+    /// Admission control: enqueue a request onto `key`'s queue, or reject
+    /// it when that queue is at capacity.  Rejection hands the reply
+    /// sender back with the structured error message the caller forwards
+    /// to the ticket — admission pressure is an *answer*, never a panic
+    /// and never a dropped request.
+    pub(crate) fn admit(
+        &mut self,
+        key: String,
+        input: Vec<u8>,
+        reply: ReplyTx,
+        submitted: Instant,
+    ) -> Result<(), (ReplyTx, String)> {
+        let q = self.queues.entry(key.clone()).or_default();
+        if q.len() >= self.cap {
+            return Err((
+                reply,
+                format!(
+                    "{key}: admission rejected — queue full \
+                     ({} pending, cap {})",
+                    q.len(),
+                    self.cap
+                ),
+            ));
+        }
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        q.push_back(Pending { key, seq, input, reply, submitted });
+        self.total += 1;
+        Ok(())
+    }
+
+    /// Requests queued across every model.
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Queued requests for one key.
+    pub fn len_of(&self, key: &str) -> usize {
+        self.queues.get(key).map_or(0, VecDeque::len)
+    }
+
+    /// Sorted keys of the currently non-empty queues.
+    pub fn active_keys(&self) -> Vec<String> {
+        self.queues
+            .iter()
+            .filter(|(_, q)| !q.is_empty())
+            .map(|(k, _)| k.clone())
+            .collect()
+    }
+
+    /// Pop the oldest queued request of `key` (its per-model FIFO head).
+    pub fn pop(&mut self, key: &str) -> Option<Pending> {
+        let p = self.queues.get_mut(key)?.pop_front()?;
+        self.total -= 1;
+        Some(p)
+    }
+
+    /// Pop the globally-oldest request (lowest [`Pending::seq`]; one
+    /// scan, no key clone) — what strict cross-tenant FIFO
+    /// ([`super::policy::Fifo`]) serves next.
+    pub fn pop_oldest(&mut self) -> Option<Pending> {
+        let (_, q) = self
+            .queues
+            .iter_mut()
+            .filter(|(_, q)| !q.is_empty())
+            .min_by_key(|(_, q)| q.front().map_or(u64::MAX, |p| p.seq))?;
+        let p = q.pop_front()?;
+        self.total -= 1;
+        Some(p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sink() -> ReplyTx {
+        std::sync::mpsc::channel().0
+    }
+
+    fn push(qs: &mut QueueSet, key: &str, input: Vec<u8>) -> Result<(), String> {
+        qs.admit(key.to_string(), input, sink(), Instant::now())
+            .map_err(|(_, msg)| msg)
+    }
+
+    #[test]
+    fn admission_bounds_each_queue_independently() {
+        let mut qs = QueueSet::new(2);
+        assert!(push(&mut qs, "a@v0", vec![1]).is_ok());
+        assert!(push(&mut qs, "a@v0", vec![2]).is_ok());
+        let msg = push(&mut qs, "a@v0", vec![3]).unwrap_err();
+        assert!(msg.contains("queue full"), "{msg}");
+        assert!(msg.contains("a@v0"), "{msg}");
+        // A different model's queue is unaffected by a's pressure.
+        assert!(push(&mut qs, "b@v0", vec![4]).is_ok());
+        assert_eq!(qs.total(), 3);
+        assert_eq!(qs.len_of("a@v0"), 2);
+        // Draining reopens admission.
+        assert!(qs.pop("a@v0").is_some());
+        assert!(push(&mut qs, "a@v0", vec![5]).is_ok());
+    }
+
+    #[test]
+    fn seq_is_global_arrival_order_and_pop_oldest_tracks_it() {
+        let mut qs = QueueSet::new(8);
+        push(&mut qs, "b@v0", vec![]).unwrap();
+        push(&mut qs, "a@v0", vec![]).unwrap();
+        push(&mut qs, "b@v0", vec![]).unwrap();
+        let p = qs.pop_oldest().unwrap();
+        assert_eq!((p.key.as_str(), p.seq), ("b@v0", 0));
+        let p = qs.pop_oldest().unwrap();
+        assert_eq!((p.key.as_str(), p.seq), ("a@v0", 1));
+        let p = qs.pop_oldest().unwrap();
+        assert_eq!((p.key.as_str(), p.seq), ("b@v0", 2));
+        assert!(qs.is_empty());
+        assert!(qs.pop_oldest().is_none());
+    }
+
+    #[test]
+    fn active_keys_sorted_and_skip_drained_queues() {
+        let mut qs = QueueSet::new(8);
+        push(&mut qs, "z@v4", vec![]).unwrap();
+        push(&mut qs, "a@v0", vec![]).unwrap();
+        push(&mut qs, "m@v1", vec![]).unwrap();
+        assert_eq!(qs.active_keys(), ["a@v0", "m@v1", "z@v4"]);
+        qs.pop("m@v1").unwrap();
+        assert_eq!(qs.active_keys(), ["a@v0", "z@v4"]);
+    }
+}

@@ -74,8 +74,9 @@ pub const RESPAWN_ATTEMPTS: u32 = 2;
 
 /// Max jobs kept in flight per worker: deep enough to hide the pipe
 /// round-trip behind execution, shallow enough that a death re-dispatches
-/// little work.
-const PIPELINE: usize = 2;
+/// little work.  Public because a shard backend's effective parallelism
+/// ([`crate::sim::exec::Caps::parallelism`]) is `workers × PIPELINE`.
+pub const PIPELINE: usize = 2;
 
 /// Floor for the stall backstop (see [`stall_timeout`]).
 const STALL_TIMEOUT_MIN: Duration = Duration::from_secs(300);

@@ -136,6 +136,10 @@ fn every_backend_matches_reference_bit_for_bit() {
     for mut exec in backends() {
         let name = exec.describe();
         assert!(exec.caps().persistent_pool, "{name}: pools persist");
+        assert!(
+            exec.caps().parallelism >= 1,
+            "{name}: a backend always has at least one lane"
+        );
         for round in 0..2 {
             for (i, d) in descs.iter().enumerate() {
                 assert_eq!(
@@ -221,6 +225,23 @@ fn hydration_failure_stays_at_its_index_on_every_backend() {
             );
         }
     }
+}
+
+/// The parallelism capability (DESIGN.md §14's batch-sizing hint) tracks
+/// each backend's actual concurrent-lane count.
+#[test]
+fn parallelism_capability_matches_backend_shape() {
+    let local = LocalExec::new(Path::new("artifacts"), 3);
+    assert_eq!(local.caps().parallelism, 3);
+    let shard = ShardExec::from_pool(
+        ShardPool::spawn(&marvel_worker_cmd(), 2).unwrap(),
+        2,
+    );
+    assert_eq!(
+        shard.caps().parallelism,
+        2 * marvel::sim::shard::PIPELINE,
+        "a shard's lanes are workers x pipeline depth"
+    );
 }
 
 /// Check 4, local flavor: a job that panics its worker thread (DM resize

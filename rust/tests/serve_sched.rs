@@ -1,0 +1,290 @@
+//! Scheduler-subsystem contract tests (DESIGN.md §14):
+//!
+//! 1. **FIFO bit-identity** — `--policy fifo` serves the exec-conformance
+//!    model zoo bit-identically to the offline `run_descs_local`
+//!    reference, on the local *and* the shard backend: the scheduler
+//!    refactor moved requests between queues, never bytes.
+//! 2. **Starvation freedom** — under a 10:1 two-tenant skew with the
+//!    chatty tenant's whole backlog queued first, DRR serves the quiet
+//!    tenant inside the first few batches (its delay is bounded by its
+//!    round-robin share), while FIFO makes it ride behind the entire
+//!    flood.  The batch sequence numbers make the bound exact and
+//!    timing-independent.
+//! 3. **Admission control** — a full per-model queue answers tickets with
+//!    a structured error (never a panic, never a hang) while admitted
+//!    neighbors and the *other* tenant keep serving.
+//!
+//! Like `tests/shard.rs`, the process-spawning case uses the real
+//! `marvel` binary (`CARGO_BIN_EXE_marvel`) and synthetic models, so no
+//! artifacts directory is needed.
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use marvel::compiler::{pack_input, CompileCache};
+use marvel::models::synth::{tiny_conv_net, Builder};
+use marvel::sim::exec::{Executor, LocalExec, ShardExec};
+use marvel::sim::serve::{build_serve_models, model_key, Server, Ticket};
+use marvel::sim::shard::{self, run_descs_local, JobDesc, ShardPool,
+                         WorkerCmd};
+use marvel::sim::{PolicyKind, ServeOptions, V0, V4};
+use marvel::util::rng::Rng;
+
+fn artifacts() -> &'static Path {
+    Path::new("artifacts")
+}
+
+fn zoo() -> Vec<String> {
+    ["synth:tiny:3", "synth:lenet:5", "synth:residual:7"]
+        .map(String::from)
+        .to_vec()
+}
+
+/// Deterministic per-zoo-model job descriptions (mirrors the conformance
+/// suite's interleaved zoo).
+fn zoo_descs(n_inputs: usize) -> Vec<JobDesc> {
+    let mut hyd = shard::Hydrator::new(artifacts());
+    let mut out = Vec::new();
+    for (mi, model) in zoo().iter().enumerate() {
+        let spec = marvel::models::resolve(artifacts(), model).unwrap();
+        let mut rng = Rng::new(900 + mi as u64);
+        for v in [V0, V4] {
+            let (c, _) = hyd.hydrate(model, v.name).unwrap();
+            for _ in 0..n_inputs {
+                let input = Builder::random_input(&spec, &mut rng);
+                let packed = pack_input(&input).unwrap();
+                out.push(shard::desc_for(model, &c, &packed, 1 << 33));
+            }
+        }
+    }
+    out
+}
+
+fn shard_exec(workers: usize) -> Box<dyn Executor> {
+    let cmd = WorkerCmd {
+        program: PathBuf::from(env!("CARGO_BIN_EXE_marvel")),
+        args: vec![
+            "shard-worker".to_string(),
+            "--artifacts".to_string(),
+            "artifacts".to_string(),
+        ],
+    };
+    Box::new(ShardExec::from_pool(ShardPool::spawn(&cmd, workers).unwrap(), workers))
+}
+
+/// Invariant 1: FIFO replies are bit-identical to the offline reference
+/// on every backend — and so are DRR's, since policies move requests
+/// between batches, never change their bytes.
+#[test]
+fn fifo_and_drr_replies_match_offline_reference_on_both_backends() {
+    let descs = zoo_descs(2);
+    let reference = run_descs_local(artifacts(), &descs, 0);
+
+    for bname in ["local:2", "shard:2"] {
+        for policy in [PolicyKind::Fifo, PolicyKind::Drr] {
+            let cache = CompileCache::new();
+            let units = build_serve_models(
+                artifacts(), &zoo(), &[V0, V4], &cache,
+            )
+            .unwrap();
+            let opts = ServeOptions {
+                max_batch: 8,
+                policy,
+                ..ServeOptions::default()
+            }
+            .fixed_window(Duration::from_millis(100));
+            let exec: Box<dyn Executor> = if bname == "shard:2" {
+                shard_exec(2)
+            } else {
+                Box::new(LocalExec::new(artifacts(), 2))
+            };
+            let (server, client) = Server::start(units, opts, exec);
+            let tickets: Vec<Ticket> = descs
+                .iter()
+                .map(|d| {
+                    client
+                        .submit(&model_key(&d.model, &d.variant), d.input.clone())
+                        .unwrap()
+                })
+                .collect();
+            for (i, t) in tickets.into_iter().enumerate() {
+                let r = t.wait().unwrap();
+                let want = reference[i].as_ref().unwrap();
+                assert_eq!(
+                    r.output, want.output,
+                    "{bname} {policy} request {i}: logits diverged"
+                );
+                assert_eq!(
+                    r.stats, want.stats,
+                    "{bname} {policy} request {i}: stats diverged"
+                );
+            }
+            drop(client);
+            let report = server.join();
+            assert!(report.batches >= 1);
+            let served: u64 =
+                report.slo.rows.iter().map(|r| r.served).sum();
+            assert_eq!(served as usize, descs.len(), "{bname} {policy}");
+        }
+    }
+}
+
+/// Drive the skew scenario: queue `chatty_n` chatty requests, then
+/// `quiet_n` quiet ones, all inside one long collection window, and
+/// return each tenant's highest batch sequence number.
+fn skew_batch_seqs(
+    policy: PolicyKind,
+    chatty_n: usize,
+    quiet_n: usize,
+) -> (u64, u64, u64) {
+    let cache = CompileCache::new();
+    let units = build_serve_models(
+        artifacts(),
+        &["synth:lenet:5".to_string(), "synth:tiny:3".to_string()],
+        &[V4],
+        &cache,
+    )
+    .unwrap();
+    // The chatty tenant floods with the *expensive* model: batch 1 (all
+    // chatty — its flood is submitted first) executes for orders of
+    // magnitude longer than the remaining submissions take to queue, so
+    // by batch 2 the whole arrival sequence is in the queues and batch
+    // composition is exactly the policy's choice, not a timing accident.
+    let chatty_key = model_key("synth:lenet:5", "v4");
+    let quiet_key = model_key("synth:tiny:3", "v4");
+    let chatty_in = marvel::models::synth::lenet_shaped(5).input_elems();
+    let quiet_in = tiny_conv_net(3).input_elems();
+    let opts = ServeOptions {
+        max_batch: 8,
+        queue_cap: 1 << 12,
+        policy,
+        ..ServeOptions::default()
+    }
+    // One long window, so the flood queues behind batch 1 rather than
+    // trickling into many tiny batches.
+    .fixed_window(Duration::from_millis(500));
+    let (server, client) =
+        Server::start(units, opts, Box::new(LocalExec::new(artifacts(), 2)));
+
+    let mut tickets = Vec::new();
+    for _ in 0..chatty_n {
+        tickets.push((false, client.submit(&chatty_key, vec![0; chatty_in]).unwrap()));
+    }
+    for _ in 0..quiet_n {
+        tickets.push((true, client.submit(&quiet_key, vec![1; quiet_in]).unwrap()));
+    }
+    let (mut chatty_max, mut quiet_max) = (0u64, 0u64);
+    for (quiet, t) in tickets {
+        let r = t.wait().unwrap();
+        if quiet {
+            quiet_max = quiet_max.max(r.batch_seq);
+        } else {
+            chatty_max = chatty_max.max(r.batch_seq);
+        }
+    }
+    drop(client);
+    let report = server.join();
+    (quiet_max, chatty_max, report.batches)
+}
+
+/// Invariant 2: DRR bounds the quiet tenant's completion by its
+/// round-robin share — under a 10:1 skew queued chatty-first, the quiet
+/// tenant's last reply rides an early batch, while FIFO parks it behind
+/// the whole flood.  (Batch numbers, not wall-clock, so the bound is
+/// exact: with max_batch 8 over 2 active queues DRR gives each tenant 4
+/// slots per batch — 8 quiet requests fit within batches 2..=3, the
+/// bound below adds one batch of slack for queueing raciness.)
+#[test]
+fn drr_does_not_starve_the_low_rate_tenant() {
+    // 80 chatty + 8 quiet ≈ 10:1, max_batch 8 -> ≥ 11 total batches.
+    let (quiet_drr, chatty_drr, batches_drr) =
+        skew_batch_seqs(PolicyKind::Drr, 80, 8);
+    assert!(
+        quiet_drr <= 4,
+        "drr: quiet tenant must finish within its first batches \
+         (finished at batch {quiet_drr} of {batches_drr})"
+    );
+    assert!(
+        chatty_drr > quiet_drr,
+        "drr: the flood keeps running after the quiet tenant is done"
+    );
+
+    let (quiet_fifo, _, batches_fifo) =
+        skew_batch_seqs(PolicyKind::Fifo, 80, 8);
+    assert!(
+        quiet_fifo >= batches_fifo.saturating_sub(1),
+        "fifo control: quiet queued last must finish in the last batches \
+         (finished at batch {quiet_fifo} of {batches_fifo})"
+    );
+    assert!(
+        quiet_drr < quiet_fifo,
+        "drr ({quiet_drr}) must beat fifo ({quiet_fifo}) for the \
+         quiet tenant under skew"
+    );
+}
+
+/// Invariant 3: one tenant's flood hitting its queue cap sheds *that*
+/// tenant's overflow with a structured ticket error; the other tenant's
+/// admission and service are untouched.
+#[test]
+fn queue_cap_sheds_only_the_flooding_tenant() {
+    let spec = tiny_conv_net(3);
+    let n_in = spec.input_elems();
+    let cache = CompileCache::new();
+    let units = build_serve_models(
+        artifacts(),
+        &["synth:tiny:3".to_string()],
+        &[V0, V4],
+        &cache,
+    )
+    .unwrap();
+    let chatty_key = model_key("synth:tiny:3", "v0");
+    let quiet_key = model_key("synth:tiny:3", "v4");
+    let opts = ServeOptions {
+        max_batch: 64,
+        queue_cap: 3,
+        policy: PolicyKind::Drr,
+        ..ServeOptions::default()
+    }
+    .fixed_window(Duration::from_millis(400));
+    let (server, client) =
+        Server::start(units, opts, Box::new(LocalExec::new(artifacts(), 1)));
+
+    let chatty: Vec<Ticket> = (0..9)
+        .map(|_| client.submit(&chatty_key, vec![0; n_in]).unwrap())
+        .collect();
+    let quiet: Vec<Ticket> = (0..2)
+        .map(|_| client.submit(&quiet_key, vec![1; n_in]).unwrap())
+        .collect();
+
+    let chatty_results: Vec<_> = chatty.into_iter().map(Ticket::wait).collect();
+    let served = chatty_results.iter().filter(|r| r.is_ok()).count();
+    assert_eq!(served, 3, "cap 3 admits exactly 3 of the 9-flood");
+    for r in &chatty_results {
+        if let Err(e) = r {
+            let msg = e.to_string();
+            assert!(msg.contains("admission rejected"), "{msg}");
+            assert!(msg.contains(&chatty_key), "{msg}");
+        }
+    }
+    // The quiet tenant is fully served despite the neighbor's shed flood.
+    for t in quiet {
+        t.wait().expect("quiet tenant must be unaffected by the flood");
+    }
+    drop(client);
+    let report = server.join();
+    let chatty_row = report
+        .slo
+        .rows
+        .iter()
+        .find(|r| r.key == chatty_key)
+        .expect("chatty row");
+    assert_eq!((chatty_row.served, chatty_row.rejected), (3, 6));
+    let quiet_row = report
+        .slo
+        .rows
+        .iter()
+        .find(|r| r.key == quiet_key)
+        .expect("quiet row");
+    assert_eq!((quiet_row.served, quiet_row.rejected), (2, 0));
+}

@@ -437,10 +437,8 @@ fn serve_front_matches_offline_engine() {
     .unwrap();
     let (server, client) = Server::start(
         units,
-        ServeOptions {
-            window: std::time::Duration::from_millis(100),
-            max_batch: 16,
-        },
+        ServeOptions { max_batch: 16, ..ServeOptions::default() }
+            .fixed_window(std::time::Duration::from_millis(100)),
         Box::new(LocalExec::new(artifacts, 2)),
     );
 

@@ -1,0 +1,51 @@
+"""Shared measurement loading for tools/bench_gate.py and
+tools/bench_trend.py — one definition of what a bench JSON line means,
+so the gate and the trend dashboard can never disagree about the same
+BENCH_*.json rows.
+
+Each input file holds one JSON object per line (see
+rust/benches/common.rs):
+
+    {"name": "...", "median_s": ..., "min_s": ..., "units_per_s": ...}
+    {"name": "...", "p50_s": ..., "p95_s": ..., "p99_s": ...}
+"""
+
+import json
+from pathlib import Path
+
+# (field, higher_is_better) per measurement kind, in probe order:
+# `units_per_s` throughput rows and the serve bench's `p99_s`
+# tail-latency rows (lower is better).
+KINDS = (("units_per_s", True), ("p99_s", False))
+
+
+def load(path: Path) -> dict[str, tuple[str, float]]:
+    """name -> (kind, value) for every parseable line with a measurement.
+
+    When a name repeats across invocations with the same kind, the best
+    rep wins (max for throughput, min for latency); a repeat under a
+    *different* kind replaces the entry (a renamed/retyped bench —
+    consumers compare kinds before trusting a pair).
+    """
+    out: dict[str, tuple[str, float]] = {}
+    if not path.exists():
+        return out
+    for line in path.read_text().splitlines():
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            row = json.loads(line)
+        except json.JSONDecodeError:
+            continue
+        if "name" not in row:
+            continue
+        for field, higher_better in KINDS:
+            v = row.get(field)
+            if isinstance(v, (int, float)) and v > 0:
+                if row["name"] in out and out[row["name"]][0] == field:
+                    old = out[row["name"]][1]
+                    v = max(v, old) if higher_better else min(v, old)
+                out[row["name"]] = (field, v)
+                break
+    return out

@@ -1,44 +1,35 @@
 #!/usr/bin/env python3
-"""Bench regression gate: compare a fresh BENCH_iss.json against the
-previous run's uploaded artifact and fail on a large throughput drop.
+"""Bench regression gate: compare a fresh bench JSON (BENCH_iss.json,
+BENCH_serve.json) against the previous run's uploaded artifact and fail on
+a large regression.
 
 Each input file holds one JSON object per line (see rust/benches/common.rs):
 
-    {"name": "...", "median_s": ..., "min_s": ..., "mean_s": ..., "units_per_s": ...}
+    {"name": "...", "median_s": ..., "min_s": ..., "units_per_s": ...}
+    {"name": "...", "p50_s": ..., "p95_s": ..., "p99_s": ...}
 
-Only measurements present in BOTH files with a `units_per_s` field are
-compared (names change as benches evolve; new/renamed entries just pass).
-A measurement regresses if current throughput falls below
-(1 - max-drop) x previous.  Missing/empty previous file is a pass — the
-first run on a branch has no baseline.
+Two measurement kinds are gated:
+
+- `units_per_s` (throughput): higher is better; regression = current
+  falling below (1 - max-drop) x previous.
+- `p99_s` (tail latency, the serve bench's per-tenant rows): lower is
+  better; regression = current rising above previous / (1 - drop), where
+  drop is `--max-drop-latency` when given (tail latency is noisier than
+  median-derived throughput) else `--max-drop`.
+
+Only measurements present in BOTH files with the SAME kind are compared
+(names change as benches evolve; new/renamed entries just pass).
+Missing/empty previous file is a pass — the first run on a branch has no
+baseline.
 
 Usage: bench_gate.py PREV.json CURRENT.json [--max-drop 0.15]
 """
 
 import argparse
-import json
 import sys
 from pathlib import Path
 
-
-def load(path: Path) -> dict[str, float]:
-    """name -> units_per_s for every parseable line with a throughput."""
-    out: dict[str, float] = {}
-    if not path.exists():
-        return out
-    for line in path.read_text().splitlines():
-        line = line.strip()
-        if not line:
-            continue
-        try:
-            row = json.loads(line)
-        except json.JSONDecodeError:
-            continue
-        ups = row.get("units_per_s")
-        if isinstance(ups, (int, float)) and ups > 0 and "name" in row:
-            # Keep the best rep if a name repeats across bench invocations.
-            out[row["name"]] = max(ups, out.get(row["name"], 0.0))
-    return out
+from bench_common import KINDS, load
 
 
 def main() -> int:
@@ -46,7 +37,11 @@ def main() -> int:
     ap.add_argument("prev", type=Path)
     ap.add_argument("current", type=Path)
     ap.add_argument("--max-drop", type=float, default=0.15,
-                    help="fractional throughput drop that fails the gate")
+                    help="fractional goodness drop that fails the gate")
+    ap.add_argument("--max-drop-latency", type=float, default=None,
+                    help="override for lower-is-better (p99_s) rows — tail "
+                         "latency is noisier than median throughput; "
+                         "defaults to --max-drop")
     args = ap.parse_args()
 
     prev = load(args.prev)
@@ -60,16 +55,23 @@ def main() -> int:
 
     failures = []
     compared = 0
-    for name, was in sorted(prev.items()):
-        now = cur.get(name)
-        if now is None:
+    for name, (kind, was) in sorted(prev.items()):
+        got = cur.get(name)
+        if got is None or got[0] != kind:
             print(f"  skip (gone):   {name}")
             continue
+        now = got[1]
         compared += 1
-        ratio = now / was
-        status = "ok" if ratio >= 1.0 - args.max_drop else "REGRESSED"
-        print(f"  {status:9s} {name}: {was:.3e} -> {now:.3e} units/s "
-              f"({(ratio - 1.0) * 100.0:+.1f}%)")
+        # Normalize to a higher-is-better "goodness" ratio.
+        higher_better = dict(KINDS)[kind]
+        ratio = (now / was) if higher_better else (was / now)
+        max_drop = args.max_drop if higher_better else (
+            args.max_drop_latency
+            if args.max_drop_latency is not None else args.max_drop)
+        status = "ok" if ratio >= 1.0 - max_drop else "REGRESSED"
+        print(f"  {status:9s} {name}: {was:.3e} -> {now:.3e} {kind} "
+              f"({(ratio - 1.0) * 100.0:+.1f}% goodness, "
+              f"tolerance {max_drop:.0%})")
         if status != "ok":
             failures.append(name)
     for name in sorted(set(cur) - set(prev)):
@@ -77,10 +79,9 @@ def main() -> int:
 
     if failures:
         print(f"bench gate: FAIL — {len(failures)}/{compared} measurements "
-              f"dropped more than {args.max_drop:.0%}: {', '.join(failures)}")
+              f"regressed past tolerance: {', '.join(failures)}")
         return 1
-    print(f"bench gate: pass ({compared} measurements within "
-          f"{args.max_drop:.0%})")
+    print(f"bench gate: pass ({compared} measurements within tolerance)")
     return 0
 
 

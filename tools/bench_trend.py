@@ -1,48 +1,34 @@
 #!/usr/bin/env python3
-"""Bench trend dashboard: render BENCH_iss.json measurements across the
-last N CI runs into a small markdown/ASCII report (ROADMAP item — the
-trajectory view next to tools/bench_gate.py's pairwise gate).
+"""Bench trend dashboard: render bench JSON measurements (BENCH_iss.json,
+BENCH_serve.json) across the last N CI runs into a small markdown/ASCII
+report (ROADMAP item — the trajectory view next to tools/bench_gate.py's
+pairwise gate).
 
 Each input file holds one JSON object per line (see rust/benches/common.rs):
 
-    {"name": "...", "median_s": ..., "min_s": ..., "mean_s": ..., "units_per_s": ...}
+    {"name": "...", "median_s": ..., "min_s": ..., "units_per_s": ...}
+    {"name": "...", "p50_s": ..., "p95_s": ..., "p99_s": ...}
 
-Files are given OLDEST FIRST; the last file is the current run.  For every
-measurement name seen anywhere, the dashboard shows a sparkline of
-`units_per_s` across the runs (missing runs render as a gap), the oldest
-and newest values, and the total change.  Unparseable or empty files are
-tolerated — CI artifact retrieval is best-effort.
+Two measurement kinds are tracked: `units_per_s` throughput rows (higher
+is better) and the serve bench's `p99_s` tail-latency rows (lower is
+better, rendered in ms and marked `↓`).  Files are given OLDEST FIRST;
+the last file is the current run.  For every measurement name seen
+anywhere, the dashboard shows a sparkline across the runs (missing runs
+render as a gap), the oldest and newest values, and the total change.
+Unparseable or empty files are tolerated — CI artifact retrieval is
+best-effort.
 
 Usage: bench_trend.py OLDEST.json [...] CURRENT.json [--out BENCH_trend.md]
 """
 
 import argparse
-import json
 import sys
 from pathlib import Path
 
+from bench_common import load
+
 SPARK = "▁▂▃▄▅▆▇█"
 GAP = "·"
-
-
-def load(path: Path) -> dict[str, float]:
-    """name -> units_per_s for every parseable line with a throughput."""
-    out: dict[str, float] = {}
-    if not path.exists():
-        return out
-    for line in path.read_text().splitlines():
-        line = line.strip()
-        if not line:
-            continue
-        try:
-            row = json.loads(line)
-        except json.JSONDecodeError:
-            continue
-        ups = row.get("units_per_s")
-        if isinstance(ups, (int, float)) and ups > 0 and "name" in row:
-            # Keep the best rep if a name repeats across bench invocations.
-            out[row["name"]] = max(ups, out.get(row["name"], 0.0))
-    return out
 
 
 def sparkline(values: list[float | None]) -> str:
@@ -64,9 +50,11 @@ def sparkline(values: list[float | None]) -> str:
     return "".join(chars)
 
 
-def fmt(v: float | None) -> str:
+def fmt(v: float | None, kind: str = "units_per_s") -> str:
     if v is None:
         return "-"
+    if kind == "p99_s":
+        return f"{v * 1e3:.3f}ms"
     if v >= 1e9:
         return f"{v / 1e9:.2f}G"
     if v >= 1e6:
@@ -76,19 +64,28 @@ def fmt(v: float | None) -> str:
     return f"{v:.1f}"
 
 
-def render(runs: list[dict[str, float]], labels: list[str]) -> str:
+def render(runs: list[dict[str, tuple[str, float]]],
+           labels: list[str]) -> str:
     names = sorted({n for r in runs for n in r})
     lines = [
         f"# Bench trend — {len(runs)} runs (oldest → newest)",
         "",
-        "Throughput (`units_per_s`) per measurement across the last CI "
-        "artifacts; sparkline is normalized per row.",
+        "Per-measurement trajectory across the last CI artifacts; "
+        "sparkline is normalized per row.  Throughput rows "
+        "(`units_per_s`) are higher-is-better; `↓` rows are serve p99 "
+        "tail latency, lower-is-better.",
         "",
         "| measurement | trend | oldest | newest | Δ |",
         "|---|---|---:|---:|---:|",
     ]
     for name in names:
-        values = [r.get(name) for r in runs]
+        entries = [r.get(name) for r in runs]
+        kind = next(e for e in entries if e is not None)[0]
+        # Ignore same-named rows whose kind changed (a renamed bench).
+        values = [
+            e[1] if e is not None and e[0] == kind else None
+            for e in entries
+        ]
         first = next(v for v in values if v is not None)
         # "newest" is strictly the current (last) run: a renamed/removed
         # measurement shows a gap, not its stale last-seen value.
@@ -98,9 +95,10 @@ def render(runs: list[dict[str, float]], labels: list[str]) -> str:
             if current is not None and first > 0
             else "-"
         )
+        mark = " ↓" if kind == "p99_s" else ""
         lines.append(
-            f"| `{name}` | `{sparkline(values)}` | {fmt(first)} "
-            f"| {fmt(current)} | {delta} |"
+            f"| `{name}`{mark} | `{sparkline(values)}` | {fmt(first, kind)} "
+            f"| {fmt(current, kind)} | {delta} |"
         )
     if not names:
         lines.append("| _no measurements found_ | | | | |")

@@ -6,6 +6,13 @@
 //! reference decode-enum interpreter it replaced, and the speedup is
 //! printed directly; the two paths' `RunStats` are asserted identical
 //! first, so the number is a like-for-like comparison.
+//!
+//! Two further row families cover the PR-6 hot-loop work (DESIGN.md §15):
+//! `iss/{v}/dispatch:threaded` vs `iss/{v}/dispatch:match` isolates the
+//! direct-threaded dispatch table against the central-`match` loop it
+//! replaced, and `iss/v4/lanes:{1,4,8}` steps 8 same-program inferences
+//! as software-SIMT lane groups of each width (units = the whole
+//! 8-inference batch, so the rows are directly comparable).
 
 #[path = "common.rs"]
 mod common;
@@ -13,7 +20,7 @@ mod common;
 use marvel::compiler::{compile, execute_compiled, load_input, make_sim};
 use marvel::models::synth::{lenet_shaped, Builder};
 use marvel::profiler::ProfileHook;
-use marvel::sim::{NopHook, V0, V4};
+use marvel::sim::{Machine, NopHook, V0, V4};
 use marvel::util::rng::Rng;
 
 fn median(secs: &[f64]) -> f64 {
@@ -77,6 +84,30 @@ fn main() {
             median(&reference_secs) / median(&lowered_secs)
         );
 
+        // Dispatch-flavor rows: the same lowered program through the kept
+        // central-`match` loop vs the direct-threaded handler table (the
+        // default `run` path, so its row re-reports `lowered_secs`).
+        let match_secs = common::time_runs(2, 10, || {
+            sim.reset_cpu();
+            load_input(&mut sim, &c, &input).unwrap();
+            sim.run_match(1 << 36, &mut NopHook).unwrap();
+        });
+        common::report(
+            &format!("iss/{}/dispatch:match", variant.name),
+            match_secs.clone(),
+            Some((stats.instrs as f64, "instr")),
+        );
+        common::report(
+            &format!("iss/{}/dispatch:threaded", variant.name),
+            lowered_secs.clone(),
+            Some((stats.instrs as f64, "instr")),
+        );
+        println!(
+            "iss/{}: threaded-vs-match speedup {:.2}x",
+            variant.name,
+            median(&match_secs) / median(&lowered_secs)
+        );
+
         let secs = common::time_runs(1, 5, || {
             sim.reset_cpu();
             load_input(&mut sim, &c, &input).unwrap();
@@ -87,6 +118,44 @@ fn main() {
             &format!("iss/{}/profile-hook", variant.name),
             secs,
             Some((stats.instrs as f64, "instr")),
+        );
+    }
+
+    // Multi-lane scenario (DESIGN.md §15): 8 independent inferences of the
+    // same v4 program, stepped as lane groups of width 1 (scalar
+    // back-to-back), 4 and 8.  Units are the whole batch, so a width's
+    // `units_per_s` is directly its batch throughput.
+    let c = compile(&spec, V4).unwrap();
+    let (_, stats) =
+        execute_compiled(&c, &spec, &input, 1 << 36, &mut NopHook).unwrap();
+    let mut lanes: Vec<Machine> =
+        (0..8).map(|_| make_sim(&c).unwrap()).collect();
+    let budgets = [1u64 << 36; 8];
+    for width in [1usize, 4, 8] {
+        let secs = common::time_runs(2, 10, || {
+            for m in lanes.iter_mut() {
+                m.reset_cpu();
+                load_input(m, &c, &input).unwrap();
+            }
+            if width == 1 {
+                for m in lanes.iter_mut() {
+                    m.run_fast(1 << 36).unwrap();
+                }
+            } else {
+                for chunk in lanes.chunks_mut(width) {
+                    let n = chunk.len();
+                    let rs = Machine::run_lane_group(chunk, &budgets[..n])
+                        .expect("uniform same-program lanes must group");
+                    for r in rs {
+                        r.unwrap();
+                    }
+                }
+            }
+        });
+        common::report(
+            &format!("iss/v4/lanes:{width}"),
+            secs,
+            Some((8.0 * stats.instrs as f64, "instr")),
         );
     }
 }

@@ -227,6 +227,110 @@ impl Machine {
         self.run_reference(max_instrs, hook)
     }
 
+    /// Like [`Self::run`] but forcing the lowered loop's *match* dispatch
+    /// — the pre-threaded central `match op.kind` form, kept as a second
+    /// differential oracle and the `dispatch:match` bench baseline
+    /// (DESIGN.md §15).  Falls back to the reference interpreter exactly
+    /// like [`Self::run`].
+    pub fn run_match<H: RetireHook>(
+        &mut self,
+        max_instrs: u64,
+        hook: &mut H,
+    ) -> Result<RunStats, SimError> {
+        let program = Arc::clone(&self.program);
+        if let Some(lp) = program.lowered(&self.cycle_model) {
+            if lp.covers_entry(self.ze) {
+                return super::lowered::run_lowered_match(
+                    self,
+                    &lp,
+                    program.instrs(),
+                    max_instrs,
+                    hook,
+                );
+            }
+        }
+        self.run_reference(max_instrs, hook)
+    }
+
+    /// Execute a *lane group*: machines running the **same** program
+    /// `Arc` under the **same** cycle model, stepped through one lowered
+    /// fetch/decode stream with per-lane registers, DMs and watchdog
+    /// budgets (software SIMT, DESIGN.md §15).  `results[l]` is
+    /// bit-identical to `lanes[l].run_fast(budgets[l])` run scalar; a
+    /// lane that exits early retires individually while its mates keep
+    /// stepping.  Lane runs are hook-free ([`super::NopHook`] semantics) —
+    /// callers that observe retirement must run scalar.
+    ///
+    /// Returns `None` when the group cannot take the lane path — empty
+    /// group, mixed programs or cycle models, a program the lowering
+    /// rejects, or an entry `ze` the static mark set does not cover — so
+    /// the caller falls back to per-lane scalar runs.
+    pub fn run_lane_group(
+        lanes: &mut [Machine],
+        budgets: &[u64],
+    ) -> Option<Vec<Result<RunStats, SimError>>> {
+        assert_eq!(lanes.len(), budgets.len(), "one budget per lane");
+        let first = lanes.first()?;
+        let program = Arc::clone(&first.program);
+        let cm = first.cycle_model;
+        if !lanes
+            .iter()
+            .all(|m| Arc::ptr_eq(&m.program, &program) && m.cycle_model == cm)
+        {
+            return None;
+        }
+        let lp = program.lowered(&cm)?;
+        if !lanes.iter().all(|m| lp.covers_entry(m.ze)) {
+            return None;
+        }
+        let mut out = Vec::with_capacity(lanes.len());
+        let mut i = 0;
+        // Widest-first chunking: 8-wide groups, then 4, 2, and a scalar
+        // tail — each width is a distinct monomorphization of the lane
+        // stepper, so the group size is a compile-time constant in the
+        // hot loop.
+        while i < lanes.len() {
+            let left = lanes.len() - i;
+            let k = if left >= 8 {
+                8
+            } else if left >= 4 {
+                4
+            } else if left >= 2 {
+                2
+            } else {
+                1
+            };
+            let chunk = &mut lanes[i..i + k];
+            let chunk_budgets = &budgets[i..i + k];
+            match k {
+                8 => out.extend(super::lowered::run_lanes::<8>(
+                    chunk,
+                    &lp,
+                    chunk_budgets,
+                )),
+                4 => out.extend(super::lowered::run_lanes::<4>(
+                    chunk,
+                    &lp,
+                    chunk_budgets,
+                )),
+                2 => out.extend(super::lowered::run_lanes::<2>(
+                    chunk,
+                    &lp,
+                    chunk_budgets,
+                )),
+                _ => out.push(super::lowered::run_lowered(
+                    &mut chunk[0],
+                    &lp,
+                    program.instrs(),
+                    chunk_budgets[0],
+                    &mut super::NopHook,
+                )),
+            }
+            i += k;
+        }
+        Some(out)
+    }
+
     /// The original decode-enum interpreter — the reference oracle the
     /// lowered loop is differentially tested against, and the fallback for
     /// states/models the lowering cannot bake.
@@ -409,7 +513,9 @@ impl Machine {
                     cost = cm.alu;
                 }
                 Instr::Ecall => {
-                    hook.retire(pc, &instr, cm.alu);
+                    if H::OBSERVES {
+                        hook.retire(pc, &instr, cm.alu);
+                    }
                     return Ok(RunStats { instrs: instrs + 1, cycles: cycles + cm.alu });
                 }
                 Instr::Ebreak => {
@@ -493,7 +599,12 @@ impl Machine {
                 }
             }
 
-            hook.retire(pc, &instr, cost);
+            // `OBSERVES` is an associated const, so for `NopHook`-class
+            // hooks this branch (and the retire call behind it) folds away
+            // at monomorphization time instead of being tested per retire.
+            if H::OBSERVES {
+                hook.retire(pc, &instr, cost);
+            }
             self.pc = next_pc;
             instrs += 1;
             cycles += cost;

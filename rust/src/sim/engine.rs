@@ -85,15 +85,22 @@ pub fn run_job(job: &Job<'_>) -> Result<JobOutput, SimError> {
 /// to [`run_job`]: the machine is rebound and its memory fully
 /// re-initialized, so no state leaks between jobs.
 pub fn run_job_on(m: &mut Machine, job: &Job<'_>) -> Result<JobOutput, SimError> {
-    match job.base_image {
-        Some(image) => {
-            m.rebind(Arc::clone(&job.program));
-            m.mem
-                .reset_from(image, job.dm_size)
-                .map_err(|fault| SimError::Mem { pc: 0, fault })?;
-        }
-        None => m.recycle(Arc::clone(&job.program), job.dm_size),
-    }
+    setup_job(m, job)?;
+    let stats = m.run_fast(job.max_instrs);
+    finish_job(m, job, stats)
+}
+
+/// Everything of a job that happens *before* the run: rebind the machine
+/// to the job's program, re-init its DM (base image or zero-fill, reusing
+/// the allocation), write preload blocks and the per-run input.  Shared by
+/// the scalar pooled path ([`run_job_on`]) and the lane pack
+/// ([`run_lane_pack`]), which sets up each lane with this and then steps
+/// all of them together.
+fn setup_job(m: &mut Machine, job: &Job<'_>) -> Result<(), SimError> {
+    m.rebind(Arc::clone(&job.program));
+    m.mem
+        .reinit(job.base_image, job.dm_size)
+        .map_err(|fault| SimError::Mem { pc: 0, fault })?;
     for &(addr, block) in &job.preload {
         m.mem
             .write_block(addr, block)
@@ -102,12 +109,103 @@ pub fn run_job_on(m: &mut Machine, job: &Job<'_>) -> Result<JobOutput, SimError>
     m.mem
         .write_block(job.input.0, job.input.1)
         .map_err(|fault| SimError::Mem { pc: 0, fault })?;
-    let stats = m.run_fast(job.max_instrs)?;
+    Ok(())
+}
+
+/// Everything *after* the run: propagate the run result and read the
+/// output block back.
+fn finish_job(
+    m: &Machine,
+    job: &Job<'_>,
+    run: Result<RunStats, SimError>,
+) -> Result<JobOutput, SimError> {
+    let stats = run?;
     let output = m
         .mem
         .read_i8s(job.output.0, job.output.1)
         .map_err(|fault| SimError::Mem { pc: m.pc, fault })?;
     Ok(JobOutput { output, stats })
+}
+
+/// Widest lane group the lowered interpreter monomorphizes
+/// (`run_lanes::<8>`); lane packs larger than this are chunked by
+/// [`Machine::run_lane_group`].
+pub const MAX_LANES: usize = 8;
+
+/// Lane-pack width for callers that take the default: the `MARVEL_LANES`
+/// environment override when set to a positive integer (clamped to
+/// [`MAX_LANES`]), else [`MAX_LANES`].  `MARVEL_LANES=1` disables lane
+/// packing — every job runs scalar.
+pub fn default_lanes() -> usize {
+    lanes_override(std::env::var("MARVEL_LANES").ok().as_deref())
+        .unwrap_or(MAX_LANES)
+}
+
+/// Parse a `MARVEL_LANES` value: positive integers (surrounding whitespace
+/// tolerated) override, clamped to [`MAX_LANES`]; anything else — unset,
+/// empty, `0`, garbage — falls back to the default.
+pub fn lanes_override(v: Option<&str>) -> Option<usize> {
+    v.and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .map(|n| n.min(MAX_LANES))
+}
+
+/// Execute a pack of jobs as one lane group on a pool of recycled
+/// machines.  `results[i]` corresponds to `jobs[i]` and is byte-identical
+/// to `run_job_on` run per job — lane packing is an execution-shape
+/// choice, never a semantics choice (DESIGN.md §15).
+///
+/// The pack is set up lane by lane (a job whose DM setup faults completes
+/// immediately with that error and consumes no lane), then every
+/// successfully-set-up lane is stepped through
+/// [`Machine::run_lane_group`].  When the group cannot take the lane path
+/// (mixed programs, unlowerable program), the already-set-up lanes run
+/// scalar instead — callers don't need to pre-validate pack homogeneity.
+///
+/// `pool` grows to the pack's lane count on first use and is reused (DM
+/// allocations and all) across packs, like the scalar pooled path.
+pub fn run_lane_pack(
+    pool: &mut Vec<Machine>,
+    jobs: &[Job<'_>],
+) -> Vec<Result<JobOutput, SimError>> {
+    let n = jobs.len();
+    let mut results: Vec<Option<Result<JobOutput, SimError>>> =
+        (0..n).map(|_| None).collect();
+    // lane -> job index, for jobs whose setup succeeded.
+    let mut lane_jobs: Vec<usize> = Vec::with_capacity(n);
+    for (i, job) in jobs.iter().enumerate() {
+        let l = lane_jobs.len();
+        if pool.len() <= l {
+            pool.push(Machine::new(Arc::clone(&job.program), 0));
+        }
+        match setup_job(&mut pool[l], job) {
+            Ok(()) => lane_jobs.push(i),
+            Err(e) => results[i] = Some(Err(e)),
+        }
+    }
+    let k = lane_jobs.len();
+    let budgets: Vec<u64> =
+        lane_jobs.iter().map(|&i| jobs[i].max_instrs).collect();
+    match Machine::run_lane_group(&mut pool[..k], &budgets) {
+        Some(rs) => {
+            for (l, r) in rs.into_iter().enumerate() {
+                let i = lane_jobs[l];
+                results[i] = Some(finish_job(&pool[l], &jobs[i], r));
+            }
+        }
+        None => {
+            // Scalar fallback: the lanes are fully set up already, so just
+            // run each in place.
+            for (l, &i) in lane_jobs.iter().enumerate() {
+                let r = pool[l].run_fast(jobs[i].max_instrs);
+                results[i] = Some(finish_job(&pool[l], &jobs[i], r));
+            }
+        }
+    }
+    results
+        .into_iter()
+        .map(|r| r.expect("every job completed"))
+        .collect()
 }
 
 /// [`run_job_on`] against a lazily-created pool slot: the first call
@@ -506,6 +604,84 @@ mod tests {
         assert!(default_threads() >= 1);
         std::env::remove_var("MARVEL_THREADS");
         assert!(default_threads() >= 1);
+    }
+
+    #[test]
+    fn lanes_override_parses_and_clamps() {
+        assert_eq!(lanes_override(Some("4")), Some(4));
+        assert_eq!(lanes_override(Some(" 2 ")), Some(2));
+        assert_eq!(lanes_override(Some("1")), Some(1));
+        // clamped to the widest monomorphized group
+        assert_eq!(lanes_override(Some("64")), Some(MAX_LANES));
+        for bad in [None, Some(""), Some("0"), Some("-1"), Some("four")] {
+            assert_eq!(lanes_override(bad), None, "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn lane_pack_matches_scalar_per_job() {
+        // Same program, per-job inputs — the shape the engine packs.  Every
+        // pack size from below one group to above the widest one, plus a
+        // mid-pack setup error, must reproduce the scalar path exactly.
+        let p = add_k_program(10);
+        let inputs: Vec<[u8; 1]> = (0..13u8).map(|x| [x]).collect();
+        for pack in [1usize, 2, 5, 8, 13] {
+            let mut jobs = jobs_for(&p, &inputs[..pack]);
+            if pack >= 5 {
+                jobs[3].input.0 = 1 << 20; // setup fault mid-pack
+            }
+            let mut pool: Vec<Machine> = Vec::new();
+            let packed = run_lane_pack(&mut pool, &jobs);
+            assert_eq!(packed.len(), jobs.len());
+            for (i, (job, got)) in jobs.iter().zip(&packed).enumerate() {
+                let want = run_job(job);
+                assert_eq!(
+                    format!("{got:?}"),
+                    format!("{want:?}"),
+                    "pack={pack} job={i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lane_pack_falls_back_on_mixed_programs() {
+        // A heterogeneous pack can't take the lane path; the scalar
+        // fallback inside run_lane_pack must still produce per-job-correct
+        // results in submission order.
+        let p1 = add_k_program(3);
+        let p2 = add_k_program(9);
+        let inputs: Vec<[u8; 1]> = (0..6u8).map(|x| [x]).collect();
+        let jobs: Vec<Job<'_>> = inputs
+            .iter()
+            .enumerate()
+            .map(|(i, x)| Job {
+                program: Arc::clone(if i % 2 == 0 { &p1 } else { &p2 }),
+                dm_size: 64,
+                base_image: None,
+                preload: Vec::new(),
+                input: (0, &x[..]),
+                output: (4, 1),
+                max_instrs: 100,
+            })
+            .collect();
+        let mut pool: Vec<Machine> = Vec::new();
+        for (i, r) in run_lane_pack(&mut pool, &jobs).into_iter().enumerate() {
+            let k = if i % 2 == 0 { 3 } else { 9 };
+            assert_eq!(r.unwrap().output, vec![i as i32 + k]);
+        }
+    }
+
+    #[test]
+    fn lane_pack_reuses_its_pool() {
+        let p = add_k_program(1);
+        let inputs: Vec<[u8; 1]> = (0..4u8).map(|x| [x]).collect();
+        let jobs = jobs_for(&p, &inputs);
+        let mut pool: Vec<Machine> = Vec::new();
+        run_lane_pack(&mut pool, &jobs);
+        assert_eq!(pool.len(), 4);
+        run_lane_pack(&mut pool, &jobs);
+        assert_eq!(pool.len(), 4, "second pack reuses the pooled machines");
     }
 
     #[test]

@@ -41,6 +41,7 @@
 //! place ([`BackendSpec::parse`]): `local[:T]` or `shard:N`.
 
 use std::any::Any;
+use std::collections::HashMap;
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -48,7 +49,8 @@ use std::sync::{mpsc, Arc, Mutex};
 use anyhow::{bail, ensure, Context, Result};
 
 use super::cpu::{Machine, SimError};
-use super::engine::{default_threads, run_job_pooled, Job, JobOutput, Slots};
+use super::engine::{default_lanes, default_threads, run_lane_pack, Job,
+                    JobOutput, Slots};
 use super::program::Program;
 use super::shard::{self, Hydrator, JobDesc, ShardPool, WorkerCmd};
 use crate::compiler::Compiled;
@@ -165,6 +167,11 @@ pub struct Caps {
     /// to (DESIGN.md §14).  Worker threads for [`LocalExec`]; worker
     /// processes × pipeline depth for [`ShardExec`].  Always ≥ 1.
     pub parallelism: usize,
+    /// Width of the same-program lane packs the backend forms inside a
+    /// batch (multi-lane lowered execution, DESIGN.md §15).  `1` means
+    /// every job runs scalar — packing never changes results, only
+    /// wall-clock, so this is purely observability.  Always ≥ 1.
+    pub lanes: usize,
 }
 
 /// A batch execution backend with the engine's determinism contract (see
@@ -303,45 +310,94 @@ impl ReadyJob {
 }
 
 /// One in-flight batch, shared with every pool worker.  Hydration
-/// failures occupy their slot as `Err` and are skipped by the cursor
-/// claimants, mirroring `run_descs_local`.
+/// failures occupy their slot as `Err` and never enter a pack, mirroring
+/// `run_descs_local`.
 struct Batch {
     jobs: Vec<Result<ReadyJob, String>>,
-    /// Work-stealing cursor (same discipline as `run_batch`).
+    /// Same-program lane packs over `jobs` (job indices, submission order
+    /// inside each pack); the unit of work a worker claims.  Every
+    /// hydrated job appears in exactly one pack.
+    packs: Vec<Vec<usize>>,
+    /// Work-stealing cursor over `packs` (same discipline as `run_batch`).
     next: AtomicUsize,
-    /// Raised on a worker panic so siblings quit claiming jobs.
+    /// Raised on a worker panic so siblings quit claiming packs.
     stop: AtomicBool,
     slots: Slots<Result<JobOutput, SimError>>,
     /// First worker-panic payload, re-raised on the caller.
     panic: Mutex<Option<Box<dyn Any + Send>>>,
 }
 
-/// The body of one persistent pool worker: drain each batch's cursor,
-/// recycling one [`Machine`] across every job of every batch.  A panicking
-/// job is *captured* (not re-thrown): the payload parks in the batch for
-/// the caller to re-raise, and the worker survives for the next batch —
-/// only its possibly-corrupt pooled machine is discarded.
+/// Group a batch's hydrated jobs into same-program lane packs of at most
+/// `width` jobs, preserving submission order *inside* each pack and
+/// first-seen order across packs.  Jobs are keyed by program identity —
+/// the `Arc<Compiled>` for named jobs (every job of one compilation shares
+/// one program `Arc` through `shard::job_of`), the program `Arc` itself
+/// for raw jobs — so a mixed sweep whose submission order interleaves
+/// models round-robin still packs each model's jobs together instead of
+/// degenerating to scalar.  Result slots are written per job index, so
+/// packing never reorders results.
+fn make_packs(jobs: &[Result<ReadyJob, String>], width: usize) -> Vec<Vec<usize>> {
+    let width = width.max(1);
+    let mut packs: Vec<Vec<usize>> = Vec::new();
+    // program-identity key -> the index in `packs` of its open pack
+    let mut open: HashMap<usize, usize> = HashMap::new();
+    for (i, job) in jobs.iter().enumerate() {
+        let Ok(ready) = job else { continue };
+        let key = match ready {
+            ReadyJob::Unit { compiled, .. } => Arc::as_ptr(compiled) as usize,
+            ReadyJob::Raw(r) => Arc::as_ptr(&r.program) as usize,
+        };
+        match open.get(&key) {
+            Some(&p) if packs[p].len() < width => packs[p].push(i),
+            _ => {
+                packs.push(vec![i]);
+                open.insert(key, packs.len() - 1);
+            }
+        }
+    }
+    packs
+}
+
+/// The body of one persistent pool worker: drain each batch's pack
+/// cursor, recycling a pool of [`Machine`]s (one per lane) across every
+/// pack of every batch.  A panicking pack is *captured* (not re-thrown):
+/// the payload parks in the batch for the caller to re-raise, and the
+/// worker survives for the next batch — only its possibly-corrupt pooled
+/// machines are discarded.
 fn pool_worker(rx: mpsc::Receiver<Arc<Batch>>, done: mpsc::Sender<()>) {
-    let mut pool: Option<Machine> = None;
+    let mut pool: Vec<Machine> = Vec::new();
     for batch in rx {
         loop {
             if batch.stop.load(Ordering::Relaxed) {
                 break;
             }
-            let i = batch.next.fetch_add(1, Ordering::Relaxed);
-            if i >= batch.jobs.len() {
+            let pi = batch.next.fetch_add(1, Ordering::Relaxed);
+            if pi >= batch.packs.len() {
                 break;
             }
-            let Ok(ready) = &batch.jobs[i] else { continue };
+            let pack = &batch.packs[pi];
             let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
                 || {
-                    let job = ready.as_job();
-                    run_job_pooled(&mut pool, &job)
+                    let jobs: Vec<Job<'_>> = pack
+                        .iter()
+                        .map(|&i| match &batch.jobs[i] {
+                            Ok(ready) => ready.as_job(),
+                            Err(_) => unreachable!(
+                                "packs hold only hydrated jobs"
+                            ),
+                        })
+                        .collect();
+                    run_lane_pack(&mut pool, &jobs)
                 },
             ));
             match r {
-                // SAFETY: the cursor handed index i to this worker alone.
-                Ok(res) => unsafe { batch.slots.write(i, res) },
+                Ok(results) => {
+                    for (&i, res) in pack.iter().zip(results) {
+                        // SAFETY: the cursor handed pack `pi` — and with it
+                        // every job index it holds — to this worker alone.
+                        unsafe { batch.slots.write(i, res) }
+                    }
+                }
                 Err(p) => {
                     batch.stop.store(true, Ordering::Relaxed);
                     let mut first = batch.panic.lock().unwrap();
@@ -349,9 +405,9 @@ fn pool_worker(rx: mpsc::Receiver<Arc<Batch>>, done: mpsc::Sender<()>) {
                         *first = Some(p);
                     }
                     drop(first);
-                    // The machine may hold arbitrary mid-panic state;
-                    // rebuild instead of recycling it.
-                    pool = None;
+                    // The machines may hold arbitrary mid-panic state;
+                    // rebuild instead of recycling them.
+                    pool = Vec::new();
                 }
             }
         }
@@ -373,6 +429,9 @@ fn pool_worker(rx: mpsc::Receiver<Arc<Batch>>, done: mpsc::Sender<()>) {
 /// [`SimError::Remote`].
 pub struct LocalExec {
     threads: usize,
+    /// Same-program lane-pack width ([`super::engine::MAX_LANES`] by
+    /// default, `MARVEL_LANES` override honored; `1` = scalar).
+    lanes: usize,
     hyd: Hydrator,
     queue: Vec<JobSpec>,
     /// One channel per worker; dropping them shuts the pool down.
@@ -400,11 +459,20 @@ impl LocalExec {
             .collect();
         LocalExec {
             threads,
+            lanes: default_lanes(),
             hyd: Hydrator::new(artifacts),
             queue: Vec::new(),
             txs,
             done_rx,
         }
+    }
+
+    /// Override the lane-pack width (tests / benches; normal callers take
+    /// the `MARVEL_LANES`-aware default).  `1` disables packing.  Values
+    /// above [`super::engine::MAX_LANES`] are fine — `run_lane_group`
+    /// chunks a wide pack into its monomorphized widths.
+    pub fn set_lanes(&mut self, lanes: usize) {
+        self.lanes = lanes.max(1);
     }
 
     /// Resolve one spec to an executable job (or its per-job error).
@@ -441,6 +509,7 @@ impl Executor for LocalExec {
             persistent_pool: true,
             cross_process: false,
             parallelism: self.threads.max(1),
+            lanes: self.lanes.max(1),
         }
     }
 
@@ -461,8 +530,10 @@ impl Executor for LocalExec {
         let jobs: Vec<Result<ReadyJob, String>> =
             specs.into_iter().map(|s| self.ready(s)).collect();
         let n = jobs.len();
+        let packs = make_packs(&jobs, self.lanes);
         let batch = Arc::new(Batch {
             jobs,
+            packs,
             next: AtomicUsize::new(0),
             stop: AtomicBool::new(false),
             slots: Slots::new(n),
@@ -536,6 +607,8 @@ impl Executor for ShardExec {
             cross_process: true,
             // Each worker process keeps PIPELINE jobs in flight.
             parallelism: (self.workers * shard::PIPELINE).max(1),
+            // Shard workers run jobs scalar as they stream off the wire.
+            lanes: 1,
         }
     }
 
@@ -646,9 +719,11 @@ mod tests {
             Caps {
                 persistent_pool: true,
                 cross_process: false,
-                parallelism: 3
+                parallelism: 3,
+                lanes: exec.caps().lanes, // MARVEL_LANES-dependent, ≥ 1
             }
         );
+        assert!(exec.caps().lanes >= 1);
         assert_eq!(exec.describe(), "local:3");
         for x in 0..20u8 {
             assert_eq!(exec.submit(JobSpec::raw(raw_job(&p, x, 64))), x as usize);
@@ -713,6 +788,59 @@ mod tests {
         exec.submit(JobSpec::raw(raw_job(&p, 7, 64)));
         let rs = exec.run();
         assert_eq!(rs[0].as_ref().unwrap().output, vec![8]);
+    }
+
+    #[test]
+    fn packs_group_interleaved_programs_without_reordering_results() {
+        // A mixed sweep submits models round-robin: A B A B A B A B.
+        // Grouping must pull each program's jobs into shared packs (not
+        // degenerate to scalar on every program switch) while results stay
+        // at their submission indices.
+        let pa = add_k_program(10);
+        let pb = add_k_program(20);
+        let jobs: Vec<Result<ReadyJob, String>> = (0..8u8)
+            .map(|i| {
+                let p = if i % 2 == 0 { &pa } else { &pb };
+                Ok(ReadyJob::Raw(raw_job(p, i, 64)))
+            })
+            .collect();
+        let packs = make_packs(&jobs, 4);
+        assert_eq!(packs, vec![vec![0, 2, 4, 6], vec![1, 3, 5, 7]]);
+        // width 1 = scalar: one pack per job, submission order
+        let scalar = make_packs(&jobs, 1);
+        assert_eq!(scalar.len(), 8);
+        assert!(scalar.iter().enumerate().all(|(i, p)| *p == vec![i]));
+        // a full pack closes and a fresh one opens for the same program
+        let packs2 = make_packs(&jobs, 3);
+        assert_eq!(
+            packs2,
+            vec![vec![0, 2, 4], vec![1, 3, 5], vec![6], vec![7]]
+        );
+        // hydration failures never enter a pack
+        let mut with_err = jobs;
+        with_err[2] = Err("boom".into());
+        let packs3 = make_packs(&with_err, 4);
+        assert_eq!(packs3, vec![vec![0, 4, 6], vec![1, 3, 5, 7]]);
+
+        // End to end: the interleaved batch through LocalExec at pack
+        // widths 1/4/8 returns identical, submission-ordered results.
+        let run_with = |lanes: usize| -> Vec<JobOutput> {
+            let mut exec = LocalExec::new(Path::new("artifacts"), 2);
+            exec.set_lanes(lanes);
+            for i in 0..8u8 {
+                let p = if i % 2 == 0 { &pa } else { &pb };
+                exec.submit(JobSpec::raw(raw_job(p, i, 64)));
+            }
+            exec.run().into_iter().map(|r| r.unwrap()).collect()
+        };
+        let baseline = run_with(1);
+        for (i, out) in baseline.iter().enumerate() {
+            let k = if i % 2 == 0 { 10 } else { 20 };
+            assert_eq!(out.output, vec![i as i32 + k], "job {i}");
+        }
+        for lanes in [4, 8] {
+            assert_eq!(run_with(lanes), baseline, "lanes={lanes}");
+        }
     }
 
     #[test]

@@ -10,8 +10,17 @@ use crate::isa::Instr;
 /// Observer invoked once per retired instruction.
 pub trait RetireHook {
     /// Statically `false` only for hooks that ignore every retirement
-    /// ([`NopHook`]); the lowered interpreter then skips materializing the
-    /// retire arguments (pc, `&Instr` lookup) entirely.
+    /// ([`NopHook`]); every interpreter loop (reference, lowered match,
+    /// lowered threaded) gates its retire call on this associated const, so
+    /// the call — and materializing its arguments (pc, `&Instr` lookup) —
+    /// folds away at monomorphization time instead of costing a per-retire
+    /// branch.
+    ///
+    /// `OBSERVES` also gates *lane-group* eligibility (DESIGN.md §15):
+    /// multi-lane execution interleaves the retire streams of K machines,
+    /// so the engine only packs jobs into lanes for `OBSERVES == false`
+    /// hooks; trace/profile runs take the scalar path where the stream
+    /// stays per-machine and in order.
     const OBSERVES: bool = true;
 
     /// `pc` is the address of the retiring instruction; `cycles` the cycles

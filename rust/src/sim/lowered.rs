@@ -24,7 +24,16 @@
 //!   skip the loop-back compare entirely.  A program containing `set.ze`
 //!   (arbitrary runtime `ZE`) conservatively marks every op.
 //!
-//! The lowered loop is behaviourally **bit-identical** to the reference
+//! Execution of the lowered form comes in three shapes (DESIGN.md §15):
+//! the **direct-threaded** scalar loop ([`run_lowered`], a per-`Kind`
+//! handler-function table dispatched by discriminant), the original
+//! central-`match` loop kept as [`run_lowered_match`] (bench baseline +
+//! second differential oracle), and **multi-lane** execution
+//! ([`run_lanes`]) stepping `K` independent machines of the same program
+//! through one fetch/decode stream — software SIMT for the engine's
+//! same-program lane packs.
+//!
+//! Every lowered path is behaviourally **bit-identical** to the reference
 //! interpreter ([`super::cpu::Machine::run_reference`]): same
 //! [`super::cpu::RunStats`], same outputs, same architectural state after
 //! the run, same faults, same retire-hook stream.  The reference path
@@ -36,7 +45,8 @@
 use std::collections::{HashMap, HashSet};
 
 use super::cpu::{Machine, RunStats, SimError};
-use super::hooks::RetireHook;
+use super::hooks::{NopHook, RetireHook};
+use super::memory::MemFault;
 use super::program::Program;
 use super::CycleModel;
 use crate::isa::{AluImmOp, AluOp, BranchOp, Instr, LoadOp, StoreOp, MAC_RD,
@@ -44,7 +54,13 @@ use crate::isa::{AluImmOp, AluOp, BranchOp, Instr, LoadOp, StoreOp, MAC_RD,
 
 /// Flat micro-op opcode: one variant per executable form, plus the two
 /// trap kinds that materialize statically-known-invalid pc targets.
+///
+/// `repr(u8)` with default (sequential from 0) discriminants: the
+/// discriminant doubles as the index into the direct-threaded handler
+/// table ([`HANDLERS`]), and the `lowered::tests::kinds_cover_every_discriminant`
+/// test pins the `KINDS` order to the declaration order here.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
 #[rustfmt::skip]
 pub(crate) enum Kind {
     Lui, Auipc, Jal, Jalr,
@@ -464,13 +480,627 @@ fn byte_of(ops: &[MicroOp], idx: usize, dyn_pc: u32) -> u32 {
     }
 }
 
-/// Execute `machine` over the lowered form — same observable behaviour as
-/// [`Machine::run_reference`], instruction for instruction (module docs).
+// ---------------------------------------------------------------------------
+// Direct-threaded dispatch (DESIGN.md §15)
+// ---------------------------------------------------------------------------
+//
+// The central `match op.kind` of the original lowered loop (kept below as
+// [`run_lowered_match`], the bench baseline and second differential
+// oracle) funnels every retirement through one giant multiway branch.
+// The threaded form replaces it with a per-kind handler-function table:
+// each step loads the op, loads its handler pointer by discriminant and
+// makes one indirect call — the classic direct-threaded interpreter
+// shape, which gives the host branch predictor one predictable indirect
+// site per handler instead of a single mega-branch carrying every op's
+// history.  Handlers receive the machine, the op by value (16 bytes, two
+// registers) and a [`StepCtx`] with the per-step redirections; control
+// returns to the shared driver ([`step`]) via [`Flow`].
+
+/// What a handler tells the dispatch driver.
+enum Flow {
+    /// Fall through to the ZOL loop-back check + retire accounting.
+    Next,
+    /// `ecall` retired — the run completes successfully.
+    Ecall,
+    /// `ebreak` — `SimError::Break` at this pc.
+    Break,
+    /// A static trap slot — `PcOutOfRange { pc: op.imm }`.
+    Trap,
+    /// The dynamic trap slot — `PcOutOfRange` at the recorded dynamic pc.
+    TrapDyn,
+    /// Data-memory fault at this pc.
+    Mem(MemFault),
+}
+
+/// Per-step state a handler may read or redirect.
+struct StepCtx {
+    /// Byte pc of the executing slot (correct for every real slot; trap
+    /// slots never read it).
+    pc: u32,
+    /// Successor slot; branch/jump/zlp handlers overwrite it.
+    next: usize,
+    /// Retire cost; branch handlers swap in the taken cost.
+    cost: u32,
+    /// The pc recorded for the dynamic trap slot.
+    dyn_pc: u32,
+    /// Program length in bytes (dynamic-target validation).
+    plen: u32,
+    /// Index of the [`Kind::TrapDyn`] slot.
+    dyn_trap: usize,
+}
+
+type Handler = fn(&mut Machine, MicroOp, &mut StepCtx) -> Flow;
+
+macro_rules! h_alu_imm {
+    ($name:ident, |$a:ident, $imm:ident| $v:expr) => {
+        fn $name(m: &mut Machine, op: MicroOp, _cx: &mut StepCtx) -> Flow {
+            let $a = m.regs[op.b as usize];
+            let $imm = op.imm;
+            Machine::write_reg(&mut m.regs, op.a, $v);
+            Flow::Next
+        }
+    };
+}
+
+h_alu_imm!(h_addi, |a, imm| a.wrapping_add(imm));
+h_alu_imm!(h_slti, |a, imm| (a < imm) as i32);
+h_alu_imm!(h_sltiu, |a, imm| ((a as u32) < (imm as u32)) as i32);
+h_alu_imm!(h_xori, |a, imm| a ^ imm);
+h_alu_imm!(h_ori, |a, imm| a | imm);
+h_alu_imm!(h_andi, |a, imm| a & imm);
+h_alu_imm!(h_slli, |a, imm| ((a as u32) << (imm & 31)) as i32);
+h_alu_imm!(h_srli, |a, imm| ((a as u32) >> (imm & 31)) as i32);
+h_alu_imm!(h_srai, |a, imm| a >> (imm & 31));
+
+macro_rules! h_alu_reg {
+    ($name:ident, |$a:ident, $b:ident| $v:expr) => {
+        fn $name(m: &mut Machine, op: MicroOp, _cx: &mut StepCtx) -> Flow {
+            let $a = m.regs[op.b as usize];
+            let $b = m.regs[op.aux as usize];
+            Machine::write_reg(&mut m.regs, op.a, $v);
+            Flow::Next
+        }
+    };
+}
+
+h_alu_reg!(h_add, |a, b| a.wrapping_add(b));
+h_alu_reg!(h_sub, |a, b| a.wrapping_sub(b));
+h_alu_reg!(h_sll, |a, b| ((a as u32) << (b & 31)) as i32);
+h_alu_reg!(h_slt, |a, b| (a < b) as i32);
+h_alu_reg!(h_sltu, |a, b| ((a as u32) < (b as u32)) as i32);
+h_alu_reg!(h_xor, |a, b| a ^ b);
+h_alu_reg!(h_srl, |a, b| ((a as u32) >> (b & 31)) as i32);
+h_alu_reg!(h_sra, |a, b| a >> (b & 31));
+h_alu_reg!(h_or, |a, b| a | b);
+h_alu_reg!(h_and, |a, b| a & b);
+h_alu_reg!(h_mul, |a, b| a.wrapping_mul(b));
+h_alu_reg!(h_mulh, |a, b| (((a as i64) * (b as i64)) >> 32) as i32);
+h_alu_reg!(h_mulhsu, |a, b| (((a as i64) * (b as u32 as i64)) >> 32) as i32);
+h_alu_reg!(h_mulhu, |a, b| {
+    (((a as u32 as u64) * (b as u32 as u64)) >> 32) as i32
+});
+h_alu_reg!(h_div, |a, b| if b == 0 {
+    -1
+} else if a == i32::MIN && b == -1 {
+    i32::MIN
+} else {
+    a.wrapping_div(b)
+});
+h_alu_reg!(h_divu, |a, b| if b == 0 {
+    -1
+} else {
+    ((a as u32) / (b as u32)) as i32
+});
+h_alu_reg!(h_rem, |a, b| if b == 0 {
+    a
+} else if a == i32::MIN && b == -1 {
+    0
+} else {
+    a.wrapping_rem(b)
+});
+h_alu_reg!(h_remu, |a, b| if b == 0 {
+    a
+} else {
+    ((a as u32) % (b as u32)) as i32
+});
+
+macro_rules! h_load {
+    ($name:ident, $load:ident, |$raw:ident| $v:expr) => {
+        fn $name(m: &mut Machine, op: MicroOp, _cx: &mut StepCtx) -> Flow {
+            let addr =
+                (m.regs[op.b as usize] as u32).wrapping_add(op.imm as u32);
+            match m.mem.$load(addr) {
+                Ok($raw) => {
+                    Machine::write_reg(&mut m.regs, op.a, $v);
+                    Flow::Next
+                }
+                Err(fault) => Flow::Mem(fault),
+            }
+        }
+    };
+}
+
+h_load!(h_lb, load_u8, |raw| raw as i8 as i32);
+h_load!(h_lbu, load_u8, |raw| i32::from(raw));
+h_load!(h_lh, load_u16, |raw| raw as i16 as i32);
+h_load!(h_lhu, load_u16, |raw| i32::from(raw));
+h_load!(h_lw, load_u32, |raw| raw as i32);
+
+macro_rules! h_store {
+    ($name:ident, $store:ident, $t:ty) => {
+        fn $name(m: &mut Machine, op: MicroOp, _cx: &mut StepCtx) -> Flow {
+            let addr =
+                (m.regs[op.b as usize] as u32).wrapping_add(op.imm as u32);
+            let v = m.regs[op.a as usize];
+            match m.mem.$store(addr, v as $t) {
+                Ok(()) => Flow::Next,
+                Err(fault) => Flow::Mem(fault),
+            }
+        }
+    };
+}
+
+h_store!(h_sb, store_u8, u8);
+h_store!(h_sh, store_u16, u16);
+h_store!(h_sw, store_u32, u32);
+
+macro_rules! h_branch {
+    ($name:ident, |$a:ident, $b:ident| $taken:expr) => {
+        fn $name(m: &mut Machine, op: MicroOp, cx: &mut StepCtx) -> Flow {
+            let $a = m.regs[op.a as usize];
+            let $b = m.regs[op.b as usize];
+            if $taken {
+                cx.next = op.aux as usize;
+                cx.cost = op.imm as u32;
+            }
+            Flow::Next
+        }
+    };
+}
+
+h_branch!(h_beq, |a, b| a == b);
+h_branch!(h_bne, |a, b| a != b);
+h_branch!(h_blt, |a, b| a < b);
+h_branch!(h_bge, |a, b| a >= b);
+h_branch!(h_bltu, |a, b| (a as u32) < (b as u32));
+h_branch!(h_bgeu, |a, b| (a as u32) >= (b as u32));
+
+fn h_lui(m: &mut Machine, op: MicroOp, _cx: &mut StepCtx) -> Flow {
+    Machine::write_reg(&mut m.regs, op.a, op.imm);
+    Flow::Next
+}
+
+fn h_auipc(m: &mut Machine, op: MicroOp, cx: &mut StepCtx) -> Flow {
+    Machine::write_reg(&mut m.regs, op.a, (cx.pc as i32).wrapping_add(op.imm));
+    Flow::Next
+}
+
+fn h_jal(m: &mut Machine, op: MicroOp, cx: &mut StepCtx) -> Flow {
+    Machine::write_reg(&mut m.regs, op.a, (cx.pc + 4) as i32);
+    cx.next = op.aux as usize;
+    Flow::Next
+}
+
+fn h_jalr(m: &mut Machine, op: MicroOp, cx: &mut StepCtx) -> Flow {
+    // Target from rs1 *before* the link write (rd may alias).
+    let target =
+        ((m.regs[op.b as usize] as u32).wrapping_add(op.imm as u32)) & !1;
+    Machine::write_reg(&mut m.regs, op.a, (cx.pc + 4) as i32);
+    if target % 4 == 0 && target < cx.plen {
+        cx.next = (target / 4) as usize;
+    } else {
+        cx.dyn_pc = target;
+        cx.next = cx.dyn_trap;
+    }
+    Flow::Next
+}
+
+fn h_fence(_m: &mut Machine, _op: MicroOp, _cx: &mut StepCtx) -> Flow {
+    Flow::Next
+}
+
+fn h_ecall(_m: &mut Machine, _op: MicroOp, _cx: &mut StepCtx) -> Flow {
+    Flow::Ecall
+}
+
+fn h_ebreak(_m: &mut Machine, _op: MicroOp, _cx: &mut StepCtx) -> Flow {
+    Flow::Break
+}
+
+fn h_mac(m: &mut Machine, _op: MicroOp, _cx: &mut StepCtx) -> Flow {
+    let v = m.regs[MAC_RD as usize].wrapping_add(
+        m.regs[MAC_RS1 as usize].wrapping_mul(m.regs[MAC_RS2 as usize]),
+    );
+    Machine::write_reg(&mut m.regs, MAC_RD, v);
+    Flow::Next
+}
+
+fn h_add2i(m: &mut Machine, op: MicroOp, _cx: &mut StepCtx) -> Flow {
+    let v1 = m.regs[op.a as usize].wrapping_add(op.imm);
+    let v2 = m.regs[op.b as usize].wrapping_add(op.aux as i32);
+    Machine::write_reg(&mut m.regs, op.a, v1);
+    Machine::write_reg(&mut m.regs, op.b, v2);
+    Flow::Next
+}
+
+fn h_fusedmac(m: &mut Machine, op: MicroOp, cx: &mut StepCtx) -> Flow {
+    // mac part first, then the add2i part — the fused op's architected
+    // order (registers may alias across the halves).
+    let _ = h_mac(m, op, cx);
+    h_add2i(m, op, cx)
+}
+
+fn h_dlp(m: &mut Machine, op: MicroOp, cx: &mut StepCtx) -> Flow {
+    m.zc = m.regs[op.b as usize] as u32;
+    m.zs = cx.pc + 4;
+    m.ze = op.aux;
+    Flow::Next
+}
+
+fn h_dlpi(m: &mut Machine, op: MicroOp, cx: &mut StepCtx) -> Flow {
+    m.zc = op.imm as u32;
+    m.zs = cx.pc + 4;
+    m.ze = op.aux;
+    Flow::Next
+}
+
+fn h_zlp(m: &mut Machine, op: MicroOp, cx: &mut StepCtx) -> Flow {
+    let count = m.regs[op.b as usize] as u32;
+    m.zs = cx.pc + 4;
+    m.ze = op.aux;
+    if count == 0 {
+        // zero-iteration-safe: skip the body entirely
+        let ze = op.aux;
+        m.zc = 0;
+        m.ze = 0;
+        if ze % 4 == 0 && ze < cx.plen {
+            cx.next = (ze / 4) as usize;
+        } else {
+            cx.dyn_pc = ze;
+            cx.next = cx.dyn_trap;
+        }
+    } else {
+        m.zc = count;
+    }
+    Flow::Next
+}
+
+fn h_setzc(m: &mut Machine, op: MicroOp, _cx: &mut StepCtx) -> Flow {
+    m.zc = m.regs[op.b as usize] as u32;
+    Flow::Next
+}
+
+fn h_setzs(m: &mut Machine, op: MicroOp, _cx: &mut StepCtx) -> Flow {
+    m.zs = m.regs[op.b as usize] as u32;
+    Flow::Next
+}
+
+fn h_setze(m: &mut Machine, op: MicroOp, _cx: &mut StepCtx) -> Flow {
+    m.ze = m.regs[op.b as usize] as u32;
+    Flow::Next
+}
+
+fn h_trap(_m: &mut Machine, _op: MicroOp, _cx: &mut StepCtx) -> Flow {
+    Flow::Trap
+}
+
+fn h_trapdyn(_m: &mut Machine, _op: MicroOp, _cx: &mut StepCtx) -> Flow {
+    Flow::TrapDyn
+}
+
+/// One entry per [`Kind`] discriminant.
+const N_KINDS: usize = Kind::TrapDyn as usize + 1;
+
+/// Every `Kind` in discriminant order — pinned by the
+/// `kinds_cover_every_discriminant` test, so `HANDLERS[k as usize]` is
+/// provably the handler [`handler_for`] names for `k`.
+#[rustfmt::skip]
+const KINDS: [Kind; N_KINDS] = [
+    Kind::Lui, Kind::Auipc, Kind::Jal, Kind::Jalr,
+    Kind::Beq, Kind::Bne, Kind::Blt, Kind::Bge, Kind::Bltu, Kind::Bgeu,
+    Kind::Lb, Kind::Lh, Kind::Lw, Kind::Lbu, Kind::Lhu,
+    Kind::Sb, Kind::Sh, Kind::Sw,
+    Kind::Addi, Kind::Slti, Kind::Sltiu, Kind::Xori, Kind::Ori, Kind::Andi,
+    Kind::Slli, Kind::Srli, Kind::Srai,
+    Kind::Add, Kind::Sub, Kind::Sll, Kind::Slt, Kind::Sltu, Kind::Xor,
+    Kind::Srl, Kind::Sra, Kind::Or, Kind::And,
+    Kind::Mul, Kind::Mulh, Kind::Mulhsu, Kind::Mulhu,
+    Kind::Div, Kind::Divu, Kind::Rem, Kind::Remu,
+    Kind::Fence, Kind::Ecall, Kind::Ebreak,
+    Kind::Mac, Kind::Add2i, Kind::FusedMac,
+    Kind::Dlp, Kind::Dlpi, Kind::Zlp, Kind::SetZc, Kind::SetZs, Kind::SetZe,
+    Kind::Trap, Kind::TrapDyn,
+];
+
+/// The handler a kind dispatches to — an exhaustive match, so adding a
+/// `Kind` without a handler is a compile error, not a table hole.
+const fn handler_for(k: Kind) -> Handler {
+    match k {
+        Kind::Lui => h_lui,
+        Kind::Auipc => h_auipc,
+        Kind::Jal => h_jal,
+        Kind::Jalr => h_jalr,
+        Kind::Beq => h_beq,
+        Kind::Bne => h_bne,
+        Kind::Blt => h_blt,
+        Kind::Bge => h_bge,
+        Kind::Bltu => h_bltu,
+        Kind::Bgeu => h_bgeu,
+        Kind::Lb => h_lb,
+        Kind::Lh => h_lh,
+        Kind::Lw => h_lw,
+        Kind::Lbu => h_lbu,
+        Kind::Lhu => h_lhu,
+        Kind::Sb => h_sb,
+        Kind::Sh => h_sh,
+        Kind::Sw => h_sw,
+        Kind::Addi => h_addi,
+        Kind::Slti => h_slti,
+        Kind::Sltiu => h_sltiu,
+        Kind::Xori => h_xori,
+        Kind::Ori => h_ori,
+        Kind::Andi => h_andi,
+        Kind::Slli => h_slli,
+        Kind::Srli => h_srli,
+        Kind::Srai => h_srai,
+        Kind::Add => h_add,
+        Kind::Sub => h_sub,
+        Kind::Sll => h_sll,
+        Kind::Slt => h_slt,
+        Kind::Sltu => h_sltu,
+        Kind::Xor => h_xor,
+        Kind::Srl => h_srl,
+        Kind::Sra => h_sra,
+        Kind::Or => h_or,
+        Kind::And => h_and,
+        Kind::Mul => h_mul,
+        Kind::Mulh => h_mulh,
+        Kind::Mulhsu => h_mulhsu,
+        Kind::Mulhu => h_mulhu,
+        Kind::Div => h_div,
+        Kind::Divu => h_divu,
+        Kind::Rem => h_rem,
+        Kind::Remu => h_remu,
+        Kind::Fence => h_fence,
+        Kind::Ecall => h_ecall,
+        Kind::Ebreak => h_ebreak,
+        Kind::Mac => h_mac,
+        Kind::Add2i => h_add2i,
+        Kind::FusedMac => h_fusedmac,
+        Kind::Dlp => h_dlp,
+        Kind::Dlpi => h_dlpi,
+        Kind::Zlp => h_zlp,
+        Kind::SetZc => h_setzc,
+        Kind::SetZs => h_setzs,
+        Kind::SetZe => h_setze,
+        Kind::Trap => h_trap,
+        Kind::TrapDyn => h_trapdyn,
+    }
+}
+
+/// Handler table indexed by `Kind` discriminant, built from
+/// [`handler_for`] over [`KINDS`] so entry order provably follows the
+/// discriminants.
+static HANDLERS: [Handler; N_KINDS] = {
+    let mut t = [h_fence as Handler; N_KINDS];
+    let mut i = 0;
+    while i < N_KINDS {
+        t[i] = handler_for(KINDS[i]);
+        i += 1;
+    }
+    t
+};
+
+/// Per-run (per-lane) cursor of the threaded loop: the current slot
+/// index, the recorded dynamic-trap pc, and the retire/cycle counters.
+struct LaneState {
+    idx: usize,
+    dyn_pc: u32,
+    retired: u64,
+    cycles: u64,
+}
+
+impl LaneState {
+    /// Entry translation of an architectural pc, exactly as the scalar
+    /// loops do it: misaligned or out-of-range entry pcs head straight
+    /// for the dynamic trap slot.
+    fn enter(pc: u32, lp: &LoweredProgram) -> LaneState {
+        let (idx, dyn_pc) = if pc % 4 == 0 && pc < lp.plen_bytes {
+            ((pc / 4) as usize, 0)
+        } else {
+            (lp.dyn_trap, pc)
+        };
+        LaneState { idx, dyn_pc, retired: 0, cycles: 0 }
+    }
+}
+
+/// One retirement of the threaded-dispatch loop; `Some` when the run
+/// finished (successfully or not).  Inlined into the scalar
+/// [`run_lowered`] and into every lane of [`run_lanes`]; per-step
+/// behaviour is bit-identical to [`run_lowered_match`] and the reference
+/// interpreter — watchdog before fetch, same fault pcs, same ZOL
+/// loop-back, same retire/cycle accounting.
+#[inline(always)]
+fn step<H: RetireHook>(
+    machine: &mut Machine,
+    lp: &LoweredProgram,
+    st: &mut LaneState,
+    max_instrs: u64,
+    instrs_for_hook: &[Instr],
+    hook: &mut H,
+) -> Option<Result<RunStats, SimError>> {
+    let ops: &[MicroOp] = &lp.ops;
+    // Watchdog first: the reference loop checks the budget before
+    // validating the pc, and a lowered run must fault identically.
+    if st.retired >= max_instrs {
+        machine.pc = byte_of(ops, st.idx, st.dyn_pc);
+        return Some(Err(SimError::Watchdog { max_instrs }));
+    }
+    // §Perf: this fetch is the hottest load in the ISS; the bounds check
+    // is provably dead, so elide it.  Every value `idx` can hold is
+    // `< ops.len()` by construction at lower time: resolved branch/jump
+    // targets point at real slots or appended traps, `idx + 1 ≤ n + 1`
+    // for the real slot `idx < n` that produced it (trap slots return
+    // before the increment is consumed), `dyn_trap = n + 1`, and every
+    // dynamic target (`jalr`, ZOL start/skip) is range-checked against
+    // `plen` before the `/ 4` conversion (DESIGN.md §15).
+    debug_assert!(st.idx < ops.len(), "lowered slot index out of range");
+    // SAFETY: idx < ops.len() per the invariant above.
+    let op = unsafe { *ops.get_unchecked(st.idx) };
+    // SAFETY: `op.kind as usize` is a valid discriminant (< N_KINDS by
+    // repr(u8) sequential numbering), and HANDLERS holds one entry per
+    // discriminant.
+    let handler = unsafe { *HANDLERS.get_unchecked(op.kind as usize) };
+    let mut cx = StepCtx {
+        pc: (st.idx as u32).wrapping_mul(4),
+        next: st.idx + 1,
+        cost: op.cost,
+        dyn_pc: st.dyn_pc,
+        plen: lp.plen_bytes,
+        dyn_trap: lp.dyn_trap,
+    };
+    match handler(machine, op, &mut cx) {
+        Flow::Next => {}
+        Flow::Ecall => {
+            if H::OBSERVES {
+                hook.retire(cx.pc, &instrs_for_hook[st.idx], u64::from(cx.cost));
+            }
+            machine.pc = cx.pc;
+            return Some(Ok(RunStats {
+                instrs: st.retired + 1,
+                cycles: st.cycles + u64::from(cx.cost),
+            }));
+        }
+        Flow::Break => {
+            machine.pc = cx.pc;
+            return Some(Err(SimError::Break { pc: cx.pc }));
+        }
+        Flow::Trap => {
+            let bad = op.imm as u32;
+            machine.pc = bad;
+            return Some(Err(SimError::PcOutOfRange { pc: bad }));
+        }
+        Flow::TrapDyn => {
+            machine.pc = st.dyn_pc;
+            return Some(Err(SimError::PcOutOfRange { pc: st.dyn_pc }));
+        }
+        Flow::Mem(fault) => {
+            machine.pc = cx.pc;
+            return Some(Err(SimError::Mem { pc: cx.pc, fault }));
+        }
+    }
+    st.dyn_pc = cx.dyn_pc;
+    let mut next = cx.next;
+
+    // Zero-overhead loop-back, only on ops whose successor can be a
+    // loop end: when execution reaches ZE, hardware redirects to ZS
+    // and decrements ZC — no cycles, no retire.
+    if op.zmark != 0 && machine.ze != 0 {
+        let next_byte = byte_of(ops, next, st.dyn_pc);
+        if next_byte == machine.ze {
+            if machine.zc > 1 {
+                machine.zc -= 1;
+                let zs = machine.zs;
+                if zs % 4 == 0 && zs < lp.plen_bytes {
+                    next = (zs / 4) as usize;
+                } else {
+                    st.dyn_pc = zs;
+                    next = lp.dyn_trap;
+                }
+            } else {
+                machine.zc = 0;
+                machine.ze = 0; // disarm
+            }
+        }
+    }
+
+    if H::OBSERVES {
+        hook.retire(cx.pc, &instrs_for_hook[st.idx], u64::from(cx.cost));
+    }
+    st.retired += 1;
+    st.cycles += u64::from(cx.cost);
+    st.idx = next;
+    None
+}
+
+/// Execute `machine` over the lowered form via direct-threaded dispatch —
+/// same observable behaviour as [`Machine::run_reference`] and
+/// [`run_lowered_match`], instruction for instruction (module docs).
 ///
 /// `instrs_for_hook` is the program's decoded stream, used only to feed
 /// [`RetireHook::retire`]; hooks with [`RetireHook::OBSERVES`] `== false`
-/// (the [`super::NopHook`] fast path) skip even that lookup.
+/// (the [`NopHook`] fast path) compile the retire block — and its
+/// argument materialization — out entirely: the gate is a
+/// monomorphization-time constant, never a per-retire branch.
 pub(crate) fn run_lowered<H: RetireHook>(
+    machine: &mut Machine,
+    lp: &LoweredProgram,
+    instrs_for_hook: &[Instr],
+    max_instrs: u64,
+    hook: &mut H,
+) -> Result<RunStats, SimError> {
+    let mut st = LaneState::enter(machine.pc, lp);
+    loop {
+        if let Some(r) =
+            step(machine, lp, &mut st, max_instrs, instrs_for_hook, hook)
+        {
+            return r;
+        }
+    }
+}
+
+/// Step `K` independent machines — same [`LoweredProgram`], per-lane
+/// registers / DM / watchdog budget — through one fetch/decode stream
+/// (software SIMT, DESIGN.md §15).  Lanes never interact; a lane that
+/// exits early (`ecall`, fault, watchdog) retires individually while its
+/// mates keep stepping, so per-lane results are bit-identical to `K`
+/// scalar runs.  Lane runs are hook-free by construction ([`NopHook`]);
+/// observing hooks take the scalar path — the retire stream is
+/// per-machine, and interleaving lanes would scramble it.
+pub(crate) fn run_lanes<const K: usize>(
+    lanes: &mut [Machine],
+    lp: &LoweredProgram,
+    budgets: &[u64],
+) -> Vec<Result<RunStats, SimError>> {
+    assert_eq!(lanes.len(), K, "lane group width");
+    assert_eq!(budgets.len(), K, "one watchdog budget per lane");
+    let mut st: [LaneState; K] =
+        std::array::from_fn(|l| LaneState::enter(lanes[l].pc, lp));
+    let mut done: [Option<Result<RunStats, SimError>>; K] =
+        std::array::from_fn(|_| None);
+    let mut live = K;
+    while live > 0 {
+        // Lane-major inner loop: K independent dependency chains in
+        // flight per iteration, which is where the lane win comes from —
+        // the host core overlaps their loads/ALU ops where a scalar run
+        // serializes on one chain.
+        for l in 0..K {
+            if done[l].is_some() {
+                continue;
+            }
+            if let Some(r) = step(
+                &mut lanes[l],
+                lp,
+                &mut st[l],
+                budgets[l],
+                &[],
+                &mut NopHook,
+            ) {
+                done[l] = Some(r);
+                live -= 1;
+            }
+        }
+    }
+    done.into_iter()
+        .map(|r| r.expect("every lane retired"))
+        .collect()
+}
+
+/// The original central-`match` lowered loop, kept verbatim as the
+/// `dispatch:match` bench baseline and a second differential oracle for
+/// the threaded path (`tests/lowered_diff.rs` asserts `threaded ≡ match`
+/// on top of `lowered ≡ reference`).
+pub(crate) fn run_lowered_match<H: RetireHook>(
     machine: &mut Machine,
     lp: &LoweredProgram,
     instrs_for_hook: &[Instr],
@@ -999,6 +1629,18 @@ mod tests {
         assert!(lp.all_marked);
         assert!(lp.ops.iter().take(2).all(|o| o.zmark == 1));
         assert!(lp.covers_entry(0x1234));
+    }
+
+    /// The safety net for the `HANDLERS` table: `KINDS` must list every
+    /// discriminant in order, so `HANDLERS[k as usize]` is the handler
+    /// `handler_for(k)` names.  (The `threaded ≡ match` differential
+    /// property in `tests/lowered_diff.rs` is the behavioural backstop.)
+    #[test]
+    fn kinds_cover_every_discriminant() {
+        for (i, k) in KINDS.iter().enumerate() {
+            assert_eq!(*k as usize, i, "KINDS[{i}] = {k:?} out of order");
+        }
+        assert_eq!(N_KINDS, KINDS.len());
     }
 
     #[test]

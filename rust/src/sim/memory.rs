@@ -128,6 +128,24 @@ impl Memory {
         Ok(())
     }
 
+    /// Per-run re-init in one call: [`Self::reset_from`] when a base image
+    /// is present, [`Self::reset`] otherwise.  This is the per-lane DM
+    /// re-init of the engine's lane packs (every lane reuses its pooled
+    /// machine's allocation, DESIGN.md §15) and of the scalar pooled path.
+    pub fn reinit(
+        &mut self,
+        image: Option<&[u8]>,
+        size: usize,
+    ) -> Result<(), MemFault> {
+        match image {
+            Some(img) => self.reset_from(img, size),
+            None => {
+                self.reset(size);
+                Ok(())
+            }
+        }
+    }
+
     /// Read `n` little-endian i32 words.
     pub fn read_i32s(&self, addr: u32, n: usize) -> Result<Vec<i32>, MemFault> {
         let raw = self.read_block(addr, n * 4)?;
@@ -184,6 +202,16 @@ mod tests {
         assert_eq!(m.read_block(0, 6).unwrap(), &[1, 2, 3, 0, 0, 0]);
         // image larger than the requested size is a fault
         assert!(m.reset_from(&[0; 9], 8).is_err());
+    }
+
+    #[test]
+    fn reinit_dispatches_on_image() {
+        let mut m = Memory::new(4);
+        m.reinit(Some(&[7, 8]), 4).unwrap();
+        assert_eq!(m.read_block(0, 4).unwrap(), &[7, 8, 0, 0]);
+        m.reinit(None, 3).unwrap();
+        assert_eq!(m.read_block(0, 3).unwrap(), &[0u8; 3]);
+        assert!(m.reinit(Some(&[0; 9]), 8).is_err());
     }
 
     #[test]

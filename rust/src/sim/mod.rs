@@ -35,8 +35,9 @@ pub mod serve;
 pub mod shard;
 
 pub use cpu::{Machine, RunStats, Sim, SimError};
-pub use engine::{run_batch, run_job, run_job_on, run_job_pooled, Job,
-                 JobOutput};
+pub use engine::{default_lanes, lanes_override, run_batch, run_job,
+                 run_job_on, run_job_pooled, run_lane_pack, Job, JobOutput,
+                 MAX_LANES};
 pub use exec::{BackendSpec, Caps, Executor, JobSpec, LocalExec, RawJob,
                ShardExec};
 pub use hooks::{NopHook, RetireHook, TraceHook};

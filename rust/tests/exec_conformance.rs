@@ -244,6 +244,48 @@ fn parallelism_capability_matches_backend_shape() {
     );
 }
 
+/// Lane packing (DESIGN.md §15) is invisible through the Executor seam:
+/// the same model-interleaved batch produces bit-identical results, in
+/// submission order, whether the local backend runs scalar
+/// (`set_lanes(1)`), packs up to 8 lanes, or the batch goes through the
+/// scalar-off-the-wire shard backend.
+#[test]
+fn lane_packing_is_invisible_across_backends() {
+    let descs = zoo_descs(3);
+    let reference = run_descs_local(Path::new("artifacts"), &descs, 0);
+
+    let mut runs = Vec::new();
+    for lanes in [1usize, 8] {
+        let mut exec = LocalExec::new(Path::new("artifacts"), 2);
+        exec.set_lanes(lanes);
+        assert_eq!(exec.caps().lanes, lanes);
+        for d in &descs {
+            exec.submit(JobSpec::named(d.clone()));
+        }
+        runs.push((format!("local:2 lanes:{lanes}"), exec.run()));
+    }
+    let mut shard = ShardExec::from_pool(
+        ShardPool::spawn(&marvel_worker_cmd(), 2).unwrap(),
+        2,
+    );
+    assert_eq!(shard.caps().lanes, 1, "shard workers run scalar");
+    for d in &descs {
+        shard.submit(JobSpec::named(d.clone()));
+    }
+    runs.push(("shard:2".to_string(), shard.run()));
+
+    for (name, got) in &runs {
+        assert_eq!(got.len(), reference.len(), "{name}");
+        for (i, (g, r)) in got.iter().zip(&reference).enumerate() {
+            assert_eq!(
+                g.as_ref().unwrap(),
+                r.as_ref().unwrap(),
+                "{name} job {i}: lane packing must be invisible"
+            );
+        }
+    }
+}
+
 /// Check 4, local flavor: a job that panics its worker thread (DM resize
 /// capacity overflow — a bug class, not a `SimError`) panics the caller.
 #[test]

@@ -1,7 +1,10 @@
 //! Differential tests: the lowered micro-op interpreter (`Machine::run`)
 //! against the reference decode-enum interpreter
 //! (`Machine::run_reference`), which survives precisely to be this oracle
-//! (DESIGN.md §11).
+//! (DESIGN.md §11), plus the two execution shapes layered on the lowered
+//! form (DESIGN.md §15): `threaded ≡ match` (direct-threaded dispatch vs
+//! the original central match) and `lanes ≡ reference` (multi-lane groups
+//! vs per-lane scalar reference runs).
 //!
 //! The contract is *bit-identical observable behaviour*: same
 //! `Result<RunStats, SimError>` (including the exact fault and pc), same
@@ -63,6 +66,28 @@ fn run_both(
         let mut trace = TraceHook::new(256);
         let r = if reference {
             m.run_reference(max_instrs, &mut trace)
+        } else {
+            m.run(max_instrs, &mut trace)
+        };
+        (r, m, trace.lines)
+    };
+    (run_one(true), run_one(false))
+}
+
+/// Like [`run_both`] but pitting the two *lowered* dispatch shapes against
+/// each other: the kept central-`match` loop (`Machine::run_match`, the
+/// oracle here) vs direct-threaded dispatch (`Machine::run`).
+fn run_both_dispatch(
+    program: &Arc<Program>,
+    regs: [i32; 32],
+    max_instrs: u64,
+) -> (RunOutcome, RunOutcome) {
+    let mut run_one = |match_dispatch: bool| {
+        let mut m = Machine::new(Arc::clone(program), DM_SIZE);
+        m.regs = regs;
+        let mut trace = TraceHook::new(256);
+        let r = if match_dispatch {
+            m.run_match(max_instrs, &mut trace)
         } else {
             m.run(max_instrs, &mut trace)
         };
@@ -144,12 +169,12 @@ fn prop_lowered_matches_reference_on_tiny_budgets() {
     });
 }
 
-/// Deterministic edge cases the random generator rarely hits.
-#[test]
-fn lowered_matches_reference_on_edge_programs() {
+/// Deterministic edge cases the random generator rarely hits — shared by
+/// the `lowered ≡ reference` and `threaded ≡ match` suites.
+fn edge_cases() -> Vec<(&'static str, Variant, Vec<marvel::isa::Instr>)> {
     use marvel::isa::{AluImmOp, BranchOp, Instr};
 
-    let cases: Vec<(&str, Variant, Vec<Instr>)> = vec![
+    vec![
         ("ebreak", V4, vec![Instr::Ebreak]),
         ("fall off the end", V4, vec![Instr::OpImm {
             op: AluImmOp::Addi, rd: 1, rs1: 0, imm: 1,
@@ -189,11 +214,153 @@ fn lowered_matches_reference_on_edge_programs() {
             Instr::SetZe { rs1: 3 },
             Instr::Ecall,
         ]),
-    ];
-    for (label, variant, instrs) in cases {
+    ]
+}
+
+#[test]
+fn lowered_matches_reference_on_edge_programs() {
+    for (label, variant, instrs) in edge_cases() {
         let program = Arc::new(Program::from_instrs(variant, instrs).unwrap());
         let (r, l) = run_both(&program, [0; 32], 100);
         if let Err(e) = diff(label, r, l) {
+            panic!("{e}");
+        }
+    }
+}
+
+/// The threaded handler table is behaviourally the central match, on the
+/// same deterministic edge programs.
+#[test]
+fn threaded_matches_match_on_edge_programs() {
+    for (label, variant, instrs) in edge_cases() {
+        let program = Arc::new(Program::from_instrs(variant, instrs).unwrap());
+        let (m, t) = run_both_dispatch(&program, [0; 32], 100);
+        if let Err(e) = diff(label, m, t) {
+            panic!("{e}");
+        }
+    }
+}
+
+/// Dispatch differential: the direct-threaded handler table against the
+/// kept central-`match` loop, over random programs and watchdog budgets.
+#[test]
+fn prop_threaded_matches_match_dispatch() {
+    check("threaded ≡ match (random programs)", 800, |rng| {
+        let variant = *rng.choice(&VARIANTS);
+        let program = random_program(rng, variant);
+        let regs = seed_regs(rng);
+        let budget = if rng.bool() {
+            MAX_INSTRS
+        } else {
+            rng.range_usize(0, 16) as u64
+        };
+        let (m, t) = run_both_dispatch(&program, regs, budget);
+        diff(variant.name, m, t)
+    });
+}
+
+/// Lane differential: a multi-lane group over one program — per-lane
+/// registers, mixed DM sizes, mixed watchdog budgets, divergent early
+/// exits — is bit-identical to per-lane scalar reference runs.
+#[test]
+fn prop_lanes_match_reference() {
+    const LANE_DM_SIZES: [usize; 3] = [256, 1024, 4096];
+    check("lanes ≡ reference (random groups)", 400, |rng| {
+        let variant = *rng.choice(&VARIANTS);
+        let program = random_program(rng, variant);
+        let k = rng.range_usize(1, 9);
+        let mut lanes = Vec::with_capacity(k);
+        let mut refs = Vec::with_capacity(k);
+        let mut budgets: Vec<u64> = Vec::with_capacity(k);
+        for _ in 0..k {
+            let dm = *rng.choice(&LANE_DM_SIZES);
+            let regs = seed_regs(rng);
+            let mut lane = Machine::new(Arc::clone(&program), dm);
+            lane.regs = regs;
+            let mut reference = Machine::new(Arc::clone(&program), dm);
+            reference.regs = regs;
+            lanes.push(lane);
+            refs.push(reference);
+            budgets.push(if rng.bool() {
+                MAX_INSTRS
+            } else {
+                rng.range_usize(0, 24) as u64
+            });
+        }
+        let results = match Machine::run_lane_group(&mut lanes, &budgets) {
+            Some(rs) => rs,
+            None => {
+                return Err(format!(
+                    "{}: lane group unexpectedly refused",
+                    variant.name
+                ))
+            }
+        };
+        for (l, ((lane, mut rm), lr)) in
+            lanes.into_iter().zip(refs).zip(results).enumerate()
+        {
+            let rr = rm.run_reference(budgets[l], &mut NopHook);
+            diff(
+                &format!("{} lane {l}/{k}", variant.name),
+                (rr, rm, Vec::new()),
+                (lr, lane, Vec::new()),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+/// Deterministic divergence: one lane group where lanes exit by every
+/// route — immediate `ecall`, misaligned and out-of-bounds data faults,
+/// a zero budget, and a self-loop watchdog — each lane retiring
+/// individually with exactly its scalar reference behaviour.
+#[test]
+fn lane_group_with_divergent_exits() {
+    use marvel::isa::{BranchOp, Instr, LoadOp};
+    let program = Arc::new(
+        Program::from_instrs(V4, vec![
+            // x1 == 0 -> jump straight to the ecall at pc 12
+            Instr::Branch { op: BranchOp::Beq, rs1: 1, rs2: 0, offset: 12 },
+            Instr::Load { op: LoadOp::Lw, rd: 2, rs1: 3, offset: 0 },
+            Instr::Jal { rd: 0, offset: 0 }, // self-loop -> watchdog
+            Instr::Ecall,
+        ])
+        .unwrap(),
+    );
+    // (x1, x3, dm_size, budget)
+    let setups: [(i32, i32, usize, u64); 8] = [
+        (0, 0, 64, 50),        // early ecall
+        (1, 1, 64, 50),        // misaligned lw fault
+        (1, 0, 256, 50),       // lw ok, then watchdog in the self-loop
+        (1, 1 << 20, 64, 50),  // out-of-bounds lw fault
+        (0, 0, 256, 0),        // zero budget: watchdog before retiring
+        (1, 4, 256, 50),       // lw ok (different address), watchdog
+        (0, 0, 64, 50),        // early ecall again
+        (1, 2, 64, 50),        // misaligned at a different address
+    ];
+    let mut lanes: Vec<Machine> = Vec::new();
+    let mut refs: Vec<Machine> = Vec::new();
+    for &(x1, x3, dm, _) in &setups {
+        let mut m = Machine::new(Arc::clone(&program), dm);
+        m.regs[1] = x1;
+        m.regs[3] = x3;
+        let mut r = Machine::new(Arc::clone(&program), dm);
+        r.regs[1] = x1;
+        r.regs[3] = x3;
+        lanes.push(m);
+        refs.push(r);
+    }
+    let budgets: Vec<u64> = setups.iter().map(|s| s.3).collect();
+    let results = Machine::run_lane_group(&mut lanes, &budgets)
+        .expect("homogeneous group takes the lane path");
+    assert_eq!(results.len(), 8);
+    for (l, ((lane, mut rm), lr)) in
+        lanes.into_iter().zip(refs).zip(results).enumerate()
+    {
+        let rr = rm.run_reference(budgets[l], &mut NopHook);
+        if let Err(e) =
+            diff(&format!("lane {l}"), (rr, rm, Vec::new()), (lr, lane, Vec::new()))
+        {
             panic!("{e}");
         }
     }

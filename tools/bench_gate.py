@@ -20,7 +20,10 @@ Two measurement kinds are gated:
 Only measurements present in BOTH files with the SAME kind are compared
 (names change as benches evolve; new/renamed entries just pass).
 Missing/empty previous file is a pass — the first run on a branch has no
-baseline.
+baseline.  The ISS dispatch/lane rows (`iss/*/dispatch:{threaded,match}`,
+`iss/v4/lanes:{1,4,8}`) enter the gate this way: `units_per_s` throughput
+rows that pass as `new:` until a baseline artifact carries them, then are
+held to the same tolerance as every other throughput row.
 
 Usage: bench_gate.py PREV.json CURRENT.json [--max-drop 0.15]
 """

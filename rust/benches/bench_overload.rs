@@ -1,0 +1,256 @@
+//! §Robustness overload bench: trace-replay through the serving front
+//! under deadline pressure (DESIGN.md §16).
+//!
+//! A chatty lenet-shaped tenant floods the server while a quiet
+//! tiny-conv tenant submits deadline-carrying requests.  Three arrival
+//! patterns are replayed — `bursty` (synchronized bursts), `diurnal`
+//! (alternating peak/trough phases) and `adversarial` (a full backlog
+//! committed *before* the tight-deadline requests arrive) — once per
+//! policy (fifo, edf).  The headline metric is **goodput under
+//! deadline** for the quiet tenant: the fraction of its
+//! deadline-carrying requests answered within the deadline, with both
+//! admission sheds and served-but-late replies counting against it
+//! (`goodput` rows, gated higher-is-better in CI next to `units_per_s`).
+//! The interesting comparison is the adversarial trace: under fifo the
+//! tight requests drain behind the whole backlog and miss; under edf
+//! they ride the next batch and meet.
+//!
+//! Deadlines are calibrated, not hard-coded: the trace unit `L` is the
+//! measured cost of one chatty inference on a warm single-thread
+//! server, so the same trace expresses the same *relative* pressure on
+//! any machine.  Results land in `BENCH_overload.json` (CI sets
+//! `BENCH_JSON`).
+
+#[path = "common.rs"]
+mod common;
+
+use std::time::Duration;
+
+use marvel::compiler::CompileCache;
+use marvel::models::synth::{lenet_shaped, tiny_conv_net, Builder};
+use marvel::sim::exec::LocalExec;
+use marvel::sim::serve::{build_serve_models, model_key, ReqMeta, Server,
+                         ServeModel};
+use marvel::sim::{PolicyKind, ServeOptions, V4};
+use marvel::util::rng::Rng;
+
+const CHATTY: &str = "synth:lenet:1";
+const QUIET: &str = "synth:tiny:3";
+
+fn units(cache: &CompileCache) -> Vec<ServeModel> {
+    build_serve_models(
+        std::path::Path::new("artifacts"),
+        &[CHATTY.to_string(), QUIET.to_string()],
+        &[V4],
+        cache,
+    )
+    .unwrap()
+}
+
+fn exec1() -> Box<LocalExec> {
+    // One worker thread: batch cost is the sum of its jobs, so the
+    // calibrated unit L translates directly into backlog drain time.
+    Box::new(LocalExec::new(std::path::Path::new("artifacts"), 1))
+}
+
+fn one_input(
+    spec: &marvel::compiler::spec::ModelSpec,
+    seed: u64,
+) -> Vec<u8> {
+    let mut rng = Rng::new(seed);
+    Builder::random_input(spec, &mut rng)
+        .iter()
+        .map(|&v| v as i8 as u8)
+        .collect()
+}
+
+/// One replayed arrival: which tenant, the think-time gap before it, and
+/// its scheduling metadata.
+struct Ev {
+    chatty: bool,
+    gap: Duration,
+    deadline: Option<Duration>,
+    priority: u8,
+}
+
+impl Ev {
+    fn chatty(gap: Duration) -> Ev {
+        Ev { chatty: true, gap, deadline: None, priority: 0 }
+    }
+
+    fn tiny(gap: Duration, deadline: Duration) -> Ev {
+        Ev { chatty: false, gap, deadline: Some(deadline), priority: 200 }
+    }
+}
+
+/// Synchronized bursts: each burst opens with two tight-deadline quiet
+/// requests followed by six chatty ones, then the line goes idle.
+fn bursty(l: Duration) -> Vec<Ev> {
+    let mut t = Vec::new();
+    for burst in 0..3u32 {
+        let gap = if burst == 0 { Duration::ZERO } else { 3 * l };
+        t.push(Ev::tiny(gap, 10 * l));
+        t.push(Ev::tiny(Duration::ZERO, 10 * l));
+        for _ in 0..6 {
+            t.push(Ev::chatty(Duration::ZERO));
+        }
+    }
+    t
+}
+
+/// Alternating peak/trough phases: a dense daytime flood with riders,
+/// then a sparse night trickle.
+fn diurnal(l: Duration) -> Vec<Ev> {
+    let mut t = Vec::new();
+    for _ in 0..2u32 {
+        for _ in 0..6 {
+            t.push(Ev::chatty(l / 4));
+        }
+        for _ in 0..2 {
+            t.push(Ev::tiny(l / 2, 10 * l));
+        }
+        for _ in 0..2 {
+            t.push(Ev::chatty(2 * l));
+        }
+        t.push(Ev::tiny(2 * l, 10 * l));
+    }
+    t
+}
+
+/// The worst case for arrival-order scheduling: the whole chatty backlog
+/// (24 requests ≈ 24 L of work) is committed before the first
+/// tight-deadline request arrives.  Fifo drains the backlog first and
+/// blows the 10 L deadlines; edf pulls the quiet requests into the next
+/// batch.
+fn adversarial(l: Duration) -> Vec<Ev> {
+    let mut t = Vec::new();
+    for _ in 0..24u32 {
+        t.push(Ev::chatty(Duration::ZERO));
+    }
+    t.push(Ev::tiny(l / 2, 10 * l));
+    for _ in 0..5 {
+        t.push(Ev::tiny(Duration::ZERO, 10 * l));
+    }
+    t
+}
+
+/// The trace unit: median cost of one chatty inference on a warm
+/// single-thread server, floored at 1 ms so sleep granularity can't
+/// distort the replayed gaps.  Doubles as a gated throughput row.
+fn calibrate(cache: &CompileCache, input: &[u8]) -> Duration {
+    let (server, client) =
+        Server::start(units(cache), ServeOptions::default(), exec1());
+    let key = model_key(CHATTY, "v4");
+    let secs = common::time_runs(2, 3, || {
+        client.infer(&key, input.to_vec()).unwrap();
+    });
+    common::report(
+        "overload/calibrate-chatty",
+        secs.clone(),
+        Some((1.0, "inference")),
+    );
+    drop(client);
+    server.join();
+    let mut secs = secs;
+    secs.sort_by(f64::total_cmp);
+    Duration::from_secs_f64(secs[secs.len() / 2])
+        .max(Duration::from_millis(1))
+}
+
+/// Replay one trace on a fresh server; returns `(met, total)` over the
+/// quiet tenant's deadline-carrying requests (server-side accounting:
+/// sheds and late replies both count in `total`).
+fn run_trace(
+    pattern: &str,
+    policy: PolicyKind,
+    trace: &[Ev],
+    cache: &CompileCache,
+    chatty_input: &[u8],
+    quiet_input: &[u8],
+) -> (u64, u64) {
+    let opts = ServeOptions {
+        max_batch: 4,
+        queue_cap: 4096,
+        policy,
+        slo: Some(Duration::from_millis(200)),
+        ..ServeOptions::default()
+    }
+    .fixed_window(Duration::from_micros(500));
+    let (server, client) = Server::start(units(cache), opts, exec1());
+    let chatty_key = model_key(CHATTY, "v4");
+    let quiet_key = model_key(QUIET, "v4");
+    // Warm the measured server (pool + machine allocation); no deadline,
+    // so these never touch the goodput accounting.
+    client.infer(&chatty_key, chatty_input.to_vec()).unwrap();
+    client.infer(&quiet_key, quiet_input.to_vec()).unwrap();
+
+    let mut tickets = Vec::new();
+    for ev in trace {
+        if !ev.gap.is_zero() {
+            std::thread::sleep(ev.gap);
+        }
+        let (key, input) = if ev.chatty {
+            (&chatty_key, chatty_input)
+        } else {
+            (&quiet_key, quiet_input)
+        };
+        let meta = ReqMeta { deadline: ev.deadline, priority: ev.priority };
+        match client.submit_with(key, input.to_vec(), meta) {
+            Ok(t) => tickets.push(t),
+            // Structured backpressure is a legal answer under overload —
+            // it counts as a drop, not a crash.
+            Err(e) => assert_eq!(e.kind, "overload", "{e}"),
+        }
+    }
+    for t in tickets {
+        // Sheds and failed jobs answer with a structured error; both are
+        // already counted server-side.
+        let _ = t.wait_detailed();
+    }
+    drop(client);
+    let report = server.join();
+    let row = report
+        .slo
+        .rows
+        .iter()
+        .find(|r| r.key == quiet_key)
+        .expect("quiet tenant row");
+    common::report_latency(
+        &format!("overload {pattern} {policy} quiet p99"),
+        row.p50_ms / 1e3,
+        row.p95_ms / 1e3,
+        row.p99_ms / 1e3,
+        row.attainment,
+    );
+    (row.deadline_met, row.deadline_met + row.deadline_missed + row.shed)
+}
+
+fn main() {
+    let cache = CompileCache::new();
+    let chatty_input = one_input(&lenet_shaped(1), 7);
+    let quiet_input = one_input(&tiny_conv_net(3), 8);
+    let l = calibrate(&cache, &chatty_input);
+    println!(
+        "overload: calibrated chatty cost L = {:.2} ms",
+        l.as_secs_f64() * 1e3
+    );
+    type Mk = fn(Duration) -> Vec<Ev>;
+    let patterns: [(&str, Mk); 3] = [
+        ("bursty", bursty),
+        ("diurnal", diurnal),
+        ("adversarial", adversarial),
+    ];
+    for (pattern, mk) in patterns {
+        for policy in [PolicyKind::Fifo, PolicyKind::Edf] {
+            let trace = mk(l);
+            let (met, total) = run_trace(
+                pattern, policy, &trace, &cache, &chatty_input, &quiet_input,
+            );
+            common::report_goodput(
+                &format!("overload {pattern} {policy} goodput"),
+                met,
+                total,
+            );
+        }
+    }
+}

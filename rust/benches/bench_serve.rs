@@ -64,6 +64,7 @@ fn scenario(policy: PolicyKind, rounds: usize) -> ServeReport {
         queue_cap: 4096,
         policy,
         slo: Some(Duration::from_millis(50)),
+        ..ServeOptions::default()
     };
     // Warm the compile/lowering caches (shared via `cache` and memoized on
     // the Arc'd programs) through a throwaway server, so the measured

@@ -109,6 +109,35 @@ pub fn report_latency(
     }
 }
 
+/// Render + record a goodput measurement (the overload bench's headline:
+/// the fraction of deadline-carrying requests answered *within* their
+/// deadline — sheds and misses both count against it).  With
+/// `BENCH_JSON=<path>` set, appends `{"name","goodput","met","total"}` —
+/// the gate/trend tools treat `goodput` as higher-is-better.
+#[allow(dead_code)] // only the overload bench records goodput rows
+pub fn report_goodput(name: &str, met: u64, total: u64) {
+    let goodput = if total == 0 { 0.0 } else { met as f64 / total as f64 };
+    println!(
+        "{name}: goodput {:.1}% ({met}/{total} within deadline)",
+        goodput * 100.0
+    );
+    if let Some(path) = std::env::var_os("BENCH_JSON") {
+        use std::io::Write;
+        let json = format!(
+            "{{\"name\":\"{}\",\"goodput\":{goodput:.4},\"met\":{met},\
+             \"total\":{total}}}\n",
+            name.replace('\\', "\\\\").replace('"', "\\\"")
+        );
+        match std::fs::OpenOptions::new().create(true).append(true).open(&path)
+        {
+            Ok(mut f) => {
+                let _ = f.write_all(json.as_bytes());
+            }
+            Err(e) => eprintln!("BENCH_JSON: cannot open {path:?}: {e}"),
+        }
+    }
+}
+
 fn fmt_t(s: f64) -> String {
     if s >= 1.0 {
         format!("{s:.3} s")

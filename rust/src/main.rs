@@ -17,8 +17,8 @@
 //! marvel shard-sweep  [--backend B] [--check] model-zoo sweep
 //!                                           (--check: diff vs in-process)
 //! marvel serve    [--models a,b] [--variants v0,v4] [--backend B]
-//!                 [--policy fifo|drr] [--queue-cap N] [--window-min MS]
-//!                 [--window-max MS] [--slo-ms MS]
+//!                 [--policy fifo|drr|edf] [--queue-cap N] [--window-min MS]
+//!                 [--window-max MS] [--slo-ms MS] [--slo-window-ms MS]
 //!                                           scheduled inference requests
 //!                                           as JSON lines on stdin
 //! ```
@@ -30,6 +30,14 @@
 //! local thread count, and `--shard N` / `--workers N` survive as aliases
 //! for `shard:N`.  `MARVEL_THREADS=N` overrides the "one worker per core"
 //! default wherever a thread count is 0/omitted.
+//!
+//! `--chaos <plan>` (or `MARVEL_CHAOS=<plan>`) arms deterministic fault
+//! injection on any sweep-style command (DESIGN.md §16): exec-site faults
+//! wrap the backend in a [`marvel::sim::ChaosExec`], worker-site faults are
+//! exported into the environment so spawned shard workers act them out.
+//! Within the retry budgets the observable results stay bit-identical to a
+//! fault-free run — that invariant is what `shard-sweep --check --chaos`
+//! exercises in CI.
 //!
 //! `flow`, `run`, `compile`, `report --model`, `shard-*` and `serve`
 //! accept `synth:<kind>:<seed>` model names (self-contained synthetic
@@ -47,6 +55,7 @@ use marvel::coordinator::experiments::{self, ablation, fig11_cycles,
                                        fig4_addi_hist, fig5_asm_diff,
                                        table10_memory, table8_area};
 use marvel::coordinator::{run_flow, FlowOptions};
+use marvel::sim::chaos::{self, FaultPlan, MARVEL_CHAOS_ENV};
 use marvel::sim::exec::{BackendSpec, Executor, LocalExec};
 use marvel::sim::{serve, Variant};
 use marvel::util::tables::{fmt_si, Table};
@@ -180,11 +189,12 @@ fn print_usage() {
          shard-sweep/serve; results are bit-identical across backends)] \
          [--threads N (local backend workers, 0 = all cores)] \
          [--shard N (alias for --backend shard:N)] ...\n\n\
-         serve scheduler (DESIGN.md §14):\n  \
-         --policy fifo|drr     batch-forming policy across per-model \
+         serve scheduler (DESIGN.md §14, §16):\n  \
+         --policy fifo|drr|edf batch-forming policy across per-model \
          queues:\n                        fifo = strict arrival order, \
-         drr = deficit\n                        round-robin fairness \
-         (default fifo)\n  \
+         drr = deficit\n                        round-robin fairness, edf \
+         = earliest deadline\n                        first (default \
+         fifo)\n  \
          --queue-cap N         per-model queue bound; requests past it \
          are\n                        rejected with a structured error \
          (default 1024)\n  \
@@ -196,11 +206,39 @@ fn print_usage() {
          --max-batch N         hard batch-size cap (default 64)\n  \
          --slo-ms MS           latency target for the SLO-attainment \
          column of\n                        the shutdown report (default: \
-         no SLO)\n\n\
+         no SLO)\n  \
+         --slo-window-ms MS    emit + reset a recent-traffic SLO snapshot \
+         on\n                        stderr every MS (default: lifetime \
+         only)\n\n\
+         fault injection (DESIGN.md §16):\n  \
+         --chaos PLAN          deterministic fault plan for shard-sweep/\
+         report/serve,\n                        \
+         e.g. 'worker:kill@3,exec:transient@5x2'; also\n                        \
+         read from MARVEL_CHAOS; within retry budgets\n                        \
+         results stay bit-identical to a fault-free run\n\n\
          env: MARVEL_THREADS=N overrides the one-worker-per-core default \
-         wherever a thread count is 0 or omitted",
+         wherever a thread count is 0 or omitted; MARVEL_CHAOS=PLAN arms \
+         fault injection like --chaos",
         marvel::version()
     );
+}
+
+/// The fault-injection plan for this invocation: `--chaos <plan>` wins
+/// over the `MARVEL_CHAOS` env (and is re-exported into the environment,
+/// so shard workers spawned by the backend inherit their worker-site
+/// faults exactly as they would under the env spelling).  Call this
+/// *before* building the backend — worker processes read the env at
+/// spawn time.
+fn chaos_arg(args: &Args) -> Result<Option<FaultPlan>> {
+    match args.get("chaos") {
+        Some(s) => {
+            let plan = FaultPlan::parse(s)
+                .with_context(|| format!("parsing --chaos {s:?}"))?;
+            std::env::set_var(MARVEL_CHAOS_ENV, s);
+            Ok(Some(plan))
+        }
+        None => FaultPlan::from_env(),
+    }
 }
 
 /// The execution backend a sweep-style command uses — THE one place the
@@ -269,7 +307,13 @@ fn cmd_shard_sweep(args: &Args) -> Result<()> {
         ..FlowOptions::default()
     };
     let cache = compiler::CompileCache::new();
-    let mut exec = backend_arg(args, "shard:2")?.build(&artifacts)?;
+    // Chaos is armed before the backend builds: shard workers read the
+    // exported plan from their environment at spawn time.
+    let plan = chaos_arg(args)?;
+    let mut exec = chaos::wrap(
+        backend_arg(args, "shard:2")?.build(&artifacts)?,
+        plan.as_ref(),
+    );
     let t0 = std::time::Instant::now();
     let sharded = experiments::run_flows(
         &artifacts, &models, &opts, &cache, exec.as_mut(),
@@ -377,7 +421,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let cache = compiler::CompileCache::new();
     let units =
         serve::build_serve_models(&artifacts, &models, &variants, &cache)?;
-    let exec = backend_arg(args, "local")?.build(&artifacts)?;
+    let plan = chaos_arg(args)?;
+    let exec = chaos::wrap(
+        backend_arg(args, "local")?.build(&artifacts)?,
+        plan.as_ref(),
+    );
     eprintln!(
         "serving {} (model, variant) units on backend {}; policy {}, \
          window {:?}..{:?}, max batch {}, queue cap {}{} — JSON request \
@@ -407,9 +455,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 /// The serving scheduler's knobs, parsed next to [`backend_arg`] —
-/// `--policy fifo|drr`, `--queue-cap N`, `--window-min/--window-max MS`
-/// (auto-tune bounds; `--window-ms MS` pins a fixed window), `--max-batch
-/// N` and `--slo-ms MS` (DESIGN.md §14).
+/// `--policy fifo|drr|edf`, `--queue-cap N`, `--window-min/--window-max
+/// MS` (auto-tune bounds; `--window-ms MS` pins a fixed window),
+/// `--max-batch N`, `--slo-ms MS` and `--slo-window-ms MS` (periodic
+/// recent-traffic SLO snapshots; DESIGN.md §14, §16).
 fn serve_opts_arg(args: &Args) -> Result<marvel::sim::ServeOptions> {
     let mut opts = marvel::sim::ServeOptions {
         max_batch: args.usize_opt("max-batch", 64),
@@ -418,6 +467,7 @@ fn serve_opts_arg(args: &Args) -> Result<marvel::sim::ServeOptions> {
             args.get("policy").unwrap_or("fifo"),
         )?,
         slo: args.ms_opt("slo-ms")?,
+        slo_window: args.ms_opt("slo-window-ms")?,
         ..Default::default()
     };
     if let Some(w) = args.ms_opt("window-ms")? {
@@ -668,7 +718,11 @@ fn cmd_report(args: &Args) -> Result<()> {
         // the tail small models leave behind, and `--backend shard:N`
         // dispatches that same list across N worker processes instead
         // (bit-identical results — the executor contract).
-        let mut exec = backend_arg(args, "local")?.build(&artifacts)?;
+        let plan = chaos_arg(args)?;
+        let mut exec = chaos::wrap(
+            backend_arg(args, "local")?.build(&artifacts)?,
+            plan.as_ref(),
+        );
         marvel::coordinator::experiments::run_flows(
             &artifacts, &models, &opts, &cache, exec.as_mut(),
         )?

@@ -1,0 +1,711 @@
+//! Deterministic fault injection for the execution stack (DESIGN.md §16).
+//!
+//! A [`FaultPlan`] is a seeded, fully deterministic schedule of faults —
+//! worker kills, corrupted wire lines, transient worker/hydration
+//! failures, delayed and duplicated responses — injected at one of two
+//! seams:
+//!
+//! - **worker site** (`worker:` prefix): inside [`super::shard::worker_loop`],
+//!   triggered on the wire `seq` of the job being handled.  This exercises
+//!   the *real* coordinator recovery machinery: death requeue + respawn
+//!   (PR 4), retry/backoff budgets and straggler re-dispatch
+//!   ([`super::shard::ShardPool`]).  The plan reaches the worker process
+//!   via the `MARVEL_CHAOS` environment variable, which the coordinator
+//!   sets *explicitly per incarnation* ([`FaultPlan::strip_one_shot`]):
+//!   death-causing faults (kill, corrupt) go to exactly one process ever,
+//!   so an injected death can never re-fire on the re-dispatched job and
+//!   masquerade as a poison job.
+//! - **exec site** (no prefix, or `exec:`): inside [`ChaosExec`], an
+//!   [`Executor`] wrapper over *any* backend, triggered on the global
+//!   submission index.  Faults are simulated at the trait seam (a "kill"
+//!   becomes a retryable failure of that job), and `ChaosExec` heals its
+//!   own injections with a bounded retry + exponential-backoff loop
+//!   ([`CHAOS_EXEC_RETRIES`]) — a plan within budget is invisible in the
+//!   results; a plan past budget surfaces a *fatal* classified
+//!   [`SimError::Remote`] at exactly the faulted index.
+//!
+//! Every fault is replayable: the plan is a pure value (`parse` ∘
+//! `Display` round-trips), triggers are indices rather than clocks, and
+//! the `seed:<S>:<N>` generator expands to the same schedule for the same
+//! seed on every machine.
+//!
+//! **Grammar** — comma-separated entries, each
+//! `[site:]fault@N[xK][:MS]`:
+//!
+//! ```text
+//! worker:kill@4            kill the worker process handling wire seq 4
+//! worker:corrupt@2         garbage line instead of seq 2's result
+//! worker:transient@6x2     transient error for seq 6, at most 2 times
+//! worker:hydrate@1         transient hydration failure for seq 1
+//! worker:delay@3:50        sleep 50 ms before replying to seq 3
+//! worker:dup@5             write seq 5's result line twice
+//! transient@7              exec-site: job 7 fails retryably once
+//! delay@0:10               exec-site: job 0's result delayed 10 ms
+//! seed:42:6                6 pseudo-random exec-site faults from seed 42
+//! ```
+
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::cpu::{RemoteKind, SimError};
+use super::engine::JobOutput;
+use super::exec::{Caps, Executor, JobSpec};
+
+/// Environment variable carrying a rendered [`FaultPlan`]: read by
+/// `marvel` commands as the `--chaos` default, and the channel the shard
+/// coordinator uses to hand each worker incarnation its (possibly
+/// stripped) plan.
+pub const MARVEL_CHAOS_ENV: &str = "MARVEL_CHAOS";
+
+/// How many times [`ChaosExec`] re-runs a job whose failure it injected
+/// itself before giving up and surfacing a fatal budget-exhausted error.
+pub const CHAOS_EXEC_RETRIES: u32 = 3;
+
+/// Base of `ChaosExec`'s exponential backoff between its retry rounds
+/// (doubles per attempt).  Tiny on purpose: chaos runs live in tests.
+const CHAOS_BACKOFF_BASE: Duration = Duration::from_millis(1);
+
+/// Which seam a fault is injected at.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Site {
+    /// Inside the worker process (`worker_loop`), triggered on wire seq.
+    Worker,
+    /// Inside [`ChaosExec`], triggered on the global submission index.
+    Exec,
+}
+
+/// What goes wrong.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Worker site: the process exits before replying (a real death, seen
+    /// by the coordinator as EOF).  Exec site: simulated as a retryable
+    /// failure of the job.  One-shot at the worker site (see
+    /// [`FaultPlan::strip_one_shot`]).
+    Kill,
+    /// Worker site: a garbage line replaces the result (the coordinator's
+    /// reader declares a protocol error — a death).  Exec site: simulated
+    /// as a retryable failure.  One-shot at the worker site.
+    Corrupt,
+    /// A transient (retryable) failure of the job — the error message
+    /// carries [`RemoteKind::TRANSIENT_MARKER`].
+    Transient,
+    /// A transient hydration failure (the model could not be resolved /
+    /// compiled *this time*), also retryable.
+    Hydrate,
+    /// The response is delayed by `delay_ms` (straggler simulation).
+    Delay,
+    /// The response is duplicated: the worker writes the result line
+    /// twice; `ChaosExec` runs the job twice and asserts the copies are
+    /// bit-identical (the purity contract duplicates rest on).
+    Dup,
+}
+
+impl FaultKind {
+    fn name(self) -> &'static str {
+        match self {
+            FaultKind::Kill => "kill",
+            FaultKind::Corrupt => "corrupt",
+            FaultKind::Transient => "transient",
+            FaultKind::Hydrate => "hydrate",
+            FaultKind::Delay => "delay",
+            FaultKind::Dup => "dup",
+        }
+    }
+
+    fn from_name(s: &str) -> Result<FaultKind> {
+        Ok(match s {
+            "kill" => FaultKind::Kill,
+            "corrupt" => FaultKind::Corrupt,
+            "transient" => FaultKind::Transient,
+            "hydrate" => FaultKind::Hydrate,
+            "delay" => FaultKind::Delay,
+            "dup" => FaultKind::Dup,
+            other => bail!(
+                "unknown fault {other:?} (expected kill|corrupt|transient|\
+                 hydrate|delay|dup)"
+            ),
+        })
+    }
+}
+
+/// One scheduled fault.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Fault {
+    pub site: Site,
+    pub kind: FaultKind,
+    /// Trigger index: wire seq (worker site) / global submission index
+    /// (exec site).
+    pub at: u64,
+    /// Fire at most this many times (the `xK` suffix; default 1).  Counted
+    /// per process at the worker site, per wrapper at the exec site.
+    pub count: u32,
+    /// Milliseconds, for [`FaultKind::Delay`].
+    pub delay_ms: u64,
+}
+
+impl std::fmt::Display for Fault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.site == Site::Worker {
+            write!(f, "worker:")?;
+        }
+        write!(f, "{}@{}", self.kind.name(), self.at)?;
+        if self.count != 1 {
+            write!(f, "x{}", self.count)?;
+        }
+        if self.kind == FaultKind::Delay {
+            write!(f, ":{}", self.delay_ms)?;
+        }
+        Ok(())
+    }
+}
+
+/// A deterministic fault schedule: the parsed form of `--chaos` /
+/// `MARVEL_CHAOS`.  `parse` ∘ `Display` round-trips (the `seed:` form
+/// expands at parse time, so a re-rendered plan lists its concrete
+/// faults — which is what lets the coordinator strip and re-serialize it
+/// per worker incarnation).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub faults: Vec<Fault>,
+}
+
+impl FaultPlan {
+    /// Parse a plan string (see the module docs for the grammar).  The
+    /// empty string is the empty plan.
+    pub fn parse(s: &str) -> Result<FaultPlan> {
+        let mut faults = Vec::new();
+        for entry in s.split(',') {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            if let Some(rest) = entry.strip_prefix("seed:") {
+                let (seed, n) = rest.split_once(':').with_context(|| {
+                    format!("chaos entry {entry:?}: expected seed:<S>:<N>")
+                })?;
+                let seed: u64 = seed.parse().with_context(|| {
+                    format!("chaos entry {entry:?}: bad seed")
+                })?;
+                let n: usize = n.parse().with_context(|| {
+                    format!("chaos entry {entry:?}: bad fault count")
+                })?;
+                ensure!(n <= 1024, "chaos entry {entry:?}: at most 1024 faults");
+                faults.extend(generate(seed, n));
+                continue;
+            }
+            let (site, rest) = if let Some(r) = entry.strip_prefix("worker:") {
+                (Site::Worker, r)
+            } else if let Some(r) = entry.strip_prefix("exec:") {
+                (Site::Exec, r)
+            } else {
+                (Site::Exec, entry)
+            };
+            let (kind, spec) = rest.split_once('@').with_context(|| {
+                format!("chaos entry {entry:?}: expected fault@N")
+            })?;
+            let kind = FaultKind::from_name(kind)
+                .with_context(|| format!("chaos entry {entry:?}"))?;
+            let (at_count, ms) = match spec.split_once(':') {
+                Some((l, r)) => (l, Some(r)),
+                None => (spec, None),
+            };
+            let (at, count) = match at_count.split_once('x') {
+                Some((a, k)) => (a, Some(k)),
+                None => (at_count, None),
+            };
+            let at: u64 = at.parse().with_context(|| {
+                format!("chaos entry {entry:?}: bad trigger index")
+            })?;
+            let count: u32 = match count {
+                None => 1,
+                Some(k) => {
+                    let k = k.parse().with_context(|| {
+                        format!("chaos entry {entry:?}: bad repeat count")
+                    })?;
+                    ensure!(k >= 1, "chaos entry {entry:?}: xK needs K ≥ 1");
+                    k
+                }
+            };
+            let delay_ms: u64 = match (kind, ms) {
+                (FaultKind::Delay, Some(ms)) => ms.parse().with_context(|| {
+                    format!("chaos entry {entry:?}: bad delay ms")
+                })?,
+                (FaultKind::Delay, None) => bail!(
+                    "chaos entry {entry:?}: delay needs :MS (delay@N:MS)"
+                ),
+                (_, Some(_)) => bail!(
+                    "chaos entry {entry:?}: only delay takes a :MS suffix"
+                ),
+                (_, None) => 0,
+            };
+            faults.push(Fault { site, kind, at, count, delay_ms });
+        }
+        Ok(FaultPlan { faults })
+    }
+
+    /// Parse the plan from `MARVEL_CHAOS`, if set and non-empty.  A set
+    /// but unparseable value is a hard error — a typo must not silently
+    /// run without chaos.
+    pub fn from_env() -> Result<Option<FaultPlan>> {
+        match std::env::var(MARVEL_CHAOS_ENV) {
+            Ok(s) if !s.trim().is_empty() => {
+                let plan = FaultPlan::parse(&s).with_context(|| {
+                    format!("parsing {MARVEL_CHAOS_ENV}={s:?}")
+                })?;
+                Ok(Some(plan))
+            }
+            _ => Ok(None),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// The worker-site subset (what a worker process acts on).
+    pub fn worker_faults(&self) -> impl Iterator<Item = &Fault> {
+        self.faults.iter().filter(|f| f.site == Site::Worker)
+    }
+
+    /// The exec-site subset (what [`ChaosExec`] acts on).
+    pub fn exec_faults(&self) -> impl Iterator<Item = &Fault> {
+        self.faults.iter().filter(|f| f.site == Site::Exec)
+    }
+
+    /// The plan with death-causing worker faults (kill, corrupt) removed —
+    /// what every worker incarnation *except the first* receives.  A
+    /// worker death re-dispatches its jobs, so a death fault that rode
+    /// along to the replacement (or to a sibling given the same plan)
+    /// would fire again on the same wire seq and accumulate toward the
+    /// [`super::shard::POISON_DEATHS`] panic; stripping makes every
+    /// injected death exactly once.
+    pub fn strip_one_shot(&self) -> FaultPlan {
+        FaultPlan {
+            faults: self
+                .faults
+                .iter()
+                .filter(|f| {
+                    !(f.site == Site::Worker
+                        && matches!(
+                            f.kind,
+                            FaultKind::Kill | FaultKind::Corrupt
+                        ))
+                })
+                .cloned()
+                .collect(),
+        }
+    }
+}
+
+impl std::fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for (i, fault) in self.faults.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{fault}")?;
+        }
+        Ok(())
+    }
+}
+
+/// SplitMix64 — the deterministic generator behind `seed:<S>:<N>`.
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9e3779b97f4a7c15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+/// Expand `seed:<S>:<N>` into `n` exec-site faults: kinds drawn from the
+/// retryable/benign set (transient, hydrate, delay, dup — never a death,
+/// so a generated plan is always within a healthy pool's recovery
+/// envelope), triggers in `0..32`, delays in `1..=5` ms.
+fn generate(seed: u64, n: usize) -> Vec<Fault> {
+    let mut state = seed;
+    (0..n)
+        .map(|_| {
+            let kind = match splitmix64(&mut state) % 4 {
+                0 => FaultKind::Transient,
+                1 => FaultKind::Hydrate,
+                2 => FaultKind::Delay,
+                _ => FaultKind::Dup,
+            };
+            let at = splitmix64(&mut state) % 32;
+            let delay_ms = if kind == FaultKind::Delay {
+                1 + splitmix64(&mut state) % 5
+            } else {
+                0
+            };
+            Fault { site: Site::Exec, kind, at, count: 1, delay_ms }
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Worker-site runtime
+// ---------------------------------------------------------------------------
+
+/// What the worker loop must do to the job it is currently handling, in
+/// application order.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WorkerAction {
+    /// Sleep this long before anything else (straggler simulation).
+    Delay(Duration),
+    /// Exit the process without replying (the injected death).
+    Kill,
+    /// Write a garbage line instead of the result (protocol corruption).
+    Corrupt,
+    /// Reply with this error instead of running the job.
+    ErrorResult(String),
+    /// Write the result line twice.
+    Dup,
+}
+
+/// Per-process worker-site fault state: the worker-site subset of a plan
+/// plus fire counts (each fault fires at most `count` times in this
+/// process).
+pub struct WorkerChaos {
+    faults: Vec<(Fault, u32)>,
+}
+
+impl WorkerChaos {
+    /// Build from a plan's worker-site faults; `None` if there are none.
+    pub fn new(plan: &FaultPlan) -> Option<WorkerChaos> {
+        let faults: Vec<(Fault, u32)> =
+            plan.worker_faults().map(|f| (f.clone(), 0)).collect();
+        if faults.is_empty() {
+            None
+        } else {
+            Some(WorkerChaos { faults })
+        }
+    }
+
+    /// Build from `MARVEL_CHAOS` (the coordinator sets it per
+    /// incarnation).  Unparseable plans are a hard error.
+    pub fn from_env() -> Result<Option<WorkerChaos>> {
+        Ok(FaultPlan::from_env()?.as_ref().and_then(WorkerChaos::new))
+    }
+
+    /// The actions to apply while handling wire seq `seq`, in application
+    /// order ([`WorkerAction`] variant order).  Advances fire counts.
+    pub fn actions(&mut self, seq: u64) -> Vec<WorkerAction> {
+        let mut out = Vec::new();
+        for (fault, fired) in &mut self.faults {
+            if fault.at != seq || *fired >= fault.count {
+                continue;
+            }
+            *fired += 1;
+            out.push(match fault.kind {
+                FaultKind::Delay => {
+                    WorkerAction::Delay(Duration::from_millis(fault.delay_ms))
+                }
+                FaultKind::Kill => WorkerAction::Kill,
+                FaultKind::Corrupt => WorkerAction::Corrupt,
+                FaultKind::Transient => WorkerAction::ErrorResult(format!(
+                    "chaos: injected transient worker failure at seq {seq}"
+                )),
+                FaultKind::Hydrate => WorkerAction::ErrorResult(format!(
+                    "chaos: injected transient hydration failure at seq {seq}"
+                )),
+                FaultKind::Dup => WorkerAction::Dup,
+            });
+        }
+        out.sort_by_key(|a| match a {
+            WorkerAction::Delay(_) => 0,
+            WorkerAction::Kill => 1,
+            WorkerAction::Corrupt => 2,
+            WorkerAction::ErrorResult(_) => 3,
+            WorkerAction::Dup => 4,
+        });
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Exec-site wrapper
+// ---------------------------------------------------------------------------
+
+/// An [`Executor`] wrapper injecting a plan's exec-site faults over any
+/// backend, then healing its own injections with a bounded
+/// retry + exponential-backoff loop (the exec-seam twin of the shard
+/// pool's budgets).  Faults trigger on the *global* submission index —
+/// the `j`-th job ever submitted to this wrapper — so a plan addresses
+/// jobs stably across batches.
+///
+/// Only failures this wrapper injected are retried: a real error from the
+/// inner backend (deterministic simulator faults, or a wire error that
+/// already exhausted the pool's own budget) passes through untouched.
+/// An injection that keeps firing past [`CHAOS_EXEC_RETRIES`] surfaces as
+/// a *fatal* [`SimError::Remote`] naming the exhausted budget, at exactly
+/// the faulted job's index.
+pub struct ChaosExec {
+    inner: Box<dyn Executor>,
+    faults: Vec<(Fault, u32)>,
+    next_index: u64,
+    queue: Vec<(u64, JobSpec)>,
+}
+
+impl ChaosExec {
+    /// Wrap `inner` with `plan`'s exec-site faults.  (A plan with only
+    /// worker-site faults yields a transparent wrapper — worker faults
+    /// travel by environment, not through this seam.)
+    pub fn new(inner: Box<dyn Executor>, plan: &FaultPlan) -> ChaosExec {
+        ChaosExec {
+            inner,
+            faults: plan.exec_faults().map(|f| (f.clone(), 0)).collect(),
+            next_index: 0,
+            queue: Vec::new(),
+        }
+    }
+
+    /// Fire every pending fault for global job index `gi`.  Returns the
+    /// (possibly replaced) result and whether a *retryable injection*
+    /// happened; duplicated-response faults are returned for the caller
+    /// to double-run.
+    fn inject(
+        &mut self,
+        gi: u64,
+        result: Result<JobOutput, SimError>,
+    ) -> (Result<JobOutput, SimError>, bool, bool) {
+        let mut result = result;
+        let mut injected = false;
+        let mut dup = false;
+        for (fault, fired) in &mut self.faults {
+            if fault.at != gi || *fired >= fault.count {
+                continue;
+            }
+            *fired += 1;
+            match fault.kind {
+                FaultKind::Delay => {
+                    std::thread::sleep(Duration::from_millis(fault.delay_ms));
+                }
+                FaultKind::Dup => dup = true,
+                kind => {
+                    let what = match kind {
+                        FaultKind::Kill => "injected worker kill",
+                        FaultKind::Corrupt => "injected response corruption",
+                        FaultKind::Hydrate => "injected hydration failure",
+                        _ => "injected failure",
+                    };
+                    // "(transient)" is RemoteKind::TRANSIENT_MARKER — the
+                    // message classifies as retryable on a re-parse too.
+                    result = Err(SimError::Remote {
+                        msg: format!("chaos: {what} at job {gi} (transient)"),
+                        kind: RemoteKind::Retryable,
+                    });
+                    injected = true;
+                }
+            }
+        }
+        (result, injected, dup)
+    }
+
+    /// Run `spec` once more on the inner backend, alone.
+    fn rerun(&mut self, spec: &JobSpec) -> Result<JobOutput, SimError> {
+        self.inner.submit(spec.clone());
+        self.inner
+            .run()
+            .pop()
+            .expect("inner executor returned one result for one job")
+    }
+}
+
+impl Executor for ChaosExec {
+    fn caps(&self) -> Caps {
+        self.inner.caps()
+    }
+
+    fn describe(&self) -> String {
+        format!("chaos({})", self.inner.describe())
+    }
+
+    fn submit(&mut self, job: JobSpec) -> usize {
+        let gi = self.next_index;
+        self.next_index += 1;
+        self.queue.push((gi, job));
+        self.queue.len() - 1
+    }
+
+    fn run(&mut self) -> Vec<Result<JobOutput, SimError>> {
+        let batch = std::mem::take(&mut self.queue);
+        let n = batch.len();
+        let mut results: Vec<Option<Result<JobOutput, SimError>>> =
+            (0..n).map(|_| None).collect();
+        // Local positions still being worked on, and how many injected
+        // failures each has absorbed.
+        let mut pending: Vec<usize> = (0..n).collect();
+        let mut attempts: Vec<u32> = vec![0; n];
+        while !pending.is_empty() {
+            for &p in &pending {
+                self.inner.submit(batch[p].1.clone());
+            }
+            let ran = self.inner.run();
+            let mut retry = Vec::new();
+            for (&p, r) in pending.iter().zip(ran) {
+                let gi = batch[p].0;
+                let (r, injected, dup) = self.inject(gi, r);
+                if dup {
+                    // Duplicated response: run the job again and hold the
+                    // copies to the purity contract duplicates rest on.
+                    let copy = self.rerun(&batch[p].1);
+                    let identical = match (&r, &copy) {
+                        (Ok(a), Ok(b)) => a == b,
+                        (Err(_), Err(_)) => true, // both failed: no logits
+                        _ => false,
+                    };
+                    if !identical {
+                        results[p] = Some(Err(SimError::Remote {
+                            msg: format!(
+                                "chaos: duplicated responses diverged at \
+                                 job {gi} — job is not pure"
+                            ),
+                            kind: RemoteKind::Fatal,
+                        }));
+                        continue;
+                    }
+                }
+                if injected {
+                    attempts[p] += 1;
+                    if attempts[p] > CHAOS_EXEC_RETRIES {
+                        let msg = match &r {
+                            Err(SimError::Remote { msg, .. }) => msg.clone(),
+                            _ => "injected failure".to_string(),
+                        };
+                        results[p] = Some(Err(SimError::Remote {
+                            msg: format!(
+                                "retry budget exhausted after {} attempts: \
+                                 {msg}",
+                                attempts[p]
+                            ),
+                            kind: RemoteKind::Fatal,
+                        }));
+                    } else {
+                        retry.push(p);
+                    }
+                } else {
+                    results[p] = Some(r);
+                }
+            }
+            if !retry.is_empty() {
+                // Exponential backoff keyed on the round's deepest attempt.
+                let round = retry.iter().map(|&p| attempts[p]).max().unwrap();
+                std::thread::sleep(CHAOS_BACKOFF_BASE * (1 << (round - 1).min(6)));
+            }
+            pending = retry;
+        }
+        results
+            .into_iter()
+            .map(|r| r.expect("every job resolved"))
+            .collect()
+    }
+}
+
+/// Wrap `exec` with `plan` when a plan is present — the one helper every
+/// CLI entry point uses, so `--chaos` / `MARVEL_CHAOS` behave identically
+/// everywhere.
+pub fn wrap(
+    exec: Box<dyn Executor>,
+    plan: Option<&FaultPlan>,
+) -> Box<dyn Executor> {
+    match plan {
+        Some(p) if !p.is_empty() => Box::new(ChaosExec::new(exec, p)),
+        _ => exec,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_roundtrip() {
+        let s = "worker:kill@4,worker:corrupt@2,worker:transient@6x2,\
+                 worker:hydrate@1,worker:delay@3:50,worker:dup@5,\
+                 transient@7,delay@0:10,dup@9x3";
+        let plan = FaultPlan::parse(s).unwrap();
+        assert_eq!(plan.faults.len(), 9);
+        let rendered = plan.to_string();
+        assert_eq!(FaultPlan::parse(&rendered).unwrap(), plan);
+        assert_eq!(rendered, s.replace(" ", "").replace("\n", ""));
+    }
+
+    #[test]
+    fn plan_rejects_garbage() {
+        for bad in [
+            "explode@3",
+            "kill",
+            "kill@x",
+            "kill@3:50",          // only delay takes :MS
+            "delay@3",            // delay needs :MS
+            "transient@1x0",      // xK needs K ≥ 1
+            "seed:42",            // seed needs :N
+            "seed:x:3",
+            "worker:kill@",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad:?} must not parse");
+        }
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse(" , ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn seed_expansion_is_deterministic() {
+        let a = FaultPlan::parse("seed:42:8").unwrap();
+        let b = FaultPlan::parse("seed:42:8").unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.faults.len(), 8);
+        let c = FaultPlan::parse("seed:43:8").unwrap();
+        assert_ne!(a, c, "different seeds must differ");
+        // Generated faults are exec-site and never death-causing.
+        for f in &a.faults {
+            assert_eq!(f.site, Site::Exec);
+            assert!(!matches!(f.kind, FaultKind::Kill | FaultKind::Corrupt));
+        }
+        // Round-trips through the expanded rendering.
+        assert_eq!(FaultPlan::parse(&a.to_string()).unwrap(), a);
+    }
+
+    #[test]
+    fn strip_one_shot_removes_worker_deaths_only() {
+        let plan = FaultPlan::parse(
+            "worker:kill@1,worker:corrupt@2,worker:transient@3,kill@4",
+        )
+        .unwrap();
+        let stripped = plan.strip_one_shot();
+        assert_eq!(
+            stripped.to_string(),
+            "worker:transient@3,kill@4",
+            "worker kill/corrupt stripped; exec faults and worker \
+             transients kept"
+        );
+    }
+
+    #[test]
+    fn worker_chaos_fires_at_most_count_times() {
+        let plan = FaultPlan::parse("worker:transient@5x2,worker:dup@5").unwrap();
+        let mut ch = WorkerChaos::new(&plan).unwrap();
+        assert!(ch.actions(4).is_empty());
+        let first = ch.actions(5);
+        assert_eq!(first.len(), 2);
+        assert!(matches!(first[0], WorkerAction::ErrorResult(_)));
+        assert_eq!(first[1], WorkerAction::Dup);
+        let second = ch.actions(5);
+        assert_eq!(second.len(), 1, "dup exhausted, transient has one left");
+        assert!(ch.actions(5).is_empty(), "both exhausted");
+    }
+
+    #[test]
+    fn worker_action_order_is_canonical() {
+        let plan =
+            FaultPlan::parse("worker:dup@1,worker:delay@1:5,worker:kill@1")
+                .unwrap();
+        let mut ch = WorkerChaos::new(&plan).unwrap();
+        let acts = ch.actions(1);
+        assert!(matches!(acts[0], WorkerAction::Delay(_)));
+        assert_eq!(acts[1], WorkerAction::Kill);
+        assert_eq!(acts[2], WorkerAction::Dup);
+    }
+}

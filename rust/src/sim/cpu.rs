@@ -45,8 +45,56 @@ pub enum SimError {
     /// ([`crate::sim::shard`]): the original error arrives as its rendered
     /// message, so it stays a `SimError` for the coordinator-side plumbing
     /// (`PreparedFlow::finish`) without the wire having to encode every
-    /// variant structurally.
-    Remote { msg: String },
+    /// variant structurally.  `kind` classifies the failure for the retry
+    /// machinery: [`RemoteKind::Retryable`] failures may be re-dispatched
+    /// within the pool's retry budget, [`RemoteKind::Fatal`] failures
+    /// surface immediately at the job's submission index.
+    Remote { msg: String, kind: RemoteKind },
+}
+
+/// Classification of a [`SimError::Remote`] failure (DESIGN.md §16).
+///
+/// The shard wire carries errors as rendered strings, so the
+/// classification rides *in* the message: any message containing the
+/// [`RemoteKind::TRANSIENT_MARKER`] substring is [`RemoteKind::Retryable`];
+/// everything else — deterministic simulator faults (watchdog, memory
+/// fault, decode), fingerprint mismatches, protocol violations — is
+/// [`RemoteKind::Fatal`].  Deterministic faults would reproduce on every
+/// retry, so retrying them only burns budget and delays the caller.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RemoteKind {
+    /// Deterministic: every retry reproduces it.  Surface immediately.
+    Fatal,
+    /// Environmental (I/O hiccup, injected chaos, transient hydration
+    /// failure): a retry on a fresh dispatch may succeed.
+    Retryable,
+}
+
+impl RemoteKind {
+    /// Substring that marks a wire error message as retryable.  Producers
+    /// (worker-side transient failures, chaos injection) embed it;
+    /// [`RemoteKind::classify`] keys on it.
+    pub const TRANSIENT_MARKER: &'static str = "transient";
+
+    /// Classify a wire error message: retryable iff it carries the
+    /// [`Self::TRANSIENT_MARKER`] substring.
+    pub fn classify(msg: &str) -> RemoteKind {
+        if msg.contains(Self::TRANSIENT_MARKER) {
+            RemoteKind::Retryable
+        } else {
+            RemoteKind::Fatal
+        }
+    }
+}
+
+impl SimError {
+    /// Build a [`SimError::Remote`] with its kind derived from the message
+    /// via [`RemoteKind::classify`] — the one constructor every wire-error
+    /// site uses, so classification can never drift between call sites.
+    pub fn remote(msg: String) -> SimError {
+        let kind = RemoteKind::classify(&msg);
+        SimError::Remote { msg, kind }
+    }
 }
 
 impl std::fmt::Display for SimError {
@@ -71,7 +119,7 @@ impl std::fmt::Display for SimError {
                 write!(f, "watchdog: exceeded {max_instrs} instructions")
             }
             SimError::Break { pc } => write!(f, "ebreak at pc {pc:#x}"),
-            SimError::Remote { msg } => write!(f, "shard worker: {msg}"),
+            SimError::Remote { msg, .. } => write!(f, "shard worker: {msg}"),
         }
     }
 }

@@ -89,6 +89,7 @@ pub struct RawJob {
 }
 
 /// How a [`JobSpec`] describes its work.
+#[derive(Clone)]
 pub enum Work {
     /// By reference — the wire form ([`JobDesc`]: model/variant names,
     /// input image, watchdog budget, compilation fingerprints).  `hydrated`
@@ -108,6 +109,7 @@ pub enum Work {
 /// One simulation job, in the one form every [`Executor`] accepts — this
 /// subsumes the old `Job` (as [`Work::Raw`]) / `JobDesc` (as
 /// [`Work::Named`]) duality.
+#[derive(Clone)]
 pub struct JobSpec {
     pub work: Work,
 }
@@ -553,7 +555,7 @@ impl Executor for LocalExec {
             .iter()
             .enumerate()
             .map(|(i, j)| match j {
-                Err(msg) => Err(SimError::Remote { msg: msg.clone() }),
+                Err(msg) => Err(SimError::remote(msg.clone())),
                 // SAFETY: every worker has quiesced — the done tokens
                 // above synchronize with their slot writes — and slot i
                 // was written only by the worker that claimed i.
@@ -647,7 +649,7 @@ impl Executor for ShardExec {
             .into_iter()
             .map(|r| match r {
                 Ok(i) => ran[i].take().expect("one result per dispatched job"),
-                Err(msg) => Err(SimError::Remote { msg }),
+                Err(msg) => Err(SimError::remote(msg)),
             })
             .collect()
     }
@@ -762,7 +764,7 @@ mod tests {
         assert!(rs[0].is_ok());
         assert!(matches!(rs[1], Err(SimError::Mem { .. })));
         match &rs[2] {
-            Err(SimError::Remote { msg }) => {
+            Err(SimError::Remote { msg, .. }) => {
                 assert!(msg.contains("synth:nope"), "{msg}")
             }
             other => panic!("expected hydration error, got {other:?}"),

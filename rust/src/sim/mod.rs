@@ -24,6 +24,7 @@
 //! (persistent in-process pool) and `ShardExec` (process pool) as the two
 //! current backends, selected by a `--backend local[:T]|shard:N` spec.
 
+pub mod chaos;
 pub mod cpu;
 pub mod engine;
 pub mod exec;
@@ -34,7 +35,8 @@ pub mod program;
 pub mod serve;
 pub mod shard;
 
-pub use cpu::{Machine, RunStats, Sim, SimError};
+pub use chaos::{ChaosExec, FaultPlan};
+pub use cpu::{Machine, RemoteKind, RunStats, Sim, SimError};
 pub use engine::{default_lanes, lanes_override, run_batch, run_job,
                  run_job_on, run_job_pooled, run_lane_pack, Job, JobOutput,
                  MAX_LANES};
@@ -44,8 +46,9 @@ pub use hooks::{NopHook, RetireHook, TraceHook};
 pub use lowered::LoweredProgram;
 pub use memory::Memory;
 pub use program::Program;
-pub use serve::{Client, PolicyKind, Reply, SchedPolicy, ServeModel,
-                ServeOptions, ServeReport, Server, SloReport};
+pub use serve::{Client, PolicyKind, Reply, ReqMeta, SchedPolicy, ServeError,
+                ServeModel, ServeOptions, ServeReport, Server, SloReport,
+                Ticket};
 pub use shard::{JobDesc, ShardPool, WorkerCmd};
 
 /// A processor variant = which ISA extensions are enabled (paper Table 1).

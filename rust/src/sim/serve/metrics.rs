@@ -11,9 +11,20 @@
 //! envelope, far below scheduling noise).  Admission rejections are
 //! counted per key next to the latency data, so a tenant's SLO row shows
 //! both how fast it was served and how much of its load was shed.
+//!
+//! Two robustness additions (DESIGN.md §16): per-request **deadline
+//! accounting** (met / missed / shed-at-admission, summarized as
+//! *goodput* — the fraction of deadline-carrying requests that made
+//! their deadline), and **windowed rollover** — with a window configured
+//! (`--slo-window-ms`) the recorder keeps a second, recent-window set of
+//! histograms and [`Metrics::roll_if_due`] snapshots + resets it
+//! periodically, so a long-running server can report *recent*
+//! p50/p95/p99/attainment instead of lifetime aggregates that stale
+//! history dominates.  The lifetime report is unchanged and still what
+//! shutdown returns.
 
 use std::collections::BTreeMap;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::util::json::{ObjBuilder, Value};
 use crate::util::tables::Table;
@@ -22,7 +33,7 @@ use crate::util::tables::Table;
 /// sub-µs samples); the last bucket absorbs everything beyond.
 const N_BUCKETS: usize = 32;
 
-/// One model's latency histogram + admission/failure counters.
+/// One model's latency histogram + admission/failure/deadline counters.
 #[derive(Clone, Debug, Default)]
 pub(crate) struct Hist {
     buckets: [u64; N_BUCKETS],
@@ -32,6 +43,12 @@ pub(crate) struct Hist {
     under_slo: u64,
     rejected: u64,
     errored: u64,
+    /// Shed at admission because the deadline was already infeasible.
+    shed: u64,
+    /// Served deadline-carrying requests that made their deadline.
+    dl_met: u64,
+    /// Served deadline-carrying requests that replied past it.
+    dl_missed: u64,
 }
 
 impl Hist {
@@ -40,7 +57,12 @@ impl Hist {
         ((64 - us.max(1).leading_zeros() as usize) - 1).min(N_BUCKETS - 1)
     }
 
-    fn record(&mut self, latency: Duration, slo: Option<Duration>) {
+    fn record(
+        &mut self,
+        latency: Duration,
+        slo: Option<Duration>,
+        deadline_met: Option<bool>,
+    ) {
         let us = latency.as_micros().min(u128::from(u64::MAX)) as u64;
         self.buckets[Self::bucket_of(us)] += 1;
         self.count += 1;
@@ -48,6 +70,11 @@ impl Hist {
         self.max_us = self.max_us.max(us);
         if slo.is_some_and(|s| latency <= s) {
             self.under_slo += 1;
+        }
+        match deadline_met {
+            Some(true) => self.dl_met += 1,
+            Some(false) => self.dl_missed += 1,
+            None => {}
         }
     }
 
@@ -76,67 +103,148 @@ impl Hist {
     }
 }
 
+/// Rollover state for the recent-window histograms (`--slo-window-ms`).
+struct WindowState {
+    len: Duration,
+    started: Instant,
+    /// Completed-window ordinal (1-based in emitted snapshots).
+    rolled: u64,
+    recent: BTreeMap<String, Hist>,
+}
+
 /// Accumulates per-model service data on the dispatcher thread.
 pub(crate) struct Metrics {
     slo: Option<Duration>,
     per_model: BTreeMap<String, Hist>,
+    window: Option<WindowState>,
+}
+
+/// The key's histogram in `map`; allocates the `String` key only on a
+/// model's first event, keeping steady-state recording allocation-free.
+fn hist_of<'m>(map: &'m mut BTreeMap<String, Hist>, key: &str) -> &'m mut Hist {
+    if map.contains_key(key) {
+        return map.get_mut(key).unwrap();
+    }
+    map.entry(key.to_string()).or_default()
 }
 
 impl Metrics {
-    pub(crate) fn new(slo: Option<Duration>) -> Metrics {
-        Metrics { slo, per_model: BTreeMap::new() }
-    }
-
-    /// The key's histogram; allocates the `String` key only on a model's
-    /// first event, keeping steady-state recording allocation-free.
-    fn hist_mut(&mut self, key: &str) -> &mut Hist {
-        if self.per_model.contains_key(key) {
-            return self.per_model.get_mut(key).unwrap();
+    pub(crate) fn new(
+        slo: Option<Duration>,
+        window: Option<Duration>,
+    ) -> Metrics {
+        Metrics {
+            slo,
+            per_model: BTreeMap::new(),
+            window: window.filter(|w| !w.is_zero()).map(|len| WindowState {
+                len,
+                started: Instant::now(),
+                rolled: 0,
+                recent: BTreeMap::new(),
+            }),
         }
-        self.per_model.entry(key.to_string()).or_default()
     }
 
-    pub(crate) fn record(&mut self, key: &str, latency: Duration) {
+    /// Apply one event to the lifetime histogram and, when a window is
+    /// configured, to the recent-window histogram too.
+    fn each_hist(&mut self, key: &str, f: impl Fn(&mut Hist)) {
+        f(hist_of(&mut self.per_model, key));
+        if let Some(w) = &mut self.window {
+            f(hist_of(&mut w.recent, key));
+        }
+    }
+
+    /// `deadline_met` is `Some` for deadline-carrying requests: whether
+    /// the reply landed inside the deadline (goodput accounting).
+    pub(crate) fn record(
+        &mut self,
+        key: &str,
+        latency: Duration,
+        deadline_met: Option<bool>,
+    ) {
         let slo = self.slo;
-        self.hist_mut(key).record(latency, slo);
+        self.each_hist(key, |h| h.record(latency, slo, deadline_met));
     }
 
     pub(crate) fn reject(&mut self, key: &str) {
-        self.hist_mut(key).rejected += 1;
+        self.each_hist(key, |h| h.rejected += 1);
+    }
+
+    /// A deadline-carrying request shed at admission because it could not
+    /// make its deadline (counts against goodput, separate from queue-full
+    /// rejections).
+    pub(crate) fn shed(&mut self, key: &str) {
+        self.each_hist(key, |h| h.shed += 1);
     }
 
     /// A dispatched job that answered with an engine error (watchdog,
     /// memory fault, remote failure): the caller got a reply, but not
     /// logits — kept out of the latency histogram and `served`.
     pub(crate) fn error(&mut self, key: &str) {
-        self.hist_mut(key).errored += 1;
+        self.each_hist(key, |h| h.errored += 1);
+    }
+
+    /// Roll the recent window if one is configured and due: returns the
+    /// completed window's snapshot (when it saw any event) and resets the
+    /// recent histograms.  The lifetime report is untouched.
+    pub(crate) fn roll_if_due(&mut self, now: Instant) -> Option<SloReport> {
+        let slo = self.slo;
+        let w = self.window.as_mut()?;
+        if now.saturating_duration_since(w.started) < w.len {
+            return None;
+        }
+        w.started = now;
+        w.rolled += 1;
+        if w.recent.is_empty() {
+            return None; // idle window: nothing to report
+        }
+        let mut report = report_of(slo, &w.recent);
+        report.window = Some(w.rolled);
+        w.recent.clear();
+        Some(report)
     }
 
     pub(crate) fn report(&self) -> SloReport {
-        SloReport {
-            slo_ms: self.slo.map(|s| s.as_secs_f64() * 1e3),
-            rows: self
-                .per_model
-                .iter()
-                .map(|(key, h)| ModelStats {
-                    key: key.clone(),
-                    served: h.count,
-                    rejected: h.rejected,
-                    errored: h.errored,
-                    p50_ms: h.quantile_us(0.50) / 1e3,
-                    p95_ms: h.quantile_us(0.95) / 1e3,
-                    p99_ms: h.quantile_us(0.99) / 1e3,
-                    mean_ms: if h.count == 0 {
-                        0.0
-                    } else {
-                        h.sum_us as f64 / h.count as f64 / 1e3
-                    },
-                    max_ms: h.max_us as f64 / 1e3,
-                    attainment: (self.slo.is_some() && h.count > 0)
-                        .then(|| h.under_slo as f64 / h.count as f64),
-                })
-                .collect(),
-        }
+        report_of(self.slo, &self.per_model)
+    }
+}
+
+/// Build an [`SloReport`] from one histogram set (lifetime or a window).
+fn report_of(
+    slo: Option<Duration>,
+    per_model: &BTreeMap<String, Hist>,
+) -> SloReport {
+    SloReport {
+        slo_ms: slo.map(|s| s.as_secs_f64() * 1e3),
+        window: None,
+        rows: per_model
+            .iter()
+            .map(|(key, h)| ModelStats {
+                key: key.clone(),
+                served: h.count,
+                rejected: h.rejected,
+                errored: h.errored,
+                shed: h.shed,
+                deadline_met: h.dl_met,
+                deadline_missed: h.dl_missed,
+                p50_ms: h.quantile_us(0.50) / 1e3,
+                p95_ms: h.quantile_us(0.95) / 1e3,
+                p99_ms: h.quantile_us(0.99) / 1e3,
+                mean_ms: if h.count == 0 {
+                    0.0
+                } else {
+                    h.sum_us as f64 / h.count as f64 / 1e3
+                },
+                max_ms: h.max_us as f64 / 1e3,
+                attainment: (slo.is_some() && h.count > 0)
+                    .then(|| h.under_slo as f64 / h.count as f64),
+                goodput: {
+                    let dl_total = h.dl_met + h.dl_missed + h.shed;
+                    (dl_total > 0)
+                        .then(|| h.dl_met as f64 / dl_total as f64)
+                },
+            })
+            .collect(),
     }
 }
 
@@ -148,11 +256,17 @@ pub struct ModelStats {
     /// Requests served (replied with logits); only these feed the
     /// latency quantiles.
     pub served: u64,
-    /// Requests shed at admission (queue full).
+    /// Requests rejected at admission (queue full).
     pub rejected: u64,
     /// Dispatched requests whose engine job failed (replied with an
     /// error, not logits).
     pub errored: u64,
+    /// Deadline-carrying requests shed at admission as infeasible.
+    pub shed: u64,
+    /// Served deadline-carrying requests that made their deadline.
+    pub deadline_met: u64,
+    /// Served deadline-carrying requests that replied past it.
+    pub deadline_missed: u64,
     pub p50_ms: f64,
     pub p95_ms: f64,
     pub p99_ms: f64,
@@ -161,6 +275,9 @@ pub struct ModelStats {
     /// Fraction of served requests within the SLO (`--slo-ms`); `None`
     /// when no SLO was configured or nothing was served.
     pub attainment: Option<f64>,
+    /// Goodput under deadline: `met / (met + missed + shed)` over the
+    /// deadline-carrying requests; `None` when none carried a deadline.
+    pub goodput: Option<f64>,
 }
 
 /// The per-model latency/SLO report a server hands back on shutdown.
@@ -168,6 +285,9 @@ pub struct ModelStats {
 pub struct SloReport {
     /// The configured SLO target, if any.
     pub slo_ms: Option<f64>,
+    /// `Some(n)` when this is the n-th *windowed* snapshot
+    /// (`--slo-window-ms`) rather than the lifetime report.
+    pub window: Option<u64>,
     /// One row per `(model, variant)` key, sorted by key.
     pub rows: Vec<ModelStats>,
 }
@@ -175,13 +295,17 @@ pub struct SloReport {
 impl SloReport {
     /// Rendered table for logs/stderr.
     pub fn render(&self) -> String {
-        let title = match self.slo_ms {
+        let mut title = match self.slo_ms {
             Some(slo) => format!("serve SLO report — target {slo:.1} ms"),
             None => "serve latency report — no SLO configured".to_string(),
         };
+        if let Some(n) = self.window {
+            title.push_str(&format!(" (window #{n})"));
+        }
         let mut t = Table::new(&[
-            "model@variant", "served", "rejected", "errored", "p50 ms",
-            "p95 ms", "p99 ms", "mean ms", "max ms", "SLO att.",
+            "model@variant", "served", "rejected", "errored", "shed",
+            "p50 ms", "p95 ms", "p99 ms", "mean ms", "max ms", "SLO att.",
+            "goodput",
         ])
         .with_title(&title);
         for r in &self.rows {
@@ -190,6 +314,7 @@ impl SloReport {
                 r.served.to_string(),
                 r.rejected.to_string(),
                 r.errored.to_string(),
+                r.shed.to_string(),
                 format!("{:.3}", r.p50_ms),
                 format!("{:.3}", r.p95_ms),
                 format!("{:.3}", r.p99_ms),
@@ -197,6 +322,10 @@ impl SloReport {
                 format!("{:.3}", r.max_ms),
                 match r.attainment {
                     Some(a) => format!("{:.1}%", a * 100.0),
+                    None => "-".to_string(),
+                },
+                match r.goodput {
+                    Some(g) => format!("{:.1}%", g * 100.0),
                     None => "-".to_string(),
                 },
             ]);
@@ -213,27 +342,36 @@ impl SloReport {
             .rows
             .iter()
             .map(|r| {
-                let b = ObjBuilder::new()
+                let mut b = ObjBuilder::new()
                     .set("key", r.key.as_str())
                     .set("served", r.served)
                     .set("rejected", r.rejected)
                     .set("errored", r.errored)
+                    .set("shed", r.shed)
+                    .set("deadline_met", r.deadline_met)
+                    .set("deadline_missed", r.deadline_missed)
                     .set("p50_ms", r.p50_ms)
                     .set("p95_ms", r.p95_ms)
                     .set("p99_ms", r.p99_ms)
                     .set("mean_ms", r.mean_ms)
                     .set("max_ms", r.max_ms);
-                match r.attainment {
-                    Some(a) => b.set("slo_attainment", a).build(),
-                    None => b.build(),
+                if let Some(a) = r.attainment {
+                    b = b.set("slo_attainment", a);
                 }
+                if let Some(g) = r.goodput {
+                    b = b.set("goodput", g);
+                }
+                b.build()
             })
             .collect();
-        let b = ObjBuilder::new().set("rows", rows);
-        match self.slo_ms {
-            Some(slo) => b.set("slo_ms", slo).build(),
-            None => b.build(),
+        let mut b = ObjBuilder::new().set("rows", rows);
+        if let Some(slo) = self.slo_ms {
+            b = b.set("slo_ms", slo);
         }
+        if let Some(n) = self.window {
+            b = b.set("window", n);
+        }
+        b.build()
     }
 }
 
@@ -261,10 +399,10 @@ mod tests {
         let mut h = Hist::default();
         // 90 fast samples (~1 ms), 10 slow (~64 ms).
         for _ in 0..90 {
-            h.record(ms(1), None);
+            h.record(ms(1), None, None);
         }
         for _ in 0..10 {
-            h.record(ms(64), None);
+            h.record(ms(64), None, None);
         }
         let p50 = h.quantile_us(0.50) / 1e3;
         let p99 = h.quantile_us(0.99) / 1e3;
@@ -283,13 +421,13 @@ mod tests {
 
     #[test]
     fn slo_attainment_counts_at_record_time() {
-        let mut m = Metrics::new(Some(ms(10)));
-        m.record("a@v4", ms(2));
-        m.record("a@v4", ms(4));
-        m.record("a@v4", ms(50));
+        let mut m = Metrics::new(Some(ms(10)), None);
+        m.record("a@v4", ms(2), None);
+        m.record("a@v4", ms(4), None);
+        m.record("a@v4", ms(50), None);
         m.reject("a@v4");
         m.error("a@v4");
-        m.record("b@v0", ms(1));
+        m.record("b@v0", ms(1), None);
         let r = m.report();
         assert_eq!(r.slo_ms, Some(10.0));
         assert_eq!(r.rows.len(), 2);
@@ -301,6 +439,7 @@ mod tests {
         let att = a.attainment.unwrap();
         assert!((att - 2.0 / 3.0).abs() < 1e-9, "{att}");
         assert!(a.max_ms >= 50.0 && a.max_ms < 51.0);
+        assert_eq!(a.goodput, None, "no deadline-carrying requests");
         // Render + JSON smoke: every row appears.
         let text = r.render();
         assert!(text.contains("a@v4") && text.contains("b@v0"), "{text}");
@@ -311,11 +450,68 @@ mod tests {
 
     #[test]
     fn no_slo_means_no_attainment_column() {
-        let mut m = Metrics::new(None);
-        m.record("a@v4", ms(2));
+        let mut m = Metrics::new(None, None);
+        m.record("a@v4", ms(2), None);
         let r = m.report();
         assert_eq!(r.slo_ms, None);
         assert_eq!(r.rows[0].attainment, None);
         assert!(r.to_json().get_opt("slo_ms").is_none());
+    }
+
+    #[test]
+    fn goodput_counts_met_missed_and_shed() {
+        let mut m = Metrics::new(None, None);
+        m.record("a@v4", ms(2), Some(true));
+        m.record("a@v4", ms(2), Some(true));
+        m.record("a@v4", ms(30), Some(false));
+        m.shed("a@v4");
+        let r = m.report();
+        let a = &r.rows[0];
+        assert_eq!(
+            (a.served, a.shed, a.deadline_met, a.deadline_missed),
+            (3, 1, 2, 1)
+        );
+        let g = a.goodput.unwrap();
+        assert!((g - 0.5).abs() < 1e-9, "2 met of 4 deadline-carrying: {g}");
+        let j = r.to_json();
+        let row = &j.get("rows").unwrap().as_arr().unwrap()[0];
+        assert_eq!(row.get("shed").unwrap().as_u64().unwrap(), 1);
+        assert_eq!(row.get("goodput").unwrap().as_f64().unwrap(), 0.5);
+    }
+
+    #[test]
+    fn window_rollover_snapshots_recent_not_lifetime() {
+        let mut m = Metrics::new(Some(ms(10)), Some(ms(100)));
+        let t0 = Instant::now();
+        // Window 1: two slow samples.
+        m.record("a@v4", ms(50), None);
+        m.record("a@v4", ms(50), None);
+        assert!(m.roll_if_due(t0).is_none(), "not due yet");
+        let snap = m.roll_if_due(t0 + ms(150)).unwrap();
+        assert_eq!(snap.window, Some(1));
+        assert_eq!(snap.rows[0].served, 2);
+        assert!(snap.rows[0].p50_ms > 10.0, "window 1 is slow");
+        // Window 2: one fast sample — the snapshot must NOT be dominated
+        // by window 1's history.
+        m.record("a@v4", ms(1), None);
+        let snap = m.roll_if_due(t0 + ms(300)).unwrap();
+        assert_eq!(snap.window, Some(2));
+        assert_eq!(snap.rows[0].served, 1, "recent only");
+        assert!(snap.rows[0].p50_ms <= 2.0, "window 2 is fast: {snap:?}");
+        // An idle window yields no snapshot (but still advances).
+        assert!(m.roll_if_due(t0 + ms(500)).is_none());
+        // The lifetime report still aggregates everything.
+        let life = m.report();
+        assert_eq!(life.window, None);
+        assert_eq!(life.rows[0].served, 3);
+    }
+
+    #[test]
+    fn no_window_configured_never_rolls() {
+        let mut m = Metrics::new(None, None);
+        m.record("a@v4", ms(1), None);
+        assert!(m
+            .roll_if_due(Instant::now() + ms(1 << 20))
+            .is_none());
     }
 }

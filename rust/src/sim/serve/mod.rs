@@ -26,6 +26,19 @@
 //! which batch a request rides in — never logits or `RunStats`
 //! (`tests/serve_sched.rs`, `tests/shard.rs`, the exec conformance
 //! suite).
+//!
+//! Overload contract (DESIGN.md §16): requests may carry a
+//! **deadline** (`"deadline_ms"`) and a **priority** (`"priority"`,
+//! 0–255) that the EDF policy ([`policy::Edf`]) schedules by; a
+//! deadline-carrying request that *cannot* make its deadline — already
+//! past it, or past it once the EWMA-estimated batch cost is added — is
+//! **shed at admission** with a structured `deadline` error instead of
+//! wasting a job slot; a full per-model queue **rejects** with an
+//! `overload` error carrying a `retry_after_ms` hint; and a full
+//! submission channel **backpressures** the same way without blocking.
+//! Every error is a typed [`ServeError`] (kind + message +
+//! optional retry-after), rendered as a JSON object on the line
+//! protocol, so clients can back off instead of tearing down.
 
 pub mod metrics;
 pub mod policy;
@@ -37,6 +50,7 @@ pub use queue::{Pending, QueueSet};
 
 use std::collections::HashMap;
 use std::io::{BufRead, Write};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -72,6 +86,12 @@ pub struct ServeOptions {
     pub policy: PolicyKind,
     /// Latency target for the SLO-attainment column of the final report.
     pub slo: Option<Duration>,
+    /// Windowed-snapshot period (`--slo-window-ms`): when set, the
+    /// dispatcher emits a *recent-traffic* SLO snapshot to stderr every
+    /// time the window elapses (and resets the windowed counters), on
+    /// top of the lifetime report [`Server::join`] returns.  `None`
+    /// keeps the legacy lifetime-only accounting.
+    pub slo_window: Option<Duration>,
 }
 
 impl Default for ServeOptions {
@@ -83,6 +103,7 @@ impl Default for ServeOptions {
             queue_cap: 1024,
             policy: PolicyKind::Fifo,
             slo: None,
+            slo_window: None,
         }
     }
 }
@@ -169,8 +190,75 @@ pub struct ServeReport {
     pub slo: SloReport,
 }
 
+/// A structured serve-side failure: a stable machine-readable `kind`, a
+/// human-readable message, and — for pressure errors the client should
+/// retry — a backoff hint.  This is the one error currency of the
+/// serving front: tickets resolve to it ([`Ticket::wait_detailed`]) and
+/// the line protocol renders it as a JSON object
+/// (`{"error":{"kind":..,"msg":..[,"retry_after_ms":..]}}`), so a client
+/// can tell *transient pressure* (`overload` — back off and retry) from
+/// *final answers* (`deadline`, `bad_request`, `unknown_model`,
+/// `bad_input`) and *server faults* (`exec`, `internal`).
+#[derive(Clone, Debug)]
+pub struct ServeError {
+    /// Stable classification: `unknown_model`, `bad_input`,
+    /// `bad_request`, `overload`, `deadline`, `exec` or `internal`.
+    pub kind: &'static str,
+    pub msg: String,
+    /// Backoff hint for retryable pressure (`overload`): how long to
+    /// wait before resubmitting, derived from the EWMA batch cost.
+    pub retry_after_ms: Option<u64>,
+}
+
+impl ServeError {
+    fn new(kind: &'static str, msg: impl Into<String>) -> ServeError {
+        ServeError { kind, msg: msg.into(), retry_after_ms: None }
+    }
+
+    fn retry_after(mut self, ms: u64) -> ServeError {
+        self.retry_after_ms = Some(ms);
+        self
+    }
+
+    /// The wire shape of this error (the line protocol's `"error"` value).
+    pub fn to_json(&self) -> json::Value {
+        let b = ObjBuilder::new()
+            .set("kind", self.kind)
+            .set("msg", self.msg.as_str());
+        match self.retry_after_ms {
+            Some(ms) => b.set("retry_after_ms", ms).build(),
+            None => b.build(),
+        }
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if let Some(ms) = self.retry_after_ms {
+            write!(f, "; retry after {ms} ms")?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for ServeError {}
+
 /// Where a request's reply — or its structured error — goes.
-pub(crate) type ReplyTx = mpsc::Sender<Result<Reply, String>>;
+pub(crate) type ReplyTx = mpsc::Sender<Result<Reply, ServeError>>;
+
+/// Per-request scheduling metadata ([`Client::submit_with`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ReqMeta {
+    /// Completion deadline, relative to submission.  Drives EDF ordering
+    /// ([`policy::Edf`]) and admission-time shedding; `None` means "no
+    /// deadline" (never shed, scheduled after every deadline-carrying
+    /// request under EDF).
+    pub deadline: Option<Duration>,
+    /// Priority 0–255 (higher is more urgent); tie-breaks equal
+    /// deadlines under EDF.
+    pub priority: u8,
+}
 
 /// A freshly-submitted request, before validation/admission.
 struct Submit {
@@ -182,19 +270,31 @@ struct Submit {
     /// dispatcher is busy executing a batch (the overload regime is
     /// exactly what the SLO report exists to measure).
     submitted: Instant,
+    /// Absolute deadline (`submitted + meta.deadline`), resolved at
+    /// submission so queue data never needs a clock.
+    deadline: Option<Instant>,
+    priority: u8,
 }
 
-/// A ticket for an in-flight request: redeem with [`Ticket::wait`].
-pub struct Ticket(mpsc::Receiver<Result<Reply, String>>);
+/// A ticket for an in-flight request: redeem with [`Ticket::wait`] (or
+/// [`Ticket::wait_detailed`] for the typed error).
+pub struct Ticket(mpsc::Receiver<Result<Reply, ServeError>>);
 
 impl Ticket {
     /// Block until the batch containing this request has run (or the
-    /// request was rejected: unknown key, bad input size, queue full).
+    /// request was rejected: unknown key, bad input size, queue full,
+    /// infeasible deadline).
     pub fn wait(self) -> Result<Reply> {
-        self.0
-            .recv()
-            .map_err(|_| anyhow!("serve dispatcher dropped the request"))?
-            .map_err(|e| anyhow!(e))
+        self.wait_detailed().map_err(|e| anyhow!(e))
+    }
+
+    /// [`Ticket::wait`], keeping the structured [`ServeError`] so callers
+    /// can branch on [`ServeError::kind`] / honor
+    /// [`ServeError::retry_after_ms`].
+    pub fn wait_detailed(self) -> Result<Reply, ServeError> {
+        self.0.recv().map_err(|_| {
+            ServeError::new("internal", "serve dispatcher dropped the request")
+        })?
     }
 }
 
@@ -210,26 +310,52 @@ const SUBMIT_CHANNEL_CAP: usize = 1 << 16;
 #[derive(Clone)]
 pub struct Client {
     tx: mpsc::SyncSender<Submit>,
+    /// EWMA batch cost in µs, published by the dispatcher — the basis of
+    /// the `retry_after_ms` hint on backpressure errors.
+    cost_us: Arc<AtomicU64>,
 }
 
 impl Client {
     /// Enqueue an inference without blocking on its execution.
     pub fn submit(&self, key: &str, input: Vec<u8>) -> Result<Ticket> {
+        self.submit_with(key, input, ReqMeta::default())
+            .map_err(|e| anyhow!(e))
+    }
+
+    /// [`Client::submit`] with scheduling metadata (deadline/priority).
+    /// A full submission channel is *backpressure*, not a panic: the
+    /// error is `overload` with a `retry_after_ms` hint and the call
+    /// never blocks.
+    pub fn submit_with(
+        &self,
+        key: &str,
+        input: Vec<u8>,
+        meta: ReqMeta,
+    ) -> Result<Ticket, ServeError> {
         let (rtx, rrx) = mpsc::channel();
+        let submitted = Instant::now();
         self.tx
             .try_send(Submit {
                 key: key.to_string(),
                 input,
                 reply: rtx,
-                submitted: Instant::now(),
+                submitted,
+                deadline: meta.deadline.map(|d| submitted + d),
+                priority: meta.priority,
             })
             .map_err(|e| match e {
-                mpsc::TrySendError::Full(_) => anyhow!(
-                    "serve overloaded: {SUBMIT_CHANNEL_CAP} submissions \
-                     buffered ahead of admission control"
+                mpsc::TrySendError::Full(_) => ServeError::new(
+                    "overload",
+                    format!(
+                        "serve overloaded: {SUBMIT_CHANNEL_CAP} submissions \
+                         buffered ahead of admission control"
+                    ),
+                )
+                .retry_after(
+                    (self.cost_us.load(Ordering::Relaxed) / 1000).max(1),
                 ),
                 mpsc::TrySendError::Disconnected(_) => {
-                    anyhow!("serve dispatcher is gone")
+                    ServeError::new("internal", "serve dispatcher is gone")
                 }
             })?;
         Ok(Ticket(rrx))
@@ -260,9 +386,12 @@ impl Server {
         let (tx, rx) = mpsc::sync_channel::<Submit>(SUBMIT_CHANNEL_CAP);
         let registry: HashMap<String, ServeModel> =
             units.into_iter().map(|u| (u.key.clone(), u)).collect();
-        let handle =
-            std::thread::spawn(move || dispatcher(rx, registry, opts, exec));
-        (Server { handle }, Client { tx })
+        let cost_us = Arc::new(AtomicU64::new(0));
+        let cost = cost_us.clone();
+        let handle = std::thread::spawn(move || {
+            dispatcher(rx, registry, opts, exec, cost)
+        });
+        (Server { handle }, Client { tx, cost_us })
     }
 
     /// Wait for shutdown (all clients dropped); returns the serve report.
@@ -330,31 +459,40 @@ impl WindowTuner {
 /// Validate one submission against the registry and admit it into its
 /// queue; invalid or shed requests answer their ticket immediately and
 /// never occupy a job slot.
+///
+/// `cost_us` is the dispatcher's current EWMA batch cost: a request
+/// whose deadline cannot survive one more batch (`now + cost > deadline`)
+/// is **shed here**, before it consumes a queue slot or an engine lane —
+/// serving it would burn capacity on an answer the client already
+/// declared worthless.
 fn admit(
     sub: Submit,
     registry: &HashMap<String, ServeModel>,
     queues: &mut QueueSet,
     metrics: &mut Metrics,
     tuner: &mut WindowTuner,
+    cost_us: u64,
 ) {
     match registry.get(&sub.key) {
         None => {
-            let _ = sub.reply.send(Err(format!(
-                "unknown model key {:?} (available: {:?})",
-                sub.key,
-                {
+            let _ = sub.reply.send(Err(ServeError::new(
+                "unknown_model",
+                format!("unknown model key {:?} (available: {:?})", sub.key, {
                     let mut ks: Vec<&String> = registry.keys().collect();
                     ks.sort();
                     ks
-                }
+                }),
             )));
         }
         Some(u) if sub.input.len() != u.in_elems => {
-            let _ = sub.reply.send(Err(format!(
-                "{}: input is {} bytes, model wants {}",
-                sub.key,
-                sub.input.len(),
-                u.in_elems
+            let _ = sub.reply.send(Err(ServeError::new(
+                "bad_input",
+                format!(
+                    "{}: input is {} bytes, model wants {}",
+                    sub.key,
+                    sub.input.len(),
+                    u.in_elems
+                ),
             )));
         }
         Some(_) => {
@@ -362,24 +500,48 @@ fn admit(
             // (possibly batch-delayed) moment the dispatcher drains the
             // channel.
             tuner.observe(sub.submitted);
+            if let Some(dl) = sub.deadline {
+                let now = Instant::now();
+                if now + Duration::from_micros(cost_us) > dl {
+                    metrics.shed(&sub.key);
+                    let _ = sub.reply.send(Err(ServeError::new(
+                        "deadline",
+                        format!(
+                            "{}: shed at admission — deadline cannot be met \
+                             (estimated batch cost {:.1} ms)",
+                            sub.key,
+                            cost_us as f64 / 1e3
+                        ),
+                    )));
+                    return;
+                }
+            }
             if let Err((reply, msg)) = queues.admit(
                 sub.key.clone(),
                 sub.input,
                 sub.reply,
                 sub.submitted,
+                sub.deadline,
+                sub.priority,
             ) {
                 metrics.reject(&sub.key);
-                let _ = reply.send(Err(msg));
+                let _ = reply.send(Err(ServeError::new("overload", msg)
+                    .retry_after((cost_us / 1000).max(1))));
             }
         }
     }
 }
+
+/// EWMA smoothing factor for the batch-cost estimate that drives
+/// deadline shedding and `retry_after_ms` hints.
+const COST_EWMA_ALPHA: f64 = 0.2;
 
 fn dispatcher(
     rx: mpsc::Receiver<Submit>,
     registry: HashMap<String, ServeModel>,
     opts: ServeOptions,
     mut exec: Box<dyn Executor>,
+    shared_cost_us: Arc<AtomicU64>,
 ) -> ServeReport {
     let hint = BatchHint {
         max_batch: opts.max_batch.max(1),
@@ -387,9 +549,14 @@ fn dispatcher(
     };
     let mut policy = opts.policy.build();
     let mut queues = QueueSet::new(opts.queue_cap);
-    let mut metrics = Metrics::new(opts.slo);
+    let mut metrics = Metrics::new(opts.slo, opts.slo_window);
     let mut tuner = WindowTuner::new(&opts, &hint);
     let mut batch_seq: u64 = 0;
+    // EWMA of observed batch execution wall time, in µs.  0 = no data
+    // yet, which makes shedding maximally permissive at startup (only
+    // already-expired deadlines shed) — the estimate tightens as real
+    // batch costs arrive.
+    let mut cost_us: u64 = 0;
     // `false` once every Client is dropped: drain the backlog, then stop.
     let mut open = true;
     loop {
@@ -400,9 +567,10 @@ fn dispatcher(
             // Idle: block for the first request of the next batch, which
             // arms the (auto-tuned) window.
             match rx.recv() {
-                Ok(s) => {
-                    admit(s, &registry, &mut queues, &mut metrics, &mut tuner)
-                }
+                Ok(s) => admit(
+                    s, &registry, &mut queues, &mut metrics, &mut tuner,
+                    cost_us,
+                ),
                 Err(_) => break,
             }
             // Window collection.  Everything that has *already arrived* is
@@ -417,7 +585,7 @@ fn dispatcher(
                     match rx.try_recv() {
                         Ok(s) => admit(
                             s, &registry, &mut queues, &mut metrics,
-                            &mut tuner,
+                            &mut tuner, cost_us,
                         ),
                         Err(mpsc::TryRecvError::Empty) => break,
                         Err(mpsc::TryRecvError::Disconnected) => {
@@ -436,6 +604,7 @@ fn dispatcher(
                 match rx.recv_timeout(left) {
                     Ok(s) => admit(
                         s, &registry, &mut queues, &mut metrics, &mut tuner,
+                        cost_us,
                     ),
                     Err(mpsc::RecvTimeoutError::Timeout) => break,
                     Err(mpsc::RecvTimeoutError::Disconnected) => open = false,
@@ -448,6 +617,7 @@ fn dispatcher(
                 match rx.try_recv() {
                     Ok(s) => admit(
                         s, &registry, &mut queues, &mut metrics, &mut tuner,
+                        cost_us,
                     ),
                     Err(mpsc::TryRecvError::Empty) => break,
                     Err(mpsc::TryRecvError::Disconnected) => {
@@ -481,15 +651,30 @@ fn dispatcher(
                 1 << 36,
             ));
         }
+        let t_exec = Instant::now();
         let results = exec.run();
+        let done = Instant::now();
+        // Fold the batch's wall time into the cost estimate the shed
+        // rule and retry-after hints use; publish it for clients.
+        let dt_us = done.duration_since(t_exec).as_micros() as f64;
+        let ewma = if cost_us == 0 {
+            dt_us
+        } else {
+            COST_EWMA_ALPHA * dt_us + (1.0 - COST_EWMA_ALPHA) * cost_us as f64
+        };
+        cost_us = ewma as u64;
+        shared_cost_us.store(cost_us, Ordering::Relaxed);
         let size = batch.len();
         for (p, r) in batch.iter().zip(results) {
             // Only successful inferences feed the latency histogram —
             // a job error is counted on its own so `served` and the
-            // quantiles always mean "replied with logits".
+            // quantiles always mean "replied with logits".  Deadline
+            // attainment is judged against the batch-completion instant,
+            // shared by every request the batch carried.
             let _ = p.reply.send(match r {
                 Ok(o) => {
-                    metrics.record(&p.key, p.submitted.elapsed());
+                    let dl_met = p.deadline.map(|dl| done <= dl);
+                    metrics.record(&p.key, p.submitted.elapsed(), dl_met);
                     Ok(Reply {
                         output: o.output,
                         stats: o.stats,
@@ -499,9 +684,12 @@ fn dispatcher(
                 }
                 Err(e) => {
                     metrics.error(&p.key);
-                    Err(format!("{e}"))
+                    Err(ServeError::new("exec", format!("{e}")))
                 }
             });
+        }
+        if let Some(snap) = metrics.roll_if_due(Instant::now()) {
+            eprintln!("{}", snap.render());
         }
     }
     ServeReport { batches: batch_seq, slo: metrics.report() }
@@ -518,14 +706,16 @@ fn dispatcher(
 ///
 /// Request: `{"id":1,"model":"synth:tiny:3","variant":"v4","input":"<hex>"}`
 /// — or `"seed":N` instead of `"input"` for a deterministic random image
-/// (CI smoke without shipping bytes).  Response:
+/// (CI smoke without shipping bytes).  Optional fields: `"deadline_ms"`
+/// (finite, `0..=1e9`; relative to arrival) and `"priority"` (`0..=255`)
+/// feed EDF scheduling and admission-time shedding.  Response:
 /// `{"id":1,"output":[...],"instrs":..,"cycles":..,"batch":k}` or
-/// `{"id":1,"error":"..."}`.
+/// `{"id":1,"error":{"kind":..,"msg":..[,"retry_after_ms":..]}}`.
 ///
 /// The session survives bad input: a malformed request line, an unknown
-/// model key, or an unreadable line (e.g. invalid UTF-8) each answer with
-/// a structured `{"id":..,"error":"..."}` response and the loop reads on
-/// — only EOF ends the session.
+/// model key, an out-of-range deadline/priority, or an unreadable line
+/// (e.g. invalid UTF-8) each answer with a structured error object and
+/// the loop reads on — only EOF ends the session.
 pub fn serve_lines(
     units: Vec<ServeModel>,
     opts: ServeOptions,
@@ -541,15 +731,13 @@ pub fn serve_lines(
     // The reading loop submits without waiting (so requests read within one
     // window share a batch); a writer thread drains tickets in request
     // order, which keeps output incremental *and* deterministic.
-    let (wtx, wrx) = mpsc::channel::<(u64, Result<Ticket, String>)>();
+    let (wtx, wrx) = mpsc::channel::<(u64, Result<Ticket, ServeError>)>();
     let writer = std::thread::scope(|s| -> Result<()> {
         let writer = s.spawn(move || -> Result<()> {
             let mut out = out;
             for (id, t) in wrx {
                 let b = ObjBuilder::new().set("id", id);
-                let b = match t
-                    .and_then(|t| t.wait().map_err(|e| format!("{e:#}")))
-                {
+                let b = match t.and_then(Ticket::wait_detailed) {
                     Ok(r) => b
                         .set(
                             "output",
@@ -561,7 +749,7 @@ pub fn serve_lines(
                         .set("instrs", r.stats.instrs)
                         .set("cycles", r.stats.cycles)
                         .set("batch", r.batch_size),
-                    Err(e) => b.set("error", e),
+                    Err(e) => b.set("error", e.to_json()),
                 };
                 writeln!(out, "{}", json::to_compact_string(&b.build()))?;
                 out.flush()?;
@@ -576,7 +764,10 @@ pub fn serve_lines(
                 Err(e) => {
                     let _ = wtx.send((
                         0,
-                        Err(format!("reading request line: {e}")),
+                        Err(ServeError::new(
+                            "bad_request",
+                            format!("reading request line: {e}"),
+                        )),
                     ));
                     continue;
                 }
@@ -585,11 +776,13 @@ pub fn serve_lines(
                 continue;
             }
             let (id, ticket) = match parse_request(&line, &sizes) {
-                Ok((id, key, bytes)) => (
-                    id,
-                    client.submit(&key, bytes).map_err(|e| format!("{e:#}")),
+                Ok((id, key, bytes, meta)) => {
+                    (id, client.submit_with(&key, bytes, meta))
+                }
+                Err(e) => (
+                    request_id(&line),
+                    Err(ServeError::new("bad_request", format!("{e:#}"))),
                 ),
-                Err(e) => (request_id(&line), Err(format!("{e:#}"))),
             };
             let _ = wtx.send((id, ticket));
         }
@@ -610,10 +803,16 @@ fn request_id(line: &str) -> u64 {
         .unwrap_or(0)
 }
 
+/// Widest accepted `"deadline_ms"` value (~11.6 days) — same bound as
+/// the CLI's millisecond flags, so `1e400` (which parses to `inf`),
+/// `NaN`-producing garbage and negative values are all *rejected
+/// requests*, never a poisoned `Duration` inside the scheduler.
+const MAX_DEADLINE_MS: f64 = 1e9;
+
 fn parse_request(
     line: &str,
     sizes: &HashMap<String, usize>,
-) -> Result<(u64, String, Vec<u8>)> {
+) -> Result<(u64, String, Vec<u8>, ReqMeta)> {
     let v = json::parse(line)?;
     let id = v.get("id")?.as_u64()?;
     let key = model_key(v.get("model")?.as_str()?, v.get("variant")?.as_str()?);
@@ -631,7 +830,29 @@ fn parse_request(
             (0..n).map(|_| rng.int8() as i8 as u8).collect()
         }
     };
-    Ok((id, key, bytes))
+    let deadline = match v.get_opt("deadline_ms") {
+        None => None,
+        Some(d) => {
+            let ms = d.as_f64().context("\"deadline_ms\" must be a number")?;
+            anyhow::ensure!(
+                ms.is_finite() && (0.0..=MAX_DEADLINE_MS).contains(&ms),
+                "\"deadline_ms\" wants a finite value in 0..={MAX_DEADLINE_MS}, \
+                 got {ms}"
+            );
+            Some(Duration::from_secs_f64(ms / 1e3))
+        }
+    };
+    let priority = match v.get_opt("priority") {
+        None => 0,
+        Some(p) => {
+            let n = p.as_u64().context(
+                "\"priority\" must be a non-negative integer",
+            )?;
+            anyhow::ensure!(n <= 255, "\"priority\" wants 0..=255, got {n}");
+            n as u8
+        }
+    };
+    Ok((id, key, bytes, ReqMeta { deadline, priority }))
 }
 
 #[cfg(test)]
@@ -795,8 +1016,10 @@ mod tests {
         for (i, want_id) in [(0usize, 1u64), (1, 2), (2, 0), (3, 0)] {
             let v = json::parse(lines[i]).unwrap();
             assert_eq!(v.get("id").unwrap().as_u64().unwrap(), want_id, "{text}");
-            let err = v.get("error").unwrap().as_str().unwrap().to_string();
-            assert!(!err.is_empty(), "{text}");
+            let eo = v.get("error").unwrap();
+            let kind = eo.get("kind").unwrap().as_str().unwrap().to_string();
+            let err = eo.get("msg").unwrap().as_str().unwrap().to_string();
+            assert!(!kind.is_empty() && !err.is_empty(), "{text}");
             if i < 2 {
                 assert!(err.contains("unknown model key"), "{err}");
             }
@@ -869,22 +1092,98 @@ mod tests {
         let tickets: Vec<Ticket> = (0..6)
             .map(|_| client.submit(&key, vec![0; n_in]).unwrap())
             .collect();
-        let results: Vec<Result<Reply>> =
-            tickets.into_iter().map(Ticket::wait).collect();
+        let results: Vec<Result<Reply, ServeError>> =
+            tickets.into_iter().map(Ticket::wait_detailed).collect();
         let served = results.iter().filter(|r| r.is_ok()).count();
-        let shed: Vec<String> = results
-            .iter()
-            .filter_map(|r| r.as_ref().err().map(|e| e.to_string()))
-            .collect();
+        let shed: Vec<&ServeError> =
+            results.iter().filter_map(|r| r.as_ref().err()).collect();
         assert_eq!(served, 2, "cap 2 admits exactly 2 of a 6-burst");
         assert_eq!(shed.len(), 4);
         for e in &shed {
-            assert!(e.contains("admission rejected"), "{e}");
-            assert!(e.contains("queue full"), "{e}");
+            assert_eq!(e.kind, "overload");
+            assert!(e.retry_after_ms.is_some(), "rejection must hint backoff");
+            assert!(e.msg.contains("admission rejected"), "{}", e.msg);
+            assert!(e.msg.contains("queue full"), "{}", e.msg);
         }
         drop(client);
         let report = server.join();
         let row = &report.slo.rows[0];
         assert_eq!((row.served, row.rejected), (2, 4));
+    }
+
+    /// Tentpole regression: a deadline the scheduler cannot possibly meet
+    /// (already expired at admission) is shed with a typed `deadline`
+    /// error and never forms a batch; a generous deadline serves and
+    /// counts toward goodput — so the report splits 1 met / 1 shed.
+    #[test]
+    fn expired_deadline_is_shed_with_structured_error() {
+        let spec = tiny_conv_net(3);
+        let n_in = spec.input_elems();
+        let (server, client) =
+            Server::start(units(), ServeOptions::default(), local_exec(1));
+        let key = model_key("synth:tiny:3", "v4");
+        let meta = ReqMeta { deadline: Some(Duration::ZERO), priority: 0 };
+        let e = client
+            .submit_with(&key, vec![0; n_in], meta)
+            .unwrap()
+            .wait_detailed()
+            .unwrap_err();
+        assert_eq!(e.kind, "deadline");
+        assert!(e.msg.contains("shed at admission"), "{}", e.msg);
+        let meta =
+            ReqMeta { deadline: Some(Duration::from_secs(120)), priority: 3 };
+        let r = client
+            .submit_with(&key, vec![0; n_in], meta)
+            .unwrap()
+            .wait_detailed()
+            .unwrap();
+        assert!(r.batch_size >= 1);
+        drop(client);
+        let report = server.join();
+        assert_eq!(report.batches, 1, "the shed request never ran");
+        let row = &report.slo.rows[0];
+        assert_eq!((row.served, row.shed), (1, 1));
+        assert_eq!((row.deadline_met, row.deadline_missed), (1, 0));
+        assert_eq!(row.goodput, Some(0.5));
+    }
+
+    /// Satellite regression: out-of-range `deadline_ms` / `priority`
+    /// values — negative, non-finite (1e400 overflows to inf), too large
+    /// — are *rejected requests* with structured errors, never poisoned
+    /// scheduler state; valid metadata on the same session still serves.
+    #[test]
+    fn line_protocol_rejects_malformed_deadline_and_priority() {
+        let reqs = concat!(
+            r#"{"id":1,"model":"synth:tiny:3","variant":"v4","seed":5,"deadline_ms":-3}"#, "\n",
+            r#"{"id":2,"model":"synth:tiny:3","variant":"v4","seed":5,"deadline_ms":1e400}"#, "\n",
+            r#"{"id":3,"model":"synth:tiny:3","variant":"v4","seed":5,"priority":300}"#, "\n",
+            r#"{"id":4,"model":"synth:tiny:3","variant":"v4","seed":5,"deadline_ms":60000,"priority":7}"#, "\n",
+        );
+        let mut out = Vec::new();
+        serve_lines(
+            units(),
+            ServeOptions::default(),
+            local_exec(1),
+            std::io::Cursor::new(reqs),
+            &mut out,
+        )
+        .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 4, "{text}");
+        for (i, want) in [(0usize, "deadline_ms"), (1, ""), (2, "priority")] {
+            let v = json::parse(lines[i]).unwrap();
+            let eo = v.get("error").unwrap();
+            assert_eq!(
+                eo.get("kind").unwrap().as_str().unwrap(),
+                "bad_request",
+                "{text}"
+            );
+            let msg = eo.get("msg").unwrap().as_str().unwrap();
+            assert!(msg.contains(want), "{msg:?} should mention {want:?}");
+        }
+        let last = json::parse(lines[3]).unwrap();
+        assert_eq!(last.get("id").unwrap().as_u64().unwrap(), 4);
+        assert!(last.get_opt("output").is_some(), "{text}");
     }
 }

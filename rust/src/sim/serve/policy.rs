@@ -2,7 +2,8 @@
 //! from the per-model queues (DESIGN.md §14).
 //!
 //! A [`SchedPolicy`] sees the whole [`QueueSet`] and drains up to
-//! [`BatchHint::max_batch`] requests per call.  Two implementations ship:
+//! [`BatchHint::max_batch`] requests per call.  Three implementations
+//! ship:
 //!
 //! - [`Fifo`] — strict global arrival order, bit-identical in service
 //!   order to the pre-scheduler dispatcher (one shared FIFO).  Simple and
@@ -14,6 +15,12 @@
 //!   still only gets its round-robin share of each batch, so the
 //!   low-rate tenant's queueing delay stays bounded by the batch period,
 //!   not by the flood (asserted by `tests/serve_sched.rs`).
+//! - [`Edf`] — earliest deadline first across the queue heads
+//!   (DESIGN.md §16): a tight-deadline request jumps ahead of a
+//!   loose-deadline backlog, which is what keeps goodput-under-deadline
+//!   up when a burst of cheap urgent work lands behind expensive patient
+//!   work.  Deadlines are *data on the request* ([`Pending::deadline`]),
+//!   so the policy stays a pure function of queue state — no clock reads.
 //!
 //! Policies never reorder one model's requests relative to each other —
 //! per-model FIFO is part of the trait contract, so replies stay
@@ -77,15 +84,20 @@ pub enum PolicyKind {
     Fifo,
     /// Deficit round-robin fairness across models.
     Drr,
+    /// Earliest deadline first across queue heads.
+    Edf,
 }
 
 impl PolicyKind {
-    /// Parse a `--policy` value: `fifo` or `drr`.
+    /// Parse a `--policy` value: `fifo`, `drr` or `edf`.
     pub fn parse(s: &str) -> Result<PolicyKind> {
         match s {
             "fifo" => Ok(PolicyKind::Fifo),
             "drr" => Ok(PolicyKind::Drr),
-            other => bail!("unknown policy {other:?} (expected fifo or drr)"),
+            "edf" => Ok(PolicyKind::Edf),
+            other => {
+                bail!("unknown policy {other:?} (expected fifo, drr or edf)")
+            }
         }
     }
 
@@ -94,6 +106,7 @@ impl PolicyKind {
         match self {
             PolicyKind::Fifo => Box::new(Fifo),
             PolicyKind::Drr => Box::new(DeficitRoundRobin::new()),
+            PolicyKind::Edf => Box::new(Edf),
         }
     }
 }
@@ -103,6 +116,7 @@ impl std::fmt::Display for PolicyKind {
         f.write_str(match self {
             PolicyKind::Fifo => "fifo",
             PolicyKind::Drr => "drr",
+            PolicyKind::Edf => "edf",
         })
     }
 }
@@ -126,6 +140,44 @@ impl SchedPolicy for Fifo {
         let mut batch = Vec::new();
         while batch.len() < hint.max_batch {
             let Some(p) = queues.pop_oldest() else { break };
+            batch.push(p);
+        }
+        batch
+    }
+}
+
+/// Earliest deadline first: repeatedly serve the queue whose *head* has
+/// the most urgent `(deadline, priority, seq)` key — deadline-less
+/// requests sort last, higher priority wins a deadline tie, and arrival
+/// order breaks exact ties (so with no deadlines anywhere, EDF *is*
+/// [`Fifo`]).  Only queue heads compete
+/// ([`QueueSet::pop_front_min_by`]), which preserves the per-model FIFO
+/// contract: a late tight-deadline request of model M still waits behind
+/// M's own earlier requests, but jumps every *other* model's backlog.
+pub struct Edf;
+
+impl SchedPolicy for Edf {
+    fn name(&self) -> &'static str {
+        "edf"
+    }
+
+    fn next_batch(
+        &mut self,
+        queues: &mut QueueSet,
+        hint: &BatchHint,
+    ) -> Vec<Pending> {
+        let mut batch = Vec::new();
+        while batch.len() < hint.max_batch {
+            let Some(p) = queues.pop_front_min_by(|p| {
+                (
+                    p.deadline.is_none(),
+                    p.deadline,
+                    std::cmp::Reverse(p.priority),
+                    p.seq,
+                )
+            }) else {
+                break;
+            };
             batch.push(p);
         }
         batch
@@ -221,8 +273,24 @@ mod tests {
     use std::time::Instant;
 
     fn push(qs: &mut QueueSet, key: &str) {
-        qs.admit(key.to_string(), Vec::new(), mpsc::channel().0, Instant::now())
-            .unwrap();
+        push_dl(qs, key, None, 0);
+    }
+
+    fn push_dl(
+        qs: &mut QueueSet,
+        key: &str,
+        deadline: Option<Instant>,
+        priority: u8,
+    ) {
+        qs.admit(
+            key.to_string(),
+            Vec::new(),
+            mpsc::channel().0,
+            Instant::now(),
+            deadline,
+            priority,
+        )
+        .unwrap();
     }
 
     fn filled(reqs: &[(&str, usize)]) -> QueueSet {
@@ -243,8 +311,9 @@ mod tests {
     fn policy_kind_parses_and_displays() {
         assert_eq!(PolicyKind::parse("fifo").unwrap(), PolicyKind::Fifo);
         assert_eq!(PolicyKind::parse("drr").unwrap(), PolicyKind::Drr);
+        assert_eq!(PolicyKind::parse("edf").unwrap(), PolicyKind::Edf);
         assert!(PolicyKind::parse("lifo").is_err());
-        for k in [PolicyKind::Fifo, PolicyKind::Drr] {
+        for k in [PolicyKind::Fifo, PolicyKind::Drr, PolicyKind::Edf] {
             assert_eq!(PolicyKind::parse(&k.to_string()).unwrap(), k);
             assert_eq!(k.build().name(), k.to_string());
         }
@@ -362,8 +431,58 @@ mod tests {
     }
 
     #[test]
+    fn edf_serves_tight_deadlines_ahead_of_a_loose_backlog() {
+        let t0 = Instant::now();
+        let dl = |ms: u64| Some(t0 + std::time::Duration::from_millis(ms));
+        let mut qs = QueueSet::new(64);
+        // A patient backlog of 6 "big" requests (2 s deadlines), then 2
+        // urgent "small" ones (20 ms) arriving last.
+        for _ in 0..6 {
+            push_dl(&mut qs, "big@v4", dl(2000), 0);
+        }
+        push_dl(&mut qs, "small@v4", dl(20), 0);
+        push_dl(&mut qs, "small@v4", dl(20), 0);
+        let hint = BatchHint { max_batch: 4, parallelism: 4 };
+        let b1 = Edf.next_batch(&mut qs, &hint);
+        assert_eq!(
+            keys(&b1),
+            ["small@v4", "small@v4", "big@v4", "big@v4"],
+            "urgent requests jump the patient backlog"
+        );
+        // FIFO on the same arrival order would have served big first.
+        let b2 = Edf.next_batch(&mut qs, &hint);
+        assert_eq!(keys(&b2), ["big@v4"; 4]);
+    }
+
+    #[test]
+    fn edf_orders_by_deadline_then_priority_then_seq() {
+        let t0 = Instant::now();
+        let dl = |ms: u64| Some(t0 + std::time::Duration::from_millis(ms));
+        let mut qs = QueueSet::new(64);
+        push_dl(&mut qs, "none@v0", None, 255); // no deadline: last, even at max priority
+        push_dl(&mut qs, "lo@v0", dl(50), 1); // same deadline, lower priority
+        push_dl(&mut qs, "hi@v0", dl(50), 9); // same deadline, higher priority
+        push_dl(&mut qs, "early@v0", dl(10), 0); // earliest deadline wins outright
+        let hint = BatchHint { max_batch: 8, parallelism: 8 };
+        let b = Edf.next_batch(&mut qs, &hint);
+        assert_eq!(keys(&b), ["early@v0", "hi@v0", "lo@v0", "none@v0"]);
+    }
+
+    #[test]
+    fn edf_without_deadlines_is_fifo() {
+        let mut qs = filled(&[("b", 2), ("a", 2)]);
+        let hint = BatchHint { max_batch: 8, parallelism: 8 };
+        let b = Edf.next_batch(&mut qs, &hint);
+        assert_eq!(
+            b.iter().map(|p| p.seq).collect::<Vec<_>>(),
+            [0, 1, 2, 3],
+            "deadline-less EDF degrades to global arrival order"
+        );
+    }
+
+    #[test]
     fn policies_always_progress_on_nonempty_queues() {
-        for kind in [PolicyKind::Fifo, PolicyKind::Drr] {
+        for kind in [PolicyKind::Fifo, PolicyKind::Drr, PolicyKind::Edf] {
             let mut qs = filled(&[("only", 5)]);
             let mut p = kind.build();
             let hint = BatchHint { max_batch: 2, parallelism: 1 };

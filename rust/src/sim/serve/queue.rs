@@ -23,6 +23,14 @@ pub struct Pending {
     pub seq: u64,
     /// Packed int8 input image.
     pub input: Vec<u8>,
+    /// Absolute completion deadline, when the request carries one
+    /// (`"deadline_ms"` on the wire).  Stored as data, not read from a
+    /// clock: policies may *compare* deadlines ([`super::policy::Edf`])
+    /// and stay pure functions of the queue state.
+    pub deadline: Option<Instant>,
+    /// Scheduling priority (`"priority"` on the wire, 0–255; higher is
+    /// more urgent).  Tie-breaks equal deadlines under EDF.
+    pub priority: u8,
     /// Where the reply (or a structured error) goes.
     pub(crate) reply: ReplyTx,
     /// Client submission time — the latency clock starts here (it covers
@@ -65,6 +73,8 @@ impl QueueSet {
         input: Vec<u8>,
         reply: ReplyTx,
         submitted: Instant,
+        deadline: Option<Instant>,
+        priority: u8,
     ) -> Result<(), (ReplyTx, String)> {
         let q = self.queues.entry(key.clone()).or_default();
         if q.len() >= self.cap {
@@ -80,7 +90,15 @@ impl QueueSet {
         }
         let seq = self.next_seq;
         self.next_seq += 1;
-        q.push_back(Pending { key, seq, input, reply, submitted });
+        q.push_back(Pending {
+            key,
+            seq,
+            input,
+            deadline,
+            priority,
+            reply,
+            submitted,
+        });
         self.total += 1;
         Ok(())
     }
@@ -119,11 +137,23 @@ impl QueueSet {
     /// scan, no key clone) — what strict cross-tenant FIFO
     /// ([`super::policy::Fifo`]) serves next.
     pub fn pop_oldest(&mut self) -> Option<Pending> {
+        self.pop_front_min_by(|p| p.seq)
+    }
+
+    /// Pop the queue-head request minimizing `key_fn` — the generalized
+    /// head-of-line scan behind [`Self::pop_oldest`] and the EDF policy
+    /// ([`super::policy::Edf`]).  Only queue *fronts* compete, so
+    /// per-model FIFO order (the policy contract) is preserved whatever
+    /// the key function says.
+    pub fn pop_front_min_by<K: Ord>(
+        &mut self,
+        key_fn: impl Fn(&Pending) -> K,
+    ) -> Option<Pending> {
         let (_, q) = self
             .queues
             .iter_mut()
             .filter(|(_, q)| !q.is_empty())
-            .min_by_key(|(_, q)| q.front().map_or(u64::MAX, |p| p.seq))?;
+            .min_by_key(|(_, q)| key_fn(q.front().expect("non-empty queue")))?;
         let p = q.pop_front()?;
         self.total -= 1;
         Some(p)
@@ -139,7 +169,7 @@ mod tests {
     }
 
     fn push(qs: &mut QueueSet, key: &str, input: Vec<u8>) -> Result<(), String> {
-        qs.admit(key.to_string(), input, sink(), Instant::now())
+        qs.admit(key.to_string(), input, sink(), Instant::now(), None, 0)
             .map_err(|(_, msg)| msg)
     }
 
@@ -174,6 +204,28 @@ mod tests {
         assert_eq!((p.key.as_str(), p.seq), ("b@v0", 2));
         assert!(qs.is_empty());
         assert!(qs.pop_oldest().is_none());
+    }
+
+    #[test]
+    fn pop_front_min_by_competes_queue_heads_only() {
+        let mut qs = QueueSet::new(8);
+        let t0 = Instant::now();
+        // a: deadlines [late, early] — the early one is *behind* the late
+        // one in a's FIFO, so it must not jump the head.
+        let mut admit = |key: &str, dl: Option<Instant>| {
+            qs.admit(key.to_string(), vec![], sink(), t0, dl, 0).unwrap()
+        };
+        admit("a@v0", Some(t0 + std::time::Duration::from_millis(500)));
+        admit("a@v0", Some(t0 + std::time::Duration::from_millis(1)));
+        admit("b@v0", Some(t0 + std::time::Duration::from_millis(100)));
+        let key = |p: &Pending| (p.deadline.is_none(), p.deadline, p.seq);
+        let p = qs.pop_front_min_by(key).unwrap();
+        assert_eq!((p.key.as_str(), p.seq), ("b@v0", 2), "b's head is earliest");
+        let p = qs.pop_front_min_by(key).unwrap();
+        assert_eq!((p.key.as_str(), p.seq), ("a@v0", 0), "a stays FIFO");
+        let p = qs.pop_front_min_by(key).unwrap();
+        assert_eq!((p.key.as_str(), p.seq), ("a@v0", 1));
+        assert!(qs.pop_front_min_by(key).is_none());
     }
 
     #[test]

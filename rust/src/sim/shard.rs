@@ -42,17 +42,18 @@
 //! any partition, and any re-dispatch schedule; `tests/shard.rs` holds the
 //! differential against the in-process engine.
 
-use std::collections::{HashMap, HashSet, VecDeque};
+use std::collections::{HashMap, VecDeque};
 use std::io::{BufRead, BufReader, Write};
 use std::path::{Path, PathBuf};
 use std::process::{Child, ChildStdin, Command, Stdio};
 use std::sync::mpsc;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
-use super::cpu::{Machine, RunStats, SimError};
+use super::chaos::{self, WorkerAction};
+use super::cpu::{Machine, RemoteKind, RunStats, SimError};
 use super::engine::{run_batch, run_job_pooled, Job, JobOutput};
 use crate::compiler::{CompileCache, Compiled};
 use crate::models;
@@ -77,6 +78,47 @@ pub const RESPAWN_ATTEMPTS: u32 = 2;
 /// little work.  Public because a shard backend's effective parallelism
 /// ([`crate::sim::exec::Caps::parallelism`]) is `workers × PIPELINE`.
 pub const PIPELINE: usize = 2;
+
+/// Per-job retry budget (DESIGN.md §16), shared by every *non-death*
+/// recovery mechanism: retries of transient ([`RemoteKind::Retryable`])
+/// wire errors, straggler duplicate dispatch, and per-job-timeout
+/// re-dispatch each consume one unit.  Distinct from the death contract —
+/// worker deaths are tracked by [`POISON_DEATHS`] and never charge this
+/// budget.  A retryable error arriving with the budget spent surfaces as
+/// a *fatal* `retry budget exhausted` [`SimError::Remote`] at the job's
+/// index.
+pub const JOB_RETRIES: u32 = 3;
+
+/// Base of the exponential backoff between retries of a transient wire
+/// error (doubles per consumed retry: 10, 20, 40 ms).  Kept short — a
+/// shard worker's transient failures are pipe-scale, not network-scale.
+const RETRY_BACKOFF_BASE: Duration = Duration::from_millis(10);
+
+/// Env override (milliseconds) for the per-job timeout after which an
+/// outstanding job is speculatively re-dispatched to another worker,
+/// charging the [`JOB_RETRIES`] budget.  Without it the timeout equals
+/// the batch's [`stall_timeout`] — effectively straggler-only behavior —
+/// because a healthy job's duration is workload-dependent and the
+/// watchdog budget already bounds it; the override exists for tests and
+/// latency-critical deployments that know their job costs.
+pub const MARVEL_JOB_TIMEOUT_MS_ENV: &str = "MARVEL_JOB_TIMEOUT_MS";
+
+/// The per-job timeout for a batch: [`MARVEL_JOB_TIMEOUT_MS_ENV`] if set
+/// (parse failures fall through to the default — a garbage override must
+/// not panic a production pool), else the batch's stall timeout.
+fn job_timeout(descs: &[JobDesc]) -> Duration {
+    if let Ok(ms) = std::env::var(MARVEL_JOB_TIMEOUT_MS_ENV) {
+        if let Ok(ms) = ms.trim().parse::<u64>() {
+            if ms > 0 {
+                return Duration::from_millis(ms);
+            }
+        }
+        eprintln!(
+            "shard: ignoring unparseable {MARVEL_JOB_TIMEOUT_MS_ENV}={ms:?}"
+        );
+    }
+    stall_timeout(descs)
+}
 
 /// Floor for the stall backstop (see [`stall_timeout`]).
 const STALL_TIMEOUT_MIN: Duration = Duration::from_secs(300);
@@ -393,6 +435,12 @@ pub(crate) fn job_of<'a>(
 /// (a bug class, not a [`SimError`]) kills the process — which is exactly
 /// the event the coordinator's death handling translates back into the
 /// in-process panic contract.
+///
+/// With `MARVEL_CHAOS` set (the coordinator writes it per incarnation —
+/// see [`ShardPool`]) the worker applies the plan's worker-site faults to
+/// the jobs it handles, keyed on wire seq: delay before replying, die
+/// without replying, write a corrupted line, reply with a transient
+/// error, or write the result twice (DESIGN.md §16).
 pub fn worker_loop(
     artifacts: &Path,
     input: impl BufRead,
@@ -400,6 +448,7 @@ pub fn worker_loop(
 ) -> Result<()> {
     let mut hyd = Hydrator::new(artifacts);
     let mut pool: Option<Machine> = None;
+    let mut chaos_state = chaos::WorkerChaos::from_env()?;
     writeln!(out, "{}", encode_ready())?;
     out.flush()?;
     for line in input.lines() {
@@ -409,10 +458,43 @@ pub fn worker_loop(
         }
         match parse_line(&line)? {
             Msg::Job { seq, desc } => {
-                let result = hyd
-                    .run_desc(&mut pool, &desc)
-                    .map_err(|e| format!("{e:#}"));
+                let mut injected_err: Option<String> = None;
+                let mut corrupt = false;
+                let mut dup = false;
+                if let Some(ch) = chaos_state.as_mut() {
+                    for action in ch.actions(seq) {
+                        match action {
+                            WorkerAction::Delay(d) => std::thread::sleep(d),
+                            // Injected death: exit without replying — the
+                            // coordinator's reader sees EOF, exactly like
+                            // a crash.
+                            WorkerAction::Kill => std::process::exit(17),
+                            WorkerAction::Corrupt => corrupt = true,
+                            WorkerAction::ErrorResult(msg) => {
+                                injected_err = Some(msg);
+                            }
+                            WorkerAction::Dup => dup = true,
+                        }
+                    }
+                }
+                if corrupt {
+                    // A line that cannot parse: the coordinator treats the
+                    // worker as corrupted and kills it (a death, not an
+                    // error result), so nothing else is worth writing.
+                    writeln!(out, "{{\"chaos\":corrupted")?;
+                    out.flush()?;
+                    continue;
+                }
+                let result = match injected_err {
+                    Some(msg) => Err(msg),
+                    None => hyd
+                        .run_desc(&mut pool, &desc)
+                        .map_err(|e| format!("{e:#}")),
+                };
                 writeln!(out, "{}", encode_result(seq, &result))?;
+                if dup {
+                    writeln!(out, "{}", encode_result(seq, &result))?;
+                }
                 out.flush()?;
             }
             Msg::Ready => {}
@@ -456,7 +538,7 @@ pub fn run_descs_local(
         .into_iter()
         .map(|u| match u {
             Ok(_) => ran.next().expect("one result per hydrated job"),
-            Err(msg) => Err(SimError::Remote { msg }),
+            Err(msg) => Err(SimError::remote(msg)),
         })
         .collect()
 }
@@ -466,10 +548,16 @@ pub fn run_descs_local(
 // ---------------------------------------------------------------------------
 
 /// How to launch one worker process.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct WorkerCmd {
     pub program: PathBuf,
     pub args: Vec<String>,
+    /// Extra environment for the child (on top of the inherited
+    /// environment).  `MARVEL_CHAOS` set here is the per-pool way to hand
+    /// workers a fault plan without mutating the coordinator's own
+    /// environment — the pool re-writes it per incarnation either way
+    /// (see [`ShardPool::spawn_worker`]).
+    pub envs: Vec<(String, String)>,
 }
 
 impl WorkerCmd {
@@ -483,7 +571,22 @@ impl WorkerCmd {
                 "--artifacts".to_string(),
                 artifacts.display().to_string(),
             ],
+            envs: Vec::new(),
         })
+    }
+
+    /// The chaos plan this command would hand its workers: an explicit
+    /// `envs` entry wins over the coordinator's inherited `MARVEL_CHAOS`.
+    fn chaos_plan(&self) -> Result<Option<chaos::FaultPlan>> {
+        for (k, v) in &self.envs {
+            if k == chaos::MARVEL_CHAOS_ENV {
+                let plan = chaos::FaultPlan::parse(v).with_context(|| {
+                    format!("parsing worker {}={v:?}", chaos::MARVEL_CHAOS_ENV)
+                })?;
+                return Ok(Some(plan));
+            }
+        }
+        chaos::FaultPlan::from_env()
     }
 }
 
@@ -503,8 +606,9 @@ struct Worker {
     /// (its reader thread races the respawn) carry the old generation and
     /// must not be charged to the new one.
     gen: u64,
-    /// Job indices (current `run` call) dispatched here and not yet done.
-    outstanding: HashSet<usize>,
+    /// Job indices (current `run` call) dispatched here and not yet done,
+    /// with dispatch time — the per-job timeout clock ([`job_timeout`]).
+    outstanding: HashMap<usize, Instant>,
 }
 
 /// A pool of worker processes executing [`JobDesc`] batches with
@@ -523,18 +627,29 @@ pub struct ShardPool {
     /// Remaining relaunches per worker slot.
     respawns_left: Vec<u32>,
     respawns_used: u32,
+    /// `(full, stripped)` rendered chaos plans when the command carries
+    /// one: the *first* process spawned gets `full` (death faults
+    /// included); every later incarnation — sibling slots and respawns —
+    /// gets `stripped` ([`chaos::FaultPlan::strip_one_shot`]), so each
+    /// injected death fires exactly once pool-wide and can never compound
+    /// into a spurious [`POISON_DEATHS`] panic.
+    chaos_plans: Option<(String, String)>,
+    chaos_primary_spawned: bool,
 }
 
 impl ShardPool {
     /// Spawn `n` worker processes (stderr passes through to the caller's).
     pub fn spawn(cmd: &WorkerCmd, n: usize) -> Result<ShardPool> {
         ensure!(n > 0, "shard pool needs at least one worker");
+        let chaos_plans = cmd.chaos_plan()?.and_then(|plan| {
+            if plan.worker_faults().next().is_none() {
+                return None; // exec-site-only plan: workers run clean
+            }
+            Some((plan.to_string(), plan.strip_one_shot().to_string()))
+        });
         let (tx, rx) = mpsc::channel();
-        let workers = (0..n)
-            .map(|worker| Self::spawn_worker(cmd, worker, worker as u64, &tx))
-            .collect::<Result<Vec<Worker>>>()?;
-        Ok(ShardPool {
-            workers,
+        let mut pool = ShardPool {
+            workers: Vec::new(),
             rx,
             tx,
             cmd: cmd.clone(),
@@ -542,19 +657,59 @@ impl ShardPool {
             gen_counter: n as u64,
             respawns_left: vec![RESPAWN_ATTEMPTS; n],
             respawns_used: 0,
-        })
+            chaos_plans,
+            chaos_primary_spawned: false,
+        };
+        for worker in 0..n {
+            let w = pool.spawn_one(worker, worker as u64)?;
+            pool.workers.push(w);
+        }
+        Ok(pool)
+    }
+
+    /// Spawn an incarnation for slot `worker`, handing it this pool's
+    /// chaos plan (full for the first process ever spawned, stripped for
+    /// everyone after — see [`ShardPool::chaos_plans`]).
+    fn spawn_one(&mut self, worker: usize, gen: u64) -> Result<Worker> {
+        let plan = match &self.chaos_plans {
+            None => None,
+            Some((full, stripped)) => {
+                if self.chaos_primary_spawned {
+                    Some(stripped.as_str())
+                } else {
+                    Some(full.as_str())
+                }
+            }
+        };
+        let w = Self::spawn_worker(&self.cmd, worker, gen, &self.tx, plan)?;
+        self.chaos_primary_spawned = true;
+        Ok(w)
     }
 
     /// Spawn one worker process + its stdout reader thread for slot
-    /// `worker`, incarnation `gen`.
+    /// `worker`, incarnation `gen`.  `chaos` is the exact `MARVEL_CHAOS`
+    /// value for this incarnation (the inherited variable is always
+    /// cleared first — per-incarnation stripping must win over whatever
+    /// the coordinator's environment says).
     fn spawn_worker(
         cmd: &WorkerCmd,
         worker: usize,
         gen: u64,
         tx: &mpsc::Sender<Event>,
+        chaos: Option<&str>,
     ) -> Result<Worker> {
-        let mut child = Command::new(&cmd.program)
-            .args(&cmd.args)
+        let mut command = Command::new(&cmd.program);
+        command.args(&cmd.args);
+        for (k, v) in &cmd.envs {
+            command.env(k, v);
+        }
+        command.env_remove(chaos::MARVEL_CHAOS_ENV);
+        if let Some(plan) = chaos {
+            if !plan.is_empty() {
+                command.env(chaos::MARVEL_CHAOS_ENV, plan);
+            }
+        }
+        let mut child = command
             .stdin(Stdio::piped())
             .stdout(Stdio::piped())
             .spawn()
@@ -600,7 +755,7 @@ impl ShardPool {
             stdin,
             alive: true,
             gen,
-            outstanding: HashSet::new(),
+            outstanding: HashMap::new(),
         })
     }
 
@@ -614,12 +769,8 @@ impl ShardPool {
         while self.respawns_left[worker] > 0 {
             self.respawns_left[worker] -= 1;
             self.gen_counter += 1;
-            match Self::spawn_worker(
-                &self.cmd,
-                worker,
-                self.gen_counter,
-                &self.tx,
-            ) {
+            let gen = self.gen_counter;
+            match self.spawn_one(worker, gen) {
                 Ok(w) => {
                     self.respawns_used += 1;
                     eprintln!(
@@ -654,11 +805,20 @@ impl ShardPool {
     /// count or re-dispatch schedule.  Panics if a poison job kills
     /// [`POISON_DEATHS`] workers or every worker dies — the process-level
     /// mirror of [`run_batch`]'s panic propagation.
+    ///
+    /// **Recovery budgets** (DESIGN.md §16): a job answered with a
+    /// *retryable* wire error ([`RemoteKind::classify`]) is requeued with
+    /// exponential backoff; straggler duplicates and per-job-timeout
+    /// re-dispatch draw from the same [`JOB_RETRIES`] budget.  A
+    /// retryable error past budget surfaces as a fatal
+    /// `retry budget exhausted` [`SimError::Remote`] at the job's index.
+    /// Worker deaths stay on the separate [`POISON_DEATHS`] contract.
     pub fn run(&mut self, descs: &[JobDesc]) -> Vec<Result<JobOutput, SimError>> {
         let n = descs.len();
         let base = self.next_seq;
         self.next_seq += n as u64;
         let stall = stall_timeout(descs);
+        let per_job = job_timeout(descs);
         // Per-run bookkeeping: stale outstanding entries are duplicates
         // from a previous batch whose first copy already won; their late
         // results are discarded below by the seq-range guard, so the slots
@@ -675,6 +835,11 @@ impl ShardPool {
         // been implicated in.
         let mut dispatched: Vec<Vec<usize>> = vec![Vec::new(); n];
         let mut deaths: Vec<u32> = vec![0; n];
+        // Units of the shared JOB_RETRIES budget each job has consumed,
+        // and the earliest instant a backoff allows its next dispatch.
+        let mut retries: Vec<u32> = vec![0; n];
+        let mut backoff: Vec<Option<Instant>> = vec![None; n];
+        let mut last_event = Instant::now();
 
         while done < n {
             // Fill pipelines from the queue; once the queue drains,
@@ -683,7 +848,7 @@ impl ShardPool {
             // byte-identical by purity).
             self.dispatch(
                 descs, base, &results, &mut queue, &mut dispatched,
-                &mut deaths,
+                &mut deaths, &mut retries, &backoff,
             );
             if self.live_workers() == 0 {
                 panic!(
@@ -692,13 +857,64 @@ impl ShardPool {
                     n - done
                 );
             }
-            let event = match self.rx.recv_timeout(stall) {
-                Ok(e) => e,
-                Err(_) => panic!(
-                    "shard pool stalled: no worker event within {stall:?} \
-                     ({} of {n} jobs unfinished)",
-                    n - done
-                ),
+            // Sleep until the next actionable instant: a worker event,
+            // the stall backstop, a backoff expiry (a requeued job
+            // becomes dispatchable) or a per-job timeout (an outstanding
+            // job becomes a forced straggler).
+            let now = Instant::now();
+            let mut wait = (last_event + stall).saturating_duration_since(now);
+            for b in backoff.iter().flatten() {
+                wait = wait.min(b.saturating_duration_since(now));
+            }
+            for w in self.workers.iter().filter(|w| w.alive) {
+                for t0 in w.outstanding.values() {
+                    wait = wait.min(
+                        (*t0 + per_job).saturating_duration_since(now),
+                    );
+                }
+            }
+            let event = match self.rx.recv_timeout(wait.max(Duration::from_millis(1))) {
+                Ok(e) => {
+                    last_event = Instant::now();
+                    e
+                }
+                Err(_) => {
+                    if last_event.elapsed() >= stall {
+                        panic!(
+                            "shard pool stalled: no worker event within \
+                             {stall:?} ({} of {n} jobs unfinished)",
+                            n - done
+                        );
+                    }
+                    // Per-job timeouts: requeue every over-deadline
+                    // outstanding job (budget allowing) so dispatch sends
+                    // a duplicate to a different worker; the original
+                    // stays outstanding — first result wins — and its
+                    // clock resets so one slow job charges the budget
+                    // once per timeout period, not once per wakeup.
+                    let now = Instant::now();
+                    for w in self.workers.iter_mut().filter(|w| w.alive) {
+                        for (&i, t0) in w.outstanding.iter_mut() {
+                            if now.saturating_duration_since(*t0) < per_job
+                                || results[i].is_some()
+                                || retries[i] >= JOB_RETRIES
+                                || queue.contains(&i)
+                            {
+                                continue;
+                            }
+                            retries[i] += 1;
+                            *t0 = now;
+                            queue.push_back(i);
+                            eprintln!(
+                                "shard job {i} timed out after {per_job:?}; \
+                                 re-dispatching ({} of {JOB_RETRIES} budget \
+                                 used)",
+                                retries[i]
+                            );
+                        }
+                    }
+                    continue;
+                }
             };
             match event {
                 Event::Msg { msg: Msg::Ready, .. } => {}
@@ -717,12 +933,52 @@ impl ShardPool {
                     if gen == self.workers[worker].gen {
                         self.workers[worker].outstanding.remove(&i);
                     }
-                    if results[i].is_none() {
-                        results[i] = Some(
-                            result
-                                .map_err(|msg| SimError::Remote { msg }),
-                        );
-                        done += 1;
+                    if results[i].is_some() {
+                        continue; // a duplicate's first copy already won
+                    }
+                    match result {
+                        Ok(o) => {
+                            results[i] = Some(Ok(o));
+                            done += 1;
+                        }
+                        Err(msg) => {
+                            let kind = RemoteKind::classify(&msg);
+                            if kind == RemoteKind::Retryable
+                                && retries[i] < JOB_RETRIES
+                            {
+                                // Transient wire error within budget:
+                                // requeue with exponential backoff.
+                                retries[i] += 1;
+                                backoff[i] = Some(
+                                    Instant::now()
+                                        + RETRY_BACKOFF_BASE
+                                            * (1 << (retries[i] - 1).min(6)),
+                                );
+                                if !queue.contains(&i) {
+                                    queue.push_back(i);
+                                }
+                                eprintln!(
+                                    "shard job {i} transient failure \
+                                     (retry {} of {JOB_RETRIES}): {msg}",
+                                    retries[i]
+                                );
+                            } else {
+                                let err = if kind == RemoteKind::Retryable {
+                                    SimError::Remote {
+                                        msg: format!(
+                                            "retry budget exhausted after \
+                                             {} attempts: {msg}",
+                                            retries[i] + 1
+                                        ),
+                                        kind: RemoteKind::Fatal,
+                                    }
+                                } else {
+                                    SimError::Remote { msg, kind }
+                                };
+                                results[i] = Some(Err(err));
+                                done += 1;
+                            }
+                        }
                     }
                 }
                 Event::Msg { worker, gen, msg: Msg::Job { .. } } => {
@@ -765,7 +1021,10 @@ impl ShardPool {
     }
 
     /// Send queued jobs to live workers with pipeline capacity; with an
-    /// empty queue, duplicate outstanding jobs onto idle workers.
+    /// empty queue, duplicate outstanding jobs onto idle workers
+    /// (charging the straggler duplicate to the job's [`JOB_RETRIES`]
+    /// budget).  Jobs whose retry backoff has not expired stay queued.
+    #[allow(clippy::too_many_arguments)] // one call site; the run-loop state
     fn dispatch(
         &mut self,
         descs: &[JobDesc],
@@ -774,7 +1033,10 @@ impl ShardPool {
         queue: &mut VecDeque<usize>,
         dispatched: &mut [Vec<usize>],
         deaths: &mut [u32],
+        retries: &mut [u32],
+        backoff: &[Option<Instant>],
     ) {
+        let now = Instant::now();
         loop {
             let Some(w) = self
                 .workers
@@ -786,17 +1048,28 @@ impl ShardPool {
             else {
                 return;
             };
-            // Skip anything that completed while queued (a duplicate's
-            // first copy finished).
+            // Drop anything that completed while queued (a duplicate's
+            // first copy finished); skip — but keep — jobs still backing
+            // off.
             while queue.front().is_some_and(|&i| results[i].is_some()) {
                 queue.pop_front();
             }
-            let i = match queue.pop_front() {
+            let eligible = queue
+                .iter()
+                .position(|&i| {
+                    results[i].is_none()
+                        && backoff[i].is_none_or(|b| b <= now)
+                })
+                .and_then(|p| queue.remove(p));
+            let i = match eligible {
                 Some(i) => i,
                 None => {
+                    if !queue.is_empty() {
+                        return; // everything queued is backing off
+                    }
                     // Straggler re-dispatch: only for fully idle workers,
                     // onto the least-duplicated outstanding job this worker
-                    // has not seen.
+                    // has not seen — budget allowing.
                     if !self.workers[w].outstanding.is_empty() {
                         return;
                     }
@@ -804,13 +1077,33 @@ impl ShardPool {
                         .filter(|&i| {
                             results[i].is_none()
                                 && !dispatched[i].contains(&w)
+                                && retries[i] < JOB_RETRIES
                         })
                         .min_by_key(|&i| dispatched[i].len())
                     else {
                         return;
                     };
+                    retries[i] += 1; // the duplicate consumes retry budget
                     i
                 }
+            };
+            // Prefer a worker that has not seen this job (a retried job
+            // lands on a different process when one exists); fall back to
+            // the least-loaded — on a one-worker pool the retry must
+            // still go somewhere.
+            let w = if dispatched[i].contains(&w) {
+                self.workers
+                    .iter()
+                    .enumerate()
+                    .filter(|(wi, wk)| {
+                        wk.alive
+                            && wk.outstanding.len() < PIPELINE
+                            && !dispatched[i].contains(wi)
+                    })
+                    .min_by_key(|(_, wk)| wk.outstanding.len())
+                    .map_or(w, |(wi, _)| wi)
+            } else {
+                w
             };
             let line = encode_job(base + i as u64, &descs[i]);
             let ok = match self.workers[w].stdin.as_mut() {
@@ -820,7 +1113,7 @@ impl ShardPool {
                 None => false,
             };
             if ok {
-                self.workers[w].outstanding.insert(i);
+                self.workers[w].outstanding.insert(i, Instant::now());
                 dispatched[i].push(w);
             } else {
                 // Broken pipe: handle the death here in full (the reader
@@ -855,7 +1148,7 @@ impl ShardPool {
         deaths: &mut [u32],
         descs: &[JobDesc],
     ) {
-        for i in std::mem::take(&mut worker.outstanding) {
+        for (i, _dispatched_at) in std::mem::take(&mut worker.outstanding) {
             if results[i].is_some() {
                 continue;
             }

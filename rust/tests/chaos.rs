@@ -1,0 +1,192 @@
+//! Fault-injection (chaos) integration tests (DESIGN.md §16).
+//!
+//! The contract under test: a deterministic [`FaultPlan`] within the
+//! recovery budgets is **invisible** — results stay bit-identical to a
+//! clean in-process run — and a plan *past* budget surfaces as a fatal,
+//! classified error at exactly the faulted job's index.  Three seams:
+//!
+//! 1. **Exec site, determinism** — a seeded plan replayed through
+//!    [`ChaosExec`] over [`LocalExec`] produces the same bytes twice, and
+//!    the same bytes as a chaos-free run (injected transients heal inside
+//!    the wrapper's retry budget; delays and duplicates never touch
+//!    results).
+//! 2. **Worker site, real recovery** — worker kills, corrupted wire
+//!    lines, transients, delays and duplicated result lines injected
+//!    inside real `marvel shard-worker` processes (plan delivered via
+//!    `MARVEL_CHAOS`) exercise the coordinator's death requeue + respawn
+//!    and retry machinery; a 2-process pool's results must match the
+//!    in-process engine bit for bit.
+//! 3. **Exec site, budget exhaustion** — a fault repeating past
+//!    [`CHAOS_EXEC_RETRIES`] yields a fatal `retry budget exhausted`
+//!    [`SimError::Remote`] at the faulted index; every other job is
+//!    untouched.
+//!
+//! Like tests/shard.rs, the process-spawning test uses the real `marvel`
+//! binary via `CARGO_BIN_EXE_marvel` and synthetic models, so no
+//! artifacts directory is needed.
+
+use std::path::{Path, PathBuf};
+
+use marvel::sim::chaos::{CHAOS_EXEC_RETRIES, MARVEL_CHAOS_ENV};
+use marvel::sim::exec::{Executor, JobSpec, LocalExec};
+use marvel::sim::shard::{self, desc_for, run_descs_local, JobDesc,
+                         ShardPool, WorkerCmd};
+use marvel::sim::{ChaosExec, FaultPlan, JobOutput, RemoteKind, SimError,
+                  V0, V4};
+use marvel::util::rng::Rng;
+
+/// The real worker binary with a chaos plan delivered the way the CLI
+/// delivers it: through the `MARVEL_CHAOS` environment (an explicit
+/// `envs` entry, so the coordinator's own environment stays untouched).
+fn chaos_worker_cmd(plan: &str) -> WorkerCmd {
+    WorkerCmd {
+        program: PathBuf::from(env!("CARGO_BIN_EXE_marvel")),
+        envs: vec![(MARVEL_CHAOS_ENV.to_string(), plan.to_string())],
+        args: vec![
+            "shard-worker".to_string(),
+            "--artifacts".to_string(),
+            "artifacts".to_string(),
+        ],
+    }
+}
+
+/// Deterministic job descriptions for `models` × {v0, v4} × `n_inputs`,
+/// hydrated through the same path the worker uses (tests/shard.rs idiom).
+fn descs_for(models: &[&str], n_inputs: usize) -> Vec<JobDesc> {
+    let artifacts = Path::new("artifacts");
+    let mut hyd = shard::Hydrator::new(artifacts);
+    let mut descs = Vec::new();
+    for (mi, model) in models.iter().enumerate() {
+        let spec = marvel::models::resolve(artifacts, model).unwrap();
+        let mut rng = Rng::new(2000 + mi as u64);
+        for v in [V0, V4] {
+            let (c, _) = hyd.hydrate(model, v.name).unwrap();
+            for _ in 0..n_inputs {
+                let input = marvel::models::synth::Builder::random_input(
+                    &spec, &mut rng,
+                );
+                let packed = marvel::compiler::pack_input(&input).unwrap();
+                descs.push(desc_for(model, &c, &packed, 1 << 33));
+            }
+        }
+    }
+    descs
+}
+
+/// 1. Same seed ⇒ same schedule ⇒ same bytes: a seeded exec-site plan is
+/// deterministic across replays and invisible next to a clean run.
+#[test]
+fn seeded_exec_chaos_is_deterministic_and_invisible() {
+    let artifacts = Path::new("artifacts");
+    // 2 models × 2 variants × 8 inputs = 32 jobs — one per possible
+    // generated trigger index, so every fault in the plan can fire.
+    let descs = descs_for(&["synth:tiny:3", "synth:tiny:4"], 8);
+    assert_eq!(descs.len(), 32);
+    let clean = run_descs_local(artifacts, &descs, 0);
+
+    let plan = FaultPlan::parse("seed:42:12").unwrap();
+    assert_eq!(plan.faults.len(), 12);
+    assert!(
+        plan.faults.iter().all(|f| f.at < 32),
+        "generated triggers must land inside this batch"
+    );
+    let run_chaos = || -> Vec<Result<JobOutput, SimError>> {
+        let mut exec = ChaosExec::new(
+            Box::new(LocalExec::new(artifacts, 2)),
+            &plan,
+        );
+        assert_eq!(exec.describe(), "chaos(local:2)");
+        for d in &descs {
+            exec.submit(JobSpec::named(d.clone()));
+        }
+        exec.run()
+    };
+    let first = run_chaos();
+    let second = run_chaos();
+    assert_eq!(first.len(), clean.len());
+    for (i, ((a, b), l)) in first.iter().zip(&second).zip(&clean).enumerate()
+    {
+        let a = a.as_ref().expect("in-budget chaos must heal");
+        let b = b.as_ref().expect("in-budget chaos must heal on replay");
+        let l = l.as_ref().unwrap();
+        assert_eq!(a, l, "job {i}: chaos run diverged from clean run");
+        assert_eq!(b, l, "job {i}: chaos replay diverged from clean run");
+    }
+}
+
+/// 2. Worker-site faults within the budgets — an injected mid-sweep kill,
+/// a corrupted result line, and a kill alongside transient/delay/dup
+/// riders — leave a 2-process sharded sweep bit-identical to the
+/// in-process engine.  Completion + `respawns_used` pin down that the
+/// real death machinery (requeue + respawn) ran, not a lucky path.
+#[test]
+fn worker_faults_within_budget_shard_matches_local() {
+    let artifacts = Path::new("artifacts");
+    let descs = descs_for(&["synth:tiny:3", "synth:lenet:5"], 4);
+    let clean = run_descs_local(artifacts, &descs, 0);
+    for plan in [
+        "worker:kill@3",
+        "worker:corrupt@5",
+        "worker:kill@2,worker:transient@6,worker:delay@4:5,worker:dup@7",
+    ] {
+        let mut pool = ShardPool::spawn(&chaos_worker_cmd(plan), 2).unwrap();
+        let r = pool.run(&descs);
+        assert!(
+            pool.respawns_used() >= 1,
+            "{plan}: the injected death must have cost a respawn"
+        );
+        assert_eq!(r.len(), clean.len());
+        for (i, (got, want)) in r.iter().zip(&clean).enumerate() {
+            assert_eq!(
+                got.as_ref().unwrap(),
+                want.as_ref().unwrap(),
+                "{plan}: job {i} diverged after injected faults"
+            );
+        }
+    }
+}
+
+/// 3. A fault that keeps firing past [`CHAOS_EXEC_RETRIES`] surfaces as a
+/// *fatal* classified `retry budget exhausted` error at exactly the
+/// faulted index; every other job runs clean.
+#[test]
+fn exec_budget_exhaustion_is_fatal_at_the_faulted_index() {
+    let artifacts = Path::new("artifacts");
+    let descs = descs_for(&["synth:tiny:3"], 3); // 6 jobs
+    let clean = run_descs_local(artifacts, &descs, 0);
+    // Enough repeats to outlast the wrapper's retry budget.
+    let plan = FaultPlan::parse(&format!(
+        "transient@2x{}",
+        CHAOS_EXEC_RETRIES + 2
+    ))
+    .unwrap();
+    let mut exec =
+        ChaosExec::new(Box::new(LocalExec::new(artifacts, 2)), &plan);
+    for d in &descs {
+        exec.submit(JobSpec::named(d.clone()));
+    }
+    let r = exec.run();
+    assert_eq!(r.len(), clean.len());
+    match &r[2] {
+        Err(SimError::Remote { msg, kind }) => {
+            assert_eq!(
+                *kind,
+                RemoteKind::Fatal,
+                "exhausted budget must not classify as retryable: {msg}"
+            );
+            assert!(msg.contains("retry budget exhausted"), "{msg}");
+            assert!(msg.contains("at job 2"), "{msg}");
+        }
+        other => panic!("job 2 must fail fatally, got {other:?}"),
+    }
+    for (i, (got, want)) in r.iter().zip(&clean).enumerate() {
+        if i == 2 {
+            continue;
+        }
+        assert_eq!(
+            got.as_ref().unwrap(),
+            want.as_ref().unwrap(),
+            "job {i} must be untouched by job 2's exhausted budget"
+        );
+    }
+}

@@ -35,6 +35,7 @@ use marvel::util::rng::Rng;
 fn marvel_worker_cmd() -> WorkerCmd {
     WorkerCmd {
         program: PathBuf::from(env!("CARGO_BIN_EXE_marvel")),
+        envs: Vec::new(),
         args: vec![
             "shard-worker".to_string(),
             "--artifacts".to_string(),
@@ -209,7 +210,7 @@ fn hydration_failure_stays_at_its_index_on_every_backend() {
         }
         let got = exec.run();
         match &got[1] {
-            Err(SimError::Remote { msg }) => {
+            Err(SimError::Remote { msg, .. }) => {
                 assert!(msg.contains("synth:nope"), "{name}: {msg}")
             }
             other => panic!("{name}: expected hydration error, got {other:?}"),
@@ -307,6 +308,7 @@ fn poison_job_panics_local_backend() {
 fn poison_job_panics_shard_backend() {
     let cmd = WorkerCmd {
         program: PathBuf::from("/bin/sh"),
+        envs: Vec::new(),
         args: vec![
             "-c".to_string(),
             "echo '{\"type\":\"ready\",\"version\":\"stub\"}'; read line; \
@@ -350,7 +352,7 @@ fn raw_jobs_refused_by_cross_process_backend() {
     let rs = exec.run();
     assert_eq!(rs[0].as_ref().unwrap(), reference[0].as_ref().unwrap());
     match &rs[1] {
-        Err(SimError::Remote { msg }) => {
+        Err(SimError::Remote { msg, .. }) => {
             assert!(msg.contains("cross-process"), "{msg}")
         }
         other => panic!("expected capability refusal, got {other:?}"),

@@ -13,6 +13,12 @@
 //! 3. **Admission control** — a full per-model queue answers tickets with
 //!    a structured error (never a panic, never a hang) while admitted
 //!    neighbors and the *other* tenant keep serving.
+//! 4. **Deadline scheduling** — with a no-deadline flood queued first,
+//!    EDF pulls later-arriving deadline-carrying requests into the
+//!    earliest batches, while FIFO parks them behind the whole flood.
+//!    Batch sequence numbers make the comparison exact and
+//!    timing-independent (the wall-clock goodput version of this claim
+//!    lives in benches/bench_overload.rs).
 //!
 //! Like `tests/shard.rs`, the process-spawning case uses the real
 //! `marvel` binary (`CARGO_BIN_EXE_marvel`) and synthetic models, so no
@@ -27,7 +33,7 @@ use marvel::sim::exec::{Executor, LocalExec, ShardExec};
 use marvel::sim::serve::{build_serve_models, model_key, Server, Ticket};
 use marvel::sim::shard::{self, run_descs_local, JobDesc, ShardPool,
                          WorkerCmd};
-use marvel::sim::{PolicyKind, ServeOptions, V0, V4};
+use marvel::sim::{PolicyKind, ReqMeta, ServeOptions, V0, V4};
 use marvel::util::rng::Rng;
 
 fn artifacts() -> &'static Path {
@@ -63,6 +69,7 @@ fn zoo_descs(n_inputs: usize) -> Vec<JobDesc> {
 fn shard_exec(workers: usize) -> Box<dyn Executor> {
     let cmd = WorkerCmd {
         program: PathBuf::from(env!("CARGO_BIN_EXE_marvel")),
+        envs: Vec::new(),
         args: vec![
             "shard-worker".to_string(),
             "--artifacts".to_string(),
@@ -130,12 +137,14 @@ fn fifo_and_drr_replies_match_offline_reference_on_both_backends() {
 }
 
 /// Drive the skew scenario: queue `chatty_n` chatty requests, then
-/// `quiet_n` quiet ones, all inside one long collection window, and
-/// return each tenant's highest batch sequence number.
+/// `quiet_n` quiet ones (carrying `quiet_meta` — a deadline here turns
+/// the skew into the EDF scenario), all inside one long collection
+/// window, and return each tenant's highest batch sequence number.
 fn skew_batch_seqs(
     policy: PolicyKind,
     chatty_n: usize,
     quiet_n: usize,
+    quiet_meta: ReqMeta,
 ) -> (u64, u64, u64) {
     let cache = CompileCache::new();
     let units = build_serve_models(
@@ -171,7 +180,12 @@ fn skew_batch_seqs(
         tickets.push((false, client.submit(&chatty_key, vec![0; chatty_in]).unwrap()));
     }
     for _ in 0..quiet_n {
-        tickets.push((true, client.submit(&quiet_key, vec![1; quiet_in]).unwrap()));
+        tickets.push((
+            true,
+            client
+                .submit_with(&quiet_key, vec![1; quiet_in], quiet_meta)
+                .unwrap(),
+        ));
     }
     let (mut chatty_max, mut quiet_max) = (0u64, 0u64);
     for (quiet, t) in tickets {
@@ -198,7 +212,7 @@ fn skew_batch_seqs(
 fn drr_does_not_starve_the_low_rate_tenant() {
     // 80 chatty + 8 quiet ≈ 10:1, max_batch 8 -> ≥ 11 total batches.
     let (quiet_drr, chatty_drr, batches_drr) =
-        skew_batch_seqs(PolicyKind::Drr, 80, 8);
+        skew_batch_seqs(PolicyKind::Drr, 80, 8, ReqMeta::default());
     assert!(
         quiet_drr <= 4,
         "drr: quiet tenant must finish within its first batches \
@@ -210,7 +224,7 @@ fn drr_does_not_starve_the_low_rate_tenant() {
     );
 
     let (quiet_fifo, _, batches_fifo) =
-        skew_batch_seqs(PolicyKind::Fifo, 80, 8);
+        skew_batch_seqs(PolicyKind::Fifo, 80, 8, ReqMeta::default());
     assert!(
         quiet_fifo >= batches_fifo.saturating_sub(1),
         "fifo control: quiet queued last must finish in the last batches \
@@ -220,6 +234,46 @@ fn drr_does_not_starve_the_low_rate_tenant() {
         quiet_drr < quiet_fifo,
         "drr ({quiet_drr}) must beat fifo ({quiet_fifo}) for the \
          quiet tenant under skew"
+    );
+}
+
+/// Invariant 4: the same 10:1 skew with the quiet tenant carrying
+/// deadlines.  EDF orders queue heads by deadline (no-deadline work
+/// sorts last), so the quiet requests ride the earliest post-flood
+/// batches; FIFO keeps them parked behind the entire backlog.  The
+/// deadline is generous (minutes) so admission shedding never triggers —
+/// this pins down *ordering*, and leaves wall-clock attainment to
+/// benches/bench_overload.rs.
+#[test]
+fn edf_serves_deadline_requests_ahead_of_the_flood() {
+    let meta = ReqMeta {
+        deadline: Some(Duration::from_secs(120)),
+        priority: 5,
+    };
+    let (quiet_edf, chatty_edf, batches_edf) =
+        skew_batch_seqs(PolicyKind::Edf, 80, 8, meta);
+    assert!(
+        quiet_edf <= 4,
+        "edf: deadline-carrying requests must ride the earliest batches \
+         (finished at batch {quiet_edf} of {batches_edf})"
+    );
+    assert!(
+        chatty_edf > quiet_edf,
+        "edf: the no-deadline flood keeps draining after the deadline \
+         work is done"
+    );
+
+    let (quiet_fifo, _, batches_fifo) =
+        skew_batch_seqs(PolicyKind::Fifo, 80, 8, meta);
+    assert!(
+        quiet_fifo >= batches_fifo.saturating_sub(1),
+        "fifo control: deadline requests queued last drain last \
+         (finished at batch {quiet_fifo} of {batches_fifo})"
+    );
+    assert!(
+        quiet_edf < quiet_fifo,
+        "edf ({quiet_edf}) must beat fifo ({quiet_fifo}) for \
+         deadline-carrying requests under skew"
     );
 }
 

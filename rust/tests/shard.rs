@@ -35,6 +35,7 @@ use marvel::util::rng::Rng;
 fn marvel_worker_cmd() -> WorkerCmd {
     WorkerCmd {
         program: PathBuf::from(env!("CARGO_BIN_EXE_marvel")),
+        envs: Vec::new(),
         args: vec![
             "shard-worker".to_string(),
             "--artifacts".to_string(),
@@ -307,6 +308,7 @@ fn single_worker_pool_matches_local() {
 fn total_worker_loss_propagates_as_panic() {
     let cmd = WorkerCmd {
         program: PathBuf::from("/bin/sh"),
+        envs: Vec::new(),
         args: vec![
             "-c".to_string(),
             // Handshake like a worker, then die on the first job line.
@@ -352,6 +354,7 @@ fn mixed_pool_death_still_completes_batch() {
     );
     let cmd = WorkerCmd {
         program: PathBuf::from("/bin/sh"),
+        envs: Vec::new(),
         args: vec!["-c".to_string(), script],
     };
     let mut pool = ShardPool::spawn(&cmd, 2).unwrap();
@@ -397,6 +400,7 @@ fn dead_worker_respawns_and_batch_completes() {
     );
     let cmd = WorkerCmd {
         program: PathBuf::from("/bin/sh"),
+        envs: Vec::new(),
         args: vec!["-c".to_string(), script],
     };
     let mut pool = ShardPool::spawn(&cmd, 1).unwrap();

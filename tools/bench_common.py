@@ -8,15 +8,19 @@ rust/benches/common.rs):
 
     {"name": "...", "median_s": ..., "min_s": ..., "units_per_s": ...}
     {"name": "...", "p50_s": ..., "p95_s": ..., "p99_s": ...}
+    {"name": "...", "goodput": ..., "met": ..., "total": ...}
 """
 
 import json
 from pathlib import Path
 
 # (field, higher_is_better) per measurement kind, in probe order:
-# `units_per_s` throughput rows and the serve bench's `p99_s`
-# tail-latency rows (lower is better).
-KINDS = (("units_per_s", True), ("p99_s", False))
+# `units_per_s` throughput rows, the overload bench's `goodput`
+# deadline-attainment rows (a fraction in [0, 1], higher is better —
+# legitimately 0.0 under an adversarial trace, hence the zero exemption
+# in load()), and the serve bench's `p99_s` tail-latency rows (lower is
+# better).
+KINDS = (("units_per_s", True), ("goodput", True), ("p99_s", False))
 
 
 def load(path: Path) -> dict[str, tuple[str, float]]:
@@ -42,7 +46,8 @@ def load(path: Path) -> dict[str, tuple[str, float]]:
             continue
         for field, higher_better in KINDS:
             v = row.get(field)
-            if isinstance(v, (int, float)) and v > 0:
+            ok_zero = field == "goodput"  # 0.0 goodput is a real datum
+            if isinstance(v, (int, float)) and (v > 0 or (ok_zero and v >= 0)):
                 if row["name"] in out and out[row["name"]][0] == field:
                     old = out[row["name"]][1]
                     v = max(v, old) if higher_better else min(v, old)

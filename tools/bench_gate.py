@@ -8,10 +8,13 @@ Each input file holds one JSON object per line (see rust/benches/common.rs):
     {"name": "...", "median_s": ..., "min_s": ..., "units_per_s": ...}
     {"name": "...", "p50_s": ..., "p95_s": ..., "p99_s": ...}
 
-Two measurement kinds are gated:
+Three measurement kinds are gated:
 
 - `units_per_s` (throughput): higher is better; regression = current
   falling below (1 - max-drop) x previous.
+- `goodput` (the overload bench's deadline-attainment fraction): higher
+  is better, same rule as throughput; a 0.0 baseline (the adversarial
+  fifo trace) can only improve or hold.
 - `p99_s` (tail latency, the serve bench's per-tenant rows): lower is
   better; regression = current rising above previous / (1 - drop), where
   drop is `--max-drop-latency` when given (tail latency is noisier than
@@ -65,9 +68,15 @@ def main() -> int:
             continue
         now = got[1]
         compared += 1
-        # Normalize to a higher-is-better "goodness" ratio.
+        # Normalize to a higher-is-better "goodness" ratio.  A zero
+        # baseline (possible only for `goodput` rows) cannot regress:
+        # any recovery is an improvement, staying at zero is parity.
         higher_better = dict(KINDS)[kind]
-        ratio = (now / was) if higher_better else (was / now)
+        if higher_better:
+            ratio = (now / was) if was > 0 else (
+                float("inf") if now > 0 else 1.0)
+        else:
+            ratio = was / now
         max_drop = args.max_drop if higher_better else (
             args.max_drop_latency
             if args.max_drop_latency is not None else args.max_drop)

@@ -9,9 +9,10 @@ Each input file holds one JSON object per line (see rust/benches/common.rs):
     {"name": "...", "median_s": ..., "min_s": ..., "units_per_s": ...}
     {"name": "...", "p50_s": ..., "p95_s": ..., "p99_s": ...}
 
-Two measurement kinds are tracked: `units_per_s` throughput rows (higher
-is better) and the serve bench's `p99_s` tail-latency rows (lower is
-better, rendered in ms and marked `↓`).  Files are given OLDEST FIRST;
+Three measurement kinds are tracked: `units_per_s` throughput rows
+(higher is better), the overload bench's `goodput` deadline-attainment
+fractions (higher is better), and the serve bench's `p99_s` tail-latency
+rows (lower is better, rendered in ms and marked `↓`).  Files are given OLDEST FIRST;
 the last file is the current run.  For every measurement name seen
 anywhere, the dashboard shows a sparkline across the runs (missing runs
 render as a gap), the oldest and newest values, and the total change.
@@ -55,6 +56,8 @@ def fmt(v: float | None, kind: str = "units_per_s") -> str:
         return "-"
     if kind == "p99_s":
         return f"{v * 1e3:.3f}ms"
+    if kind == "goodput":
+        return f"{v:.2f}"
     if v >= 1e9:
         return f"{v / 1e9:.2f}G"
     if v >= 1e6:

@@ -102,6 +102,7 @@ pub fn compile(spec: &ModelSpec, variant: Variant) -> Result<Compiled> {
         rewrite_stats.fusedmac += rs.fusedmac;
         rewrite_stats.mac += rs.mac;
         rewrite_stats.add2i += rs.add2i;
+        rewrite_stats.xwin += rs.xwin;
         let start = instrs.len();
         asm::flatten(&e.items, &variant, &mut instrs, &mut flatten_stats)
             .with_context(|| format!("flatten layer {li}"))?;
@@ -127,6 +128,42 @@ pub fn compile(spec: &ModelSpec, variant: Variant) -> Result<Compiled> {
         flatten_stats,
         base_dm_fp: OnceLock::new(),
     })
+}
+
+/// Differential oracle for the rewrite refactor: run the generic
+/// spec-driven engine and the legacy hand-written passes side by side on
+/// every layer of `spec` and require bit-identical output (identical item
+/// streams imply identical flattened/encoded words — `asm::flatten` and
+/// `isa::encode` are pure).  `marvel extsearch --check-legacy` and CI call
+/// this on v1..v4.
+pub fn check_rewrite_legacy(spec: &ModelSpec, variant: Variant) -> Result<()> {
+    ensure!(
+        variant.xwin == 0,
+        "legacy oracle only covers ladder variants (got {})",
+        variant.name
+    );
+    spec.validate()?;
+    let plan = plan::plan(spec)?;
+    for (li, layer) in spec.layers.iter().enumerate() {
+        let mut e = asm::Emit::new();
+        codegen::emit_layer(&mut e, spec, &plan, li, layer)?;
+        let mut oracle = e.items.clone();
+        let gs = rewrite::apply(&mut e.items, &variant);
+        let ls = rewrite::legacy::apply_legacy(&mut oracle, &variant);
+        ensure!(
+            gs == ls,
+            "{} layer {li} on {}: stats diverge (generic {gs:?}, legacy {ls:?})",
+            spec.name,
+            variant.name
+        );
+        ensure!(
+            e.items == oracle,
+            "{} layer {li} on {}: rewritten streams diverge",
+            spec.name,
+            variant.name
+        );
+    }
+    Ok(())
 }
 
 /// Process-wide compile cache keyed by (model name, variant feature mask).
@@ -218,17 +255,19 @@ pub struct SpecCompileCache<'c, 's> {
 
 impl SpecCompileCache<'_, '_> {
     /// The full feature mask participates so custom variants (ablation
-    /// cores) with reused names cannot collide.
+    /// cores) with reused names cannot collide — including the mined
+    /// window mask, which changes the emitted code like any ladder bit.
     fn key(&self, v: &Variant) -> String {
         format!(
-            "{}|{:016x}|{}|{}{}{}{}",
+            "{}|{:016x}|{}|{}{}{}{}|x{:02x}",
             self.spec.name,
             self.fingerprint,
             v.name,
             v.mac as u8,
             v.add2i as u8,
             v.fusedmac as u8,
-            v.zol as u8
+            v.zol as u8,
+            v.xwin
         )
     }
 
@@ -407,6 +446,59 @@ mod tests {
         assert!(c4.rewrite_stats.fusedmac > 0);
         assert!(c4.rewrite_stats.add2i > 0);
         assert!(c4.instrs().iter().any(|i| i.is_custom()));
+    }
+
+    #[test]
+    fn generic_rewrite_matches_legacy_on_ladder_variants() {
+        // the ISSUE's differential acceptance gate: the spec-driven engine
+        // must reproduce the hand-written passes bit-identically on v0..v4
+        for spec in [tiny_conv_net(3), lenet_shaped(5), residual_net(7)] {
+            for v in VARIANTS {
+                check_rewrite_legacy(&spec, v)
+                    .unwrap_or_else(|e| panic!("{}", e));
+            }
+        }
+    }
+
+    #[test]
+    fn window_variant_compiles_and_matches_reference() {
+        let spec = tiny_conv_net(21);
+        let mut rng = Rng::new(77);
+        let input = Builder::random_input(&spec, &mut rng);
+        let want = refexec::run(&spec, &input).unwrap();
+        let full = (1u8 << crate::fusion::N_WINDOW) - 1;
+        let v = Variant::with_window(V4, full).unwrap();
+        let (got, sx) = execute(&spec, v, &input, 500_000_000).unwrap();
+        assert_eq!(got, want, "mined fusions must preserve semantics");
+        let c = compile(&spec, v).unwrap();
+        assert!(c.rewrite_stats.xwin > 0, "mined fusions must fire");
+        assert!(c
+            .instrs()
+            .iter()
+            .any(|i| matches!(i, Instr::Custom { .. })));
+        // strictly smaller and faster than the plain v4 ladder
+        let c4 = compile(&spec, V4).unwrap();
+        assert!(c.pm_bytes() < c4.pm_bytes());
+        let (_, s4) =
+            execute_compiled(&c4, &spec, &input, 1 << 32, &mut crate::sim::NopHook)
+                .unwrap();
+        assert!(
+            sx.cycles < s4.cycles,
+            "window variant must beat v4: {} vs {}",
+            sx.cycles,
+            s4.cycles
+        );
+    }
+
+    #[test]
+    fn cache_splits_window_variants() {
+        let spec = tiny_conv_net(23);
+        let cache = CompileCache::new();
+        let a = cache.get_or_compile(&spec, V4).unwrap();
+        let v = Variant::with_window(V4, 1).unwrap();
+        let b = cache.get_or_compile(&spec, v).unwrap();
+        assert!(!Arc::ptr_eq(&a, &b), "xwin must participate in the key");
+        assert_eq!(cache.len(), 2);
     }
 
     #[test]

@@ -1,0 +1,106 @@
+//! The original hand-written ladder passes, kept verbatim as the
+//! differential oracle for the generic spec-driven engine (DESIGN.md §17).
+//!
+//! [`apply_legacy`] must stay bit-identical to [`super::apply`] on every
+//! ladder variant (`xwin == 0`): `marvel extsearch --check-legacy` and the
+//! rewrite differential tests compare the two pass-for-pass.  Do not
+//! refactor these passes to share code with the generic engine — an oracle
+//! that shares its subject's bugs checks nothing.
+
+use crate::compiler::asm::Item;
+use crate::isa::Instr;
+use crate::sim::Variant;
+
+use super::patterns::{match_addi_pair, match_mul_acc};
+use super::{op_at, RewriteStats};
+
+/// Apply the legacy hand-written ladder passes (in place).  Ignores
+/// `variant.xwin`: the legacy engine predates the mined window, which is
+/// exactly why it can serve as the ladder oracle.
+pub fn apply_legacy(items: &mut Vec<Item>, variant: &Variant) -> RewriteStats {
+    let mut stats = RewriteStats::default();
+    rewrite_vec(items, variant, &mut stats);
+    stats
+}
+
+fn rewrite_vec(items: &mut Vec<Item>, variant: &Variant, stats: &mut RewriteStats) {
+    // recurse into loop bodies first
+    for item in items.iter_mut() {
+        if let Item::Loop { body, .. } = item {
+            rewrite_vec(body, variant, stats);
+        }
+    }
+    if variant.fusedmac {
+        pass_fusedmac(items, stats);
+    }
+    if variant.mac {
+        pass_mac(items, stats);
+    }
+    if variant.add2i {
+        pass_add2i(items, stats);
+    }
+}
+
+/// v3: the 4-instruction conv inner-loop pattern.
+fn pass_fusedmac(items: &mut Vec<Item>, stats: &mut RewriteStats) {
+    let mut out: Vec<Item> = Vec::with_capacity(items.len());
+    let mut i = 0;
+    while i < items.len() {
+        if let (Some(a), Some(b), Some(c), Some(d)) = (
+            op_at(items, i),
+            op_at(items, i + 1),
+            op_at(items, i + 2),
+            op_at(items, i + 3),
+        ) {
+            if match_mul_acc(a, b) {
+                if let Some((rs1, rs2, i1, i2)) = match_addi_pair(c, d) {
+                    out.push(Item::Op(Instr::FusedMac { rs1, rs2, i1, i2 }));
+                    stats.fusedmac += 1;
+                    i += 4;
+                    continue;
+                }
+            }
+        }
+        out.push(items[i].clone());
+        i += 1;
+    }
+    *items = out;
+}
+
+/// v1: mul+add accumulate on the fixed registers.
+fn pass_mac(items: &mut Vec<Item>, stats: &mut RewriteStats) {
+    let mut out: Vec<Item> = Vec::with_capacity(items.len());
+    let mut i = 0;
+    while i < items.len() {
+        if let (Some(a), Some(b)) = (op_at(items, i), op_at(items, i + 1)) {
+            if match_mul_acc(a, b) {
+                out.push(Item::Op(Instr::Mac));
+                stats.mac += 1;
+                i += 2;
+                continue;
+            }
+        }
+        out.push(items[i].clone());
+        i += 1;
+    }
+    *items = out;
+}
+
+/// v2: two consecutive in-place addi to distinct registers.
+fn pass_add2i(items: &mut Vec<Item>, stats: &mut RewriteStats) {
+    let mut out: Vec<Item> = Vec::with_capacity(items.len());
+    let mut i = 0;
+    while i < items.len() {
+        if let (Some(a), Some(b)) = (op_at(items, i), op_at(items, i + 1)) {
+            if let Some((rs1, rs2, i1, i2)) = match_addi_pair(a, b) {
+                out.push(Item::Op(Instr::Add2i { rs1, rs2, i1, i2 }));
+                stats.add2i += 1;
+                i += 2;
+                continue;
+            }
+        }
+        out.push(items[i].clone());
+        i += 1;
+    }
+    *items = out;
+}

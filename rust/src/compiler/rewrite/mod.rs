@@ -2,27 +2,32 @@
 //! baseline instruction groups with the custom instructions (paper §II.D,
 //! Listing 4's `chess_rewrite` rules).
 //!
-//! Each pass walks every straight-line window of the structured assembly
-//! (recursing into loop bodies — patterns never straddle a loop boundary)
-//! and fuses:
+//! The engine is *spec-driven* (DESIGN.md §17): every fusable instruction —
+//! the paper's ladder and the mined window slots alike — is described by a
+//! [`FusionSpec`], and one generic pass ([`pass_spec`]) walks every
+//! straight-line window of the structured assembly (recursing into loop
+//! bodies — patterns never straddle a loop boundary), replacing each match
+//! with the spec's emitted instruction via [`crate::fusion::try_match`].
 //!
-//! * [`fusedmac`]: `mul x23,x21,x22; add x20,x20,x23; addi rA,rA,i1;
-//!   addi rB,rB,i2` → `fusedmac rA,rB,i1,i2` (v3+),
-//! * [`mac`]: `mul x23,x21,x22; add x20,x20,x23` → `mac` (v1+),
-//! * [`add2i`]: `addi rA,rA,i1; addi rB,rB,i2` → `add2i rA,rB,i1,i2` (v2+),
+//! Passes run in fusion-size order so the quad wins over the pairs
+//! (`fusedmac`, then `mac`, then `add2i`), followed by the window specs
+//! enabled by [`Variant::xwin`] — window patterns match *post-ladder* code
+//! (they end in the ladder's fused forms), so they must run last.
 //!
-//! under the same constraints the hardware imposes: the fixed x20/x21/x22
+//! The constraints are the ones the hardware imposes: the fixed x20/x21/x22
 //! MAC registers, in-place `addi` (rd == rs1), distinct target registers,
 //! and the 5/10-bit immediate split of Fig 4 (commuting the two `addi`s —
 //! which are independent by the rA ≠ rB check — when only the swapped order
-//! fits).  Passes run in fusion-size order so the quad wins over the pairs.
+//! fits).  The original hand-written passes survive verbatim in [`legacy`]
+//! as the differential oracle.
 
+pub mod legacy;
 pub mod patterns;
 
 use crate::compiler::asm::Item;
+use crate::fusion::{self, FusedEmit, FusionSpec};
 use crate::isa::Instr;
 use crate::sim::Variant;
-use patterns::{match_addi_pair, match_mul_acc};
 
 /// Fusion counts (static, i.e. rewrite sites — the dynamic counts come from
 /// the profiler).
@@ -31,6 +36,8 @@ pub struct RewriteStats {
     pub fusedmac: u64,
     pub mac: u64,
     pub add2i: u64,
+    /// Mined window fusions (all slots combined).
+    pub xwin: u64,
 }
 
 /// Apply all rewrite passes enabled by `variant` (in place).
@@ -48,78 +55,62 @@ fn rewrite_vec(items: &mut Vec<Item>, variant: &Variant, stats: &mut RewriteStat
         }
     }
     if variant.fusedmac {
-        pass_fusedmac(items, stats);
+        pass_spec(items, &fusion::FUSEDMAC, stats);
     }
     if variant.mac {
-        pass_mac(items, stats);
+        pass_spec(items, &fusion::MAC, stats);
     }
     if variant.add2i {
-        pass_add2i(items, stats);
+        pass_spec(items, &fusion::ADD2I, stats);
+    }
+    // window specs consume the ladder's fused forms, so they run last
+    for spec in fusion::mask_specs(variant.xwin) {
+        pass_spec(items, spec, stats);
     }
 }
 
-fn op_at(items: &[Item], i: usize) -> Option<&Instr> {
+pub(crate) fn op_at(items: &[Item], i: usize) -> Option<&Instr> {
     match items.get(i) {
         Some(Item::Op(instr)) => Some(instr),
         _ => None,
     }
 }
 
-/// v3: the 4-instruction conv inner-loop pattern.
-fn pass_fusedmac(items: &mut Vec<Item>, stats: &mut RewriteStats) {
+/// Longest pattern in the spec pool (the ladder's fusedmac quad).
+const MAX_PATTERN: usize = 4;
+
+/// One generic peephole pass: scan for `spec.pattern`-shaped straight-line
+/// windows and replace each match with the spec's fused instruction.  The
+/// scan discipline is exactly the legacy passes': advance by the pattern
+/// length on a match, by one item otherwise, never re-scanning emitted
+/// fusions.
+fn pass_spec(items: &mut Vec<Item>, spec: &FusionSpec, stats: &mut RewriteStats) {
+    let plen = spec.pattern.len();
+    debug_assert!(plen <= MAX_PATTERN, "{}", spec.name);
     let mut out: Vec<Item> = Vec::with_capacity(items.len());
     let mut i = 0;
     while i < items.len() {
-        if let (Some(a), Some(b), Some(c), Some(d)) = (
-            op_at(items, i),
-            op_at(items, i + 1),
-            op_at(items, i + 2),
-            op_at(items, i + 3),
-        ) {
-            if match_mul_acc(a, b) {
-                if let Some((rs1, rs2, i1, i2)) = match_addi_pair(c, d) {
-                    out.push(Item::Op(Instr::FusedMac { rs1, rs2, i1, i2 }));
-                    stats.fusedmac += 1;
-                    i += 4;
-                    continue;
+        let mut window = [Instr::Ecall; MAX_PATTERN];
+        let mut n = 0;
+        while n < plen {
+            match op_at(items, i + n) {
+                Some(instr) => {
+                    window[n] = *instr;
+                    n += 1;
                 }
+                None => break,
             }
         }
-        out.push(items[i].clone());
-        i += 1;
-    }
-    *items = out;
-}
-
-/// v1: mul+add accumulate on the fixed registers.
-fn pass_mac(items: &mut Vec<Item>, stats: &mut RewriteStats) {
-    let mut out: Vec<Item> = Vec::with_capacity(items.len());
-    let mut i = 0;
-    while i < items.len() {
-        if let (Some(a), Some(b)) = (op_at(items, i), op_at(items, i + 1)) {
-            if match_mul_acc(a, b) {
-                out.push(Item::Op(Instr::Mac));
-                stats.mac += 1;
-                i += 2;
-                continue;
-            }
-        }
-        out.push(items[i].clone());
-        i += 1;
-    }
-    *items = out;
-}
-
-/// v2: two consecutive in-place addi to distinct registers.
-fn pass_add2i(items: &mut Vec<Item>, stats: &mut RewriteStats) {
-    let mut out: Vec<Item> = Vec::with_capacity(items.len());
-    let mut i = 0;
-    while i < items.len() {
-        if let (Some(a), Some(b)) = (op_at(items, i), op_at(items, i + 1)) {
-            if let Some((rs1, rs2, i1, i2)) = match_addi_pair(a, b) {
-                out.push(Item::Op(Instr::Add2i { rs1, rs2, i1, i2 }));
-                stats.add2i += 1;
-                i += 2;
+        if n == plen {
+            if let Some(fused) = fusion::try_match(spec, &window[..plen]) {
+                out.push(Item::Op(fused));
+                match spec.emit {
+                    FusedEmit::Mac => stats.mac += 1,
+                    FusedEmit::Add2i => stats.add2i += 1,
+                    FusedEmit::FusedMac => stats.fusedmac += 1,
+                    FusedEmit::Custom(_) => stats.xwin += 1,
+                }
+                i += plen;
                 continue;
             }
         }
@@ -133,8 +124,9 @@ fn pass_add2i(items: &mut Vec<Item>, stats: &mut RewriteStats) {
 mod tests {
     use super::*;
     use crate::compiler::asm::{ACC, OPA, OPB, SCR};
-    use crate::isa::{AluImmOp, AluOp};
-    use crate::sim::{V1, V2, V3};
+    use crate::isa::{AluImmOp, AluOp, LoadOp};
+    use crate::sim::{V1, V2, V3, V4};
+    use crate::util::rng::Rng;
 
     fn mul_scr() -> Item {
         Item::Op(Instr::Op { op: AluOp::Mul, rd: SCR, rs1: OPA, rs2: OPB })
@@ -144,6 +136,9 @@ mod tests {
     }
     fn addi(rd: u8, rs1: u8, imm: i32) -> Item {
         Item::Op(Instr::OpImm { op: AluImmOp::Addi, rd, rs1, imm })
+    }
+    fn lb(rd: u8, rp: u8) -> Item {
+        Item::Op(Instr::Load { op: LoadOp::Lb, rd, rs1: rp, offset: 0 })
     }
 
     #[test]
@@ -255,5 +250,108 @@ mod tests {
         ];
         let st = apply(&mut items, &V3);
         assert_eq!(st.mac + st.fusedmac, 0);
+    }
+
+    #[test]
+    fn window_spec_fuses_conv_inner_loop_on_v4() {
+        // the v4 steady state: lb; lb; (mul; add; addi; addi → fusedmac),
+        // then the enabled ldmacpp slot folds the loads in
+        let body = || vec![lb(OPA, 10), lb(OPB, 11), mul_scr(), acc_add(),
+                           addi(10, 10, 1), addi(11, 11, 1)];
+        let v = Variant::with_window(V4, 0b10).unwrap();
+        let mut items = body();
+        let st = apply(&mut items, &v);
+        assert_eq!((st.fusedmac, st.xwin), (1, 1));
+        assert_eq!(
+            items,
+            vec![Item::Op(Instr::Custom { idx: 1, rs1: 10, rs2: 11, i1: 1, i2: 1 })]
+        );
+        // without the slot enabled the ladder result is untouched
+        let mut plain = body();
+        let st = apply(&mut plain, &V4);
+        assert_eq!((st.fusedmac, st.xwin), (1, 0));
+        assert_eq!(
+            plain,
+            vec![
+                lb(OPA, 10),
+                lb(OPB, 11),
+                Item::Op(Instr::FusedMac { rs1: 10, rs2: 11, i1: 1, i2: 1 })
+            ]
+        );
+    }
+
+    #[test]
+    fn ldmac_fuses_bare_mac_window() {
+        // a mac whose addi pair didn't fuse (clamp in between) still gets
+        // its loads folded by slot 0
+        let v = Variant::with_window(V4, 0b01).unwrap();
+        let mut items = vec![
+            lb(OPA, 12),
+            lb(OPB, 13),
+            mul_scr(),
+            acc_add(),
+            Item::ClampAbove { reg: ACC, bound: 24 },
+            addi(12, 12, 1),
+        ];
+        let st = apply(&mut items, &v);
+        assert_eq!((st.mac, st.xwin), (1, 1));
+        assert_eq!(
+            items[0],
+            Item::Op(Instr::Custom { idx: 0, rs1: 12, rs2: 13, i1: 0, i2: 0 })
+        );
+        assert_eq!(items.len(), 3);
+    }
+
+    /// Random structured-assembly streams built from the vocabulary the
+    /// codegen actually emits (plus near-miss junk), for the differential
+    /// oracle below.
+    fn random_items(rng: &mut Rng, depth: usize) -> Vec<Item> {
+        let n = rng.range_usize(4, 32);
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            match rng.int_in(0, 11) {
+                0 | 1 => v.push(mul_scr()),
+                2 | 3 => v.push(acc_add()),
+                4..=6 => {
+                    let r = rng.int_in(1, 31) as u8;
+                    v.push(addi(r, r, rng.int_in(-4, 1200)));
+                }
+                7 => {
+                    // non-in-place addi (a move): must never fuse
+                    v.push(addi(
+                        rng.int_in(1, 31) as u8,
+                        rng.int_in(0, 31) as u8,
+                        rng.int_in(0, 40),
+                    ));
+                }
+                8 => v.push(lb(
+                    *rng.choice(&[OPA, OPB, 9]),
+                    rng.int_in(1, 31) as u8,
+                )),
+                9 if depth > 0 => v.push(Item::Loop {
+                    n: 2,
+                    body: random_items(rng, depth - 1),
+                }),
+                10 => v.push(Item::ClampAbove { reg: ACC, bound: 24 }),
+                _ => v.push(Item::Op(Instr::Mac)),
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn generic_engine_matches_legacy_oracle_bit_for_bit() {
+        let mut rng = Rng::new(0xE5E5);
+        for case in 0..400 {
+            let items = random_items(&mut rng, 2);
+            for v in [V1, V2, V3, V4] {
+                let mut generic = items.clone();
+                let mut oracle = items.clone();
+                let gs = apply(&mut generic, &v);
+                let ls = legacy::apply_legacy(&mut oracle, &v);
+                assert_eq!(gs, ls, "case {case} stats on {}", v.name);
+                assert_eq!(generic, oracle, "case {case} items on {}", v.name);
+            }
+        }
     }
 }

@@ -28,11 +28,11 @@ use crate::util::tables::{fmt_si, Table};
 pub fn ablation_variants() -> Vec<Variant> {
     vec![
         V0,
-        Variant { name: "mac-only", mac: true, add2i: false, fusedmac: false, zol: false },
-        Variant { name: "add2i-only", mac: false, add2i: true, fusedmac: false, zol: false },
-        Variant { name: "fusedmac-only", mac: false, add2i: false, fusedmac: true, zol: false },
-        Variant { name: "zol-only", mac: false, add2i: false, fusedmac: false, zol: true },
-        Variant { name: "pairs(no quad)", mac: true, add2i: true, fusedmac: false, zol: true },
+        Variant { name: "mac-only", mac: true, add2i: false, fusedmac: false, zol: false, xwin: 0 },
+        Variant { name: "add2i-only", mac: false, add2i: true, fusedmac: false, zol: false, xwin: 0 },
+        Variant { name: "fusedmac-only", mac: false, add2i: false, fusedmac: true, zol: false, xwin: 0 },
+        Variant { name: "zol-only", mac: false, add2i: false, fusedmac: false, zol: true, xwin: 0 },
+        Variant { name: "pairs(no quad)", mac: true, add2i: true, fusedmac: false, zol: true, xwin: 0 },
         V4,
     ]
 }

@@ -1,0 +1,230 @@
+//! `marvel extsearch` — the closed mining loop over the model zoo
+//! (DESIGN.md §17): profile → propose → rewrite → re-measure, per model.
+//!
+//! For each model the search profiles the *post-ladder* stream (v4, where
+//! the window counters fire), asks [`crate::extgen::propose`] which
+//! [`crate::fusion::WINDOW`] specs pay for themselves, folds the accepted
+//! slots into an executable variant (`Variant::with_window`), and then
+//! re-measures v0 / v4 / v4+mined through the executor seam — the same
+//! [`run_flow_on`] path every sweep uses, so `--backend shard:N` produces
+//! bit-identical rows.  Per-model-class speedups land in
+//! `BENCH_extgen.json` via the CLI (`--json`).
+//!
+//! Profiling itself always runs in-process: profile hooks observe every
+//! retired instruction and deliberately do not cross the executor wire
+//! (DESIGN.md §13) — only the re-measure sweep is backend-switchable.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::compiler::{self, CompileCache};
+use crate::coordinator::flow::{run_flow_on, FlowOptions};
+use crate::extgen;
+use crate::models;
+use crate::profiler::{PatternCounts, ProfileHook};
+use crate::sim::exec::Executor;
+use crate::sim::{Variant, V0, V4, VARIANTS};
+use crate::util::rng::Rng;
+
+/// Search configuration.
+#[derive(Clone, Debug)]
+pub struct ExtSearchOptions {
+    /// Minimum dynamic-savings fraction a proposal must clear
+    /// (`extgen::propose`'s noise filter).
+    pub min_savings: f64,
+    /// Golden inputs per re-measure run.
+    pub n_inputs: usize,
+    /// Also run the generic-vs-legacy rewrite differential on every
+    /// ladder variant before measuring (the CI oracle check).
+    pub check_legacy: bool,
+}
+
+impl Default for ExtSearchOptions {
+    fn default() -> Self {
+        ExtSearchOptions { min_savings: 0.005, n_inputs: 2, check_legacy: false }
+    }
+}
+
+/// One measured (variant, cycles, speedup-vs-v0) row.
+#[derive(Clone, Debug)]
+pub struct SearchRow {
+    pub variant: Variant,
+    pub cycles: u64,
+    pub instrs: u64,
+    pub speedup: f64,
+}
+
+/// The search outcome for one model.
+#[derive(Clone, Debug)]
+pub struct ModelSearch {
+    pub model: String,
+    /// Names of the mined window proposals that cleared the bar.
+    pub mined: Vec<&'static str>,
+    /// The [`Variant::xwin`] mask those proposals select (0 = none).
+    pub mask: u8,
+    /// v0 / v4 / (v4 + mined) measurements, flow order.
+    pub rows: Vec<SearchRow>,
+    /// Every measured variant matched the golden logits.
+    pub verified: bool,
+}
+
+/// The default search zoo: one model per class the paper's argument turns
+/// on — plain conv (lenet-shaped), depthwise-separable, and recurrent —
+/// so the emitted rows show how the *same* mined extension pays off
+/// differently per model class.
+pub const DEFAULT_ZOO: [&str; 3] =
+    ["synth:lenet:5", "synth:dwconv:9", "synth:rnn:11"];
+
+/// Profile one model's post-ladder (v4) stream with a deterministic
+/// synthetic input — the stream the window counters are defined on.
+pub fn profile_post_ladder(
+    artifacts: &Path,
+    name: &str,
+    cache: &CompileCache,
+) -> Result<PatternCounts> {
+    let spec = models::resolve(artifacts, name)?;
+    let c = cache.for_spec(&spec).get_or_compile(V4)?;
+    let mut hook = ProfileHook::new(c.words().len());
+    let mut rng = Rng::new(crate::util::fnv1a(name.as_bytes()));
+    let input = models::synth::Builder::random_input(&spec, &mut rng);
+    compiler::execute_compiled(&c, &spec, &input, 1 << 36, &mut hook)
+        .with_context(|| format!("profiling {name} on v4"))?;
+    Ok(hook.finish())
+}
+
+/// Run the full search over `model_names` on `exec`.
+pub fn search(
+    artifacts: &Path,
+    model_names: &[String],
+    opts: &ExtSearchOptions,
+    cache: &CompileCache,
+    exec: &mut dyn Executor,
+) -> Result<Vec<ModelSearch>> {
+    let mut out = Vec::with_capacity(model_names.len());
+    for name in model_names {
+        if opts.check_legacy {
+            let spec = models::resolve(artifacts, name)?;
+            for v in VARIANTS {
+                compiler::check_rewrite_legacy(&spec, v).with_context(|| {
+                    format!("generic-vs-legacy diff on {name} {}", v.name)
+                })?;
+            }
+        }
+
+        // mine: post-ladder profile → proposals → enable mask
+        let profile = profile_post_ladder(artifacts, name, cache)?;
+        let props = extgen::propose(&profile, opts.min_savings);
+        let mask = extgen::window_mask(&props);
+        let mined: Vec<&'static str> = props
+            .iter()
+            .filter(|p| p.window_slot.is_some())
+            .map(|p| p.name)
+            .collect();
+
+        // re-measure: v0 baseline, the ladder top, and the mined variant
+        let mut variants = vec![V0, V4];
+        if let Some(v) = Variant::with_window(V4, mask) {
+            if mask != 0 {
+                variants.push(v);
+            }
+        }
+        let fopts = FlowOptions {
+            n_inputs: opts.n_inputs,
+            variants,
+            ..FlowOptions::default()
+        };
+        let f = run_flow_on(artifacts, name, &fopts, cache, exec)
+            .with_context(|| format!("re-measuring {name}"))?;
+        let rows = f
+            .metrics
+            .iter()
+            .map(|m| SearchRow {
+                variant: m.variant,
+                cycles: m.cycles,
+                instrs: m.instrs,
+                speedup: m.speedup,
+            })
+            .collect();
+        out.push(ModelSearch {
+            model: name.clone(),
+            mined,
+            mask,
+            rows,
+            verified: f.verified_golden,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::exec::LocalExec;
+
+    #[test]
+    fn mined_variant_beats_the_ladder_on_conv_classes() {
+        let artifacts = Path::new("artifacts");
+        let cache = CompileCache::new();
+        let mut exec = LocalExec::new(artifacts, 1);
+        let models: Vec<String> =
+            ["synth:lenet:5", "synth:dwconv:9"].map(String::from).to_vec();
+        let opts = ExtSearchOptions { n_inputs: 1, ..Default::default() };
+        let res = search(artifacts, &models, &opts, &cache, &mut exec).unwrap();
+        for r in &res {
+            assert!(r.verified, "{}: golden mismatch", r.model);
+            assert_ne!(r.mask, 0, "{}: conv-class code must mine a window", r.model);
+            assert!(r.mined.contains(&"ldmacpp"), "{}: {:?}", r.model, r.mined);
+            // rows are v0, v4, v4+x<mask>; the mined variant must beat v4
+            assert_eq!(r.rows.len(), 3);
+            let v4 = &r.rows[1];
+            let mined = &r.rows[2];
+            assert!(mined.variant.xwin != 0 && v4.variant.xwin == 0);
+            assert!(
+                mined.cycles < v4.cycles,
+                "{}: mined {} !< v4 {}",
+                r.model,
+                mined.cycles,
+                v4.cycles
+            );
+            assert!(mined.speedup > v4.speedup);
+        }
+    }
+
+    #[test]
+    fn rnn_class_measures_even_when_mining_differs() {
+        // The rnn class exercises dense matrix-vector chains; whatever the
+        // miner decides, the flow must verify and report a v4 speedup.
+        let artifacts = Path::new("artifacts");
+        let cache = CompileCache::new();
+        let mut exec = LocalExec::new(artifacts, 1);
+        let models = vec!["synth:rnn:11".to_string()];
+        let opts = ExtSearchOptions { n_inputs: 1, ..Default::default() };
+        let res = search(artifacts, &models, &opts, &cache, &mut exec).unwrap();
+        let r = &res[0];
+        assert!(r.verified);
+        assert!(r.rows.len() >= 2);
+        assert!(r.rows[1].speedup > 1.0, "v4 speedup {}", r.rows[1].speedup);
+        // dense inner loops retire lb;lb;fusedmac too — the mined variant
+        // must exist and not regress
+        if r.mask != 0 {
+            let last = r.rows.last().unwrap();
+            assert!(last.cycles <= r.rows[1].cycles);
+        }
+    }
+
+    #[test]
+    fn check_legacy_mode_passes_on_the_zoo() {
+        let artifacts = Path::new("artifacts");
+        let cache = CompileCache::new();
+        let mut exec = LocalExec::new(artifacts, 1);
+        let models = vec!["synth:tiny:3".to_string()];
+        let opts = ExtSearchOptions {
+            n_inputs: 1,
+            check_legacy: true,
+            ..Default::default()
+        };
+        let res = search(artifacts, &models, &opts, &cache, &mut exec).unwrap();
+        assert!(res[0].verified);
+    }
+}

@@ -9,7 +9,9 @@
 //! runs (see DESIGN.md §5 for the experiment index).
 
 pub mod experiments;
+pub mod extsearch;
 pub mod flow;
 
+pub use extsearch::{ExtSearchOptions, ModelSearch};
 pub use flow::{run_flow, run_flow_cached, run_flow_on, FlowOptions,
                FlowResult, PreparedFlow, VariantMetrics};

@@ -45,8 +45,22 @@ pub struct Proposal {
     pub cost: FuCost,
     /// Immediate-width allocation, if the format carries immediates.
     pub imm_split: Option<(u32, u32, f64)>,
+    /// For mined proposals: the [`crate::fusion::WINDOW`] slot whose spec
+    /// this proposal enables.  `None` for the v1..v4 ladder proposals,
+    /// which map onto variant feature bits instead.
+    pub window_slot: Option<u8>,
     /// nML-style hardware model fragment (Fig 6).
     pub nml: String,
+}
+
+/// The [`crate::sim::Variant::xwin`] enable mask a proposal set selects —
+/// how mined proposals become executable ISS variants
+/// (`Variant::with_window`).
+pub fn window_mask(props: &[Proposal]) -> u8 {
+    props
+        .iter()
+        .filter_map(|p| p.window_slot)
+        .fold(0, |m, s| m | (1 << s))
 }
 
 /// Derive extension proposals from a v0 profile.
@@ -75,6 +89,7 @@ pub fn propose(profile: &PatternCounts, min_savings: f64) -> Vec<Proposal> {
                 savings_frac: savings,
                 cost: FU_COSTS[0],
                 imm_split: None,
+                window_slot: None,
                 nml: nml::mac_nml(),
             });
         }
@@ -100,6 +115,7 @@ pub fn propose(profile: &PatternCounts, min_savings: f64) -> Vec<Proposal> {
                 savings_frac: savings,
                 cost: FU_COSTS[1],
                 imm_split: Some(split),
+                window_slot: None,
                 nml: nml::add2i_nml(split.0, split.1),
             });
         }
@@ -122,6 +138,7 @@ pub fn propose(profile: &PatternCounts, min_savings: f64) -> Vec<Proposal> {
                 savings_frac: savings,
                 cost: FU_COSTS[2],
                 imm_split: Some(split),
+                window_slot: None,
                 nml: nml::fusedmac_nml(split.0, split.1),
             });
         }
@@ -143,7 +160,46 @@ pub fn propose(profile: &PatternCounts, min_savings: f64) -> Vec<Proposal> {
                 savings_frac: savings,
                 cost: FU_COSTS[3],
                 imm_split: None,
+                window_slot: None,
                 nml: nml::zol_nml(),
+            });
+        }
+    }
+
+    // --- mined window specs: post-ladder fusions over the spec pool ---
+    // Their counters only fire on post-ladder streams (profile on v4), so
+    // a v0 profile proposes exactly the paper's four — the window rung of
+    // the pipeline is strictly additive.
+    for (i, spec) in crate::fusion::WINDOW.iter().enumerate() {
+        let occ = profile.window[i];
+        if occ == 0 {
+            continue;
+        }
+        let saved = spec.cycles_saved * occ;
+        let before = spec.pattern.len() as u64 * occ;
+        let savings = saved as f64 / total_cycles;
+        if savings >= min_savings {
+            let has_imms = spec
+                .sem
+                .iter()
+                .any(|s| matches!(s, crate::fusion::SemOp::AddImm1
+                                    | crate::fusion::SemOp::AddImm2));
+            let opcode = crate::isa::opcodes::XWIN[i];
+            out.push(Proposal {
+                name: spec.name,
+                pattern: spec.desc,
+                opcode,
+                occurrences: occ,
+                cycles_before: before,
+                cycles_after: before - saved,
+                savings_frac: savings,
+                cost: spec.cost,
+                // immediates arrive pre-encoded from the fused forms the
+                // pattern consumes, so the split covers them by definition
+                imm_split: has_imms
+                    .then_some((spec.split.bits1, spec.split.bits2, 1.0)),
+                window_slot: Some(i as u8),
+                nml: nml::window_nml(spec, opcode),
             });
         }
     }
@@ -200,6 +256,35 @@ mod tests {
         assert!(cov >= paper);
         assert!(paper > 0.95, "5/10 coverage {paper}");
         assert_eq!(a + b, 15);
+    }
+
+    #[test]
+    fn v4_profile_mines_window_proposals() {
+        // profile the post-ladder stream: the conv inner loop retires
+        // lb; lb; fusedmac, which is exactly the ldmacpp opportunity
+        let spec = lenet_shaped(33);
+        let c = compile(&spec, crate::sim::V4).unwrap();
+        let mut hook = ProfileHook::new(c.words().len());
+        let mut rng = Rng::new(2);
+        let input = Builder::random_input(&spec, &mut rng);
+        execute_compiled(&c, &spec, &input, 1 << 33, &mut hook).unwrap();
+        let profile = hook.finish();
+
+        let props = propose(&profile, 0.005);
+        let pp = props
+            .iter()
+            .find(|p| p.name == "ldmacpp")
+            .expect("ldmacpp must clear the default bar on conv code");
+        assert_eq!(pp.window_slot, Some(1));
+        assert_eq!(pp.occurrences, profile.window[1]);
+        assert!(pp.cycles_after < pp.cycles_before);
+        assert!(pp.nml.contains("ldmacpp_instr"));
+        // the selected mask builds a runnable variant
+        let mask = window_mask(&props);
+        assert_ne!(mask & 0b10, 0);
+        assert!(crate::sim::Variant::with_window(crate::sim::V4, mask).is_some());
+        // a v0 profile proposes no window slots at all
+        assert_eq!(window_mask(&propose(&lenet_profile(), 0.0)), 0);
     }
 
     #[test]

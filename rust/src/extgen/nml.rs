@@ -56,6 +56,40 @@ pub fn fusedmac_nml(bits_small: u32, bits_large: u32) -> String {
     )
 }
 
+/// nML for a mined window spec: the action block is rendered straight from
+/// the spec's executable [`crate::fusion::SemOp`] micro-program, so the
+/// hand-off artifact can never desynchronize from what the ISS executes.
+pub fn window_nml(spec: &crate::fusion::FusionSpec, opcode: u32) -> String {
+    use crate::fusion::SemOp;
+    let mut actions = String::new();
+    for op in spec.sem {
+        let line = match op {
+            SemOp::MacStep => "      x20 = add(x20, mul(x21, x22)) @mac;",
+            SemOp::AddImm1 => "      rs1 = add(rs1, i1) @alu;",
+            SemOp::AddImm2 => "      rs2 = add(rs2, i2) @alu2;",
+            SemOp::LoadByteA => "      x21 = sext8(DM[rs1]) @ld;",
+            SemOp::LoadByteB => "      x22 = sext8(DM[rs2]) @ld2;",
+        };
+        actions.push_str(line);
+        actions.push('\n');
+    }
+    format!(
+        r#"opn {name}_instr(rs1: c5u, rs2: c5u, i1: c{b1}u, i2: c{b2}u)
+{{
+  action {{
+    stage EX:
+{actions}  }}
+  syntax : "{name} " rs1 "," rs2 "," i1 "," i2;
+  image  : i2::i1[4..3]::rs2::i1[2..0]::rs1::"{opc:07b}";
+}}
+"#,
+        name = spec.name,
+        b1 = spec.split.bits1,
+        b2 = spec.split.bits2,
+        opc = opcode & 0x7f,
+    )
+}
+
 /// nML for the zero-overhead-loop register file + PCU hooks.
 pub fn zol_nml() -> String {
     r#"reg ZC<1,32>;  // loop count
@@ -85,5 +119,18 @@ mod tests {
         assert!(a.contains("c5u") && a.contains("c10u") && a.contains("0101011"));
         assert!(super::fusedmac_nml(5, 10).contains("0001011"));
         assert!(super::zol_nml().contains("ZC"));
+    }
+
+    #[test]
+    fn window_fragment_renders_the_sem_program() {
+        let spec = crate::fusion::window_spec(1);
+        let opc = crate::isa::opcodes::XWIN[1];
+        let w = super::window_nml(spec, opc);
+        assert!(w.contains("ldmacpp_instr"));
+        // one action line per SemOp, in program order
+        assert!(w.contains("DM[rs1]") && w.contains("DM[rs2]"));
+        assert!(w.contains("mul(x21, x22)"));
+        assert!(w.contains("rs2 = add(rs2, i2)"));
+        assert!(w.contains(&format!("{:07b}", opc & 0x7f)));
     }
 }

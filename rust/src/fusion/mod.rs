@@ -1,0 +1,690 @@
+//! The `FusionSpec` IR — one description per fusable instruction, shared
+//! by every layer (DESIGN.md §17).
+//!
+//! A [`FusionSpec`] says four things about one custom instruction:
+//!
+//! 1. **What to match** ([`PatElem`] template + operand/immediate
+//!    constraints): the straight-line instruction window the rewrite
+//!    engine replaces ([`crate::compiler::rewrite`]).
+//! 2. **What to emit** ([`FusedEmit`]): either one of the paper's ladder
+//!    encodings (`mac`/`add2i`/`fusedmac`, Table 3) or a slot in the
+//!    spec-driven custom-opcode *window* ([`crate::isa::opcodes::XWIN`]),
+//!    which is how *mined* instructions get encodings without touching the
+//!    ISA layer.
+//! 3. **What it costs** ([`FuCost`] area/power increment, priced into
+//!    [`crate::hw::area_of`] per enabled window slot) and what it saves
+//!    (`cycles_saved` per dynamic hit under the default cycle model).
+//! 4. **What it does** (`sem`: a [`SemOp`] micro-program interpreted by
+//!    [`exec_sem`]).  The reference interpreter, the lowered threaded
+//!    handler, and the lowered central-match loop all call the *same*
+//!    interpreter, so the three execution paths are bit-identical on
+//!    mined instructions by construction.
+//!
+//! The three hand-written ladder passes survive as canned specs
+//! ([`FUSEDMAC`], [`MAC`], [`ADD2I`]); their legacy implementations are
+//! kept verbatim in `compiler::rewrite::legacy` as the differential
+//! oracle.  Mined specs live in [`WINDOW`]: a *static* pool, because
+//! shard workers rehydrate programs from `(model, variant-name)` alone —
+//! the variant name carries which slots are enabled
+//! ([`crate::sim::Variant::xwin`]), the pool carries what each slot means.
+
+use crate::hw::FuCost;
+use crate::isa::{Instr, Reg};
+use crate::sim::memory::MemFault;
+use crate::sim::Memory;
+
+/// One element of a fusion pattern template.  Capture slots: `A` is the
+/// first pointer/addi register captured, `B` the second.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PatElem {
+    /// `mul x23, x21, x22` — exact MAC-datapath multiply.
+    MulScr,
+    /// `add x20, x20, x23` — exact accumulate.
+    AddAcc,
+    /// An already-fused `mac` (window patterns match *post-ladder* code).
+    Mac,
+    /// In-place `addi rA, rA, imm` — captures `(A, immA)`.  `rA` must not
+    /// be one of the reserved MAC datapath registers.
+    InplaceAddiA,
+    /// Second in-place `addi rB, rB, imm` — captures `(B, immB)`, requires
+    /// `rB != rA` and `rB` outside the MAC registers.
+    InplaceAddiB,
+    /// `lb x21, 0(rA)` — multiplicand byte load, captures `A`.
+    LbA,
+    /// `lb x22, 0(rB)` — multiplier byte load, captures `B`.
+    LbB,
+    /// An already-fused `add2i rA, rB, i1, i2` whose registers are exactly
+    /// the previously captured `A`/`B` — captures `(i1, i2)` pre-split.
+    Add2iAB,
+    /// An already-fused `fusedmac rA, rB, i1, i2` on exactly the captured
+    /// `A`/`B` (what the v3+ ladder leaves behind in the conv/dense inner
+    /// loop) — captures `(i1, i2)` pre-split.  Field order must be exact:
+    /// a commuted `fusedmac rB, rA, …` cannot fold into the window formats,
+    /// whose loads and post-increments share the same register fields.
+    FusedMacAB,
+}
+
+/// What a matched window is replaced with.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FusedEmit {
+    /// `Instr::Mac` (ladder v1).
+    Mac,
+    /// `Instr::Add2i` from the captured addi pair (ladder v2).
+    Add2i,
+    /// `Instr::FusedMac` from the captured addi pair (ladder v3).
+    FusedMac,
+    /// `Instr::Custom { idx }` — slot `idx` of the custom-opcode window.
+    Custom(u8),
+}
+
+/// The immediate-width allocation of a dual-immediate encoding: `bits1`
+/// for the small field, `bits2` for the large one (the paper's Fig 4
+/// 15-bit split, 5+10 for the ladder).
+///
+/// [`ImmSplit::encodes`] is the rewrite-time validity gate the
+/// `extgen::best_split` satellite requires: an observed immediate pair
+/// that the split — or the *hardware field widths* (5- and 10-bit slots
+/// in the fused encoding, [`crate::isa::encode`]) — cannot represent
+/// rejects the fusion instead of silently truncating.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ImmSplit {
+    pub bits1: u32,
+    pub bits2: u32,
+}
+
+/// Hardware width of the `i1` field in the fused encoding layout.
+pub const ENC_BITS_I1: u32 = 5;
+/// Hardware width of the `i2` field in the fused encoding layout.
+pub const ENC_BITS_I2: u32 = 10;
+
+impl ImmSplit {
+    /// The paper's chosen split (Fig 4): 5 + 10.
+    pub const PAPER: ImmSplit = ImmSplit { bits1: 5, bits2: 10 };
+
+    /// Largest value the small field can hold: bounded by both the split's
+    /// bit budget and the physical encoding field.
+    pub fn max1(&self) -> i32 {
+        (1i64 << self.bits1.min(ENC_BITS_I1)) as i32 - 1
+    }
+
+    /// Largest value the large field can hold.
+    pub fn max2(&self) -> i32 {
+        (1i64 << self.bits2.min(ENC_BITS_I2)) as i32 - 1
+    }
+
+    /// Can `(i1, i2)` be encoded as-is (no commuting)?  Immediates are
+    /// unsigned in the fused formats, so negatives always reject.
+    pub fn encodes(&self, i1: i32, i2: i32) -> bool {
+        (0..=self.max1()).contains(&i1) && (0..=self.max2()).contains(&i2)
+    }
+
+    /// Fit `(ia, ib)` into the split, commuting when allowed and only the
+    /// swapped order fits — the one definition of "the immediates fit"
+    /// shared by the ladder and every mined spec.  Returns the field
+    /// assignment `(first, second, i1, i2)` over the caller's pair labels.
+    pub fn fit<T: Copy>(
+        &self,
+        commute: bool,
+        a: (T, i32),
+        b: (T, i32),
+    ) -> Option<(T, T, u8, u16)> {
+        if self.encodes(a.1, b.1) {
+            Some((a.0, b.0, a.1 as u8, b.1 as u16))
+        } else if commute && self.encodes(b.1, a.1) {
+            Some((b.0, a.0, b.1 as u8, a.1 as u16))
+        } else {
+            None
+        }
+    }
+}
+
+/// One micro-step of a fused instruction's semantics.  The operand names
+/// refer to the encoded fields: `rs1`/`rs2` are the two register operands,
+/// `i1`/`i2` the two immediates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SemOp {
+    /// `x20 += x21 * x22` (wrapping).
+    MacStep,
+    /// `r[rs1] += i1` (wrapping; x0 stays hardwired).
+    AddImm1,
+    /// `r[rs2] += i2`.
+    AddImm2,
+    /// `x21 = sext8(dm[r[rs1]])` — multiplicand byte load.
+    LoadByteA,
+    /// `x22 = sext8(dm[r[rs2]])` — multiplier byte load.
+    LoadByteB,
+}
+
+/// One fusable instruction, end to end.
+#[derive(Debug)]
+pub struct FusionSpec {
+    /// Stable identifier; doubles as the disassembly mnemonic.
+    pub name: &'static str,
+    /// Human-readable pattern description (reports, proposals).
+    pub desc: &'static str,
+    /// The instruction window the rewrite engine replaces.
+    pub pattern: &'static [PatElem],
+    /// What the window is replaced with.
+    pub emit: FusedEmit,
+    /// May the captured addi pair swap fields to fit the split?
+    pub commute: bool,
+    /// Immediate-width allocation for the captured pair.
+    pub split: ImmSplit,
+    /// Area/power increment when a core enables this spec.
+    pub cost: FuCost,
+    /// Cycles saved per dynamic hit under the default cycle model
+    /// (pattern length minus the one fused cycle — every replaced
+    /// instruction is 1-cycle in the default model).
+    pub cycles_saved: u64,
+    /// Executable semantics, in original program order.
+    pub sem: &'static [SemOp],
+}
+
+/// Ladder spec: `mul x23,x21,x22; add x20,x20,x23` → `mac` (v1+).
+pub static MAC: FusionSpec = FusionSpec {
+    name: "mac",
+    desc: "mul x23,x21,x22 ; add x20,x20,x23",
+    pattern: &[PatElem::MulScr, PatElem::AddAcc],
+    emit: FusedEmit::Mac,
+    commute: false,
+    split: ImmSplit::PAPER,
+    cost: crate::hw::FU_COSTS[0],
+    cycles_saved: 1,
+    sem: &[SemOp::MacStep],
+};
+
+/// Ladder spec: `addi rA,rA,i1; addi rB,rB,i2` → `add2i` (v2+).
+pub static ADD2I: FusionSpec = FusionSpec {
+    name: "add2i",
+    desc: "addi rA,rA,i1 ; addi rB,rB,i2",
+    pattern: &[PatElem::InplaceAddiA, PatElem::InplaceAddiB],
+    emit: FusedEmit::Add2i,
+    commute: true,
+    split: ImmSplit::PAPER,
+    cost: crate::hw::FU_COSTS[1],
+    cycles_saved: 1,
+    sem: &[SemOp::AddImm1, SemOp::AddImm2],
+};
+
+/// Ladder spec: the 4-instruction conv inner-loop quad → `fusedmac` (v3+).
+pub static FUSEDMAC: FusionSpec = FusionSpec {
+    name: "fusedmac",
+    desc: "mul ; add(acc) ; addi rA ; addi rB",
+    pattern: &[
+        PatElem::MulScr,
+        PatElem::AddAcc,
+        PatElem::InplaceAddiA,
+        PatElem::InplaceAddiB,
+    ],
+    emit: FusedEmit::FusedMac,
+    commute: true,
+    split: ImmSplit::PAPER,
+    cost: crate::hw::FU_COSTS[2],
+    cycles_saved: 3,
+    sem: &[SemOp::MacStep, SemOp::AddImm1, SemOp::AddImm2],
+};
+
+/// The mined-spec pool: slot `idx` of the custom-opcode window.  These
+/// match *post-ladder* code (their patterns end in the ladder's fused
+/// `mac`/`fusedmac`), so the generic engine runs them after the ladder
+/// passes.
+///
+/// Slot 0, `ldmac`: a bare `mac` still spends two load cycles feeding the
+/// datapath registers; fuse `lb x21,0(rA); lb x22,0(rB); mac` into one
+/// cycle.
+///
+/// Slot 1, `ldmacpp`: the v4 conv/dense steady state — after the ladder
+/// the whole inner-loop body is `lb; lb; fusedmac rA,rB,i1,i2`; fold the
+/// two loads into the fusedmac (load-load-mac-bump in one cycle).
+pub static WINDOW: [&FusionSpec; 2] = [
+    &FusionSpec {
+        name: "ldmac",
+        desc: "lb x21,0(rA) ; lb x22,0(rB) ; mac",
+        pattern: &[PatElem::LbA, PatElem::LbB, PatElem::Mac],
+        emit: FusedEmit::Custom(0),
+        commute: false,
+        split: ImmSplit::PAPER,
+        // Dual byte-load ports into the MAC operand registers: address
+        // muxes + byte-select logic, no extra DSP (reuses the MAC slice).
+        cost: FuCost { name: "ldmac", lut: 214, mux: 46, regs: 12, dsp: 0,
+                       power_mw: 6.0 },
+        cycles_saved: 2,
+        sem: &[SemOp::LoadByteA, SemOp::LoadByteB, SemOp::MacStep],
+    },
+    &FusionSpec {
+        name: "ldmacpp",
+        desc: "lb x21,0(rA) ; lb x22,0(rB) ; fusedmac rA,rB,i1,i2",
+        pattern: &[PatElem::LbA, PatElem::LbB, PatElem::FusedMacAB],
+        emit: FusedEmit::Custom(1),
+        commute: false,
+        split: ImmSplit::PAPER,
+        // ldmac's load ports plus the dual post-increment adders.
+        cost: FuCost { name: "ldmacpp", lut: 298, mux: 58, regs: 12, dsp: 0,
+                       power_mw: 9.0 },
+        cycles_saved: 2,
+        sem: &[
+            SemOp::LoadByteA,
+            SemOp::LoadByteB,
+            SemOp::MacStep,
+            SemOp::AddImm1,
+            SemOp::AddImm2,
+        ],
+    },
+];
+
+/// Number of window slots (≤ the free custom opcodes reserved in
+/// [`crate::isa::opcodes::XWIN`]).
+pub const N_WINDOW: usize = WINDOW.len();
+
+/// The spec behind window slot `idx`.  Panics on an out-of-pool index —
+/// unreachable from decoded programs, because decode only recognizes the
+/// [`N_WINDOW`] reserved opcodes.
+#[inline]
+pub fn window_spec(idx: u8) -> &'static FusionSpec {
+    WINDOW[idx as usize]
+}
+
+/// The canned ladder specs in canonical pass order (fusion-size order, so
+/// the quad wins over the pairs — exactly the legacy pass order).
+pub static LADDER: [&FusionSpec; 3] = [&FUSEDMAC, &MAC, &ADD2I];
+
+/// Execute a spec's semantics against architectural state.  The one
+/// interpreter every execution path calls ([`crate::sim::cpu`] reference,
+/// the lowered threaded handler, and the lowered central-match oracle), so
+/// a mined instruction cannot mean different things on different paths.
+///
+/// Steps run in original program order; a memory fault aborts mid-sequence
+/// with earlier steps committed — exactly what the unfused instruction
+/// sequence would have architecturally visible at the faulting load.
+#[inline]
+pub fn exec_sem(
+    sem: &[SemOp],
+    regs: &mut [i32; 32],
+    mem: &mut Memory,
+    rs1: Reg,
+    rs2: Reg,
+    i1: u8,
+    i2: u16,
+) -> Result<(), MemFault> {
+    #[inline]
+    fn wr(regs: &mut [i32; 32], rd: Reg, v: i32) {
+        if rd != 0 {
+            regs[rd as usize] = v;
+        }
+    }
+    for op in sem {
+        match op {
+            SemOp::MacStep => {
+                let v = regs[crate::isa::MAC_RD as usize].wrapping_add(
+                    regs[crate::isa::MAC_RS1 as usize]
+                        .wrapping_mul(regs[crate::isa::MAC_RS2 as usize]),
+                );
+                wr(regs, crate::isa::MAC_RD, v);
+            }
+            SemOp::AddImm1 => {
+                let v = regs[rs1 as usize].wrapping_add(i1 as i32);
+                wr(regs, rs1, v);
+            }
+            SemOp::AddImm2 => {
+                let v = regs[rs2 as usize].wrapping_add(i2 as i32);
+                wr(regs, rs2, v);
+            }
+            SemOp::LoadByteA => {
+                let addr = regs[rs1 as usize] as u32;
+                let b = mem.load_u8(addr)? as i8 as i32;
+                wr(regs, crate::isa::MAC_RS1, b);
+            }
+            SemOp::LoadByteB => {
+                let addr = regs[rs2 as usize] as u32;
+                let b = mem.load_u8(addr)? as i8 as i32;
+                wr(regs, crate::isa::MAC_RS2, b);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Build the emitted instruction for a spec from its captured operands.
+pub fn emit_instr(
+    spec: &FusionSpec,
+    rs1: Reg,
+    rs2: Reg,
+    i1: u8,
+    i2: u16,
+) -> Instr {
+    match spec.emit {
+        FusedEmit::Mac => Instr::Mac,
+        FusedEmit::Add2i => Instr::Add2i { rs1, rs2, i1, i2 },
+        FusedEmit::FusedMac => Instr::FusedMac { rs1, rs2, i1, i2 },
+        FusedEmit::Custom(idx) => Instr::Custom { idx, rs1, rs2, i1, i2 },
+    }
+}
+
+/// The specs a window-enable bitmask selects, in slot order.
+pub fn mask_specs(xwin: u8) -> impl Iterator<Item = &'static FusionSpec> {
+    (0..N_WINDOW as u8)
+        .filter(move |idx| xwin & (1 << idx) != 0)
+        .map(window_spec)
+}
+
+/// Operand captures threaded through one pattern match: the `A`/`B`
+/// register-immediate pairs and (for patterns over already-fused code)
+/// the pre-split immediates.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Captures {
+    /// First captured register and its immediate (0 for pointer captures).
+    pub a: Option<(Reg, i32)>,
+    /// Second captured register and immediate; always distinct from `a`.
+    pub b: Option<(Reg, i32)>,
+    /// Immediates captured pre-split from an already-fused instruction.
+    pub imms: Option<(u8, u16)>,
+}
+
+/// The MAC datapath registers are architecturally reserved in the fused
+/// formats — their write ports are spoken for (same rule the legacy
+/// `match_addi_pair` imposes).
+fn reserved(r: Reg) -> bool {
+    use crate::compiler::asm::{ACC, OPA, OPB, SCR};
+    r == ACC || r == OPA || r == OPB || r == SCR
+}
+
+/// Match one pattern element against one instruction, updating `cap`.
+///
+/// This is the single definition of "what counts as a fusion opportunity"
+/// for the generic rewrite engine ([`crate::compiler::rewrite`]) and the
+/// profiler's window counters ([`crate::profiler`]) — the legacy matchers
+/// in `compiler::rewrite::patterns` survive only as the differential
+/// oracle's vocabulary.
+pub fn match_elem(el: PatElem, instr: &Instr, cap: &mut Captures) -> bool {
+    use crate::compiler::asm::{ACC, OPA, OPB, SCR};
+    use crate::isa::{AluImmOp, AluOp, LoadOp};
+    match el {
+        PatElem::MulScr => matches!(instr,
+            Instr::Op { op: AluOp::Mul, rd, rs1, rs2 }
+                if *rd == SCR && *rs1 == OPA && *rs2 == OPB),
+        PatElem::AddAcc => matches!(instr,
+            Instr::Op { op: AluOp::Add, rd, rs1, rs2 }
+                if *rd == ACC && *rs1 == ACC && *rs2 == SCR),
+        PatElem::Mac => matches!(instr, Instr::Mac),
+        PatElem::InplaceAddiA | PatElem::InplaceAddiB => {
+            let (r, imm) = match instr {
+                Instr::OpImm { op: AluImmOp::Addi, rd, rs1, imm }
+                    if rd == rs1 && *rd != 0 =>
+                {
+                    (*rd, *imm)
+                }
+                _ => return false,
+            };
+            if reserved(r) {
+                return false;
+            }
+            if el == PatElem::InplaceAddiA {
+                cap.a = Some((r, imm));
+            } else {
+                match cap.a {
+                    // must be independent of A for the dual adder
+                    Some((ra, _)) if ra != r => cap.b = Some((r, imm)),
+                    _ => return false,
+                }
+            }
+            true
+        }
+        PatElem::LbA | PatElem::LbB => {
+            let (rd, rp) = match instr {
+                Instr::Load { op: LoadOp::Lb, rd, rs1, offset: 0 } => {
+                    (*rd, *rs1)
+                }
+                _ => return false,
+            };
+            if rp == 0 || reserved(rp) {
+                return false;
+            }
+            if el == PatElem::LbA {
+                if rd != OPA {
+                    return false;
+                }
+                cap.a = Some((rp, 0));
+            } else {
+                if rd != OPB {
+                    return false;
+                }
+                match cap.a {
+                    Some((ra, _)) if ra != rp => cap.b = Some((rp, 0)),
+                    _ => return false,
+                }
+            }
+            true
+        }
+        PatElem::Add2iAB => match (instr, cap.a, cap.b) {
+            (Instr::Add2i { rs1, rs2, i1, i2 }, Some((ra, _)), Some((rb, _)))
+                if *rs1 == ra && *rs2 == rb =>
+            {
+                cap.imms = Some((*i1, *i2));
+                true
+            }
+            _ => false,
+        },
+        PatElem::FusedMacAB => match (instr, cap.a, cap.b) {
+            (
+                Instr::FusedMac { rs1, rs2, i1, i2 },
+                Some((ra, _)),
+                Some((rb, _)),
+            ) if *rs1 == ra && *rs2 == rb => {
+                cap.imms = Some((*i1, *i2));
+                true
+            }
+            _ => false,
+        },
+    }
+}
+
+/// Match `spec.pattern` against a straight-line instruction window of
+/// exactly the pattern's length and build the fused replacement.
+///
+/// `None` when the window doesn't match, or when the captured immediates
+/// don't fit the spec's split ([`ImmSplit::fit`]/[`ImmSplit::encodes`] —
+/// the rewrite-time immediate-width gate: an unrepresentable pair rejects
+/// the fusion instead of silently truncating).
+pub fn try_match(spec: &FusionSpec, window: &[Instr]) -> Option<Instr> {
+    if window.len() != spec.pattern.len() {
+        return None;
+    }
+    let mut cap = Captures::default();
+    for (el, instr) in spec.pattern.iter().zip(window) {
+        if !match_elem(*el, instr, &mut cap) {
+            return None;
+        }
+    }
+    match spec.emit {
+        FusedEmit::Mac => Some(Instr::Mac),
+        FusedEmit::Add2i | FusedEmit::FusedMac => {
+            let (rs1, rs2, i1, i2) =
+                spec.split.fit(spec.commute, cap.a?, cap.b?)?;
+            Some(emit_instr(spec, rs1, rs2, i1, i2))
+        }
+        FusedEmit::Custom(_) => {
+            let (ra, _) = cap.a?;
+            let (rb, _) = cap.b?;
+            let (i1, i2) = cap.imms.unwrap_or((0, 0));
+            if !spec.split.encodes(i32::from(i1), i32::from(i2)) {
+                return None;
+            }
+            Some(emit_instr(spec, ra, rb, i1, i2))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_boundaries_accept_and_reject() {
+        let s = ImmSplit::PAPER;
+        // exact field maxima encode; one past each rejects
+        assert!(s.encodes(31, 1023));
+        assert!(!s.encodes(32, 0));
+        assert!(!s.encodes(0, 1024));
+        // negatives always reject (unsigned fields)
+        assert!(!s.encodes(-1, 0));
+        assert!(!s.encodes(0, -1));
+        assert!(s.encodes(0, 0));
+    }
+
+    #[test]
+    fn split_clamped_by_hardware_field_widths() {
+        // A mined 3+12 split would overflow the 10-bit i2 hardware slot:
+        // values past 1023 must reject even though they fit 12 bits.
+        let s = ImmSplit { bits1: 3, bits2: 12 };
+        assert_eq!(s.max1(), 7);
+        assert_eq!(s.max2(), 1023, "i2 clamped to the encoding field");
+        assert!(s.encodes(7, 1023));
+        assert!(!s.encodes(8, 0), "past the split's own 3-bit budget");
+        assert!(!s.encodes(0, 1500), "fits 12 bits but not the hardware");
+    }
+
+    #[test]
+    fn fit_commutes_only_when_allowed() {
+        let s = ImmSplit::PAPER;
+        assert_eq!(s.fit(true, ('a', 600), ('b', 3)), Some(('b', 'a', 3, 600)));
+        assert_eq!(s.fit(false, ('a', 600), ('b', 3)), None);
+        assert_eq!(s.fit(false, ('a', 3), ('b', 600)), Some(('a', 'b', 3, 600)));
+        assert_eq!(s.fit(true, ('a', 600), ('b', 700)), None);
+    }
+
+    #[test]
+    fn window_slots_are_dense_and_self_describing() {
+        for (i, spec) in WINDOW.iter().enumerate() {
+            assert_eq!(spec.emit, FusedEmit::Custom(i as u8), "{}", spec.name);
+            assert_eq!(spec.cost.name, spec.name);
+            assert!(!spec.sem.is_empty(), "{} must be executable", spec.name);
+            assert_eq!(
+                spec.cycles_saved as usize,
+                spec.pattern.len() - 1,
+                "{}: every replaced op is 1 cycle in the default model",
+                spec.name
+            );
+        }
+    }
+
+    #[test]
+    fn exec_sem_matches_unfused_ldmac_semantics() {
+        let mut mem = Memory::new(64);
+        mem.store_u8(16, 0x85).unwrap(); // -123 as i8
+        mem.store_u8(20, 7).unwrap();
+        let mut regs = [0i32; 32];
+        regs[5] = 16;
+        regs[6] = 20;
+        regs[crate::isa::MAC_RD as usize] = 1000;
+        exec_sem(window_spec(0).sem, &mut regs, &mut mem, 5, 6, 0, 0).unwrap();
+        assert_eq!(regs[crate::isa::MAC_RS1 as usize], -123);
+        assert_eq!(regs[crate::isa::MAC_RS2 as usize], 7);
+        assert_eq!(regs[crate::isa::MAC_RD as usize], 1000 - 123 * 7);
+    }
+
+    #[test]
+    fn exec_sem_ldmacpp_bumps_pointers_after_mac() {
+        let mut mem = Memory::new(64);
+        mem.store_u8(8, 2).unwrap();
+        mem.store_u8(12, 3).unwrap();
+        let mut regs = [0i32; 32];
+        regs[5] = 8;
+        regs[6] = 12;
+        exec_sem(window_spec(1).sem, &mut regs, &mut mem, 5, 6, 1, 4).unwrap();
+        assert_eq!(regs[crate::isa::MAC_RD as usize], 6);
+        assert_eq!(regs[5], 9, "rs1 += i1 after the loads");
+        assert_eq!(regs[6], 16, "rs2 += i2");
+    }
+
+    #[test]
+    fn exec_sem_fault_commits_earlier_steps() {
+        // Second load faults: the first load must already be architectural,
+        // mirroring the unfused sequence faulting at its second lb.
+        let mut mem = Memory::new(16);
+        mem.store_u8(4, 9).unwrap();
+        let mut regs = [0i32; 32];
+        regs[5] = 4;
+        regs[6] = 1 << 20; // out of bounds
+        let err = exec_sem(window_spec(0).sem, &mut regs, &mut mem, 5, 6, 0, 0);
+        assert!(err.is_err());
+        assert_eq!(regs[crate::isa::MAC_RS1 as usize], 9, "first lb committed");
+        assert_eq!(regs[crate::isa::MAC_RD as usize], 0, "mac never ran");
+    }
+
+    fn lb(rd: Reg, rp: Reg) -> Instr {
+        Instr::Load { op: crate::isa::LoadOp::Lb, rd, rs1: rp, offset: 0 }
+    }
+
+    #[test]
+    fn try_match_ladder_specs() {
+        use crate::compiler::asm::{ACC, OPA, OPB, SCR};
+        let mul = Instr::Op {
+            op: crate::isa::AluOp::Mul, rd: SCR, rs1: OPA, rs2: OPB,
+        };
+        let acc = Instr::Op {
+            op: crate::isa::AluOp::Add, rd: ACC, rs1: ACC, rs2: SCR,
+        };
+        let addi = |r: Reg, imm: i32| Instr::OpImm {
+            op: crate::isa::AluImmOp::Addi, rd: r, rs1: r, imm,
+        };
+        assert_eq!(try_match(&MAC, &[mul, acc]), Some(Instr::Mac));
+        // commuting: first imm too big for the 5-bit slot, swap fits
+        assert_eq!(
+            try_match(&FUSEDMAC, &[mul, acc, addi(10, 600), addi(11, 3)]),
+            Some(Instr::FusedMac { rs1: 11, rs2: 10, i1: 3, i2: 600 })
+        );
+        // reserved register in the addi pair rejects
+        assert_eq!(
+            try_match(&FUSEDMAC, &[mul, acc, addi(ACC, 1), addi(11, 1)]),
+            None
+        );
+        // same register twice: not independent
+        assert_eq!(try_match(&ADD2I, &[addi(10, 1), addi(10, 2)]), None);
+    }
+
+    #[test]
+    fn try_match_ldmac_captures_pointers() {
+        assert_eq!(
+            try_match(WINDOW[0], &[lb(21, 5), lb(22, 6), Instr::Mac]),
+            Some(Instr::Custom { idx: 0, rs1: 5, rs2: 6, i1: 0, i2: 0 })
+        );
+        // same pointer feeding both loads: no dual port
+        assert_eq!(
+            try_match(WINDOW[0], &[lb(21, 5), lb(22, 5), Instr::Mac]),
+            None
+        );
+        // wrong destination registers
+        assert_eq!(
+            try_match(WINDOW[0], &[lb(21, 5), lb(23, 6), Instr::Mac]),
+            None
+        );
+        // reserved pointer register
+        assert_eq!(
+            try_match(WINDOW[0], &[lb(21, 20), lb(22, 6), Instr::Mac]),
+            None
+        );
+    }
+
+    #[test]
+    fn try_match_ldmacpp_requires_exact_fusedmac_operands() {
+        let fm = Instr::FusedMac { rs1: 5, rs2: 6, i1: 1, i2: 4 };
+        assert_eq!(
+            try_match(WINDOW[1], &[lb(21, 5), lb(22, 6), fm]),
+            Some(Instr::Custom { idx: 1, rs1: 5, rs2: 6, i1: 1, i2: 4 })
+        );
+        // commuted fusedmac: loads and bumps would disagree on fields
+        let swapped = Instr::FusedMac { rs1: 6, rs2: 5, i1: 1, i2: 4 };
+        assert_eq!(try_match(WINDOW[1], &[lb(21, 5), lb(22, 6), swapped]), None);
+    }
+
+    #[test]
+    fn exec_sem_x0_operand_stays_hardwired() {
+        // add2i with rs1 = x0 (possible in decoded/random programs): the
+        // write must be discarded exactly like the reference write_reg.
+        let mut mem = Memory::new(16);
+        let mut regs = [0i32; 32];
+        exec_sem(ADD2I.sem, &mut regs, &mut mem, 0, 3, 5, 7).unwrap();
+        assert_eq!(regs[0], 0);
+        assert_eq!(regs[3], 7);
+    }
+}

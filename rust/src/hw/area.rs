@@ -79,6 +79,11 @@ pub fn area_of(v: &Variant) -> AreaReport {
     if v.zol {
         a = a.add(&FU_COSTS[3]);
     }
+    // Mined window slots price in per enabled bit (DESIGN.md §17) — the
+    // spec pool carries each slot's calibrated increment.
+    for spec in crate::fusion::mask_specs(v.xwin) {
+        a = a.add(&spec.cost);
+    }
     a
 }
 
@@ -142,5 +147,26 @@ mod tests {
         let p = area_of(&V4).power_mw - BASELINE.power_mw;
         assert!((p - 19.0).abs() < 1e-9);
         assert!((p / BASELINE.power_mw * 100.0 - 2.28).abs() < 0.02);
+    }
+
+    #[test]
+    fn window_slots_price_exactly_their_spec_cost() {
+        let base = area_of(&V4);
+        for idx in 0..crate::fusion::N_WINDOW {
+            let v = Variant::with_window(V4, 1 << idx).unwrap();
+            let a = area_of(&v);
+            let c = crate::fusion::window_spec(idx as u8).cost;
+            assert_eq!(a.lut - base.lut, c.lut, "slot {idx} lut");
+            assert_eq!(a.mux - base.mux, c.mux, "slot {idx} mux");
+            assert_eq!(a.regs - base.regs, c.regs, "slot {idx} regs");
+            assert_eq!(a.dsp - base.dsp, c.dsp, "slot {idx} dsp");
+            assert!((a.power_mw - base.power_mw - c.power_mw).abs() < 1e-9);
+        }
+        // both slots together = sum of increments
+        let full = (1u8 << crate::fusion::N_WINDOW) - 1;
+        let v = Variant::with_window(V4, full).unwrap();
+        let a = area_of(&v);
+        let want: i64 = crate::fusion::mask_specs(full).map(|s| s.cost.lut).sum();
+        assert_eq!(a.lut - base.lut, want);
     }
 }

@@ -205,7 +205,23 @@ pub fn decode(w: u32) -> Result<Instr, DecodeError> {
             0b010 => Ok(Instr::SetZe { rs1: rs1(w) }),
             _ => err(w, "zol2 funct3"),
         },
-        _ => err(w, "unknown opcode"),
+        opc => {
+            // Window slots: the opcode *is* the slot index (one reserved
+            // opcode per pool entry, fused field layout).
+            for (idx, &xop) in XWIN.iter().enumerate() {
+                if opc == xop && idx < crate::fusion::N_WINDOW {
+                    let (r1, r2, i1, i2) = fused_fields(w);
+                    return Ok(Instr::Custom {
+                        idx: idx as u8,
+                        rs1: r1,
+                        rs2: r2,
+                        i1,
+                        i2,
+                    });
+                }
+            }
+            err(w, "unknown opcode")
+        }
     }
 }
 

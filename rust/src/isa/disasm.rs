@@ -65,6 +65,14 @@ pub fn disasm(i: &Instr) -> String {
         Instr::SetZc { rs1 } => format!("set.zc {}", r(rs1)),
         Instr::SetZs { rs1 } => format!("set.zs {}", r(rs1)),
         Instr::SetZe { rs1 } => format!("set.ze {}", r(rs1)),
+        Instr::Custom { idx, rs1, rs2, i1, i2 } => {
+            // the spec's name is the mnemonic (e.g. `ldmac x5, x6, 0, 0`)
+            format!(
+                "{} {}, {}, {}, {}",
+                crate::fusion::window_spec(idx).name,
+                r(rs1), r(rs2), i1, i2
+            )
+        }
     }
 }
 

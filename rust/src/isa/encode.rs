@@ -212,6 +212,16 @@ pub fn encode(i: &Instr) -> u32 {
         Instr::SetZc { rs1 } => (check_reg(rs1) << 15) | ZOL2,
         Instr::SetZs { rs1 } => (check_reg(rs1) << 15) | (0b001 << 12) | ZOL2,
         Instr::SetZe { rs1 } => (check_reg(rs1) << 15) | (0b010 << 12) | ZOL2,
+        // Window slots reuse the fused field layout on their reserved
+        // opcode — the slot index is the opcode, so decode needs no extra
+        // discriminator field.
+        Instr::Custom { idx, rs1, rs2, i1, i2 } => {
+            assert!(
+                (idx as usize) < crate::fusion::N_WINDOW,
+                "custom window slot out of pool: {idx}"
+            );
+            fused_type(rs1, rs2, i1, i2, XWIN[idx as usize])
+        }
     }
 }
 

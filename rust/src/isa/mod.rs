@@ -107,6 +107,13 @@ pub enum Instr {
     SetZc { rs1: Reg },
     SetZs { rs1: Reg },
     SetZe { rs1: Reg },
+    /// Slot `idx` of the spec-driven custom-opcode *window*: a mined
+    /// fusion from the static pool [`crate::fusion::WINDOW`], using the
+    /// add2i/fusedmac field layout on the free opcode
+    /// [`opcodes::XWIN`]`[idx]`.  Semantics live entirely in the spec's
+    /// [`crate::fusion::SemOp`] program — the ISA layer only carries the
+    /// operands.
+    Custom { idx: u8, rs1: Reg, rs2: Reg, i1: u8, i2: u16 },
 }
 
 /// Opcode constants (Table 3).
@@ -127,6 +134,13 @@ pub mod opcodes {
     pub const SYSTEM: u32 = 0b111_0011;
     pub const ZOL1: u32 = 0b111_0111;
     pub const MISC_MEM: u32 = 0b000_1111;
+
+    /// The custom-opcode *window*: free `xx11` major opcodes reserved for
+    /// mined fusion specs, one per [`crate::fusion::WINDOW`] slot.  Only
+    /// the first [`crate::fusion::N_WINDOW`] entries decode; the rest are
+    /// headroom for a deeper pool.
+    pub const XWIN: [u32; 4] =
+        [0b111_1011, 0b101_0111, 0b010_1111, 0b000_0111];
 }
 
 impl Instr {
@@ -200,6 +214,7 @@ impl Instr {
             Instr::SetZc { .. } => "set.zc",
             Instr::SetZs { .. } => "set.zs",
             Instr::SetZe { .. } => "set.ze",
+            Instr::Custom { idx, .. } => crate::fusion::window_spec(*idx).name,
         }
     }
 
@@ -230,6 +245,7 @@ impl Instr {
             Instr::SetZc { .. } => 54,
             Instr::SetZs { .. } => 55,
             Instr::SetZe { .. } => 56,
+            Instr::Custom { idx, .. } => 57 + *idx as usize,
         }
     }
 
@@ -246,12 +262,15 @@ impl Instr {
                 | Instr::SetZc { .. }
                 | Instr::SetZs { .. }
                 | Instr::SetZe { .. }
+                | Instr::Custom { .. }
         )
     }
 }
 
-/// Mnemonic table indexed by [`Instr::mnemonic_idx`].
-pub const MNEMONICS: [&str; 57] = [
+/// Mnemonic table indexed by [`Instr::mnemonic_idx`].  The tail entries
+/// (index 57+) are the window slots, in [`crate::fusion::WINDOW`] order —
+/// pinned by `mnemonics_tail_matches_window_pool` below.
+pub const MNEMONICS: [&str; 59] = [
     "lui", "auipc", "jal", "jalr",
     "beq", "bne", "blt", "bge", "bltu", "bgeu",
     "lb", "lh", "lw", "lbu", "lhu",
@@ -262,6 +281,7 @@ pub const MNEMONICS: [&str; 57] = [
     "fence", "ecall", "ebreak",
     "mac", "add2i", "fusedmac", "dlp", "dlpi", "zlp",
     "set.zc", "set.zs", "set.ze",
+    "ldmac", "ldmacpp",
 ];
 
 /// Generate a random *valid* instruction (all fields in encodable range) —
@@ -269,7 +289,7 @@ pub const MNEMONICS: [&str; 57] = [
 pub fn random_instr(rng: &mut crate::util::rng::Rng) -> Instr {
     let reg = |rng: &mut crate::util::rng::Rng| rng.int_in(0, 31) as Reg;
     let imm12 = |rng: &mut crate::util::rng::Rng| rng.int_in(-2048, 2047);
-    match rng.int_in(0, 17) {
+    match rng.int_in(0, 18) {
         0 => Instr::Lui { rd: reg(rng), imm: (rng.next_u32() & 0xffff_f000) as i32 },
         1 => Instr::Auipc { rd: reg(rng), imm: (rng.next_u32() & 0xffff_f000) as i32 },
         2 => Instr::Jal { rd: reg(rng), offset: rng.int_in(-(1 << 19), (1 << 19) - 1) * 2 },
@@ -329,10 +349,15 @@ pub fn random_instr(rng: &mut crate::util::rng::Rng) -> Instr {
             body_len: rng.int_in(1, 4095) as u16,
         },
         16 => Instr::Zlp { rs1: reg(rng), body_len: rng.int_in(1, 4095) as u16 },
-        _ => match rng.int_in(0, 2) {
+        17 => match rng.int_in(0, 2) {
             0 => Instr::SetZc { rs1: reg(rng) },
             1 => Instr::SetZs { rs1: reg(rng) },
             _ => Instr::SetZe { rs1: reg(rng) },
+        },
+        _ => Instr::Custom {
+            idx: rng.int_in(0, crate::fusion::N_WINDOW as i32 - 1) as u8,
+            rs1: reg(rng), rs2: reg(rng),
+            i1: rng.int_in(0, 31) as u8, i2: rng.int_in(0, 1023) as u16,
         },
     }
 }
@@ -364,6 +389,16 @@ mod tests {
                             "instr {i:?}");
             Ok(())
         });
+    }
+
+    #[test]
+    fn mnemonics_tail_matches_window_pool() {
+        assert_eq!(MNEMONICS.len(), 57 + crate::fusion::N_WINDOW);
+        for (i, spec) in crate::fusion::WINDOW.iter().enumerate() {
+            assert_eq!(MNEMONICS[57 + i], spec.name, "window slot {i}");
+        }
+        // every window slot has a reserved opcode left in the table
+        assert!(crate::fusion::N_WINDOW <= opcodes::XWIN.len());
     }
 
     #[test]

@@ -24,6 +24,10 @@
 //! - [`profiler`] — retired-stream pattern mining (Fig 3, Fig 4).
 //! - [`extgen`] — automatic extension proposal from profiles (the
 //!   "model-class aware" discovery) + pseudo-nML emission (Fig 6).
+//! - [`fusion`] — the `FusionSpec` IR: one description per fusable
+//!   instruction (pattern, encoding slot, cost, executable semantics)
+//!   shared by the rewrite engine, the ISA window, both interpreters and
+//!   the extension search (DESIGN.md §17).
 //! - [`hw`] — area/power/energy models calibrated to Table 8.
 //! - [`runtime`] — PJRT CPU client executing the AOT HLO golden model.
 //! - [`coordinator`] — flow orchestration + per-experiment report
@@ -32,6 +36,7 @@
 pub mod compiler;
 pub mod coordinator;
 pub mod extgen;
+pub mod fusion;
 pub mod hw;
 pub mod isa;
 pub mod models;

@@ -9,6 +9,11 @@
 //! marvel compile  --model m --variant v4    compile only; --dump-asm listing
 //! marvel profile  --model m                 v0 pattern profile (Fig 3 metrics)
 //! marvel extgen   --model m                 propose ISA extensions + nML
+//! marvel extsearch [--models a,b] [--backend B] [--min-savings F]
+//!                 [--json PATH] [--check-legacy]
+//!                                           closed mining loop: profile v4,
+//!                                           propose window specs, re-measure
+//!                                           v0/v4/v4+mined per model class
 //! marvel report   fig3|fig4|fig5|table8|fig10|fig11|fig12|table10|all
 //!                 [--backend B]             sweep on backend B
 //! marvel hw       [--fig10]                 area/power model
@@ -161,6 +166,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "compile" => cmd_compile(&args),
         "profile" => cmd_profile(&args),
         "extgen" => cmd_extgen(&args),
+        "extsearch" => cmd_extsearch(&args),
         "report" => cmd_report(&args),
         "hw" => cmd_hw(&args),
         "golden" => cmd_golden(&args),
@@ -182,13 +188,33 @@ fn dispatch(argv: &[String]) -> Result<()> {
 fn print_usage() {
     println!(
         "marvel {} — model-class aware custom RISC-V extension generation\n\n\
-         usage: marvel <flow|run|compile|profile|extgen|report|hw|golden|\
-         shard-worker|shard-sweep|serve> \
+         usage: marvel <flow|run|compile|profile|extgen|extsearch|report|hw|\
+         golden|shard-worker|shard-sweep|serve> \
          [--model NAME] [--variant v0..v4] [--artifacts DIR] \
          [--backend local[:T]|shard:N (execution backend for report/\
          shard-sweep/serve; results are bit-identical across backends)] \
          [--threads N (local backend workers, 0 = all cores)] \
          [--shard N (alias for --backend shard:N)] ...\n\n\
+         synthetic models: `synth:<kind>:<seed>` with kind ∈ \
+         tiny|lenet|residual|dwconv|rnn builds a\n\
+         deterministic in-process spec (no artifacts dir needed) — one per \
+         model class\n\
+         (small conv, lenet-shaped conv, residual/concat, \
+         depthwise-separable, unrolled rnn)\n\n\
+         extension mining (DESIGN.md §17):\n  \
+         extsearch             closed loop per model: profile the \
+         post-ladder v4\n                        \
+         stream, propose fusion specs over the window pool,\n                        \
+         re-measure v0/v4/v4+mined through the backend\n  \
+         --models a,b          search zoo (default: one model per class —\n                        \
+         synth:lenet, synth:dwconv, synth:rnn)\n  \
+         --min-savings F       proposal noise floor as a cycle fraction\n                        \
+         (default 0.005)\n  \
+         --json PATH           append bench-JSON speedup rows \
+         (BENCH_extgen.json)\n  \
+         --check-legacy        also diff the generic rewrite engine \
+         against the\n                        \
+         legacy passes on every ladder variant\n\n\
          serve scheduler (DESIGN.md §14, §16):\n  \
          --policy fifo|drr|edf batch-forming policy across per-model \
          queues:\n                        fifo = strict arrival order, \
@@ -676,6 +702,106 @@ fn cmd_extgen(args: &Args) -> Result<()> {
             println!("  nML model:\n{}", indent(&p.nml, 4));
         }
         println!();
+    }
+    Ok(())
+}
+
+fn cmd_extsearch(args: &Args) -> Result<()> {
+    let artifacts = args.artifacts();
+    let models = match args.get("models") {
+        Some(s) => s
+            .split(',')
+            .map(|m| m.trim().to_string())
+            .filter(|m| !m.is_empty())
+            .collect(),
+        // the per-model-class default zoo, not the artifact models: the
+        // search's point is comparing classes (conv/depthwise/rnn)
+        None => marvel::coordinator::extsearch::DEFAULT_ZOO
+            .map(String::from)
+            .to_vec(),
+    };
+    let opts = marvel::coordinator::ExtSearchOptions {
+        min_savings: args
+            .get("min-savings")
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0.005),
+        n_inputs: args.usize_opt("n", 2),
+        check_legacy: args.flag("check-legacy"),
+    };
+    let cache = compiler::CompileCache::new();
+    let plan = chaos_arg(args)?;
+    let mut exec = chaos::wrap(
+        backend_arg(args, "local")?.build(&artifacts)?,
+        plan.as_ref(),
+    );
+    let results = marvel::coordinator::extsearch::search(
+        &artifacts, &models, &opts, &cache, exec.as_mut(),
+    )?;
+
+    let mut t = Table::new(&[
+        "model", "golden", "variant", "instrs", "cycles", "speedup", "mined",
+    ])
+    .with_title(&format!(
+        "extsearch — {} models on backend {} (min savings {:.1}%{})",
+        results.len(),
+        exec.describe(),
+        opts.min_savings * 100.0,
+        if opts.check_legacy { ", legacy diff VERIFIED" } else { "" }
+    ));
+    for r in &results {
+        for row in &r.rows {
+            let mined = if row.variant.xwin != 0 {
+                format!("{} (x{:02x})", r.mined.join("+"), r.mask)
+            } else {
+                "-".into()
+            };
+            t.row(vec![
+                r.model.clone(),
+                if r.verified { "VERIFIED" } else { "FAILED" }.into(),
+                row.variant.name.to_string(),
+                fmt_si(row.instrs),
+                fmt_si(row.cycles),
+                format!("{:.2}x", row.speedup),
+                mined,
+            ]);
+        }
+    }
+    println!("{}", t.render());
+
+    // `--json PATH`: one row per (model, variant) in the bench-JSON shape
+    // the gate/trend tools consume (`speedup` is higher-is-better).
+    if let Some(path) = args.get("json") {
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("opening {path}"))?;
+        for r in &results {
+            for row in &r.rows {
+                writeln!(
+                    f,
+                    "{{\"name\":\"extsearch/{}/{}\",\"speedup\":{:.4},\
+                     \"cycles\":{}}}",
+                    r.model, row.variant.name, row.speedup, row.cycles
+                )?;
+            }
+        }
+        eprintln!("extsearch rows appended to {path}");
+    }
+
+    if results.iter().any(|r| !r.verified) {
+        bail!("golden verification failed");
+    }
+    // the mining loop must pay off somewhere: at least one model's mined
+    // variant beats its own ladder top
+    let improved = results.iter().any(|r| {
+        r.mask != 0
+            && r.rows.len() >= 3
+            && r.rows[2].cycles < r.rows[1].cycles
+    });
+    if !improved {
+        bail!("no mined variant improved on v4 — mining loop found nothing");
     }
     Ok(())
 }

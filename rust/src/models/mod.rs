@@ -30,10 +30,15 @@ pub fn load(artifacts: &Path, name: &str) -> Result<ModelSpec> {
     load_spec(artifacts, name)
 }
 
+/// The synthetic model kinds [`resolve`] accepts — one per model class the
+/// extsearch sweep covers (conv, conv, residual, depthwise, rnn).
+pub const SYNTH_KINDS: [&str; 5] = ["tiny", "lenet", "residual", "dwconv", "rnn"];
+
 /// Resolve a model name that may be synthetic.
 ///
-/// `synth:<kind>:<seed>` (kind ∈ `tiny`/`lenet`/`residual`) builds the
-/// corresponding [`synth`] spec in-process — deterministic in the seed, so a
+/// `synth:<kind>:<seed>` (kind ∈ [`SYNTH_KINDS`]:
+/// `tiny`/`lenet`/`residual`/`dwconv`/`rnn`) builds the corresponding
+/// [`synth`] spec in-process — deterministic in the seed, so a
 /// shard worker in another process hydrates the *same* model the
 /// coordinator compiled (verified by program fingerprint, see
 /// [`crate::sim::shard`]).  Anything else loads from the artifacts dir.
@@ -51,7 +56,13 @@ pub fn resolve(artifacts: &Path, name: &str) -> Result<ModelSpec> {
         "tiny" => Ok(synth::tiny_conv_net(seed)),
         "lenet" => Ok(synth::lenet_shaped(seed)),
         "residual" => Ok(synth::residual_net(seed)),
-        other => bail!("unknown synthetic model kind {other:?} in {name:?}"),
+        "dwconv" => Ok(synth::dwconv_net(seed)),
+        "rnn" => Ok(synth::rnn_net(seed)),
+        other => bail!(
+            "unknown synthetic model kind {other:?} in {name:?} \
+             (known kinds: {})",
+            SYNTH_KINDS.join(", ")
+        ),
     }
 }
 

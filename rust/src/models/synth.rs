@@ -240,6 +240,35 @@ pub fn residual_net(seed: u64) -> ModelSpec {
     b.finish(3)
 }
 
+/// Depthwise-separable net (the MobileNet model class): a strided stem,
+/// then depthwise + pointwise pairs — the workload where the dw inner loop
+/// (short filter rows, per-channel) dominates the retire stream.
+pub fn dwconv_net(seed: u64) -> ModelSpec {
+    let mut b = Builder::new("dwconv", [3, 12, 12], seed);
+    let c1 = b.conv2d(-1, 8, 3, 2, 1, 6, true); // stem: 8x6x6
+    let d1 = b.dwconv2d(c1, 3, 1, 1, 6, true);
+    let p1 = b.conv2d(d1, 12, 1, 1, 0, 6, true); // pointwise
+    let d2 = b.dwconv2d(p1, 3, 2, 1, 6, true); // 12x3x3
+    let p2 = b.conv2d(d2, 16, 1, 1, 0, 7, true);
+    b.dense(p2, 6, 6, false);
+    b.finish(6)
+}
+
+/// Unrolled recurrent net (the RNN model class): an input projection, then
+/// T Elman-style steps `h = relu(h + W·h)` over a persistent state vector —
+/// chains of small matrix-vector products with none of conv's spatial
+/// reuse, which is what makes its extension profile distinct.
+pub fn rnn_net(seed: u64) -> ModelSpec {
+    let mut b = Builder::new("rnn", [24, 1, 1], seed);
+    let mut h = b.dense(-1, 24, 6, true);
+    for _ in 0..6 {
+        let z = b.dense(h, 24, 6, false);
+        h = b.add(h, z, true);
+    }
+    b.dense(h, 8, 6, false);
+    b.finish(8)
+}
+
 /// Fully random model for property fuzzing.
 pub fn random_net(rng: &mut Rng) -> ModelSpec {
     let c0 = rng.range_usize(1, 4);

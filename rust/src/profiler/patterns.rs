@@ -43,6 +43,12 @@ pub struct PatternCounts {
     pub branches_taken: u64,
     /// Fig 4 histogram: (first, second) immediate of consecutive addi pairs.
     pub addi_imm_hist: BTreeMap<(i32, i32), u64>,
+    /// Dynamic occurrences of each mined window spec's pattern
+    /// ([`crate::fusion::WINDOW`], per slot) in the retire stream — the
+    /// counters `extgen::propose` turns into window proposals.  Counted on
+    /// *post-ladder* streams (the window patterns end in `mac`/`fusedmac`),
+    /// so ladder-less profiles (v0) leave them at zero.
+    pub window: [u64; crate::fusion::N_WINDOW],
 }
 
 impl Default for PatternCounts {
@@ -56,6 +62,7 @@ impl Default for PatternCounts {
             fusedmac: 0,
             branches_taken: 0,
             addi_imm_hist: BTreeMap::new(),
+            window: [0; crate::fusion::N_WINDOW],
         }
     }
 }
@@ -93,6 +100,9 @@ impl PatternCounts {
         for (k, v) in &other.addi_imm_hist {
             *self.addi_imm_hist.entry(*k).or_insert(0) += v;
         }
+        for (a, b) in self.window.iter_mut().zip(other.window.iter()) {
+            *a += b;
+        }
     }
 
     /// Top-n immediate pairs of the Fig 4 histogram (count-descending).
@@ -108,7 +118,8 @@ impl PatternCounts {
 /// Retire hook that mines the pattern counts with a 4-instruction window.
 ///
 /// §Perf: pattern matching is gated on the class of the *retiring*
-/// instruction (every mined pattern ends in `add` or `addi`), and the
+/// instruction (every mined pattern ends in `add`, `addi`, or — for the
+/// window specs — a ladder fusion `mac`/`fusedmac`), and the
 /// Fig 4 histogram keeps a one-entry cache for the hot bucket (the `1_1`
 /// inner-loop pair dominates every conv workload) so the BTreeMap is only
 /// touched on key changes.
@@ -206,6 +217,33 @@ impl RetireHook for ProfileHook {
                     self.counts.branches_taken += 1;
                 }
             }
+            // mined-window opportunities end in the ladder's fused forms:
+            // replay the retire window through the one generic matcher the
+            // rewrite engine uses, so "countable" and "fusable" can't drift
+            Instr::Mac | Instr::FusedMac { .. } => {
+                let hist = [p3, p2, p1];
+                for (i, spec) in crate::fusion::WINDOW.iter().enumerate() {
+                    let plen = spec.pattern.len();
+                    debug_assert!((2..=4).contains(&plen), "{}", spec.name);
+                    let mut buf = [*instr; 4];
+                    let mut ok = true;
+                    for k in 0..plen - 1 {
+                        match hist[4 - plen + k] {
+                            Some(x) => buf[k] = x,
+                            None => {
+                                ok = false;
+                                break;
+                            }
+                        }
+                    }
+                    if ok
+                        && crate::fusion::try_match(spec, &buf[..plen])
+                            .is_some()
+                    {
+                        self.counts.window[i] += 1;
+                    }
+                }
+            }
             _ => {}
         }
         self.window = [p2, p1, Some(*instr)];
@@ -266,5 +304,26 @@ mod tests {
             m.addi_imm_hist.values().sum::<u64>(),
             2 * a.addi_imm_hist.values().sum::<u64>()
         );
+    }
+
+    #[test]
+    fn window_counters_fire_on_post_ladder_streams_only() {
+        // v0 stream has no mac/fusedmac retires: counters stay zero
+        let c0 = profile_tiny();
+        assert_eq!(c0.window, [0; crate::fusion::N_WINDOW]);
+        // v4 stream: the conv inner loop retires lb; lb; fusedmac — the
+        // ldmacpp opportunity the extsearch flow mines
+        let spec = tiny_conv_net(21);
+        let c = compile(&spec, crate::sim::V4).unwrap();
+        let mut hook = ProfileHook::new(c.words().len());
+        let mut rng = Rng::new(5);
+        let input = Builder::random_input(&spec, &mut rng);
+        execute_compiled(&c, &spec, &input, 1 << 32, &mut hook).unwrap();
+        let c4 = hook.finish();
+        assert!(c4.window[1] > 0, "ldmacpp opportunities: {:?}", c4.window);
+        // merge doubles them like every other counter
+        let mut m = c4.clone();
+        m.merge(&c4);
+        assert_eq!(m.window[1], 2 * c4.window[1]);
     }
 }

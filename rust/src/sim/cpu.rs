@@ -633,6 +633,18 @@ impl Machine {
                     self.ze = reg!(rs1) as u32;
                     cost = cm.zol_setup;
                 }
+                Instr::Custom { idx, rs1, rs2, i1, i2 } => {
+                    // Mined window instruction: semantics come from the
+                    // spec pool, via the one interpreter every execution
+                    // path shares (crate::fusion::exec_sem).
+                    let spec = crate::fusion::window_spec(idx);
+                    crate::fusion::exec_sem(
+                        spec.sem, &mut self.regs, &mut self.mem,
+                        rs1, rs2, i1, i2,
+                    )
+                    .map_err(|fault| SimError::Mem { pc, fault })?;
+                    cost = cm.custom;
+                }
             }
 
             // Zero-overhead loop-back: when execution reaches ZE, hardware

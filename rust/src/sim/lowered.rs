@@ -72,6 +72,9 @@ pub(crate) enum Kind {
     Mul, Mulh, Mulhsu, Mulhu, Div, Divu, Rem, Remu,
     Fence, Ecall, Ebreak,
     Mac, Add2i, FusedMac, Dlp, Dlpi, Zlp, SetZc, SetZs, SetZe,
+    /// Mined window instruction ([`crate::fusion::WINDOW`]): `aux[31:16]`
+    /// is the slot index, `aux[15:0]` is `i2`, `imm` is `i1`.
+    FusedCustom,
     /// Reaching this slot is `PcOutOfRange { pc: imm }` (static bad target).
     Trap,
     /// Reaching this slot is `PcOutOfRange` at the dynamically-recorded pc
@@ -400,6 +403,14 @@ impl LoweredProgram {
                     op.kind = Kind::SetZe;
                     op.b = rs1;
                     op.cost = baked.zol_setup;
+                }
+                Instr::Custom { idx, rs1, rs2, i1, i2 } => {
+                    op.kind = Kind::FusedCustom;
+                    op.a = rs1;
+                    op.b = rs2;
+                    op.imm = i32::from(i1);
+                    op.aux = (u32::from(idx) << 16) | u32::from(i2);
+                    op.cost = baked.custom;
                 }
             }
 
@@ -780,6 +791,24 @@ fn h_setze(m: &mut Machine, op: MicroOp, _cx: &mut StepCtx) -> Flow {
     Flow::Next
 }
 
+fn h_fused_custom(m: &mut Machine, op: MicroOp, _cx: &mut StepCtx) -> Flow {
+    // Semantics come from the spec pool via the shared interpreter, so the
+    // threaded path cannot drift from the reference or the match oracle.
+    let spec = crate::fusion::window_spec((op.aux >> 16) as u8);
+    match crate::fusion::exec_sem(
+        spec.sem,
+        &mut m.regs,
+        &mut m.mem,
+        op.a,
+        op.b,
+        op.imm as u8,
+        (op.aux & 0xffff) as u16,
+    ) {
+        Ok(()) => Flow::Next,
+        Err(fault) => Flow::Mem(fault),
+    }
+}
+
 fn h_trap(_m: &mut Machine, _op: MicroOp, _cx: &mut StepCtx) -> Flow {
     Flow::Trap
 }
@@ -809,6 +838,7 @@ const KINDS: [Kind; N_KINDS] = [
     Kind::Fence, Kind::Ecall, Kind::Ebreak,
     Kind::Mac, Kind::Add2i, Kind::FusedMac,
     Kind::Dlp, Kind::Dlpi, Kind::Zlp, Kind::SetZc, Kind::SetZs, Kind::SetZe,
+    Kind::FusedCustom,
     Kind::Trap, Kind::TrapDyn,
 ];
 
@@ -873,6 +903,7 @@ const fn handler_for(k: Kind) -> Handler {
         Kind::SetZc => h_setzc,
         Kind::SetZs => h_setzs,
         Kind::SetZe => h_setze,
+        Kind::FusedCustom => h_fused_custom,
         Kind::Trap => h_trap,
         Kind::TrapDyn => h_trapdyn,
     }
@@ -1501,6 +1532,18 @@ pub(crate) fn run_lowered_match<H: RetireHook>(
             }
             Kind::SetZe => {
                 machine.ze = machine.regs[op.b as usize] as u32;
+            }
+            Kind::FusedCustom => {
+                let spec = crate::fusion::window_spec((op.aux >> 16) as u8);
+                mem_try!(crate::fusion::exec_sem(
+                    spec.sem,
+                    &mut machine.regs,
+                    &mut machine.mem,
+                    op.a,
+                    op.b,
+                    op.imm as u8,
+                    (op.aux & 0xffff) as u16,
+                ));
             }
             Kind::Trap => {
                 let bad = op.imm as u32;

@@ -51,7 +51,9 @@ pub use serve::{Client, PolicyKind, Reply, ReqMeta, SchedPolicy, ServeError,
                 Ticket};
 pub use shard::{JobDesc, ShardPool, WorkerCmd};
 
-/// A processor variant = which ISA extensions are enabled (paper Table 1).
+/// A processor variant = which ISA extensions are enabled (paper Table 1),
+/// plus which *mined* window slots ([`crate::fusion::WINDOW`]) the core
+/// implements — `xwin` bit `i` enables slot `i`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Variant {
     pub name: &'static str,
@@ -59,30 +61,78 @@ pub struct Variant {
     pub add2i: bool,
     pub fusedmac: bool,
     pub zol: bool,
+    pub xwin: u8,
 }
 
 /// v0: baseline RV32IM (trv32p3).
-pub const V0: Variant =
-    Variant { name: "v0", mac: false, add2i: false, fusedmac: false, zol: false };
+pub const V0: Variant = Variant {
+    name: "v0", mac: false, add2i: false, fusedmac: false, zol: false, xwin: 0,
+};
 /// v1: v0 + `mac`.
-pub const V1: Variant =
-    Variant { name: "v1", mac: true, add2i: false, fusedmac: false, zol: false };
+pub const V1: Variant = Variant {
+    name: "v1", mac: true, add2i: false, fusedmac: false, zol: false, xwin: 0,
+};
 /// v2: v1 + `add2i`.
-pub const V2: Variant =
-    Variant { name: "v2", mac: true, add2i: true, fusedmac: false, zol: false };
+pub const V2: Variant = Variant {
+    name: "v2", mac: true, add2i: true, fusedmac: false, zol: false, xwin: 0,
+};
 /// v3: v2 + `fusedmac`.
-pub const V3: Variant =
-    Variant { name: "v3", mac: true, add2i: true, fusedmac: true, zol: false };
+pub const V3: Variant = Variant {
+    name: "v3", mac: true, add2i: true, fusedmac: true, zol: false, xwin: 0,
+};
 /// v4: v3 + zero-overhead hardware loops.
-pub const V4: Variant =
-    Variant { name: "v4", mac: true, add2i: true, fusedmac: true, zol: true };
+pub const V4: Variant = Variant {
+    name: "v4", mac: true, add2i: true, fusedmac: true, zol: true, xwin: 0,
+};
 
-/// All five variants, in Table 1 order.
+/// All five ladder variants, in Table 1 order.
 pub const VARIANTS: [Variant; 5] = [V0, V1, V2, V3, V4];
 
+/// Intern table for mined-variant names: `with_window` leaks each distinct
+/// `"<base>+x<mask>"` string exactly once so [`Variant`] stays `Copy` with
+/// a `&'static str` name (the property shard hydration depends on — a
+/// variant travels across process boundaries as its name alone).
+static XWIN_NAMES: std::sync::Mutex<Vec<&'static str>> =
+    std::sync::Mutex::new(Vec::new());
+
 impl Variant {
+    /// Resolve a variant by name: the ladder names (`v0`..`v4`) or the
+    /// mined form `"<base>+x<mask>"` (e.g. `"v4+x3"` = v4 with window
+    /// slots 0 and 1).  Masks outside the spec pool reject — a worker
+    /// must not silently hydrate a core it cannot execute.
     pub fn by_name(name: &str) -> Option<Variant> {
-        VARIANTS.iter().copied().find(|v| v.name == name)
+        if let Some(v) = VARIANTS.iter().copied().find(|v| v.name == name) {
+            return Some(v);
+        }
+        let (base, mask) = name.split_once("+x")?;
+        let base = VARIANTS.iter().copied().find(|v| v.name == base)?;
+        let mask: u8 = mask.parse().ok()?;
+        Variant::with_window(base, mask)
+    }
+
+    /// `base` extended with the window slots of `mask`.  `None` when the
+    /// mask names slots outside [`crate::fusion::WINDOW`].
+    pub fn with_window(base: Variant, mask: u8) -> Option<Variant> {
+        if mask == 0 {
+            return Some(base);
+        }
+        if base.xwin != 0 || usize::from(mask) >= (1 << crate::fusion::N_WINDOW)
+        {
+            return None;
+        }
+        let name = {
+            let mut names = XWIN_NAMES.lock().unwrap();
+            let want = format!("{}+x{}", base.name, mask);
+            match names.iter().find(|n| **n == want) {
+                Some(n) => *n,
+                None => {
+                    let leaked: &'static str = Box::leak(want.into_boxed_str());
+                    names.push(leaked);
+                    leaked
+                }
+            }
+        };
+        Some(Variant { name, xwin: mask, ..base })
     }
 
     /// Can this variant execute the given instruction?
@@ -98,6 +148,7 @@ impl Variant {
             | Instr::SetZc { .. }
             | Instr::SetZs { .. }
             | Instr::SetZe { .. } => self.zol,
+            Instr::Custom { idx, .. } => self.xwin & (1u8 << idx) != 0,
             _ => true,
         }
     }
@@ -140,5 +191,45 @@ impl Default for CycleModel {
             custom: 1,
             zol_setup: 1,
         }
+    }
+}
+
+#[cfg(test)]
+mod variant_tests {
+    use super::*;
+
+    #[test]
+    fn by_name_roundtrips_mined_variants() {
+        let v = Variant::with_window(V4, 0b11).unwrap();
+        assert_eq!(v.name, "v4+x3");
+        assert_eq!(Variant::by_name(v.name), Some(v));
+        // interning: same mask resolves to the same &'static str
+        let again = Variant::with_window(V4, 0b11).unwrap();
+        assert!(std::ptr::eq(v.name.as_ptr(), again.name.as_ptr()));
+        // ladder names still resolve to the plain consts
+        assert_eq!(Variant::by_name("v4"), Some(V4));
+        assert_eq!(Variant::by_name("v4+x0"), Some(V4));
+    }
+
+    #[test]
+    fn with_window_rejects_out_of_pool_masks() {
+        let too_big = 1u8 << crate::fusion::N_WINDOW;
+        assert_eq!(Variant::with_window(V4, too_big), None);
+        assert_eq!(Variant::by_name("v4+x255"), None);
+        assert_eq!(Variant::by_name("v9+x1"), None);
+        assert_eq!(Variant::by_name("v4+x"), None);
+    }
+
+    #[test]
+    fn xwin_gates_custom_instrs() {
+        use crate::isa::Instr;
+        let c0 = Instr::Custom { idx: 0, rs1: 5, rs2: 6, i1: 0, i2: 0 };
+        let c1 = Instr::Custom { idx: 1, rs1: 5, rs2: 6, i1: 1, i2: 4 };
+        assert!(!V4.supports(&c0));
+        let v = Variant::with_window(V4, 0b01).unwrap();
+        assert!(v.supports(&c0));
+        assert!(!v.supports(&c1));
+        let v = Variant::with_window(V4, 0b11).unwrap();
+        assert!(v.supports(&c0) && v.supports(&c1));
     }
 }

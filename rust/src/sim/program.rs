@@ -141,6 +141,7 @@ impl Program {
                 self.variant.add2i as u8,
                 self.variant.fusedmac as u8,
                 self.variant.zol as u8,
+                self.variant.xwin,
             ];
             let mut h = fnv1a_extend(FNV_OFFSET, &flags);
             for w in &self.words {

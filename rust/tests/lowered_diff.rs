@@ -259,6 +259,25 @@ fn prop_threaded_matches_match_dispatch() {
     });
 }
 
+/// Mined-window differential: random programs on `v4+x<mask>` variants
+/// contain `Instr::Custom` window instructions (slot semantics from the
+/// `fusion` spec pool); all three execution paths must stay bit-identical
+/// on them — reference vs lowered-threaded, and threaded vs central match.
+#[test]
+fn prop_mined_window_instrs_match_on_all_paths() {
+    let full = (1u8 << marvel::fusion::N_WINDOW) - 1;
+    check("mined window ≡ on all paths", 600, |rng| {
+        let mask = rng.int_in(1, i32::from(full)) as u8;
+        let variant = Variant::with_window(V4, mask).unwrap();
+        let program = random_program(rng, variant);
+        let regs = seed_regs(rng);
+        let (r, l) = run_both(&program, regs, MAX_INSTRS);
+        diff(variant.name, r, l)?;
+        let (m, t) = run_both_dispatch(&program, regs, MAX_INSTRS);
+        diff(variant.name, m, t)
+    });
+}
+
 /// Lane differential: a multi-lane group over one program — per-lane
 /// registers, mixed DM sizes, mixed watchdog budgets, divergent early
 /// exits — is bit-identical to per-lane scalar reference runs.

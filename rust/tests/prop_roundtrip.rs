@@ -55,6 +55,7 @@ fn prop_arbitrary_feature_masks_match_reference() {
             add2i: rng.bool(),
             fusedmac: rng.bool(),
             zol: rng.bool(),
+            xwin: 0,
         };
         let c = compile(&spec, v).map_err(|e| format!("{e}"))?;
         let (got, _) = execute_compiled(&c, &spec, &input, 1 << 33, &mut NopHook)

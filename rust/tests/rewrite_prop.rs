@@ -1,0 +1,134 @@
+//! Properties of the spec-driven rewrite engine (DESIGN.md §17): for any
+//! generated model, any ladder variant and any window-slot mask, the
+//! rewritten program (a) survives the full encode → decode → disasm
+//! round-trip and (b) computes exactly what the unrewritten reference
+//! does.  This is the fuzzed counterpart of the fixed-pattern unit tests
+//! in `compiler/rewrite` and the generic-vs-legacy differential.
+
+use marvel::compiler::{compile, execute_compiled};
+use marvel::isa::decode::decode;
+use marvel::isa::disasm::disasm;
+use marvel::isa::encode::encode;
+use marvel::isa::Instr;
+use marvel::models::synth::{random_net, Builder};
+use marvel::refexec;
+use marvel::sim::{NopHook, Variant, VARIANTS};
+use marvel::util::proptest::check;
+
+/// A random (base, window-mask) core: every ladder rung × every subset of
+/// the mined spec pool.
+fn random_variant(rng: &mut marvel::util::rng::Rng) -> Variant {
+    let base = *rng.choice(&VARIANTS);
+    let mask = (rng.next_u32() & ((1 << marvel::fusion::N_WINDOW) - 1)) as u8;
+    Variant::with_window(base, mask).expect("in-pool mask")
+}
+
+#[test]
+fn prop_rewritten_programs_roundtrip_and_match_reference() {
+    check("rewrite → encode → decode → disasm; output ≡ refexec", 50, |rng| {
+        let spec = random_net(rng);
+        let v = random_variant(rng);
+        let c = compile(&spec, v)
+            .map_err(|e| format!("compile {} {}: {e}", spec.name, v.name))?;
+
+        // every rewritten word must decode back to the same instruction,
+        // re-encode to the same word, and have a total disassembly
+        for (i, (instr, &word)) in
+            c.instrs().iter().zip(c.words().iter()).enumerate()
+        {
+            let back = decode(word)
+                .map_err(|e| format!("{}: word {i}: {e}", v.name))?;
+            if back != *instr {
+                return Err(format!(
+                    "{}: word {i}: decode {back:?} != {instr:?}",
+                    v.name
+                ));
+            }
+            if encode(&back) != word {
+                return Err(format!("{}: word {i}: re-encode mismatch", v.name));
+            }
+            if disasm(instr).is_empty() {
+                return Err(format!("{}: word {i}: empty disasm", v.name));
+            }
+        }
+
+        // rewritten ≡ unrewritten: the mined core computes the reference
+        let input = Builder::random_input(&spec, rng);
+        let want =
+            refexec::run(&spec, &input).map_err(|e| format!("refexec: {e}"))?;
+        let (got, _) = execute_compiled(&c, &spec, &input, 1 << 33, &mut NopHook)
+            .map_err(|e| format!("run {} {}: {e}", spec.name, v.name))?;
+        if got != want {
+            return Err(format!(
+                "{} on {}: {got:?} != {want:?}",
+                spec.name, v.name
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rewrites_emit_only_supported_instructions() {
+    // The rewrite engine may only emit what the target core implements:
+    // no Custom slot outside the mask, no fused ops beyond the ladder.
+    check("rewritten streams respect the variant's ISA", 50, |rng| {
+        let spec = random_net(rng);
+        let v = random_variant(rng);
+        let c = compile(&spec, v).map_err(|e| format!("{e}"))?;
+        for (i, instr) in c.instrs().iter().enumerate() {
+            let legal = match instr {
+                Instr::Custom { .. }
+                | Instr::Mac
+                | Instr::Add2i { .. }
+                | Instr::FusedMac { .. } => v.supports(instr),
+                _ => true,
+            };
+            if !legal {
+                return Err(format!(
+                    "{}: instr {i} {instr:?} not supported by {}",
+                    spec.name, v.name
+                ));
+            }
+            if let Instr::Custom { idx, .. } = instr {
+                if usize::from(*idx) >= marvel::fusion::N_WINDOW {
+                    return Err(format!("custom idx {idx} out of pool"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_window_mask_never_regresses_cycles() {
+    // Enabling mined slots can only remove work: cycles(v+xM) <= cycles(v)
+    // and the full-mask core still matches the reference.
+    check("window slots are pure wins", 20, |rng| {
+        let spec = random_net(rng);
+        let base = *rng.choice(&VARIANTS);
+        let full = ((1u32 << marvel::fusion::N_WINDOW) - 1) as u8;
+        let mined = Variant::with_window(base, full).expect("full mask");
+        let input = Builder::random_input(&spec, rng);
+        let want =
+            refexec::run(&spec, &input).map_err(|e| format!("refexec: {e}"))?;
+
+        let cb = compile(&spec, base).map_err(|e| format!("{e}"))?;
+        let (_, sb) = execute_compiled(&cb, &spec, &input, 1 << 33, &mut NopHook)
+            .map_err(|e| format!("{e}"))?;
+        let cm = compile(&spec, mined).map_err(|e| format!("{e}"))?;
+        let (got, sm) =
+            execute_compiled(&cm, &spec, &input, 1 << 33, &mut NopHook)
+                .map_err(|e| format!("{e}"))?;
+        if got != want {
+            return Err(format!("{}: {got:?} != {want:?}", mined.name));
+        }
+        if sm.cycles > sb.cycles {
+            return Err(format!(
+                "{}: {} cycles > {} {} cycles",
+                mined.name, sm.cycles, base.name, sb.cycles
+            ));
+        }
+        Ok(())
+    });
+}

@@ -19,6 +19,11 @@
 //!    Batch sequence numbers make the comparison exact and
 //!    timing-independent (the wall-clock goodput version of this claim
 //!    lives in benches/bench_overload.rs).
+//! 5. **Fault containment** — exec-site chaos within the retry budget is
+//!    invisible (replies bit-identical to a fault-free run); past the
+//!    budget the faulted job answers its ticket with a structured
+//!    `ServeError` while every neighbor is served and shutdown drains —
+//!    no panic, no hang.
 //!
 //! Like `tests/shard.rs`, the process-spawning case uses the real
 //! `marvel` binary (`CARGO_BIN_EXE_marvel`) and synthetic models, so no
@@ -29,11 +34,13 @@ use std::time::Duration;
 
 use marvel::compiler::{pack_input, CompileCache};
 use marvel::models::synth::{tiny_conv_net, Builder};
+use marvel::sim::chaos::{self, FaultPlan};
 use marvel::sim::exec::{Executor, LocalExec, ShardExec};
 use marvel::sim::serve::{build_serve_models, model_key, Server, Ticket};
 use marvel::sim::shard::{self, run_descs_local, JobDesc, ShardPool,
                          WorkerCmd};
-use marvel::sim::{PolicyKind, ReqMeta, ServeOptions, V0, V4};
+use marvel::sim::{PolicyKind, Reply, ReqMeta, ServeError, ServeOptions, V0,
+                  V4};
 use marvel::util::rng::Rng;
 
 fn artifacts() -> &'static Path {
@@ -275,6 +282,76 @@ fn edf_serves_deadline_requests_ahead_of_the_flood() {
         "edf ({quiet_edf}) must beat fifo ({quiet_fifo}) for \
          deadline-carrying requests under skew"
     );
+}
+
+/// Run the same 4 single-tenant requests through a (possibly
+/// chaos-wrapped) dispatcher; returns each ticket's outcome plus how many
+/// jobs the shutdown report counted as errored.
+fn serve_four_with_chaos(
+    plan: Option<&str>,
+) -> (Vec<Result<Reply, ServeError>>, u64) {
+    let n_in = tiny_conv_net(3).input_elems();
+    let key = model_key("synth:tiny:3", "v4");
+    let cache = CompileCache::new();
+    let units = build_serve_models(
+        artifacts(),
+        &["synth:tiny:3".to_string()],
+        &[V4],
+        &cache,
+    )
+    .unwrap();
+    let opts = ServeOptions { max_batch: 8, ..ServeOptions::default() }
+        .fixed_window(Duration::from_millis(200));
+    let exec: Box<dyn Executor> = Box::new(LocalExec::new(artifacts(), 1));
+    let exec = match plan {
+        Some(p) => chaos::wrap(exec, Some(&FaultPlan::parse(p).unwrap())),
+        None => exec,
+    };
+    let (server, client) = Server::start(units, opts, exec);
+    let tickets: Vec<Ticket> = (0..4)
+        .map(|i| client.submit(&key, vec![i as u8; n_in]).unwrap())
+        .collect();
+    let results: Vec<_> =
+        tickets.into_iter().map(Ticket::wait_detailed).collect();
+    drop(client);
+    let report = server.join();
+    let errored = report.slo.rows.iter().map(|r| r.errored).sum();
+    (results, errored)
+}
+
+/// Invariant 5a: a chaos plan *within* [`chaos::CHAOS_EXEC_RETRIES`] is
+/// invisible through the dispatcher — every ticket resolves with logits
+/// bit-identical to a fault-free run's.
+#[test]
+fn exec_chaos_within_budget_is_invisible_through_the_dispatcher() {
+    let (clean, clean_errored) = serve_four_with_chaos(None);
+    assert_eq!(clean_errored, 0);
+    let (healed, healed_errored) =
+        serve_four_with_chaos(Some("transient@1x2,delay@2:5"));
+    assert_eq!(healed_errored, 0, "in-budget chaos must heal silently");
+    for (i, (a, b)) in clean.iter().zip(&healed).enumerate() {
+        let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
+        assert_eq!(a.output, b.output, "request {i}: logits diverged");
+        assert_eq!(a.stats, b.stats, "request {i}: stats diverged");
+    }
+}
+
+/// Invariant 5b: a fault past the retry budget surfaces as a structured
+/// `ServeError` on exactly the faulted job's ticket — kind `"exec"`,
+/// message naming the exhausted budget — while every other ticket is
+/// served and shutdown drains (no ticket hangs, no panic).
+#[test]
+fn exec_chaos_past_budget_answers_with_structured_serve_errors() {
+    let (results, errored) = serve_four_with_chaos(Some("transient@0x99"));
+    let failures: Vec<&ServeError> =
+        results.iter().filter_map(|r| r.as_ref().err()).collect();
+    assert_eq!(failures.len(), 1, "exactly the faulted job fails");
+    assert_eq!(errored, 1, "the report counts it as errored, not served");
+    let e = failures[0];
+    assert_eq!(e.kind, "exec");
+    assert!(e.msg.contains("retry budget exhausted"), "{e}");
+    assert!(e.msg.contains("chaos"), "{e}");
+    assert_eq!(results.iter().filter(|r| r.is_ok()).count(), 3);
 }
 
 /// Invariant 3: one tenant's flood hitting its queue cap sheds *that*

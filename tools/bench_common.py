@@ -18,9 +18,11 @@ from pathlib import Path
 # `units_per_s` throughput rows, the overload bench's `goodput`
 # deadline-attainment rows (a fraction in [0, 1], higher is better —
 # legitimately 0.0 under an adversarial trace, hence the zero exemption
-# in load()), and the serve bench's `p99_s` tail-latency rows (lower is
-# better).
-KINDS = (("units_per_s", True), ("goodput", True), ("p99_s", False))
+# in load()), the extsearch sweep's `speedup` rows (cycles vs the v0
+# baseline, higher is better — `marvel extsearch --json`), and the serve
+# bench's `p99_s` tail-latency rows (lower is better).
+KINDS = (("units_per_s", True), ("goodput", True), ("speedup", True),
+         ("p99_s", False))
 
 
 def load(path: Path) -> dict[str, tuple[str, float]]:

@@ -1,0 +1,105 @@
+//! Cluster-backend scaling bench (DESIGN.md §18): the same synthetic
+//! sweep pushed through `cluster:1`, `cluster:2` and `cluster:4` loopback
+//! daemon fleets, reported as jobs/s.  The curve is the headline — the
+//! socket transport must scale with hosts the way the shard backend
+//! scales with processes — and every run re-asserts the determinism
+//! contract by checking results against the in-process reference.
+//!
+//! Loopback daemons share one machine, so past the core count the curve
+//! flattens; the gate tracks per-row regressions (`BENCH_cluster.json`),
+//! not the inter-row ratio.
+
+#[path = "common.rs"]
+mod common;
+
+use std::path::Path;
+
+use marvel::compiler::pack_input;
+use marvel::sim::cluster::ClusterExec;
+use marvel::sim::exec::{Executor, JobSpec};
+use marvel::sim::shard::{self, run_descs_local, JobDesc};
+use marvel::sim::{V0, V4};
+use marvel::util::rng::Rng;
+
+/// Deterministic job list over two synthetic model classes × two ladder
+/// rungs, interleaved so consecutive jobs hit different compile-cache
+/// entries and DM footprints on every host.
+fn zoo_descs(n_inputs: usize) -> Vec<JobDesc> {
+    let artifacts = Path::new("artifacts");
+    let mut hyd = shard::Hydrator::new(artifacts);
+    let models = ["synth:lenet:5", "synth:dwconv:9"];
+    let mut per_model: Vec<Vec<JobDesc>> = Vec::new();
+    for (mi, model) in models.iter().enumerate() {
+        let spec = marvel::models::resolve(artifacts, model).unwrap();
+        let mut rng = Rng::new(900 + mi as u64);
+        let mut descs = Vec::new();
+        for v in [V0, V4] {
+            let (c, _) = hyd.hydrate(model, v.name).unwrap();
+            for _ in 0..n_inputs {
+                let input = marvel::models::synth::Builder::random_input(
+                    &spec, &mut rng,
+                );
+                let packed = pack_input(&input).unwrap();
+                descs.push(shard::desc_for(model, &c, &packed, 1 << 33));
+            }
+        }
+        per_model.push(descs);
+    }
+    let mut out = Vec::new();
+    let longest = per_model.iter().map(Vec::len).max().unwrap();
+    for i in 0..longest {
+        for m in &per_model {
+            if let Some(d) = m.get(i) {
+                out.push(d.clone());
+            }
+        }
+    }
+    out
+}
+
+fn main() {
+    let smoke = std::env::var_os("BENCH_SMOKE").is_some();
+    let descs = zoo_descs(if smoke { 2 } else { 8 });
+    let reference = run_descs_local(Path::new("artifacts"), &descs, 0);
+    assert!(reference.iter().all(|r| r.is_ok()));
+
+    for hosts in [1usize, 2, 4] {
+        let mut exec = ClusterExec::spawn_loopback_cmd(
+            Path::new(env!("CARGO_BIN_EXE_marvel")),
+            Path::new("artifacts"),
+            hosts,
+            None,
+        )
+        .unwrap();
+        // Warmup doubles as the bit-identity check: daemon-side compile
+        // caches fill here, so the timed runs measure steady state.
+        for d in &descs {
+            exec.submit(JobSpec::named(d.clone()));
+        }
+        for (i, (g, r)) in
+            exec.run().iter().zip(&reference).enumerate()
+        {
+            assert_eq!(
+                g.as_ref().unwrap(),
+                r.as_ref().unwrap(),
+                "cluster:{hosts} job {i} diverged from the reference"
+            );
+        }
+        let secs = common::time_runs(1, 5, || {
+            for d in &descs {
+                exec.submit(JobSpec::named(d.clone()));
+            }
+            let rs = exec.run();
+            assert!(rs.iter().all(|r| r.is_ok()));
+        });
+        common::report(
+            &format!(
+                "cluster/{} jobs/{hosts} host{}",
+                descs.len(),
+                if hosts == 1 { "" } else { "s" }
+            ),
+            secs,
+            Some((descs.len() as f64, "job")),
+        );
+    }
+}

@@ -62,6 +62,11 @@ pub enum PatElem {
     /// a commuted `fusedmac rB, rA, …` cannot fold into the window formats,
     /// whose loads and post-increments share the same register fields.
     FusedMacAB,
+    /// `add x20, x21, x22` — the eltwise accumulate the residual/rnn
+    /// add-chains emit (`lb; lb; add` element bodies).  Unlike [`Mac`] or
+    /// [`FusedMacAB`] this is a base RV32IM instruction, so patterns ending
+    /// in it match on *any* stream, ladder or not.
+    AddAb,
 }
 
 /// What a matched window is replaced with.
@@ -153,6 +158,8 @@ pub enum SemOp {
     LoadByteA,
     /// `x22 = sext8(dm[r[rs2]])` — multiplier byte load.
     LoadByteB,
+    /// `x20 = x21 + x22` (wrapping) — the eltwise accumulate.
+    AddAb,
 }
 
 /// One fusable instruction, end to end.
@@ -236,7 +243,14 @@ pub static FUSEDMAC: FusionSpec = FusionSpec {
 /// Slot 1, `ldmacpp`: the v4 conv/dense steady state — after the ladder
 /// the whole inner-loop body is `lb; lb; fusedmac rA,rB,i1,i2`; fold the
 /// two loads into the fusedmac (load-load-mac-bump in one cycle).
-pub static WINDOW: [&FusionSpec; 2] = [
+///
+/// Slot 2, `ldadd`: the eltwise add-chain body residual and rnn classes
+/// emit (`lb x21,0(rA); lb x22,0(rB); add x20,x21,x22`).  Its pattern is
+/// all base RV32IM — no ladder dependency — so it is the one spec whose
+/// counters fire on ladder-less streams too; it exists to give the
+/// `synth:rnn`/residual classes a class-distinct win the conv specs never
+/// touch.
+pub static WINDOW: [&FusionSpec; 3] = [
     &FusionSpec {
         name: "ldmac",
         desc: "lb x21,0(rA) ; lb x22,0(rB) ; mac",
@@ -269,6 +283,20 @@ pub static WINDOW: [&FusionSpec; 2] = [
             SemOp::AddImm1,
             SemOp::AddImm2,
         ],
+    },
+    &FusionSpec {
+        name: "ldadd",
+        desc: "lb x21,0(rA) ; lb x22,0(rB) ; add x20,x21,x22",
+        pattern: &[PatElem::LbA, PatElem::LbB, PatElem::AddAb],
+        emit: FusedEmit::Custom(2),
+        commute: false,
+        split: ImmSplit::PAPER,
+        // ldmac's dual byte-load ports feeding a plain adder instead of
+        // the MAC slice: slightly less mux, no DSP.
+        cost: FuCost { name: "ldadd", lut: 182, mux: 40, regs: 12, dsp: 0,
+                       power_mw: 5.0 },
+        cycles_saved: 2,
+        sem: &[SemOp::LoadByteA, SemOp::LoadByteB, SemOp::AddAb],
     },
 ];
 
@@ -339,6 +367,11 @@ pub fn exec_sem(
                 let b = mem.load_u8(addr)? as i8 as i32;
                 wr(regs, crate::isa::MAC_RS2, b);
             }
+            SemOp::AddAb => {
+                let v = regs[crate::isa::MAC_RS1 as usize]
+                    .wrapping_add(regs[crate::isa::MAC_RS2 as usize]);
+                wr(regs, crate::isa::MAC_RD, v);
+            }
         }
     }
     Ok(())
@@ -405,6 +438,9 @@ pub fn match_elem(el: PatElem, instr: &Instr, cap: &mut Captures) -> bool {
         PatElem::AddAcc => matches!(instr,
             Instr::Op { op: AluOp::Add, rd, rs1, rs2 }
                 if *rd == ACC && *rs1 == ACC && *rs2 == SCR),
+        PatElem::AddAb => matches!(instr,
+            Instr::Op { op: AluOp::Add, rd, rs1, rs2 }
+                if *rd == ACC && *rs1 == OPA && *rs2 == OPB),
         PatElem::Mac => matches!(instr, Instr::Mac),
         PatElem::InplaceAddiA | PatElem::InplaceAddiB => {
             let (r, imm) = match instr {
@@ -675,6 +711,43 @@ mod tests {
         // commuted fusedmac: loads and bumps would disagree on fields
         let swapped = Instr::FusedMac { rs1: 6, rs2: 5, i1: 1, i2: 4 };
         assert_eq!(try_match(WINDOW[1], &[lb(21, 5), lb(22, 6), swapped]), None);
+    }
+
+    #[test]
+    fn try_match_ldadd_matches_eltwise_add_body() {
+        use crate::compiler::asm::{ACC, OPA, OPB, SCR};
+        let add = Instr::Op {
+            op: crate::isa::AluOp::Add, rd: ACC, rs1: OPA, rs2: OPB,
+        };
+        assert_eq!(
+            try_match(WINDOW[2], &[lb(21, 5), lb(22, 6), add]),
+            Some(Instr::Custom { idx: 2, rs1: 5, rs2: 6, i1: 0, i2: 0 })
+        );
+        // the ladder's accumulate shape (add x20,x20,x23) must not match —
+        // ldadd is strictly the eltwise form
+        let acc = Instr::Op {
+            op: crate::isa::AluOp::Add, rd: ACC, rs1: ACC, rs2: SCR,
+        };
+        assert_eq!(try_match(WINDOW[2], &[lb(21, 5), lb(22, 6), acc]), None);
+        // shared pointer rejects, like every dual-port spec
+        assert_eq!(try_match(WINDOW[2], &[lb(21, 5), lb(22, 5), add]), None);
+    }
+
+    #[test]
+    fn exec_sem_ldadd_is_the_unfused_add_chain() {
+        let mut mem = Memory::new(64);
+        mem.store_u8(16, 0x85).unwrap(); // -123 as i8
+        mem.store_u8(20, 7).unwrap();
+        let mut regs = [0i32; 32];
+        regs[5] = 16;
+        regs[6] = 20;
+        regs[crate::isa::MAC_RD as usize] = 1000; // overwritten, not accumulated
+        exec_sem(window_spec(2).sem, &mut regs, &mut mem, 5, 6, 0, 0).unwrap();
+        assert_eq!(regs[crate::isa::MAC_RS1 as usize], -123);
+        assert_eq!(regs[crate::isa::MAC_RS2 as usize], 7);
+        assert_eq!(regs[crate::isa::MAC_RD as usize], -123 + 7);
+        // pointers untouched: ldadd has no post-increment
+        assert_eq!((regs[5], regs[6]), (16, 20));
     }
 
     #[test]

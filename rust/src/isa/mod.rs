@@ -270,7 +270,7 @@ impl Instr {
 /// Mnemonic table indexed by [`Instr::mnemonic_idx`].  The tail entries
 /// (index 57+) are the window slots, in [`crate::fusion::WINDOW`] order —
 /// pinned by `mnemonics_tail_matches_window_pool` below.
-pub const MNEMONICS: [&str; 59] = [
+pub const MNEMONICS: [&str; 60] = [
     "lui", "auipc", "jal", "jalr",
     "beq", "bne", "blt", "bge", "bltu", "bgeu",
     "lb", "lh", "lw", "lbu", "lhu",
@@ -281,7 +281,7 @@ pub const MNEMONICS: [&str; 59] = [
     "fence", "ecall", "ebreak",
     "mac", "add2i", "fusedmac", "dlp", "dlpi", "zlp",
     "set.zc", "set.zs", "set.ze",
-    "ldmac", "ldmacpp",
+    "ldmac", "ldmacpp", "ldadd",
 ];
 
 /// Generate a random *valid* instruction (all fields in encodable range) —

@@ -19,6 +19,8 @@
 //! marvel hw       [--fig10]                 area/power model
 //! marvel golden   --model m                 run the AOT HLO artifact via PJRT
 //! marvel shard-worker                       job protocol on stdin/stdout
+//! marvel cluster-worker [--listen ADDR]     job protocol daemon on a TCP
+//!                                           socket (cluster host)
 //! marvel shard-sweep  [--backend B] [--check] model-zoo sweep
 //!                                           (--check: diff vs in-process)
 //! marvel serve    [--models a,b] [--variants v0,v4] [--backend B]
@@ -29,7 +31,8 @@
 //! ```
 //!
 //! Every sweep-style command executes through one swappable backend
-//! (DESIGN.md §13), selected by `--backend local[:T] | shard:N` and
+//! (DESIGN.md §13), selected by
+//! `--backend local[:T] | shard:N | cluster:N|<addr>,…|@<file>` and
 //! parsed in exactly one place ([`backend_arg`]); results are
 //! bit-identical across backends.  `--threads T` fills an unspecified
 //! local thread count, and `--shard N` / `--workers N` survive as aliases
@@ -171,6 +174,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "hw" => cmd_hw(&args),
         "golden" => cmd_golden(&args),
         "shard-worker" => cmd_shard_worker(&args),
+        "cluster-worker" => cmd_cluster_worker(&args),
         "shard-sweep" => cmd_shard_sweep(&args),
         "serve" => cmd_serve(&args),
         "version" => {
@@ -189,10 +193,11 @@ fn print_usage() {
     println!(
         "marvel {} — model-class aware custom RISC-V extension generation\n\n\
          usage: marvel <flow|run|compile|profile|extgen|extsearch|report|hw|\
-         golden|shard-worker|shard-sweep|serve> \
+         golden|shard-worker|cluster-worker|shard-sweep|serve> \
          [--model NAME] [--variant v0..v4] [--artifacts DIR] \
-         [--backend local[:T]|shard:N (execution backend for report/\
-         shard-sweep/serve; results are bit-identical across backends)] \
+         [--backend local[:T]|shard:N|cluster:… (execution backend for \
+         report/shard-sweep/serve/extsearch; results are bit-identical \
+         across backends)] \
          [--threads N (local backend workers, 0 = all cores)] \
          [--shard N (alias for --backend shard:N)] ...\n\n\
          synthetic models: `synth:<kind>:<seed>` with kind ∈ \
@@ -236,15 +241,38 @@ fn print_usage() {
          --slo-window-ms MS    emit + reset a recent-traffic SLO snapshot \
          on\n                        stderr every MS (default: lifetime \
          only)\n\n\
+         cluster backend (DESIGN.md §18):\n  \
+         cluster-worker        host daemon: serves the job protocol over \
+         TCP;\n                        \
+         --listen ADDR (default 127.0.0.1:0) binds the\n                        \
+         socket, the bound address is announced as one\n                        \
+         JSON line on stdout\n  \
+         --backend cluster:N   spawn N loopback daemons of this binary \
+         and\n                        \
+         sweep across them (CI/bench form)\n  \
+         --backend cluster:a,b dial externally started daemons at \
+         addresses\n                        \
+         a,b,… (host:port each)\n  \
+         --backend cluster:@F  read the address list from discovery file \
+         F\n                        \
+         (one per line, '#' comments and blanks skipped)\n\n\
          fault injection (DESIGN.md §16):\n  \
          --chaos PLAN          deterministic fault plan for shard-sweep/\
          report/serve,\n                        \
          e.g. 'worker:kill@3,exec:transient@5x2'; also\n                        \
          read from MARVEL_CHAOS; within retry budgets\n                        \
          results stay bit-identical to a fault-free run\n\n\
-         env: MARVEL_THREADS=N overrides the one-worker-per-core default \
-         wherever a thread count is 0 or omitted; MARVEL_CHAOS=PLAN arms \
-         fault injection like --chaos",
+         environment variables:\n  \
+         MARVEL_THREADS=N      overrides the one-worker-per-core default\n                        \
+         wherever a thread count is 0 or omitted\n  \
+         MARVEL_LANES=N        lanes per worker thread for the software-\
+         SIMT\n                        \
+         engine (1 = scalar; capped at MAX_LANES)\n  \
+         MARVEL_JOB_TIMEOUT_MS=N\n                        \
+         per-job wall-clock deadline on the shard and\n                        \
+         cluster pools before a straggler is re-dispatched\n                        \
+         (0 disables; default scales with batch size)\n  \
+         MARVEL_CHAOS=PLAN     arms fault injection like --chaos",
         marvel::version()
     );
 }
@@ -268,7 +296,8 @@ fn chaos_arg(args: &Args) -> Result<Option<FaultPlan>> {
 }
 
 /// The execution backend a sweep-style command uses — THE one place the
-/// `--backend local[:T] | shard:N` spec is parsed (DESIGN.md §13).
+/// `--backend local[:T] | shard:N | cluster:…` spec is parsed
+/// (DESIGN.md §13).
 /// `--shard N` / `--workers N` stay as lenient aliases for `shard:N`:
 /// `0` or a non-number falls back to the command's default instead of
 /// erroring (old `--shard 0` meant in-process; old `--workers 0` clamped
@@ -322,6 +351,35 @@ fn cmd_shard_worker(args: &Args) -> Result<()> {
     let stdin = std::io::stdin();
     let stdout = std::io::stdout();
     marvel::sim::shard::worker_loop(&artifacts, stdin.lock(), stdout.lock())
+}
+
+/// The cluster host daemon (DESIGN.md §18): bind `--listen` (default
+/// `127.0.0.1:0` — kernel-assigned port), announce the bound address as
+/// one JSON line on stdout (the only stdout output ever; coordinators
+/// spawning loopback fleets read it for discovery), then serve sessions
+/// until killed.
+fn cmd_cluster_worker(args: &Args) -> Result<()> {
+    use std::io::Write;
+    let artifacts = args.artifacts();
+    let listen = args.get("listen").unwrap_or("127.0.0.1:0");
+    let listener = std::net::TcpListener::bind(listen)
+        .with_context(|| format!("binding cluster listener on {listen}"))?;
+    let addr = listener.local_addr().context("reading the bound address")?;
+    {
+        let mut out = std::io::stdout().lock();
+        writeln!(
+            out,
+            "{}",
+            marvel::sim::cluster::encode_listening(&addr.to_string())
+        )?;
+        out.flush()?;
+    }
+    eprintln!(
+        "marvel cluster-worker {}: listening on {addr} (artifacts {})",
+        marvel::version(),
+        artifacts.display()
+    );
+    marvel::sim::cluster::serve(&artifacts, listener)
 }
 
 fn cmd_shard_sweep(args: &Args) -> Result<()> {

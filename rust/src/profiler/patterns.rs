@@ -45,9 +45,10 @@ pub struct PatternCounts {
     pub addi_imm_hist: BTreeMap<(i32, i32), u64>,
     /// Dynamic occurrences of each mined window spec's pattern
     /// ([`crate::fusion::WINDOW`], per slot) in the retire stream — the
-    /// counters `extgen::propose` turns into window proposals.  Counted on
-    /// *post-ladder* streams (the window patterns end in `mac`/`fusedmac`),
-    /// so ladder-less profiles (v0) leave them at zero.
+    /// counters `extgen::propose` turns into window proposals.  The conv
+    /// specs' patterns end in `mac`/`fusedmac`, so those slots only count
+    /// on *post-ladder* streams; `ldadd` ends in the base-ISA eltwise
+    /// `add x20,x21,x22` and counts on any stream that retires it.
     pub window: [u64; crate::fusion::N_WINDOW],
 }
 
@@ -175,6 +176,30 @@ impl ProfileHook {
         self.flush();
         &self.counts
     }
+
+    /// Replay the retire window through the one generic matcher the
+    /// rewrite engine uses, so "countable" and "fusable" can't drift.
+    #[inline]
+    fn replay_window(&mut self, hist: [Option<Instr>; 3], instr: &Instr) {
+        for (i, spec) in crate::fusion::WINDOW.iter().enumerate() {
+            let plen = spec.pattern.len();
+            debug_assert!((2..=4).contains(&plen), "{}", spec.name);
+            let mut buf = [*instr; 4];
+            let mut ok = true;
+            for k in 0..plen - 1 {
+                match hist[4 - plen + k] {
+                    Some(x) => buf[k] = x,
+                    None => {
+                        ok = false;
+                        break;
+                    }
+                }
+            }
+            if ok && crate::fusion::try_match(spec, &buf[..plen]).is_some() {
+                self.counts.window[i] += 1;
+            }
+        }
+    }
 }
 
 impl RetireHook for ProfileHook {
@@ -190,10 +215,19 @@ impl RetireHook for ProfileHook {
         // every mined pattern ends in `add` (mac) or `addi` (add2i, quad)
         let [p3, p2, p1] = self.window;
         match instr {
-            Instr::Op { op: crate::isa::AluOp::Add, .. } => {
+            Instr::Op { op: crate::isa::AluOp::Add, rd, rs1, rs2 } => {
                 if let Some(p1) = p1 {
                     if match_mul_add_loose(&p1, instr) {
                         self.counts.mul_add += 1;
+                    }
+                }
+                // the eltwise accumulate (`add x20,x21,x22`) terminates the
+                // ldadd window pattern on any stream; the shape pre-filter
+                // keeps the hot generic-add path replay-free
+                {
+                    use crate::compiler::asm::{ACC, OPA, OPB};
+                    if *rd == ACC && *rs1 == OPA && *rs2 == OPB {
+                        self.replay_window([p3, p2, p1], instr);
                     }
                 }
             }
@@ -217,32 +251,10 @@ impl RetireHook for ProfileHook {
                     self.counts.branches_taken += 1;
                 }
             }
-            // mined-window opportunities end in the ladder's fused forms:
-            // replay the retire window through the one generic matcher the
-            // rewrite engine uses, so "countable" and "fusable" can't drift
+            // conv-class mined-window opportunities end in the ladder's
+            // fused forms (ldadd's terminator is handled in the Add arm)
             Instr::Mac | Instr::FusedMac { .. } => {
-                let hist = [p3, p2, p1];
-                for (i, spec) in crate::fusion::WINDOW.iter().enumerate() {
-                    let plen = spec.pattern.len();
-                    debug_assert!((2..=4).contains(&plen), "{}", spec.name);
-                    let mut buf = [*instr; 4];
-                    let mut ok = true;
-                    for k in 0..plen - 1 {
-                        match hist[4 - plen + k] {
-                            Some(x) => buf[k] = x,
-                            None => {
-                                ok = false;
-                                break;
-                            }
-                        }
-                    }
-                    if ok
-                        && crate::fusion::try_match(spec, &buf[..plen])
-                            .is_some()
-                    {
-                        self.counts.window[i] += 1;
-                    }
-                }
+                self.replay_window([p3, p2, p1], instr);
             }
             _ => {}
         }

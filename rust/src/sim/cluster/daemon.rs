@@ -1,0 +1,174 @@
+//! The `marvel cluster-worker` daemon: the shard worker behind a socket.
+//!
+//! One daemon process serves many concurrent sweeps: every accepted
+//! connection gets its own *session* thread with a private
+//! [`WorkerCore`] (its own [`Hydrator`] compile cache and pooled
+//! machine), so two coordinators hammering one host never contend on
+//! simulator state.  What *is* process-wide is the chaos state
+//! ([`SharedChaos`]): a one-shot `worker:kill@N` must fire once per
+//! daemon, not once per session, or every post-kill reconnect would
+//! re-inject the death and compound into a spurious poison panic.
+//!
+//! **Session lifecycle** — handshake (server hello first, then validate
+//! the client's — see [`super::transport`]), a `ready` frame, then the
+//! job/result exchange with a bounded in-flight pipeline: a reader
+//! thread parses job frames into a [`SESSION_PIPELINE`]-deep channel
+//! while the executor drains it, so a coordinator that pipelines is
+//! never stalled on the daemon's current job, and a coordinator that
+//! floods is backpressured through the channel and the socket instead of
+//! buffering without bound.
+//!
+//! **Death semantics** — a chaos `Kill` (and any write failure) drops
+//! the *connection*, not the process: the daemon survives, the
+//! coordinator's reader sees EOF, and its re-dial budget decides whether
+//! the host comes back.  Killing the daemon process itself is the
+//! dead-host case — every re-dial fails and the pool retires the host.
+//!
+//! [`Hydrator`]: crate::sim::shard::Hydrator
+
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::mpsc;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use super::transport::{check_hello, encode_hello, parse_hello, read_frame,
+                       write_frame};
+use crate::sim::shard::{self, encode_ready, parse_line,
+                        shared_chaos_from_env, JobDesc, JobReply, Msg,
+                        SharedChaos, WorkerCore, MAX_WIRE_BYTES};
+
+/// Jobs a session's reader may queue ahead of the executor.  Deeper than
+/// the coordinator-side [`crate::sim::shard::PIPELINE`] so a compliant
+/// coordinator is never backpressured; shallow enough that a flooding
+/// one is.
+pub const SESSION_PIPELINE: usize = 8;
+
+/// How long a freshly accepted connection gets to complete the
+/// handshake before its session thread gives up (a port scanner or
+/// wedged peer must not pin a thread forever).  Steady-state reads have
+/// no deadline — an idle coordinator between sweeps is normal.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Accept loop: one session thread per connection, forever.  Errors in
+/// a session (protocol garbage, handshake refusals, mid-job
+/// disconnects) are logged and end that session only.
+pub fn serve(artifacts: &Path, listener: TcpListener) -> Result<()> {
+    let chaos = shared_chaos_from_env()?;
+    for conn in listener.incoming() {
+        match conn {
+            Ok(stream) => {
+                let artifacts = artifacts.to_path_buf();
+                let chaos = std::sync::Arc::clone(&chaos);
+                std::thread::spawn(move || {
+                    let peer = stream
+                        .peer_addr()
+                        .map(|a| a.to_string())
+                        .unwrap_or_else(|_| "?".into());
+                    if let Err(e) = session(&artifacts, stream, chaos) {
+                        eprintln!("cluster-worker: session {peer}: {e:#}");
+                    }
+                });
+            }
+            Err(e) => eprintln!("cluster-worker: accept failed: {e}"),
+        }
+    }
+    Ok(())
+}
+
+/// One connection's worth of the worker protocol (see the module docs).
+fn session(
+    artifacts: &Path,
+    stream: TcpStream,
+    chaos: SharedChaos,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let sock = stream.try_clone().context("cloning the session socket")?;
+    let mut wr = BufWriter::new(
+        stream.try_clone().context("cloning the session socket")?,
+    );
+    let mut rd = BufReader::new(stream);
+    // Handshake under a deadline; steady-state reads block indefinitely.
+    sock.set_read_timeout(Some(HANDSHAKE_TIMEOUT)).ok();
+    write_frame(&mut wr, &encode_hello())?;
+    wr.flush()?;
+    let line = read_frame(&mut rd, MAX_WIRE_BYTES)
+        .context("reading the client hello")?
+        .context("peer closed during handshake")?;
+    let hello = parse_hello(&line).context("handshake")?;
+    if let Err(e) = check_hello(&hello) {
+        // Best-effort structured refusal before closing.  The seq is
+        // past the JSON-safe job range, so a client that merges it
+        // anyway discards it as stale instead of corrupting a slot.
+        let _ = write_frame(
+            &mut wr,
+            &shard::encode_result(1 << 53, &Err(format!("{e:#}"))),
+        );
+        let _ = wr.flush();
+        return Err(e);
+    }
+    sock.set_read_timeout(None).ok();
+    write_frame(&mut wr, &encode_ready())?;
+    wr.flush()?;
+
+    // Reader thread: frames -> bounded job channel (the in-flight cap).
+    let (jtx, jrx) = mpsc::sync_channel::<(u64, JobDesc)>(SESSION_PIPELINE);
+    let reader = std::thread::spawn(move || -> Result<()> {
+        loop {
+            let Some(line) = read_frame(&mut rd, MAX_WIRE_BYTES)? else {
+                return Ok(()); // client closed: session over
+            };
+            if line.trim().is_empty() {
+                continue;
+            }
+            match parse_line(&line)? {
+                Msg::Job { seq, desc } => {
+                    if jtx.send((seq, desc)).is_err() {
+                        return Ok(()); // executor side ended first
+                    }
+                }
+                Msg::Ready => {}
+                Msg::Done { .. } => {
+                    bail!("unexpected result message from coordinator")
+                }
+            }
+        }
+    });
+
+    let mut core = WorkerCore::new(artifacts, chaos);
+    let mut killed = false;
+    for (seq, desc) in jrx.iter() {
+        match core.handle_job(seq, &desc) {
+            // Chaos death = connection death: the daemon survives for
+            // the coordinator's re-dial.
+            JobReply::Die => {
+                killed = true;
+                break;
+            }
+            JobReply::Lines(lines) => {
+                let wrote = (|| -> std::io::Result<()> {
+                    for l in &lines {
+                        write_frame(&mut wr, l)?;
+                    }
+                    wr.flush()
+                })();
+                if wrote.is_err() {
+                    break; // client gone mid-write: close up
+                }
+            }
+        }
+    }
+    // Unblock the reader (it may be parked in read_frame) and reap it.
+    let _ = sock.shutdown(Shutdown::Both);
+    let joined = reader.join();
+    if killed {
+        eprintln!("cluster-worker: chaos kill — dropped the session");
+        return Ok(());
+    }
+    match joined {
+        Ok(r) => r.context("session read"),
+        Err(_) => bail!("session reader panicked"),
+    }
+}

@@ -1,0 +1,308 @@
+//! Cluster execution: the shard wire protocol promoted to TCP sockets
+//! (DESIGN.md §18).
+//!
+//! [`super::shard`] scales a sweep across worker *processes* on one
+//! machine; this subsystem scales it across *hosts*.  The leverage is
+//! that the wire was designed reference-based from the start — a job
+//! line names the model and variant, ships only the input image, and
+//! carries compilation fingerprints — so nothing about the payload had
+//! to change to cross a machine boundary.  What the socket adds is an
+//! envelope and a lifecycle:
+//!
+//! - [`transport`] — length-prefixed frames with a versioned hello
+//!   handshake carrying the protocol version and the cache
+//!   fingerprint-scheme salt, so a mismatched peer fails loudly at
+//!   connect time instead of silently mis-hydrating.
+//! - [`daemon`] — the `marvel cluster-worker --listen <addr>` process:
+//!   an accept loop serving many concurrent sweeps, one session thread
+//!   per connection with its own hydration cache and a bounded
+//!   in-flight pipeline, chaos state shared process-wide.
+//! - [`pool`] — [`ClusterPool`], the shard pool's recovery model on the
+//!   connection axis: generation-tagged events, re-dial budgets
+//!   ([`REDIAL_ATTEMPTS`]), dead-host requeue on the poison contract,
+//!   cross-host straggler re-dispatch and transient retries on the
+//!   shared `JOB_RETRIES`/backoff budget.
+//! - [`ClusterExec`] — the pool behind the [`Executor`] trait, selected
+//!   as `--backend cluster:<addr>,…` (external daemons),
+//!   `cluster:@<file>` (one address per line) or `cluster:N`
+//!   ([`LoopbackCluster`]: N daemons of this very binary spawned on
+//!   ephemeral loopback ports — the CI/bench form, and the zero-setup
+//!   way to exercise the full socket path on one machine).
+//!
+//! Determinism is inherited, not re-proven: results merge by submission
+//! order, jobs are pure, so a cluster run is byte-identical to
+//! `local:1` for any host count, chaos schedule (within budgets) or
+//! re-dispatch interleaving — `tests/exec_conformance.rs` holds that
+//! differential over a real socket pair.  [`super::chaos::ChaosExec`] /
+//! `MARVEL_CHAOS` compose over this backend exactly as over the others:
+//! exec-site faults wrap the executor, worker-site faults ride the
+//! spawned loopback daemons' environment (first daemon full plan, later
+//! ones one-shot-stripped, mirroring the shard pool).
+
+pub mod daemon;
+pub mod pool;
+pub mod transport;
+
+use std::path::Path;
+use std::process::{Child, Command, Stdio};
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use super::chaos;
+use super::cpu::SimError;
+use super::engine::JobOutput;
+use super::exec::{Caps, Executor, JobSpec, Work};
+use super::shard::{self, JobDesc, MAX_WIRE_BYTES, PIPELINE};
+
+pub use daemon::{serve, SESSION_PIPELINE};
+pub use pool::{ClusterPool, REDIAL_ATTEMPTS};
+pub use transport::{encode_listening, fp_salt, parse_listening,
+                    PROTO_VERSION};
+
+/// A fleet of `marvel cluster-worker` daemons spawned as child processes
+/// on ephemeral loopback ports — hosts for a [`ClusterPool`] without any
+/// out-of-band setup.  Discovery is the daemon's one stdout line
+/// ([`transport::encode_listening`]), so `--listen 127.0.0.1:0` works
+/// and parallel test runs never race over a port.
+///
+/// The chaos handoff mirrors [`shard::ShardPool`]: the first daemon gets
+/// the full worker-fault plan, every later one the one-shot-stripped
+/// rendering, so an injected `kill@N` fires exactly once fleet-wide.
+pub struct LoopbackCluster {
+    children: Vec<Child>,
+    addrs: Vec<String>,
+}
+
+impl LoopbackCluster {
+    /// Spawn `n` daemons, handing them the worker-site faults of the
+    /// coordinator's `MARVEL_CHAOS` plan (if any).
+    pub fn spawn(artifacts: &Path, n: usize) -> Result<LoopbackCluster> {
+        LoopbackCluster::spawn_with_plan(
+            artifacts,
+            n,
+            chaos::FaultPlan::from_env()?.as_ref(),
+        )
+    }
+
+    /// Spawn `n` daemons under an explicit fault plan (tests inject
+    /// plans here without touching the process environment).
+    pub fn spawn_with_plan(
+        artifacts: &Path,
+        n: usize,
+        plan: Option<&chaos::FaultPlan>,
+    ) -> Result<LoopbackCluster> {
+        let exe = std::env::current_exe()
+            .context("locating the marvel binary for cluster workers")?;
+        LoopbackCluster::spawn_cmd(&exe, artifacts, n, plan)
+    }
+
+    /// Spawn `n` daemons of an explicit binary.  Integration tests use
+    /// this with `CARGO_BIN_EXE_marvel` — their own `current_exe` is the
+    /// test harness, which has no `cluster-worker` subcommand.
+    pub fn spawn_cmd(
+        exe: &Path,
+        artifacts: &Path,
+        n: usize,
+        plan: Option<&chaos::FaultPlan>,
+    ) -> Result<LoopbackCluster> {
+        ensure!(n > 0, "loopback cluster needs at least one worker");
+        let plans = plan.and_then(|p| {
+            if p.worker_faults().next().is_none() {
+                return None; // exec-site-only plan: daemons run clean
+            }
+            Some((p.to_string(), p.strip_one_shot().to_string()))
+        });
+        let mut lc = LoopbackCluster { children: Vec::new(), addrs: Vec::new() };
+        for i in 0..n {
+            let mut cmd = Command::new(exe);
+            cmd.args(["cluster-worker", "--listen", "127.0.0.1:0", "--artifacts"])
+                .arg(artifacts)
+                .stdin(Stdio::null())
+                .stdout(Stdio::piped());
+            // Per-incarnation plan wins over whatever the coordinator's
+            // environment says (same discipline as the shard pool).
+            cmd.env_remove(chaos::MARVEL_CHAOS_ENV);
+            if let Some((full, stripped)) = &plans {
+                let plan = if i == 0 { full } else { stripped };
+                if !plan.is_empty() {
+                    cmd.env(chaos::MARVEL_CHAOS_ENV, plan);
+                }
+            }
+            let mut child = cmd.spawn().with_context(|| {
+                format!("spawning loopback cluster worker {i}")
+            })?;
+            let stdout = child.stdout.take().expect("piped stdout");
+            let mut rd = std::io::BufReader::new(stdout);
+            let line = shard::read_line_capped(&mut rd, MAX_WIRE_BYTES)
+                .context("reading the daemon's listening line")?
+                .ok_or_else(|| {
+                    anyhow!("loopback cluster worker {i} exited before \
+                             listening")
+                })?;
+            let addr = parse_listening(&line).with_context(|| {
+                format!("loopback cluster worker {i} wrote {line:?}")
+            })?;
+            lc.children.push(child);
+            lc.addrs.push(addr);
+        }
+        Ok(lc)
+    }
+
+    /// The daemons' bound addresses, in spawn order.
+    pub fn addrs(&self) -> &[String] {
+        &self.addrs
+    }
+
+    /// Kill one daemon process outright — the dead-*host* case (every
+    /// re-dial fails and the pool retires the slot), as opposed to the
+    /// chaos session kill the daemon survives.
+    pub fn kill_host(&mut self, i: usize) {
+        let _ = self.children[i].kill();
+        let _ = self.children[i].wait();
+    }
+}
+
+impl Drop for LoopbackCluster {
+    fn drop(&mut self) {
+        for c in &mut self.children {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+}
+
+/// The multi-host backend: a [`ClusterPool`] behind the [`Executor`]
+/// trait.  Only the wire half of a [`Work::Named`] job travels (workers
+/// hydrate from their own caches; fingerprints catch divergence);
+/// [`Work::Raw`] jobs answer with a capability error at their index —
+/// the same cross-process contract as `ShardExec`.
+pub struct ClusterExec {
+    pool: ClusterPool,
+    hosts: usize,
+    /// The backend spec string this executor answers to.
+    spec: String,
+    queue: Vec<JobSpec>,
+    /// Owned loopback daemons (`None` when dialing external hosts);
+    /// held for the executor's lifetime, killed on drop.
+    loopback: Option<LoopbackCluster>,
+}
+
+impl ClusterExec {
+    /// Dial externally started daemons (`cluster:<addr>,…`).
+    pub fn connect(addrs: &[String]) -> Result<ClusterExec> {
+        let pool = ClusterPool::connect(addrs)?;
+        Ok(ClusterExec {
+            hosts: addrs.len(),
+            spec: format!("cluster:{}", addrs.join(",")),
+            pool,
+            queue: Vec::new(),
+            loopback: None,
+        })
+    }
+
+    /// Spawn `n` loopback daemons and dial them (`cluster:N`).
+    pub fn spawn_loopback(artifacts: &Path, n: usize) -> Result<ClusterExec> {
+        Self::wrap_loopback(LoopbackCluster::spawn(artifacts, n)?, n)
+    }
+
+    /// [`ClusterExec::spawn_loopback`] under an explicit fault plan.
+    pub fn spawn_loopback_with_plan(
+        artifacts: &Path,
+        n: usize,
+        plan: Option<&chaos::FaultPlan>,
+    ) -> Result<ClusterExec> {
+        Self::wrap_loopback(
+            LoopbackCluster::spawn_with_plan(artifacts, n, plan)?,
+            n,
+        )
+    }
+
+    /// [`ClusterExec::spawn_loopback_with_plan`] with an explicit daemon
+    /// binary (see [`LoopbackCluster::spawn_cmd`]).
+    pub fn spawn_loopback_cmd(
+        exe: &Path,
+        artifacts: &Path,
+        n: usize,
+        plan: Option<&chaos::FaultPlan>,
+    ) -> Result<ClusterExec> {
+        Self::wrap_loopback(
+            LoopbackCluster::spawn_cmd(exe, artifacts, n, plan)?,
+            n,
+        )
+    }
+
+    fn wrap_loopback(lb: LoopbackCluster, n: usize) -> Result<ClusterExec> {
+        let pool = ClusterPool::connect(lb.addrs())?;
+        Ok(ClusterExec {
+            hosts: n,
+            spec: format!("cluster:{n}"),
+            pool,
+            queue: Vec::new(),
+            loopback: Some(lb),
+        })
+    }
+
+    /// The wrapped pool (re-dial counters, live-host count).
+    pub fn pool(&self) -> &ClusterPool {
+        &self.pool
+    }
+
+    /// The owned loopback fleet, when this executor spawned one (tests
+    /// kill individual daemons through it).
+    pub fn loopback_mut(&mut self) -> Option<&mut LoopbackCluster> {
+        self.loopback.as_mut()
+    }
+}
+
+impl Executor for ClusterExec {
+    fn caps(&self) -> Caps {
+        Caps {
+            persistent_pool: true,
+            cross_process: true,
+            // Each host connection keeps PIPELINE jobs in flight.
+            parallelism: (self.hosts * PIPELINE).max(1),
+            // Sessions run jobs scalar as they stream off the wire.
+            lanes: 1,
+        }
+    }
+
+    fn describe(&self) -> String {
+        self.spec.clone()
+    }
+
+    fn submit(&mut self, job: JobSpec) -> usize {
+        self.queue.push(job);
+        self.queue.len() - 1
+    }
+
+    fn run(&mut self) -> Vec<Result<JobOutput, SimError>> {
+        let specs = std::mem::take(&mut self.queue);
+        // Compact the dispatchable descriptions; remember, per submitted
+        // job, either its desc index or its immediate capability error.
+        let mut descs: Vec<JobDesc> = Vec::with_capacity(specs.len());
+        let routed: Vec<Result<usize, String>> = specs
+            .into_iter()
+            .map(|s| match s.work {
+                Work::Named { desc, .. } => {
+                    descs.push(desc);
+                    Ok(descs.len() - 1)
+                }
+                Work::Raw(_) => Err(
+                    "raw memory-image job on a cross-process backend: \
+                     raw jobs cannot travel the wire (submit a named job, \
+                     or run on a local backend)"
+                        .to_string(),
+                ),
+            })
+            .collect();
+        let mut ran: Vec<Option<Result<JobOutput, SimError>>> =
+            self.pool.run(&descs).into_iter().map(Some).collect();
+        routed
+            .into_iter()
+            .map(|r| match r {
+                Ok(i) => ran[i].take().expect("one result per dispatched job"),
+                Err(msg) => Err(SimError::remote(msg)),
+            })
+            .collect()
+    }
+}

@@ -1,0 +1,597 @@
+//! Coordinator side: a pool of worker *hosts* behind TCP connections.
+//!
+//! [`ClusterPool`] is [`crate::sim::shard::ShardPool`]'s shape with the
+//! process axis swapped for a connection axis: a worker slot is a dialed
+//! host instead of a spawned child, a death is a lost connection instead
+//! of a lost process, and "respawn" becomes *re-dial* — same budget
+//! discipline ([`REDIAL_ATTEMPTS`] mirroring `RESPAWN_ATTEMPTS`), same
+//! generation-tagged event stream so a replaced connection's late
+//! messages are never charged to its successor, and the same recovery
+//! contracts: requeue-on-death with [`POISON_DEATHS`] attribution,
+//! cross-host straggler re-dispatch and transient-error retries drawing
+//! on the shared [`JOB_RETRIES`] budget with exponential backoff, and a
+//! submission-ordered merge that keeps results byte-identical to
+//! [`crate::sim::shard::run_descs_local`] for any host count, partition
+//! or re-dispatch schedule.
+//!
+//! The distinction the re-dial budget surfaces: a *session* death (chaos
+//! kill, transient network drop) re-dials successfully because the
+//! daemon process survived — mid-sweep reconnect; a *host* death (the
+//! daemon itself is gone) fails every re-dial, the slot is retired, and
+//! its jobs fall back to the surviving hosts.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{Shutdown, SocketAddr, TcpStream, ToSocketAddrs};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use super::transport::{check_hello, encode_hello, parse_hello, read_frame,
+                       write_frame};
+use crate::sim::cpu::{RemoteKind, SimError};
+use crate::sim::engine::JobOutput;
+use crate::sim::shard::{encode_job, job_timeout, parse_line, stall_timeout,
+                        JobDesc, Msg, JOB_RETRIES, MAX_WIRE_BYTES, PIPELINE,
+                        POISON_DEATHS};
+
+/// How many times a lost host connection is re-dialed before its slot is
+/// retired for good and its jobs fall back to surviving hosts — the
+/// connection-axis mirror of `RESPAWN_ATTEMPTS`.  Death attribution
+/// happens before the re-dial, so the poison contract is unchanged.
+pub const REDIAL_ATTEMPTS: u32 = 2;
+
+/// Dial + handshake deadline.  Loopback and live hosts answer in
+/// microseconds; a black-holed address must not wedge a sweep.
+const DIAL_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Base of the exponential backoff between retries of a transient wire
+/// error (doubles per consumed retry) — same shape as the shard pool's.
+const RETRY_BACKOFF_BASE: Duration = Duration::from_millis(10);
+
+enum Event {
+    Msg { host: usize, gen: u64, msg: Msg },
+    Dead { host: usize, gen: u64, reason: String },
+}
+
+/// One result slot per submitted job (`None` = not yet merged).
+type Slots = [Option<Result<JobOutput, SimError>>];
+
+struct Host {
+    addr: String,
+    /// Write half of the live connection (`None` once lost).
+    wr: Option<BufWriter<TcpStream>>,
+    /// Shutdown handle for the same connection (unblocks the reader).
+    sock: Option<TcpStream>,
+    alive: bool,
+    /// Incarnation counter for this slot: events from a replaced
+    /// connection (its reader thread races the re-dial) carry the old
+    /// generation and must not be charged to the new one.
+    gen: u64,
+    /// Job indices (current `run` call) dispatched here and not yet
+    /// done, with dispatch time — the per-job timeout clock.
+    outstanding: HashMap<usize, Instant>,
+}
+
+/// A pool of dialed worker hosts executing [`JobDesc`] batches with
+/// submission-ordered merge (see the module docs for the failure model).
+/// Connections — and the per-session hydration caches behind them — stay
+/// warm across `run` calls.
+pub struct ClusterPool {
+    hosts: Vec<Host>,
+    rx: mpsc::Receiver<Event>,
+    tx: mpsc::Sender<Event>,
+    next_seq: u64,
+    gen_counter: u64,
+    /// Remaining re-dials per host slot.
+    redials_left: Vec<u32>,
+    redials_used: u32,
+}
+
+impl ClusterPool {
+    /// Dial every address and complete the hello handshake; any initial
+    /// dial failure is a hard error (the caller asked for these hosts).
+    pub fn connect(addrs: &[String]) -> Result<ClusterPool> {
+        ensure!(!addrs.is_empty(), "cluster pool needs at least one host");
+        let (tx, rx) = mpsc::channel();
+        let mut pool = ClusterPool {
+            hosts: Vec::new(),
+            rx,
+            tx,
+            next_seq: 0,
+            gen_counter: addrs.len() as u64,
+            redials_left: vec![REDIAL_ATTEMPTS; addrs.len()],
+            redials_used: 0,
+        };
+        for (i, addr) in addrs.iter().enumerate() {
+            let h = pool
+                .dial(addr, i, i as u64)
+                .with_context(|| format!("dialing cluster host {addr}"))?;
+            pool.hosts.push(h);
+        }
+        Ok(pool)
+    }
+
+    /// Connect + handshake one host and spawn its reader thread for
+    /// incarnation `gen`.
+    fn dial(&self, addr: &str, host: usize, gen: u64) -> Result<Host> {
+        let sa: SocketAddr = addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolving {addr}"))?
+            .next()
+            .ok_or_else(|| anyhow!("{addr} resolved to no address"))?;
+        let stream = TcpStream::connect_timeout(&sa, DIAL_TIMEOUT)
+            .with_context(|| format!("connecting to {addr}"))?;
+        stream.set_nodelay(true).ok();
+        // Handshake under a deadline; steady-state reads (on the reader
+        // thread below) block until the connection dies.
+        stream.set_read_timeout(Some(DIAL_TIMEOUT)).ok();
+        let mut rd = BufReader::new(
+            stream.try_clone().context("cloning the host socket")?,
+        );
+        let mut wr = BufWriter::new(
+            stream.try_clone().context("cloning the host socket")?,
+        );
+        let line = read_frame(&mut rd, MAX_WIRE_BYTES)
+            .with_context(|| format!("reading the hello from {addr}"))?
+            .ok_or_else(|| anyhow!("{addr} closed during handshake"))?;
+        let hello =
+            parse_hello(&line).with_context(|| format!("handshake with {addr}"))?;
+        check_hello(&hello).with_context(|| format!("handshake with {addr}"))?;
+        write_frame(&mut wr, &encode_hello())?;
+        wr.flush()?;
+        stream.set_read_timeout(None).ok();
+        let tx = self.tx.clone();
+        std::thread::spawn(move || loop {
+            let event = match read_frame(&mut rd, MAX_WIRE_BYTES) {
+                Ok(None) => {
+                    let _ = tx.send(Event::Dead {
+                        host,
+                        gen,
+                        reason: "connection closed".into(),
+                    });
+                    return;
+                }
+                Ok(Some(l)) if l.trim().is_empty() => continue,
+                Ok(Some(l)) => match parse_line(&l) {
+                    Ok(msg) => Event::Msg { host, gen, msg },
+                    Err(e) => {
+                        let _ = tx.send(Event::Dead {
+                            host,
+                            gen,
+                            reason: format!("protocol error: {e:#}"),
+                        });
+                        return;
+                    }
+                },
+                Err(e) => {
+                    let _ = tx.send(Event::Dead {
+                        host,
+                        gen,
+                        reason: format!("read error: {e}"),
+                    });
+                    return;
+                }
+            };
+            if tx.send(event).is_err() {
+                return;
+            }
+        });
+        Ok(Host {
+            addr: addr.to_string(),
+            wr: Some(wr),
+            sock: Some(stream),
+            alive: true,
+            gen,
+            outstanding: HashMap::new(),
+        })
+    }
+
+    /// Re-dial a lost host slot, consuming one unit of its
+    /// [`REDIAL_ATTEMPTS`] budget per attempt.  Success means the daemon
+    /// process is still there (session death — fresh connection, fresh
+    /// generation, immediately dispatchable); exhausting the budget
+    /// against a dead daemon retires the slot.
+    fn try_redial(&mut self, host: usize) {
+        while self.redials_left[host] > 0 {
+            self.redials_left[host] -= 1;
+            self.gen_counter += 1;
+            let gen = self.gen_counter;
+            let addr = self.hosts[host].addr.clone();
+            match self.dial(&addr, host, gen) {
+                Ok(h) => {
+                    self.redials_used += 1;
+                    eprintln!(
+                        "cluster host {host} ({addr}) re-dialed ({} attempts \
+                         left)",
+                        self.redials_left[host]
+                    );
+                    self.hosts[host] = h;
+                    return;
+                }
+                Err(e) => eprintln!(
+                    "cluster host {host} ({addr}) re-dial failed ({} \
+                     attempts left): {e:#}",
+                    self.redials_left[host]
+                ),
+            }
+        }
+    }
+
+    /// Live (connected) host count.
+    pub fn live_hosts(&self) -> usize {
+        self.hosts.iter().filter(|h| h.alive).count()
+    }
+
+    /// Host slot count, live or not.
+    pub fn hosts(&self) -> usize {
+        self.hosts.len()
+    }
+
+    /// How many lost connections have been successfully re-dialed over
+    /// the pool's lifetime (observability + the reconnect tests).
+    pub fn redials_used(&self) -> u32 {
+        self.redials_used
+    }
+
+    /// Execute a batch across the hosts.  `results[i]` corresponds to
+    /// `descs[i]`, byte-identical to `run_descs_local` for any host
+    /// count or re-dispatch schedule.  Panics if a poison job kills
+    /// [`POISON_DEATHS`] connections or every host dies — the same
+    /// contract as the shard pool, one transport up.
+    pub fn run(&mut self, descs: &[JobDesc]) -> Vec<Result<JobOutput, SimError>> {
+        let n = descs.len();
+        let base = self.next_seq;
+        self.next_seq += n as u64;
+        let stall = stall_timeout(descs);
+        let per_job = job_timeout(descs);
+        // Stale outstanding entries are duplicates from a previous batch
+        // whose first copy already won; their late results are discarded
+        // by the seq-range guard below.
+        for h in &mut self.hosts {
+            h.outstanding.clear();
+        }
+        let mut results: Vec<Option<Result<JobOutput, SimError>>> =
+            (0..n).map(|_| None).collect();
+        let mut done = 0usize;
+        // Pre-send wire cap, same as the shard pool: an unsendable job
+        // fails at its own index instead of reading as host corruption.
+        for (i, d) in descs.iter().enumerate() {
+            let wire = encode_job(base + i as u64, d).len();
+            if wire > MAX_WIRE_BYTES {
+                results[i] = Some(Err(SimError::Remote {
+                    msg: format!(
+                        "oversized job frame ({wire} bytes exceeds the \
+                         {MAX_WIRE_BYTES}-byte wire cap)"
+                    ),
+                    kind: RemoteKind::Fatal,
+                }));
+                done += 1;
+            }
+        }
+        let mut queue: VecDeque<usize> =
+            (0..n).filter(|&i| results[i].is_none()).collect();
+        let mut dispatched: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut deaths: Vec<u32> = vec![0; n];
+        let mut retries: Vec<u32> = vec![0; n];
+        let mut backoff: Vec<Option<Instant>> = vec![None; n];
+        let mut last_event = Instant::now();
+
+        while done < n {
+            self.dispatch(
+                descs, base, &results, &mut queue, &mut dispatched,
+                &mut deaths, &mut retries, &backoff,
+            );
+            if self.live_hosts() == 0 {
+                panic!(
+                    "cluster pool: all hosts died with {} of {n} jobs \
+                     unfinished",
+                    n - done
+                );
+            }
+            let now = Instant::now();
+            let mut wait = (last_event + stall).saturating_duration_since(now);
+            for b in backoff.iter().flatten() {
+                wait = wait.min(b.saturating_duration_since(now));
+            }
+            for h in self.hosts.iter().filter(|h| h.alive) {
+                for t0 in h.outstanding.values() {
+                    wait = wait
+                        .min((*t0 + per_job).saturating_duration_since(now));
+                }
+            }
+            let event = match self
+                .rx
+                .recv_timeout(wait.max(Duration::from_millis(1)))
+            {
+                Ok(e) => {
+                    last_event = Instant::now();
+                    e
+                }
+                Err(_) => {
+                    if last_event.elapsed() >= stall {
+                        panic!(
+                            "cluster pool stalled: no host event within \
+                             {stall:?} ({} of {n} jobs unfinished)",
+                            n - done
+                        );
+                    }
+                    // Per-job timeouts: duplicate over-deadline work onto
+                    // another host, budget allowing; first result wins.
+                    let now = Instant::now();
+                    for h in self.hosts.iter_mut().filter(|h| h.alive) {
+                        for (&i, t0) in h.outstanding.iter_mut() {
+                            if now.saturating_duration_since(*t0) < per_job
+                                || results[i].is_some()
+                                || retries[i] >= JOB_RETRIES
+                                || queue.contains(&i)
+                            {
+                                continue;
+                            }
+                            retries[i] += 1;
+                            *t0 = now;
+                            queue.push_back(i);
+                            eprintln!(
+                                "cluster job {i} timed out after \
+                                 {per_job:?}; re-dispatching ({} of \
+                                 {JOB_RETRIES} budget used)",
+                                retries[i]
+                            );
+                        }
+                    }
+                    continue;
+                }
+            };
+            match event {
+                Event::Msg { msg: Msg::Ready, .. } => {}
+                Event::Msg { host, gen, msg: Msg::Done { seq, result } } => {
+                    let Some(i) = seq.checked_sub(base).map(|d| d as usize)
+                    else {
+                        continue; // stale: previous run
+                    };
+                    if i >= n {
+                        continue;
+                    }
+                    // Results merge whatever their generation (jobs are
+                    // pure); only the current incarnation's pipeline
+                    // bookkeeping may be touched.
+                    if gen == self.hosts[host].gen {
+                        self.hosts[host].outstanding.remove(&i);
+                    }
+                    if results[i].is_some() {
+                        continue; // a duplicate's first copy already won
+                    }
+                    match result {
+                        Ok(o) => {
+                            results[i] = Some(Ok(o));
+                            done += 1;
+                        }
+                        Err(msg) => {
+                            let kind = RemoteKind::classify(&msg);
+                            if kind == RemoteKind::Retryable
+                                && retries[i] < JOB_RETRIES
+                            {
+                                retries[i] += 1;
+                                backoff[i] = Some(
+                                    Instant::now()
+                                        + RETRY_BACKOFF_BASE
+                                            * (1 << (retries[i] - 1).min(6)),
+                                );
+                                if !queue.contains(&i) {
+                                    queue.push_back(i);
+                                }
+                                eprintln!(
+                                    "cluster job {i} transient failure \
+                                     (retry {} of {JOB_RETRIES}): {msg}",
+                                    retries[i]
+                                );
+                            } else {
+                                let err = if kind == RemoteKind::Retryable {
+                                    SimError::Remote {
+                                        msg: format!(
+                                            "retry budget exhausted after \
+                                             {} attempts: {msg}",
+                                            retries[i] + 1
+                                        ),
+                                        kind: RemoteKind::Fatal,
+                                    }
+                                } else {
+                                    SimError::Remote { msg, kind }
+                                };
+                                results[i] = Some(Err(err));
+                                done += 1;
+                            }
+                        }
+                    }
+                }
+                Event::Msg { host, gen, msg: Msg::Job { .. } } => {
+                    if gen != self.hosts[host].gen {
+                        continue; // a replaced connection's last gasp
+                    }
+                    // A host must never send jobs; treat as corruption.
+                    self.kill_host(host, "sent a job message");
+                    Self::requeue(
+                        &mut self.hosts[host],
+                        &results,
+                        &mut queue,
+                        &mut deaths,
+                        descs,
+                    );
+                    self.try_redial(host);
+                }
+                Event::Dead { host, gen, reason } => {
+                    if gen != self.hosts[host].gen || !self.hosts[host].alive
+                    {
+                        continue; // already handled (or replaced)
+                    }
+                    self.kill_host(host, &reason);
+                    Self::requeue(
+                        &mut self.hosts[host],
+                        &results,
+                        &mut queue,
+                        &mut deaths,
+                        descs,
+                    );
+                    self.try_redial(host);
+                }
+            }
+        }
+        results
+            .into_iter()
+            .map(|r| r.expect("merge filled every slot"))
+            .collect()
+    }
+
+    /// Send queued jobs to live hosts with pipeline capacity; with an
+    /// empty queue, duplicate outstanding jobs onto idle hosts (the
+    /// cross-host straggler re-dispatch, charged to [`JOB_RETRIES`]).
+    #[allow(clippy::too_many_arguments)] // one call site; the run-loop state
+    fn dispatch(
+        &mut self,
+        descs: &[JobDesc],
+        base: u64,
+        results: &Slots,
+        queue: &mut VecDeque<usize>,
+        dispatched: &mut [Vec<usize>],
+        deaths: &mut [u32],
+        retries: &mut [u32],
+        backoff: &[Option<Instant>],
+    ) {
+        let now = Instant::now();
+        loop {
+            let Some(h) = self
+                .hosts
+                .iter()
+                .enumerate()
+                .filter(|(_, hk)| hk.alive && hk.outstanding.len() < PIPELINE)
+                .min_by_key(|(_, hk)| hk.outstanding.len())
+                .map(|(i, _)| i)
+            else {
+                return;
+            };
+            while queue.front().is_some_and(|&i| results[i].is_some()) {
+                queue.pop_front();
+            }
+            let eligible = queue
+                .iter()
+                .position(|&i| {
+                    results[i].is_none()
+                        && backoff[i].is_none_or(|b| b <= now)
+                })
+                .and_then(|p| queue.remove(p));
+            let i = match eligible {
+                Some(i) => i,
+                None => {
+                    if !queue.is_empty() {
+                        return; // everything queued is backing off
+                    }
+                    // Straggler re-dispatch: only fully idle hosts, onto
+                    // the least-duplicated job this host has not seen.
+                    if !self.hosts[h].outstanding.is_empty() {
+                        return;
+                    }
+                    let Some(i) = (0..descs.len())
+                        .filter(|&i| {
+                            results[i].is_none()
+                                && !dispatched[i].contains(&h)
+                                && retries[i] < JOB_RETRIES
+                        })
+                        .min_by_key(|&i| dispatched[i].len())
+                    else {
+                        return;
+                    };
+                    retries[i] += 1; // the duplicate consumes retry budget
+                    i
+                }
+            };
+            // Prefer a host that has not seen this job; fall back to the
+            // least-loaded (a one-host pool must still retry somewhere).
+            let h = if dispatched[i].contains(&h) {
+                self.hosts
+                    .iter()
+                    .enumerate()
+                    .filter(|(hi, hk)| {
+                        hk.alive
+                            && hk.outstanding.len() < PIPELINE
+                            && !dispatched[i].contains(hi)
+                    })
+                    .min_by_key(|(_, hk)| hk.outstanding.len())
+                    .map_or(h, |(hi, _)| hi)
+            } else {
+                h
+            };
+            let line = encode_job(base + i as u64, &descs[i]);
+            let ok = match self.hosts[h].wr.as_mut() {
+                Some(wr) => write_frame(wr, &line)
+                    .and_then(|()| wr.flush())
+                    .is_ok(),
+                None => false,
+            };
+            if ok {
+                self.hosts[h].outstanding.insert(i, Instant::now());
+                dispatched[i].push(h);
+            } else {
+                // Broken connection: handle the death here in full (the
+                // reader's Dead event carries the replaced generation and
+                // is ignored) so its jobs requeue exactly once.
+                queue.push_front(i);
+                self.kill_host(h, "send failed");
+                Self::requeue(
+                    &mut self.hosts[h], results, queue, deaths, descs,
+                );
+                self.try_redial(h);
+            }
+        }
+    }
+
+    fn kill_host(&mut self, host: usize, reason: &str) {
+        let h = &mut self.hosts[host];
+        h.alive = false;
+        h.wr = None;
+        if let Some(sock) = h.sock.take() {
+            let _ = sock.shutdown(Shutdown::Both);
+        }
+        eprintln!("cluster host {host} ({}) lost: {reason}", h.addr);
+    }
+
+    /// Put a lost host's unfinished jobs back on the queue, attributing
+    /// the death to each; a job implicated in [`POISON_DEATHS`] deaths
+    /// is propagated as a panic.
+    fn requeue(
+        host: &mut Host,
+        results: &Slots,
+        queue: &mut VecDeque<usize>,
+        deaths: &mut [u32],
+        descs: &[JobDesc],
+    ) {
+        for (i, _dispatched_at) in std::mem::take(&mut host.outstanding) {
+            if results[i].is_some() {
+                continue;
+            }
+            deaths[i] += 1;
+            if deaths[i] >= POISON_DEATHS {
+                panic!(
+                    "cluster job {i} ({} on {}) killed {} host connections \
+                     — poison job propagated (in-process contract: a \
+                     panicking job panics the batch)",
+                    descs[i].model, descs[i].variant, deaths[i]
+                );
+            }
+            if !queue.contains(&i) {
+                queue.push_front(i);
+            }
+        }
+    }
+}
+
+impl Drop for ClusterPool {
+    fn drop(&mut self) {
+        for h in &mut self.hosts {
+            h.wr = None; // flush + close the write half
+            if let Some(sock) = h.sock.take() {
+                let _ = sock.shutdown(Shutdown::Both);
+            }
+        }
+    }
+}

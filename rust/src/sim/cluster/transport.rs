@@ -1,0 +1,287 @@
+//! Framed socket transport: length-prefixed line-JSON plus a versioned
+//! hello handshake.
+//!
+//! The shard wire protocol ([`crate::sim::shard`]) frames messages with
+//! `\n` because stdio pipes are byte streams owned end to end by the
+//! coordinator.  A TCP socket adds two problems newline framing leaves
+//! open: *what* is on the other end (anything can connect to a listening
+//! port — an old binary, a different tool, a port scanner), and how to
+//! bound a frame before trusting the peer.  This module answers both:
+//!
+//! - **Framing**: every message travels as a 4-byte big-endian length
+//!   prefix followed by exactly that many bytes of UTF-8 line-JSON (no
+//!   trailing newline).  The length is validated against the shared
+//!   [`MAX_WIRE_BYTES`] cap *before* any allocation, so a garbage or
+//!   hostile prefix costs four bytes of reading, not gigabytes of buffer.
+//! - **Handshake**: the first frame in each direction is a `hello`
+//!   carrying the protocol version and the *fingerprint-scheme salt* —
+//!   a hash over the scheme identity that both sides derive locally
+//!   ([`fp_salt`]).  The wire ships fingerprints instead of program
+//!   bytes, so two peers hashing differently would pass every frame and
+//!   still disagree about every job; the salt turns that silent hazard
+//!   into a loud connect-time error.  The server (daemon) speaks first.
+//!
+//! Frame payloads after the handshake are the unchanged shard wire lines
+//! ([`crate::sim::shard::encode_job`] and friends) — the cluster layer
+//! changes the envelope, never the letter.
+
+use std::io::{Read, Write};
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::sim::shard::MAX_WIRE_BYTES;
+use crate::util::json::{self, ObjBuilder};
+
+/// Cluster wire protocol version; bumped on any framing or message-shape
+/// change.  A peer speaking a different version is refused at handshake.
+pub const PROTO_VERSION: u64 = 1;
+
+/// The fingerprint-scheme salt: identifies *how* this binary computes the
+/// program/base-DM fingerprints job descriptions carry (FNV-1a over the
+/// encodings fixed by [`crate::util::fnv1a`] and `Program::fingerprint`).
+/// Both ends derive it locally and compare at handshake — equal salts
+/// mean a fingerprint match is meaningful, not a coincidence of hashes.
+pub fn fp_salt() -> u64 {
+    crate::util::fnv1a(b"marvel-fp/fnv1a-v1")
+}
+
+/// Write one frame: 4-byte big-endian length + payload bytes.  Payloads
+/// past [`MAX_WIRE_BYTES`] are refused locally (`InvalidData`) — the cap
+/// is symmetric, so a frame we would not accept is never sent.  The
+/// caller flushes.
+pub fn write_frame(w: &mut impl Write, payload: &str) -> std::io::Result<()> {
+    use std::io::{Error, ErrorKind};
+    let bytes = payload.as_bytes();
+    if bytes.len() > MAX_WIRE_BYTES {
+        return Err(Error::new(
+            ErrorKind::InvalidData,
+            format!(
+                "oversized frame: {} bytes exceeds the {MAX_WIRE_BYTES}-byte \
+                 wire cap",
+                bytes.len()
+            ),
+        ));
+    }
+    w.write_all(&(bytes.len() as u32).to_be_bytes())?;
+    w.write_all(bytes)
+}
+
+/// Read one frame under a byte cap: `Ok(None)` on clean EOF (no header
+/// byte), `Ok(Some(payload))` on success, and an error on a truncated
+/// header/payload, an over-cap length prefix, or non-UTF-8 bytes.  The
+/// caller treats any error as peer corruption (a death) — the oversized
+/// message deliberately matches the pipe transport's so it classifies as
+/// [`crate::sim::cpu::RemoteKind::Fatal`] either way.
+pub fn read_frame(
+    r: &mut impl Read,
+    cap: usize,
+) -> std::io::Result<Option<String>> {
+    use std::io::{Error, ErrorKind};
+    let mut hdr = [0u8; 4];
+    let mut got = 0;
+    while got < hdr.len() {
+        match r.read(&mut hdr[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => {
+                return Err(Error::new(
+                    ErrorKind::UnexpectedEof,
+                    "peer closed mid-frame header",
+                ))
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    let len = u32::from_be_bytes(hdr) as usize;
+    if len > cap {
+        return Err(Error::new(
+            ErrorKind::InvalidData,
+            format!(
+                "oversized frame: {len}-byte length prefix exceeds the \
+                 {cap}-byte wire cap"
+            ),
+        ));
+    }
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf)?;
+    match String::from_utf8(buf) {
+        Ok(s) => Ok(Some(s)),
+        Err(e) => Err(Error::new(
+            ErrorKind::InvalidData,
+            format!("non-UTF-8 frame: {e}"),
+        )),
+    }
+}
+
+/// A parsed hello frame.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Hello {
+    pub proto: u64,
+    /// The peer's crate version — diagnostic only, never gated on (two
+    /// builds with matching proto + salt interoperate by construction).
+    pub version: String,
+    pub salt: u64,
+}
+
+/// Serialize this binary's hello frame.
+pub fn encode_hello() -> String {
+    json::to_compact_string(
+        &ObjBuilder::new()
+            .set("type", "hello")
+            .set("proto", PROTO_VERSION)
+            .set("version", crate::version())
+            .set("salt", format!("{:016x}", fp_salt()))
+            .build(),
+    )
+}
+
+/// Parse a hello frame (the strictness is the point: anything that is
+/// not a well-formed hello means the peer is not a marvel cluster
+/// endpoint, and the connection is refused before any job state exists).
+pub fn parse_hello(line: &str) -> Result<Hello> {
+    let v = json::parse(line)?;
+    let ty = v.get("type")?.as_str()?;
+    ensure!(ty == "hello", "expected a hello frame, got type {ty:?}");
+    let salt_s = v.get("salt")?.as_str()?;
+    let salt = u64::from_str_radix(salt_s, 16)
+        .map_err(|e| anyhow!("bad hello salt {salt_s:?}: {e}"))?;
+    Ok(Hello {
+        proto: v.get("proto")?.as_u64()?,
+        version: v.get("version")?.as_str()?.to_string(),
+        salt,
+    })
+}
+
+/// Validate a peer's hello against this binary's protocol version and
+/// fingerprint salt.
+pub fn check_hello(h: &Hello) -> Result<()> {
+    ensure!(
+        h.proto == PROTO_VERSION,
+        "cluster protocol version mismatch: peer speaks v{} (marvel {}), \
+         this side speaks v{PROTO_VERSION} (marvel {})",
+        h.proto,
+        h.version,
+        crate::version()
+    );
+    ensure!(
+        h.salt == fp_salt(),
+        "fingerprint-scheme mismatch: peer salt {:016x} (marvel {}), ours \
+         {:016x} — hydration cross-checks would be meaningless",
+        h.salt,
+        h.version,
+        fp_salt()
+    );
+    Ok(())
+}
+
+/// Serialize the daemon's one-line stdout discovery message (emitted
+/// after binding, so `--listen 127.0.0.1:0` is usable: the kernel picks
+/// the port and the spawner reads the actual address here).
+pub fn encode_listening(addr: &str) -> String {
+    json::to_compact_string(
+        &ObjBuilder::new()
+            .set("type", "listening")
+            .set("addr", addr)
+            .build(),
+    )
+}
+
+/// Parse a daemon's discovery line back to its address.
+pub fn parse_listening(line: &str) -> Result<String> {
+    let v = json::parse(line)?;
+    let ty = v.get("type")?.as_str()?;
+    ensure!(ty == "listening", "expected a listening line, got type {ty:?}");
+    Ok(v.get("addr")?.as_str()?.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip() {
+        let mut buf: Vec<u8> = Vec::new();
+        write_frame(&mut buf, "hello").unwrap();
+        write_frame(&mut buf, "").unwrap();
+        write_frame(&mut buf, "wörld").unwrap();
+        let mut r = &buf[..];
+        assert_eq!(
+            read_frame(&mut r, MAX_WIRE_BYTES).unwrap().as_deref(),
+            Some("hello")
+        );
+        assert_eq!(
+            read_frame(&mut r, MAX_WIRE_BYTES).unwrap().as_deref(),
+            Some("")
+        );
+        assert_eq!(
+            read_frame(&mut r, MAX_WIRE_BYTES).unwrap().as_deref(),
+            Some("wörld")
+        );
+        // clean EOF after the last frame
+        assert_eq!(read_frame(&mut r, MAX_WIRE_BYTES).unwrap(), None);
+    }
+
+    #[test]
+    fn frame_rejects_oversize_both_directions() {
+        use crate::sim::cpu::RemoteKind;
+        // send side: never write what the peer would refuse
+        let mut buf: Vec<u8> = Vec::new();
+        let big = "x".repeat(MAX_WIRE_BYTES + 1);
+        let err = write_frame(&mut buf, &big).unwrap_err();
+        assert!(err.to_string().contains("oversized frame"), "{err}");
+        assert!(buf.is_empty(), "nothing may hit the wire");
+        // receive side: a hostile length prefix fails before allocation
+        let mut wire: Vec<u8> = Vec::new();
+        wire.extend_from_slice(&u32::MAX.to_be_bytes());
+        wire.extend_from_slice(b"whatever");
+        let err = read_frame(&mut &wire[..], 64).unwrap_err();
+        assert!(err.to_string().contains("oversized frame"), "{err}");
+        // both transports' violations classify as fatal, never retried
+        assert_eq!(RemoteKind::classify(&err.to_string()), RemoteKind::Fatal);
+    }
+
+    #[test]
+    fn frame_rejects_truncation_and_garbage() {
+        // header cut short
+        let err = read_frame(&mut &[0u8, 0][..], 64).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof);
+        // payload cut short
+        let mut wire: Vec<u8> = Vec::new();
+        wire.extend_from_slice(&8u32.to_be_bytes());
+        wire.extend_from_slice(b"abc");
+        assert!(read_frame(&mut &wire[..], 64).is_err());
+        // non-UTF-8 payload
+        let mut wire: Vec<u8> = Vec::new();
+        wire.extend_from_slice(&2u32.to_be_bytes());
+        wire.extend_from_slice(&[0xff, 0xfe]);
+        let err = read_frame(&mut &wire[..], 64).unwrap_err();
+        assert!(err.to_string().contains("non-UTF-8"), "{err}");
+    }
+
+    #[test]
+    fn hello_roundtrip_and_checks() {
+        let h = parse_hello(&encode_hello()).unwrap();
+        assert_eq!(h.proto, PROTO_VERSION);
+        assert_eq!(h.version, crate::version());
+        assert_eq!(h.salt, fp_salt());
+        check_hello(&h).unwrap();
+        // a future protocol is refused with both versions in the message
+        let e = check_hello(&Hello { proto: PROTO_VERSION + 1, ..h.clone() })
+            .unwrap_err();
+        assert!(e.to_string().contains("protocol version mismatch"), "{e}");
+        // a divergent fingerprint scheme is refused at connect time
+        let e = check_hello(&Hello { salt: h.salt ^ 1, ..h }).unwrap_err();
+        assert!(e.to_string().contains("fingerprint-scheme"), "{e}");
+        // non-hello frames never pass for a handshake
+        assert!(parse_hello(&crate::sim::shard::encode_ready()).is_err());
+        assert!(parse_hello("not json").is_err());
+    }
+
+    #[test]
+    fn listening_line_roundtrip() {
+        let line = encode_listening("127.0.0.1:39751");
+        assert_eq!(parse_listening(&line).unwrap(), "127.0.0.1:39751");
+        assert!(parse_listening(&encode_hello()).is_err());
+    }
+}

@@ -36,9 +36,14 @@
 //!   dead worker process is relaunched in place up to
 //!   [`super::shard::RESPAWN_ATTEMPTS`] times before its slot is retired
 //!   and its jobs fall back to survivors.
+//! - [`ClusterExec`] ([`super::cluster`]) — the same wire over TCP
+//!   sockets: a pool of `marvel cluster-worker` daemons (remote hosts,
+//!   or auto-spawned loopback children for `cluster:N`), with re-dial
+//!   budgets in place of respawn budgets.
 //!
 //! Backends are selected everywhere by one spec string, parsed in one
-//! place ([`BackendSpec::parse`]): `local[:T]` or `shard:N`.
+//! place ([`BackendSpec::parse`]): `local[:T]`, `shard:N`, or
+//! `cluster:N | cluster:<addr>,… | cluster:@<file>`.
 
 use std::any::Any;
 use std::collections::HashMap;
@@ -48,6 +53,7 @@ use std::sync::{mpsc, Arc, Mutex};
 
 use anyhow::{bail, ensure, Context, Result};
 
+use super::cluster::ClusterExec;
 use super::cpu::{Machine, SimError};
 use super::engine::{default_lanes, default_threads, run_lane_pack, Job,
                     JobOutput, Slots};
@@ -202,17 +208,33 @@ pub trait Executor: Send {
 // ---------------------------------------------------------------------------
 
 /// A parsed `--backend` value: `local[:T]` (in-process pool, `T` worker
-/// threads, 0/omitted = one per core via [`default_threads`]) or
-/// `shard:N` (`N` worker processes).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// threads, 0/omitted = one per core via [`default_threads`]),
+/// `shard:N` (`N` worker processes), or a cluster form —
+/// `cluster:N` (N loopback daemons spawned on ephemeral ports),
+/// `cluster:<addr>,<addr>,…` (externally started daemons), or
+/// `cluster:@<file>` (a discovery file, one address per line, `#`
+/// comments and blanks skipped — resolved to its addresses at parse
+/// time, so `Display` round-trips through the address list).
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub enum BackendSpec {
     Local { threads: usize },
     Shard { workers: usize },
+    Cluster(ClusterTarget),
+}
+
+/// What a `cluster:` spec names (see [`BackendSpec`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ClusterTarget {
+    /// Spawn `hosts` loopback `cluster-worker` daemons of this binary.
+    Loopback { hosts: usize },
+    /// Dial externally started daemons at these addresses.
+    Addrs(Vec<String>),
 }
 
 impl BackendSpec {
     /// Parse a backend spec string.  Grammar: `local`, `local:T`,
-    /// `shard:N` (`N ≥ 1`).
+    /// `shard:N` (`N ≥ 1`), `cluster:N`, `cluster:<addr>,…`,
+    /// `cluster:@<file>`.
     pub fn parse(s: &str) -> Result<BackendSpec> {
         let (kind, arg) = match s.split_once(':') {
             Some((k, a)) => (k, Some(a)),
@@ -242,21 +264,75 @@ impl BackendSpec {
                 ensure!(workers > 0, "backend {s:?}: shard needs ≥ 1 worker");
                 Ok(BackendSpec::Shard { workers })
             }
+            "cluster" => {
+                let a = arg.with_context(|| {
+                    format!(
+                        "backend {s:?} needs hosts (cluster:N, \
+                         cluster:<addr>,…, or cluster:@<file>)"
+                    )
+                })?;
+                if let Some(path) = a.strip_prefix('@') {
+                    let text = std::fs::read_to_string(path).with_context(
+                        || format!("reading cluster discovery file {path}"),
+                    )?;
+                    let addrs: Vec<String> = text
+                        .lines()
+                        .map(str::trim)
+                        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+                        .map(String::from)
+                        .collect();
+                    ensure!(
+                        !addrs.is_empty(),
+                        "cluster discovery file {path} lists no addresses"
+                    );
+                    Ok(BackendSpec::Cluster(ClusterTarget::Addrs(addrs)))
+                } else if a.bytes().all(|c| c.is_ascii_digit()) && !a.is_empty()
+                {
+                    let hosts: usize = a.parse().with_context(|| {
+                        format!("bad host count in backend {s:?}")
+                    })?;
+                    ensure!(
+                        hosts > 0,
+                        "backend {s:?}: cluster needs ≥ 1 host"
+                    );
+                    Ok(BackendSpec::Cluster(ClusterTarget::Loopback { hosts }))
+                } else {
+                    let addrs: Vec<String> = a
+                        .split(',')
+                        .map(str::trim)
+                        .filter(|x| !x.is_empty())
+                        .map(String::from)
+                        .collect();
+                    ensure!(
+                        !addrs.is_empty(),
+                        "backend {s:?} lists no cluster addresses"
+                    );
+                    Ok(BackendSpec::Cluster(ClusterTarget::Addrs(addrs)))
+                }
+            }
             other => bail!(
-                "unknown backend {other:?} (expected local[:T] or shard:N)"
+                "unknown backend {other:?} (expected local[:T], shard:N, or \
+                 cluster:N | cluster:<addr>,… | cluster:@<file>)"
             ),
         }
     }
 
     /// Build the executor this spec names.  `artifacts` seeds lazy
-    /// hydration (and, for `shard:N`, the worker command line).
+    /// hydration (and, for `shard:N` / `cluster:N`, the worker command
+    /// line).
     pub fn build(&self, artifacts: &Path) -> Result<Box<dyn Executor>> {
-        Ok(match *self {
+        Ok(match self {
             BackendSpec::Local { threads } => {
-                Box::new(LocalExec::new(artifacts, threads))
+                Box::new(LocalExec::new(artifacts, *threads))
             }
             BackendSpec::Shard { workers } => {
-                Box::new(ShardExec::spawn(artifacts, workers)?)
+                Box::new(ShardExec::spawn(artifacts, *workers)?)
+            }
+            BackendSpec::Cluster(ClusterTarget::Loopback { hosts }) => {
+                Box::new(ClusterExec::spawn_loopback(artifacts, *hosts)?)
+            }
+            BackendSpec::Cluster(ClusterTarget::Addrs(addrs)) => {
+                Box::new(ClusterExec::connect(addrs)?)
             }
         })
     }
@@ -264,10 +340,16 @@ impl BackendSpec {
 
 impl std::fmt::Display for BackendSpec {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match *self {
+        match self {
             BackendSpec::Local { threads: 0 } => write!(f, "local"),
             BackendSpec::Local { threads } => write!(f, "local:{threads}"),
             BackendSpec::Shard { workers } => write!(f, "shard:{workers}"),
+            BackendSpec::Cluster(ClusterTarget::Loopback { hosts }) => {
+                write!(f, "cluster:{hosts}")
+            }
+            BackendSpec::Cluster(ClusterTarget::Addrs(addrs)) => {
+                write!(f, "cluster:{}", addrs.join(","))
+            }
         }
     }
 }
@@ -675,13 +757,66 @@ mod tests {
             BackendSpec::parse("shard:2").unwrap(),
             BackendSpec::Shard { workers: 2 }
         );
-        for bad in ["", "local:x", "shard", "shard:0", "shard:x", "remote:1"] {
+        assert_eq!(
+            BackendSpec::parse("cluster:2").unwrap(),
+            BackendSpec::Cluster(ClusterTarget::Loopback { hosts: 2 })
+        );
+        assert_eq!(
+            BackendSpec::parse("cluster:10.0.0.1:4000, 10.0.0.2:4000")
+                .unwrap(),
+            BackendSpec::Cluster(ClusterTarget::Addrs(vec![
+                "10.0.0.1:4000".into(),
+                "10.0.0.2:4000".into(),
+            ]))
+        );
+        for bad in [
+            "",
+            "local:x",
+            "shard",
+            "shard:0",
+            "shard:x",
+            "remote:1",
+            "cluster",
+            "cluster:0",
+            "cluster:,",
+            "cluster:@/nonexistent-discovery-file",
+        ] {
             assert!(BackendSpec::parse(bad).is_err(), "{bad:?} must not parse");
         }
         // Display round-trips through parse.
-        for s in ["local", "local:8", "shard:2"] {
+        for s in ["local", "local:8", "shard:2", "cluster:2",
+                  "cluster:10.0.0.1:4000,10.0.0.2:4000"]
+        {
             assert_eq!(BackendSpec::parse(s).unwrap().to_string(), s);
         }
+    }
+
+    #[test]
+    fn cluster_discovery_file_parse() {
+        let dir = std::env::temp_dir()
+            .join(format!("marvel-disco-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("hosts.txt");
+        std::fs::write(
+            &path,
+            "# sweep fleet\n10.0.0.1:4000\n\n  10.0.0.2:4000  \n",
+        )
+        .unwrap();
+        let spec =
+            BackendSpec::parse(&format!("cluster:@{}", path.display()))
+                .unwrap();
+        assert_eq!(
+            spec,
+            BackendSpec::Cluster(ClusterTarget::Addrs(vec![
+                "10.0.0.1:4000".into(),
+                "10.0.0.2:4000".into(),
+            ]))
+        );
+        // comments-only files name no hosts and must be refused
+        std::fs::write(&path, "# nothing here\n\n").unwrap();
+        assert!(BackendSpec::parse(&format!("cluster:@{}", path.display()))
+            .is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     /// load x1 <- dm[0]; x1 += k; store dm[4] <- x1; ecall

@@ -21,10 +21,13 @@
 //! [`exec`] is the seam over all of
 //! them (DESIGN.md §13): one `Executor` trait + canonical `JobSpec` that
 //! every sweep-style caller is written against, with `LocalExec`
-//! (persistent in-process pool) and `ShardExec` (process pool) as the two
-//! current backends, selected by a `--backend local[:T]|shard:N` spec.
+//! (persistent in-process pool), `ShardExec` (process pool) and
+//! `ClusterExec` ([`cluster`]: the shard wire over TCP, multi-host —
+//! DESIGN.md §18) as the current backends, selected by a
+//! `--backend local[:T]|shard:N|cluster:…` spec.
 
 pub mod chaos;
+pub mod cluster;
 pub mod cpu;
 pub mod engine;
 pub mod exec;
@@ -36,12 +39,13 @@ pub mod serve;
 pub mod shard;
 
 pub use chaos::{ChaosExec, FaultPlan};
+pub use cluster::{ClusterExec, ClusterPool, LoopbackCluster};
 pub use cpu::{Machine, RemoteKind, RunStats, Sim, SimError};
 pub use engine::{default_lanes, lanes_override, run_batch, run_job,
                  run_job_on, run_job_pooled, run_lane_pack, Job, JobOutput,
                  MAX_LANES};
-pub use exec::{BackendSpec, Caps, Executor, JobSpec, LocalExec, RawJob,
-               ShardExec};
+pub use exec::{BackendSpec, Caps, ClusterTarget, Executor, JobSpec,
+               LocalExec, RawJob, ShardExec};
 pub use hooks::{NopHook, RetireHook, TraceHook};
 pub use lowered::LoweredProgram;
 pub use memory::Memory;

@@ -106,7 +106,7 @@ pub const MARVEL_JOB_TIMEOUT_MS_ENV: &str = "MARVEL_JOB_TIMEOUT_MS";
 /// The per-job timeout for a batch: [`MARVEL_JOB_TIMEOUT_MS_ENV`] if set
 /// (parse failures fall through to the default — a garbage override must
 /// not panic a production pool), else the batch's stall timeout.
-fn job_timeout(descs: &[JobDesc]) -> Duration {
+pub(crate) fn job_timeout(descs: &[JobDesc]) -> Duration {
     if let Ok(ms) = std::env::var(MARVEL_JOB_TIMEOUT_MS_ENV) {
         if let Ok(ms) = ms.trim().parse::<u64>() {
             if ms > 0 {
@@ -134,10 +134,69 @@ const STALL_FLOOR_INSTRS_PER_SEC: u64 = 10_000_000;
 /// largest `max_instrs` at a pessimistic simulation rate (a job within its
 /// watchdog budget must never panic the pool), floored at
 /// [`STALL_TIMEOUT_MIN`] for tiny budgets.
-fn stall_timeout(descs: &[JobDesc]) -> Duration {
+pub(crate) fn stall_timeout(descs: &[JobDesc]) -> Duration {
     let max_instrs = descs.iter().map(|d| d.max_instrs).max().unwrap_or(0);
     STALL_TIMEOUT_MIN
         .max(Duration::from_secs(max_instrs / STALL_FLOOR_INSTRS_PER_SEC + 1))
+}
+
+/// Hard cap on one wire message, both directions and both transports
+/// (stdio pipes here, TCP frames in [`super::cluster`]).  A peer writing a
+/// longer line is treated as corrupted — the read fails with an
+/// `oversized frame` error instead of buffering without bound, and the
+/// coordinator refuses to *send* a job that could not survive the trip
+/// (a structured [`RemoteKind::Fatal`] at the job's index).  Generously
+/// above any legitimate message: inputs are KB-scale hex and outputs are
+/// logit vectors.
+pub const MAX_WIRE_BYTES: usize = 8 * 1024 * 1024;
+
+/// Read one `\n`-terminated line, enforcing [`MAX_WIRE_BYTES`] (`cap`):
+/// `Ok(None)` on clean EOF, `Ok(Some(line))` without the terminator, and
+/// an `InvalidData` error on an oversized or non-UTF-8 line — the caller
+/// treats either as peer corruption (a death), never as a result.
+///
+/// The final line of a stream may arrive unterminated (a peer that died
+/// mid-write); it is returned as-is and will fail parsing downstream if
+/// truncated.
+pub fn read_line_capped(
+    r: &mut impl BufRead,
+    cap: usize,
+) -> std::io::Result<Option<String>> {
+    use std::io::{Error, ErrorKind};
+    fn utf8(buf: Vec<u8>) -> std::io::Result<Option<String>> {
+        match String::from_utf8(buf) {
+            Ok(s) => Ok(Some(s)),
+            Err(e) => Err(Error::new(
+                ErrorKind::InvalidData,
+                format!("non-UTF-8 frame: {e}"),
+            )),
+        }
+    }
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        let chunk = r.fill_buf()?;
+        if chunk.is_empty() {
+            return if buf.is_empty() { Ok(None) } else { utf8(buf) };
+        }
+        let newline = chunk.iter().position(|&b| b == b'\n');
+        let take = newline.unwrap_or(chunk.len());
+        if buf.len() + take > cap {
+            let consumed = take + usize::from(newline.is_some());
+            r.consume(consumed);
+            return Err(Error::new(
+                ErrorKind::InvalidData,
+                format!(
+                    "oversized frame: line exceeds the {cap}-byte wire cap"
+                ),
+            ));
+        }
+        buf.extend_from_slice(&chunk[..take]);
+        let consumed = take + usize::from(newline.is_some());
+        r.consume(consumed);
+        if newline.is_some() {
+            return utf8(buf);
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -429,6 +488,104 @@ pub(crate) fn job_of<'a>(
     }
 }
 
+/// Chaos state shared by every session of one worker process.  The pipe
+/// worker has exactly one session so the sharing is trivial; the cluster
+/// daemon serves many concurrent connections from one process, and fire
+/// counts must be process-wide — otherwise a one-shot `kill@N` would
+/// re-fire in the replacement session after every reconnect and compound
+/// into a spurious poison panic.
+pub type SharedChaos = Arc<std::sync::Mutex<Option<chaos::WorkerChaos>>>;
+
+/// Build the process-wide chaos state from `MARVEL_CHAOS`.
+pub fn shared_chaos_from_env() -> Result<SharedChaos> {
+    Ok(Arc::new(std::sync::Mutex::new(chaos::WorkerChaos::from_env()?)))
+}
+
+/// What a handled job asks the transport to do.  The job-handling core is
+/// transport-agnostic; only "dying" differs — a pipe worker dies with its
+/// process (`exit(17)`), a socket session dies by closing its connection
+/// (the daemon process survives, so the coordinator can re-dial).
+pub enum JobReply {
+    /// Write these wire payloads in order (one line = one message; chaos
+    /// `Dup` yields two copies, `Corrupt` an unparseable line).
+    Lines(Vec<String>),
+    /// Chaos-injected death: stop without replying.
+    Die,
+}
+
+/// The transport-agnostic worker session core: hydrate-and-run job
+/// descriptions against a per-session compile cache and pooled machine,
+/// with worker-site chaos applied per wire seq.  Shared by the pipe
+/// worker ([`worker_loop`]) and the cluster daemon's per-connection
+/// sessions ([`super::cluster`]).
+pub struct WorkerCore {
+    hyd: Hydrator,
+    pool: Option<Machine>,
+    chaos: SharedChaos,
+}
+
+impl WorkerCore {
+    pub fn new(artifacts: &Path, chaos: SharedChaos) -> WorkerCore {
+        WorkerCore { hyd: Hydrator::new(artifacts), pool: None, chaos }
+    }
+
+    /// Handle one job message: apply chaos actions, run the description,
+    /// and return the result line(s) to write.  An outgoing line past
+    /// [`MAX_WIRE_BYTES`] is replaced by a structured fatal error result
+    /// at the job's seq — the peer-side mirror of the coordinator's
+    /// pre-send cap.
+    pub fn handle_job(&mut self, seq: u64, desc: &JobDesc) -> JobReply {
+        let mut injected_err: Option<String> = None;
+        let mut corrupt = false;
+        let mut dup = false;
+        let actions = self
+            .chaos
+            .lock()
+            .expect("chaos state poisoned")
+            .as_mut()
+            .map(|ch| ch.actions(seq))
+            .unwrap_or_default();
+        for action in actions {
+            match action {
+                WorkerAction::Delay(d) => std::thread::sleep(d),
+                WorkerAction::Kill => return JobReply::Die,
+                WorkerAction::Corrupt => corrupt = true,
+                WorkerAction::ErrorResult(msg) => injected_err = Some(msg),
+                WorkerAction::Dup => dup = true,
+            }
+        }
+        if corrupt {
+            // A line that cannot parse: the coordinator treats the peer
+            // as corrupted and kills it (a death, not an error result),
+            // so nothing else is worth writing.
+            return JobReply::Lines(vec!["{\"chaos\":corrupted".to_string()]);
+        }
+        let result = match injected_err {
+            Some(msg) => Err(msg),
+            None => self
+                .hyd
+                .run_desc(&mut self.pool, desc)
+                .map_err(|e| format!("{e:#}")),
+        };
+        let mut line = encode_result(seq, &result);
+        if line.len() > MAX_WIRE_BYTES {
+            line = encode_result(
+                seq,
+                &Err(format!(
+                    "oversized result frame ({} bytes exceeds the \
+                     {MAX_WIRE_BYTES}-byte wire cap)",
+                    line.len()
+                )),
+            );
+        }
+        let mut lines = vec![line];
+        if dup {
+            lines.push(lines[0].clone());
+        }
+        JobReply::Lines(lines)
+    }
+}
+
 /// The `marvel shard-worker` body: read job lines, stream result lines
 /// back incrementally (one write + flush per job, so the coordinator sees
 /// results as they complete, not at batch end).  Returns on EOF.  A panic
@@ -440,68 +597,42 @@ pub(crate) fn job_of<'a>(
 /// see [`ShardPool`]) the worker applies the plan's worker-site faults to
 /// the jobs it handles, keyed on wire seq: delay before replying, die
 /// without replying, write a corrupted line, reply with a transient
-/// error, or write the result twice (DESIGN.md §16).
+/// error, or write the result twice (DESIGN.md §16).  Job handling lives
+/// in the transport-agnostic [`WorkerCore`]; this function is the pipe
+/// binding (capped line reads, chaos death = process exit).
 pub fn worker_loop(
     artifacts: &Path,
-    input: impl BufRead,
+    mut input: impl BufRead,
     mut out: impl Write,
 ) -> Result<()> {
-    let mut hyd = Hydrator::new(artifacts);
-    let mut pool: Option<Machine> = None;
-    let mut chaos_state = chaos::WorkerChaos::from_env()?;
+    let mut core = WorkerCore::new(artifacts, shared_chaos_from_env()?);
     writeln!(out, "{}", encode_ready())?;
     out.flush()?;
-    for line in input.lines() {
-        let line = line.context("reading job line")?;
+    loop {
+        let line = match read_line_capped(&mut input, MAX_WIRE_BYTES) {
+            Ok(None) => return Ok(()),
+            Ok(Some(l)) => l,
+            Err(e) => return Err(e).context("reading job line"),
+        };
         if line.trim().is_empty() {
             continue;
         }
         match parse_line(&line)? {
-            Msg::Job { seq, desc } => {
-                let mut injected_err: Option<String> = None;
-                let mut corrupt = false;
-                let mut dup = false;
-                if let Some(ch) = chaos_state.as_mut() {
-                    for action in ch.actions(seq) {
-                        match action {
-                            WorkerAction::Delay(d) => std::thread::sleep(d),
-                            // Injected death: exit without replying — the
-                            // coordinator's reader sees EOF, exactly like
-                            // a crash.
-                            WorkerAction::Kill => std::process::exit(17),
-                            WorkerAction::Corrupt => corrupt = true,
-                            WorkerAction::ErrorResult(msg) => {
-                                injected_err = Some(msg);
-                            }
-                            WorkerAction::Dup => dup = true,
-                        }
+            Msg::Job { seq, desc } => match core.handle_job(seq, &desc) {
+                // Injected death: exit without replying — the
+                // coordinator's reader sees EOF, exactly like a crash.
+                JobReply::Die => std::process::exit(17),
+                JobReply::Lines(lines) => {
+                    for l in lines {
+                        writeln!(out, "{l}")?;
                     }
-                }
-                if corrupt {
-                    // A line that cannot parse: the coordinator treats the
-                    // worker as corrupted and kills it (a death, not an
-                    // error result), so nothing else is worth writing.
-                    writeln!(out, "{{\"chaos\":corrupted")?;
                     out.flush()?;
-                    continue;
                 }
-                let result = match injected_err {
-                    Some(msg) => Err(msg),
-                    None => hyd
-                        .run_desc(&mut pool, &desc)
-                        .map_err(|e| format!("{e:#}")),
-                };
-                writeln!(out, "{}", encode_result(seq, &result))?;
-                if dup {
-                    writeln!(out, "{}", encode_result(seq, &result))?;
-                }
-                out.flush()?;
-            }
+            },
             Msg::Ready => {}
             Msg::Done { .. } => bail!("unexpected result message on worker stdin"),
         }
     }
-    Ok(())
 }
 
 /// Run descriptions in-process: hydrate everything locally and hand the
@@ -720,11 +851,23 @@ impl ShardPool {
         let stdout = child.stdout.take().expect("piped stdout");
         let tx = tx.clone();
         std::thread::spawn(move || {
-            let rd = BufReader::new(stdout);
-            for line in rd.lines() {
-                let event = match line {
-                    Ok(l) if l.trim().is_empty() => continue,
-                    Ok(l) => match parse_line(&l) {
+            let mut rd = BufReader::new(stdout);
+            loop {
+                // Capped read: a worker streaming an over-cap or non-UTF-8
+                // line is corrupted, not trusted to buffer without bound.
+                let event = match read_line_capped(&mut rd, MAX_WIRE_BYTES) {
+                    Ok(None) => {
+                        let _ = tx.send(Event::Dead {
+                            worker,
+                            gen,
+                            reason: "eof".into(),
+                        });
+                        return;
+                    }
+                    Ok(l) if l.as_deref().is_some_and(|l| l.trim().is_empty()) => {
+                        continue;
+                    }
+                    Ok(Some(l)) => match parse_line(&l) {
                         Ok(msg) => Event::Msg { worker, gen, msg },
                         Err(e) => {
                             let _ = tx.send(Event::Dead {
@@ -748,7 +891,6 @@ impl ShardPool {
                     return;
                 }
             }
-            let _ = tx.send(Event::Dead { worker, gen, reason: "eof".into() });
         });
         Ok(Worker {
             child,
@@ -829,7 +971,26 @@ impl ShardPool {
         let mut results: Vec<Option<Result<JobOutput, SimError>>> =
             (0..n).map(|_| None).collect();
         let mut done = 0usize;
-        let mut queue: VecDeque<usize> = (0..n).collect();
+        // Pre-send wire cap: a job whose encoded line cannot travel the
+        // wire fails at its own index with a structured fatal error — it
+        // must never reach a worker, where the oversized line would read
+        // as corruption and kill the process (a death the job did not
+        // deserve to be charged with).
+        for (i, d) in descs.iter().enumerate() {
+            let wire = encode_job(base + i as u64, d).len();
+            if wire > MAX_WIRE_BYTES {
+                results[i] = Some(Err(SimError::Remote {
+                    msg: format!(
+                        "oversized job frame ({wire} bytes exceeds the \
+                         {MAX_WIRE_BYTES}-byte wire cap)"
+                    ),
+                    kind: RemoteKind::Fatal,
+                }));
+                done += 1;
+            }
+        }
+        let mut queue: VecDeque<usize> =
+            (0..n).filter(|&i| results[i].is_none()).collect();
         // Which workers job i has been dispatched to (caps duplicate
         // dispatch at one per worker) and how many worker deaths it has
         // been implicated in.
@@ -1243,5 +1404,45 @@ mod tests {
         assert_eq!(parse_line(&encode_ready()).unwrap(), Msg::Ready);
         assert!(parse_line("{\"type\":\"nope\"}").is_err());
         assert!(parse_line("not json").is_err());
+    }
+
+    #[test]
+    fn capped_read_accepts_normal_lines() {
+        let data: &[u8] = b"hello\nworld";
+        let mut r = BufReader::new(data);
+        assert_eq!(
+            read_line_capped(&mut r, 64).unwrap().as_deref(),
+            Some("hello")
+        );
+        // last line may arrive unterminated (peer died mid-write)
+        assert_eq!(
+            read_line_capped(&mut r, 64).unwrap().as_deref(),
+            Some("world")
+        );
+        assert_eq!(read_line_capped(&mut r, 64).unwrap(), None);
+    }
+
+    #[test]
+    fn capped_read_rejects_oversized_and_garbage() {
+        let mut data = vec![b'a'; 100];
+        data.push(b'\n');
+        data.extend_from_slice(b"ok\n");
+        let mut r = BufReader::new(&data[..]);
+        let err = read_line_capped(&mut r, 10).unwrap_err();
+        assert!(err.to_string().contains("oversized frame"), "{err}");
+        // the violation classifies as fatal, never retried
+        assert_eq!(
+            RemoteKind::classify(&err.to_string()),
+            RemoteKind::Fatal
+        );
+        // the terminated oversized line was consumed; the stream resyncs
+        assert_eq!(
+            read_line_capped(&mut r, 10).unwrap().as_deref(),
+            Some("ok")
+        );
+        // non-UTF-8 bytes are corruption, not a line
+        let mut r = BufReader::new(&[0xff, 0xfe, b'\n'][..]);
+        let err = read_line_capped(&mut r, 10).unwrap_err();
+        assert!(err.to_string().contains("non-UTF-8"), "{err}");
     }
 }

@@ -19,17 +19,21 @@
 //!
 //! Like `tests/shard.rs`, the process-spawning cases use the real
 //! `marvel` binary (`CARGO_BIN_EXE_marvel`) and synthetic models, so no
-//! artifacts directory is needed.
+//! artifacts directory is needed.  The cluster cells spawn real
+//! `cluster-worker` daemons on ephemeral loopback ports, so the full TCP
+//! transport — framing, handshake, re-dial recovery — is under the same
+//! differential as the in-process backends.
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use marvel::compiler::pack_input;
 use marvel::isa::{AluImmOp, Instr, LoadOp, StoreOp};
+use marvel::sim::cluster::ClusterExec;
 use marvel::sim::exec::{Executor, JobSpec, LocalExec, RawJob, ShardExec};
 use marvel::sim::shard::{self, run_descs_local, JobDesc, ShardPool,
                          WorkerCmd};
-use marvel::sim::{Program, SimError, V0, V4};
+use marvel::sim::{FaultPlan, Program, SimError, V0, V4};
 use marvel::util::rng::Rng;
 
 fn marvel_worker_cmd() -> WorkerCmd {
@@ -44,6 +48,19 @@ fn marvel_worker_cmd() -> WorkerCmd {
     }
 }
 
+/// A `cluster:N` backend over real loopback daemons of the `marvel`
+/// binary (the test harness's own `current_exe` has no `cluster-worker`
+/// subcommand, so the binary is named explicitly).
+fn cluster_exec(n: usize) -> ClusterExec {
+    ClusterExec::spawn_loopback_cmd(
+        Path::new(env!("CARGO_BIN_EXE_marvel")),
+        Path::new("artifacts"),
+        n,
+        None,
+    )
+    .unwrap()
+}
+
 /// The backend matrix every conformance check runs against.
 fn backends() -> Vec<Box<dyn Executor>> {
     vec![
@@ -53,6 +70,7 @@ fn backends() -> Vec<Box<dyn Executor>> {
             ShardPool::spawn(&marvel_worker_cmd(), 2).unwrap(),
             2,
         )),
+        Box::new(cluster_exec(2)),
     ]
 }
 
@@ -325,6 +343,95 @@ fn poison_job_panics_shard_backend() {
         exec.run()
     }));
     assert!(r.is_err(), "shard poison job must panic the caller");
+}
+
+/// Cluster recovery, dead-host flavor: one of two daemon *processes* is
+/// killed outright — its connection drops, every re-dial is refused, the
+/// slot is retired — and the sweep completes bit-identically on the
+/// survivor.
+#[test]
+fn cluster_dead_host_falls_back_to_survivors() {
+    let descs = zoo_descs(2);
+    let reference = run_descs_local(Path::new("artifacts"), &descs, 0);
+    let mut exec = cluster_exec(2);
+    assert_eq!(exec.pool().live_hosts(), 2);
+    exec.loopback_mut().unwrap().kill_host(0);
+    for d in &descs {
+        exec.submit(JobSpec::named(d.clone()));
+    }
+    let got = exec.run();
+    assert_eq!(got.len(), reference.len());
+    for (i, (g, r)) in got.iter().zip(&reference).enumerate() {
+        assert_eq!(g.as_ref().unwrap(), r.as_ref().unwrap(), "job {i}");
+    }
+    assert_eq!(exec.pool().live_hosts(), 1, "the dead slot stays retired");
+    assert_eq!(
+        exec.pool().redials_used(),
+        0,
+        "a dead host never re-dials successfully"
+    );
+}
+
+/// Cluster recovery, session flavor: a chaos plan kills the host's
+/// *connection* mid-sweep (the daemon process survives), the pool
+/// re-dials it, and the sweep finishes bit-identically — the mid-sweep
+/// reconnect path.
+#[test]
+fn cluster_chaos_kill_reconnects_mid_sweep() {
+    let descs = zoo_descs(2);
+    assert!(descs.len() > 4, "the kill at wire seq 3 must land mid-batch");
+    let reference = run_descs_local(Path::new("artifacts"), &descs, 0);
+    let plan = FaultPlan::parse("worker:kill@3").unwrap();
+    let mut exec = ClusterExec::spawn_loopback_cmd(
+        Path::new(env!("CARGO_BIN_EXE_marvel")),
+        Path::new("artifacts"),
+        1,
+        Some(&plan),
+    )
+    .unwrap();
+    for d in &descs {
+        exec.submit(JobSpec::named(d.clone()));
+    }
+    let got = exec.run();
+    for (i, (g, r)) in got.iter().zip(&reference).enumerate() {
+        assert_eq!(g.as_ref().unwrap(), r.as_ref().unwrap(), "job {i}");
+    }
+    assert!(
+        exec.pool().redials_used() >= 1,
+        "the chaos kill must force a mid-sweep re-dial"
+    );
+    assert_eq!(
+        exec.pool().live_hosts(),
+        1,
+        "the daemon survives its killed session"
+    );
+}
+
+/// Check 5, cluster flavor: capability shape and the raw-job refusal at
+/// its index.
+#[test]
+fn cluster_raw_refusal_and_caps() {
+    let descs = zoo_descs(1);
+    let reference = run_descs_local(Path::new("artifacts"), &descs[..1], 0);
+    let mut exec = cluster_exec(1);
+    assert!(exec.caps().cross_process);
+    assert!(exec.caps().persistent_pool);
+    assert_eq!(
+        exec.caps().parallelism,
+        marvel::sim::shard::PIPELINE,
+        "a cluster's lanes are hosts x pipeline depth"
+    );
+    assert_eq!(exec.describe(), "cluster:1");
+    exec.submit(JobSpec::named(descs[0].clone()));
+    exec.submit(JobSpec::raw(raw_add_job(41, 64)));
+    let rs = exec.run();
+    assert_eq!(rs[0].as_ref().unwrap(), reference[0].as_ref().unwrap());
+    match &rs[1] {
+        Err(SimError::Remote { msg, .. }) => {
+            assert!(msg.contains("cross-process"), "{msg}")
+        }
+        other => panic!("expected capability refusal, got {other:?}"),
+    }
 }
 
 /// Check 5: raw memory-image jobs run in-process but a `cross_process`

@@ -4,7 +4,8 @@ so the gate and the trend dashboard can never disagree about the same
 BENCH_*.json rows.
 
 Each input file holds one JSON object per line (see
-rust/benches/common.rs):
+rust/benches/common.rs; BENCH_iss/BENCH_serve/BENCH_overload/
+BENCH_extgen/BENCH_cluster all share the format):
 
     {"name": "...", "median_s": ..., "min_s": ..., "units_per_s": ...}
     {"name": "...", "p50_s": ..., "p95_s": ..., "p99_s": ...}

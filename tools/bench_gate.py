@@ -1,6 +1,6 @@
 #!/usr/bin/env python3
 """Bench regression gate: compare a fresh bench JSON (BENCH_iss.json,
-BENCH_serve.json) against the previous run's uploaded artifact and fail on
+BENCH_serve.json, BENCH_cluster.json) against the previous run's uploaded artifact and fail on
 a large regression.
 
 Each input file holds one JSON object per line (see rust/benches/common.rs):
@@ -11,7 +11,9 @@ Each input file holds one JSON object per line (see rust/benches/common.rs):
 Three measurement kinds are gated:
 
 - `units_per_s` (throughput): higher is better; regression = current
-  falling below (1 - max-drop) x previous.
+  falling below (1 - max-drop) x previous.  The cluster scaling bench's
+  jobs/s rows (`cluster/N jobs/H hosts`, BENCH_cluster.json) gate this
+  way, one row per host count.
 - `goodput` (the overload bench's deadline-attainment fraction): higher
   is better, same rule as throughput; a 0.0 baseline (the adversarial
   fifo trace) can only improve or hold.

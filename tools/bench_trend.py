@@ -1,6 +1,6 @@
 #!/usr/bin/env python3
 """Bench trend dashboard: render bench JSON measurements (BENCH_iss.json,
-BENCH_serve.json) across the last N CI runs into a small markdown/ASCII
+BENCH_serve.json, BENCH_cluster.json) across the last N CI runs into a small markdown/ASCII
 report (ROADMAP item — the trajectory view next to tools/bench_gate.py's
 pairwise gate).
 

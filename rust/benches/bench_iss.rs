@@ -12,7 +12,11 @@
 //! direct-threaded dispatch table against the central-`match` loop it
 //! replaced, and `iss/v4/lanes:{1,4,8}` steps 8 same-program inferences
 //! as software-SIMT lane groups of each width (units = the whole
-//! 8-inference batch, so the rows are directly comparable).
+//! 8-inference batch, so the rows are directly comparable).  The lanes
+//! rows carry the engine's `packs_formed`/`lane_occupancy` counters as
+//! extra JSON fields, and `iss/{class}/superops:{on,off}` times the
+//! PR-10 superinstruction fusion (DESIGN.md §19) per synth model class
+//! at lane width 8, bit-identity asserted first.
 
 #[path = "common.rs"]
 mod common;
@@ -20,7 +24,7 @@ mod common;
 use marvel::compiler::{compile, execute_compiled, load_input, make_sim};
 use marvel::models::synth::{lenet_shaped, Builder};
 use marvel::profiler::ProfileHook;
-use marvel::sim::{Machine, NopHook, V0, V4};
+use marvel::sim::{lane_stats, Machine, NopHook, V0, V4};
 use marvel::util::rng::Rng;
 
 fn median(secs: &[f64]) -> f64 {
@@ -132,6 +136,7 @@ fn main() {
         (0..8).map(|_| make_sim(&c).unwrap()).collect();
     let budgets = [1u64 << 36; 8];
     for width in [1usize, 4, 8] {
+        lane_stats::reset();
         let secs = common::time_runs(2, 10, || {
             for m in lanes.iter_mut() {
                 m.reset_cpu();
@@ -144,6 +149,9 @@ fn main() {
             } else {
                 for chunk in lanes.chunks_mut(width) {
                     let n = chunk.len();
+                    // The bench is the pack former here (the exec layer is
+                    // bypassed), so it records its packs like exec does.
+                    lane_stats::record_pack(n, width);
                     let rs = Machine::run_lane_group(chunk, &budgets[..n])
                         .expect("uniform same-program lanes must group");
                     for r in rs {
@@ -152,10 +160,80 @@ fn main() {
                 }
             }
         });
-        common::report(
+        let ls = lane_stats::snapshot();
+        common::report_extra(
             &format!("iss/v4/lanes:{width}"),
             secs,
             Some((8.0 * stats.instrs as f64, "instr")),
+            &[
+                ("packs_formed", ls.packs_formed as f64),
+                ("lane_occupancy", ls.lane_occupancy()),
+            ],
+        );
+    }
+
+    // Superinstruction rows (DESIGN.md §19): 8 same-program inferences at
+    // lane width 8 per synth class, fusion off vs on.  Bit-identity is
+    // asserted before timing, so the on/off delta is pure execution-shape.
+    for (label, model) in [
+        ("lenet", "synth:lenet:1"),
+        ("dwconv", "synth:dwconv:9"),
+        ("rnn", "synth:rnn:11"),
+    ] {
+        let spec =
+            marvel::models::resolve(std::path::Path::new("artifacts"), model)
+                .unwrap();
+        let mut rng = Rng::new(7);
+        let input = Builder::random_input(&spec, &mut rng);
+        let c = compile(&spec, V4).unwrap();
+        let (_, stats) =
+            execute_compiled(&c, &spec, &input, 1 << 36, &mut NopHook)
+                .unwrap();
+        let mut lanes: Vec<Machine> =
+            (0..8).map(|_| make_sim(&c).unwrap()).collect();
+        let mut medians = Vec::new();
+        for fused in [false, true] {
+            for m in lanes.iter_mut() {
+                m.superops = fused;
+            }
+            // sanity: fused lane groups retire the exact same RunStats
+            for m in lanes.iter_mut() {
+                m.reset_cpu();
+                load_input(m, &c, &input).unwrap();
+            }
+            let rs = Machine::run_lane_group(&mut lanes, &budgets)
+                .expect("uniform same-program lanes must group");
+            for r in rs {
+                assert_eq!(
+                    r.unwrap(),
+                    stats,
+                    "iss/{label}: superops:{fused} RunStats diverged"
+                );
+            }
+            let secs = common::time_runs(2, 10, || {
+                for m in lanes.iter_mut() {
+                    m.reset_cpu();
+                    load_input(m, &c, &input).unwrap();
+                }
+                let rs = Machine::run_lane_group(&mut lanes, &budgets)
+                    .expect("uniform same-program lanes must group");
+                for r in rs {
+                    r.unwrap();
+                }
+            });
+            common::report(
+                &format!(
+                    "iss/{label}/superops:{}",
+                    if fused { "on" } else { "off" }
+                ),
+                secs.clone(),
+                Some((8.0 * stats.instrs as f64, "instr")),
+            );
+            medians.push(median(&secs));
+        }
+        println!(
+            "iss/{label}: superops on-vs-off speedup {:.2}x at lanes:8",
+            medians[0] / medians[1]
         );
     }
 }

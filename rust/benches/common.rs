@@ -28,7 +28,21 @@ pub fn time_runs<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Vec<f64> 
 /// With `BENCH_JSON=<path>` set, also appends one JSON object per line to
 /// `<path>` (`{"name", "median_s", "min_s", "mean_s", "units_per_s"?}`) —
 /// CI uploads the file as the per-PR perf-trajectory artifact.
-pub fn report(name: &str, mut secs: Vec<f64>, work: Option<(f64, &str)>) {
+pub fn report(name: &str, secs: Vec<f64>, work: Option<(f64, &str)>) {
+    report_extra(name, secs, work, &[]);
+}
+
+/// [`report`] with extra numeric JSON fields appended to the row (e.g. the
+/// engine's `packs_formed` / `lane_occupancy` counters next to a lanes
+/// row).  The gate/trend tools only probe their known measurement fields,
+/// so extra diagnostics ride along without changing a row's kind.
+#[allow(dead_code)] // only the iss bench records extra fields
+pub fn report_extra(
+    name: &str,
+    mut secs: Vec<f64>,
+    work: Option<(f64, &str)>,
+    extra: &[(&str, f64)],
+) {
     secs.sort_by(f64::total_cmp);
     let min = secs[0];
     let median = secs[secs.len() / 2];
@@ -42,6 +56,9 @@ pub fn report(name: &str, mut secs: Vec<f64>, work: Option<(f64, &str)>) {
     if let Some((units, label)) = work {
         line.push_str(&format!("  [{:.1} M{label}/s]", units / median / 1e6));
     }
+    for (k, v) in extra {
+        line.push_str(&format!("  {k}={v:.3}"));
+    }
     println!("{line}");
 
     if let Some(path) = std::env::var_os("BENCH_JSON") {
@@ -53,6 +70,9 @@ pub fn report(name: &str, mut secs: Vec<f64>, work: Option<(f64, &str)>) {
         );
         if let Some((units, _)) = work {
             json.push_str(&format!(",\"units_per_s\":{:.1}", units / median));
+        }
+        for (k, v) in extra {
+            json.push_str(&format!(",\"{k}\":{v:.4}"));
         }
         json.push_str("}\n");
         match std::fs::OpenOptions::new().create(true).append(true).open(&path)

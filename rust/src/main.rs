@@ -37,7 +37,9 @@
 //! bit-identical across backends.  `--threads T` fills an unspecified
 //! local thread count, and `--shard N` / `--workers N` survive as aliases
 //! for `shard:N`.  `MARVEL_THREADS=N` overrides the "one worker per core"
-//! default wherever a thread count is 0/omitted.
+//! default wherever a thread count is 0/omitted.  `--superops` (or
+//! `MARVEL_SUPEROPS=1`) turns on superinstruction fusion in the lowered
+//! ISS (DESIGN.md §19); results stay bit-identical either way.
 //!
 //! `--chaos <plan>` (or `MARVEL_CHAOS=<plan>`) arms deterministic fault
 //! injection on any sweep-style command (DESIGN.md §16): exec-site faults
@@ -163,6 +165,14 @@ fn dispatch(argv: &[String]) -> Result<()> {
         return Ok(());
     };
     let args = Args::parse(&argv[1..]);
+    // `--superops[=VAL]` is the CLI spelling of `MARVEL_SUPEROPS`: export
+    // it before any backend or machine is built so spawned shard workers
+    // and lazily-lowered programs all see the same default (DESIGN.md
+    // §19).  Bare `--superops` parses as "true", which the override
+    // accepts as on; `--superops off` turns fusion off explicitly.
+    if let Some(v) = args.get("superops") {
+        std::env::set_var("MARVEL_SUPEROPS", v);
+    }
     match cmd {
         "flow" => cmd_flow(&args),
         "run" => cmd_run(&args),
@@ -199,7 +209,10 @@ fn print_usage() {
          report/shard-sweep/serve/extsearch; results are bit-identical \
          across backends)] \
          [--threads N (local backend workers, 0 = all cores)] \
-         [--shard N (alias for --backend shard:N)] ...\n\n\
+         [--shard N (alias for --backend shard:N)] \
+         [--superops[=on|off] (fuse hot straight-line micro-op runs into \
+         superinstructions in the lowered ISS; sets MARVEL_SUPEROPS for \
+         this process and its workers)] ...\n\n\
          synthetic models: `synth:<kind>:<seed>` with kind ∈ \
          tiny|lenet|residual|dwconv|rnn builds a\n\
          deterministic in-process spec (no artifacts dir needed) — one per \
@@ -268,6 +281,10 @@ fn print_usage() {
          MARVEL_LANES=N        lanes per worker thread for the software-\
          SIMT\n                        \
          engine (1 = scalar; capped at MAX_LANES)\n  \
+         MARVEL_SUPEROPS=B     1/on enables superinstruction fusion in \
+         the\n                        \
+         lowered ISS (default off; `--superops` sets it);\n                        \
+         fused runs stay bit-identical to scalar execution\n  \
          MARVEL_JOB_TIMEOUT_MS=N\n                        \
          per-job wall-clock deadline on the shard and\n                        \
          cluster pools before a straggler is re-dispatched\n                        \

@@ -177,6 +177,15 @@ impl ProfileHook {
         &self.counts
     }
 
+    /// The per-slot retire counts in the shape
+    /// [`crate::sim::LowerOpts::profile`] expects (index = `pc/4`): feed a
+    /// profiling run's retire distribution back into lowering so
+    /// superinstruction fusion keys on the hottest straight-line runs
+    /// instead of every static one (DESIGN.md §19).
+    pub fn superop_profile(&self) -> Vec<u64> {
+        self.pc_retires.clone()
+    }
+
     /// Replay the retire window through the one generic matcher the
     /// rewrite engine uses, so "countable" and "fusable" can't drift.
     #[inline]
@@ -316,6 +325,40 @@ mod tests {
             m.addi_imm_hist.values().sum::<u64>(),
             2 * a.addi_imm_hist.values().sum::<u64>()
         );
+    }
+
+    #[test]
+    fn superop_profile_feeds_profile_guided_lowering() {
+        use crate::sim::{CycleModel, LowerOpts, Program, SUPEROP_TOPK};
+        let spec = tiny_conv_net(21);
+        let c = compile(&spec, V0).unwrap();
+        let mut hook = ProfileHook::new(c.words().len());
+        let mut rng = Rng::new(5);
+        let input = Builder::random_input(&spec, &mut rng);
+        execute_compiled(&c, &spec, &input, 1 << 32, &mut hook).unwrap();
+        let profile = hook.superop_profile();
+        assert_eq!(profile.len(), c.words().len());
+        assert!(profile.iter().any(|&n| n > 0));
+        let p = Program::decode_shared(V0, c.words()).unwrap();
+        let cm = CycleModel::default();
+        let all = p
+            .lowered_with(&cm, &LowerOpts { superops: true, profile: None })
+            .unwrap();
+        let guided = p
+            .lowered_with(
+                &cm,
+                &LowerOpts {
+                    superops: true,
+                    profile: Some(std::sync::Arc::new(profile)),
+                },
+            )
+            .unwrap();
+        // The hot conv inner loop is a fusible straight-line run, so the
+        // guided table is non-empty; top-K caps it; and it can only be a
+        // subset of the unprofiled (fuse-everything) table.
+        assert!(guided.n_superops() >= 1);
+        assert!(guided.n_superops() <= SUPEROP_TOPK);
+        assert!(guided.n_superops() <= all.n_superops());
     }
 
     #[test]

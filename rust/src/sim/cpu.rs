@@ -138,6 +138,12 @@ pub struct RunStats {
 /// instruction stream is never copied.
 pub struct Machine {
     pub cycle_model: CycleModel,
+    /// Fuse hot straight-line micro-op runs into superinstructions when
+    /// lowering (DESIGN.md §19).  Bit-identity is guaranteed either way;
+    /// this only selects which lowered image [`Self::run`] executes.
+    /// Defaults from `MARVEL_SUPEROPS` via
+    /// [`super::engine::default_superops`].
+    pub superops: bool,
     program: Arc<Program>,
     pub regs: [i32; 32],
     pub pc: u32,
@@ -156,6 +162,7 @@ impl Machine {
     pub fn new(program: Arc<Program>, dm_size: usize) -> Machine {
         Machine {
             cycle_model: CycleModel::default(),
+            superops: super::engine::default_superops(),
             program,
             regs: [0; 32],
             pc: 0,
@@ -221,6 +228,7 @@ impl Machine {
     pub fn rebind(&mut self, program: Arc<Program>) {
         self.program = program;
         self.cycle_model = CycleModel::default();
+        self.superops = super::engine::default_superops();
         self.reset_cpu();
     }
 
@@ -261,7 +269,11 @@ impl Machine {
         hook: &mut H,
     ) -> Result<RunStats, SimError> {
         let program = Arc::clone(&self.program);
-        if let Some(lp) = program.lowered(&self.cycle_model) {
+        let opts = super::lowered::LowerOpts {
+            superops: self.superops,
+            profile: None,
+        };
+        if let Some(lp) = program.lowered_with(&self.cycle_model, &opts) {
             if lp.covers_entry(self.ze) {
                 return super::lowered::run_lowered(
                     self,
@@ -286,7 +298,11 @@ impl Machine {
         hook: &mut H,
     ) -> Result<RunStats, SimError> {
         let program = Arc::clone(&self.program);
-        if let Some(lp) = program.lowered(&self.cycle_model) {
+        let opts = super::lowered::LowerOpts {
+            superops: self.superops,
+            profile: None,
+        };
+        if let Some(lp) = program.lowered_with(&self.cycle_model, &opts) {
             if lp.covers_entry(self.ze) {
                 return super::lowered::run_lowered_match(
                     self,
@@ -321,13 +337,16 @@ impl Machine {
         let first = lanes.first()?;
         let program = Arc::clone(&first.program);
         let cm = first.cycle_model;
-        if !lanes
-            .iter()
-            .all(|m| Arc::ptr_eq(&m.program, &program) && m.cycle_model == cm)
-        {
+        let superops = first.superops;
+        if !lanes.iter().all(|m| {
+            Arc::ptr_eq(&m.program, &program)
+                && m.cycle_model == cm
+                && m.superops == superops
+        }) {
             return None;
         }
-        let lp = program.lowered(&cm)?;
+        let opts = super::lowered::LowerOpts { superops, profile: None };
+        let lp = program.lowered_with(&cm, &opts)?;
         if !lanes.iter().all(|m| lp.covers_entry(m.ze)) {
             return None;
         }

@@ -132,12 +132,39 @@ fn finish_job(
 /// [`Machine::run_lane_group`].
 pub const MAX_LANES: usize = 8;
 
+/// Read a `MARVEL_*` override: parse the variable with `parse`, and when a
+/// non-empty value is rejected, warn **once per variable** to stderr with
+/// the rejected value (satellite of DESIGN.md §19 — silent fallback made
+/// override typos invisible).  Unset or blank values stay silent: clearing
+/// a variable to blank is a deliberate "use the default".
+fn read_env_override<T>(
+    var: &str,
+    warned: &'static std::sync::Once,
+    parse: fn(Option<&str>) -> Option<T>,
+) -> Option<T> {
+    let raw = std::env::var(var).ok();
+    let parsed = parse(raw.as_deref());
+    if parsed.is_none() {
+        if let Some(s) = raw.as_deref() {
+            if !s.trim().is_empty() {
+                warned.call_once(|| {
+                    eprintln!(
+                        "marvel: ignoring unparseable {var}={s:?}; using default"
+                    );
+                });
+            }
+        }
+    }
+    parsed
+}
+
 /// Lane-pack width for callers that take the default: the `MARVEL_LANES`
 /// environment override when set to a positive integer (clamped to
 /// [`MAX_LANES`]), else [`MAX_LANES`].  `MARVEL_LANES=1` disables lane
-/// packing — every job runs scalar.
+/// packing — every job runs scalar.  Rejected values warn once to stderr.
 pub fn default_lanes() -> usize {
-    lanes_override(std::env::var("MARVEL_LANES").ok().as_deref())
+    static WARNED: std::sync::Once = std::sync::Once::new();
+    read_env_override("MARVEL_LANES", &WARNED, lanes_override)
         .unwrap_or(MAX_LANES)
 }
 
@@ -221,9 +248,10 @@ pub fn run_job_pooled(
 
 /// Worker count for `threads == 0`: the `MARVEL_THREADS` environment
 /// override when set to a positive integer (documented in `marvel help`),
-/// else one worker thread per core.
+/// else one worker thread per core.  Rejected values warn once to stderr.
 pub fn default_threads() -> usize {
-    match threads_override(std::env::var("MARVEL_THREADS").ok().as_deref()) {
+    static WARNED: std::sync::Once = std::sync::Once::new();
+    match read_env_override("MARVEL_THREADS", &WARNED, threads_override) {
         Some(n) => n,
         None => std::thread::available_parallelism().map_or(1, |n| n.get()),
     }
@@ -234,6 +262,89 @@ pub fn default_threads() -> usize {
 /// garbage — falls back to auto.
 pub fn threads_override(v: Option<&str>) -> Option<usize> {
     v.and_then(|s| s.trim().parse::<usize>().ok()).filter(|&n| n > 0)
+}
+
+/// Default for [`super::Machine::superops`]: the `MARVEL_SUPEROPS`
+/// environment override when parseable, else off.  Rejected values warn
+/// once to stderr.
+pub fn default_superops() -> bool {
+    static WARNED: std::sync::Once = std::sync::Once::new();
+    read_env_override("MARVEL_SUPEROPS", &WARNED, superops_override)
+        .unwrap_or(false)
+}
+
+/// Parse a `MARVEL_SUPEROPS` value: `1`/`true`/`on`/`yes` enable,
+/// `0`/`false`/`off`/`no` disable (case-insensitive, surrounding
+/// whitespace tolerated); anything else falls back to the default (off).
+pub fn superops_override(v: Option<&str>) -> Option<bool> {
+    match v?.trim().to_ascii_lowercase().as_str() {
+        "1" | "true" | "on" | "yes" => Some(true),
+        "0" | "false" | "off" | "no" => Some(false),
+        _ => None,
+    }
+}
+
+/// Process-wide lane-packing counters (DESIGN.md §19): how many lane packs
+/// the executors formed and how full they were.  Recorded where packs are
+/// *formed* (the exec layer, which knows the target width), snapshot by
+/// `bench_iss` JSON rows so packing regressions show in the trend
+/// dashboard rather than only as end throughput.
+pub mod lane_stats {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static PACKS_FORMED: AtomicU64 = AtomicU64::new(0);
+    static LANES_FILLED: AtomicU64 = AtomicU64::new(0);
+    static LANE_SLOTS: AtomicU64 = AtomicU64::new(0);
+
+    /// One pack was formed with `filled` of `capacity` lane slots
+    /// occupied.  Under-filled packs (including singleton tails at a
+    /// multi-lane width) are recorded too — lost occupancy is the signal.
+    /// Scalar execution (width 1) records nothing.
+    pub fn record_pack(filled: usize, capacity: usize) {
+        PACKS_FORMED.fetch_add(1, Ordering::Relaxed);
+        LANES_FILLED.fetch_add(filled as u64, Ordering::Relaxed);
+        LANE_SLOTS.fetch_add(capacity.max(filled) as u64, Ordering::Relaxed);
+    }
+
+    /// Counter snapshot; `lane_occupancy()` folds it to the dashboard's
+    /// single figure of merit.
+    #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+    pub struct LaneStats {
+        pub packs_formed: u64,
+        pub lanes_filled: u64,
+        pub lane_slots: u64,
+    }
+
+    impl LaneStats {
+        /// Mean fill ratio of formed packs in `[0, 1]`; `0` when no packs
+        /// were formed.
+        pub fn lane_occupancy(&self) -> f64 {
+            if self.lane_slots == 0 {
+                0.0
+            } else {
+                self.lanes_filled as f64 / self.lane_slots as f64
+            }
+        }
+    }
+
+    /// Current totals since process start (or the last [`reset`]).
+    pub fn snapshot() -> LaneStats {
+        LaneStats {
+            packs_formed: PACKS_FORMED.load(Ordering::Relaxed),
+            lanes_filled: LANES_FILLED.load(Ordering::Relaxed),
+            lane_slots: LANE_SLOTS.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Zero the counters and return the totals they held — benches call
+    /// this between rows so each row reports only its own packs.
+    pub fn reset() -> LaneStats {
+        LaneStats {
+            packs_formed: PACKS_FORMED.swap(0, Ordering::Relaxed),
+            lanes_filled: LANES_FILLED.swap(0, Ordering::Relaxed),
+            lane_slots: LANE_SLOTS.swap(0, Ordering::Relaxed),
+        }
+    }
 }
 
 /// Per-job result slots written without locks: the atomic work cursor
@@ -616,6 +727,63 @@ mod tests {
         for bad in [None, Some(""), Some("0"), Some("-1"), Some("four")] {
             assert_eq!(lanes_override(bad), None, "{bad:?}");
         }
+    }
+
+    #[test]
+    fn superops_override_parses_booleans_case_insensitively() {
+        for on in ["1", "true", "on", "yes", " TRUE ", "On"] {
+            assert_eq!(superops_override(Some(on)), Some(true), "{on:?}");
+        }
+        for off in ["0", "false", "off", "no", " OFF "] {
+            assert_eq!(superops_override(Some(off)), Some(false), "{off:?}");
+        }
+        for bad in [None, Some(""), Some("2"), Some("enabled"), Some("y")] {
+            assert_eq!(superops_override(bad), None, "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn marvel_superops_env_overrides_default() {
+        // Superops selection is bit-identical either way, so flipping the
+        // variable is harmless to concurrently-running tests.
+        std::env::set_var("MARVEL_SUPEROPS", "on");
+        assert!(default_superops());
+        std::env::set_var("MARVEL_SUPEROPS", "0");
+        assert!(!default_superops());
+        // Rejected values fall back to off (and warn once to stderr).
+        std::env::set_var("MARVEL_SUPEROPS", "maybe");
+        assert!(!default_superops());
+        std::env::remove_var("MARVEL_SUPEROPS");
+        assert!(!default_superops());
+    }
+
+    #[test]
+    fn rejected_env_values_warn_once_then_fall_back() {
+        // The warn path must not disturb the parsed result: a garbage
+        // value behaves exactly like unset, for every variable.
+        std::env::set_var("MARVEL_LANES", "eight");
+        assert_eq!(default_lanes(), MAX_LANES);
+        assert_eq!(default_lanes(), MAX_LANES); // second read: Once already fired
+        std::env::remove_var("MARVEL_LANES");
+        assert_eq!(default_lanes(), MAX_LANES);
+    }
+
+    #[test]
+    fn lane_stats_accumulate_and_reset() {
+        // Concurrent tests may also record packs; assert on deltas and
+        // monotonicity, not absolute totals.
+        let before = lane_stats::snapshot();
+        lane_stats::record_pack(6, 8);
+        lane_stats::record_pack(8, 8);
+        let after = lane_stats::snapshot();
+        assert!(after.packs_formed >= before.packs_formed + 2);
+        assert!(after.lanes_filled >= before.lanes_filled + 14);
+        assert!(after.lane_slots >= before.lane_slots + 16);
+        let occ = after.lane_occupancy();
+        assert!((0.0..=1.0).contains(&occ), "{occ}");
+        let drained = lane_stats::reset();
+        assert!(drained.packs_formed >= 2);
+        assert_eq!(lane_stats::LaneStats::default().lane_occupancy(), 0.0);
     }
 
     #[test]

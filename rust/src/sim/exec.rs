@@ -439,6 +439,15 @@ fn make_packs(jobs: &[Result<ReadyJob, String>], width: usize) -> Vec<Vec<usize>
             }
         }
     }
+    // Lane-packing observability (DESIGN.md §19): every pack formed at a
+    // multi-lane width counts against that width, so under-filled tails
+    // and fragmented same-program runs show up as lost occupancy.  Scalar
+    // mode (width 1) records nothing — there are no lanes to fill.
+    if width > 1 {
+        for p in &packs {
+            super::engine::lane_stats::record_pack(p.len(), width);
+        }
+    }
     packs
 }
 

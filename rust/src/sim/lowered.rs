@@ -75,6 +75,14 @@ pub(crate) enum Kind {
     /// Mined window instruction ([`crate::fusion::WINDOW`]): `aux[31:16]`
     /// is the slot index, `aux[15:0]` is `i2`, `imm` is `i1`.
     FusedCustom,
+    /// Software superinstruction (DESIGN.md §19): head slot of a fused
+    /// straight-line run.  `aux` indexes [`LoweredProgram`]'s superop
+    /// table, `imm` carries the run length (diagnostics only), `cost` is
+    /// the head constituent's cost and `zmark` the *last* constituent's
+    /// mark.  Slots `idx+1 .. idx+len` keep their original micro-ops, so
+    /// a branch, `jalr` or ZOL loop-start landing inside the run executes
+    /// scalar from that point — fusion never changes reachability.
+    Super,
     /// Reaching this slot is `PcOutOfRange { pc: imm }` (static bad target).
     Trap,
     /// Reaching this slot is `PcOutOfRange` at the dynamically-recorded pc
@@ -120,6 +128,109 @@ pub struct LoweredProgram {
     zset: HashSet<u32>,
     /// `set.ze` present: every op carries the loop-back compare.
     all_marked: bool,
+    /// Fused straight-line runs ([`Kind::Super`] heads index this table).
+    /// Empty unless lowered with [`LowerOpts::superops`].
+    superops: Vec<SuperOp>,
+}
+
+/// One fused run of consecutive straight-line micro-ops ([`Kind::Super`],
+/// DESIGN.md §19).  The constituents are stored in their *original*
+/// lowered form, head first, so the fused handler, the match oracle and
+/// the head-only decay path all execute the exact ops the unfused program
+/// would.
+pub(crate) struct SuperOp {
+    /// Constituent micro-ops, head first.  Every constituent is a
+    /// [`fusible`] kind (straight-line, `Flow::Next`/`Flow::Mem` only) and
+    /// every constituent but the last has `zmark == 0`.
+    pub(crate) ops: Vec<MicroOp>,
+    /// Summed retire cost of all constituents (costs are static for
+    /// straight-line kinds — no branch can hide inside a run).
+    pub(crate) cost: u64,
+}
+
+/// Lowering knobs ([`Program::lower_with`] / [`Program::lowered_with`]):
+/// the superinstruction pipeline's entry point (env `MARVEL_SUPEROPS`,
+/// CLI `--superops`; DESIGN.md §19).
+#[derive(Clone, Debug, Default)]
+pub struct LowerOpts {
+    /// Fuse straight-line micro-op runs into [`Kind::Super`] slots.
+    pub superops: bool,
+    /// Per-instruction retire counts (indexed `pc/4`, e.g.
+    /// `profiler::ProfileHook::superop_profile`).  When present, only the
+    /// [`SUPEROP_TOPK`] hottest runs fuse; when absent every eligible run
+    /// does.
+    pub profile: Option<std::sync::Arc<Vec<u64>>>,
+}
+
+impl LowerOpts {
+    /// The process-default knobs: `superops` from the `MARVEL_SUPEROPS`
+    /// environment override, no profile.
+    pub fn from_env() -> LowerOpts {
+        LowerOpts {
+            superops: super::engine::default_superops(),
+            profile: None,
+        }
+    }
+}
+
+/// Longest run a single [`Kind::Super`] covers.  Longer straight-line
+/// spans fuse as back-to-back superops.
+pub(crate) const MAX_FUSE: usize = 8;
+
+/// With a retire profile, only this many of the hottest runs fuse — the
+/// mining contract keeps the superop table small and hot (DESIGN.md §19).
+pub const SUPEROP_TOPK: usize = 16;
+
+/// Can this micro-op join a fused run?  Straight-line kinds only: the
+/// handler returns `Flow::Next` or `Flow::Mem`, never redirects `next`,
+/// and never touches the ZOL registers — so a fused run re-enters the
+/// dispatch loop exactly where the unfused program would.
+fn fusible(op: &MicroOp) -> bool {
+    matches!(
+        op.kind,
+        Kind::Lui
+            | Kind::Auipc
+            | Kind::Lb
+            | Kind::Lh
+            | Kind::Lw
+            | Kind::Lbu
+            | Kind::Lhu
+            | Kind::Sb
+            | Kind::Sh
+            | Kind::Sw
+            | Kind::Addi
+            | Kind::Slti
+            | Kind::Sltiu
+            | Kind::Xori
+            | Kind::Ori
+            | Kind::Andi
+            | Kind::Slli
+            | Kind::Srli
+            | Kind::Srai
+            | Kind::Add
+            | Kind::Sub
+            | Kind::Sll
+            | Kind::Slt
+            | Kind::Sltu
+            | Kind::Xor
+            | Kind::Srl
+            | Kind::Sra
+            | Kind::Or
+            | Kind::And
+            | Kind::Mul
+            | Kind::Mulh
+            | Kind::Mulhsu
+            | Kind::Mulhu
+            | Kind::Div
+            | Kind::Divu
+            | Kind::Rem
+            | Kind::Remu
+            | Kind::Fence
+            | Kind::Mac
+            | Kind::Add2i
+            | Kind::FusedMac
+            | Kind::FusedCustom
+    )
 }
 
 /// Per-class costs checked into `u32` at lowering time.
@@ -154,10 +265,20 @@ impl Baked {
 }
 
 impl LoweredProgram {
-    /// Lower `program` against `cm`.  `None` when the program cannot be
-    /// lowered faithfully (see module docs) — callers fall back to the
-    /// reference interpreter.
+    /// Lower `program` against `cm` with default knobs (no superops).
+    /// `None` when the program cannot be lowered faithfully (see module
+    /// docs) — callers fall back to the reference interpreter.
     pub fn lower(program: &Program, cm: &CycleModel) -> Option<LoweredProgram> {
+        Self::lower_with(program, cm, &LowerOpts::default())
+    }
+
+    /// Lower `program` against `cm` under explicit [`LowerOpts`] — the
+    /// superinstruction pipeline's entry point (DESIGN.md §19).
+    pub fn lower_with(
+        program: &Program,
+        cm: &CycleModel,
+        opts: &LowerOpts,
+    ) -> Option<LoweredProgram> {
         let baked = Baked::of(cm)?;
         let instrs = program.instrs();
         let n = instrs.len();
@@ -452,18 +573,30 @@ impl LoweredProgram {
             });
         }
 
+        let superops = if opts.superops {
+            fuse_superops(&mut ops, n, opts.profile.as_deref().map(|v| &v[..]))
+        } else {
+            Vec::new()
+        };
+
         Some(LoweredProgram {
             ops,
             dyn_trap: n + 1,
             plen_bytes,
             zset,
             all_marked,
+            superops,
         })
     }
 
     /// Total micro-ops including trap slots (diagnostics/tests).
     pub fn n_ops(&self) -> usize {
         self.ops.len()
+    }
+
+    /// Fused superinstructions in the table (diagnostics/tests).
+    pub fn n_superops(&self) -> usize {
+        self.superops.len()
     }
 
     /// How many ops carry the ZOL loop-back compare (diagnostics/tests).
@@ -478,6 +611,80 @@ impl LoweredProgram {
     pub(crate) fn covers_entry(&self, ze: u32) -> bool {
         ze == 0 || self.all_marked || self.zset.contains(&ze)
     }
+}
+
+/// The superinstruction fusion pass (DESIGN.md §19).
+///
+/// Scans the real slots `0..n` for maximal runs of [`fusible`] micro-ops —
+/// at least 2 long, chopped to [`MAX_FUSE`] — where every op but the last
+/// has `zmark == 0` (a marked op may only *end* a run: the loop-back
+/// compare fires after it, and an unmarked op's successor provably cannot
+/// be a live `ZE`).  Each chosen run's head slot is rewritten to
+/// [`Kind::Super`]; the tail slots keep their original ops so any control
+/// transfer into the middle of a run (branch, `jalr`, ZOL loop-start)
+/// executes scalar from that point.
+///
+/// With a retire `profile` (per-slot counts, indexed `pc/4`), only the
+/// [`SUPEROP_TOPK`] hottest runs — ranked by summed retire count, cold
+/// runs dropped — are fused: the mining contract that keeps the table
+/// small.  Without one, every eligible run fuses.
+fn fuse_superops(
+    ops: &mut [MicroOp],
+    n: usize,
+    profile: Option<&[u64]>,
+) -> Vec<SuperOp> {
+    let mut runs: Vec<(usize, usize)> = Vec::new(); // (start, len)
+    let mut i = 0;
+    while i < n {
+        if !fusible(&ops[i]) || ops[i].zmark != 0 {
+            i += 1;
+            continue;
+        }
+        let mut j = i + 1;
+        while j < n && j - i < MAX_FUSE && fusible(&ops[j]) {
+            let ends_run = ops[j].zmark != 0;
+            j += 1;
+            if ends_run {
+                break;
+            }
+        }
+        if j - i >= 2 {
+            runs.push((i, j - i));
+        }
+        i = j;
+    }
+
+    if let Some(weights) = profile {
+        let hotness = |&(start, len): &(usize, usize)| -> u64 {
+            ops[start..start + len]
+                .iter()
+                .enumerate()
+                .map(|(k, _)| weights.get(start + k).copied().unwrap_or(0))
+                .sum()
+        };
+        runs.retain(|r| hotness(r) > 0);
+        runs.sort_by_key(|r| std::cmp::Reverse(hotness(r)));
+        runs.truncate(SUPEROP_TOPK);
+        // Non-overlapping by construction; order is irrelevant to apply.
+    }
+
+    let mut table: Vec<SuperOp> = Vec::with_capacity(runs.len());
+    for (start, len) in runs {
+        let constituents = ops[start..start + len].to_vec();
+        let cost: u64 =
+            constituents.iter().map(|c| u64::from(c.cost)).sum();
+        ops[start] = MicroOp {
+            kind: Kind::Super,
+            a: 0,
+            b: 0,
+            zmark: constituents[len - 1].zmark,
+            imm: len as i32,
+            aux: table.len() as u32,
+            cost: constituents[0].cost,
+        };
+        table.push(SuperOp { ops: constituents, cost });
+    }
+    table
 }
 
 /// The byte pc a slot stands for: real slots are `idx * 4`, trap slots
@@ -524,11 +731,12 @@ enum Flow {
 }
 
 /// Per-step state a handler may read or redirect.
-struct StepCtx {
+struct StepCtx<'a> {
     /// Byte pc of the executing slot (correct for every real slot; trap
-    /// slots never read it).
+    /// slots never read it).  [`h_super`] advances it to the faulting
+    /// constituent's pc on a mid-run memory fault.
     pc: u32,
-    /// Successor slot; branch/jump/zlp handlers overwrite it.
+    /// Successor slot; branch/jump/zlp/super handlers overwrite it.
     next: usize,
     /// Retire cost; branch handlers swap in the taken cost.
     cost: u32,
@@ -538,9 +746,17 @@ struct StepCtx {
     plen: u32,
     /// Index of the [`Kind::TrapDyn`] slot.
     dyn_trap: usize,
+    /// The lowered program's superop table ([`h_super`] resolves `aux`
+    /// through it).
+    superops: &'a [SuperOp],
+    /// Retires beyond the dispatched op's own 1 — [`h_super`] reports its
+    /// tail constituents here; the driver adds them in one go.
+    extra_retired: u64,
+    /// Cycles beyond `cost` (the tail constituents' summed costs).
+    extra_cycles: u64,
 }
 
-type Handler = fn(&mut Machine, MicroOp, &mut StepCtx) -> Flow;
+type Handler = for<'a> fn(&mut Machine, MicroOp, &mut StepCtx<'a>) -> Flow;
 
 macro_rules! h_alu_imm {
     ($name:ident, |$a:ident, $imm:ident| $v:expr) => {
@@ -809,6 +1025,75 @@ fn h_fused_custom(m: &mut Machine, op: MicroOp, _cx: &mut StepCtx) -> Flow {
     }
 }
 
+/// Execute a superop's constituents back-to-back, skipping the per-op
+/// driver overhead (watchdog compare, fetch, ZOL compare, retire
+/// bookkeeping).  Shared by the threaded handler ([`h_super`]), the match
+/// oracle and the converged lane path, so fused semantics exist once.
+///
+/// `pc0` is the head constituent's byte pc; constituent `k` executes at
+/// `pc0 + 4k` (constituents are consecutive real slots by construction).
+/// Returns the tail constituents' `(extra_retired, extra_cycles)` on
+/// success — the head's own retire/cost stays with the driver — or the
+/// faulting constituent's index and fault.  Constituents before a fault
+/// stay committed, exactly as the unfused program would leave them.
+#[inline(always)]
+fn exec_fused(
+    m: &mut Machine,
+    constituents: &[MicroOp],
+    pc0: u32,
+) -> Result<(u64, u64), (usize, MemFault)> {
+    let mut extra_cycles: u64 = 0;
+    for (k, c) in constituents.iter().enumerate() {
+        // SAFETY: constituent kinds are valid discriminants (< N_KINDS).
+        let h = unsafe { *HANDLERS.get_unchecked(c.kind as usize) };
+        let mut cx = StepCtx {
+            pc: pc0 + 4 * k as u32,
+            next: 0,
+            cost: c.cost,
+            dyn_pc: 0,
+            plen: 0,
+            dyn_trap: 0,
+            superops: &[],
+            extra_retired: 0,
+            extra_cycles: 0,
+        };
+        match h(m, *c, &mut cx) {
+            Flow::Next => {
+                if k > 0 {
+                    // Fusible handlers never touch `cx.cost`, so this is
+                    // the constituent's baked cost.
+                    extra_cycles += u64::from(c.cost);
+                }
+            }
+            Flow::Mem(fault) => return Err((k, fault)),
+            // `fusible` admits only Flow::Next/Flow::Mem kinds.
+            _ => unreachable!("non-fusible kind in superop"),
+        }
+    }
+    Ok((constituents.len() as u64 - 1, extra_cycles))
+}
+
+fn h_super(m: &mut Machine, op: MicroOp, cx: &mut StepCtx) -> Flow {
+    // Budget/observability gating happened in the driver before dispatch
+    // (a Super op decays to its head constituent there); reaching this
+    // handler commits the full run.
+    // SAFETY: `aux` indexes the table it was assigned from at fuse time.
+    let sup = unsafe { cx.superops.get_unchecked(op.aux as usize) };
+    match exec_fused(m, &sup.ops, cx.pc) {
+        Ok((extra_retired, extra_cycles)) => {
+            cx.extra_retired = extra_retired;
+            cx.extra_cycles = extra_cycles;
+            // cx.next arrived as idx + 1; the run retires len slots.
+            cx.next = cx.next - 1 + sup.ops.len();
+            Flow::Next
+        }
+        Err((k, fault)) => {
+            cx.pc += 4 * k as u32;
+            Flow::Mem(fault)
+        }
+    }
+}
+
 fn h_trap(_m: &mut Machine, _op: MicroOp, _cx: &mut StepCtx) -> Flow {
     Flow::Trap
 }
@@ -838,7 +1123,7 @@ const KINDS: [Kind; N_KINDS] = [
     Kind::Fence, Kind::Ecall, Kind::Ebreak,
     Kind::Mac, Kind::Add2i, Kind::FusedMac,
     Kind::Dlp, Kind::Dlpi, Kind::Zlp, Kind::SetZc, Kind::SetZs, Kind::SetZe,
-    Kind::FusedCustom,
+    Kind::FusedCustom, Kind::Super,
     Kind::Trap, Kind::TrapDyn,
 ];
 
@@ -904,6 +1189,7 @@ const fn handler_for(k: Kind) -> Handler {
         Kind::SetZs => h_setzs,
         Kind::SetZe => h_setze,
         Kind::FusedCustom => h_fused_custom,
+        Kind::Super => h_super,
         Kind::Trap => h_trap,
         Kind::TrapDyn => h_trapdyn,
     }
@@ -922,26 +1208,14 @@ static HANDLERS: [Handler; N_KINDS] = {
     t
 };
 
-/// Per-run (per-lane) cursor of the threaded loop: the current slot
-/// index, the recorded dynamic-trap pc, and the retire/cycle counters.
-struct LaneState {
-    idx: usize,
-    dyn_pc: u32,
-    retired: u64,
-    cycles: u64,
-}
-
-impl LaneState {
-    /// Entry translation of an architectural pc, exactly as the scalar
-    /// loops do it: misaligned or out-of-range entry pcs head straight
-    /// for the dynamic trap slot.
-    fn enter(pc: u32, lp: &LoweredProgram) -> LaneState {
-        let (idx, dyn_pc) = if pc % 4 == 0 && pc < lp.plen_bytes {
-            ((pc / 4) as usize, 0)
-        } else {
-            (lp.dyn_trap, pc)
-        };
-        LaneState { idx, dyn_pc, retired: 0, cycles: 0 }
+/// Entry translation of an architectural pc, exactly as the scalar loops
+/// do it: misaligned or out-of-range entry pcs head straight for the
+/// dynamic trap slot.  Returns `(slot index, dyn_pc)`.
+fn enter(pc: u32, lp: &LoweredProgram) -> (usize, u32) {
+    if pc % 4 == 0 && pc < lp.plen_bytes {
+        ((pc / 4) as usize, 0)
+    } else {
+        (lp.dyn_trap, pc)
     }
 }
 
@@ -955,7 +1229,10 @@ impl LaneState {
 fn step<H: RetireHook>(
     machine: &mut Machine,
     lp: &LoweredProgram,
-    st: &mut LaneState,
+    idx: &mut usize,
+    dyn_pc: &mut u32,
+    retired: &mut u64,
+    cycles: &mut u64,
     max_instrs: u64,
     instrs_for_hook: &[Instr],
     hook: &mut H,
@@ -963,8 +1240,8 @@ fn step<H: RetireHook>(
     let ops: &[MicroOp] = &lp.ops;
     // Watchdog first: the reference loop checks the budget before
     // validating the pc, and a lowered run must fault identically.
-    if st.retired >= max_instrs {
-        machine.pc = byte_of(ops, st.idx, st.dyn_pc);
+    if *retired >= max_instrs {
+        machine.pc = byte_of(ops, *idx, *dyn_pc);
         return Some(Err(SimError::Watchdog { max_instrs }));
     }
     // §Perf: this fetch is the hottest load in the ISS; the bounds check
@@ -975,31 +1252,46 @@ fn step<H: RetireHook>(
     // before the increment is consumed), `dyn_trap = n + 1`, and every
     // dynamic target (`jalr`, ZOL start/skip) is range-checked against
     // `plen` before the `/ 4` conversion (DESIGN.md §15).
-    debug_assert!(st.idx < ops.len(), "lowered slot index out of range");
+    debug_assert!(*idx < ops.len(), "lowered slot index out of range");
     // SAFETY: idx < ops.len() per the invariant above.
-    let op = unsafe { *ops.get_unchecked(st.idx) };
+    let mut op = unsafe { *ops.get_unchecked(*idx) };
+    if op.kind == Kind::Super {
+        // Fused-run gating (DESIGN.md §19): a full fuse needs the whole
+        // run inside the watchdog budget (the oracle checks the budget
+        // before every constituent) and a non-observing hook (observers
+        // see one retire per original instruction).  Otherwise the op
+        // decays to its head constituent — the tail slots hold the
+        // original ops, so execution continues scalar and bit-identical.
+        let sup = unsafe { lp.superops.get_unchecked(op.aux as usize) };
+        if H::OBSERVES || max_instrs - *retired < sup.ops.len() as u64 {
+            op = sup.ops[0];
+        }
+    }
     // SAFETY: `op.kind as usize` is a valid discriminant (< N_KINDS by
     // repr(u8) sequential numbering), and HANDLERS holds one entry per
     // discriminant.
     let handler = unsafe { *HANDLERS.get_unchecked(op.kind as usize) };
     let mut cx = StepCtx {
-        pc: (st.idx as u32).wrapping_mul(4),
-        next: st.idx + 1,
+        pc: (*idx as u32).wrapping_mul(4),
+        next: *idx + 1,
         cost: op.cost,
-        dyn_pc: st.dyn_pc,
+        dyn_pc: *dyn_pc,
         plen: lp.plen_bytes,
         dyn_trap: lp.dyn_trap,
+        superops: &lp.superops,
+        extra_retired: 0,
+        extra_cycles: 0,
     };
     match handler(machine, op, &mut cx) {
         Flow::Next => {}
         Flow::Ecall => {
             if H::OBSERVES {
-                hook.retire(cx.pc, &instrs_for_hook[st.idx], u64::from(cx.cost));
+                hook.retire(cx.pc, &instrs_for_hook[*idx], u64::from(cx.cost));
             }
             machine.pc = cx.pc;
             return Some(Ok(RunStats {
-                instrs: st.retired + 1,
-                cycles: st.cycles + u64::from(cx.cost),
+                instrs: *retired + 1,
+                cycles: *cycles + u64::from(cx.cost),
             }));
         }
         Flow::Break => {
@@ -1012,22 +1304,26 @@ fn step<H: RetireHook>(
             return Some(Err(SimError::PcOutOfRange { pc: bad }));
         }
         Flow::TrapDyn => {
-            machine.pc = st.dyn_pc;
-            return Some(Err(SimError::PcOutOfRange { pc: st.dyn_pc }));
+            machine.pc = *dyn_pc;
+            return Some(Err(SimError::PcOutOfRange { pc: *dyn_pc }));
         }
         Flow::Mem(fault) => {
+            // cx.pc is the faulting constituent's pc for fused runs.
             machine.pc = cx.pc;
             return Some(Err(SimError::Mem { pc: cx.pc, fault }));
         }
     }
-    st.dyn_pc = cx.dyn_pc;
+    *dyn_pc = cx.dyn_pc;
     let mut next = cx.next;
 
     // Zero-overhead loop-back, only on ops whose successor can be a
     // loop end: when execution reaches ZE, hardware redirects to ZS
-    // and decrements ZC — no cycles, no retire.
+    // and decrements ZC — no cycles, no retire.  A fused run's head op
+    // carries its *last* constituent's mark (non-final constituents are
+    // provably unmarked), so the compare runs exactly where the unfused
+    // program would run it.
     if op.zmark != 0 && machine.ze != 0 {
-        let next_byte = byte_of(ops, next, st.dyn_pc);
+        let next_byte = byte_of(ops, next, *dyn_pc);
         if next_byte == machine.ze {
             if machine.zc > 1 {
                 machine.zc -= 1;
@@ -1035,7 +1331,7 @@ fn step<H: RetireHook>(
                 if zs % 4 == 0 && zs < lp.plen_bytes {
                     next = (zs / 4) as usize;
                 } else {
-                    st.dyn_pc = zs;
+                    *dyn_pc = zs;
                     next = lp.dyn_trap;
                 }
             } else {
@@ -1046,11 +1342,11 @@ fn step<H: RetireHook>(
     }
 
     if H::OBSERVES {
-        hook.retire(cx.pc, &instrs_for_hook[st.idx], u64::from(cx.cost));
+        hook.retire(cx.pc, &instrs_for_hook[*idx], u64::from(cx.cost));
     }
-    st.retired += 1;
-    st.cycles += u64::from(cx.cost);
-    st.idx = next;
+    *retired += 1 + cx.extra_retired;
+    *cycles += u64::from(cx.cost) + cx.extra_cycles;
+    *idx = next;
     None
 }
 
@@ -1070,11 +1366,20 @@ pub(crate) fn run_lowered<H: RetireHook>(
     max_instrs: u64,
     hook: &mut H,
 ) -> Result<RunStats, SimError> {
-    let mut st = LaneState::enter(machine.pc, lp);
+    let (mut idx, mut dyn_pc) = enter(machine.pc, lp);
+    let (mut retired, mut cycles) = (0u64, 0u64);
     loop {
-        if let Some(r) =
-            step(machine, lp, &mut st, max_instrs, instrs_for_hook, hook)
-        {
+        if let Some(r) = step(
+            machine,
+            lp,
+            &mut idx,
+            &mut dyn_pc,
+            &mut retired,
+            &mut cycles,
+            max_instrs,
+            instrs_for_hook,
+            hook,
+        ) {
             return r;
         }
     }
@@ -1088,6 +1393,13 @@ pub(crate) fn run_lowered<H: RetireHook>(
 /// scalar runs.  Lane runs are hook-free by construction ([`NopHook`]);
 /// observing hooks take the scalar path — the retire stream is
 /// per-machine, and interleaving lanes would scramble it.
+///
+/// Lane state is **structure-of-arrays** (DESIGN.md §19): the slot
+/// cursors, dynamic-trap pcs, retire/cycle counters and done flags each
+/// live in their own `[_; K]` array instead of an array of per-lane
+/// structs.  The scalar stepper touches one element of each, and the
+/// converged fused path below strides a whole array contiguously per
+/// constituent.
 pub(crate) fn run_lanes<const K: usize>(
     lanes: &mut [Machine],
     lp: &LoweredProgram,
@@ -1095,12 +1407,114 @@ pub(crate) fn run_lanes<const K: usize>(
 ) -> Vec<Result<RunStats, SimError>> {
     assert_eq!(lanes.len(), K, "lane group width");
     assert_eq!(budgets.len(), K, "one watchdog budget per lane");
-    let mut st: [LaneState; K] =
-        std::array::from_fn(|l| LaneState::enter(lanes[l].pc, lp));
+    let mut idx = [0usize; K];
+    let mut dyn_pc = [0u32; K];
+    let mut retired = [0u64; K];
+    let mut cycles = [0u64; K];
+    for l in 0..K {
+        let (i, d) = enter(lanes[l].pc, lp);
+        idx[l] = i;
+        dyn_pc[l] = d;
+    }
     let mut done: [Option<Result<RunStats, SimError>>; K] =
         std::array::from_fn(|_| None);
     let mut live = K;
     while live > 0 {
+        // Converged fused fast path (DESIGN.md §19): every lane alive and
+        // parked on the same [`Kind::Super`] slot, every budget covering
+        // the full run.  Execute constituent-major — each constituent
+        // strides across all K lanes before the next one runs — so the
+        // lanes' independent dependency chains overlap *within* the fused
+        // run, not just across scalar dispatches.  Per-lane results stay
+        // bit-identical to scalar fused execution: constituents commit in
+        // the same order per lane, and a faulting lane simply stops
+        // participating in later constituents.
+        if !lp.superops.is_empty() && live == K {
+            let i0 = idx[0];
+            let op = lp.ops[i0];
+            if op.kind == Kind::Super && idx.iter().all(|&i| i == i0) {
+                let sup = &lp.superops[op.aux as usize];
+                let n = sup.ops.len() as u64;
+                if (0..K).all(|l| budgets[l] - retired[l] >= n) {
+                    let pc0 = (i0 as u32) * 4;
+                    let mut fault: [Option<(usize, MemFault)>; K] =
+                        [None; K];
+                    for (k, c) in sup.ops.iter().enumerate() {
+                        // SAFETY: valid discriminant, one entry per kind.
+                        let h = unsafe {
+                            *HANDLERS.get_unchecked(c.kind as usize)
+                        };
+                        for l in 0..K {
+                            if fault[l].is_some() {
+                                continue;
+                            }
+                            let mut cx = StepCtx {
+                                pc: pc0 + 4 * k as u32,
+                                next: 0,
+                                cost: c.cost,
+                                dyn_pc: 0,
+                                plen: lp.plen_bytes,
+                                dyn_trap: lp.dyn_trap,
+                                superops: &[],
+                                extra_retired: 0,
+                                extra_cycles: 0,
+                            };
+                            match h(&mut lanes[l], *c, &mut cx) {
+                                Flow::Next => {}
+                                Flow::Mem(f) => fault[l] = Some((k, f)),
+                                _ => unreachable!(
+                                    "non-fusible kind in superop"
+                                ),
+                            }
+                        }
+                    }
+                    let next = i0 + sup.ops.len();
+                    for l in 0..K {
+                        match fault[l] {
+                            Some((k, f)) => {
+                                let pc = pc0 + 4 * k as u32;
+                                lanes[l].pc = pc;
+                                done[l] =
+                                    Some(Err(SimError::Mem { pc, fault: f }));
+                                live -= 1;
+                            }
+                            None => {
+                                retired[l] += n;
+                                cycles[l] += sup.cost;
+                                let mut nl = next;
+                                // Same loop-back compare the scalar
+                                // stepper runs after a fused head
+                                // (zmark = last constituent's mark).
+                                let m = &mut lanes[l];
+                                if op.zmark != 0 && m.ze != 0 {
+                                    let nb =
+                                        byte_of(&lp.ops, nl, dyn_pc[l]);
+                                    if nb == m.ze {
+                                        if m.zc > 1 {
+                                            m.zc -= 1;
+                                            let zs = m.zs;
+                                            if zs % 4 == 0
+                                                && zs < lp.plen_bytes
+                                            {
+                                                nl = (zs / 4) as usize;
+                                            } else {
+                                                dyn_pc[l] = zs;
+                                                nl = lp.dyn_trap;
+                                            }
+                                        } else {
+                                            m.zc = 0;
+                                            m.ze = 0; // disarm
+                                        }
+                                    }
+                                }
+                                idx[l] = nl;
+                            }
+                        }
+                    }
+                    continue;
+                }
+            }
+        }
         // Lane-major inner loop: K independent dependency chains in
         // flight per iteration, which is where the lane win comes from —
         // the host core overlaps their loads/ALU ops where a scalar run
@@ -1112,7 +1526,10 @@ pub(crate) fn run_lanes<const K: usize>(
             if let Some(r) = step(
                 &mut lanes[l],
                 lp,
-                &mut st[l],
+                &mut idx[l],
+                &mut dyn_pc[l],
+                &mut retired[l],
+                &mut cycles[l],
                 budgets[l],
                 &[],
                 &mut NopHook,
@@ -1171,11 +1588,23 @@ pub(crate) fn run_lowered_match<H: RetireHook>(
         // range-checked against `plen` before the `/ 4` conversion.
         debug_assert!(idx < ops.len(), "lowered slot index out of range");
         // SAFETY: idx < ops.len() per the invariant above.
-        let op = unsafe { *ops.get_unchecked(idx) };
+        let mut op = unsafe { *ops.get_unchecked(idx) };
+        if op.kind == Kind::Super {
+            // Same fused-run gating as the threaded driver: observers and
+            // short watchdog budgets decay the head to its original op
+            // and the tail slots execute scalar.
+            let sup = &lp.superops[op.aux as usize];
+            if H::OBSERVES || max_instrs - retired < sup.ops.len() as u64 {
+                op = sup.ops[0];
+            }
+        }
         // Correct for every real slot (idx < n); trap slots never read it.
         let pc = (idx as u32).wrapping_mul(4);
         let mut next = idx + 1;
         let mut cost = op.cost;
+        // Super's tail-constituent accounting (zero for every other kind).
+        let mut extra_retired: u64 = 0;
+        let mut extra_cycles: u64 = 0;
 
         // Early-return on a data-memory fault, leaving `machine.pc` at the
         // faulting instruction like the reference loop does.
@@ -1545,6 +1974,23 @@ pub(crate) fn run_lowered_match<H: RetireHook>(
                     (op.aux & 0xffff) as u16,
                 ));
             }
+            Kind::Super => {
+                // Shared fused executor — the match oracle and the
+                // threaded handler cannot drift.
+                let sup = &lp.superops[op.aux as usize];
+                match exec_fused(machine, &sup.ops, pc) {
+                    Ok((er, ec)) => {
+                        extra_retired = er;
+                        extra_cycles = ec;
+                        next = idx + sup.ops.len();
+                    }
+                    Err((k, fault)) => {
+                        let fpc = pc + 4 * k as u32;
+                        machine.pc = fpc;
+                        return Err(SimError::Mem { pc: fpc, fault });
+                    }
+                }
+            }
             Kind::Trap => {
                 let bad = op.imm as u32;
                 machine.pc = bad;
@@ -1581,8 +2027,8 @@ pub(crate) fn run_lowered_match<H: RetireHook>(
         if H::OBSERVES {
             hook.retire(pc, &instrs_for_hook[idx], u64::from(cost));
         }
-        retired += 1;
-        cycles += u64::from(cost);
+        retired += 1 + extra_retired;
+        cycles += u64::from(cost) + extra_cycles;
         idx = next;
     }
 }
@@ -1695,5 +2141,201 @@ mod tests {
         };
         assert!(LoweredProgram::lower(&p, &cm).is_none());
         assert!(LoweredProgram::lower(&p, &CycleModel::default()).is_some());
+    }
+
+    // --- superinstruction fusion (DESIGN.md §19) ---
+
+    const SUPER_ON: LowerOpts = LowerOpts { superops: true, profile: None };
+
+    fn fused(
+        variant: crate::sim::Variant,
+        instrs: Vec<Instr>,
+    ) -> LoweredProgram {
+        let p = Program::from_instrs(variant, instrs).unwrap();
+        LoweredProgram::lower_with(&p, &CycleModel::default(), &SUPER_ON)
+            .unwrap()
+    }
+
+    /// Run `instrs` through the fused lowered form and the reference
+    /// interpreter on fresh machines; both observable outcomes must match
+    /// bit for bit.
+    fn diff_fused(
+        variant: crate::sim::Variant,
+        instrs: &[Instr],
+        budget: u64,
+    ) {
+        let lp = fused(variant, instrs.to_vec());
+        let mut a =
+            Machine::from_instrs(variant, instrs.to_vec(), 256).unwrap();
+        let mut b =
+            Machine::from_instrs(variant, instrs.to_vec(), 256).unwrap();
+        let prog = std::sync::Arc::clone(a.program());
+        let ra = run_lowered(&mut a, &lp, prog.instrs(), budget, &mut NopHook);
+        let rb = b.run_reference(budget, &mut NopHook);
+        assert_eq!(format!("{ra:?}"), format!("{rb:?}"), "budget={budget}");
+        assert_eq!(a.regs, b.regs, "budget={budget}");
+        assert_eq!(a.pc, b.pc, "budget={budget}");
+        assert_eq!((a.zc, a.zs, a.ze), (b.zc, b.zs, b.ze), "budget={budget}");
+    }
+
+    #[test]
+    fn superops_fuse_straight_line_runs() {
+        use AluImmOp::Addi;
+        let lp = fused(V0, vec![
+            Instr::OpImm { op: Addi, rd: 1, rs1: 0, imm: 1 },
+            Instr::OpImm { op: Addi, rd: 2, rs1: 1, imm: 2 },
+            Instr::OpImm { op: Addi, rd: 3, rs1: 2, imm: 3 },
+            Instr::Ecall,
+        ]);
+        assert_eq!(lp.n_superops(), 1);
+        assert_eq!(lp.ops[0].kind, Kind::Super);
+        assert_eq!(lp.ops[0].imm, 3);
+        // Tail slots keep their original ops: mid-run control transfers
+        // execute scalar.
+        assert_eq!(lp.ops[1].kind, Kind::Addi);
+        assert_eq!(lp.ops[2].kind, Kind::Addi);
+        assert_eq!(lp.superops[0].ops.len(), 3);
+        assert_eq!(lp.superops[0].cost, 3); // 3 × alu(1)
+    }
+
+    #[test]
+    fn fused_run_is_bit_identical_to_reference() {
+        use AluImmOp::Addi;
+        let prog = [
+            Instr::OpImm { op: Addi, rd: 1, rs1: 0, imm: 40 },
+            Instr::OpImm { op: Addi, rd: 2, rs1: 1, imm: 2 },
+            Instr::Store { op: StoreOp::Sw, rs2: 2, rs1: 0, offset: 16 },
+            Instr::Load { op: LoadOp::Lw, rd: 3, rs1: 0, offset: 16 },
+            Instr::Ecall,
+        ];
+        // Every watchdog budget across the whole run, including the exact
+        // fused-run boundaries (0..=n and one beyond).
+        for budget in 0..=6 {
+            diff_fused(V0, &prog, budget);
+        }
+    }
+
+    #[test]
+    fn fused_mid_run_fault_commits_prefix_and_faults_at_right_pc() {
+        use AluImmOp::Addi;
+        let prog = [
+            Instr::OpImm { op: Addi, rd: 1, rs1: 0, imm: 1 }, // commits
+            Instr::Load { op: LoadOp::Lw, rd: 2, rs1: 0, offset: 2040 }, // faults (dm=256)
+            Instr::OpImm { op: Addi, rd: 3, rs1: 0, imm: 9 }, // never runs
+            Instr::Ecall,
+        ];
+        let lp = fused(V0, prog.to_vec());
+        assert_eq!(lp.ops[0].kind, Kind::Super, "run must actually fuse");
+        diff_fused(V0, &prog, 100);
+        // And explicitly: the fault pc is the mid-run constituent's.
+        let mut m = Machine::from_instrs(V0, prog.to_vec(), 256).unwrap();
+        let p = std::sync::Arc::clone(m.program());
+        let err = run_lowered(&mut m, &lp, p.instrs(), 100, &mut NopHook)
+            .unwrap_err();
+        assert!(matches!(err, SimError::Mem { pc: 4, .. }), "{err}");
+        assert_eq!(m.regs[1], 1, "prefix constituent committed");
+        assert_eq!(m.regs[3], 0, "suffix constituent did not run");
+    }
+
+    #[test]
+    fn branch_into_fused_run_middle_executes_scalar() {
+        use AluImmOp::Addi;
+        let prog = [
+            Instr::Jal { rd: 0, offset: 12 }, // -> slot 3, mid-run
+            Instr::OpImm { op: Addi, rd: 1, rs1: 1, imm: 1 },
+            Instr::OpImm { op: Addi, rd: 1, rs1: 1, imm: 2 },
+            Instr::OpImm { op: Addi, rd: 1, rs1: 1, imm: 4 },
+            Instr::Ecall,
+        ];
+        let lp = fused(V0, prog.to_vec());
+        assert_eq!(lp.ops[1].kind, Kind::Super);
+        diff_fused(V0, &prog, 100);
+    }
+
+    #[test]
+    fn fused_zol_body_loops_back_after_marked_tail() {
+        use AluImmOp::Addi;
+        let prog = [
+            Instr::Dlpi { count: 3, body_len: 2 },
+            Instr::OpImm { op: Addi, rd: 1, rs1: 1, imm: 1 },
+            Instr::OpImm { op: Addi, rd: 2, rs1: 2, imm: 1 }, // zmark
+            Instr::Ecall,
+        ];
+        let lp = fused(V4, prog.to_vec());
+        // The whole loop body fuses; the head carries the tail's mark.
+        assert_eq!(lp.ops[1].kind, Kind::Super);
+        assert_eq!(lp.ops[1].zmark, 1);
+        for budget in 0..=9 {
+            diff_fused(V4, &prog, budget);
+        }
+    }
+
+    #[test]
+    fn marked_op_only_ends_a_run_and_setze_disables_fusion() {
+        use AluImmOp::Addi;
+        // set.ze marks every op -> nothing fuses.
+        let lp = fused(V4, vec![
+            Instr::SetZe { rs1: 1 },
+            Instr::OpImm { op: Addi, rd: 1, rs1: 1, imm: 1 },
+            Instr::OpImm { op: Addi, rd: 2, rs1: 2, imm: 1 },
+            Instr::Ecall,
+        ]);
+        assert_eq!(lp.n_superops(), 0);
+    }
+
+    #[test]
+    fn profile_limits_fusion_to_hot_runs() {
+        use AluImmOp::Addi;
+        let instrs = vec![
+            Instr::OpImm { op: Addi, rd: 1, rs1: 1, imm: 1 },
+            Instr::OpImm { op: Addi, rd: 2, rs1: 2, imm: 1 },
+            Instr::Jal { rd: 0, offset: 4 }, // splits the runs
+            Instr::OpImm { op: Addi, rd: 3, rs1: 3, imm: 1 },
+            Instr::OpImm { op: Addi, rd: 4, rs1: 4, imm: 1 },
+            Instr::Ecall,
+        ];
+        let p = Program::from_instrs(V0, instrs).unwrap();
+        // Only the first run is hot; the cold one must not fuse.
+        let profile = std::sync::Arc::new(vec![100, 100, 50, 0, 0, 1]);
+        let opts =
+            LowerOpts { superops: true, profile: Some(profile) };
+        let lp = LoweredProgram::lower_with(&p, &CycleModel::default(), &opts)
+            .unwrap();
+        assert_eq!(lp.n_superops(), 1);
+        assert_eq!(lp.ops[0].kind, Kind::Super);
+        assert_eq!(lp.ops[3].kind, Kind::Addi);
+        // Without a profile both runs fuse.
+        let all = LoweredProgram::lower_with(
+            &p,
+            &CycleModel::default(),
+            &SUPER_ON,
+        )
+        .unwrap();
+        assert_eq!(all.n_superops(), 2);
+    }
+
+    #[test]
+    fn fused_lanes_match_scalar_fused_runs() {
+        use AluImmOp::Addi;
+        let prog = vec![
+            Instr::OpImm { op: Addi, rd: 1, rs1: 0, imm: 3 },
+            Instr::Dlpi { count: 4, body_len: 2 },
+            Instr::OpImm { op: Addi, rd: 2, rs1: 2, imm: 5 },
+            Instr::OpImm { op: Addi, rd: 1, rs1: 1, imm: 1 },
+            Instr::Ecall,
+        ];
+        let lp = fused(V4, prog.clone());
+        let mk = || Machine::from_instrs(V4, prog.clone(), 64).unwrap();
+        let mut lanes = [mk(), mk()];
+        // Distinct budgets: lane 1 hits its watchdog mid-run.
+        let budgets = [100u64, 3];
+        let got = run_lanes::<2>(&mut lanes, &lp, &budgets);
+        for (l, r) in got.iter().enumerate() {
+            let mut s = mk();
+            let want = s.run_reference(budgets[l], &mut NopHook);
+            assert_eq!(format!("{r:?}"), format!("{want:?}"), "lane {l}");
+            assert_eq!(lanes[l].regs, s.regs, "lane {l}");
+            assert_eq!(lanes[l].pc, s.pc, "lane {l}");
+        }
     }
 }

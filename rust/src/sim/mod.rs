@@ -41,13 +41,14 @@ pub mod shard;
 pub use chaos::{ChaosExec, FaultPlan};
 pub use cluster::{ClusterExec, ClusterPool, LoopbackCluster};
 pub use cpu::{Machine, RemoteKind, RunStats, Sim, SimError};
-pub use engine::{default_lanes, lanes_override, run_batch, run_job,
-                 run_job_on, run_job_pooled, run_lane_pack, Job, JobOutput,
-                 MAX_LANES};
+pub use engine::{default_lanes, default_superops, lane_stats,
+                 lanes_override, run_batch, run_job, run_job_on,
+                 run_job_pooled, run_lane_pack, superops_override, Job,
+                 JobOutput, MAX_LANES};
 pub use exec::{BackendSpec, Caps, ClusterTarget, Executor, JobSpec,
                LocalExec, RawJob, ShardExec};
 pub use hooks::{NopHook, RetireHook, TraceHook};
-pub use lowered::LoweredProgram;
+pub use lowered::{LowerOpts, LoweredProgram, SUPEROP_TOPK};
 pub use memory::Memory;
 pub use program::Program;
 pub use serve::{Client, PolicyKind, Reply, ReqMeta, SchedPolicy, ServeError,

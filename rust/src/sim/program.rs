@@ -11,7 +11,7 @@
 use std::sync::{Arc, Mutex, OnceLock};
 
 use super::cpu::SimError;
-use super::lowered::LoweredProgram;
+use super::lowered::{LowerOpts, LoweredProgram};
 use super::{CycleModel, Variant};
 use crate::isa::decode::decode;
 use crate::isa::encode::encode;
@@ -27,10 +27,12 @@ pub struct Program {
     variant: Variant,
     instrs: Vec<Instr>,
     words: Vec<u32>,
-    /// Memoized lowered forms, one per cycle model seen (DESIGN.md §11) —
-    /// sweeps re-running one program on many [`super::Machine`]s lower it
-    /// exactly once.
-    lowered: Mutex<Vec<(CycleModel, Arc<LoweredProgram>)>>,
+    /// Memoized lowered forms, one per (cycle model, superops) pair seen
+    /// (DESIGN.md §11, §19) — sweeps re-running one program on many
+    /// [`super::Machine`]s lower it exactly once.  Profile-guided lowering
+    /// (`LowerOpts::profile`) bypasses this cache: the profile is
+    /// run-specific, so memoizing on the boolean alone would alias.
+    lowered: Mutex<Vec<(CycleModel, bool, Arc<LoweredProgram>)>>,
     /// Memoized content fingerprint — per-job callers ([`Self::fingerprint`]
     /// via `shard::desc_for`) must not re-hash the PM image per request.
     fingerprint: OnceLock<u64>,
@@ -160,23 +162,55 @@ impl Program {
         LoweredProgram::lower(self, cm)
     }
 
+    /// [`Self::lower`] with explicit lowering options (superinstruction
+    /// fusion, optional retire profile — DESIGN.md §19).
+    pub fn lower_with(
+        &self,
+        cm: &CycleModel,
+        opts: &LowerOpts,
+    ) -> Option<LoweredProgram> {
+        LoweredProgram::lower_with(self, cm, opts)
+    }
+
     /// Memoizing [`Self::lower`]: the lowered image for `cm`, shared via
     /// `Arc` across every machine/run executing this program.
     pub fn lowered(&self, cm: &CycleModel) -> Option<Arc<LoweredProgram>> {
+        self.lowered_with(cm, &LowerOpts::default())
+    }
+
+    /// Memoizing [`Self::lower_with`], keyed on `(cm, opts.superops)`.
+    ///
+    /// A run-specific retire profile defeats memoization by design: two
+    /// profiles produce different fusion choices, so profile-guided images
+    /// are rebuilt per call and never enter the cache.
+    pub fn lowered_with(
+        &self,
+        cm: &CycleModel,
+        opts: &LowerOpts,
+    ) -> Option<Arc<LoweredProgram>> {
+        if opts.profile.is_some() {
+            return Some(Arc::new(self.lower_with(cm, opts)?));
+        }
         {
             let cache = self.lowered.lock().unwrap();
-            if let Some((_, lp)) = cache.iter().find(|(c, _)| c == cm) {
+            if let Some((_, _, lp)) = cache
+                .iter()
+                .find(|(c, s, _)| c == cm && *s == opts.superops)
+            {
                 return Some(Arc::clone(lp));
             }
         }
         // Lower outside the lock; a race builds the image twice but never
         // blocks other runs behind the (one-time, O(n)) lowering.
-        let lp = Arc::new(self.lower(cm)?);
+        let lp = Arc::new(self.lower_with(cm, opts)?);
         let mut cache = self.lowered.lock().unwrap();
-        if let Some((_, existing)) = cache.iter().find(|(c, _)| c == cm) {
+        if let Some((_, _, existing)) = cache
+            .iter()
+            .find(|(c, s, _)| c == cm && *s == opts.superops)
+        {
             return Some(Arc::clone(existing));
         }
-        cache.push((*cm, Arc::clone(&lp)));
+        cache.push((*cm, opts.superops, Arc::clone(&lp)));
         Some(lp)
     }
 }
@@ -219,6 +253,37 @@ mod tests {
         let slow = CycleModel { alu: 3, ..cm };
         let c = p.lowered(&slow).unwrap();
         assert!(!Arc::ptr_eq(&a, &c), "distinct cycle models lower separately");
+    }
+
+    #[test]
+    fn lowered_memo_keys_on_superops_and_skips_profiled_images() {
+        let p = Program::from_instrs(
+            V0,
+            vec![
+                Instr::OpImm { op: AluImmOp::Addi, rd: 1, rs1: 0, imm: 1 },
+                Instr::OpImm { op: AluImmOp::Addi, rd: 2, rs1: 1, imm: 2 },
+                Instr::Ecall,
+            ],
+        )
+        .unwrap();
+        let cm = CycleModel::default();
+        let plain = p.lowered(&cm).unwrap();
+        let on = LowerOpts { superops: true, profile: None };
+        let fused = p.lowered_with(&cm, &on).unwrap();
+        assert!(!Arc::ptr_eq(&plain, &fused), "superops key separates images");
+        assert_eq!(plain.n_superops(), 0);
+        assert_eq!(fused.n_superops(), 1);
+        assert!(
+            Arc::ptr_eq(&fused, &p.lowered_with(&cm, &on).unwrap()),
+            "same (cm, superops) shares the image"
+        );
+        let profiled = LowerOpts {
+            superops: true,
+            profile: Some(Arc::new(vec![1, 1, 1])),
+        };
+        let a = p.lowered_with(&cm, &profiled).unwrap();
+        let b = p.lowered_with(&cm, &profiled).unwrap();
+        assert!(!Arc::ptr_eq(&a, &b), "profiled images bypass the memo");
     }
 
     #[test]

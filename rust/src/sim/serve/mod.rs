@@ -546,6 +546,7 @@ fn dispatcher(
     let hint = BatchHint {
         max_batch: opts.max_batch.max(1),
         parallelism: exec.caps().parallelism,
+        lanes: exec.caps().lanes,
     };
     let mut policy = opts.policy.build();
     let mut queues = QueueSet::new(opts.queue_cap);
@@ -1037,7 +1038,7 @@ mod tests {
             window_max: Duration::from_millis(8),
             ..ServeOptions::default()
         };
-        let hint = BatchHint { max_batch: 64, parallelism: 4 };
+        let hint = BatchHint { max_batch: 64, parallelism: 4, lanes: 1 };
         let mut t = WindowTuner::new(&opts, &hint);
         // No data: the window is the configured max.
         assert_eq!(t.window(), Duration::from_millis(8));

@@ -42,6 +42,14 @@ pub struct BatchHint {
     /// local backend, workers × pipeline depth for a shard.  Policies use
     /// it to size batches to what the substrate can actually overlap.
     pub parallelism: usize,
+    /// Same-program lane-pack width the executor forms
+    /// ([`crate::sim::exec::Caps::lanes`]).  The engine packs
+    /// same-fingerprint jobs into SIMT-style lane groups of this width, so
+    /// a batch whose per-model run lengths are lane multiples executes with
+    /// full packs; a mixed tail strands lanes (DESIGN.md §19).  Policies
+    /// prefer finishing a model's run at a multiple of this before
+    /// switching tenants.  `1` (or `0`) = scalar backend, no preference.
+    pub lanes: usize,
 }
 
 impl BatchHint {
@@ -66,6 +74,12 @@ impl BatchHint {
 /// - Decisions are a pure function of the queue state and the policy's
 ///   own counters — no clocks, no randomness — so a fixed arrival
 ///   sequence always forms the same batches.
+///
+/// Policies should additionally *prefer* (not guarantee) same-model run
+/// lengths that are multiples of [`BatchHint::lanes`], so the engine's
+/// lane packer downstream forms full packs (DESIGN.md §19).  The
+/// preference never overrides the contract above: a queue that runs dry
+/// mid-run leaves a short run rather than stalling or reordering.
 pub trait SchedPolicy: Send {
     /// Policy name (logs, reports, `describe` strings).
     fn name(&self) -> &'static str;
@@ -124,7 +138,9 @@ impl std::fmt::Display for PolicyKind {
 /// Strict global arrival order: repeatedly serve the queue holding the
 /// globally-oldest request.  This reconstructs exactly the one shared
 /// FIFO of the pre-scheduler dispatcher, so `--policy fifo` replies are
-/// bit-identical to the legacy serve path.
+/// bit-identical to the legacy serve path (at `lanes: 1`; a multi-lane
+/// backend tops same-model runs up to lane multiples, which only ever
+/// pulls a model's *own* later requests forward).
 pub struct Fifo;
 
 impl SchedPolicy for Fifo {
@@ -137,10 +153,25 @@ impl SchedPolicy for Fifo {
         queues: &mut QueueSet,
         hint: &BatchHint,
     ) -> Vec<Pending> {
+        let lanes = hint.lanes.max(1);
         let mut batch = Vec::new();
         while batch.len() < hint.max_batch {
             let Some(p) = queues.pop_oldest() else { break };
+            let key = p.key.clone();
             batch.push(p);
+            // Lane-pack top-up: extend this model's run to a multiple of
+            // the lane width from its own queue before returning to global
+            // arrival order.  Running dry leaves a short run — never stall.
+            let mut run = 1;
+            while run % lanes != 0 && batch.len() < hint.max_batch {
+                match queues.pop(&key) {
+                    Some(q) => {
+                        batch.push(q);
+                        run += 1;
+                    }
+                    None => break,
+                }
+            }
         }
         batch
     }
@@ -166,6 +197,7 @@ impl SchedPolicy for Edf {
         queues: &mut QueueSet,
         hint: &BatchHint,
     ) -> Vec<Pending> {
+        let lanes = hint.lanes.max(1);
         let mut batch = Vec::new();
         while batch.len() < hint.max_batch {
             let Some(p) = queues.pop_front_min_by(|p| {
@@ -178,7 +210,21 @@ impl SchedPolicy for Edf {
             }) else {
                 break;
             };
+            let key = p.key.clone();
             batch.push(p);
+            // Lane-pack top-up (same rule as [`Fifo`]): the most urgent
+            // model keeps the lanes it opened — its next requests are at
+            // most as urgent as its head was, so no other head is wronged.
+            let mut run = 1;
+            while run % lanes != 0 && batch.len() < hint.max_batch {
+                match queues.pop(&key) {
+                    Some(q) => {
+                        batch.push(q);
+                        run += 1;
+                    }
+                    None => break,
+                }
+            }
         }
         batch
     }
@@ -226,7 +272,12 @@ impl SchedPolicy for DeficitRoundRobin {
             if active.is_empty() {
                 break;
             }
-            let quantum = (hint.max_batch / active.len()).max(1);
+            // Round the per-tenant quantum up to a lane multiple so each
+            // visit's run arrives at the engine as whole lane packs
+            // (DESIGN.md §19); at `lanes: 1` this is classic DRR.
+            let lanes = hint.lanes.max(1);
+            let base = (hint.max_batch / active.len()).max(1);
+            let quantum = ((base + lanes - 1) / lanes) * lanes;
             // Rotate: start at the first active key after the cursor.
             let start = match &self.cursor {
                 Some(c) => active.iter().position(|k| k > c).unwrap_or(0),
@@ -326,7 +377,7 @@ mod tests {
         for key in ["a", "b", "a", "c", "b"] {
             push(&mut qs, key);
         }
-        let hint = BatchHint { max_batch: 3, parallelism: 8 };
+        let hint = BatchHint { max_batch: 3, parallelism: 8, lanes: 1 };
         let b1 = Fifo.next_batch(&mut qs, &hint);
         assert_eq!(keys(&b1), ["a", "b", "a"]);
         assert_eq!(b1.iter().map(|p| p.seq).collect::<Vec<_>>(), [0, 1, 2]);
@@ -339,7 +390,7 @@ mod tests {
     fn drr_splits_each_batch_across_backlogged_tenants() {
         // 10:1 backlog skew; max_batch 8 over 2 active queues -> quantum 4.
         let mut qs = filled(&[("chatty", 40), ("quiet", 4)]);
-        let hint = BatchHint { max_batch: 8, parallelism: 8 };
+        let hint = BatchHint { max_batch: 8, parallelism: 8, lanes: 1 };
         let mut drr = DeficitRoundRobin::new();
         let b1 = drr.next_batch(&mut qs, &hint);
         assert_eq!(
@@ -358,7 +409,7 @@ mod tests {
     #[test]
     fn drr_preserves_per_model_fifo_order() {
         let mut qs = filled(&[("a", 6), ("b", 6)]);
-        let hint = BatchHint { max_batch: 4, parallelism: 4 };
+        let hint = BatchHint { max_batch: 4, parallelism: 4, lanes: 1 };
         let mut drr = DeficitRoundRobin::new();
         let mut seen: std::collections::HashMap<&str, Vec<u64>> =
             Default::default();
@@ -386,7 +437,7 @@ mod tests {
         // max_batch 3 over 3 queues -> quantum 1; rotation must cycle so
         // each queue drains at the same rate across batches.
         let mut qs = filled(&[("a", 3), ("b", 3), ("c", 3)]);
-        let hint = BatchHint { max_batch: 3, parallelism: 4 };
+        let hint = BatchHint { max_batch: 3, parallelism: 4, lanes: 1 };
         let mut drr = DeficitRoundRobin::new();
         for _ in 0..3 {
             let batch = drr.next_batch(&mut qs, &hint);
@@ -403,7 +454,7 @@ mod tests {
     /// and takes more than its round-robin share.
     #[test]
     fn drr_forfeits_credit_when_the_filling_pop_empties_a_queue() {
-        let hint = BatchHint { max_batch: 4, parallelism: 4 };
+        let hint = BatchHint { max_batch: 4, parallelism: 4, lanes: 1 };
         let mut drr = DeficitRoundRobin::new();
         // Batch 1 trace (quantum 1 over {a,b,c}, then 2 over {a,b}): a's
         // second request is the pop that both fills the batch and empties
@@ -442,7 +493,7 @@ mod tests {
         }
         push_dl(&mut qs, "small@v4", dl(20), 0);
         push_dl(&mut qs, "small@v4", dl(20), 0);
-        let hint = BatchHint { max_batch: 4, parallelism: 4 };
+        let hint = BatchHint { max_batch: 4, parallelism: 4, lanes: 1 };
         let b1 = Edf.next_batch(&mut qs, &hint);
         assert_eq!(
             keys(&b1),
@@ -463,7 +514,7 @@ mod tests {
         push_dl(&mut qs, "lo@v0", dl(50), 1); // same deadline, lower priority
         push_dl(&mut qs, "hi@v0", dl(50), 9); // same deadline, higher priority
         push_dl(&mut qs, "early@v0", dl(10), 0); // earliest deadline wins outright
-        let hint = BatchHint { max_batch: 8, parallelism: 8 };
+        let hint = BatchHint { max_batch: 8, parallelism: 8, lanes: 1 };
         let b = Edf.next_batch(&mut qs, &hint);
         assert_eq!(keys(&b), ["early@v0", "hi@v0", "lo@v0", "none@v0"]);
     }
@@ -471,7 +522,7 @@ mod tests {
     #[test]
     fn edf_without_deadlines_is_fifo() {
         let mut qs = filled(&[("b", 2), ("a", 2)]);
-        let hint = BatchHint { max_batch: 8, parallelism: 8 };
+        let hint = BatchHint { max_batch: 8, parallelism: 8, lanes: 1 };
         let b = Edf.next_batch(&mut qs, &hint);
         assert_eq!(
             b.iter().map(|p| p.seq).collect::<Vec<_>>(),
@@ -485,7 +536,7 @@ mod tests {
         for kind in [PolicyKind::Fifo, PolicyKind::Drr, PolicyKind::Edf] {
             let mut qs = filled(&[("only", 5)]);
             let mut p = kind.build();
-            let hint = BatchHint { max_batch: 2, parallelism: 1 };
+            let hint = BatchHint { max_batch: 2, parallelism: 1, lanes: 1 };
             let mut served = 0;
             while !qs.is_empty() {
                 let b = p.next_batch(&mut qs, &hint);
@@ -498,12 +549,89 @@ mod tests {
     }
 
     #[test]
+    fn fifo_tops_up_same_model_runs_to_lane_multiples() {
+        // Arrivals interleave a, b, a, b; a lanes-2 backend wants
+        // same-model pairs, so FIFO pulls each model's own next request
+        // forward instead of handing the packer a fully mixed batch.
+        let mut qs = QueueSet::new(16);
+        for key in ["a", "b", "a", "b"] {
+            push(&mut qs, key);
+        }
+        let hint = BatchHint { max_batch: 4, parallelism: 8, lanes: 2 };
+        let b = Fifo.next_batch(&mut qs, &hint);
+        assert_eq!(keys(&b), ["a", "a", "b", "b"]);
+        // Per-model FIFO held: a's seqs in order, then b's in order.
+        assert_eq!(b.iter().map(|p| p.seq).collect::<Vec<_>>(), [0, 2, 1, 3]);
+    }
+
+    #[test]
+    fn lane_top_up_never_stalls_on_a_dry_queue() {
+        // One request per model at lanes 4: runs stay short (the
+        // preference yields), and the batch still forms.
+        let mut qs = filled(&[("a", 1), ("b", 1)]);
+        let hint = BatchHint { max_batch: 8, parallelism: 8, lanes: 4 };
+        let b = Fifo.next_batch(&mut qs, &hint);
+        assert_eq!(keys(&b), ["a", "b"]);
+        assert!(qs.is_empty());
+    }
+
+    #[test]
+    fn edf_tops_up_the_urgent_model_to_lane_width() {
+        let t0 = Instant::now();
+        let dl = |ms: u64| Some(t0 + std::time::Duration::from_millis(ms));
+        let mut qs = QueueSet::new(64);
+        for _ in 0..4 {
+            push_dl(&mut qs, "big@v4", dl(2000), 0);
+        }
+        push_dl(&mut qs, "small@v4", dl(20), 0);
+        // small's second request is *looser* than every big deadline —
+        // plain EDF would serve it last, but the lane top-up rides it
+        // along with small's urgent head to complete the pack.
+        push_dl(&mut qs, "small@v4", dl(5000), 0);
+        let hint = BatchHint { max_batch: 4, parallelism: 8, lanes: 2 };
+        let b = Edf.next_batch(&mut qs, &hint);
+        assert_eq!(keys(&b), ["small@v4", "small@v4", "big@v4", "big@v4"]);
+    }
+
+    #[test]
+    fn drr_quantum_rounds_up_to_lane_multiples() {
+        // max_batch 6 over 2 tenants -> base quantum 3; at lanes 4 each
+        // visit serves a whole pack of 4 instead of stranding a lane.
+        let mut qs = filled(&[("a", 8), ("b", 8)]);
+        let hint = BatchHint { max_batch: 6, parallelism: 8, lanes: 4 };
+        let mut drr = DeficitRoundRobin::new();
+        let b1 = drr.next_batch(&mut qs, &hint);
+        assert_eq!(b1.len(), 6);
+        assert_eq!(
+            keys(&b1).iter().filter(|&&k| k == "a").count(),
+            4,
+            "first tenant's run is a whole lane pack"
+        );
+    }
+
+    #[test]
+    fn lane_width_beyond_max_batch_still_respects_the_cap() {
+        for kind in [PolicyKind::Fifo, PolicyKind::Drr, PolicyKind::Edf] {
+            let mut qs = filled(&[("only", 5)]);
+            let mut p = kind.build();
+            let hint = BatchHint { max_batch: 2, parallelism: 1, lanes: 8 };
+            let mut served = 0;
+            while !qs.is_empty() {
+                let b = p.next_batch(&mut qs, &hint);
+                assert!(!b.is_empty() && b.len() <= 2, "{kind}");
+                served += b.len();
+            }
+            assert_eq!(served, 5, "{kind}");
+        }
+    }
+
+    #[test]
     fn batch_hint_target_fill_clamps() {
-        let h = BatchHint { max_batch: 64, parallelism: 8 };
+        let h = BatchHint { max_batch: 64, parallelism: 8, lanes: 1 };
         assert_eq!(h.target_fill(), 8);
-        let h = BatchHint { max_batch: 4, parallelism: 8 };
+        let h = BatchHint { max_batch: 4, parallelism: 8, lanes: 1 };
         assert_eq!(h.target_fill(), 4);
-        let h = BatchHint { max_batch: 4, parallelism: 0 };
+        let h = BatchHint { max_batch: 4, parallelism: 0, lanes: 1 };
         assert_eq!(h.target_fill(), 1);
     }
 }

@@ -305,6 +305,39 @@ fn lane_packing_is_invisible_across_backends() {
     }
 }
 
+/// Superinstruction fusion (DESIGN.md §19) is invisible through the
+/// Executor seam, exactly like lane packing: with `MARVEL_SUPEROPS=1` and
+/// an 8-lane local backend, the model-interleaved batch — conv inner
+/// loops full of fusible straight-line runs — is bit-identical, logits
+/// and `RunStats` both, to the scalar fusion-off reference.
+#[test]
+fn superops_with_lane_packing_matches_scalar_reference() {
+    let descs = zoo_descs(2);
+    // Reference first, before fusion is switched on for this process
+    // (fusion on would still be bit-identical — that is the invariant —
+    // but the cell is only a differential if the two sides differ in
+    // execution shape).
+    let reference = run_descs_local(Path::new("artifacts"), &descs, 0);
+    std::env::set_var("MARVEL_SUPEROPS", "1");
+    let got = {
+        let mut exec = LocalExec::new(Path::new("artifacts"), 2);
+        exec.set_lanes(8);
+        for d in &descs {
+            exec.submit(JobSpec::named(d.clone()));
+        }
+        exec.run()
+    };
+    std::env::remove_var("MARVEL_SUPEROPS");
+    assert_eq!(got.len(), reference.len());
+    for (i, (g, r)) in got.iter().zip(&reference).enumerate() {
+        assert_eq!(
+            g.as_ref().unwrap(),
+            r.as_ref().unwrap(),
+            "job {i}: superops + lane packing must be invisible"
+        );
+    }
+}
+
 /// Check 4, local flavor: a job that panics its worker thread (DM resize
 /// capacity overflow — a bug class, not a `SimError`) panics the caller.
 #[test]

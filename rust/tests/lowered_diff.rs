@@ -10,6 +10,13 @@
 //! `Result<RunStats, SimError>` (including the exact fault and pc), same
 //! registers / pc / ZOL registers / data memory after the run, and the
 //! same retire-hook stream (pc, instruction, cycle cost per retirement).
+//!
+//! The superinstruction-fusion suite (DESIGN.md §19) holds the fused
+//! lowering (`Machine::superops = true`) to the same contract: fused
+//! scalar runs, fused `run_match` dispatch, fused lane groups over mined
+//! `v4+x<mask>` variants, and observing-hook runs (which decay fused
+//! slots back to scalar) must all be indistinguishable from the
+//! reference interpreter.
 
 use std::sync::Arc;
 
@@ -413,6 +420,189 @@ fn lowered_matches_reference_with_manually_armed_ze() {
         (format!("{r:?}"), m.regs, m.pc, (m.zc, m.zs, m.ze))
     };
     assert_eq!(run_one(true), run_one(false));
+}
+
+/// One scalar-reference run with no trace (trace slots empty so [`diff`]
+/// still applies).
+fn run_scalar_ref(
+    program: &Arc<Program>,
+    regs: [i32; 32],
+    max_instrs: u64,
+) -> RunOutcome {
+    let mut m = Machine::new(Arc::clone(program), DM_SIZE);
+    m.regs = regs;
+    let r = m.run_reference(max_instrs, &mut NopHook);
+    (r, m, Vec::new())
+}
+
+/// One lowered run with superinstruction fusion on.  `NopHook` does not
+/// observe retires, so fused slots actually execute fused (an observing
+/// hook would decay them to scalar — covered separately below).
+fn run_fused(
+    program: &Arc<Program>,
+    regs: [i32; 32],
+    max_instrs: u64,
+) -> RunOutcome {
+    let mut m = Machine::new(Arc::clone(program), DM_SIZE);
+    m.superops = true;
+    m.regs = regs;
+    let r = m.run(max_instrs, &mut NopHook);
+    (r, m, Vec::new())
+}
+
+/// Fusion differential: with superops on, random programs on every
+/// variant — full and tiny watchdog budgets (a budget can expire mid-run,
+/// which must decay the fused head back to scalar) — are bit-identical
+/// to the reference interpreter.
+#[test]
+fn prop_fused_superops_match_reference() {
+    check("superops ≡ reference (random programs)", 800, |rng| {
+        let variant = *rng.choice(&VARIANTS);
+        let program = random_program(rng, variant);
+        let regs = seed_regs(rng);
+        let budget = if rng.bool() {
+            MAX_INSTRS
+        } else {
+            rng.range_usize(0, 16) as u64
+        };
+        let r = run_scalar_ref(&program, regs, budget);
+        let f = run_fused(&program, regs, budget);
+        diff(&format!("{} (fused)", variant.name), r, f)
+    });
+}
+
+/// Both lowered dispatch shapes agree under fusion: `run_match` shares
+/// the fused-execution helper with the threaded handler, and neither may
+/// drift from the other.
+#[test]
+fn prop_fused_threaded_matches_fused_match_dispatch() {
+    check("fused threaded ≡ fused match", 400, |rng| {
+        let variant = *rng.choice(&VARIANTS);
+        let program = random_program(rng, variant);
+        let regs = seed_regs(rng);
+        let budget = if rng.bool() {
+            MAX_INSTRS
+        } else {
+            rng.range_usize(0, 16) as u64
+        };
+        let mut run_one = |match_dispatch: bool| {
+            let mut m = Machine::new(Arc::clone(&program), DM_SIZE);
+            m.superops = true;
+            m.regs = regs;
+            let r = if match_dispatch {
+                m.run_match(budget, &mut NopHook)
+            } else {
+                m.run(budget, &mut NopHook)
+            };
+            (r, m, Vec::new())
+        };
+        diff(
+            &format!("{} (fused dispatch)", variant.name),
+            run_one(true),
+            run_one(false),
+        )
+    });
+}
+
+/// Satellite oracle: random lane groups over mined `v4+x<mask>` variants
+/// with fusion on — mixed budgets, mixed DM sizes, custom window
+/// instructions interleaved with fusible runs — against per-lane scalar
+/// reference runs.  This crosses all three mechanisms: `Kind::Super`
+/// slots, the SoA lane loop's converged fused path, and the
+/// `FusedCustom`/`Custom` window semantics.
+#[test]
+fn prop_fused_lane_groups_match_reference_on_mined_variants() {
+    const LANE_DM_SIZES: [usize; 3] = [256, 1024, 4096];
+    let full = (1u8 << marvel::fusion::N_WINDOW) - 1;
+    check("fused lanes ≡ reference (v4+x groups)", 300, |rng| {
+        let mask = rng.int_in(1, i32::from(full)) as u8;
+        let variant = Variant::with_window(V4, mask).unwrap();
+        let program = random_program(rng, variant);
+        let k = rng.range_usize(1, 9);
+        let mut lanes = Vec::with_capacity(k);
+        let mut refs = Vec::with_capacity(k);
+        let mut budgets: Vec<u64> = Vec::with_capacity(k);
+        for _ in 0..k {
+            let dm = *rng.choice(&LANE_DM_SIZES);
+            let regs = seed_regs(rng);
+            let mut lane = Machine::new(Arc::clone(&program), dm);
+            lane.superops = true;
+            lane.regs = regs;
+            let mut reference = Machine::new(Arc::clone(&program), dm);
+            reference.regs = regs;
+            lanes.push(lane);
+            refs.push(reference);
+            budgets.push(if rng.bool() {
+                MAX_INSTRS
+            } else {
+                rng.range_usize(0, 24) as u64
+            });
+        }
+        let results = match Machine::run_lane_group(&mut lanes, &budgets) {
+            Some(rs) => rs,
+            None => {
+                return Err(format!(
+                    "{}: fused lane group unexpectedly refused",
+                    variant.name
+                ))
+            }
+        };
+        for (l, ((lane, mut rm), lr)) in
+            lanes.into_iter().zip(refs).zip(results).enumerate()
+        {
+            let rr = rm.run_reference(budgets[l], &mut NopHook);
+            diff(
+                &format!("{} fused lane {l}/{k}", variant.name),
+                (rr, rm, Vec::new()),
+                (lr, lane, Vec::new()),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+/// An observing hook must see the *scalar* retire stream even with
+/// fusion enabled: fused heads decay per step, so the (pc, instr, cost)
+/// trace is the reference trace, not one line per superop.
+#[test]
+fn prop_fused_runs_with_observing_hook_keep_the_retire_trace() {
+    check("superops + trace ≡ reference trace", 300, |rng| {
+        let variant = *rng.choice(&VARIANTS);
+        let program = random_program(rng, variant);
+        let regs = seed_regs(rng);
+        let mut rm = Machine::new(Arc::clone(&program), DM_SIZE);
+        rm.regs = regs;
+        let mut rt = TraceHook::new(256);
+        let rr = rm.run_reference(MAX_INSTRS, &mut rt);
+        let mut fm = Machine::new(Arc::clone(&program), DM_SIZE);
+        fm.superops = true;
+        fm.regs = regs;
+        let mut ft = TraceHook::new(256);
+        let fr = fm.run(MAX_INSTRS, &mut ft);
+        diff(
+            &format!("{} (fused + trace)", variant.name),
+            (rr, rm, rt.lines),
+            (fr, fm, ft.lines),
+        )
+    });
+}
+
+/// The deterministic edge programs, fused, across a watchdog boundary
+/// sweep — budgets that expire before, inside, and after any fused run.
+#[test]
+fn fused_superops_match_reference_on_edge_programs() {
+    for (label, variant, instrs) in edge_cases() {
+        let program = Arc::new(Program::from_instrs(variant, instrs).unwrap());
+        for budget in [0u64, 1, 2, 3, 4, 5, 100] {
+            let r = run_scalar_ref(&program, [0; 32], budget);
+            let f = run_fused(&program, [0; 32], budget);
+            if let Err(e) =
+                diff(&format!("{label} (fused, budget {budget})"), r, f)
+            {
+                panic!("{e}");
+            }
+        }
+    }
 }
 
 /// The real workload: LeNet-5*-shaped model end-to-end, reference vs
